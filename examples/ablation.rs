@@ -1,0 +1,62 @@
+//! Ablation: contribution of each optimization (Opt-KV, Opt-GQA, Opt-Pa)
+//! to the simulated-Z100 step time, swept over context length — the
+//! decomposition behind Fig. 6/7 plus the long-sequence motivation of
+//! §3.3 (Opt-Pa's win grows with padding waste).
+//!
+//! Pure platform-model sweep (no PJRT needed): runs anywhere.
+
+use llm_coopt::config::{builtin_presets, ALL_CONFIGS, ORIGINAL};
+use llm_coopt::platform::{CostModel, SeqCostInput};
+use llm_coopt::util::cli::Cli;
+
+fn main() {
+    let mut cli = Cli::new("ablation", "per-optimization step-time decomposition");
+    cli.flag("batch", "8", "decode batch size")
+        .flag("block-size", "16", "paged block size");
+    let args = cli.parse_or_exit();
+    let batch = args.get_usize("batch");
+    let bs = args.get_usize("block-size");
+
+    for preset in builtin_presets() {
+        let cm = CostModel::for_preset(&preset, bs);
+        println!(
+            "\n=== {} (paper twin: {} layers, d={} / Z100 cost model) ===",
+            preset.name, preset.paper_layers, preset.paper_d_model
+        );
+        println!(
+            "{:<10} {:>8} {:>12} {:>12} {:>12} {:>12} {:>9}",
+            "config", "ctx", "weights", "kv mem", "compute", "overhead", "Δ vs orig"
+        );
+        for ctx in [128usize, 512, 1024, 2048] {
+            // baseline over-allocates: padded prefill to the next 512
+            let padded_blocks = ctx.next_multiple_of(512) / bs;
+            let seqs: Vec<SeqCostInput> = (0..batch)
+                .map(|_| SeqCostInput {
+                    ctx_len: ctx,
+                    allocated_blocks: padded_blocks,
+                })
+                .collect();
+            let orig = cm.decode_step(&seqs, &ORIGINAL, 1, batch);
+            for opt in ALL_CONFIGS {
+                let c = cm.decode_step(&seqs, &opt, 1, batch);
+                println!(
+                    "{:<10} {:>8} {:>10.2}ms {:>10.2}ms {:>10.2}ms {:>10.3}ms {:>8.2}%",
+                    opt.name,
+                    ctx,
+                    c.weights_mem_s * 1e3,
+                    c.kv_mem_s * 1e3,
+                    c.compute_s * 1e3,
+                    c.overhead_s * 1e3,
+                    (orig.total_s / c.total_s - 1.0) * 100.0
+                );
+            }
+            println!();
+        }
+        // capacity coupling: pool blocks per config at paper scale
+        print!("paper-scale KV pool blocks: ");
+        for opt in ALL_CONFIGS {
+            print!("{}={} ", opt.name, cm.paper_pool_blocks(&opt));
+        }
+        println!();
+    }
+}

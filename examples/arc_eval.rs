@@ -1,0 +1,79 @@
+//! Reproduce **Table 1 / Table 2** (paper §4.3.2): ARC-sim accuracy before
+//! (Original) vs after (LLM-CoOpt) optimization, for every model.
+//!
+//! ```bash
+//! cargo run --release --example arc_eval -- --set challenge   # Table 1
+//! cargo run --release --example arc_eval -- --set easy        # Table 2
+//! ```
+
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig};
+use llm_coopt::coordinator::Engine;
+use llm_coopt::eval::{agreement, evaluate};
+use llm_coopt::runtime::Runtime;
+use llm_coopt::util::cli::Cli;
+use llm_coopt::workload::load_mcq_set;
+
+fn main() -> anyhow::Result<()> {
+    llm_coopt::util::logging::init();
+    let mut cli = Cli::new("arc_eval", "Reproduce Tables 1-2 (accuracy)");
+    cli.flag("set", "easy", "eval split: easy (Table 2) | challenge (Table 1)")
+        .flag("models", "all", "comma-separated models or 'all'")
+        .flag("configs", "original,coopt", "configs to compare")
+        .flag("limit", "0", "0 = full set, N = first N questions");
+    let args = cli.parse_or_exit();
+
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir)?;
+    let split = args.get("set");
+    let file = rt
+        .manifest
+        .eval_sets
+        .iter()
+        .find(|(s, _)| s == split)
+        .map(|(_, f)| f.clone())
+        .ok_or_else(|| anyhow::anyhow!("split '{split}' not in manifest"))?;
+    let mut set = load_mcq_set(dir.join(file))?;
+    let limit = args.get_usize("limit");
+    if limit > 0 {
+        set.questions.truncate(limit);
+    }
+
+    let models = if args.get("models") == "all" {
+        rt.manifest.model_names()
+    } else {
+        args.get_list("models")
+    };
+    let configs = args.get_list("configs");
+
+    let table = if split == "challenge" { "Table 1 (ARC-C-sim)" } else { "Table 2 (ARC-E-sim)" };
+    println!("{table}: accuracy over {} questions\n", set.questions.len());
+    print!("{:<20}", "Model");
+    for c in &configs {
+        print!(" {:>12}", c);
+    }
+    println!(" {:>12}", "agreement");
+
+    for model in &models {
+        print!("{:<20}", model);
+        let mut first: Option<llm_coopt::eval::EvalResult> = None;
+        let mut last_agreement = 1.0;
+        for cfg_name in &configs {
+            let opt = opt_config(cfg_name)?;
+            let mrt = rt.load_model(model, opt)?;
+            let mut engine = Engine::new(mrt, EngineConfig::new(model, opt));
+            let r = evaluate(&mut engine, &set)?;
+            print!(" {:>11.2}%", r.accuracy_pct());
+            if let Some(f) = &first {
+                last_agreement = agreement(f, &r);
+            } else {
+                first = Some(r);
+            }
+        }
+        println!(" {:>11.1}%", last_agreement * 100.0);
+    }
+    println!(
+        "\n(agreement = fraction of questions where both configs chose the same letter;\n\
+         the paper's claim is accuracy preservation under FP8-KV + GQA + Opt-Pa)"
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load a model with the LLM-CoOpt config and generate text.
+//!
+//! ```bash
+//! make artifacts           # once
+//! cargo run --release --example quickstart
+//! ```
+
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    llm_coopt::util::logging::init();
+    let model = "llama-13b-sim";
+    let opt = opt_config("coopt")?;
+
+    // 1. open the artifacts (HLO graphs + weights lowered by `make artifacts`)
+    let rt = Runtime::new(artifacts_dir())?;
+
+    // 2. compile + upload the model once; the KV pool lives on-device
+    let mrt = rt.load_model(model, opt)?;
+    println!("loaded {model}/{} (compile {:?})", opt.name, mrt.compile_time);
+
+    // 3. serve a small batch through the continuous-batching engine
+    let mut engine = Engine::new(mrt, EngineConfig::new(model, opt));
+    let prompts = [
+        "Q: 3+4=? A) 7 B) 8 C) 6 D) 5\nAnswer:",
+        "Q: 2+9=? A) 10 B) 12 C) 11 D) 13\nAnswer:",
+        "Q: 5+5=? A) 9 B) 10 C) 11 D) 12\nAnswer:",
+    ];
+    let reqs = prompts
+        .iter()
+        .map(|p| GenRequest::greedy(*p, 8))
+        .collect();
+    let results = engine.generate(reqs)?;
+
+    for r in &results {
+        println!("\nprompt    : {}", r.prompt.trim_end());
+        println!("completion: {:?}", r.text);
+        println!(
+            "  tokens={} finish={:?} wall={:.1}ms sim(Z100)={:.3}ms",
+            r.generated_tokens,
+            r.finish,
+            r.latency_s * 1e3,
+            r.sim_time_s * 1e3
+        );
+    }
+
+    println!(
+        "\nengine: {} decode steps, throughput {:.1} tok/s (wall), {:.1} tok/s (simulated Z100)",
+        engine.metrics.decode_steps,
+        engine.metrics.throughput_wall(),
+        engine.metrics.throughput_sim()
+    );
+    let st = engine.cache_stats();
+    println!(
+        "cache: {} prefix hits, {} skipped writes (SkipSet), fragmentation {:.1}%",
+        st.prefix_hits,
+        st.skipped_writes,
+        st.fragmentation * 100.0
+    );
+    Ok(())
+}

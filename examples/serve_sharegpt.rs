@@ -1,0 +1,87 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md): serve a ShareGPT-like batched
+//! workload through the full three-layer stack for every (model, config)
+//! pair requested, and report latency (Eq. 11) + throughput (Eq. 12) on
+//! both the wallclock and the simulated-Z100 clock.
+//!
+//! This is the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example serve_sharegpt -- \
+//!     --models llama-13b-sim --configs original,coopt --requests 40
+//! ```
+
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::platform::CostModel;
+use llm_coopt::runtime::Runtime;
+use llm_coopt::util::cli::Cli;
+use llm_coopt::workload::{sharegpt_trace, TraceSpec};
+
+fn main() -> anyhow::Result<()> {
+    llm_coopt::util::logging::init();
+    let mut cli = Cli::new("serve_sharegpt", "E2E serving driver (ShareGPT-sim)");
+    cli.flag("models", "llama-13b-sim", "comma-separated model list")
+        .flag("configs", "original,coopt", "comma-separated config list")
+        .flag("requests", "40", "number of requests")
+        .flag("seed", "53518", "trace seed")
+        .bool_flag("capacity", "derive pool size from the Z100 memory model");
+    let args = cli.parse_or_exit();
+
+    let rt = Runtime::new(artifacts_dir())?;
+    let spec = TraceSpec {
+        num_requests: args.get_usize("requests"),
+        seed: args.get_usize("seed") as u64,
+        ..Default::default()
+    };
+    let trace = sharegpt_trace(&spec);
+    println!(
+        "trace: {} requests, avg prompt {:.0} chars, avg max_new {:.1}",
+        trace.len(),
+        trace.iter().map(|r| r.prompt.len()).sum::<usize>() as f64 / trace.len() as f64,
+        trace.iter().map(|r| r.max_new_tokens).sum::<usize>() as f64 / trace.len() as f64
+    );
+    println!(
+        "\n{:<18} {:>9} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "model/config", "tokens", "wall tput", "sim tput", "sum lat(s)", "sim lat(s)", "p99 lat", "L3 ovh"
+    );
+
+    for model in args.get_list("models") {
+        for cfg_name in args.get_list("configs") {
+            let opt = opt_config(&cfg_name)?;
+            let mut mrt = rt.load_model(&model, opt)?;
+            use llm_coopt::runtime::Backend;
+            let mut geometry = *mrt.geometry();
+            if args.get_bool("capacity") {
+                // memory-capacity coupling (DESIGN.md): pool size follows
+                // the paper-scale free memory under this config
+                let cm = CostModel::for_preset(mrt.preset(), geometry.block_size);
+                geometry.num_pool_blocks =
+                    cm.sim_pool_blocks(&opt, 12.0, 16, geometry.num_pool_blocks);
+            }
+            mrt.reset_cache()?;
+            let mut engine = Engine::new(mrt, EngineConfig::new(&model, opt));
+            for req in &trace {
+                engine.submit(GenRequest {
+                    prompt: req.prompt.clone(),
+                    max_new_tokens: req.max_new_tokens,
+                    sampling: req.sampling,
+                    ignore_eos: true,
+                })?;
+            }
+            let _results = engine.run_to_completion()?;
+            let m = &mut engine.metrics;
+            println!(
+                "{:<18} {:>9} {:>10.1}/s {:>10.1}/s {:>12.3} {:>12.4} {:>11.3}s {:>7.1}%",
+                format!("{model}/{cfg_name}"),
+                m.tokens_generated,
+                m.throughput_wall(),
+                m.throughput_sim(),
+                m.total_latency_wall_s(),
+                m.total_latency_sim_s(),
+                m.latency_wall.p99(),
+                m.coordinator_overhead_frac() * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! HTTP serving demo: start the server on a real model, fire a few client
+//! requests (concurrently, so they batch), print the responses + metrics,
+//! then shut down.
+//!
+//! ```bash
+//! cargo run --release --example server_demo -- --model llama-7b-sim --config coopt
+//! ```
+
+use std::sync::atomic::Ordering;
+
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig};
+use llm_coopt::coordinator::Engine;
+use llm_coopt::runtime::Runtime;
+use llm_coopt::server::{Client, EngineHandle, Server};
+use llm_coopt::util::cli::Cli;
+use llm_coopt::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    llm_coopt::util::logging::init();
+    let mut cli = Cli::new("server_demo", "HTTP serving demo");
+    cli.flag("model", "llama-7b-sim", "model preset")
+        .flag("config", "coopt", "opt config")
+        .flag("clients", "4", "concurrent clients");
+    let args = cli.parse_or_exit();
+
+    let model = args.get("model").to_string();
+    let opt = opt_config(args.get("config"))?;
+    let rt = Runtime::new(artifacts_dir())?;
+    let mrt = rt.load_model(&model, opt)?;
+    let engine = Engine::new(mrt, EngineConfig::new(&model, opt));
+
+    let server = Server::bind("127.0.0.1:0", EngineHandle::spawn(engine), 8)?;
+    let addr = server.addr.to_string();
+    let stop = server.stop_flag();
+    let srv = std::thread::spawn(move || server.serve());
+    println!("server up at http://{addr}");
+
+    let client = Client::new(addr.clone());
+    let (_, health) = client.get("/health")?;
+    println!("health: {health}");
+
+    // concurrent clients -> batched inside the engine
+    let n = args.get_usize("clients");
+    let pool = ThreadPool::new(n);
+    let addr2 = addr.clone();
+    let replies = pool.map((0..n as u32).collect::<Vec<_>>(), move |i| {
+        let c = Client::new(addr2.clone());
+        c.generate(
+            &format!("Q: {}+{}=? A) {} B) 9 C) 1 D) 0\nAnswer:", i, i + 1, 2 * i + 1),
+            6,
+        )
+    });
+    for (i, r) in replies.into_iter().enumerate() {
+        let v = r?;
+        println!(
+            "client {i}: text={:?} tokens={} ttft={:.1}ms",
+            v.req_str("text")?,
+            v.req_usize("generated_tokens")?,
+            v.req_f64("ttft_s")? * 1e3
+        );
+    }
+
+    let (_, metrics) = client.get("/metrics")?;
+    println!("\n/metrics: {}", metrics.to_string_pretty());
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().unwrap()?;
+    Ok(())
+}

@@ -1,0 +1,342 @@
+"""AOT lowering driver: jax (L2+L1) -> HLO text artifacts for the rust runtime.
+
+Emits, per (model, opt-config):
+
+    artifacts/<model>_<cfg>_prefill.hlo.txt
+    artifacts/<model>_<cfg>_decode.hlo.txt
+
+plus per model `<model>.weights.bin` (raw little-endian f32, canonical
+order), the ARC-sim eval sets, and `manifest.json` describing every
+graph's exact parameter list (name, dtype, shape) so the rust runtime can
+feed PJRT buffers positionally.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+`--report` prints the L1 VMEM-footprint / MXU-utilization estimate used
+by EXPERIMENTS.md §Perf (interpret=True gives no TPU timings; structure
+is what we can and do optimize).
+
+Run from python/:  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .model import forward_decode, forward_prefill, init_params
+from .presets import (BLOCK_SIZE, MAX_BATCH, MAX_BLOCKS, MAX_SEQ,
+                      NUM_POOL_BLOCKS, MODELS, OPT_CONFIGS,
+                      graph_weight_names, preset_dict, weight_names,
+                      weight_shapes)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# graph builders
+# ---------------------------------------------------------------------------
+
+def cache_shapes(preset, opt):
+    hk = preset.n_kv_heads(opt.gqa)
+    kv = (preset.layers, NUM_POOL_BLOCKS, BLOCK_SIZE, hk, preset.head_dim)
+    sc = (preset.layers, NUM_POOL_BLOCKS, BLOCK_SIZE, hk)
+    dtype = "u8" if opt.fp8_kv else "f32"
+    shapes = [("k_cache", dtype, kv), ("v_cache", dtype, kv)]
+    if opt.fp8_kv:
+        shapes += [("k_scale", "f32", sc), ("v_scale", "f32", sc)]
+    return shapes
+
+
+def runtime_inputs(preset, opt, phase):
+    if phase == "prefill":
+        base = [("token_ids", "i32", (MAX_SEQ,)),
+                ("seq_len", "i32", (1,)),
+                ("slot_mapping", "i32", (MAX_SEQ,))]
+    else:
+        base = [("token_ids", "i32", (MAX_BATCH,)),
+                ("positions", "i32", (MAX_BATCH,)),
+                ("block_tables", "i32", (MAX_BATCH, MAX_BLOCKS)),
+                ("ctx_lens", "i32", (MAX_BATCH,)),
+                ("slot_mapping", "i32", (MAX_BATCH,))]
+    return base + cache_shapes(preset, opt)
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u8": jnp.uint8}
+
+
+def _specs(entries):
+    return [jax.ShapeDtypeStruct(shape, _DTYPES[dt]) for _, dt, shape in entries]
+
+
+def build_fn(preset, opt, phase):
+    # only the weights the graph references (XLA DCEs unused parameters,
+    # so feeding the full checkpoint would mismatch the compiled arity)
+    names = graph_weight_names(preset, opt.gqa)
+
+    if phase == "prefill":
+        def fn(weights, token_ids, seq_len, slot_mapping, *caches):
+            params = dict(zip(names, weights))
+            return forward_prefill(params, preset, opt, token_ids,
+                                   seq_len[0], slot_mapping, *caches)
+    else:
+        def fn(weights, token_ids, positions, block_tables, ctx_lens,
+               slot_mapping, *caches):
+            params = dict(zip(names, weights))
+            return forward_decode(params, preset, opt, token_ids, positions,
+                                  block_tables, ctx_lens, slot_mapping,
+                                  *caches)
+    return fn
+
+
+def lower_graph(preset, opt, phase):
+    shapes = weight_shapes(preset)
+    names = graph_weight_names(preset, opt.gqa)
+    w_specs = tuple(jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+                    for n in names)
+    rt = runtime_inputs(preset, opt, phase)
+    fn = build_fn(preset, opt, phase)
+    lowered = jax.jit(fn).lower(w_specs, *_specs(rt))
+    txt = to_hlo_text(lowered)
+    # count parameters of the ENTRY computation only (nested while/fusion
+    # computations carry their own parameter instructions)
+    n_params = txt.split("ENTRY", 1)[1].count(" parameter(")
+    want = len(names) + len(rt)
+    assert n_params == want, (
+        f"{preset.name}/{opt.name}/{phase}: compiled graph has {n_params} "
+        f"parameters, manifest expects {want} (XLA DCE mismatch)")
+    return txt
+
+
+# ---------------------------------------------------------------------------
+# weights serialization
+# ---------------------------------------------------------------------------
+
+def write_weights_bin(preset, params, path):
+    """Raw little-endian f32, canonical `weight_names` order."""
+    offsets = {}
+    off = 0
+    with open(path, "wb") as f:
+        for name in weight_names(preset):
+            arr = np.ascontiguousarray(np.asarray(params[name], np.float32))
+            want = weight_shapes(preset)[name]
+            assert tuple(arr.shape) == tuple(want), (name, arr.shape, want)
+            b = arr.astype("<f4").tobytes()
+            f.write(b)
+            offsets[name] = {"offset": off, "nbytes": len(b),
+                             "shape": list(arr.shape)}
+            off += len(b)
+    return offsets
+
+
+def load_or_init_params(preset, weights_dir, log):
+    path = os.path.join(weights_dir, f"{preset.name}.npz")
+    if os.path.exists(path):
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+    log(f"  !! no trained weights at {path}; using random init "
+        f"(run `python -m compile.train` first for real accuracy numbers)")
+    return {k: np.asarray(v) for k, v in init_params(preset).items()}
+
+
+# ---------------------------------------------------------------------------
+# §Perf: L1 structural report (VMEM footprint / MXU shapes)
+# ---------------------------------------------------------------------------
+
+def l1_report(preset, opt):
+    """Estimate per-program VMEM bytes + MXU tile utilization for the paged
+    decode kernel (interpret mode has no TPU timings; see DESIGN.md §5)."""
+    hd = preset.head_dim
+    hk = preset.n_kv_heads(opt.gqa)
+    g = preset.n_heads // hk
+    kv_elt = 1 if opt.fp8_kv else 4
+    q_tile = g * hd * 4
+    kv_tile = BLOCK_SIZE * hd * kv_elt * 2          # K and V tiles
+    scale_tile = (BLOCK_SIZE * 4 * 2) if opt.fp8_kv else 0
+    acc = (g * hd + 2 * g) * 4                      # acc, m, l
+    score = g * BLOCK_SIZE * 4
+    vmem = q_tile + kv_tile + scale_tile + acc + score
+    # MXU: contraction is [g, hd] x [hd, BS]; systolic array is 128x128,
+    # lanes pad to (8, 128) — utilization of the padded tile:
+    mxu_rows = max(8, g)
+    mxu_cols = 128
+    util = (g * BLOCK_SIZE) / (mxu_rows * mxu_cols)
+    return {"vmem_bytes_per_program": vmem,
+            "vmem_double_buffered": vmem + kv_tile + scale_tile,
+            "mxu_tile_utilization": round(util, 4),
+            "query_group": g, "kv_heads": hk}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def write_golden(outdir, weights_dir, model_name="llama-7b-sim"):
+    """Cross-language fixture: run a canned prompt through the python
+    serving path (prefill + 2 decode steps) for every opt config and store
+    the resulting logits rows.  rust/tests/integration_runtime.rs replays
+    the same steps through PJRT and asserts allclose — an end-to-end
+    L1+L2+runtime equivalence test."""
+    import jax
+
+    preset = MODELS[model_name]
+    params = load_or_init_params(preset, weights_dir, print)
+    params = {k: jnp.asarray(v) for k, v in params.items()}
+    from . import data as D
+    from .model import forward_decode, forward_prefill
+
+    prompt = D.encode("Q: 4+5=? A) 9 B) 8 C) 7 D) 6\nAnswer:", bos=True)
+    t = len(prompt)
+    golden = {"model": model_name, "prompt_tokens": prompt, "configs": {}}
+    for opt in OPT_CONFIGS.values():
+        hk = preset.n_kv_heads(opt.gqa)
+        L = preset.layers
+        kv_shape = (L, NUM_POOL_BLOCKS, BLOCK_SIZE, hk, preset.head_dim)
+        sc_shape = (L, NUM_POOL_BLOCKS, BLOCK_SIZE, hk)
+        if opt.fp8_kv:
+            caches = (jnp.zeros(kv_shape, jnp.uint8), jnp.zeros(kv_shape, jnp.uint8),
+                      jnp.full(sc_shape, 1e-6, jnp.float32), jnp.full(sc_shape, 1e-6, jnp.float32))
+        else:
+            caches = (jnp.zeros(kv_shape, jnp.float32), jnp.zeros(kv_shape, jnp.float32))
+        toks = np.full(MAX_SEQ, 256, np.int32)
+        toks[:t] = prompt
+        slots = np.full(MAX_SEQ, -1, np.int32)
+        upto = t if opt.skip_filter else MAX_SEQ
+        slots[:upto] = np.arange(upto)
+        out = forward_prefill(params, preset, opt, jnp.asarray(toks),
+                              jnp.int32(t), jnp.asarray(slots), *caches)
+        logits, caches = out[0], out[1:]
+        rows = {"prefill_last": np.asarray(logits)[t - 1].tolist()}
+        # two greedy decode steps
+        bt = np.zeros((MAX_BATCH, MAX_BLOCKS), np.int32)
+        bt[0, :] = np.arange(MAX_BLOCKS)
+        tok = int(np.argmax(np.asarray(logits)[t - 1]))
+        decode_rows = []
+        for step in range(2):
+            pos = t + step
+            token_ids = np.full(MAX_BATCH, 256, np.int32)
+            token_ids[0] = tok
+            positions = np.zeros(MAX_BATCH, np.int32)
+            positions[0] = pos
+            ctx = np.zeros(MAX_BATCH, np.int32)
+            ctx[0] = pos + 1
+            sm = np.full(MAX_BATCH, -1, np.int32)
+            sm[0] = pos
+            out = forward_decode(params, preset, opt,
+                                 jnp.asarray(token_ids), jnp.asarray(positions),
+                                 jnp.asarray(bt), jnp.asarray(ctx),
+                                 jnp.asarray(sm), *caches)
+            logits, caches = out[0], out[1:]
+            row = np.asarray(logits)[0]
+            decode_rows.append({"token": tok, "position": pos,
+                                "logits": row.tolist()})
+            tok = int(np.argmax(row))
+        rows["decode_steps"] = decode_rows
+        golden["configs"][opt.name] = rows
+        print(f"golden: {model_name}/{opt.name} done", flush=True)
+    with open(os.path.join(outdir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--configs", default=",".join(OPT_CONFIGS))
+    ap.add_argument("--weights-dir", default=None,
+                    help="default: <out>/weights")
+    ap.add_argument("--report", action="store_true",
+                    help="print the L1 VMEM/MXU structural report and exit")
+    ap.add_argument("--golden-only", action="store_true",
+                    help="only (re)write the golden.json fixture")
+    args = ap.parse_args()
+
+    if args.golden_only:
+        wd = args.weights_dir or os.path.join(args.out, "weights")
+        write_golden(args.out, wd)
+        return
+
+    models = [MODELS[m] for m in args.models.split(",")]
+    configs = [OPT_CONFIGS[c] for c in args.configs.split(",")]
+
+    if args.report:
+        for preset in models:
+            for opt in configs:
+                print(f"{preset.name:18s} {opt.name:9s} {l1_report(preset, opt)}")
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    weights_dir = args.weights_dir or os.path.join(args.out, "weights")
+    manifest = {
+        "version": 1,
+        "block_size": BLOCK_SIZE,
+        "max_blocks": MAX_BLOCKS,
+        "num_pool_blocks": NUM_POOL_BLOCKS,
+        "max_batch": MAX_BATCH,
+        "max_seq": MAX_SEQ,
+        "models": {},
+        "configs": {c.name: vars(c) for c in configs},
+        "graphs": [],
+    }
+
+    for preset in models:
+        t0 = time.time()
+        params = load_or_init_params(preset, weights_dir, print)
+        wpath = os.path.join(args.out, f"{preset.name}.weights.bin")
+        offsets = write_weights_bin(preset, params, wpath)
+        md = preset_dict(preset)
+        md["weights_file"] = os.path.basename(wpath)
+        md["weights"] = [
+            {"name": n, **offsets[n]} for n in weight_names(preset)]
+        manifest["models"][preset.name] = md
+
+        for opt in configs:
+            for phase in ("prefill", "decode"):
+                fname = f"{preset.name}_{opt.name}_{phase}.hlo.txt"
+                txt = lower_graph(preset, opt, phase)
+                with open(os.path.join(args.out, fname), "w") as f:
+                    f.write(txt)
+                rt = runtime_inputs(preset, opt, phase)
+                n_out = 5 if opt.fp8_kv else 3
+                manifest["graphs"].append({
+                    "model": preset.name,
+                    "config": opt.name,
+                    "phase": phase,
+                    "file": fname,
+                    "weights": graph_weight_names(preset, opt.gqa),
+                    "runtime_inputs": [
+                        {"name": n, "dtype": dt, "shape": list(s)}
+                        for n, dt, s in rt],
+                    "num_outputs": n_out,
+                    "l1_report": l1_report(preset, opt),
+                })
+        print(f"[{preset.name}] lowered {2 * len(configs)} graphs "
+              f"in {time.time() - t0:.1f}s", flush=True)
+
+    eval_paths = data.write_eval_sets(args.out)
+    manifest["eval_sets"] = {k: os.path.basename(v)
+                             for k, v in eval_paths.items()}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json "
+          f"({len(manifest['graphs'])} graphs)")
+    write_golden(args.out, weights_dir)
+
+
+if __name__ == "__main__":
+    main()

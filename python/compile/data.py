@@ -1,0 +1,149 @@
+"""Synthetic ARC-like 4-choice QA benchmark + training corpus.
+
+Stands in for ARC-Easy / ARC-Challenge (paper §4.2): the accuracy
+experiments (Tables 1-2) only need a 4-way MCQ task whose difficulty
+separates model scale and whose answers are perturbed by numerical error
+in the KV path.  We use grade-school arithmetic in the ARC answer format:
+
+    easy      (ARC_E stand-in): 50% marked-value retrieval ("find the
+              marked value", an induction-head task tiny transformers can
+              acquire) + 50% 1-digit addition.  Accuracy ceiling ~62%.
+    challenge (ARC_C stand-in): 25% marked + 75% 2-digit addition with
+              carry (genuine computation, beyond these sims).  Ceiling ~43%.
+
+The mix mirrors ARC's split semantics: ARC_E is largely solvable by
+retrieval/surface cues, ARC_C defeats them.  Model scale differentiates
+through the induction-circuit acquisition: the 7B-class sims' training
+budget sits below the transition (near-chance, like the paper's 27-30%
+7B scores), the 13B-class sims' above it (mid-range, like 40-71%).
+
+Scoring protocol mirrors the standard single-token MCQ evaluation: the
+model is shown "Q: ... A) .. B) .. C) .. D) ..\nAnswer:" and the choice
+letter with the highest next-token log-prob wins (Eq. 13 accuracy).
+
+Everything is seeded so python (corpus/eval generation) and rust (eval
+loading via artifacts/arc_sim_*.json) agree exactly.
+"""
+
+import json
+
+import numpy as np
+
+from .presets import BOS_ID, EOS_ID, PAD_ID
+
+LETTERS = "ABCD"
+
+
+def _distractors(ans, rng):
+    """Plausible wrong answers: off-by-one, off-by-ten, digit tricks."""
+    cands = {ans + 1, ans - 1, ans + 10, ans - 10, ans + 2, ans - 2}
+    s = str(ans)
+    if len(s) == 2:
+        cands.add(int(s[::-1]))  # digit swap
+    cands = sorted(c for c in cands if c >= 0 and c != ans)
+    rng.shuffle(cands)
+    return cands[:3]
+
+
+MARKED_FRAC = {"easy": 0.5, "challenge": 0.25}
+
+
+def make_question(split, rng):
+    """Returns dict(question, choices[4], answer_idx, kind, prompt, full)."""
+    marked = rng.random() < MARKED_FRAC[split]
+    if marked:
+        ans = int(rng.integers(10, 100))
+        q = "Q: find the marked value."
+        kind = "marked"
+    else:
+        if split == "easy":
+            a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+        elif split == "challenge":
+            a, b = int(rng.integers(10, 100)), int(rng.integers(10, 100))
+        else:
+            raise ValueError(split)
+        ans = a + b
+        q = f"Q: {a}+{b}=?"
+        kind = "arith"
+    wrong = _distractors(ans, rng)
+    while len(wrong) < 3:  # tiny-answer corner: pad with offset values
+        cand = ans + 3 + len(wrong)
+        if cand not in wrong:
+            wrong.append(cand)
+    answer_idx = int(rng.integers(0, 4))
+    choices = wrong[:answer_idx] + [ans] + wrong[answer_idx:]
+    choices = choices[:4]
+    mark = ["" for _ in range(4)]
+    if marked:
+        mark[answer_idx] = "*"
+    opts = " ".join(f"{LETTERS[i]}) {mark[i]}{choices[i]}" for i in range(4))
+    prompt = f"{q} {opts}\nAnswer:"
+    return {
+        "question": q,
+        "kind": kind,
+        "choices": [str(c) for c in choices],
+        "answer": answer_idx,
+        "prompt": prompt,
+        "full": prompt + " " + LETTERS[answer_idx],
+    }
+
+
+def encode(text, *, bos=True, eos=False):
+    ids = list(text.encode("utf-8"))
+    if bos:
+        ids = [BOS_ID] + ids
+    if eos:
+        ids = ids + [EOS_ID]
+    return ids
+
+
+def decode(ids):
+    return bytes(i for i in ids if i < 256).decode("utf-8", errors="replace")
+
+
+def training_batch(split_mix, batch, seqlen, rng):
+    """Sample a padded LM batch.  split_mix: list of split names to mix.
+
+    Returns (tokens [B, S] i32, lens [B] i32, loss_w [B, S] f32) where the
+    answer-letter position carries extra loss weight (the capability the
+    eval probes).
+    """
+    toks = np.full((batch, seqlen), PAD_ID, np.int32)
+    lens = np.zeros(batch, np.int32)
+    w = np.zeros((batch, seqlen), np.float32)
+    for i in range(batch):
+        split = split_mix[int(rng.integers(0, len(split_mix)))]
+        s = make_question(split, rng)
+        ids = encode(s["full"], bos=True, eos=True)[:seqlen]
+        toks[i, : len(ids)] = ids
+        lens[i] = len(ids)
+        # next-token targets: weight 1 on ordinary tokens, extra on the
+        # answer letter — the capability the ARC-sim eval probes
+        w[i, : len(ids) - 1] = 1.0
+        w[i, len(ids) - 3] = 5.0  # predicts the answer letter
+    return toks, lens, w
+
+
+def make_eval_set(split, n, seed):
+    rng = np.random.default_rng(seed)
+    qs = [make_question(split, rng) for _ in range(n)]
+    return {
+        "split": split,
+        "seed": seed,
+        "n": n,
+        "letters": LETTERS,
+        "questions": qs,
+    }
+
+
+def write_eval_sets(outdir, n=200, seed_easy=1234, seed_challenge=5678):
+    import os
+
+    paths = {}
+    for split, seed in [("easy", seed_easy), ("challenge", seed_challenge)]:
+        data = make_eval_set(split, n, seed)
+        path = os.path.join(outdir, f"arc_sim_{split}.json")
+        with open(path, "w") as f:
+            json.dump(data, f)
+        paths[split] = path
+    return paths

@@ -1,0 +1,97 @@
+"""Software FP8 (E4M3FN) codec in pure jnp integer/float ops.
+
+The paper's platform (DCU Z100) has no native FP8 units: "FP8 operations
+are emulated via INT8 instructions" (§4.1).  We mirror that: KV-cache
+entries are stored as uint8 E4M3FN bit patterns plus per-slot/per-head
+f32 scales, and the encode/decode below runs *inside* the Pallas kernels
+(Opt-KV, Eq. 6) using only ops the old xla_extension 0.5.1 HLO parser
+understands (no f8 dtypes appear in the lowered module).
+
+E4M3FN layout: 1 sign | 4 exponent (bias 7) | 3 mantissa.
+No infinities; 0x7F/0xFF are NaN; max finite = 448; min subnormal = 2^-9.
+
+Bit-exactness against ml_dtypes' float8_e4m3fn is enforced by
+python/tests/test_fp8.py (all 256 decode patterns + randomized encode).
+"""
+
+import jax.numpy as jnp
+
+E4M3_MAX = 448.0
+_MIN_NORMAL_EXP = -6  # smallest normal exponent
+_SUB_SCALE = 512.0  # 2^9 : subnormal quantum is 2^-9
+
+
+def e4m3_round(x):
+    """Round f32 values to the nearest representable E4M3 value (RNE).
+
+    Saturates to +-448 (the `fn` convention for our pre-scaled inputs).
+    Returns f32 holding exactly-representable E4M3 magnitudes.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    x = jnp.clip(x, -E4M3_MAX, E4M3_MAX)
+    a = jnp.abs(x)
+    # Exponent of the value; clip into the E4M3 normal/subnormal split.
+    e = jnp.floor(jnp.log2(jnp.maximum(a, jnp.float32(2.0**-40))))
+    e = jnp.clip(e, _MIN_NORMAL_EXP, 8)
+    # Quantum: 2^(e-3) for normals (3 mantissa bits); 2^-9 in the subnormal
+    # band (e pinned at -6 gives exactly 2^-9).
+    step = jnp.exp2(e - 3.0)
+    q = jnp.round(a / step) * step  # jnp.round is round-half-to-even
+    return jnp.sign(x) * q
+
+
+def e4m3_encode(x):
+    """f32 -> uint8 E4M3FN bit patterns (saturating, RNE)."""
+    x = jnp.asarray(x, jnp.float32)
+    q = e4m3_round(x)
+    sign = (q < 0) | ((q == 0) & (jnp.signbit(x)))
+    a = jnp.abs(q)
+    is_zero = a == 0
+    is_sub = a < 2.0**_MIN_NORMAL_EXP
+    e = jnp.floor(jnp.log2(jnp.maximum(a, jnp.float32(2.0**-40))))
+    e = jnp.clip(e, _MIN_NORMAL_EXP, 8)
+    # 3-bit mantissa field
+    m_norm = a / jnp.exp2(e) * 8.0 - 8.0
+    m_sub = a * _SUB_SCALE
+    m = jnp.where(is_sub, m_sub, m_norm)
+    ef = jnp.where(is_sub | is_zero, 0.0, e + 7.0)
+    code = (
+        jnp.where(sign, jnp.uint32(0x80), jnp.uint32(0))
+        | (ef.astype(jnp.uint32) << 3)
+        | m.astype(jnp.uint32)
+    )
+    return code.astype(jnp.uint8)
+
+
+def e4m3_decode(code):
+    """uint8 E4M3FN bit patterns -> f32."""
+    code = jnp.asarray(code, jnp.uint8).astype(jnp.uint32)
+    sign = (code >> 7) & 1
+    ef = (code >> 3) & 0xF
+    m = (code & 0x7).astype(jnp.float32)
+    eff = ef.astype(jnp.float32)
+    mag_sub = m / _SUB_SCALE
+    mag_norm = jnp.exp2(eff - 7.0) * (1.0 + m / 8.0)
+    mag = jnp.where(ef == 0, mag_sub, mag_norm)
+    val = jnp.where(sign == 1, -mag, mag)
+    # 0x7F / 0xFF are NaN in the fn encoding.
+    return jnp.where((ef == 15) & (m == 7.0), jnp.float32(jnp.nan), val)
+
+
+def quantize(x, axis=-1, eps=1e-12):
+    """Dynamic per-slice symmetric quantization to E4M3 codes + f32 scale.
+
+    `axis` is reduced for the amax; scale maps amax -> E4M3_MAX so the
+    full exponent range is used (the paper's 'dynamic quantization').
+    Returns (codes uint8, scale f32 with `axis` removed).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=axis)
+    scale = jnp.maximum(amax, eps) / E4M3_MAX
+    codes = e4m3_encode(x / jnp.expand_dims(scale, axis))
+    return codes, scale
+
+
+def dequantize(codes, scale, axis=-1):
+    """Inverse of `quantize` (Eq. 6: on-the-fly dequant in the read path)."""
+    return e4m3_decode(codes) * jnp.expand_dims(scale, axis)

@@ -1,0 +1,110 @@
+"""Opt-KV write-path kernel (paper Alg. 1, phase 1 + Eq. 5).
+
+`reshape_and_cache` analogue: scatter per-token K/V projections into the
+paged pool at the slots chosen by the rust coordinator.  Slot -1 encodes
+"skip" — the coordinator maps both padding lanes and SkipSet members
+(Eq. 5: slot_idx < 0 ∨ slot_idx ∈ SkipSet) to -1, so the skip *policy*
+lives in L3 and this kernel implements the mechanism.
+
+In FP8 mode (Opt-KV) each written token is dynamically quantized per KV
+head to E4M3 codes + an f32 scale (paper §3.1 "compressing valid blocks
+into FP8 format").
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the CUDA original
+scatters with one thread per element; here the grid is one program per
+token, the token's [Hk, D] tile lives in VMEM, and the store is a single
+dynamically-indexed (block, offset) tile store to the HBM-resident pool.
+interpret=True everywhere (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp8
+
+
+def _kernel_f32(k_ref, v_ref, slot_ref, kc_ref, vc_ref, ko_ref, vo_ref,
+                *, block_size):
+    t = pl.program_id(0)
+    slot = slot_ref[t]
+
+    @pl.when(slot >= 0)
+    def _():
+        blk = slot // block_size
+        off = slot % block_size
+        ko_ref[blk, off, :, :] = k_ref[0]
+        vo_ref[blk, off, :, :] = v_ref[0]
+
+
+def _kernel_fp8(k_ref, v_ref, slot_ref, kc_ref, vc_ref, ks_ref, vs_ref,
+                ko_ref, vo_ref, kso_ref, vso_ref, *, block_size):
+    t = pl.program_id(0)
+    slot = slot_ref[t]
+
+    @pl.when(slot >= 0)
+    def _():
+        blk = slot // block_size
+        off = slot % block_size
+        kq, ks = fp8.quantize(k_ref[0], axis=-1)
+        vq, vs = fp8.quantize(v_ref[0], axis=-1)
+        ko_ref[blk, off, :, :] = kq
+        vo_ref[blk, off, :, :] = vq
+        kso_ref[blk, off, :] = ks
+        vso_ref[blk, off, :] = vs
+
+
+def kv_write(k_new, v_new, slot_mapping, k_cache, v_cache,
+             k_scale=None, v_scale=None, *, interpret=True):
+    """Write T new tokens into the paged KV pool.
+
+    k_new/v_new : [T, Hk, D] f32
+    slot_mapping: [T] i32 (global slot = block*BS + offset; -1 = skip)
+    k_cache/v_cache: [NB, BS, Hk, D] (f32, or uint8 codes in FP8 mode)
+    k_scale/v_scale: [NB, BS, Hk] f32 (FP8 mode only)
+
+    Returns the updated cache arrays (same structure as inputs).  The cache
+    operands are donated via input_output_aliases so XLA updates in place.
+    """
+    T, Hk, D = k_new.shape
+    fp8_mode = k_scale is not None
+    grid = (T,)
+    tok_spec = pl.BlockSpec((1, Hk, D), lambda t: (t, 0, 0))
+    full = lambda a: pl.BlockSpec(a.shape, lambda t: (0,) * a.ndim)
+
+    if fp8_mode:
+        kernel = functools.partial(_kernel_fp8, block_size=k_cache.shape[1])
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[tok_spec, tok_spec, full(slot_mapping),
+                      full(k_cache), full(v_cache),
+                      full(k_scale), full(v_scale)],
+            out_specs=[full(k_cache), full(v_cache),
+                       full(k_scale), full(v_scale)],
+            out_shape=[
+                jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+                jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+                jax.ShapeDtypeStruct(k_scale.shape, k_scale.dtype),
+                jax.ShapeDtypeStruct(v_scale.shape, v_scale.dtype),
+            ],
+            input_output_aliases={3: 0, 4: 1, 5: 2, 6: 3},
+            interpret=interpret,
+        )(k_new, v_new, slot_mapping, k_cache, v_cache, k_scale, v_scale)
+
+    kernel = functools.partial(_kernel_f32, block_size=k_cache.shape[1])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tok_spec, tok_spec, full(slot_mapping),
+                  full(k_cache), full(v_cache)],
+        out_specs=[full(k_cache), full(v_cache)],
+        out_shape=[
+            jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+            jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype),
+        ],
+        input_output_aliases={3: 0, 4: 1},
+        interpret=interpret,
+    )(k_new, v_new, slot_mapping, k_cache, v_cache)

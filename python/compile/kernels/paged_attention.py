@@ -1,0 +1,140 @@
+"""Fused paged decode-attention kernel — the paper's hot spot.
+
+One Pallas program per (sequence, kv-head).  The program pulls its query
+group ([H_g, D], Eq. 7) into VMEM, then walks the sequence's KV blocks via
+the block table with an online-softmax accumulator (Eq. 8/10):
+
+  * **Opt-Pa** (`valid_only=True`): the block loop is bounded by
+    ceil(ctx/B) — only valid blocks are touched (Eq. 9).  The baseline
+    walks *all* MAX_BLOCKS table entries (vLLM-on-Z100 behaviour the paper
+    criticizes: "all KVs being loaded into memory regardless of whether
+    they are actually useful"), masking scores to keep numerics identical.
+  * **Opt-KV** (`fp8=True`): KV tiles are uint8 E4M3 codes, dequantized
+    in-register against per-slot scales before the q·Kᵀ contraction
+    (Eq. 6, the `gather_cached_kv` read path).
+  * **Opt-GQA** (`groups>1`): the H_g query heads of a group share the
+    program's KV head, so each KV tile is fetched once per group rather
+    than once per query head.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's `block_sum`
+shared-memory reduction maps to whole-tile vector reductions over the
+VMEM-resident score tile (jnp.max/sum) — no warp shuffles exist on TPU;
+block-table entries are scalar reads; the KV pool stays in "HBM" and only
+valid tiles are sliced in.  interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp8
+
+NEG_INF = -1e30
+
+
+def _attend_block(j, carry, *, q, bt_ref, ctx, kc_ref, vc_ref,
+                  ks_ref, vs_ref, h, block_size, sm_scale):
+    """Online-softmax update for KV block j.  carry = (m, l, acc)."""
+    m_prev, l_prev, acc_prev = carry
+    bid = bt_ref[0, j]
+    k = pl.load(kc_ref, (bid, slice(None), h, slice(None)))  # [BS, D]
+    v = pl.load(vc_ref, (bid, slice(None), h, slice(None)))
+    if ks_ref is not None:
+        k = fp8.e4m3_decode(k) * pl.load(ks_ref, (bid, slice(None), h))[:, None]
+        v = fp8.e4m3_decode(v) * pl.load(vs_ref, (bid, slice(None), h))[:, None]
+    s = jnp.dot(q, k.T) * sm_scale  # [Hg, BS]
+    pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+    mask = (pos < ctx)[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # block-wise reduction over the VMEM tile = the paper's block_sum;
+    # the explicit mask on p keeps fully-masked tiles (padding lanes in the
+    # baseline's indiscriminate block walk) at exactly zero contribution.
+    p = jnp.exp(s - m_new[:, None]) * mask
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v)
+    return m_new, l_new, acc_new
+
+
+def _kernel(q_ref, bt_ref, ctx_ref, kc_ref, vc_ref, ks_ref, vs_ref, o_ref,
+            *, block_size, max_blocks, valid_only, sm_scale):
+    h = pl.program_id(1)
+    ctx = ctx_ref[0]
+    q = q_ref[0]  # [Hg, D]
+    hg, d = q.shape
+    body = functools.partial(
+        _attend_block, q=q, bt_ref=bt_ref, ctx=ctx, kc_ref=kc_ref,
+        vc_ref=vc_ref, ks_ref=ks_ref, vs_ref=vs_ref, h=h,
+        block_size=block_size, sm_scale=sm_scale)
+    init = (jnp.full((hg,), NEG_INF, jnp.float32),
+            jnp.zeros((hg,), jnp.float32),
+            jnp.zeros((hg, d), jnp.float32))
+    if valid_only:
+        # Opt-Pa, Eq. 9: touch only ceil(ctx / B) blocks.
+        nblk = (ctx + block_size - 1) // block_size
+        m, l, acc = jax.lax.fori_loop(0, nblk, body, init)
+    else:
+        # Baseline: walk every table entry (masked, numerically identical).
+        m, l, acc = jax.lax.fori_loop(0, max_blocks, body, init)
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def paged_attention(q, k_cache, v_cache, block_tables, ctx_lens,
+                    k_scale=None, v_scale=None, *, groups,
+                    valid_only, interpret=True):
+    """Batched paged decode attention.
+
+    q           : [B, Hq, D] f32 (the current token's queries)
+    k/v_cache   : [NB, BS, Hk, D] (f32, or uint8 E4M3 codes with scales)
+    block_tables: [B, MAXB] i32 (pool block id per logical block)
+    ctx_lens    : [B] i32, tokens visible *including* the current one;
+                  0 marks a padded batch lane (output = 0 there after the
+                  l>=eps clamp, rust ignores those lanes)
+    k/v_scale   : [NB, BS, Hk] f32 in FP8 mode
+    groups      : H_q // H_k (Eq. 7); 1 = MHA
+    valid_only  : Opt-Pa on/off
+
+    Returns [B, Hq, D].
+    """
+    B, Hq, D = q.shape
+    Hk = k_cache.shape[2]
+    assert Hq == Hk * groups, (Hq, Hk, groups)
+    max_blocks = block_tables.shape[1]
+    fp8_mode = k_scale is not None
+
+    kernel = functools.partial(
+        _kernel, block_size=k_cache.shape[1], max_blocks=max_blocks,
+        valid_only=valid_only, sm_scale=1.0 / (D ** 0.5))
+    full = lambda a: pl.BlockSpec(a.shape, lambda b, h: (0,) * a.ndim)
+    in_specs = [
+        pl.BlockSpec((1, groups, D), lambda b, h: (b, h, 0)),   # q group
+        pl.BlockSpec((1, max_blocks), lambda b, h: (b, 0)),     # table row
+        pl.BlockSpec((1,), lambda b, h: (b,)),                  # ctx len
+        full(k_cache), full(v_cache),
+    ]
+    args = [q, block_tables, ctx_lens, k_cache, v_cache]
+    if fp8_mode:
+        in_specs += [full(k_scale), full(v_scale)]
+        args += [k_scale, v_scale]
+    else:
+        kernel = functools.partial(kernel)
+
+    def wrapped(*refs):
+        if fp8_mode:
+            q_r, bt_r, ctx_r, kc_r, vc_r, ks_r, vs_r, o_r = refs
+            kernel(q_r, bt_r, ctx_r, kc_r, vc_r, ks_r, vs_r, o_r)
+        else:
+            q_r, bt_r, ctx_r, kc_r, vc_r, o_r = refs
+            kernel(q_r, bt_r, ctx_r, kc_r, vc_r, None, None, o_r)
+
+    return pl.pallas_call(
+        wrapped,
+        grid=(B, Hk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, groups, D), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+        interpret=interpret,
+    )(*args)

@@ -1,0 +1,61 @@
+"""Causal grouped prefill attention kernel.
+
+One Pallas program per query head; the program's KV head is selected by
+the Opt-GQA mapping h_k = h_q // groups (Eq. 7) directly in the BlockSpec
+index map, so a KV head's tile is shared by its whole query group.
+
+Prefill attends over the *fresh* (unquantized) K/V of the prompt — FP8
+only applies to cached reads during decode, matching the reference stack
+(vLLM computes prefill attention from the projection outputs, not the
+cache).  Padding columns (>= seq_len) are masked; causality via a
+position-triangle mask.  S is small (MAX_SEQ=128) so one program holds
+the full [S, S] score tile in VMEM; for long-context deployments this
+kernel would tile over query chunks exactly like the decode kernel tiles
+over KV blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, sm_scale):
+    q = q_ref[:, 0, :]  # [S, D]
+    k = k_ref[:, 0, :]
+    v = v_ref[:, 0, :]
+    seq_len = len_ref[0]
+    s = jnp.dot(q, k.T) * sm_scale  # [S, S]
+    S = s.shape[0]
+    pos = jax.lax.iota(jnp.int32, S)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] < seq_len)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    o_ref[:, 0, :] = jnp.dot(p / l, v)
+
+
+def prefill_attention(q, k, v, seq_len, *, groups, interpret=True):
+    """q: [S, Hq, D], k/v: [S, Hk, D], seq_len: [] or [1] i32 -> [S, Hq, D]."""
+    S, Hq, D = q.shape
+    Hk = k.shape[1]
+    assert Hq == Hk * groups, (Hq, Hk, groups)
+    seq_len = jnp.reshape(jnp.asarray(seq_len, jnp.int32), (1,))
+    kernel = functools.partial(_kernel, sm_scale=1.0 / (D ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=(Hq,),
+        in_specs=[
+            pl.BlockSpec((S, 1, D), lambda h: (0, h, 0)),
+            pl.BlockSpec((S, 1, D), lambda h: (0, h // groups, 0)),
+            pl.BlockSpec((S, 1, D), lambda h: (0, h // groups, 0)),
+            pl.BlockSpec((1,), lambda h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((S, 1, D), lambda h: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, Hq, D), jnp.float32),
+        interpret=interpret,
+    )(q, k, v, seq_len)

@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These implement the same math as the kernels with ordinary gather/softmax
+jnp code — no paging tricks, no online softmax — so any disagreement is a
+kernel bug.  pytest (python/tests/) sweeps shapes/dtypes via hypothesis and
+asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import fp8
+
+
+def ref_kv_write(k_new, v_new, slot_mapping, k_cache, v_cache,
+                 k_scale=None, v_scale=None):
+    """Oracle for the Opt-KV write kernel (Alg. 1 phase 1).
+
+    k_new/v_new: [T, Hk, D] f32; slot_mapping: [T] i32 (-1 = skip, Eq. 5).
+    Caches: [NB, BS, Hk, D]; fp8 mode iff scales are given
+    (then caches are uint8 codes and scales are [NB, BS, Hk] f32).
+    """
+    k_cache = np.array(k_cache)
+    v_cache = np.array(v_cache)
+    fp8_mode = k_scale is not None
+    if fp8_mode:
+        k_scale = np.array(k_scale)
+        v_scale = np.array(v_scale)
+    bs = k_cache.shape[1]
+    for t in range(k_new.shape[0]):
+        slot = int(slot_mapping[t])
+        if slot < 0:
+            continue
+        b, o = slot // bs, slot % bs
+        if fp8_mode:
+            kc, ks = fp8.quantize(k_new[t], axis=-1)
+            vc, vs = fp8.quantize(v_new[t], axis=-1)
+            k_cache[b, o] = np.asarray(kc)
+            v_cache[b, o] = np.asarray(vc)
+            k_scale[b, o] = np.asarray(ks)
+            v_scale[b, o] = np.asarray(vs)
+        else:
+            k_cache[b, o] = np.asarray(k_new[t])
+            v_cache[b, o] = np.asarray(v_new[t])
+    out = (jnp.asarray(k_cache), jnp.asarray(v_cache))
+    if fp8_mode:
+        out += (jnp.asarray(k_scale), jnp.asarray(v_scale))
+    return out
+
+
+def gather_kv(seq_idx, ctx_len, block_table, k_cache, v_cache,
+              k_scale=None, v_scale=None):
+    """Gather a sequence's [ctx, Hk, D] K/V from the paged pool
+    (the `gather_cached_kv` reference, Eq. 6 dequant included)."""
+    bs = k_cache.shape[1]
+    ks, vs = [], []
+    for pos in range(int(ctx_len)):
+        b = int(block_table[seq_idx, pos // bs])
+        o = pos % bs
+        if k_scale is not None:
+            ks.append(fp8.dequantize(k_cache[b, o], k_scale[b, o], axis=-1))
+            vs.append(fp8.dequantize(v_cache[b, o], v_scale[b, o], axis=-1))
+        else:
+            ks.append(k_cache[b, o])
+            vs.append(v_cache[b, o])
+    return jnp.stack(ks), jnp.stack(vs)
+
+
+def ref_paged_attention(q, k_cache, v_cache, block_tables, ctx_lens,
+                        groups, k_scale=None, v_scale=None):
+    """Oracle for the paged decode attention (Alg. 3 + Eq. 7/8/10).
+
+    q: [B, Hq, D]; caches [NB, BS, Hk, D]; returns [B, Hq, D].
+    Query head i attends through KV head i // groups (Eq. 7).
+    Rows with ctx_lens == 0 return zeros (padded batch slots).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    B, Hq, D = q.shape
+    out = np.zeros((B, Hq, D), np.float32)
+    for b in range(B):
+        t = int(ctx_lens[b])
+        if t == 0:
+            continue
+        k, v = gather_kv(b, t, block_tables, k_cache, v_cache, k_scale, v_scale)
+        for h in range(Hq):
+            hk = h // groups
+            s = (q[b, h] @ k[:, hk, :].T) / jnp.sqrt(jnp.float32(D))
+            p = jnp.exp(s - jnp.max(s))
+            p = p / jnp.sum(p)
+            out[b, h] = np.asarray(p @ v[:, hk, :])
+    return jnp.asarray(out)
+
+
+def ref_prefill_attention(q, k, v, seq_len, groups):
+    """Oracle for causal grouped prefill attention.
+
+    q: [S, Hq, D], k/v: [S, Hk, D]; positions >= seq_len are masked out of
+    the keys; returns [S, Hq, D] (rows >= seq_len are unspecified-but-finite).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    S, Hq, D = q.shape
+    pos = jnp.arange(S)
+    outs = []
+    for h in range(Hq):
+        hk = h // groups
+        s = (q[:, h, :] @ k[:, hk, :].T) / jnp.sqrt(jnp.float32(D))
+        mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] < seq_len)
+        s = jnp.where(mask, s, -1e30)
+        s = s - jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s)
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        outs.append(p @ v[:, hk, :])
+    return jnp.stack(outs, axis=1)
+
+
+def ref_dense_causal_attention(q, k, v, lens=None):
+    """Batched dense causal MHA/GQA used by the trainer.
+
+    q: [B, S, Hq, D], k/v: [B, S, Hk, D]; lens: [B] optional valid lengths.
+    """
+    B, S, Hq, D = q.shape
+    Hk = k.shape[2]
+    groups = Hq // Hk
+    kx = jnp.repeat(k, groups, axis=2)
+    vx = jnp.repeat(v, groups, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q, kx) / jnp.sqrt(jnp.float32(D))
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= pos[:, None]
+    if lens is not None:
+        mask = mask[None, :, :] & (pos[None, None, :] < lens[:, None, None])
+        mask = mask[:, None, :, :]
+    else:
+        mask = mask[None, None, :, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhst,bthd->bshd", p, vx)

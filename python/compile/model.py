@@ -1,0 +1,242 @@
+"""L2: the LLaMA-family model (build-time JAX), calling the L1 kernels.
+
+Three entry points share one parameter set:
+
+  * `forward_prefill`  — serving prefill: writes the prompt's K/V into the
+    paged pool (kv_write kernel) and returns logits for *every* position
+    (needed by the ARC scoring protocol) — one sequence per call.
+  * `forward_decode`   — serving decode: batched single-token step over the
+    paged pool (kv_write + paged_attention kernels).
+  * `forward_train`    — dense-attention training/uptraining forward used
+    only by train.py (never lowered to an artifact).
+
+Architecture: token embedding -> N x (RMSNorm -> RoPE attention -> add ->
+RMSNorm -> SwiGLU -> add) -> RMSNorm -> lm_head.  Matches LLaMA up to
+scale.  The OptConfig flags choose the KV projection set (MHA vs GQA),
+the cache dtype (f32 vs E4M3 codes + scales), and the paged-attention
+block loop policy; see presets.OPT_CONFIGS.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .presets import ModelPreset, OptConfig
+from .kernels.kv_write import kv_write
+from .kernels.paged_attention import paged_attention
+from .kernels.prefill_attention import prefill_attention
+from .kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, *, base=10000.0):
+    """Rotary embedding.  x: [..., T, H, D], positions: [..., T] i32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp2(
+        -jnp.log2(jnp.float32(base)) * jnp.arange(half, dtype=jnp.float32)
+        * 2.0 / d)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, half]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w1, w2, w3):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def _kv_weights(params, i, gqa):
+    suf = "gqa" if gqa else "mha"
+    return params[f"l{i}.wk_{suf}"], params[f"l{i}.wv_{suf}"]
+
+
+def _split_heads(x, n_heads, head_dim):
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def _merge_heads(x):
+    return x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill
+# ---------------------------------------------------------------------------
+
+def forward_prefill(params, preset: ModelPreset, opt: OptConfig,
+                    token_ids, seq_len, slot_mapping,
+                    k_cache, v_cache, k_scale=None, v_scale=None,
+                    *, interpret=True):
+    """One-sequence prefill.
+
+    token_ids   : [S] i32 (padded with PAD past seq_len)
+    seq_len     : [] i32
+    slot_mapping: [S] i32 global slots for each position (-1 past seq_len,
+                  or SkipSet members under Opt-KV)
+    caches      : stacked per-layer pools [L, NB, BS, Hk, D] (+ scales)
+
+    Returns (logits [S, V], k_cache', v_cache'[, k_scale', v_scale']).
+    """
+    p, hd = preset, preset.head_dim
+    hk = p.n_kv_heads(opt.gqa)
+    groups = p.n_heads // hk
+    fp8_mode = opt.fp8_kv
+    positions = jnp.arange(token_ids.shape[0], dtype=jnp.int32)
+
+    x = params["embed"][token_ids]  # [S, d]
+    new_k, new_v, new_ks, new_vs = [], [], [], []
+    for i in range(p.layers):
+        h = rms_norm(x, params[f"l{i}.attn_norm"])
+        wk, wv = _kv_weights(params, i, opt.gqa)
+        q = _split_heads(h @ params[f"l{i}.wq"], p.n_heads, hd)
+        k = _split_heads(h @ wk, hk, hd)
+        v = _split_heads(h @ wv, hk, hd)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        # Opt-KV write path: scatter the prompt's K/V into the paged pool.
+        if fp8_mode:
+            kc, vc, ks, vs = kv_write(
+                k, v, slot_mapping, k_cache[i], v_cache[i],
+                k_scale[i], v_scale[i], interpret=interpret)
+            new_ks.append(ks)
+            new_vs.append(vs)
+        else:
+            kc, vc = kv_write(k, v, slot_mapping, k_cache[i], v_cache[i],
+                              interpret=interpret)
+        new_k.append(kc)
+        new_v.append(vc)
+        # Prefill attention runs over the fresh K/V (see module docstring).
+        attn = prefill_attention(q, k, v, seq_len, groups=groups,
+                                 interpret=interpret)
+        x = x + _merge_heads(attn) @ params[f"l{i}.wo"]
+        h = rms_norm(x, params[f"l{i}.ffn_norm"])
+        x = x + swiglu(h, params[f"l{i}.w1"], params[f"l{i}.w2"],
+                       params[f"l{i}.w3"])
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    out = (logits, jnp.stack(new_k), jnp.stack(new_v))
+    if fp8_mode:
+        out += (jnp.stack(new_ks), jnp.stack(new_vs))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serving: decode
+# ---------------------------------------------------------------------------
+
+def forward_decode(params, preset: ModelPreset, opt: OptConfig,
+                   token_ids, positions, block_tables, ctx_lens,
+                   slot_mapping, k_cache, v_cache,
+                   k_scale=None, v_scale=None, *, interpret=True):
+    """Batched single-token decode step.
+
+    token_ids   : [B] i32 (PAD in unused lanes)
+    positions   : [B] i32 position of the new token
+    block_tables: [B, MAXB] i32
+    ctx_lens    : [B] i32 context length *including* the new token
+                  (0 = padded lane)
+    slot_mapping: [B] i32 slot for the new token's K/V (-1 = skip)
+    caches      : [L, NB, BS, Hk, D] (+ scales [L, NB, BS, Hk])
+
+    Returns (logits [B, V], caches'...).
+    """
+    p, hd = preset, preset.head_dim
+    hk = p.n_kv_heads(opt.gqa)
+    groups = p.n_heads // hk
+    fp8_mode = opt.fp8_kv
+
+    x = params["embed"][token_ids]  # [B, d]
+    new_k, new_v, new_ks, new_vs = [], [], [], []
+    for i in range(p.layers):
+        h = rms_norm(x, params[f"l{i}.attn_norm"])
+        wk, wv = _kv_weights(params, i, opt.gqa)
+        q = _split_heads(h @ params[f"l{i}.wq"], p.n_heads, hd)
+        k = _split_heads(h @ wk, hk, hd)
+        v = _split_heads(h @ wv, hk, hd)
+        # rope over a length-1 "sequence" per batch lane
+        q = rope(q[:, None], positions[:, None])[:, 0]
+        k = rope(k[:, None], positions[:, None])[:, 0]
+        if fp8_mode:
+            kc, vc, ks, vs = kv_write(
+                k, v, slot_mapping, k_cache[i], v_cache[i],
+                k_scale[i], v_scale[i], interpret=interpret)
+            new_ks.append(ks)
+            new_vs.append(vs)
+            attn = paged_attention(q, kc, vc, block_tables, ctx_lens,
+                                   ks, vs, groups=groups,
+                                   valid_only=opt.valid_only,
+                                   interpret=interpret)
+        else:
+            kc, vc = kv_write(k, v, slot_mapping, k_cache[i], v_cache[i],
+                              interpret=interpret)
+            attn = paged_attention(q, kc, vc, block_tables, ctx_lens,
+                                   groups=groups, valid_only=opt.valid_only,
+                                   interpret=interpret)
+        new_k.append(kc)
+        new_v.append(vc)
+        x = x + _merge_heads(attn) @ params[f"l{i}.wo"]
+        h = rms_norm(x, params[f"l{i}.ffn_norm"])
+        x = x + swiglu(h, params[f"l{i}.w1"], params[f"l{i}.w2"],
+                       params[f"l{i}.w3"])
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    out = (logits, jnp.stack(new_k), jnp.stack(new_v))
+    if fp8_mode:
+        out += (jnp.stack(new_ks), jnp.stack(new_vs))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# training forward (dense attention; never exported)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, preset: ModelPreset, token_ids, lens, *, gqa):
+    """token_ids: [B, S] i32, lens: [B] i32 -> logits [B, S, V]."""
+    p, hd = preset, preset.head_dim
+    hk = p.n_kv_heads(gqa)
+    B, S = token_ids.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"][token_ids]
+    for i in range(p.layers):
+        h = rms_norm(x, params[f"l{i}.attn_norm"])
+        wk, wv = _kv_weights(params, i, gqa)
+        q = _split_heads(h @ params[f"l{i}.wq"], p.n_heads, hd)
+        k = _split_heads(h @ wk, hk, hd)
+        v = _split_heads(h @ wv, hk, hd)
+        q = rope(q, positions)
+        k = rope(k, positions)
+        attn = kref.ref_dense_causal_attention(q, k, v, lens)
+        x = x + _merge_heads(attn) @ params[f"l{i}.wo"]
+        h = rms_norm(x, params[f"l{i}.ffn_norm"])
+        x = x + swiglu(h, params[f"l{i}.w1"], params[f"l{i}.w2"],
+                       params[f"l{i}.w3"])
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(preset: ModelPreset, seed=0):
+    from .presets import weight_shapes
+    key = jax.random.PRNGKey(seed)
+    shapes = weight_shapes(preset)
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) == 2 else shape[-1]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            * (fan_in ** -0.5))
+    return params

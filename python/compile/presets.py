@@ -1,0 +1,160 @@
+"""Model and optimization-config presets shared by train/aot/tests.
+
+The five sim models stand in for the paper's five GPTQ checkpoints
+(LLaMa-7B, LLaMa2-7B, LLaMa-13B, LLaMa2-13B, LLaMa-Pro-8B); see
+DESIGN.md for the substitution rationale.  All use head_dim 32 and a
+byte-level vocab so the rust tokenizer is trivial to mirror.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+# Byte-level tokenizer: 256 raw bytes + specials.
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+VOCAB_SIZE = 260  # 256 bytes + PAD/BOS/EOS + 1 spare
+
+HEAD_DIM = 32
+BLOCK_SIZE = 16      # paged-KV block size B (Eq. 9)
+MAX_BLOCKS = 10      # per-sequence block-table width -> max ctx 160
+NUM_POOL_BLOCKS = 96 # global paged pool
+MAX_BATCH = 8        # decode batch (padded)
+MAX_SEQ = 128        # prefill length (padded)
+FP8_MAX = 448.0      # e4m3fn max finite
+
+
+@dataclass(frozen=True)
+class ModelPreset:
+    name: str
+    stands_for: str
+    layers: int
+    d_model: int
+    n_heads: int          # H_q
+    n_kv_heads_gqa: int   # H_k when Opt-GQA is on (MHA otherwise)
+    ffn: int
+    # paper-scale twin (drives the Z100 traffic model on the rust side)
+    paper_layers: int
+    paper_d_model: int
+    paper_heads: int
+    vocab: int = VOCAB_SIZE
+    head_dim: int = HEAD_DIM
+
+    @property
+    def hidden(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def n_kv_heads(self, gqa: bool) -> int:
+        return self.n_kv_heads_gqa if gqa else self.n_heads
+
+
+MODELS = {
+    m.name: m
+    for m in [
+        ModelPreset("llama-7b-sim", "LLaMa-7B-GPTQ", 3, 128, 4, 2, 352, 32, 4096, 32),
+        ModelPreset("llama2-7b-sim", "LLaMa2-7B-GPTQ", 3, 128, 4, 2, 384, 32, 4096, 32),
+        ModelPreset("llama-13b-sim", "LLaMa-13B-GPTQ", 4, 192, 6, 2, 512, 40, 5120, 40),
+        ModelPreset("llama2-13b-sim", "LLaMa2-13B-GPTQ", 4, 192, 6, 2, 544, 40, 5120, 40),
+        ModelPreset("llama-pro-8b-sim", "LLaMa-Pro-8B-GPTQ", 4, 160, 5, 1, 448, 40, 4096, 32),
+    ]
+}
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    """Which of the paper's three optimizations are active.
+
+    original : vLLM baseline (FP16 KV, MHA, touches every block)
+    optkv    : Opt-KV  (FP8 cache + SkipSet write filter)  §3.1
+    optgqa   : Opt-GQA (grouped-query attention)           §3.2
+    optpa    : Opt-Pa  (valid-block-only paged attention)  §3.3
+    coopt    : all three (LLM-CoOpt)
+    """
+
+    name: str
+    fp8_kv: bool      # Opt-KV read path: cache stored as e4m3 codes + scales
+    skip_filter: bool # Opt-KV write path: engine emits -1 slots for SkipSet
+    gqa: bool         # Opt-GQA: H_k = n_kv_heads_gqa instead of n_heads
+    valid_only: bool  # Opt-Pa: attention loops ceil(t/B) blocks, not MAX_BLOCKS
+
+
+OPT_CONFIGS = {
+    c.name: c
+    for c in [
+        OptConfig("original", False, False, False, False),
+        OptConfig("optkv", True, True, False, False),
+        OptConfig("optgqa", False, False, True, False),
+        OptConfig("optpa", False, False, False, True),
+        OptConfig("coopt", True, True, True, True),
+    ]
+}
+
+
+def weight_names(preset: ModelPreset) -> list:
+    """Canonical flat ordering of weight arrays (shared with rust manifest)."""
+    names = ["embed"]
+    for i in range(preset.layers):
+        names += [
+            f"l{i}.attn_norm",
+            f"l{i}.wq",
+            f"l{i}.wk_mha",
+            f"l{i}.wv_mha",
+            f"l{i}.wk_gqa",
+            f"l{i}.wv_gqa",
+            f"l{i}.wo",
+            f"l{i}.ffn_norm",
+            f"l{i}.w1",
+            f"l{i}.w2",
+            f"l{i}.w3",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def graph_weight_names(preset: ModelPreset, gqa: bool) -> list:
+    """Weights actually referenced by a lowered graph.
+
+    The checkpoint carries both KV projection sets, but XLA's
+    stablehlo->HLO conversion dead-code-eliminates unused parameters, so
+    each graph must be fed exactly the set its config reads (the manifest
+    records this list per graph for the rust runtime).
+    """
+    drop = "_mha" if gqa else "_gqa"
+    return [n for n in weight_names(preset) if not n.endswith(drop)]
+
+
+def weight_shapes(preset: ModelPreset) -> dict:
+    """name -> shape for every weight array (both MHA and GQA projections).
+
+    We carry both KV projection sets in one checkpoint so a single weights
+    file serves all five opt configs; the lowered graph only references the
+    set its config needs (XLA DCEs the other, and the rust runtime feeds
+    parameters by manifest order).
+    """
+    p = preset
+    d, hd = p.d_model, p.head_dim
+    shapes = {"embed": (p.vocab, d)}
+    for i in range(p.layers):
+        shapes[f"l{i}.attn_norm"] = (d,)
+        shapes[f"l{i}.wq"] = (d, p.n_heads * hd)
+        shapes[f"l{i}.wk_mha"] = (d, p.n_heads * hd)
+        shapes[f"l{i}.wv_mha"] = (d, p.n_heads * hd)
+        shapes[f"l{i}.wk_gqa"] = (d, p.n_kv_heads_gqa * hd)
+        shapes[f"l{i}.wv_gqa"] = (d, p.n_kv_heads_gqa * hd)
+        shapes[f"l{i}.wo"] = (p.n_heads * hd, d)
+        shapes[f"l{i}.ffn_norm"] = (d,)
+        shapes[f"l{i}.w1"] = (d, p.ffn)
+        shapes[f"l{i}.w2"] = (p.ffn, d)
+        shapes[f"l{i}.w3"] = (d, p.ffn)
+    shapes["final_norm"] = (d,)
+    shapes["lm_head"] = (d, p.vocab)
+    return shapes
+
+
+def preset_dict(preset: ModelPreset) -> dict:
+    d = asdict(preset)
+    d["block_size"] = BLOCK_SIZE
+    d["max_blocks"] = MAX_BLOCKS
+    d["num_pool_blocks"] = NUM_POOL_BLOCKS
+    d["max_batch"] = MAX_BATCH
+    d["max_seq"] = MAX_SEQ
+    return d

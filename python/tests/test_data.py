@@ -1,0 +1,96 @@
+"""ARC-sim dataset generator: format, seeding, and answer balance."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+from compile.presets import BOS_ID, EOS_ID, PAD_ID
+
+
+@pytest.mark.parametrize("split", ["easy", "challenge"])
+def test_question_structure(split):
+    rng = np.random.default_rng(0)
+    kinds = set()
+    for _ in range(80):
+        q = data.make_question(split, rng)
+        kinds.add(q["kind"])
+        assert len(q["choices"]) == 4
+        assert 0 <= q["answer"] < 4
+        if q["kind"] == "arith":
+            # the correct answer string sits at the answer slot
+            a, b = map(int, q["question"][3:-2].split("+"))
+            assert q["choices"][q["answer"]] == str(a + b)
+        else:
+            # the marker sits on the answer choice, and only there
+            letter = data.LETTERS[q["answer"]]
+            assert f"{letter}) *" in q["prompt"]
+            assert q["prompt"].count("*") == 1
+        # distractors differ from the answer
+        assert len(set(q["choices"])) == 4
+        assert q["prompt"].endswith("Answer:")
+        assert q["full"].endswith(data.LETTERS[q["answer"]])
+    assert kinds == {"marked", "arith"}, f"both kinds must appear: {kinds}"
+
+
+def test_split_difficulty_ranges():
+    rng = np.random.default_rng(1)
+    seen = 0
+    while seen < 20:
+        qe = data.make_question("easy", rng)
+        if qe["kind"] != "arith":
+            continue
+        a, b = map(int, qe["question"][3:-2].split("+"))
+        assert 0 <= a <= 9 and 0 <= b <= 9
+        qc = data.make_question("challenge", rng)
+        if qc["kind"] == "arith":
+            a, b = map(int, qc["question"][3:-2].split("+"))
+            assert 10 <= a <= 99 and 10 <= b <= 99
+        seen += 1
+    # challenge has a lower marked fraction than easy
+    assert data.MARKED_FRAC["challenge"] < data.MARKED_FRAC["easy"]
+
+
+def test_eval_set_seeded_and_balanced():
+    s1 = data.make_eval_set("easy", 200, seed=42)
+    s2 = data.make_eval_set("easy", 200, seed=42)
+    assert s1 == s2, "same seed, same set"
+    s3 = data.make_eval_set("easy", 200, seed=43)
+    assert s1 != s3
+    counts = np.bincount([q["answer"] for q in s1["questions"]], minlength=4)
+    assert counts.min() > 20, f"answers unbalanced: {counts}"
+
+
+def test_encode_decode_round_trip():
+    ids = data.encode("Q: 1+2=?", bos=True, eos=True)
+    assert ids[0] == BOS_ID and ids[-1] == EOS_ID
+    assert data.decode(ids) == "Q: 1+2=?"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(40, 80), st.integers(0, 2**31 - 1))
+def test_training_batch_invariants(batch, seqlen, seed):
+    rng = np.random.default_rng(seed)
+    toks, lens, w = data.training_batch(["easy", "challenge"], batch, seqlen, rng)
+    assert toks.shape == (batch, seqlen)
+    assert w.shape == (batch, seqlen)
+    for i in range(batch):
+        n = lens[i]
+        assert 0 < n <= seqlen
+        assert toks[i, 0] == BOS_ID
+        assert np.all(toks[i, n:] == PAD_ID)
+        # weights vanish on padding, answer letter is up-weighted
+        assert np.all(w[i, n:] == 0)
+        if n >= 4:
+            assert w[i, n - 3] > 1.0
+
+
+def test_write_eval_sets(tmp_path):
+    paths = data.write_eval_sets(str(tmp_path), n=10)
+    import json
+
+    for split, p in paths.items():
+        with open(p) as f:
+            loaded = json.load(f)
+        assert loaded["split"] == split
+        assert len(loaded["questions"]) == 10

@@ -1,0 +1,73 @@
+"""FP8 E4M3FN codec: bit-exactness against ml_dtypes + properties."""
+
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8
+
+
+def test_decode_all_256_codes_bit_exact():
+    codes = np.arange(256, dtype=np.uint8)
+    ours = np.asarray(fp8.e4m3_decode(codes))
+    ref = codes.view(ml_dtypes.float8_e4m3fn).astype(np.float32)
+    for c in range(256):
+        if np.isnan(ref[c]):
+            assert np.isnan(ours[c]), hex(c)
+        else:
+            assert ours[c] == ref[c], hex(c)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_encode_matches_ml_dtypes_in_range(seed):
+    rng = np.random.default_rng(seed)
+    xs = np.concatenate([
+        rng.normal(0, 100, 500),
+        rng.normal(0, 1e-2, 500),
+        rng.uniform(-448, 448, 500),
+        (rng.integers(0, 2**9, 100) + 0.5) * 2**-9,  # subnormal ties
+    ]).astype(np.float32)
+    xs = xs[np.abs(xs) <= 448.0]
+    enc = np.asarray(fp8.e4m3_encode(xs))
+    ref = xs.astype(ml_dtypes.float8_e4m3fn).view(np.uint8)
+    np.testing.assert_array_equal(enc, ref)
+
+
+def test_encode_saturates_beyond_max():
+    out = np.asarray(fp8.e4m3_encode(np.array([1e9, -1e9, 449.0, 448.0],
+                                              np.float32)))
+    assert out[0] == 0x7E and out[1] == 0xFE
+    assert out[2] == 0x7E and out[3] == 0x7E
+
+
+def test_round_trip_all_finite_codes():
+    codes = np.arange(256, dtype=np.uint8)
+    vals = np.asarray(fp8.e4m3_decode(codes))
+    finite = ~np.isnan(vals)
+    back = np.asarray(fp8.e4m3_encode(vals[finite]))
+    dec = np.asarray(fp8.e4m3_decode(back))
+    np.testing.assert_array_equal(dec, vals[finite])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(1, 8), st.integers(2, 64))
+def test_quantize_dequantize_error_bound(seed, rows, cols):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 5, (rows, cols)).astype(np.float32)
+    codes, scale = fp8.quantize(x, axis=-1)
+    back = np.asarray(fp8.dequantize(codes, scale, axis=-1))
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    # e4m3 relative step is 2^-3 of the exponent bucket; after amax
+    # scaling the absolute error is bounded by amax/448 * 32 (max step)
+    bound = amax * (32.0 / 448.0) + 1e-7
+    assert np.all(np.abs(back - x) <= bound)
+
+
+def test_quantize_zero_slice_safe():
+    x = np.zeros((3, 8), np.float32)
+    codes, scale = fp8.quantize(x)
+    back = np.asarray(fp8.dequantize(codes, scale))
+    assert np.all(back == 0)
+    assert np.all(np.asarray(scale) > 0)

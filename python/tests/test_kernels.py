@@ -1,0 +1,211 @@
+"""Pallas kernels vs pure-jnp oracles (the core L1 correctness signal).
+
+hypothesis sweeps shapes (batch, heads, groups, block size, context
+lengths) and dtypes (f32 cache vs FP8 codes+scales); every property
+asserts allclose between the interpret-mode kernel and ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8, kv_write, paged_attention, prefill_attention, ref
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# kv_write
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 10),   # tokens
+    st.sampled_from([1, 2, 4]),   # kv heads
+    st.sampled_from([4, 8, 16]),  # block size
+    st.booleans(),        # fp8
+)
+def test_kv_write_matches_ref(seed, T, Hk, BS, use_fp8):
+    rng = np.random.default_rng(seed)
+    NB, D = 8, 16
+    k_new, v_new = rand(rng, T, Hk, D), rand(rng, T, Hk, D)
+    total = NB * BS
+    # slots: unique, some skipped (-1) — the Eq. 5 filter
+    slots = rng.permutation(total)[:T].astype(np.int32)
+    skip = rng.random(T) < 0.3
+    slots[skip] = -1
+    if use_fp8:
+        kc = np.zeros((NB, BS, Hk, D), np.uint8)
+        vc = np.zeros_like(kc)
+        ks = np.full((NB, BS, Hk), 1e-3, np.float32)
+        vs = np.full_like(ks, 1e-3)
+        out = kv_write.kv_write(jnp.asarray(k_new), jnp.asarray(v_new),
+                                jnp.asarray(slots), jnp.asarray(kc),
+                                jnp.asarray(vc), jnp.asarray(ks),
+                                jnp.asarray(vs))
+        want = ref.ref_kv_write(k_new, v_new, slots, kc, vc, ks, vs)
+    else:
+        kc = np.zeros((NB, BS, Hk, D), np.float32)
+        vc = np.zeros_like(kc)
+        out = kv_write.kv_write(jnp.asarray(k_new), jnp.asarray(v_new),
+                                jnp.asarray(slots), jnp.asarray(kc),
+                                jnp.asarray(vc))
+        want = ref.ref_kv_write(k_new, v_new, slots, kc, vc)
+    for got, exp in zip(out, want):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_kv_write_all_skipped_is_noop():
+    rng = np.random.default_rng(0)
+    kc = rand(rng, 4, 4, 2, 8)
+    vc = rand(rng, 4, 4, 2, 8)
+    out = kv_write.kv_write(jnp.asarray(rand(rng, 3, 2, 8)),
+                            jnp.asarray(rand(rng, 3, 2, 8)),
+                            jnp.asarray(np.array([-1, -1, -1], np.int32)),
+                            jnp.asarray(kc), jnp.asarray(vc))
+    np.testing.assert_array_equal(np.asarray(out[0]), kc)
+    np.testing.assert_array_equal(np.asarray(out[1]), vc)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 4),            # batch
+    st.sampled_from([1, 2]),      # kv heads
+    st.sampled_from([1, 2, 3]),   # groups (Eq. 7)
+    st.sampled_from([4, 8]),      # block size
+    st.booleans(),                # valid_only (Opt-Pa)
+    st.booleans(),                # fp8 (Opt-KV)
+)
+def test_paged_attention_matches_ref(seed, B, Hk, G, BS, valid_only, use_fp8):
+    rng = np.random.default_rng(seed)
+    D, MAXB = 16, 5
+    NB = B * MAXB + 2
+    Hq = Hk * G
+    kc = rand(rng, NB, BS, Hk, D)
+    vc = rand(rng, NB, BS, Hk, D)
+    bt = rng.permutation(NB)[:B * MAXB].reshape(B, MAXB).astype(np.int32)
+    ctx = rng.integers(0, MAXB * BS + 1, B).astype(np.int32)
+    ctx[0] = max(int(ctx[0]), 1)  # at least one active lane
+    q = rand(rng, B, Hq, D)
+    if use_fp8:
+        kc8, ks = fp8.quantize(kc, axis=-1)
+        vc8, vs = fp8.quantize(vc, axis=-1)
+        got = paged_attention.paged_attention(
+            jnp.asarray(q), kc8, vc8, jnp.asarray(bt), jnp.asarray(ctx),
+            ks, vs, groups=G, valid_only=valid_only)
+        want = ref.ref_paged_attention(q, np.asarray(kc8), np.asarray(vc8),
+                                       bt, ctx, G, np.asarray(ks),
+                                       np.asarray(vs))
+    else:
+        got = paged_attention.paged_attention(
+            jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray(bt), jnp.asarray(ctx), groups=G,
+            valid_only=valid_only)
+        want = ref.ref_paged_attention(q, kc, vc, bt, ctx, G)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_paged_attention_valid_only_equals_baseline():
+    """Opt-Pa must be a pure optimization: identical numerics."""
+    rng = np.random.default_rng(3)
+    B, Hk, G, BS, D, MAXB = 3, 2, 2, 8, 16, 4
+    NB = 16
+    kc, vc = rand(rng, NB, BS, Hk, D), rand(rng, NB, BS, Hk, D)
+    bt = rng.permutation(NB)[:B * MAXB].reshape(B, MAXB).astype(np.int32)
+    ctx = np.array([5, 17, 32], np.int32)
+    q = rand(rng, B, Hk * G, D)
+    a = paged_attention.paged_attention(jnp.asarray(q), jnp.asarray(kc),
+                                        jnp.asarray(vc), jnp.asarray(bt),
+                                        jnp.asarray(ctx), groups=G,
+                                        valid_only=True)
+    b = paged_attention.paged_attention(jnp.asarray(q), jnp.asarray(kc),
+                                        jnp.asarray(vc), jnp.asarray(bt),
+                                        jnp.asarray(ctx), groups=G,
+                                        valid_only=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_paged_attention_padded_lane_is_zero():
+    rng = np.random.default_rng(4)
+    kc, vc = rand(rng, 8, 4, 1, 8), rand(rng, 8, 4, 1, 8)
+    bt = np.zeros((2, 3), np.int32)
+    ctx = np.array([4, 0], np.int32)
+    q = rand(rng, 2, 1, 8)
+    for vo in (True, False):
+        out = np.asarray(paged_attention.paged_attention(
+            jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc),
+            jnp.asarray(bt), jnp.asarray(ctx), groups=1, valid_only=vo))
+        assert np.all(out[1] == 0), f"valid_only={vo}"
+
+
+def test_fp8_attention_error_small_but_nonzero():
+    """Quantization error must exist (it's real FP8) but stay tiny."""
+    rng = np.random.default_rng(5)
+    kc, vc = rand(rng, 8, 8, 2, 16), rand(rng, 8, 8, 2, 16)
+    bt = np.arange(8, dtype=np.int32).reshape(2, 4)
+    ctx = np.array([30, 25], np.int32)
+    q = rand(rng, 2, 2, 16)
+    exact = np.asarray(paged_attention.paged_attention(
+        jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(bt),
+        jnp.asarray(ctx), groups=1, valid_only=True))
+    kc8, ks = fp8.quantize(kc, axis=-1)
+    vc8, vs = fp8.quantize(vc, axis=-1)
+    quant = np.asarray(paged_attention.paged_attention(
+        jnp.asarray(q), kc8, vc8, jnp.asarray(bt), jnp.asarray(ctx),
+        ks, vs, groups=1, valid_only=True))
+    err = np.max(np.abs(exact - quant))
+    assert 0 < err < 0.05, err
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.sampled_from([8, 16, 32]),  # padded S
+    st.sampled_from([1, 2]),       # kv heads
+    st.sampled_from([1, 2, 4]),    # groups
+)
+def test_prefill_attention_matches_ref(seed, S, Hk, G):
+    rng = np.random.default_rng(seed)
+    D = 16
+    Hq = Hk * G
+    q, k, v = rand(rng, S, Hq, D), rand(rng, S, Hk, D), rand(rng, S, Hk, D)
+    seq_len = int(rng.integers(1, S + 1))
+    got = prefill_attention.prefill_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), seq_len, groups=G)
+    want = ref.ref_prefill_attention(q, k, v, seq_len, G)
+    np.testing.assert_allclose(np.asarray(got)[:seq_len],
+                               np.asarray(want)[:seq_len],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_prefill_causality():
+    """Changing future tokens must not change past outputs."""
+    rng = np.random.default_rng(6)
+    S, Hq, Hk, D = 16, 2, 1, 8
+    q, k, v = rand(rng, S, Hq, D), rand(rng, S, Hk, D), rand(rng, S, Hk, D)
+    base = np.asarray(prefill_attention.prefill_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), S, groups=2))
+    k2, v2 = k.copy(), v.copy()
+    k2[10:], v2[10:] = 99.0, -99.0
+    pert = np.asarray(prefill_attention.prefill_attention(
+        jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), S, groups=2))
+    np.testing.assert_allclose(base[:10], pert[:10], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[10:], pert[10:])

@@ -1,0 +1,139 @@
+"""L2 model tests: serving path (prefill+decode over the paged cache)
+must agree with the dense training forward — the end-to-end numerical
+contract between L1/L2 and what the rust engine will see."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.presets import MODELS, OPT_CONFIGS, PAD_ID, weight_shapes, weight_names
+
+
+def tiny_preset():
+    # smallest zoo member keeps tests fast
+    return MODELS["llama-7b-sim"]
+
+
+def make_caches(preset, opt, NB=16, BS=4):
+    hk = preset.n_kv_heads(opt.gqa)
+    shape = (preset.layers, NB, BS, hk, preset.head_dim)
+    if opt.fp8_kv:
+        kc = jnp.zeros(shape, jnp.uint8)
+        vc = jnp.zeros(shape, jnp.uint8)
+        ks = jnp.full(shape[:-1], 1e-6, jnp.float32)
+        vs = jnp.full(shape[:-1], 1e-6, jnp.float32)
+        return (kc, vc, ks, vs)
+    return (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+
+
+def serving_logits(preset, opt, params, tokens, S=16, NB=16, BS=4, MAXB=4):
+    """Run prompt through prefill, then decode the rest token by token;
+    returns the last-position logits after consuming all `tokens`."""
+    prompt = tokens[: len(tokens) - len(tokens) // 2]
+    rest = tokens[len(prompt):]
+    caches = make_caches(preset, opt, NB, BS)
+
+    padded = np.full(S, PAD_ID, np.int32)
+    padded[: len(prompt)] = prompt
+    slot_map = np.full(S, -1, np.int32)
+    for i in range(len(prompt) if opt.skip_filter else S):
+        slot_map[i] = i  # identity layout: blocks 0..S/BS
+    out = M.forward_prefill(params, preset, opt, jnp.asarray(padded),
+                            jnp.int32(len(prompt)), jnp.asarray(slot_map),
+                            *caches)
+    logits, caches = out[0], out[1:]
+    last = np.asarray(logits)[len(prompt) - 1]
+
+    bt = np.zeros((1, MAXB), np.int32)
+    bt[0, :] = np.arange(MAXB)
+    for i, tok in enumerate(rest):
+        pos = len(prompt) + i
+        out = M.forward_decode(
+            params, preset, opt,
+            jnp.asarray(np.array([tok], np.int32)),
+            jnp.asarray(np.array([pos], np.int32)),
+            jnp.asarray(bt),
+            jnp.asarray(np.array([pos + 1], np.int32)),
+            jnp.asarray(np.array([pos], np.int32)),  # slot = position
+            *caches)
+        logits, caches = out[0], out[1:]
+        last = np.asarray(logits)[0]
+    return last
+
+
+@pytest.mark.parametrize("cfg", ["original", "optpa", "optgqa", "coopt"])
+def test_serving_path_matches_dense(cfg):
+    preset = tiny_preset()
+    opt = OPT_CONFIGS[cfg]
+    params = M.init_params(preset, seed=1)
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, 255, 12).astype(np.int32).tolist()
+
+    got = serving_logits(preset, opt, params, tokens)
+    toks = np.asarray([tokens], np.int32)
+    lens = np.asarray([len(tokens)], np.int32)
+    dense = np.asarray(
+        M.forward_train(params, preset, jnp.asarray(toks), jnp.asarray(lens),
+                        gqa=opt.gqa))[0, len(tokens) - 1]
+    # FP8 per-slot quantization error compounds over the decoded suffix;
+    # bound it loosely here (test_fp8_serving_close_to_dense checks the
+    # argmax survives, which is what serving correctness needs)
+    tol = 1e-1 if opt.fp8_kv else 1e-3
+    np.testing.assert_allclose(got, dense, rtol=tol, atol=tol)
+
+
+def test_fp8_serving_close_to_dense():
+    """coopt (FP8 cache) must track dense logits within quantization noise
+    and must preserve the argmax on a confident distribution."""
+    preset = tiny_preset()
+    opt = OPT_CONFIGS["coopt"]
+    params = M.init_params(preset, seed=2)
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(0, 255, 10).astype(np.int32).tolist()
+    got = serving_logits(preset, opt, params, tokens)
+    dense = np.asarray(
+        M.forward_train(params, preset,
+                        jnp.asarray(np.asarray([tokens], np.int32)),
+                        jnp.asarray(np.asarray([len(tokens)], np.int32)),
+                        gqa=True))[0, len(tokens) - 1]
+    # bounded error
+    assert np.max(np.abs(got - dense)) < 0.2
+    # rank correlation of top tokens survives quantization
+    assert np.argmax(got) == np.argmax(dense)
+
+
+def test_weight_shapes_cover_names():
+    for preset in MODELS.values():
+        shapes = weight_shapes(preset)
+        names = weight_names(preset)
+        assert set(shapes) == set(names)
+        assert names[0] == "embed" and names[-1] == "lm_head"
+
+
+def test_init_params_match_declared_shapes():
+    preset = tiny_preset()
+    params = M.init_params(preset)
+    for name, shape in weight_shapes(preset).items():
+        assert tuple(params[name].shape) == tuple(shape), name
+
+
+def test_rope_rotation_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1, 6, 2, 32)).astype(np.float32)
+    pos = np.arange(6, dtype=np.int32)[None]
+    y = np.asarray(M.rope(jnp.asarray(x), jnp.asarray(pos)))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=1e-5)
+    # position 0 is identity
+    np.testing.assert_allclose(y[:, 0], x[:, 0], rtol=1e-6)
+
+
+def test_rms_norm_scale_invariance():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    w = np.ones(16, np.float32)
+    a = np.asarray(M.rms_norm(jnp.asarray(x), jnp.asarray(w)))
+    b = np.asarray(M.rms_norm(jnp.asarray(x * 10), jnp.asarray(w)))
+    np.testing.assert_allclose(a, b, rtol=1e-4)

@@ -1,0 +1,96 @@
+//! Ablation benches (`ablation-block-size`, `ablation-seqlen` experiment
+//! ids): block-size sweep and the long-context crossover that motivates
+//! Opt-Pa (§3.3).  Analytical Z100 model; runs without artifacts.
+
+use llm_coopt::config::{builtin_preset, ALL_CONFIGS, COOPT, OPTPA, ORIGINAL};
+use llm_coopt::platform::{CostModel, SeqCostInput};
+use llm_coopt::util::json::{Object, Value};
+
+fn main() -> anyhow::Result<()> {
+    let preset = builtin_preset("llama-13b-sim")?;
+    let mut rows = Vec::new();
+
+    // --- block-size sweep (coopt): paging granularity vs step time
+    println!("ablation: block size sweep (llama-13b twin, ctx 512, batch 8)");
+    println!("{:>6} {:>12} {:>12} {:>12}", "B", "orig(ms)", "coopt(ms)", "gain%");
+    for bs in [8usize, 16, 32, 64] {
+        let cm = CostModel::for_preset(&preset, bs);
+        let seqs: Vec<SeqCostInput> = (0..8)
+            .map(|_| SeqCostInput {
+                ctx_len: 512,
+                allocated_blocks: 1024 / bs,
+            })
+            .collect();
+        let o = cm.decode_step(&seqs, &ORIGINAL, 1, 8).total_s;
+        let c = cm.decode_step(&seqs, &COOPT, 1, 8).total_s;
+        println!(
+            "{:>6} {:>12.3} {:>12.3} {:>11.2}%",
+            bs,
+            o * 1e3,
+            c * 1e3,
+            (o / c - 1.0) * 100.0
+        );
+        let mut r = Object::new();
+        r.insert("sweep", "block_size");
+        r.insert("block_size", bs);
+        r.insert("orig_s", o);
+        r.insert("coopt_s", c);
+        rows.push(Value::Object(r));
+    }
+
+    // --- long-sequence sweep: Opt-Pa gain vs context (padding fixed at 4096)
+    println!("\nablation: Opt-Pa gain vs context length (allocation padded to 4096 tokens)");
+    println!("{:>8} {:>12} {:>12} {:>10}", "ctx", "orig(ms)", "optpa(ms)", "gain%");
+    let cm = CostModel::for_preset(&preset, 16);
+    for ctx in [64usize, 128, 256, 512, 1024, 2048, 4096] {
+        let seqs: Vec<SeqCostInput> = (0..8)
+            .map(|_| SeqCostInput {
+                ctx_len: ctx,
+                allocated_blocks: 4096 / 16,
+            })
+            .collect();
+        let o = cm.decode_step(&seqs, &ORIGINAL, 1, 8).total_s;
+        let p = cm.decode_step(&seqs, &OPTPA, 1, 8).total_s;
+        println!(
+            "{:>8} {:>12.3} {:>12.3} {:>9.2}%",
+            ctx,
+            o * 1e3,
+            p * 1e3,
+            (o / p - 1.0) * 100.0
+        );
+        let mut r = Object::new();
+        r.insert("sweep", "seqlen");
+        r.insert("ctx", ctx);
+        r.insert("orig_s", o);
+        r.insert("optpa_s", p);
+        rows.push(Value::Object(r));
+    }
+
+    // --- capacity coupling per model (the Fig. 7 mechanism)
+    println!("\npaper-scale KV pool blocks per config:");
+    for name in [
+        "llama-7b-sim",
+        "llama2-7b-sim",
+        "llama-13b-sim",
+        "llama2-13b-sim",
+        "llama-pro-8b-sim",
+    ] {
+        let p = builtin_preset(name)?;
+        let cm = CostModel::for_preset(&p, 16);
+        print!("  {:<18}", name);
+        for cfg in ALL_CONFIGS {
+            print!(" {}={}", cfg.name, cm.paper_pool_blocks(&cfg));
+        }
+        println!();
+    }
+
+    let mut top = Object::new();
+    top.insert("figure", "ablation");
+    top.insert("rows", Value::Array(rows));
+    std::fs::create_dir_all("target/bench-reports")?;
+    std::fs::write(
+        "target/bench-reports/ablation.json",
+        Value::Object(top).to_string_pretty(),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! L3 hot-path micro-benchmarks (`perf-l3` experiment id): block
+//! allocator, slot-mapping construction, scheduler rounds, sampling, JSON,
+//! FP8 codec.  These are the §Perf targets for the coordinator — the
+//! paper's contribution is the cache/kernel path, so L3 must stay cheap.
+//! Runs without artifacts.
+
+use llm_coopt::config::{CacheGeometry, EngineConfig, COOPT, ORIGINAL};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::kvcache::{BlockAllocator, CacheManager};
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::sampling::{sample, SamplingParams};
+use llm_coopt::scheduler::Scheduler;
+use llm_coopt::util::bench::{black_box, BenchSuite};
+use llm_coopt::util::fp8;
+use llm_coopt::util::json;
+use llm_coopt::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("l3-micro");
+    suite.measure = std::time::Duration::from_millis(800);
+
+    // allocator alloc/free cycle
+    let mut alloc = BlockAllocator::new(4096);
+    suite.bench("allocator/alloc_free_64", || {
+        let ids: Vec<_> = (0..64).map(|_| alloc.alloc().unwrap()).collect();
+        for id in ids {
+            alloc.decref(id);
+        }
+    });
+
+    // prefill slot-mapping build (Opt-KV SkipSet path vs baseline padding)
+    let geometry = CacheGeometry::default();
+    let prompt: Vec<u32> = (0..100).map(|i| (i * 7 % 251) as u32).collect();
+    for (name, cfg) in [("coopt", COOPT), ("original", ORIGINAL)] {
+        let mut cm = CacheManager::new(geometry);
+        let mut id = 0u64;
+        suite.bench(format!("cache/prefill_plan/{name}"), || {
+            id += 1;
+            let plan = cm.prefill(id, black_box(&prompt), &cfg).unwrap();
+            black_box(&plan);
+            cm.free_seq(id);
+        });
+    }
+
+    // decode append (slot reservation) steady state
+    {
+        let mut cm = CacheManager::new(CacheGeometry {
+            num_pool_blocks: 4096,
+            max_blocks: 4096 / 16,
+            ..geometry
+        });
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        let mut n = 0u64;
+        suite.bench("cache/append_token", || {
+            n += 1;
+            if cm.seq_len(1) + 2 >= 4096 {
+                cm.free_seq(1);
+                cm.prefill(1, &prompt, &COOPT).unwrap();
+            }
+            black_box(cm.append_token(1).unwrap());
+        });
+    }
+
+    // scheduler round at batch 8 with queue pressure
+    {
+        let mut sched = Scheduler::new(8);
+        let cm = CacheManager::new(geometry);
+        for i in 0..64u64 {
+            sched.submit(i, 40);
+        }
+        suite.bench("scheduler/schedule_round", || {
+            black_box(sched.schedule(&cm, &COOPT));
+        });
+    }
+
+    // sampling
+    let mut rng = Rng::new(0);
+    let logits: Vec<f32> = (0..260).map(|i| ((i * 37 % 101) as f32) * 0.05).collect();
+    suite.bench("sampling/greedy", || {
+        black_box(sample(
+            black_box(&logits),
+            &SamplingParams::default(),
+            &mut rng,
+        ));
+    });
+    suite.bench("sampling/topk_topp", || {
+        black_box(sample(
+            black_box(&logits),
+            &SamplingParams {
+                temperature: 0.8,
+                top_k: 40,
+                top_p: 0.9,
+            },
+            &mut rng,
+        ));
+    });
+
+    // fp8 codec (rust mirror)
+    let xs: Vec<f32> = (0..1024).map(|i| ((i as f32) - 512.0) * 0.37).collect();
+    suite.bench_units("fp8/quantize_1k", 1024.0, &mut || {
+        black_box(fp8::quantize(black_box(&xs)));
+    });
+
+    // json parse/serialize (server request path)
+    let body = r#"{"prompt": "Q: 2+3=? A) 5 B) 6 C) 4 D) 9\nAnswer:", "max_new_tokens": 16, "temperature": 0.7}"#;
+    suite.bench("json/parse_request", || {
+        black_box(json::parse(black_box(body)).unwrap());
+    });
+
+    // full engine round over the mock backend = pure-L3 cost of a step
+    {
+        let be = MockBackend::new();
+        let mut e =
+            Engine::new(be, EngineConfig::new("llama-7b-sim", COOPT)).without_cost_model();
+        suite.bench("engine/round_mock_batch8", || {
+            for i in 0..8 {
+                e.submit(GenRequest::greedy(format!("bench prompt {i}"), 4))
+                    .unwrap();
+            }
+            black_box(e.run_to_completion().unwrap());
+        });
+    }
+
+    // --- real PJRT step costs (per opt config), when artifacts exist.
+    // This is the §Perf measurement separating kernel-execution time from
+    // the cache round-trip the CPU-PJRT tuple path forces (DESIGN.md §5).
+    let dir = llm_coopt::config::artifacts_dir();
+    if llm_coopt::runtime::artifacts_available(&dir) {
+        let rt = llm_coopt::runtime::Runtime::new(&dir).expect("runtime");
+        for cfg in [ORIGINAL, COOPT] {
+            use llm_coopt::runtime::Backend;
+            let mut m = rt.load_model("llama-7b-sim", cfg).unwrap();
+            let g = *m.geometry();
+            let mut toks = vec![256i32; g.max_seq];
+            toks[0] = 81;
+            toks[1] = 58;
+            let mut slots = vec![-1i32; g.max_seq];
+            slots[0] = 0;
+            slots[1] = 1;
+            m.prefill(&toks, 2, &slots).unwrap();
+            let mut token_ids = vec![256i32; g.max_batch];
+            token_ids[0] = 65;
+            let mut positions = vec![0i32; g.max_batch];
+            let mut ctx = vec![0i32; g.max_batch];
+            let mut sm = vec![-1i32; g.max_batch];
+            let mut bt = vec![0i32; g.max_batch * g.max_blocks];
+            for (i, b) in bt.iter_mut().enumerate().take(g.max_blocks) {
+                *b = i as i32;
+            }
+            let mut pos = 2i32;
+            suite.bench(format!("pjrt/decode_step/{}", cfg.name), || {
+                if pos as usize + 2 >= g.max_context() {
+                    pos = 2;
+                }
+                positions[0] = pos;
+                ctx[0] = pos + 1;
+                sm[0] = pos;
+                black_box(m.decode(&token_ids, &positions, &bt, &ctx, &sm).unwrap());
+                pos += 1;
+            });
+            let mut pc = 0u32;
+            suite.bench(format!("pjrt/prefill/{}", cfg.name), || {
+                pc += 1;
+                toks[1] = (pc % 200) as i32;
+                black_box(m.prefill(&toks, 2, &slots).unwrap());
+            });
+        }
+    } else {
+        eprintln!("(artifacts missing: skipping pjrt step benches)");
+    }
+
+    suite.report();
+    suite.write_json().ok();
+}

@@ -1,0 +1,62 @@
+//! Z100 platform-model benches: Eq. 3 effective-latency sweep, roofline
+//! checks, and the per-config step-time decomposition used by DESIGN.md
+//! (`eq3-hierarchy` experiment id).  Pure analytical; runs without
+//! artifacts.
+
+use llm_coopt::config::{builtin_presets, ALL_CONFIGS};
+use llm_coopt::platform::{CostModel, SeqCostInput};
+use llm_coopt::util::bench::{black_box, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::quick("platform-model");
+
+    // Eq. 3 sweep: effective latency monotone in hit rate
+    let cm = CostModel::for_preset(&builtin_presets()[2], 16);
+    println!("Eq. 3 sweep (hit rate -> effective latency cycles):");
+    let mut prev = f64::INFINITY;
+    for i in 0..=10 {
+        let h = i as f64 / 10.0;
+        let t = cm.effective_latency_cycles(h);
+        println!("  H={h:.1}  T_eff={t:.0} cycles");
+        assert!(t <= prev);
+        prev = t;
+    }
+
+    // step-cost evaluation speed (the engine calls this every step — it
+    // must be non-perturbing in the serving hot loop)
+    let seqs: Vec<SeqCostInput> = (0..8)
+        .map(|i| SeqCostInput {
+            ctx_len: 64 + i * 13,
+            allocated_blocks: 64,
+        })
+        .collect();
+    for cfg in ALL_CONFIGS {
+        suite.bench(format!("decode_step_cost/{}", cfg.name), || {
+            black_box(cm.decode_step(black_box(&seqs), &cfg, 1, 8));
+        });
+    }
+    suite.bench("prefill_cost", || {
+        black_box(cm.prefill(black_box(200), &ALL_CONFIGS[4]));
+    });
+
+    // decomposition table per model at ctx=512
+    println!("\nper-config decode step decomposition (ctx 512, batch 8):");
+    for preset in builtin_presets() {
+        let cm = CostModel::for_preset(&preset, 16);
+        let seqs: Vec<SeqCostInput> = (0..8)
+            .map(|_| SeqCostInput {
+                ctx_len: 512,
+                allocated_blocks: 64,
+            })
+            .collect();
+        print!("  {:<18}", preset.name);
+        for cfg in ALL_CONFIGS {
+            let c = cm.decode_step(&seqs, &cfg, 1, 8);
+            print!(" {}={:.2}ms", cfg.name, c.total_s * 1e3);
+        }
+        println!();
+    }
+
+    suite.report();
+    suite.write_json().ok();
+}

@@ -1,0 +1,83 @@
+//! **Fig. 7 reproduction**: generation throughput per model (Eq. 12),
+//! Original vs each optimization vs LLM-CoOpt, ShareGPT-sim trace.
+//!
+//! Paper's reported CoOpt throughput gains:
+//!   LLaMa-7B 7.20% | LLaMa2-7B 6.13% | LLaMa-13B 12.13% |
+//!   LLaMa2-13B 10.85% | LLaMa-Pro-8B 5.72%
+//! Key shape: 13B-class gains ~2x the 7B-class (memory-capacity coupling;
+//! DESIGN.md), CoOpt >= each individual optimization.
+//!
+//! Run: cargo bench --bench bench_throughput
+
+use llm_coopt::config::{artifacts_dir, ALL_CONFIGS};
+use llm_coopt::runtime::{artifacts_available, Runtime};
+use llm_coopt::util::bench::BenchSuite;
+use llm_coopt::util::json::{Object, Value};
+use llm_coopt::workload::harness::{gain_pct, run_trace};
+use llm_coopt::workload::TraceSpec;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP fig7: run `make artifacts` first");
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    let quick = std::env::var("COOPT_BENCH_QUICK").is_ok();
+    let spec = TraceSpec {
+        num_requests: if quick { 8 } else { 24 },
+        max_new: if quick { 8 } else { 32 },
+        seed: 0xF17_7,
+        ..Default::default()
+    };
+
+    let mut suite = BenchSuite::quick("fig7-throughput");
+    println!("Fig. 7 — generation throughput (Eq. 12), ShareGPT-sim x{} requests", spec.num_requests);
+    println!(
+        "{:<20} {:>10} {:>14} {:>14} {:>10} {:>8}",
+        "model", "config", "sim tok/s", "wall tok/s", "Δsim%", "preempt"
+    );
+    let mut report = Vec::new();
+    for model in rt.manifest.model_names() {
+        let mut base_sim = 0.0;
+        let mut base_wall = 0.0;
+        for cfg in ALL_CONFIGS {
+            let row = run_trace(&rt, &model, cfg, &spec, true)?;
+            if cfg.name == "original" {
+                base_sim = row.throughput_sim;
+                base_wall = row.throughput_wall;
+            }
+            let gain = gain_pct(base_sim, row.throughput_sim);
+            println!(
+                "{:<20} {:>10} {:>12.1}/s {:>12.1}/s {:>9.2}% {:>8}",
+                model, cfg.name, row.throughput_sim, row.throughput_wall, gain, row.preemptions
+            );
+            let mut o = row.to_json();
+            if let Value::Object(obj) = &mut o {
+                obj.insert("throughput_gain_sim_pct", gain);
+                obj.insert(
+                    "throughput_gain_wall_pct",
+                    gain_pct(base_wall, row.throughput_wall),
+                );
+            }
+            report.push(o);
+            suite.record(
+                format!("fig7/{model}/{}", cfg.name),
+                &[1.0 / row.throughput_sim.max(1e-9)],
+                1.0,
+            );
+        }
+        println!();
+    }
+    let mut top = Object::new();
+    top.insert("figure", "fig7");
+    top.insert("rows", Value::Array(report));
+    std::fs::create_dir_all("target/bench-reports")?;
+    std::fs::write(
+        "target/bench-reports/fig7.json",
+        Value::Object(top).to_string_pretty(),
+    )?;
+    suite.report();
+    suite.write_json()?;
+    Ok(())
+}

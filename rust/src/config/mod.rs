@@ -1,0 +1,497 @@
+//! Configuration: model presets, optimization configs, engine/scheduler
+//! settings, and the artifact manifest schema.
+//!
+//! The five model presets and five opt configs mirror
+//! `python/compile/presets.py`; at runtime the authoritative copy is
+//! `artifacts/manifest.json` (written by `python -m compile.aot`), which
+//! [`Manifest::load`] parses — the rust presets exist for paper-scale
+//! geometry (platform model) and for tests that run without artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Which of the paper's optimizations are active (mirrors `OptConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OptConfig {
+    pub name: &'static str,
+    /// Opt-KV read path: FP8 (E4M3) cache + per-slot scales
+    pub fp8_kv: bool,
+    /// Opt-KV write path: engine emits -1 slots for SkipSet members (Eq. 5)
+    pub skip_filter: bool,
+    /// Opt-GQA: grouped-query attention (Eq. 7)
+    pub gqa: bool,
+    /// Opt-Pa: valid-block-only attention loop (Eq. 9)
+    pub valid_only: bool,
+}
+
+pub const ORIGINAL: OptConfig = OptConfig {
+    name: "original",
+    fp8_kv: false,
+    skip_filter: false,
+    gqa: false,
+    valid_only: false,
+};
+pub const OPTKV: OptConfig = OptConfig {
+    name: "optkv",
+    fp8_kv: true,
+    skip_filter: true,
+    gqa: false,
+    valid_only: false,
+};
+pub const OPTGQA: OptConfig = OptConfig {
+    name: "optgqa",
+    fp8_kv: false,
+    skip_filter: false,
+    gqa: true,
+    valid_only: false,
+};
+pub const OPTPA: OptConfig = OptConfig {
+    name: "optpa",
+    fp8_kv: false,
+    skip_filter: false,
+    gqa: false,
+    valid_only: true,
+};
+pub const COOPT: OptConfig = OptConfig {
+    name: "coopt",
+    fp8_kv: true,
+    skip_filter: true,
+    gqa: true,
+    valid_only: true,
+};
+
+pub const ALL_CONFIGS: [OptConfig; 5] = [ORIGINAL, OPTKV, OPTGQA, OPTPA, COOPT];
+
+pub fn opt_config(name: &str) -> Result<OptConfig> {
+    ALL_CONFIGS
+        .iter()
+        .find(|c| c.name == name)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown opt config '{name}' (expected one of original/optkv/optgqa/optpa/coopt)"))
+}
+
+/// Sim-scale model description (mirrors `ModelPreset`), including the
+/// paper-scale twin geometry used by the Z100 platform model.
+#[derive(Debug, Clone)]
+pub struct ModelPreset {
+    pub name: String,
+    pub stands_for: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads_gqa: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub head_dim: usize,
+    // paper-scale twin
+    pub paper_layers: usize,
+    pub paper_d_model: usize,
+    pub paper_heads: usize,
+}
+
+impl ModelPreset {
+    pub fn n_kv_heads(&self, gqa: bool) -> usize {
+        if gqa {
+            self.n_kv_heads_gqa
+        } else {
+            self.n_heads
+        }
+    }
+
+    /// Query heads per KV head (Eq. 7's H_g).
+    pub fn groups(&self, gqa: bool) -> usize {
+        self.n_heads / self.n_kv_heads(gqa)
+    }
+
+    /// Approximate parameter count of the sim model.
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let hd = self.head_dim;
+        let per_layer = d * self.n_heads * hd * 2 // wq, wo
+            + d * self.n_heads * hd * 2           // wk/wv mha
+            + d * self.n_kv_heads_gqa * hd * 2    // wk/wv gqa
+            + 3 * d * self.ffn
+            + 2 * d;
+        self.vocab * d * 2 + self.layers * per_layer + d
+    }
+}
+
+/// Built-in presets (kept in sync with python; tests cross-check against
+/// the manifest when artifacts exist).
+pub fn builtin_presets() -> Vec<ModelPreset> {
+    let mk = |name: &str, stands_for: &str, layers, d_model, n_heads, n_kv, ffn,
+              paper_layers, paper_d, paper_heads| ModelPreset {
+        name: name.into(),
+        stands_for: stands_for.into(),
+        layers,
+        d_model,
+        n_heads,
+        n_kv_heads_gqa: n_kv,
+        ffn,
+        vocab: 260,
+        head_dim: 32,
+        paper_layers,
+        paper_d_model: paper_d,
+        paper_heads,
+    };
+    vec![
+        mk("llama-7b-sim", "LLaMa-7B-GPTQ", 3, 128, 4, 2, 352, 32, 4096, 32),
+        mk("llama2-7b-sim", "LLaMa2-7B-GPTQ", 3, 128, 4, 2, 384, 32, 4096, 32),
+        mk("llama-13b-sim", "LLaMa-13B-GPTQ", 4, 192, 6, 2, 512, 40, 5120, 40),
+        mk("llama2-13b-sim", "LLaMa2-13B-GPTQ", 4, 192, 6, 2, 544, 40, 5120, 40),
+        mk("llama-pro-8b-sim", "LLaMa-Pro-8B-GPTQ", 4, 160, 5, 1, 448, 40, 4096, 32),
+    ]
+}
+
+pub fn builtin_preset(name: &str) -> Result<ModelPreset> {
+    builtin_presets()
+        .into_iter()
+        .find(|p| p.name == name)
+        .ok_or_else(|| anyhow!("unknown model preset '{name}'"))
+}
+
+/// Paged-cache geometry (shared constants with python presets; the
+/// manifest overrides these at runtime).
+#[derive(Debug, Clone, Copy)]
+pub struct CacheGeometry {
+    pub block_size: usize,
+    pub max_blocks: usize,
+    pub num_pool_blocks: usize,
+    pub max_batch: usize,
+    pub max_seq: usize,
+}
+
+impl Default for CacheGeometry {
+    fn default() -> Self {
+        CacheGeometry {
+            block_size: 16,
+            max_blocks: 10,
+            num_pool_blocks: 96,
+            max_batch: 8,
+            max_seq: 128,
+        }
+    }
+}
+
+impl CacheGeometry {
+    pub fn max_context(&self) -> usize {
+        self.block_size * self.max_blocks
+    }
+}
+
+/// Engine/scheduler tunables.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: String,
+    pub opt: OptConfig,
+    /// max sequences decoded together (<= manifest max_batch)
+    pub max_batch: usize,
+    /// scheduler token budget per scheduling round (prefill admission)
+    pub max_prefill_tokens: usize,
+    /// default sampling params
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub top_p: f64,
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    pub fn new(model: &str, opt: OptConfig) -> Self {
+        EngineConfig {
+            model: model.to_string(),
+            opt,
+            max_batch: 8,
+            max_prefill_tokens: 256,
+            max_new_tokens: 32,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// artifact manifest
+// ---------------------------------------------------------------------------
+
+/// One weight array's layout inside `<model>.weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub offset: usize,
+    pub nbytes: usize,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered graph (model x config x phase).
+#[derive(Debug, Clone)]
+pub struct GraphEntry {
+    pub model: String,
+    pub config: String,
+    pub phase: String,
+    pub file: String,
+    /// weight parameters this graph references, in positional order
+    /// (XLA DCEs unused checkpoint entries, so this can be a strict
+    /// subset of the model's weight list)
+    pub weights: Vec<String>,
+    /// runtime (non-weight) inputs in positional order after the weights
+    pub runtime_inputs: Vec<TensorSpec>,
+    pub num_outputs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "i32" | "u8"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-model manifest record.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub preset: ModelPreset,
+    pub weights_file: String,
+    pub weights: Vec<WeightEntry>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub geometry: CacheGeometry,
+    pub models: Vec<ModelEntry>,
+    pub graphs: Vec<GraphEntry>,
+    pub eval_sets: Vec<(String, String)>, // (split, file)
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let geometry = CacheGeometry {
+            block_size: v.req_usize("block_size")?,
+            max_blocks: v.req_usize("max_blocks")?,
+            num_pool_blocks: v.req_usize("num_pool_blocks")?,
+            max_batch: v.req_usize("max_batch")?,
+            max_seq: v.req_usize("max_seq")?,
+        };
+
+        let mut models = Vec::new();
+        let model_obj = v
+            .req("models")?
+            .as_object()
+            .ok_or_else(|| anyhow!("manifest 'models' is not an object"))?;
+        for (name, m) in model_obj.iter() {
+            let preset = ModelPreset {
+                name: name.to_string(),
+                stands_for: m.req_str("stands_for")?.to_string(),
+                layers: m.req_usize("layers")?,
+                d_model: m.req_usize("d_model")?,
+                n_heads: m.req_usize("n_heads")?,
+                n_kv_heads_gqa: m.req_usize("n_kv_heads_gqa")?,
+                ffn: m.req_usize("ffn")?,
+                vocab: m.req_usize("vocab")?,
+                head_dim: m.req_usize("head_dim")?,
+                paper_layers: m.req_usize("paper_layers")?,
+                paper_d_model: m.req_usize("paper_d_model")?,
+                paper_heads: m.req_usize("paper_heads")?,
+            };
+            let weights = m
+                .req_array("weights")?
+                .iter()
+                .map(|w| {
+                    Ok(WeightEntry {
+                        name: w.req_str("name")?.to_string(),
+                        offset: w.req_usize("offset")?,
+                        nbytes: w.req_usize("nbytes")?,
+                        shape: shape_vec(w.req("shape")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.push(ModelEntry {
+                preset,
+                weights_file: m.req_str("weights_file")?.to_string(),
+                weights,
+            });
+        }
+
+        let graphs = v
+            .req_array("graphs")?
+            .iter()
+            .map(|g| {
+                let runtime_inputs = g
+                    .req_array("runtime_inputs")?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSpec {
+                            name: t.req_str("name")?.to_string(),
+                            dtype: t.req_str("dtype")?.to_string(),
+                            shape: shape_vec(t.req("shape")?)?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let weights = g
+                    .req_array("weights")?
+                    .iter()
+                    .map(|w| {
+                        w.as_str()
+                            .map(|s| s.to_string())
+                            .ok_or_else(|| anyhow!("graph weight name not a string"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(GraphEntry {
+                    model: g.req_str("model")?.to_string(),
+                    config: g.req_str("config")?.to_string(),
+                    phase: g.req_str("phase")?.to_string(),
+                    file: g.req_str("file")?.to_string(),
+                    weights,
+                    runtime_inputs,
+                    num_outputs: g.req_usize("num_outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut eval_sets = Vec::new();
+        if let Some(es) = v.get("eval_sets").and_then(|e| e.as_object()) {
+            for (k, val) in es.iter() {
+                eval_sets.push((
+                    k.to_string(),
+                    val.as_str()
+                        .ok_or_else(|| anyhow!("eval_sets value not a string"))?
+                        .to_string(),
+                ));
+            }
+        }
+
+        if models.is_empty() || graphs.is_empty() {
+            bail!("manifest has no models/graphs");
+        }
+        Ok(Manifest {
+            dir,
+            geometry,
+            models,
+            graphs,
+            eval_sets,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.preset.name == name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+
+    pub fn graph(&self, model: &str, config: &str, phase: &str) -> Result<&GraphEntry> {
+        self.graphs
+            .iter()
+            .find(|g| g.model == model && g.config == config && g.phase == phase)
+            .ok_or_else(|| anyhow!("graph {model}/{config}/{phase} not in manifest"))
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.preset.name.clone()).collect()
+    }
+}
+
+fn shape_vec(v: &Value) -> Result<Vec<usize>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape element")))
+        .collect()
+}
+
+/// Default artifacts dir: `$LLM_COOPT_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("LLM_COOPT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_consistent() {
+        for p in builtin_presets() {
+            assert_eq!(p.d_model, p.n_heads * p.head_dim, "{}", p.name);
+            assert_eq!(p.n_heads % p.n_kv_heads_gqa, 0, "{}", p.name);
+            assert!(p.param_count() > 100_000);
+            assert_eq!(p.groups(false), 1);
+            assert_eq!(p.groups(true), p.n_heads / p.n_kv_heads_gqa);
+        }
+    }
+
+    #[test]
+    fn opt_config_lookup() {
+        assert!(opt_config("coopt").unwrap().fp8_kv);
+        assert!(opt_config("coopt").unwrap().valid_only);
+        assert!(!opt_config("original").unwrap().gqa);
+        assert!(opt_config("bogus").is_err());
+        // optpa only flips the block loop
+        let pa = opt_config("optpa").unwrap();
+        assert!(pa.valid_only && !pa.fp8_kv && !pa.gqa && !pa.skip_filter);
+    }
+
+    #[test]
+    fn geometry_context() {
+        let g = CacheGeometry::default();
+        assert_eq!(g.max_context(), 160);
+    }
+
+    #[test]
+    fn manifest_parse_minimal() {
+        let tmp = std::env::temp_dir().join(format!("coopt-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        let manifest = r#"{
+          "version": 1, "block_size": 16, "max_blocks": 10,
+          "num_pool_blocks": 96, "max_batch": 8, "max_seq": 128,
+          "models": {"m1": {
+            "name": "m1", "stands_for": "X", "layers": 2, "d_model": 64,
+            "n_heads": 2, "n_kv_heads_gqa": 1, "ffn": 128, "vocab": 260,
+            "head_dim": 32, "paper_layers": 32, "paper_d_model": 4096,
+            "paper_heads": 32, "block_size": 16, "max_blocks": 10,
+            "num_pool_blocks": 96, "max_batch": 8, "max_seq": 128,
+            "weights_file": "m1.weights.bin",
+            "weights": [{"name": "embed", "offset": 0, "nbytes": 66560,
+                         "shape": [260, 64]}]
+          }},
+          "graphs": [{
+            "model": "m1", "config": "coopt", "phase": "decode",
+            "file": "m1_coopt_decode.hlo.txt",
+            "weights": ["embed"],
+            "runtime_inputs": [{"name": "token_ids", "dtype": "i32", "shape": [8]}],
+            "num_outputs": 5
+          }],
+          "eval_sets": {"easy": "arc_sim_easy.json"}
+        }"#;
+        std::fs::write(tmp.join("manifest.json"), manifest).unwrap();
+        let m = Manifest::load(&tmp).unwrap();
+        assert_eq!(m.geometry.block_size, 16);
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.model("m1").unwrap().weights[0].shape, vec![260, 64]);
+        assert_eq!(
+            m.graph("m1", "coopt", "decode").unwrap().num_outputs,
+            5
+        );
+        assert!(m.graph("m1", "coopt", "prefill").is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,679 @@
+//! The serving engine: admission -> continuous batching -> slot-mapping /
+//! SkipSet construction -> PJRT step -> sampling -> streaming.
+//!
+//! This is the L3 request path.  Per [`Engine::step`]:
+//!
+//! 1. ask the [`Scheduler`] for a round plan (one prefill + the decode
+//!    batch) subject to [`CacheManager`] admission;
+//! 2. commit the prefill: allocate blocks, build the padded slot mapping
+//!    (the **SkipSet** of Eq. 5 materializes here as -1 slots under
+//!    `skip_filter` configs), run the prefill graph, sample token 0;
+//! 3. commit the decode batch: reserve one slot per running sequence
+//!    (preempting by recompute when the pool is exhausted), build padded
+//!    decode inputs, run the decode graph, sample, advance, finish;
+//! 4. account wallclock (PJRT vs coordinator) and simulated Z100 time
+//!    (platform model) for the paper's Eq. 11/12 metrics.
+//!
+//! The engine is generic over [`Backend`] so the whole L3 logic is unit-
+//! tested against the contract-checking mock without artifacts.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::EngineConfig;
+use crate::kvcache::{CacheManager, SeqId};
+use crate::metrics::{EngineMetrics, RequestMetrics};
+use crate::platform::{CostModel, SeqCostInput};
+use crate::runtime::Backend;
+use crate::sampling::{sample, SamplingParams};
+use crate::scheduler::Scheduler;
+use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
+use crate::util::rng::Rng;
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxNewTokens,
+    MaxContext,
+    /// preempted and its prefix no longer fits the prefill graph
+    PreemptOverflow,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// benchmarking mode: always generate max_new_tokens (vLLM's
+    /// --ignore-eos), so configs produce identical token counts
+    pub ignore_eos: bool,
+}
+
+impl GenRequest {
+    pub fn greedy(prompt: impl Into<String>, max_new_tokens: usize) -> Self {
+        GenRequest {
+            prompt: prompt.into(),
+            max_new_tokens,
+            sampling: SamplingParams::default(),
+            ignore_eos: false,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: SeqId,
+    pub prompt: String,
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub latency_s: f64,
+    pub ttft_s: f64,
+    pub sim_time_s: f64,
+}
+
+#[derive(Debug)]
+struct Sequence {
+    #[allow(dead_code)]
+    id: SeqId,
+    /// prompt + generated (the tail token is sampled but not yet decoded)
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    max_new: usize,
+    sampling: SamplingParams,
+    ignore_eos: bool,
+    metrics: RequestMetrics,
+    finish: Option<FinishReason>,
+}
+
+impl Sequence {
+    fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+}
+
+pub struct Engine<B: Backend> {
+    pub backend: B,
+    cache: CacheManager,
+    sched: Scheduler,
+    seqs: HashMap<SeqId, Sequence>,
+    /// sequences needing (re-)prefill — includes preempted ones
+    cost: Option<CostModel>,
+    pub metrics: EngineMetrics,
+    tokenizer: Tokenizer,
+    rng: Rng,
+    next_id: SeqId,
+    pub cfg: EngineConfig,
+    finished: Vec<GenResult>,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(backend: B, cfg: EngineConfig) -> Self {
+        let geometry = *backend.geometry();
+        let max_batch = cfg.max_batch.min(geometry.max_batch);
+        // engine contexts are sim-scale; map them to the paper's ShareGPT
+        // operating point for the Z100 accounting (platform/mod.rs docs)
+        let cost = Some(
+            CostModel::for_preset(backend.preset(), geometry.block_size).with_ctx_scale(8.0),
+        );
+        Engine {
+            cache: CacheManager::new(geometry),
+            sched: Scheduler::new(max_batch),
+            seqs: HashMap::new(),
+            cost,
+            metrics: EngineMetrics::new(),
+            tokenizer: Tokenizer::new(),
+            rng: Rng::new(cfg.seed),
+            next_id: 1,
+            cfg,
+            backend,
+            finished: Vec::new(),
+        }
+    }
+
+    /// Disable the simulated-platform accounting (micro-benchmarks).
+    pub fn without_cost_model(mut self) -> Self {
+        self.cost = None;
+        self
+    }
+
+    pub fn opt_name(&self) -> &'static str {
+        self.backend.opt().name
+    }
+
+    pub fn cache_stats(&self) -> crate::kvcache::CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn num_pending(&self) -> usize {
+        self.sched.num_waiting() + self.sched.num_running()
+    }
+
+    /// Submit a request; returns its sequence id.
+    pub fn submit(&mut self, req: GenRequest) -> Result<SeqId> {
+        let tokens = self.tokenizer.encode(&req.prompt, true, false);
+        self.submit_tokens(tokens, req.max_new_tokens, req.sampling, req.ignore_eos)
+    }
+
+    pub fn submit_tokens(
+        &mut self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        sampling: SamplingParams,
+        ignore_eos: bool,
+    ) -> Result<SeqId> {
+        let max_seq = self.backend.geometry().max_seq;
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        if tokens.len() > max_seq {
+            bail!("prompt of {} tokens exceeds max_seq {max_seq}", tokens.len());
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let prompt_len = tokens.len();
+        self.seqs.insert(
+            id,
+            Sequence {
+                id,
+                tokens,
+                prompt_len,
+                max_new: max_new.max(1),
+                sampling,
+                ignore_eos,
+                metrics: RequestMetrics {
+                    id,
+                    prompt_tokens: prompt_len,
+                    generated_tokens: 0,
+                    arrival: Instant::now(),
+                    first_token: None,
+                    finished: None,
+                    sim_time_s: 0.0,
+                },
+                finish: None,
+            },
+        );
+        self.sched.submit(id, prompt_len);
+        Ok(id)
+    }
+
+    /// Advance the engine one scheduling round.  Returns results finished
+    /// during the round.
+    pub fn step(&mut self) -> Result<Vec<GenResult>> {
+        let round_t0 = Instant::now();
+        let backend_wall_before = self.metrics.wall_prefill_s + self.metrics.wall_decode_s;
+        let decision = self.sched.schedule(&self.cache, self.backend.opt());
+
+        if let Some(id) = decision.prefill {
+            self.run_prefill(id)?;
+        }
+
+        let decodes: Vec<SeqId> = decision
+            .decodes
+            .iter()
+            .copied()
+            .filter(|id| self.seqs.get(id).map(|s| s.finish.is_none()).unwrap_or(false))
+            .collect();
+        if !decodes.is_empty() {
+            self.run_decode(&decodes)?;
+        } else if decision.prefill.is_none() && !self.sched.is_idle() {
+            // nothing runnable but work pending: the front request cannot be
+            // admitted; make room or fail loudly
+            if self.sched.num_running() == 0 {
+                bail!(
+                    "stuck: {} waiting requests but no admission possible (pool {} free blocks)",
+                    self.sched.num_waiting(),
+                    self.cache.num_free_blocks()
+                );
+            }
+        }
+
+        // L3 overhead = round wallclock minus time spent inside backend calls
+        let _ = self.backend.take_exec_time();
+        let backend_wall =
+            self.metrics.wall_prefill_s + self.metrics.wall_decode_s - backend_wall_before;
+        let round = round_t0.elapsed().as_secs_f64();
+        self.metrics.wall_coordinator_s += (round - backend_wall).max(0.0);
+
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    /// Drive until all submitted requests finish.
+    pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        let mut out = Vec::new();
+        self.metrics.start_run();
+        while !self.sched.is_idle() {
+            out.extend(self.step()?);
+        }
+        self.metrics.finish_run();
+        Ok(out)
+    }
+
+    /// Submit all prompts, run to completion (the batch API).
+    pub fn generate(&mut self, reqs: Vec<GenRequest>) -> Result<Vec<GenResult>> {
+        for r in reqs {
+            self.submit(r)?;
+        }
+        let mut results = self.run_to_completion()?;
+        results.sort_by_key(|r| r.id);
+        Ok(results)
+    }
+
+    /// Score a prompt: returns the logits row at the last prompt position
+    /// (the eval harness' single-token MCQ protocol).  Runs an isolated
+    /// prefill; the KV blocks are freed immediately.
+    pub fn score_tokens(&mut self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let geometry = *self.backend.geometry();
+        let max_seq = geometry.max_seq;
+        if tokens.is_empty() || tokens.len() > max_seq {
+            bail!("score prompt must have 1..={max_seq} tokens");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let opt = *self.backend.opt();
+        let plan = self.cache.prefill(id, tokens, &opt)?;
+        let mut padded = vec![PAD_ID as i32; max_seq];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let t0 = Instant::now();
+        let logits =
+            self.backend
+                .prefill(&padded, tokens.len() as i32, &plan.slot_mapping)?;
+        self.metrics.wall_prefill_s += t0.elapsed().as_secs_f64();
+        self.metrics.prefill_steps += 1;
+        if let Some(cm) = &self.cost {
+            self.metrics.sim_prefill_s += cm.prefill(tokens.len(), &opt).total_s;
+        }
+        self.cache.free_seq(id);
+        let vocab = self.backend.preset().vocab;
+        let at = (tokens.len() - 1) * vocab;
+        Ok(logits[at..at + vocab].to_vec())
+    }
+
+    // -----------------------------------------------------------------------
+
+    fn run_prefill(&mut self, id: SeqId) -> Result<()> {
+        let opt = *self.backend.opt();
+        let geometry = *self.backend.geometry();
+        let max_seq = geometry.max_seq;
+
+        let seq = self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow!("prefill of unknown sequence {id}"))?;
+        let tokens = seq.tokens.clone();
+        if tokens.len() > max_seq {
+            // can happen after preemption if the prefix outgrew the graph
+            self.finish_seq(id, FinishReason::PreemptOverflow);
+            return Ok(());
+        }
+
+        let allocs_before = self.cache.stats().blocks_used;
+        let plan = self.cache.prefill(id, &tokens, &opt)?;
+        let new_blocks = self.cache.stats().blocks_used - allocs_before;
+
+        let mut padded = vec![PAD_ID as i32; max_seq];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let t0 = Instant::now();
+        let logits = self
+            .backend
+            .prefill(&padded, tokens.len() as i32, &plan.slot_mapping)?;
+        self.metrics.wall_prefill_s += t0.elapsed().as_secs_f64();
+        self.metrics.prefill_steps += 1;
+
+        let sim_s = self.cost.as_ref().map(|cm| {
+            let c = cm.prefill(tokens.len(), &opt);
+            let _ = new_blocks; // allocator penalty folded into prefill cost
+            c.total_s
+        });
+        if let Some(s) = sim_s {
+            self.metrics.sim_prefill_s += s;
+        }
+
+        // sample the first generated token from the last prompt position
+        let vocab = self.backend.preset().vocab;
+        let at = (tokens.len() - 1) * vocab;
+        let seq = self.seqs.get_mut(&id).unwrap();
+        if let Some(s) = sim_s {
+            seq.metrics.sim_time_s += s;
+        }
+        let tok = sample(&logits[at..at + vocab], &seq.sampling, &mut self.rng);
+        seq.metrics.first_token = Some(Instant::now());
+        seq.tokens.push(tok);
+        seq.metrics.generated_tokens = seq.generated();
+        self.check_finish(id, tok);
+        Ok(())
+    }
+
+    fn run_decode(&mut self, ids: &[SeqId]) -> Result<()> {
+        let opt = *self.backend.opt();
+        let geometry = *self.backend.geometry();
+        let b = geometry.max_batch;
+        let mb = geometry.max_blocks;
+
+        // 1. reserve a slot per sequence, preempting on pool exhaustion
+        let mut active: Vec<SeqId> = Vec::with_capacity(ids.len());
+        let mut slots: Vec<i32> = Vec::with_capacity(ids.len());
+        let mut preempted_now: Vec<SeqId> = Vec::new();
+        let allocs_before = self.cache.stats().blocks_used;
+        for &id in ids.iter().take(b) {
+            if preempted_now.contains(&id) {
+                continue;
+            }
+            loop {
+                match self.cache.append_token(id) {
+                    Ok((slot, _pos)) => {
+                        active.push(id);
+                        slots.push(slot);
+                        break;
+                    }
+                    Err(_) => {
+                        // out of blocks (or max context): try preempting the
+                        // newest running sequence that isn't `id` itself
+                        let seq_len = self.cache.seq_len(id);
+                        if seq_len + 1 > geometry.max_context() {
+                            self.finish_seq(id, FinishReason::MaxContext);
+                            break;
+                        }
+                        let seqs = &self.seqs;
+                        let victim = self
+                            .sched
+                            .preempt_latest(|v| seqs.get(&v).map(|s| s.tokens.len()).unwrap_or(0));
+                        match victim {
+                            Some(v) if v != id => {
+                                self.cache.free_seq(v);
+                                preempted_now.push(v);
+                                self.metrics.preemptions += 1;
+                                continue;
+                            }
+                            _ => {
+                                // preempting ourselves or nothing to preempt
+                                if let Some(v) = victim {
+                                    self.cache.free_seq(v);
+                                    preempted_now.push(v);
+                                    self.metrics.preemptions += 1;
+                                }
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        active.retain(|id| !preempted_now.contains(id));
+        if active.is_empty() {
+            return Ok(());
+        }
+        let new_blocks = self.cache.stats().blocks_used.saturating_sub(allocs_before);
+
+        // 2. build padded decode inputs
+        let mut token_ids = vec![PAD_ID as i32; b];
+        let mut positions = vec![0i32; b];
+        let mut ctx_lens = vec![0i32; b];
+        let mut slot_mapping = vec![-1i32; b];
+        let mut block_tables = vec![0i32; b * mb];
+        let mut cost_inputs: Vec<SeqCostInput> = Vec::with_capacity(active.len());
+        for (lane, &id) in active.iter().enumerate() {
+            let seq = &self.seqs[&id];
+            let ctx = self.cache.seq_len(id); // includes the new token
+            token_ids[lane] = *seq.tokens.last().unwrap() as i32;
+            positions[lane] = (ctx - 1) as i32;
+            ctx_lens[lane] = ctx as i32;
+            slot_mapping[lane] = slots[lane];
+            let row = self.cache.block_table_row(id);
+            block_tables[lane * mb..(lane + 1) * mb].copy_from_slice(&row);
+            cost_inputs.push(SeqCostInput {
+                ctx_len: ctx,
+                allocated_blocks: row_allocated(&row, ctx, geometry.block_size, &opt, geometry.max_seq),
+            });
+        }
+
+        // 3. execute
+        let t0 = Instant::now();
+        let logits = self.backend.decode(
+            &token_ids,
+            &positions,
+            &block_tables,
+            &ctx_lens,
+            &slot_mapping,
+        )?;
+        self.metrics.wall_decode_s += t0.elapsed().as_secs_f64();
+        self.metrics.decode_steps += 1;
+
+        let sim_s = self.cost.as_ref().map(|cm| {
+            cm.decode_step(&cost_inputs, &opt, new_blocks, active.len())
+                .total_s
+        });
+        if let Some(s) = sim_s {
+            self.metrics.sim_decode_s += s;
+        }
+
+        // 4. sample + advance
+        let vocab = self.backend.preset().vocab;
+        let per_seq_sim = sim_s.map(|s| s / active.len() as f64);
+        for (lane, &id) in active.iter().enumerate() {
+            let row = &logits[lane * vocab..(lane + 1) * vocab];
+            let seq = self.seqs.get_mut(&id).unwrap();
+            let tok = sample(row, &seq.sampling, &mut self.rng);
+            seq.tokens.push(tok);
+            seq.metrics.generated_tokens = seq.generated();
+            if let Some(s) = per_seq_sim {
+                seq.metrics.sim_time_s += s;
+            }
+            self.check_finish(id, tok);
+        }
+        Ok(())
+    }
+
+    fn check_finish(&mut self, id: SeqId, last_token: u32) {
+        let geometry = *self.backend.geometry();
+        let seq = &self.seqs[&id];
+        let reason = if last_token == EOS_ID && !seq.ignore_eos {
+            Some(FinishReason::Eos)
+        } else if seq.generated() >= seq.max_new {
+            Some(FinishReason::MaxNewTokens)
+        } else if seq.tokens.len() >= geometry.max_context() {
+            Some(FinishReason::MaxContext)
+        } else {
+            None
+        };
+        if let Some(r) = reason {
+            self.finish_seq(id, r);
+        }
+    }
+
+    fn finish_seq(&mut self, id: SeqId, reason: FinishReason) {
+        self.cache.free_seq(id);
+        self.sched.finish(id);
+        if let Some(mut seq) = self.seqs.remove(&id) {
+            seq.metrics.finished = Some(Instant::now());
+            seq.finish = Some(reason);
+            self.metrics.record_request(&seq.metrics);
+            self.metrics.tokens_generated = self.metrics.tokens_generated.max(0);
+            let gen_tokens: Vec<u32> = seq.tokens[seq.prompt_len..]
+                .iter()
+                .copied()
+                .filter(|&t| t != EOS_ID)
+                .collect();
+            self.finished.push(GenResult {
+                id,
+                prompt: self.tokenizer.decode(&seq.tokens[..seq.prompt_len]),
+                text: self.tokenizer.decode(&gen_tokens),
+                tokens: seq.tokens.clone(),
+                finish: reason,
+                prompt_tokens: seq.prompt_len,
+                generated_tokens: seq.generated(),
+                latency_s: seq
+                    .metrics
+                    .latency()
+                    .map(|d| d.as_secs_f64())
+                    .unwrap_or(0.0),
+                ttft_s: seq.metrics.ttft().map(|d| d.as_secs_f64()).unwrap_or(0.0),
+                sim_time_s: seq.metrics.sim_time_s,
+            });
+        }
+    }
+}
+
+/// Blocks the attention kernel would traverse on the baseline: every block
+/// the prefill/decode path has populated (padded prefill writes make this
+/// the padded span, Eq. 2), vs ceil(ctx/B) for Opt-Pa.
+fn row_allocated(
+    row: &[i32],
+    ctx: usize,
+    block_size: usize,
+    opt: &crate::config::OptConfig,
+    max_seq: usize,
+) -> usize {
+    let valid = ctx.div_ceil(block_size);
+    if opt.skip_filter {
+        valid
+    } else {
+        // baseline padded prefill populated ceil(max_seq/B) blocks
+        let padded = max_seq.div_ceil(block_size);
+        let _ = row;
+        padded.max(valid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, COOPT, ORIGINAL};
+    use crate::runtime::mock::MockBackend;
+
+    fn engine(opt: crate::config::OptConfig) -> Engine<MockBackend> {
+        let be = MockBackend::new().with_opt(opt);
+        let cfg = EngineConfig::new("llama-7b-sim", opt);
+        Engine::new(be, cfg)
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let mut e = engine(COOPT);
+        e.submit(GenRequest::greedy("Q: 1+1=?", 4)).unwrap();
+        let results = e.run_to_completion().unwrap();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.generated_tokens, 4);
+        assert_eq!(r.finish, FinishReason::MaxNewTokens);
+        assert_eq!(e.cache_stats().blocks_used, 0, "all blocks freed");
+        assert!(e.metrics.decode_steps >= 3);
+    }
+
+    #[test]
+    fn batch_requests_complete_deterministically() {
+        let mut e = engine(COOPT);
+        let reqs: Vec<GenRequest> = (0..12)
+            .map(|i| GenRequest::greedy(format!("prompt number {i}"), 6))
+            .collect();
+        let results = e.generate(reqs.clone()).unwrap();
+        assert_eq!(results.len(), 12);
+        for r in &results {
+            assert!(r.generated_tokens >= 1);
+        }
+        // determinism: same engine config -> same outputs
+        let mut e2 = engine(COOPT);
+        let results2 = e2.generate(reqs).unwrap();
+        for (a, b) in results.iter().zip(&results2) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn original_config_also_serves() {
+        let mut e = engine(ORIGINAL);
+        let results = e
+            .generate(vec![
+                GenRequest::greedy("hello world", 5),
+                GenRequest::greedy("second prompt", 5),
+            ])
+            .unwrap();
+        assert_eq!(results.len(), 2);
+        // baseline fragments the pool while running but frees at the end
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn sim_time_accumulates_and_favors_coopt() {
+        let mut mk = |opt| {
+            let mut e = engine(opt);
+            let reqs: Vec<GenRequest> = (0..6)
+                .map(|i| GenRequest::greedy(format!("prompt {i} {}", "x".repeat(40)), 16))
+                .collect();
+            e.generate(reqs).unwrap();
+            (
+                e.metrics.sim_prefill_s + e.metrics.sim_decode_s,
+                e.metrics.tokens_generated,
+            )
+        };
+        let (t_orig, n1) = mk(ORIGINAL);
+        let (t_coopt, n2) = mk(COOPT);
+        assert_eq!(n1, n2);
+        assert!(t_coopt < t_orig, "coopt {t_coopt} < original {t_orig}");
+    }
+
+    #[test]
+    fn preemption_recovers() {
+        // tiny pool forces preemption under load
+        let geometry = crate::config::CacheGeometry {
+            block_size: 4,
+            max_blocks: 16,
+            num_pool_blocks: 12,
+            max_batch: 4,
+            max_seq: 32,
+        };
+        let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        let mut e = Engine::new(be, cfg);
+        let reqs: Vec<GenRequest> = (0..6)
+            .map(|i| GenRequest::greedy(format!("pp{i} {}", "y".repeat(16)), 12))
+            .collect();
+        let results = e.generate(reqs).unwrap();
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert!(
+                r.generated_tokens >= 1,
+                "every request makes progress despite preemption"
+            );
+        }
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn score_returns_vocab_row_and_frees() {
+        let mut e = engine(COOPT);
+        let toks = Tokenizer::new().encode("Q: 2+2=? Answer:", true, false);
+        let row = e.score_tokens(&toks).unwrap();
+        assert_eq!(row.len(), e.backend.preset().vocab);
+        assert_eq!(e.cache_stats().blocks_used, 0);
+        // deterministic
+        let row2 = e.score_tokens(&toks).unwrap();
+        assert_eq!(row, row2);
+    }
+
+    #[test]
+    fn rejects_oversized_prompt() {
+        let mut e = engine(COOPT);
+        let huge = "z".repeat(4000);
+        assert!(e.submit(GenRequest::greedy(huge, 4)).is_err());
+    }
+
+    #[test]
+    fn coordinator_overhead_measured() {
+        let mut e = engine(COOPT);
+        e.generate(vec![GenRequest::greedy("measure me", 8)]).unwrap();
+        // mock's "backend" time is near zero, so the coordinator share of
+        // wallclock must dominate
+        assert!(e.metrics.wall_coordinator_s > 0.0);
+        assert!(e.metrics.coordinator_overhead_frac() > 0.2);
+    }
+}

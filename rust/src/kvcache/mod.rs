@@ -1,0 +1,612 @@
+//! Paged KV-cache management — the L3 half of **Opt-KV** (paper §3.1).
+//!
+//! The coordinator owns the paged pool layout (the actual tensors live in
+//! PJRT buffers, see [`crate::runtime`]); this module decides *which slots
+//! get written*:
+//!
+//! * [`BlockAllocator`] — free-list pool allocator with refcounts
+//!   (copy-on-write prefix sharing), O(1) alloc/free.
+//! * [`CacheManager`] — per-sequence block tables, slot-mapping
+//!   construction, and the **SkipSet** (Eq. 5): under `skip_filter`
+//!   configs, padding positions and duplicate (prefix-shared) blocks map
+//!   to slot −1, which the L1 `kv_write` kernel skips.  The `original`
+//!   baseline reproduces the behaviour the paper criticizes: every padded
+//!   prefill position is written ("all KVs ... regardless of whether they
+//!   are actually useful, including padding and duplicate tokens").
+//! * fragmentation accounting (allocated vs live slots — the Fig. 3
+//!   motivation) and pool bytes per config (FP8 halves traffic;
+//!   the platform model consumes these numbers).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{CacheGeometry, OptConfig};
+
+pub type BlockId = u32;
+pub type SeqId = u64;
+
+// ---------------------------------------------------------------------------
+// block allocator
+// ---------------------------------------------------------------------------
+
+/// Free-list allocator with per-block reference counts (COW sharing).
+#[derive(Debug, Clone)]
+pub struct BlockAllocator {
+    free: Vec<BlockId>,
+    refcnt: Vec<u16>,
+    num_blocks: usize,
+    /// cumulative counters for metrics
+    pub total_allocs: u64,
+    pub total_frees: u64,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: usize) -> Self {
+        BlockAllocator {
+            free: (0..num_blocks as BlockId).rev().collect(),
+            refcnt: vec![0; num_blocks],
+            num_blocks,
+            total_allocs: 0,
+            total_frees: 0,
+        }
+    }
+
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refcnt[id as usize], 0);
+        self.refcnt[id as usize] = 1;
+        self.total_allocs += 1;
+        Some(id)
+    }
+
+    /// Increase the refcount of an already-allocated block (prefix share).
+    pub fn incref(&mut self, id: BlockId) {
+        debug_assert!(self.refcnt[id as usize] > 0, "incref of free block");
+        self.refcnt[id as usize] += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list at zero.
+    /// Returns true if the block was actually freed.
+    pub fn decref(&mut self, id: BlockId) -> bool {
+        let rc = &mut self.refcnt[id as usize];
+        assert!(*rc > 0, "decref of free block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+            self.total_frees += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u16 {
+        self.refcnt[id as usize]
+    }
+
+    pub fn num_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn num_used(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cache manager
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+struct SeqState {
+    /// logical block -> physical block
+    table: Vec<BlockId>,
+    /// tokens whose K/V occupy slots (context length)
+    len: usize,
+    /// physical blocks borrowed via prefix sharing (refcounted, read-only)
+    shared_prefix_blocks: usize,
+}
+
+/// Outcome of planning a prefill write (drives the prefill graph inputs).
+#[derive(Debug, Clone)]
+pub struct PrefillPlan {
+    /// slot per padded prompt position (len = max_seq); -1 = skip (Eq. 5)
+    pub slot_mapping: Vec<i32>,
+    /// positions actually written
+    pub written: usize,
+    /// positions skipped by the SkipSet (padding + shared-prefix)
+    pub skipped: usize,
+    /// whole blocks reused from the prefix cache
+    pub reused_blocks: usize,
+}
+
+/// Aggregate fragmentation/pool statistics (Fig. 3 motivation).
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub blocks_total: usize,
+    pub blocks_used: usize,
+    pub slots_allocated: usize,
+    pub slots_live: usize,
+    /// 1 - live/allocated: internal fragmentation of the paged pool
+    pub fragmentation: f64,
+    pub prefix_hits: u64,
+    pub skipped_writes: u64,
+    pub total_writes: u64,
+}
+
+#[derive(Debug)]
+pub struct CacheManager {
+    pub geometry: CacheGeometry,
+    alloc: BlockAllocator,
+    seqs: HashMap<SeqId, SeqState>,
+    /// full-block content hash -> physical block (prefix sharing index)
+    prefix_index: HashMap<u64, BlockId>,
+    /// inverse map for eviction when a block is freed
+    block_hash: HashMap<BlockId, u64>,
+    prefix_hits: u64,
+    skipped_writes: u64,
+    total_writes: u64,
+}
+
+impl CacheManager {
+    pub fn new(geometry: CacheGeometry) -> Self {
+        CacheManager {
+            alloc: BlockAllocator::new(geometry.num_pool_blocks),
+            geometry,
+            seqs: HashMap::new(),
+            prefix_index: HashMap::new(),
+            block_hash: HashMap::new(),
+            prefix_hits: 0,
+            skipped_writes: 0,
+            total_writes: 0,
+        }
+    }
+
+    pub fn num_free_blocks(&self) -> usize {
+        self.alloc.num_free()
+    }
+
+    pub fn has_seq(&self, id: SeqId) -> bool {
+        self.seqs.contains_key(&id)
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> usize {
+        self.seqs.get(&id).map(|s| s.len).unwrap_or(0)
+    }
+
+    /// Blocks a prefill of `prompt_len` tokens will need under `opt`
+    /// (ignoring prefix reuse, i.e. the worst case).
+    pub fn blocks_needed_prefill(&self, prompt_len: usize, opt: &OptConfig) -> usize {
+        let bs = self.geometry.block_size;
+        if opt.skip_filter {
+            prompt_len.div_ceil(bs)
+        } else {
+            // baseline writes every padded position (Eq. 2 behaviour)
+            self.geometry.max_seq.div_ceil(bs).max(prompt_len.div_ceil(bs))
+        }
+    }
+
+    /// True if a new sequence with this prompt can be admitted right now.
+    pub fn can_admit(&self, prompt_len: usize, opt: &OptConfig) -> bool {
+        // +1 headroom so the first decode step cannot immediately stall
+        self.alloc.num_free() >= self.blocks_needed_prefill(prompt_len, opt) + 1
+    }
+
+    /// Plan + commit the prefill of sequence `id` with `prompt` tokens.
+    ///
+    /// Allocates blocks (sharing full prefix blocks when `opt.skip_filter`
+    /// allows the duplicate-token skip) and returns the slot mapping for
+    /// the padded prefill graph.
+    pub fn prefill(&mut self, id: SeqId, prompt: &[u32], opt: &OptConfig) -> Result<PrefillPlan> {
+        let bs = self.geometry.block_size;
+        let max_seq = self.geometry.max_seq;
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if prompt.len() > max_seq {
+            bail!("prompt of {} tokens exceeds max_seq {max_seq}", prompt.len());
+        }
+        if self.seqs.contains_key(&id) {
+            bail!("sequence {id} already exists");
+        }
+
+        let mut st = SeqState::default();
+        let mut slot_mapping = vec![-1i32; max_seq];
+        let mut reused_blocks = 0usize;
+
+        // --- phase 1: full prefix blocks, possibly shared (SkipSet members)
+        let full_blocks = prompt.len() / bs;
+        for b in 0..full_blocks {
+            let chunk = &prompt[b * bs..(b + 1) * bs];
+            let h = prefix_hash(&prompt[..b * bs], chunk);
+            if opt.skip_filter {
+                if let Some(&phys) = self.prefix_index.get(&h) {
+                    // duplicate tokens: reuse the block read-only, skip writes
+                    self.alloc.incref(phys);
+                    st.table.push(phys);
+                    st.shared_prefix_blocks += 1;
+                    reused_blocks += 1;
+                    self.prefix_hits += 1;
+                    continue; // slots stay -1  (Eq. 5 SkipSet)
+                }
+            }
+            let phys = match self.alloc.alloc() {
+                Some(p) => p,
+                None => {
+                    self.rollback(&st);
+                    bail!("out of KV blocks during prefill");
+                }
+            };
+            if opt.skip_filter {
+                self.index_block(phys, h);
+            }
+            st.table.push(phys);
+            for o in 0..bs {
+                slot_mapping[b * bs + o] = (phys as usize * bs + o) as i32;
+            }
+        }
+
+        // --- phase 2: tail (partial block) + baseline padding writes
+        let write_upto = if opt.skip_filter {
+            prompt.len() // Opt-KV: only real tokens
+        } else {
+            max_seq // baseline: every padded position (incl. useless ones)
+        };
+        let mut pos = full_blocks * bs;
+        while pos < write_upto {
+            let b = pos / bs;
+            if b >= st.table.len() {
+                let phys = match self.alloc.alloc() {
+                    Some(p) => p,
+                    None => {
+                        self.rollback(&st);
+                        bail!("out of KV blocks during prefill");
+                    }
+                };
+                st.table.push(phys);
+            }
+            let phys = st.table[b];
+            slot_mapping[pos] = (phys as usize * bs + pos % bs) as i32;
+            pos += 1;
+        }
+
+        st.len = prompt.len();
+        let written = slot_mapping.iter().filter(|&&s| s >= 0).count();
+        let skipped = max_seq - written;
+        self.total_writes += written as u64;
+        self.skipped_writes += skipped as u64;
+        self.seqs.insert(id, st);
+        Ok(PrefillPlan {
+            slot_mapping,
+            written,
+            skipped,
+            reused_blocks,
+        })
+    }
+
+    /// Reserve the slot for the next decoded token of `id` and advance its
+    /// length.  Returns (slot, position).  COW: if the target block is
+    /// shared, it is copied (here: re-allocated; the runtime re-writes it).
+    pub fn append_token(&mut self, id: SeqId) -> Result<(i32, usize)> {
+        let bs = self.geometry.block_size;
+        let max_ctx = self.geometry.max_context();
+        let st = self
+            .seqs
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("unknown sequence {id}"))?;
+        let pos = st.len;
+        if pos >= max_ctx {
+            bail!("sequence {id} hit max context {max_ctx}");
+        }
+        let b = pos / bs;
+        if b >= st.table.len() {
+            let phys = self
+                .alloc
+                .alloc()
+                .ok_or_else(|| anyhow::anyhow!("out of KV blocks during decode"))?;
+            st.table.push(phys);
+        }
+        // COW if the tail block is prefix-shared with another sequence
+        let phys = st.table[b];
+        if self.alloc.refcount(phys) > 1 && pos % bs != 0 {
+            // a shared partial block cannot appear via our prefill scheme
+            // (only *full* blocks are shared), but guard anyway
+            bail!("attempted write into shared block {phys}");
+        }
+        if self.alloc.refcount(phys) > 1 {
+            // decref the shared copy and take a private block
+            self.alloc.decref(phys);
+            let fresh = self
+                .alloc
+                .alloc()
+                .ok_or_else(|| anyhow::anyhow!("out of KV blocks during COW"))?;
+            st.table[b] = fresh;
+        }
+        let phys = st.table[b];
+        st.len += 1;
+        self.total_writes += 1;
+        Ok(((phys as usize * bs + pos % bs) as i32, pos))
+    }
+
+    /// Padded block-table row for the decode graph.
+    pub fn block_table_row(&self, id: SeqId) -> Vec<i32> {
+        let max_blocks = self.geometry.max_blocks;
+        let mut row = vec![0i32; max_blocks];
+        if let Some(st) = self.seqs.get(&id) {
+            for (i, &b) in st.table.iter().take(max_blocks).enumerate() {
+                row[i] = b as i32;
+            }
+        }
+        row
+    }
+
+    /// Free a sequence's blocks (end of generation or preemption).
+    pub fn free_seq(&mut self, id: SeqId) {
+        if let Some(st) = self.seqs.remove(&id) {
+            for b in st.table {
+                if self.alloc.decref(b) {
+                    self.unindex_block(b);
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let bs = self.geometry.block_size;
+        let slots_alloc = self.alloc.num_used() * bs;
+        let slots_live: usize = self.seqs.values().map(|s| s.len).sum();
+        CacheStats {
+            blocks_total: self.alloc.num_blocks(),
+            blocks_used: self.alloc.num_used(),
+            slots_allocated: slots_alloc,
+            slots_live,
+            fragmentation: if slots_alloc == 0 {
+                0.0
+            } else {
+                1.0 - slots_live as f64 / slots_alloc as f64
+            },
+            prefix_hits: self.prefix_hits,
+            skipped_writes: self.skipped_writes,
+            total_writes: self.total_writes,
+        }
+    }
+
+    /// KV pool bytes per block per layer under `opt` at sim scale
+    /// (f32 tensors stand in for the Z100's FP16; FP8 is byte-real).
+    pub fn bytes_per_block(&self, kv_heads: usize, head_dim: usize, opt: &OptConfig) -> usize {
+        let bs = self.geometry.block_size;
+        let elt = if opt.fp8_kv { 1 } else { 2 }; // traffic dtype (paper: FP16)
+        let scales = if opt.fp8_kv { bs * kv_heads * 4 * 2 } else { 0 };
+        bs * kv_heads * head_dim * elt * 2 + scales
+    }
+
+    // ---- internals --------------------------------------------------------
+
+    fn index_block(&mut self, phys: BlockId, hash: u64) {
+        self.prefix_index.insert(hash, phys);
+        self.block_hash.insert(phys, hash);
+    }
+
+    fn unindex_block(&mut self, phys: BlockId) {
+        if let Some(h) = self.block_hash.remove(&phys) {
+            // only remove if the index still points at this block
+            if self.prefix_index.get(&h) == Some(&phys) {
+                self.prefix_index.remove(&h);
+            }
+        }
+    }
+
+    fn rollback(&mut self, st: &SeqState) {
+        for &b in &st.table {
+            if self.alloc.decref(b) {
+                self.unindex_block(b);
+            }
+        }
+    }
+}
+
+/// FNV-1a over (prefix tokens, block tokens) — identifies a full block by
+/// its content *and* position context, like vLLM's prefix-cache key.
+fn prefix_hash(prefix: &[u32], chunk: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |x: u32| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+    eat(prefix.len() as u32);
+    for &t in prefix {
+        eat(t);
+    }
+    eat(0xFFFF_FFFF);
+    for &t in chunk {
+        eat(t);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{COOPT, ORIGINAL};
+
+    fn geom() -> CacheGeometry {
+        CacheGeometry {
+            block_size: 4,
+            max_blocks: 8,
+            num_pool_blocks: 16,
+            max_batch: 4,
+            max_seq: 16,
+        }
+    }
+
+    #[test]
+    fn allocator_basics() {
+        let mut a = BlockAllocator::new(4);
+        let b1 = a.alloc().unwrap();
+        let b2 = a.alloc().unwrap();
+        assert_ne!(b1, b2);
+        assert_eq!(a.num_free(), 2);
+        a.incref(b1);
+        assert!(!a.decref(b1));
+        assert!(a.decref(b1));
+        assert_eq!(a.num_free(), 3);
+        assert!(a.decref(b2));
+        assert_eq!(a.num_free(), 4);
+        assert!(a.alloc().is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn allocator_double_free_panics() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.alloc().unwrap();
+        a.decref(b);
+        a.decref(b);
+    }
+
+    #[test]
+    fn prefill_coopt_skips_padding() {
+        let mut cm = CacheManager::new(geom());
+        let plan = cm.prefill(1, &[10, 11, 12, 13, 14, 15], &COOPT).unwrap();
+        // 6 tokens, block 4: 2 blocks; slots 0..5 set, rest -1
+        assert_eq!(plan.written, 6);
+        assert_eq!(plan.skipped, 10);
+        assert!(plan.slot_mapping[..6].iter().all(|&s| s >= 0));
+        assert!(plan.slot_mapping[6..].iter().all(|&s| s == -1));
+        assert_eq!(cm.stats().blocks_used, 2);
+    }
+
+    #[test]
+    fn prefill_original_writes_padding() {
+        let mut cm = CacheManager::new(geom());
+        let plan = cm.prefill(1, &[10, 11, 12, 13, 14, 15], &ORIGINAL).unwrap();
+        // baseline writes every padded position: 16 slots, 4 blocks
+        assert_eq!(plan.written, 16);
+        assert_eq!(plan.skipped, 0);
+        assert_eq!(cm.stats().blocks_used, 4);
+        // and fragmentation is visible: 16 slots allocated, 6 live
+        let st = cm.stats();
+        assert_eq!(st.slots_allocated, 16);
+        assert_eq!(st.slots_live, 6);
+        assert!(st.fragmentation > 0.6);
+    }
+
+    #[test]
+    fn decode_appends_and_grows() {
+        let mut cm = CacheManager::new(geom());
+        cm.prefill(1, &[1, 2, 3], &COOPT).unwrap();
+        let (slot, pos) = cm.append_token(1).unwrap();
+        assert_eq!(pos, 3);
+        assert!(slot >= 0);
+        assert_eq!(cm.seq_len(1), 4);
+        // crossing a block boundary allocates
+        let used_before = cm.stats().blocks_used;
+        let (_, pos) = cm.append_token(1).unwrap();
+        assert_eq!(pos, 4);
+        assert_eq!(cm.stats().blocks_used, used_before + 1);
+    }
+
+    #[test]
+    fn prefix_sharing_reuses_blocks() {
+        let mut cm = CacheManager::new(geom());
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23, 5];
+        let p1 = cm.prefill(1, &prompt, &COOPT).unwrap();
+        assert_eq!(p1.reused_blocks, 0);
+        let p2 = cm.prefill(2, &prompt, &COOPT).unwrap();
+        // both full blocks shared; only the tail written
+        assert_eq!(p2.reused_blocks, 2);
+        assert_eq!(p2.written, 1);
+        // physical tables overlap on the shared prefix
+        assert_eq!(cm.block_table_row(1)[..2], cm.block_table_row(2)[..2]);
+        // COW: appending to seq 2 must not touch seq 1's blocks
+        cm.free_seq(1);
+        cm.free_seq(2);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn original_never_shares() {
+        let mut cm = CacheManager::new(geom());
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23];
+        cm.prefill(1, &prompt, &ORIGINAL).unwrap();
+        let p2 = cm.prefill(2, &prompt, &ORIGINAL).unwrap();
+        assert_eq!(p2.reused_blocks, 0);
+        assert_eq!(cm.stats().prefix_hits, 0);
+    }
+
+    #[test]
+    fn free_recycles_everything() {
+        let mut cm = CacheManager::new(geom());
+        for id in 0..3u64 {
+            cm.prefill(id, &[1, 2, 3, 4, 5], &COOPT).unwrap();
+        }
+        assert!(cm.stats().blocks_used > 0);
+        for id in 0..3u64 {
+            cm.free_seq(id);
+        }
+        assert_eq!(cm.stats().blocks_used, 0);
+        assert_eq!(cm.num_free_blocks(), 16);
+    }
+
+    #[test]
+    fn admission_control() {
+        let mut cm = CacheManager::new(geom());
+        assert!(cm.can_admit(8, &COOPT));
+        // fill the pool
+        let mut id = 0u64;
+        while cm.can_admit(16, &COOPT) {
+            cm.prefill(id, &(0..16).map(|x| id as u32 * 100 + x).collect::<Vec<_>>(), &COOPT)
+                .unwrap();
+            id += 1;
+        }
+        assert!(!cm.can_admit(16, &COOPT));
+        cm.free_seq(0);
+        assert!(cm.can_admit(8, &COOPT));
+    }
+
+    #[test]
+    fn out_of_blocks_rolls_back() {
+        let mut small = CacheManager::new(CacheGeometry {
+            block_size: 4,
+            max_blocks: 8,
+            num_pool_blocks: 2,
+            max_batch: 4,
+            max_seq: 16,
+        });
+        // needs 4 blocks for baseline padded write, only 2 exist
+        let err = small.prefill(1, &[1, 2, 3], &ORIGINAL);
+        assert!(err.is_err());
+        assert_eq!(small.stats().blocks_used, 0); // rolled back
+        assert!(!small.has_seq(1));
+    }
+
+    #[test]
+    fn max_context_enforced() {
+        let g = CacheGeometry {
+            block_size: 2,
+            max_blocks: 2,
+            num_pool_blocks: 8,
+            max_batch: 1,
+            max_seq: 4,
+        };
+        let mut cm = CacheManager::new(g);
+        cm.prefill(1, &[1, 2, 3], &COOPT).unwrap();
+        cm.append_token(1).unwrap(); // pos 3 (ctx 4 = max)
+        assert!(cm.append_token(1).is_err());
+    }
+
+    #[test]
+    fn bytes_per_block_fp8_smaller() {
+        let cm = CacheManager::new(geom());
+        let fp16 = cm.bytes_per_block(4, 32, &ORIGINAL);
+        let fp8 = cm.bytes_per_block(4, 32, &COOPT);
+        assert!(fp8 < fp16, "{fp8} vs {fp16}");
+    }
+}

@@ -1,0 +1,52 @@
+//! # LLM-CoOpt
+//!
+//! Reproduction of *"LLM-CoOpt: A Co-Design and Optimization Framework for
+//! Efficient LLM Inference on Heterogeneous Platforms"* (Kong et al., 2026).
+//!
+//! This crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (paged attention, KV write, FP8 codec), authored
+//!   in `python/compile/kernels/`, lowered at build time;
+//! * **L2** — the JAX LLaMA-family model (`python/compile/model.py`), AOT-
+//!   lowered to HLO text under `artifacts/`;
+//! * **L3** — this crate: request routing, continuous batching, paged
+//!   KV-cache management (the Opt-KV write path / SkipSet), PJRT execution,
+//!   sampling, serving, and the DCU-Z100 platform model that carries the
+//!   paper's Fig. 6/7 performance analysis.
+//!
+//! Python never runs on the request path; after `make artifacts` the binary
+//! is self-contained.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`util`] | offline substrates: JSON, RNG, FP8, CLI, thread pool, bench, property testing |
+//! | [`config`] | model/opt/engine presets mirroring `python/compile/presets.py` |
+//! | [`tokenizer`] | byte-level tokenizer shared with the python trainer |
+//! | [`kvcache`] | paged block allocator, block tables, slot mapping + SkipSet (Eq. 5) |
+//! | [`scheduler`] | continuous-batching scheduler (waiting/running/preempted) |
+//! | [`runtime`] | PJRT artifact loading + execution with persistent buffers |
+//! | [`platform`] | DCU Z100 memory-hierarchy/roofline cost model (Eqs. 2–4) |
+//! | [`coordinator`] | the engine: schedule → step → sample → stream |
+//! | [`sampling`] | greedy / temperature / top-k / top-p / MCQ scoring |
+//! | [`server`] | hand-rolled HTTP/1.1 front-end + client |
+//! | [`workload`] | ShareGPT-like traces, ARC-sim loader, arrival processes |
+//! | [`eval`] | ARC harness reproducing Tables 1–2 |
+//! | [`metrics`] | counters/histograms; Eq. 11 latency, Eq. 12 throughput |
+
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,135 @@
+//! llm-coopt CLI: serve, generate, eval, or inspect artifacts.
+//!
+//! ```text
+//! llm-coopt --mode serve   --model llama-13b-sim --config coopt --addr 127.0.0.1:8090
+//! llm-coopt --mode generate --model llama-13b-sim --config coopt --prompt "Q: 2+3=? ..."
+//! llm-coopt --mode eval    --model llama-13b-sim --set easy
+//! llm-coopt --mode info
+//! ```
+
+use anyhow::{bail, Context, Result};
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::eval;
+use llm_coopt::runtime::Runtime;
+use llm_coopt::sampling::SamplingParams;
+use llm_coopt::server::{EngineHandle, Server};
+use llm_coopt::util::cli::Cli;
+use llm_coopt::workload::load_mcq_set;
+use llm_coopt::log_info;
+
+fn main() -> Result<()> {
+    llm_coopt::util::logging::init();
+    let mut cli = Cli::new("llm-coopt", "LLM-CoOpt serving coordinator");
+    cli.flag("mode", "info", "serve | generate | eval | info")
+        .flag("model", "llama-13b-sim", "model preset name")
+        .flag("config", "coopt", "original|optkv|optgqa|optpa|coopt")
+        .flag("artifacts", "", "artifacts dir (default ./artifacts)")
+        .flag("addr", "127.0.0.1:8090", "serve: bind address")
+        .flag("workers", "8", "serve: HTTP worker threads")
+        .flag("prompt", "", "generate: the prompt")
+        .flag("max-new-tokens", "32", "generate: tokens to produce")
+        .flag("temperature", "0.0", "generate: sampling temperature")
+        .flag("set", "easy", "eval: easy | challenge");
+    let args = cli.parse_or_exit();
+
+    let dir = if args.get("artifacts").is_empty() {
+        artifacts_dir()
+    } else {
+        args.get("artifacts").into()
+    };
+
+    match args.get("mode") {
+        "info" => {
+            let rt = Runtime::new(&dir)?;
+            println!("artifacts: {}", dir.display());
+            println!(
+                "geometry: block_size={} max_blocks={} pool={} max_batch={} max_seq={}",
+                rt.manifest.geometry.block_size,
+                rt.manifest.geometry.max_blocks,
+                rt.manifest.geometry.num_pool_blocks,
+                rt.manifest.geometry.max_batch,
+                rt.manifest.geometry.max_seq
+            );
+            println!("{} models, {} graphs:", rt.manifest.models.len(), rt.manifest.graphs.len());
+            for m in &rt.manifest.models {
+                println!(
+                    "  {:18} ({}) layers={} d={} Hq={} Hkv(gqa)={} params≈{}",
+                    m.preset.name,
+                    m.preset.stands_for,
+                    m.preset.layers,
+                    m.preset.d_model,
+                    m.preset.n_heads,
+                    m.preset.n_kv_heads_gqa,
+                    m.preset.param_count()
+                );
+            }
+            Ok(())
+        }
+        "serve" => {
+            let opt = opt_config(args.get("config"))?;
+            let model = args.get("model");
+            let rt = Runtime::new(&dir)?;
+            let mrt = rt.load_model(model, opt)?;
+            log_info!("compiled {model}/{} in {:?}", opt.name, mrt.compile_time);
+            let engine = Engine::new(mrt, EngineConfig::new(model, opt));
+            let handle = EngineHandle::spawn(engine);
+            let server = Server::bind(args.get("addr"), handle, args.get_usize("workers"))?;
+            server.serve()
+        }
+        "generate" => {
+            let opt = opt_config(args.get("config"))?;
+            let model = args.get("model");
+            let prompt = args.get("prompt");
+            if prompt.is_empty() {
+                bail!("--prompt required in generate mode");
+            }
+            let rt = Runtime::new(&dir)?;
+            let mrt = rt.load_model(model, opt)?;
+            let mut engine = Engine::new(mrt, EngineConfig::new(model, opt));
+            let results = engine.generate(vec![GenRequest {
+                prompt: prompt.to_string(),
+                max_new_tokens: args.get_usize("max-new-tokens"),
+                sampling: SamplingParams {
+                    temperature: args.get_f64("temperature"),
+                    ..Default::default()
+                },
+                ignore_eos: false,
+            }])?;
+            let r = &results[0];
+            println!("prompt   : {}", r.prompt);
+            println!("completion: {}", r.text);
+            println!(
+                "tokens={} finish={:?} latency={:.3}s sim_time={:.4}s",
+                r.generated_tokens, r.finish, r.latency_s, r.sim_time_s
+            );
+            Ok(())
+        }
+        "eval" => {
+            let opt = opt_config(args.get("config"))?;
+            let model = args.get("model");
+            let split = args.get("set");
+            let rt = Runtime::new(&dir)?;
+            let set_file = rt
+                .manifest
+                .eval_sets
+                .iter()
+                .find(|(s, _)| s == split)
+                .map(|(_, f)| f.clone())
+                .context("eval set not in manifest")?;
+            let set = load_mcq_set(dir.join(set_file))?;
+            let mrt = rt.load_model(model, opt)?;
+            let mut engine = Engine::new(mrt, EngineConfig::new(model, opt));
+            let r = eval::evaluate(&mut engine, &set)?;
+            println!(
+                "{model} {} ARC-sim[{split}]: {}/{} = {:.2}%",
+                opt.name,
+                r.correct,
+                r.total,
+                r.accuracy_pct()
+            );
+            Ok(())
+        }
+        other => bail!("unknown mode '{other}'"),
+    }
+}

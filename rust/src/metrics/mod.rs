@@ -1,0 +1,192 @@
+//! Serving metrics: the paper's Eq. 11 (total latency) and Eq. 12
+//! (generation throughput), plus per-request latency percentiles, engine
+//! step accounting, and simulated-platform time.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::{Object, Value};
+use crate::util::stats::Summary;
+
+/// Per-request record (filled by the coordinator as the request advances).
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub arrival: Instant,
+    pub first_token: Option<Instant>,
+    pub finished: Option<Instant>,
+    /// simulated Z100 time attributed to this request (seconds)
+    pub sim_time_s: f64,
+}
+
+impl RequestMetrics {
+    pub fn latency(&self) -> Option<Duration> {
+        self.finished.map(|f| f - self.arrival)
+    }
+
+    pub fn ttft(&self) -> Option<Duration> {
+        self.first_token.map(|f| f - self.arrival)
+    }
+}
+
+/// Aggregate over a run.
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub requests_finished: u64,
+    pub tokens_generated: u64,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub preemptions: u64,
+    /// wallclock seconds inside PJRT execute calls
+    pub wall_prefill_s: f64,
+    pub wall_decode_s: f64,
+    /// wallclock seconds in the coordinator outside PJRT (L3 overhead)
+    pub wall_coordinator_s: f64,
+    /// simulated Z100 seconds (platform model)
+    pub sim_prefill_s: f64,
+    pub sim_decode_s: f64,
+    /// per-request latency summaries (wallclock + simulated)
+    pub latency_wall: Summary,
+    pub latency_sim: Summary,
+    pub ttft_wall: Summary,
+    run_started: Option<Instant>,
+    run_finished: Option<Instant>,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start_run(&mut self) {
+        self.run_started = Some(Instant::now());
+    }
+
+    pub fn finish_run(&mut self) {
+        self.run_finished = Some(Instant::now());
+    }
+
+    pub fn record_request(&mut self, r: &RequestMetrics) {
+        self.requests_finished += 1;
+        self.tokens_generated += r.generated_tokens as u64;
+        if let Some(l) = r.latency() {
+            self.latency_wall.add(l.as_secs_f64());
+        }
+        if let Some(t) = r.ttft() {
+            self.ttft_wall.add(t.as_secs_f64());
+        }
+        self.latency_sim.add(r.sim_time_s);
+    }
+
+    /// Eq. 11: total latency = sum over requests.
+    pub fn total_latency_wall_s(&self) -> f64 {
+        self.latency_wall.sum()
+    }
+
+    pub fn total_latency_sim_s(&self) -> f64 {
+        self.latency_sim.sum()
+    }
+
+    /// Eq. 12: tokens generated / generation time (wallclock).
+    pub fn throughput_wall(&self) -> f64 {
+        match (self.run_started, self.run_finished) {
+            (Some(a), Some(b)) if b > a => {
+                self.tokens_generated as f64 / (b - a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Eq. 12 on the simulated clock: engine-busy simulated seconds.
+    pub fn throughput_sim(&self) -> f64 {
+        let t = self.sim_prefill_s + self.sim_decode_s;
+        if t > 0.0 {
+            self.tokens_generated as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    /// L3 overhead share of wallclock (the §Perf target: < 10%).
+    pub fn coordinator_overhead_frac(&self) -> f64 {
+        let total = self.wall_prefill_s + self.wall_decode_s + self.wall_coordinator_s;
+        if total > 0.0 {
+            self.wall_coordinator_s / total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&mut self) -> Value {
+        let mut o = Object::new();
+        o.insert("requests_finished", self.requests_finished as usize);
+        o.insert("tokens_generated", self.tokens_generated as usize);
+        o.insert("prefill_steps", self.prefill_steps as usize);
+        o.insert("decode_steps", self.decode_steps as usize);
+        o.insert("preemptions", self.preemptions as usize);
+        o.insert("throughput_wall_tok_s", self.throughput_wall());
+        o.insert("throughput_sim_tok_s", self.throughput_sim());
+        o.insert("total_latency_wall_s", self.total_latency_wall_s());
+        o.insert("total_latency_sim_s", self.total_latency_sim_s());
+        o.insert("latency_wall_p50_s", self.latency_wall.p50());
+        o.insert("latency_wall_p99_s", self.latency_wall.p99());
+        o.insert("ttft_wall_p50_s", self.ttft_wall.p50());
+        o.insert("coordinator_overhead_frac", self.coordinator_overhead_frac());
+        o.insert("sim_decode_s", self.sim_decode_s);
+        o.insert("sim_prefill_s", self.sim_prefill_s);
+        Value::Object(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_lifecycle() {
+        let t0 = Instant::now();
+        let r = RequestMetrics {
+            id: 1,
+            prompt_tokens: 10,
+            generated_tokens: 5,
+            arrival: t0,
+            first_token: Some(t0 + Duration::from_millis(10)),
+            finished: Some(t0 + Duration::from_millis(50)),
+            sim_time_s: 0.123,
+        };
+        assert_eq!(r.latency().unwrap(), Duration::from_millis(50));
+        assert_eq!(r.ttft().unwrap(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn eq11_eq12_aggregation() {
+        let mut m = EngineMetrics::new();
+        m.start_run();
+        let t0 = Instant::now();
+        for i in 0..4u64 {
+            let r = RequestMetrics {
+                id: i,
+                prompt_tokens: 8,
+                generated_tokens: 10,
+                arrival: t0,
+                first_token: Some(t0),
+                finished: Some(t0 + Duration::from_millis(100)),
+                sim_time_s: 0.05,
+            };
+            m.record_request(&r);
+        }
+        m.sim_decode_s = 0.4;
+        m.finish_run();
+        assert_eq!(m.requests_finished, 4);
+        assert_eq!(m.tokens_generated, 40);
+        // Eq. 11: sum of latencies = 0.4s wallclock, 0.2s sim
+        assert!((m.total_latency_wall_s() - 0.4).abs() < 1e-6);
+        assert!((m.total_latency_sim_s() - 0.2).abs() < 1e-9);
+        // Eq. 12 sim: 40 tokens / 0.4 sim-seconds
+        assert!((m.throughput_sim() - 100.0).abs() < 1e-9);
+        assert!(m.throughput_wall() > 0.0);
+        let j = m.to_json();
+        assert_eq!(j.req_usize("tokens_generated").unwrap(), 40);
+    }
+}

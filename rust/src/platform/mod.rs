@@ -1,0 +1,513 @@
+//! DCU Z100 platform model (paper §2 and §4.1).
+//!
+//! The paper evaluates on a DCU Z100: ~4 MB L2, wavefront 64, GDDR6 at
+//! ~512 GB/s, ~15 TFLOPS FP16 peak, FP8 emulated via INT8, physically
+//! separate CPU/GPU memory.  We do not have that hardware; this module is
+//! the documented substitution (DESIGN.md): an analytical cost model of
+//! exactly those parameters, driven by the *actual* per-step state of the
+//! serving engine (context lengths, allocated blocks, written slots).
+//!
+//! The paper's equations appear as named methods:
+//!
+//! * Eq. 2  `used_cache`        — blocks touched x block size (baseline
+//!   walks every allocated block, Opt-Pa only valid ones)
+//! * Eq. 3  `effective_latency` — `H*T_cache + (1-H)*T_DRAM`
+//! * Eq. 4  `kernel_load`       — `B * N_block * d^2` attention load
+//!
+//! The relative deltas between opt-configs come from first principles
+//! (bytes moved, blocks touched, ops issued); the absolute scale is set by
+//! the Z100 datasheet numbers above.  Benches report these simulated
+//! times next to the real CPU wallclock of the sim-scale stack.
+
+use crate::config::{ModelPreset, OptConfig};
+
+/// Z100 datasheet + microarchitectural constants.
+#[derive(Debug, Clone)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    pub l2_bytes: f64,
+    /// total device memory (weights + KV pool contend for it)
+    pub device_memory_bytes: f64,
+    pub wavefront: usize,
+    /// DRAM (GDDR6) streaming bandwidth
+    pub bandwidth_bytes_per_s: f64,
+    pub fp16_flops: f64,
+    /// cache/DRAM access latencies (cycles) for Eq. 3
+    pub t_cache_cycles: f64,
+    pub t_dram_cycles: f64,
+    pub clock_hz: f64,
+    /// allocator-mismatch penalty per block allocation on the baseline
+    /// (§2: "allocator inefficiency and increased latency due to
+    /// allocator mismatch"); the optimized write path amortizes it
+    pub alloc_penalty_s: f64,
+    /// fixed per-token-write overhead (cache-management instructions)
+    pub write_op_s: f64,
+    /// per-block softmax reduction/synchronization overhead: warp-level
+    /// broadcast chain (baseline) vs shared-memory block_sum (Opt-Pa)
+    pub sync_warp_s: f64,
+    pub sync_blocksum_s: f64,
+    /// achievable fractions of peak (GEMM vs memory-bound attention GEMV)
+    pub gemm_eff: f64,
+    pub attn_compute_eff: f64,
+    /// INT8-emulated FP8 dequant cost per KV byte loaded (compute side)
+    pub fp8_dequant_flops_per_byte: f64,
+}
+
+impl Default for PlatformSpec {
+    fn default() -> Self {
+        PlatformSpec {
+            name: "DCU-Z100",
+            l2_bytes: 4.0 * 1024.0 * 1024.0,
+            device_memory_bytes: 16.0 * 1024.0 * 1024.0 * 1024.0,
+            wavefront: 64,
+            bandwidth_bytes_per_s: 512.0e9,
+            fp16_flops: 15.0e12,
+            t_cache_cycles: 80.0,
+            t_dram_cycles: 400.0,
+            clock_hz: 1.5e9,
+            alloc_penalty_s: 4.0e-6,
+            write_op_s: 30.0e-9,
+            sync_warp_s: 220.0e-9,
+            sync_blocksum_s: 60.0e-9,
+            gemm_eff: 0.70,
+            attn_compute_eff: 0.30,
+            fp8_dequant_flops_per_byte: 1.0,
+        }
+    }
+}
+
+/// Paper-scale geometry for the model being served (the sim preset's twin).
+#[derive(Debug, Clone)]
+pub struct PaperGeometry {
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    /// GQA group count when Opt-GQA restructures the checkpoint
+    pub gqa_groups: usize,
+    /// GPTQ weight width in bits
+    pub weight_bits: f64,
+}
+
+impl PaperGeometry {
+    pub fn from_preset(p: &ModelPreset) -> Self {
+        PaperGeometry {
+            layers: p.paper_layers,
+            d_model: p.paper_d_model,
+            n_heads: p.paper_heads,
+            head_dim: p.paper_d_model / p.paper_heads,
+            ffn: (p.paper_d_model as f64 * 2.6875) as usize, // llama ratio
+            gqa_groups: p.groups(true),
+            weight_bits: 4.0,
+        }
+    }
+
+    pub fn kv_heads(&self, opt: &OptConfig) -> usize {
+        if opt.gqa {
+            (self.n_heads / self.gqa_groups).max(1)
+        } else {
+            self.n_heads
+        }
+    }
+
+    /// total parameter count (weights traffic per decode step)
+    pub fn param_count(&self) -> f64 {
+        let d = self.d_model as f64;
+        let per_layer = 4.0 * d * d + 3.0 * d * self.ffn as f64;
+        self.layers as f64 * per_layer + 2.0 * 32000.0 * d
+    }
+
+    /// KV bytes per token per layer under `opt` (K + V [+ scales])
+    pub fn kv_bytes_per_token_layer(&self, opt: &OptConfig) -> f64 {
+        let hk = self.kv_heads(opt) as f64;
+        let elt = if opt.fp8_kv { 1.0 } else { 2.0 };
+        let scales = if opt.fp8_kv { hk * 4.0 * 2.0 } else { 0.0 };
+        hk * self.head_dim as f64 * elt * 2.0 + scales
+    }
+}
+
+/// Per-sequence engine state fed into the cost model each step.
+#[derive(Debug, Clone, Copy)]
+pub struct SeqCostInput {
+    /// context length (tokens visible to attention)
+    pub ctx_len: usize,
+    /// blocks currently allocated to the sequence (>= ceil(ctx/B) on the
+    /// padded baseline)
+    pub allocated_blocks: usize,
+}
+
+/// Decomposed cost of one engine step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepCost {
+    pub weights_mem_s: f64,
+    pub kv_mem_s: f64,
+    pub compute_s: f64,
+    pub overhead_s: f64,
+    pub total_s: f64,
+    pub bytes_moved: f64,
+    pub flops: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub spec: PlatformSpec,
+    pub geom: PaperGeometry,
+    pub block_size: usize,
+    /// sim-context -> paper-context scale: the sim engine's geometry caps
+    /// contexts at 160 tokens while the paper's ShareGPT workload averages
+    /// ~500; engine-reported lengths are multiplied by this factor before
+    /// costing so KV-path traffic sits at the paper's operating point.
+    pub ctx_scale: f64,
+}
+
+impl CostModel {
+    pub fn new(spec: PlatformSpec, geom: PaperGeometry, block_size: usize) -> Self {
+        CostModel {
+            spec,
+            geom,
+            block_size,
+            ctx_scale: 1.0,
+        }
+    }
+
+    /// Scale applied to engine-reported (sim) context lengths; see field doc.
+    pub fn with_ctx_scale(mut self, s: f64) -> Self {
+        self.ctx_scale = s;
+        self
+    }
+
+    pub fn for_preset(preset: &ModelPreset, block_size: usize) -> Self {
+        Self::new(
+            PlatformSpec::default(),
+            PaperGeometry::from_preset(preset),
+            block_size,
+        )
+    }
+
+    // --- paper equations ---------------------------------------------------
+
+    /// Eq. 2: cache actually traversed by the attention kernel.
+    /// `R` = blocks touched, `S_block` = block size in tokens.
+    pub fn used_cache_tokens(&self, blocks_touched: usize) -> usize {
+        blocks_touched * self.block_size
+    }
+
+    /// Eq. 3: effective access latency in cycles given hit rate `h`.
+    pub fn effective_latency_cycles(&self, h: f64) -> f64 {
+        h * self.spec.t_cache_cycles + (1.0 - h) * self.spec.t_dram_cycles
+    }
+
+    /// Eq. 4: attention kernel load `B * N_block * d^2`.
+    pub fn kernel_load(&self, batch: usize, n_blocks: usize) -> f64 {
+        batch as f64 * n_blocks as f64 * (self.geom.head_dim as f64).powi(2)
+    }
+
+    /// L2 hit rate for a KV working set of `ws` bytes: the resident
+    /// fraction, saturating at 0.95 (metadata always contends).
+    pub fn kv_hit_rate(&self, ws: f64) -> f64 {
+        if ws <= 0.0 {
+            return 0.95;
+        }
+        (self.spec.l2_bytes / ws).min(0.95)
+    }
+
+    /// Effective KV-stream bandwidth once cache hits are accounted:
+    /// `bw * T_dram / T_eff` (all-DRAM streaming is the baseline bw).
+    pub fn effective_kv_bandwidth(&self, ws: f64) -> f64 {
+        let h = self.kv_hit_rate(ws);
+        let t_eff = self.effective_latency_cycles(h);
+        self.spec.bandwidth_bytes_per_s * self.spec.t_dram_cycles / t_eff
+    }
+
+    // --- step costs ---------------------------------------------------------
+
+    /// Cost of one batched decode step at paper scale.
+    ///
+    /// `new_blocks` = blocks allocated this step (allocator penalty),
+    /// `tokens_written` = KV writes issued (baseline re-writes nothing at
+    /// decode, but its prefill wrote padding — see [`Self::prefill`]).
+    pub fn decode_step(
+        &self,
+        seqs: &[SeqCostInput],
+        opt: &OptConfig,
+        new_blocks: usize,
+        tokens_written: usize,
+    ) -> StepCost {
+        let s = &self.spec;
+        let g = &self.geom;
+        let b = seqs.len() as f64;
+        if seqs.is_empty() {
+            return StepCost::default();
+        }
+
+        // 1. weights stream once per step (GPTQ 4-bit), GEMM compute per lane
+        let weight_bytes = g.param_count() * g.weight_bits / 8.0;
+        let weights_mem_s = weight_bytes / s.bandwidth_bytes_per_s;
+        let gemm_flops = 2.0 * g.param_count() * b;
+        let gemm_s = gemm_flops / (s.fp16_flops * s.gemm_eff);
+
+        // 2. attention KV traffic (Eq. 2/4): blocks touched per sequence
+        let kv_tok_bytes = g.kv_bytes_per_token_layer(opt) * g.layers as f64;
+        let mut kv_bytes = 0.0;
+        let mut blocks_touched = 0usize;
+        for q in seqs {
+            let ctx = (q.ctx_len as f64 * self.ctx_scale).round() as usize;
+            let alloc = (q.allocated_blocks as f64 * self.ctx_scale).round() as usize;
+            let touched = if opt.valid_only {
+                ctx.div_ceil(self.block_size)
+            } else {
+                alloc.max(ctx.div_ceil(self.block_size))
+            };
+            blocks_touched += touched;
+            kv_bytes += self.used_cache_tokens(touched) as f64 * kv_tok_bytes;
+        }
+        // Eq. 3 cache behaviour on the KV stream
+        let kv_mem_s = kv_bytes / self.effective_kv_bandwidth(kv_bytes);
+
+        // attention compute: q.K^T + p.V over every touched token, per
+        // layer (4*Hq*D flops per key token per layer); FP8 dequant runs
+        // at full SIMD INT8 rate
+        let attn_flops = 4.0
+            * g.n_heads as f64
+            * g.head_dim as f64
+            * g.layers as f64
+            * self.used_cache_tokens(blocks_touched) as f64;
+        let dequant_flops = if opt.fp8_kv {
+            kv_bytes * s.fp8_dequant_flops_per_byte
+        } else {
+            0.0
+        };
+        let attn_s = attn_flops / (s.fp16_flops * s.attn_compute_eff)
+            + dequant_flops / s.fp16_flops;
+        let _ = b;
+
+        // 3. overheads: softmax reductions per (seq x kv-head x block),
+        //    allocator penalty on fresh blocks, per-write fixed cost
+        let sync_unit = if opt.valid_only {
+            s.sync_blocksum_s
+        } else {
+            s.sync_warp_s
+        };
+        let kv_heads = g.kv_heads(opt) as f64;
+        let sync_s = blocks_touched as f64 * kv_heads * sync_unit / s.wavefront as f64;
+        let alloc_s = new_blocks as f64
+            * if opt.skip_filter {
+                s.alloc_penalty_s * 0.25 // optimized write path amortizes
+            } else {
+                s.alloc_penalty_s
+            };
+        let write_bytes = tokens_written as f64 * kv_tok_bytes;
+        let write_s = tokens_written as f64 * s.write_op_s + write_bytes / s.bandwidth_bytes_per_s;
+        let overhead_s = sync_s + alloc_s + write_s;
+
+        let compute_s = gemm_s + attn_s;
+        // memory and compute overlap; overheads serialize
+        let total_s = (weights_mem_s + kv_mem_s).max(compute_s) + overhead_s;
+        StepCost {
+            weights_mem_s,
+            kv_mem_s,
+            compute_s,
+            overhead_s,
+            total_s,
+            bytes_moved: weight_bytes + kv_bytes + write_bytes,
+            flops: gemm_flops + attn_flops + dequant_flops,
+        }
+    }
+
+    /// KV pool capacity in *blocks* once the GPTQ weights are resident
+    /// (the memory-capacity coupling behind the paper's "13B gains more"
+    /// pattern: bigger weights leave less pool, the baseline's FP16+MHA
+    /// blocks are larger, so the baseline sustains fewer concurrent
+    /// sequences — CoOpt's smaller blocks recover batch headroom).
+    pub fn paper_pool_blocks(&self, opt: &OptConfig) -> usize {
+        let weights = self.geom.param_count() * self.geom.weight_bits / 8.0;
+        // runtime reserves activations/workspace (~15%)
+        let free = (self.spec.device_memory_bytes - weights)
+            .max(self.spec.device_memory_bytes * 0.05)
+            * 0.85;
+        let block_bytes =
+            self.geom.kv_bytes_per_token_layer(opt) * self.geom.layers as f64
+                * self.block_size as f64;
+        (free / block_bytes) as usize
+    }
+
+    /// Scale the paper-scale pool down to the sim engine's geometry so the
+    /// *engine itself* feels the capacity pressure.  `scale` is the fixed
+    /// paper→sim divisor (DESIGN.md: 12), clamped to the sim pool bounds.
+    pub fn sim_pool_blocks(&self, opt: &OptConfig, scale: f64, lo: usize, hi: usize) -> usize {
+        ((self.paper_pool_blocks(opt) as f64 / scale) as usize).clamp(lo, hi)
+    }
+
+    /// Cost of prefilling one sequence (`prompt_len` real tokens, padded
+    /// to `padded_len` on the baseline write path).
+    pub fn prefill(&self, prompt_len: usize, opt: &OptConfig) -> StepCost {
+        let s = &self.spec;
+        let g = &self.geom;
+        let prompt_len = (prompt_len as f64 * self.ctx_scale).round() as usize;
+        let t = prompt_len as f64;
+
+        let gemm_flops = 2.0 * g.param_count() * t;
+        let attn_flops = 4.0 * g.n_heads as f64 * g.head_dim as f64 * t * t / 2.0;
+        let compute_s = (gemm_flops + attn_flops) / (s.fp16_flops * s.gemm_eff);
+
+        let weight_bytes = g.param_count() * g.weight_bits / 8.0;
+        let weights_mem_s = weight_bytes / s.bandwidth_bytes_per_s;
+
+        // write path: baseline writes every padded position (Eq. 2
+        // behaviour), Opt-KV writes exactly the prompt
+        let padded = prompt_len.div_ceil(self.block_size) * self.block_size;
+        let tokens_written = if opt.skip_filter {
+            prompt_len
+        } else {
+            // pad to the serving max_seq analog: next pow2-ish chunk
+            (padded.max(prompt_len)).next_power_of_two().min(4096)
+        };
+        let kv_tok_bytes = g.kv_bytes_per_token_layer(opt) * g.layers as f64;
+        let write_bytes = tokens_written as f64 * kv_tok_bytes;
+        let new_blocks = tokens_written.div_ceil(self.block_size);
+        let alloc_s = new_blocks as f64
+            * if opt.skip_filter {
+                s.alloc_penalty_s * 0.25
+            } else {
+                s.alloc_penalty_s
+            };
+        let write_s =
+            tokens_written as f64 * s.write_op_s + write_bytes / s.bandwidth_bytes_per_s;
+        let overhead_s = alloc_s + write_s;
+
+        let total_s = compute_s.max(weights_mem_s) + overhead_s;
+        StepCost {
+            weights_mem_s,
+            kv_mem_s: 0.0,
+            compute_s,
+            overhead_s,
+            total_s,
+            bytes_moved: weight_bytes + write_bytes,
+            flops: gemm_flops + attn_flops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{builtin_preset, ALL_CONFIGS, COOPT, OPTGQA, OPTKV, OPTPA, ORIGINAL};
+
+    fn model() -> CostModel {
+        CostModel::for_preset(&builtin_preset("llama-13b-sim").unwrap(), 16)
+    }
+
+    fn batch(ctx: usize, n: usize, padded_blocks: usize) -> Vec<SeqCostInput> {
+        (0..n)
+            .map(|_| SeqCostInput {
+                ctx_len: ctx,
+                allocated_blocks: padded_blocks,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn eq3_endpoints() {
+        let m = model();
+        assert_eq!(m.effective_latency_cycles(1.0), m.spec.t_cache_cycles);
+        assert_eq!(m.effective_latency_cycles(0.0), m.spec.t_dram_cycles);
+        let mid = m.effective_latency_cycles(0.5);
+        assert!(mid > m.spec.t_cache_cycles && mid < m.spec.t_dram_cycles);
+    }
+
+    #[test]
+    fn eq2_eq4_forms() {
+        let m = model();
+        assert_eq!(m.used_cache_tokens(5), 80);
+        let load = m.kernel_load(8, 32);
+        assert_eq!(load, 8.0 * 32.0 * 128.0 * 128.0);
+    }
+
+    #[test]
+    fn coopt_beats_original_decode() {
+        let m = model();
+        // 8 seqs at ctx 512, baseline padded to 64 blocks (1024 tokens)
+        let seqs = batch(512, 8, 64);
+        let orig = m.decode_step(&seqs, &ORIGINAL, 1, 8);
+        let coopt = m.decode_step(&seqs, &COOPT, 1, 8);
+        assert!(coopt.total_s < orig.total_s);
+        let gain = orig.total_s / coopt.total_s - 1.0;
+        // the paper's end-to-end gains are 5-17%; per-step kernel gains
+        // must be at least that (engine overheads dilute them)
+        assert!(gain > 0.03, "gain {gain}");
+    }
+
+    #[test]
+    fn each_opt_helps_individually() {
+        let m = model();
+        let seqs = batch(512, 8, 64);
+        let orig = m.decode_step(&seqs, &ORIGINAL, 1, 8).total_s;
+        for opt in [OPTKV, OPTGQA, OPTPA, COOPT] {
+            let t = m.decode_step(&seqs, &opt, 1, 8).total_s;
+            assert!(t < orig, "{} {t} vs {orig}", opt.name);
+        }
+    }
+
+    #[test]
+    fn capacity_coupling_favors_coopt_and_13b() {
+        // the paper's headline ordering ("13B gains more") comes from
+        // memory capacity: bigger weights -> smaller baseline KV pool,
+        // and CoOpt's smaller blocks recover proportionally more batch
+        let m7 = CostModel::for_preset(&builtin_preset("llama-7b-sim").unwrap(), 16);
+        let m13 = model();
+        let p7_orig = m7.paper_pool_blocks(&ORIGINAL);
+        let p7_coopt = m7.paper_pool_blocks(&COOPT);
+        let p13_orig = m13.paper_pool_blocks(&ORIGINAL);
+        let p13_coopt = m13.paper_pool_blocks(&COOPT);
+        assert!(p7_coopt > p7_orig && p13_coopt > p13_orig);
+        assert!(p13_orig < p7_orig, "13B weights leave less pool");
+        let r13 = p13_coopt as f64 / p13_orig as f64;
+        let r7 = p7_coopt as f64 / p7_orig as f64;
+        assert!(
+            r13 > r7,
+            "13B pool recovery {r13:.2} should exceed 7B {r7:.2}"
+        );
+        // and the sim-scale clamp keeps engines runnable
+        let sim = m13.sim_pool_blocks(&ORIGINAL, 12.0, 16, 192);
+        assert!((16..=192).contains(&sim));
+    }
+
+    #[test]
+    fn optpa_gain_grows_with_padding_waste() {
+        let m = model();
+        // same ctx, increasing over-allocation: Opt-Pa's advantage grows
+        let g = |alloc| {
+            let seqs = batch(256, 8, alloc);
+            let o = m.decode_step(&seqs, &ORIGINAL, 0, 8).total_s;
+            let p = m.decode_step(&seqs, &OPTPA, 0, 8).total_s;
+            o / p - 1.0
+        };
+        assert!(g(64) > g(20), "more padding => bigger Opt-Pa win");
+    }
+
+    #[test]
+    fn prefill_baseline_writes_more() {
+        let m = model();
+        let orig = m.prefill(200, &ORIGINAL);
+        let opt = m.prefill(200, &OPTKV);
+        assert!(opt.overhead_s < orig.overhead_s);
+        assert!(opt.bytes_moved < orig.bytes_moved);
+    }
+
+    #[test]
+    fn costs_monotone_in_context() {
+        let m = model();
+        for opt in ALL_CONFIGS {
+            let t1 = m.decode_step(&batch(128, 4, 8), &opt, 0, 4).total_s;
+            let t2 = m.decode_step(&batch(1024, 4, 64), &opt, 0, 4).total_s;
+            assert!(t2 > t1, "{}", opt.name);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_free() {
+        let m = model();
+        assert_eq!(m.decode_step(&[], &ORIGINAL, 0, 0).total_s, 0.0);
+    }
+}

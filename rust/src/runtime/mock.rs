@@ -1,0 +1,249 @@
+//! Deterministic mock backend for engine/scheduler tests and L3 micro-
+//! benchmarks (no artifacts or PJRT involved).
+//!
+//! Logits are a pure function of (last token, position, lane) so tests can
+//! assert exact decode behaviour; an optional per-call delay emulates
+//! kernel time for scheduling experiments.  The mock also *verifies* the
+//! coordinator's invariants on every call (padding discipline, slot/ctx
+//! consistency), turning every engine test into a contract check.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::config::{builtin_preset, CacheGeometry, ModelPreset, OptConfig, COOPT};
+
+use super::Backend;
+
+pub struct MockBackend {
+    preset: ModelPreset,
+    geometry: CacheGeometry,
+    opt: OptConfig,
+    pub delay: Duration,
+    pub prefill_calls: usize,
+    pub decode_calls: usize,
+    exec_time: Duration,
+    /// emitted token for lane b at step s = (seed + b + s*7) % 200 + 32
+    pub seed: u32,
+    /// record of every (ctx_lens, slot_mapping) decode saw, for tests
+    pub decode_trace: Vec<(Vec<i32>, Vec<i32>)>,
+}
+
+impl MockBackend {
+    pub fn new() -> Self {
+        Self::with_geometry(CacheGeometry::default())
+    }
+
+    pub fn with_geometry(geometry: CacheGeometry) -> Self {
+        MockBackend {
+            preset: builtin_preset("llama-7b-sim").unwrap(),
+            geometry,
+            opt: COOPT,
+            delay: Duration::ZERO,
+            prefill_calls: 0,
+            decode_calls: 0,
+            exec_time: Duration::ZERO,
+            seed: 0,
+            decode_trace: Vec::new(),
+        }
+    }
+
+    pub fn with_opt(mut self, opt: OptConfig) -> Self {
+        self.opt = opt;
+        self
+    }
+
+    fn spin(&mut self) {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.exec_time += self.delay;
+    }
+
+    fn logits_for(&self, favored: u32, vocab: usize) -> Vec<f32> {
+        let mut row = vec![0.0f32; vocab];
+        row[(favored as usize) % vocab] = 10.0;
+        row
+    }
+}
+
+impl Default for MockBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for MockBackend {
+    fn preset(&self) -> &ModelPreset {
+        &self.preset
+    }
+
+    fn geometry(&self) -> &CacheGeometry {
+        &self.geometry
+    }
+
+    fn opt(&self) -> &OptConfig {
+        &self.opt
+    }
+
+    fn prefill(
+        &mut self,
+        token_ids: &[i32],
+        seq_len: i32,
+        slot_mapping: &[i32],
+    ) -> Result<Vec<f32>> {
+        let s = self.geometry.max_seq;
+        if token_ids.len() != s || slot_mapping.len() != s {
+            bail!("mock: prefill inputs not padded to max_seq");
+        }
+        if seq_len <= 0 || seq_len as usize > s {
+            bail!("mock: bad seq_len {seq_len}");
+        }
+        // contract: real prompt positions hold real tokens
+        for (i, &t) in token_ids.iter().enumerate().take(seq_len as usize) {
+            if t < 0 {
+                bail!("mock: negative token at prompt position {i}");
+            }
+        }
+        self.prefill_calls += 1;
+        self.spin();
+        let vocab = self.preset.vocab;
+        let mut logits = vec![0.0f32; s * vocab];
+        // the next token depends deterministically on the last prompt token
+        let last = token_ids[seq_len as usize - 1] as u32;
+        let favored = 32 + (self.seed + last) % 200;
+        let row = self.logits_for(favored, vocab);
+        let at = (seq_len as usize - 1) * vocab;
+        logits[at..at + vocab].copy_from_slice(&row);
+        Ok(logits)
+    }
+
+    fn decode(
+        &mut self,
+        token_ids: &[i32],
+        positions: &[i32],
+        block_tables: &[i32],
+        ctx_lens: &[i32],
+        slot_mapping: &[i32],
+    ) -> Result<Vec<f32>> {
+        let b = self.geometry.max_batch;
+        let mb = self.geometry.max_blocks;
+        if token_ids.len() != b
+            || positions.len() != b
+            || ctx_lens.len() != b
+            || slot_mapping.len() != b
+            || block_tables.len() != b * mb
+        {
+            bail!("mock: decode inputs not padded");
+        }
+        // contract checks the real runtime silently relies on
+        for lane in 0..b {
+            let ctx = ctx_lens[lane];
+            if ctx == 0 {
+                if slot_mapping[lane] != -1 {
+                    bail!("mock: inactive lane {lane} has a write slot");
+                }
+                continue;
+            }
+            if positions[lane] != ctx - 1 {
+                bail!(
+                    "mock: lane {lane} position {} != ctx-1 {}",
+                    positions[lane],
+                    ctx - 1
+                );
+            }
+            if slot_mapping[lane] < 0 {
+                bail!("mock: active lane {lane} lost its write slot");
+            }
+            let blocks_needed = (ctx as usize).div_ceil(self.geometry.block_size);
+            if blocks_needed > mb {
+                bail!("mock: lane {lane} ctx {ctx} overflows the block table");
+            }
+        }
+        self.decode_calls += 1;
+        self.decode_trace
+            .push((ctx_lens.to_vec(), slot_mapping.to_vec()));
+        self.spin();
+        let vocab = self.preset.vocab;
+        let mut logits = vec![0.0f32; b * vocab];
+        for lane in 0..b {
+            if ctx_lens[lane] == 0 {
+                continue;
+            }
+            let favored = 32 + (self.seed + token_ids[lane] as u32 + 7) % 200;
+            let row = self.logits_for(favored, vocab);
+            logits[lane * vocab..(lane + 1) * vocab].copy_from_slice(&row);
+        }
+        Ok(logits)
+    }
+
+    fn reset_cache(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn take_exec_time(&mut self) -> Duration {
+        std::mem::take(&mut self.exec_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_contract() {
+        let mut m = MockBackend::new();
+        let s = m.geometry().max_seq;
+        let mut toks = vec![0i32; s];
+        toks[0] = 65;
+        let slots = vec![-1i32; s];
+        assert!(m.prefill(&toks, 1, &slots).is_ok());
+        assert!(m.prefill(&toks, 0, &slots).is_err());
+        assert!(m.prefill(&toks[1..], 1, &slots).is_err());
+        assert_eq!(m.prefill_calls, 1);
+    }
+
+    #[test]
+    fn decode_contract_catches_bad_lanes() {
+        let mut m = MockBackend::new();
+        let g = *m.geometry();
+        let b = g.max_batch;
+        let mut ctx = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut slots = vec![-1i32; b];
+        let toks = vec![1i32; b];
+        let bt = vec![0i32; b * g.max_blocks];
+        // one active lane, consistent
+        ctx[0] = 5;
+        pos[0] = 4;
+        slots[0] = 4;
+        assert!(m.decode(&toks, &pos, &bt, &ctx, &slots).is_ok());
+        // inconsistent position
+        pos[0] = 3;
+        assert!(m.decode(&toks, &pos, &bt, &ctx, &slots).is_err());
+        pos[0] = 4;
+        // inactive lane with a slot
+        slots[1] = 3;
+        assert!(m.decode(&toks, &pos, &bt, &ctx, &slots).is_err());
+    }
+
+    #[test]
+    fn deterministic_logits() {
+        let mut m = MockBackend::new();
+        let g = *m.geometry();
+        let b = g.max_batch;
+        let mut ctx = vec![0i32; b];
+        ctx[0] = 3;
+        let mut pos = vec![0i32; b];
+        pos[0] = 2;
+        let mut slots = vec![-1i32; b];
+        slots[0] = 2;
+        let toks = vec![42i32; b];
+        let bt = vec![0i32; b * g.max_blocks];
+        let l1 = m.decode(&toks, &pos, &bt, &ctx, &slots).unwrap();
+        let l2 = m.decode(&toks, &pos, &bt, &ctx, &slots).unwrap();
+        assert_eq!(l1, l2);
+        let best = crate::sampling::argmax(&l1[..m.preset().vocab]);
+        assert_eq!(best, 32 + (42 + 7) % 200);
+    }
+}

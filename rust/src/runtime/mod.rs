@@ -1,0 +1,401 @@
+//! PJRT runtime: load AOT artifacts and execute prefill/decode steps with
+//! persistent device buffers.
+//!
+//! One [`ModelRuntime`] per (model, opt-config): it compiles the two HLO
+//! graphs (`<model>_<cfg>_{prefill,decode}.hlo.txt`), uploads the weights
+//! once, owns the paged KV pool as device buffers, and exposes
+//! `prefill`/`decode` calls that the coordinator drives.  Python is never
+//! involved: HLO **text** is parsed by the XLA runtime itself
+//! (`HloModuleProto::from_text_file`), see DESIGN.md for why text.
+//!
+//! Output handling: the graphs are lowered with `return_tuple=True`.  Some
+//! PJRT builds untuple the root automatically (N buffers per replica),
+//! others return a single tuple buffer; [`ModelRuntime::execute`] detects
+//! which at the first call and keeps cache outputs on-device in the
+//! untupled case (the steady-state fast path — logits are the only
+//! per-step host transfer).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::{CacheGeometry, GraphEntry, Manifest, ModelEntry, ModelPreset, OptConfig};
+
+pub mod mock;
+
+/// What the coordinator needs from an execution backend (the PJRT runtime
+/// in production, [`mock::MockBackend`] in engine unit tests).
+pub trait Backend {
+    fn preset(&self) -> &ModelPreset;
+    fn geometry(&self) -> &CacheGeometry;
+    fn opt(&self) -> &OptConfig;
+    /// Prefill one sequence.  `token_ids`/`slot_mapping` are padded to
+    /// max_seq.  Returns logits `[max_seq * vocab]` (row-major).
+    fn prefill(&mut self, token_ids: &[i32], seq_len: i32, slot_mapping: &[i32])
+        -> Result<Vec<f32>>;
+    /// Batched decode step; all arrays padded to max_batch.  Returns
+    /// logits `[max_batch * vocab]`.
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &mut self,
+        token_ids: &[i32],
+        positions: &[i32],
+        block_tables: &[i32],
+        ctx_lens: &[i32],
+        slot_mapping: &[i32],
+    ) -> Result<Vec<f32>>;
+    /// Zero the KV pool (new serving session).
+    fn reset_cache(&mut self) -> Result<()>;
+    /// Wallclock spent inside execute calls since the last call to this.
+    fn take_exec_time(&mut self) -> Duration;
+}
+
+/// Shared PJRT client (one per process).
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(into_anyhow)?;
+        Ok(Runtime { client, manifest })
+    }
+
+    pub fn load_model(&self, model: &str, opt: OptConfig) -> Result<ModelRuntime> {
+        ModelRuntime::load(self, model, opt)
+    }
+}
+
+struct CacheBuffers {
+    /// k_cache, v_cache [, k_scale, v_scale]
+    bufs: Vec<PjRtBuffer>,
+}
+
+/// Compiled + resident model for one opt-config.
+pub struct ModelRuntime {
+    client: PjRtClient,
+    preset: ModelPreset,
+    geometry: CacheGeometry,
+    opt: OptConfig,
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    prefill_graph: GraphEntry,
+    decode_graph: GraphEntry,
+    /// all checkpoint weights, uploaded once
+    weight_bufs: Vec<(String, PjRtBuffer)>,
+    /// per-phase positional indices into `weight_bufs` (graphs reference a
+    /// subset of the checkpoint; XLA DCEs the rest)
+    prefill_weight_idx: Vec<usize>,
+    decode_weight_idx: Vec<usize>,
+    cache: CacheBuffers,
+    /// cache tensor shapes/dtypes (from the manifest, positional)
+    cache_specs: Vec<(Vec<usize>, String)>,
+    untupled: Option<bool>,
+    exec_time: Duration,
+    pub compile_time: Duration,
+}
+
+// SAFETY: `ModelRuntime` is only ever *moved* into a single engine thread
+// (EngineHandle::spawn) and used by one thread at a time thereafter.  The
+// !Send inference comes from raw pointers inside the xla crate's wrappers,
+// not from thread-local state; the PJRT CPU client has no thread affinity.
+unsafe impl Send for ModelRuntime {}
+
+impl ModelRuntime {
+    pub fn load(rt: &Runtime, model: &str, opt: OptConfig) -> Result<Self> {
+        let m: &ModelEntry = rt.manifest.model(model)?;
+        let prefill_graph = rt.manifest.graph(model, opt.name, "prefill")?.clone();
+        let decode_graph = rt.manifest.graph(model, opt.name, "decode")?.clone();
+
+        let t0 = Instant::now();
+        let prefill_exe = compile(&rt.client, &rt.manifest.dir.join(&prefill_graph.file))?;
+        let decode_exe = compile(&rt.client, &rt.manifest.dir.join(&decode_graph.file))?;
+        let compile_time = t0.elapsed();
+
+        // upload weights once (persistent device buffers)
+        let wpath = rt.manifest.dir.join(&m.weights_file);
+        let raw = std::fs::read(&wpath)
+            .with_context(|| format!("reading weights {}", wpath.display()))?;
+        let mut weight_bufs = Vec::with_capacity(m.weights.len());
+        for w in &m.weights {
+            let bytes = raw
+                .get(w.offset..w.offset + w.nbytes)
+                .ok_or_else(|| anyhow!("weights file too short for '{}'", w.name))?;
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = rt
+                .client
+                .buffer_from_host_buffer(&floats, &w.shape, None)
+                .map_err(into_anyhow)?;
+            weight_bufs.push((w.name.clone(), buf));
+        }
+        let index_of = |name: &str| -> Result<usize> {
+            weight_bufs
+                .iter()
+                .position(|(n, _)| n == name)
+                .ok_or_else(|| anyhow!("graph references unknown weight '{name}'"))
+        };
+        let prefill_weight_idx = prefill_graph
+            .weights
+            .iter()
+            .map(|n| index_of(n))
+            .collect::<Result<Vec<_>>>()?;
+        let decode_weight_idx = decode_graph
+            .weights
+            .iter()
+            .map(|n| index_of(n))
+            .collect::<Result<Vec<_>>>()?;
+
+        // cache tensors come after the scalar runtime inputs in both graphs;
+        // identify them by name prefix
+        let cache_specs: Vec<(Vec<usize>, String)> = decode_graph
+            .runtime_inputs
+            .iter()
+            .filter(|t| t.name.ends_with("cache") || t.name.ends_with("scale"))
+            .map(|t| (t.shape.clone(), t.dtype.clone()))
+            .collect();
+
+        let mut s = ModelRuntime {
+            client: rt.client.clone(),
+            preset: m.preset.clone(),
+            geometry: rt.manifest.geometry,
+            opt,
+            prefill_exe,
+            decode_exe,
+            prefill_graph,
+            decode_graph,
+            weight_bufs,
+            prefill_weight_idx,
+            decode_weight_idx,
+            cache: CacheBuffers { bufs: Vec::new() },
+            cache_specs,
+            untupled: None,
+            exec_time: Duration::ZERO,
+            compile_time,
+        };
+        s.reset_cache()?;
+        Ok(s)
+    }
+
+    pub fn opt_name(&self) -> &'static str {
+        self.opt.name
+    }
+
+    fn zero_cache_buffers(&self) -> Result<Vec<PjRtBuffer>> {
+        self.cache_specs
+            .iter()
+            .map(|(shape, dtype)| {
+                let n: usize = shape.iter().product();
+                match dtype.as_str() {
+                    // NOTE: use the typed path — the crate's
+                    // buffer_from_host_raw_bytes passes `ElementType as i32`
+                    // (positional discriminant) where PJRT expects
+                    // PrimitiveType ids, mislabeling U8 buffers as S64.
+                    "u8" => self
+                        .client
+                        .buffer_from_host_buffer(&vec![0u8; n], shape, None)
+                        .map_err(into_anyhow),
+                    "f32" => self
+                        .client
+                        .buffer_from_host_buffer(&vec![0f32; n], shape, None)
+                        .map_err(into_anyhow),
+                    other => bail!("unsupported cache dtype {other}"),
+                }
+            })
+            .collect()
+    }
+
+    fn i32_buf(&self, data: &[i32], shape: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(into_anyhow)
+    }
+
+    /// Run one executable with (weights ++ runtime inputs ++ caches),
+    /// replace the cache buffers from the outputs, return the logits.
+    fn execute(
+        &mut self,
+        which: Phase,
+        runtime_bufs: Vec<PjRtBuffer>,
+        logits_len: usize,
+    ) -> Result<Vec<f32>> {
+        let n_cache = self.cache.bufs.len();
+        let (n_outputs, weight_idx) = match which {
+            Phase::Prefill => (self.prefill_graph.num_outputs, &self.prefill_weight_idx),
+            Phase::Decode => (self.decode_graph.num_outputs, &self.decode_weight_idx),
+        };
+        debug_assert_eq!(n_outputs, 1 + n_cache);
+
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(weight_idx.len() + runtime_bufs.len() + n_cache);
+        args.extend(weight_idx.iter().map(|&i| &self.weight_bufs[i].1));
+        args.extend(runtime_bufs.iter());
+        args.extend(self.cache.bufs.iter());
+
+        let exe = match which {
+            Phase::Prefill => &self.prefill_exe,
+            Phase::Decode => &self.decode_exe,
+        };
+        let t0 = Instant::now();
+        let mut out = exe.execute_b(&args).map_err(into_anyhow)?;
+        let replica = out
+            .get_mut(0)
+            .and_then(|r| if r.is_empty() { None } else { Some(r) })
+            .ok_or_else(|| anyhow!("execute produced no outputs"))?;
+
+        let untupled = *self.untupled.get_or_insert(replica.len() == n_outputs);
+        let logits = if untupled {
+            // fast path: logits to host, caches stay on device
+            let mut bufs = std::mem::take(replica);
+            if bufs.len() != n_outputs {
+                bail!("expected {n_outputs} outputs, got {}", bufs.len());
+            }
+            let logits_buf = bufs.remove(0);
+            self.cache.bufs = bufs;
+            let lit = logits_buf.to_literal_sync().map_err(into_anyhow)?;
+            lit.to_vec::<f32>().map_err(into_anyhow)?
+        } else {
+            // tuple path: pull the tuple to host, re-upload the caches
+            let lit = replica[0].to_literal_sync().map_err(into_anyhow)?;
+            let mut parts = lit.to_tuple().map_err(into_anyhow)?;
+            if parts.len() != n_outputs {
+                bail!("expected {n_outputs} tuple parts, got {}", parts.len());
+            }
+            let logits_lit = parts.remove(0);
+            let mut cache_bufs = Vec::with_capacity(parts.len());
+            for (p, (shape, dtype)) in parts.into_iter().zip(&self.cache_specs) {
+                // NOTE: upload via the typed host-buffer path
+                // (kImmutableOnlyDuringCall — synchronous copy).  The
+                // crate's buffer_from_host_literal uses BufferFromHostLiteral
+                // whose copy is asynchronous; dropping the literal before the
+                // transfer completes is a use-after-free (observed SIGSEGV in
+                // AbstractTfrtCpuBuffer::CopyFromLiteral).
+                let buf = match dtype.as_str() {
+                    "u8" => {
+                        let v = p.to_vec::<u8>().map_err(into_anyhow)?;
+                        self.client
+                            .buffer_from_host_buffer(&v, shape, None)
+                            .map_err(into_anyhow)?
+                    }
+                    "f32" => {
+                        let v = p.to_vec::<f32>().map_err(into_anyhow)?;
+                        self.client
+                            .buffer_from_host_buffer(&v, shape, None)
+                            .map_err(into_anyhow)?
+                    }
+                    other => bail!("unsupported cache dtype {other}"),
+                };
+                cache_bufs.push(buf);
+            }
+            self.cache.bufs = cache_bufs;
+            logits_lit.to_vec::<f32>().map_err(into_anyhow)?
+        };
+        self.exec_time += t0.elapsed();
+
+        if logits.len() != logits_len {
+            bail!("logits length {} != expected {logits_len}", logits.len());
+        }
+        Ok(logits)
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Phase {
+    Prefill,
+    Decode,
+}
+
+impl Backend for ModelRuntime {
+    fn preset(&self) -> &ModelPreset {
+        &self.preset
+    }
+
+    fn geometry(&self) -> &CacheGeometry {
+        &self.geometry
+    }
+
+    fn opt(&self) -> &OptConfig {
+        &self.opt
+    }
+
+    fn prefill(
+        &mut self,
+        token_ids: &[i32],
+        seq_len: i32,
+        slot_mapping: &[i32],
+    ) -> Result<Vec<f32>> {
+        let s = self.geometry.max_seq;
+        if token_ids.len() != s || slot_mapping.len() != s {
+            bail!("prefill inputs must be padded to max_seq {s}");
+        }
+        let bufs = vec![
+            self.i32_buf(token_ids, &[s])?,
+            self.i32_buf(&[seq_len], &[1])?,
+            self.i32_buf(slot_mapping, &[s])?,
+        ];
+        self.execute(Phase::Prefill, bufs, s * self.preset.vocab)
+    }
+
+    fn decode(
+        &mut self,
+        token_ids: &[i32],
+        positions: &[i32],
+        block_tables: &[i32],
+        ctx_lens: &[i32],
+        slot_mapping: &[i32],
+    ) -> Result<Vec<f32>> {
+        let b = self.geometry.max_batch;
+        let mb = self.geometry.max_blocks;
+        if token_ids.len() != b
+            || positions.len() != b
+            || ctx_lens.len() != b
+            || slot_mapping.len() != b
+            || block_tables.len() != b * mb
+        {
+            bail!("decode inputs must be padded to max_batch {b} x max_blocks {mb}");
+        }
+        let bufs = vec![
+            self.i32_buf(token_ids, &[b])?,
+            self.i32_buf(positions, &[b])?,
+            self.i32_buf(block_tables, &[b, mb])?,
+            self.i32_buf(ctx_lens, &[b])?,
+            self.i32_buf(slot_mapping, &[b])?,
+        ];
+        self.execute(Phase::Decode, bufs, b * self.preset.vocab)
+    }
+
+    fn reset_cache(&mut self) -> Result<()> {
+        self.cache.bufs = self.zero_cache_buffers()?;
+        Ok(())
+    }
+
+    fn take_exec_time(&mut self) -> Duration {
+        std::mem::take(&mut self.exec_time)
+    }
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| anyhow!("non-UTF-8 artifact path"))?,
+    )
+    .map_err(into_anyhow)
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(into_anyhow)
+}
+
+fn into_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("XLA: {e}")
+}
+
+/// Convenience for tests: does an artifacts dir with a manifest exist?
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").exists()
+}

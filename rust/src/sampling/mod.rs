@@ -1,0 +1,181 @@
+//! Token sampling and MCQ scoring over model logits.
+//!
+//! Greedy/temperature/top-k/top-p for generation; `mcq_scores` implements
+//! the ARC single-token scoring protocol (§4.3.2: argmax over the choice
+//! letters' next-token log-probs).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    /// 0.0 = greedy
+    pub temperature: f64,
+    /// 0 = disabled
+    pub top_k: usize,
+    /// 1.0 = disabled
+    pub top_p: f64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+        }
+    }
+}
+
+/// Sample one token id from `logits`.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits) as u32;
+    }
+    // scale by temperature, softmax over the filtered candidate set
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    if params.top_k > 0 {
+        idx.truncate(params.top_k.max(1));
+    }
+    let inv_t = 1.0 / params.temperature;
+    let m = logits[idx[0]] as f64;
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - m) * inv_t).exp())
+        .collect();
+    let sum: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    if params.top_p < 1.0 {
+        // nucleus: keep the smallest prefix with cumulative mass >= top_p
+        let mut cum = 0.0;
+        let mut keep = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= params.top_p {
+                keep = i + 1;
+                break;
+            }
+        }
+        probs.truncate(keep);
+        idx.truncate(keep);
+        let s: f64 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= s;
+        }
+    }
+    let mut target = rng.f64();
+    for (i, &p) in probs.iter().enumerate() {
+        target -= p;
+        if target <= 0.0 {
+            return idx[i] as u32;
+        }
+    }
+    idx[probs.len() - 1] as u32
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Log-softmax value of token `id` under `logits`.
+pub fn log_prob(logits: &[f32], id: u32) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = logits.iter().map(|&x| ((x as f64) - m).exp()).sum();
+    (logits[id as usize] as f64 - m) - z.ln()
+}
+
+/// ARC/MMLU-style MCQ scoring: log-probs of each candidate token id at the
+/// answer position.  Returns (best_choice_index, scores).
+pub fn mcq_scores(logits: &[f32], choice_ids: &[u32]) -> (usize, Vec<f64>) {
+    let scores: Vec<f64> = choice_ids.iter().map(|&c| log_prob(logits, c)).collect();
+    let mut best = 0;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > scores[best] {
+            best = i;
+        }
+    }
+    (best, scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&logits, &SamplingParams::default(), &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_samples_all_modes() {
+        let logits = vec![1.0, 1.0, 1.0];
+        let mut rng = Rng::new(1);
+        let p = SamplingParams {
+            temperature: 1.0,
+            ..Default::default()
+        };
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn top_k_restricts() {
+        let logits = vec![5.0, 4.0, -10.0, -10.0];
+        let mut rng = Rng::new(2);
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            top_p: 1.0,
+        };
+        for _ in 0..100 {
+            assert!(sample(&logits, &p, &mut rng) < 2);
+        }
+    }
+
+    #[test]
+    fn top_p_restricts() {
+        let logits = vec![10.0, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(3);
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 0.5,
+        };
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, &p, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn log_prob_normalized() {
+        let logits = vec![1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_prob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mcq_picks_highest() {
+        let mut logits = vec![0.0f32; 300];
+        logits[65] = 1.0; // 'A'
+        logits[66] = 3.0; // 'B'
+        logits[67] = 2.0; // 'C'
+        logits[68] = 0.5; // 'D'
+        let (best, scores) = mcq_scores(&logits, &[65, 66, 67, 68]);
+        assert_eq!(best, 1);
+        assert_eq!(scores.len(), 4);
+        assert!(scores[1] > scores[2]);
+    }
+}

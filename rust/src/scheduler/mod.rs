@@ -1,0 +1,241 @@
+//! Continuous-batching scheduler (the vLLM-baseline substrate the paper
+//! builds on: dynamic batching + sequence merging, §2).
+//!
+//! Policy, per scheduling round:
+//!
+//! 1. **Prefill admission** — while there is batch headroom, waiting
+//!    sequences are admitted FCFS if the [`CacheManager`] can allocate
+//!    their blocks (admission differs by opt-config: the baseline's padded
+//!    writes need more blocks, so Opt-KV literally admits more load).
+//!    One prefill per round (the prefill graph is single-sequence).
+//! 2. **Decode batching** — all running sequences step together, padded to
+//!    the graph batch.
+//! 3. **Preemption by recompute** — if a decode step cannot get a block,
+//!    the most-recently-admitted running sequence is evicted: its blocks
+//!    are freed and it re-enters the waiting queue with its full token
+//!    prefix (re-prefilled on next admission), exactly vLLM's recompute
+//!    preemption.
+
+use std::collections::VecDeque;
+
+use crate::config::OptConfig;
+use crate::kvcache::{CacheManager, SeqId};
+
+/// Scheduler's view of a sequence.
+#[derive(Debug, Clone)]
+struct Entry {
+    id: SeqId,
+    /// tokens that must be prefetched into the cache on (re)admission
+    prefix_len: usize,
+    /// admission order stamp (for preemption: newest goes first)
+    admitted_at: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleDecision {
+    /// sequence to prefill this round (at most one)
+    pub prefill: Option<SeqId>,
+    /// running sequences to decode-step together
+    pub decodes: Vec<SeqId>,
+    /// sequences preempted this round (already moved back to waiting)
+    pub preempted: Vec<SeqId>,
+}
+
+#[derive(Debug)]
+pub struct Scheduler {
+    waiting: VecDeque<Entry>,
+    running: Vec<Entry>,
+    max_batch: usize,
+    stamp: u64,
+    pub total_preemptions: u64,
+    pub total_admissions: u64,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Self {
+        Scheduler {
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            max_batch,
+            stamp: 0,
+            total_preemptions: 0,
+            total_admissions: 0,
+        }
+    }
+
+    /// Enqueue a new request (prompt not yet in cache).
+    pub fn submit(&mut self, id: SeqId, prompt_len: usize) {
+        self.waiting.push_back(Entry {
+            id,
+            prefix_len: prompt_len,
+            admitted_at: 0,
+        });
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+
+    pub fn running_ids(&self) -> Vec<SeqId> {
+        self.running.iter().map(|e| e.id).collect()
+    }
+
+    /// Remove a finished sequence from the running set.
+    pub fn finish(&mut self, id: SeqId) {
+        self.running.retain(|e| e.id != id);
+    }
+
+    /// Plan the next round.  `cache` is consulted for admission headroom;
+    /// nothing is allocated here (the coordinator commits the plan).
+    pub fn schedule(&mut self, cache: &CacheManager, opt: &OptConfig) -> ScheduleDecision {
+        let mut d = ScheduleDecision::default();
+
+        // 1. admit one waiting sequence if there's room
+        if self.running.len() < self.max_batch {
+            if let Some(front) = self.waiting.front() {
+                if cache.can_admit(front.prefix_len, opt) {
+                    let mut e = self.waiting.pop_front().unwrap();
+                    self.stamp += 1;
+                    e.admitted_at = self.stamp;
+                    d.prefill = Some(e.id);
+                    self.total_admissions += 1;
+                    self.running.push(e);
+                }
+            }
+        }
+
+        // 2. decode everything running (including the fresh prefill's seq —
+        // the coordinator prefills first, then decode-steps the batch)
+        d.decodes = self
+            .running
+            .iter()
+            .map(|e| e.id)
+            .take(self.max_batch)
+            .collect();
+        d
+    }
+
+    /// Preempt the most recently admitted running sequence (recompute
+    /// policy).  `current_len` is its full token count (prompt+generated),
+    /// which becomes its re-prefill prefix.  Returns the victim id.
+    pub fn preempt_latest(&mut self, current_len: impl Fn(SeqId) -> usize) -> Option<SeqId> {
+        let idx = self
+            .running
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, e)| e.admitted_at)
+            .map(|(i, _)| i)?;
+        let mut e = self.running.remove(idx);
+        e.prefix_len = current_len(e.id);
+        let id = e.id;
+        self.waiting.push_front(e);
+        self.total_preemptions += 1;
+        Some(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CacheGeometry, COOPT};
+
+    fn cache() -> CacheManager {
+        CacheManager::new(CacheGeometry {
+            block_size: 4,
+            max_blocks: 8,
+            num_pool_blocks: 8,
+            max_batch: 4,
+            max_seq: 16,
+        })
+    }
+
+    #[test]
+    fn fcfs_admission() {
+        let mut s = Scheduler::new(2);
+        let c = cache();
+        s.submit(1, 4);
+        s.submit(2, 4);
+        s.submit(3, 4);
+        let d1 = s.schedule(&c, &COOPT);
+        assert_eq!(d1.prefill, Some(1));
+        assert_eq!(d1.decodes, vec![1]);
+        let d2 = s.schedule(&c, &COOPT);
+        assert_eq!(d2.prefill, Some(2));
+        assert_eq!(d2.decodes, vec![1, 2]);
+        // batch full: seq 3 must wait
+        let d3 = s.schedule(&c, &COOPT);
+        assert_eq!(d3.prefill, None);
+        assert_eq!(s.num_waiting(), 1);
+    }
+
+    #[test]
+    fn admission_respects_cache() {
+        let mut s = Scheduler::new(8);
+        let mut c = cache(); // 8 blocks total
+        // occupy 7 of 8 blocks so a 4-token prompt (1 block + 1 headroom)
+        // cannot be admitted
+        for id in 100..107u64 {
+            c.prefill(id, &(0..4).map(|x| id as u32 + x).collect::<Vec<_>>(), &COOPT)
+                .unwrap();
+        }
+        assert_eq!(c.num_free_blocks(), 1);
+        s.submit(1, 4);
+        let d = s.schedule(&c, &COOPT);
+        assert_eq!(d.prefill, None, "no admission without headroom");
+        c.free_seq(100);
+        c.free_seq(101);
+        let d = s.schedule(&c, &COOPT);
+        assert_eq!(d.prefill, Some(1));
+    }
+
+    #[test]
+    fn finish_frees_batch_slot() {
+        let mut s = Scheduler::new(1);
+        let c = cache();
+        s.submit(1, 4);
+        s.submit(2, 4);
+        s.schedule(&c, &COOPT);
+        assert_eq!(s.num_running(), 1);
+        s.finish(1);
+        let d = s.schedule(&c, &COOPT);
+        assert_eq!(d.prefill, Some(2));
+    }
+
+    #[test]
+    fn preempts_newest_first() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        for id in 1..=3u64 {
+            s.submit(id, 4);
+            s.schedule(&c, &COOPT);
+        }
+        assert_eq!(s.num_running(), 3);
+        let victim = s.preempt_latest(|_| 7).unwrap();
+        assert_eq!(victim, 3, "newest admitted preempted first");
+        assert_eq!(s.num_waiting(), 1);
+        // re-admitted at front with its grown prefix
+        let d = s.schedule(&c, &COOPT);
+        assert_eq!(d.prefill, Some(3));
+        assert_eq!(s.total_preemptions, 1);
+    }
+
+    #[test]
+    fn idle_detection() {
+        let mut s = Scheduler::new(2);
+        assert!(s.is_idle());
+        s.submit(1, 4);
+        assert!(!s.is_idle());
+        let c = cache();
+        s.schedule(&c, &COOPT);
+        s.finish(1);
+        assert!(s.is_idle());
+    }
+}

@@ -1,0 +1,439 @@
+//! HTTP/1.1 serving front-end (hand-rolled; tokio/axum unavailable
+//! offline) + a matching client.
+//!
+//! Architecture: one *engine thread* owns the [`Engine`] and runs the
+//! continuous-batching loop; HTTP connections are handled by a
+//! [`ThreadPool`], each request is submitted over an mpsc channel with a
+//! oneshot-style reply channel, so concurrent HTTP requests batch
+//! together inside the engine — the same structure as vLLM's
+//! AsyncLLMEngine front-end.
+//!
+//! Endpoints:
+//!   GET  /health            -> {"status":"ok", ...}
+//!   GET  /metrics           -> engine metrics JSON (Eq. 11/12 fields)
+//!   POST /v1/generate       -> {"text": ..., "finish": ..., ...}
+//!       body: {"prompt": "...", "max_new_tokens": 16, "temperature": 0.0}
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{Engine, GenRequest, GenResult};
+use crate::runtime::Backend;
+use crate::sampling::SamplingParams;
+use crate::util::json::{self, Object, Value};
+use crate::util::threadpool::ThreadPool;
+
+// ---------------------------------------------------------------------------
+// engine thread
+// ---------------------------------------------------------------------------
+
+struct Job {
+    req: GenRequest,
+    reply: Sender<Result<GenResult>>,
+}
+
+/// Handle to the background engine loop.
+pub struct EngineHandle {
+    tx: Sender<Job>,
+    metrics_json: Arc<Mutex<String>>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// Take ownership of the engine and run it on a dedicated thread.
+    pub fn spawn<B: Backend + Send + 'static>(mut engine: Engine<B>) -> Self {
+        let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
+        let metrics_json = Arc::new(Mutex::new("{}".to_string()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mj = Arc::clone(&metrics_json);
+        let st = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("coopt-engine".into())
+            .spawn(move || {
+                let mut waiters: Vec<(u64, Sender<Result<GenResult>>)> = Vec::new();
+                engine.metrics.start_run();
+                loop {
+                    if st.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    // drain incoming jobs; block briefly when idle
+                    loop {
+                        match rx.try_recv() {
+                            Ok(job) => match engine.submit(job.req) {
+                                Ok(id) => waiters.push((id, job.reply)),
+                                Err(e) => {
+                                    let _ = job.reply.send(Err(e));
+                                }
+                            },
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => return,
+                        }
+                    }
+                    if engine.num_pending() == 0 {
+                        // idle: wait for work (with a timeout to honor stop)
+                        match rx.recv_timeout(Duration::from_millis(20)) {
+                            Ok(job) => match engine.submit(job.req) {
+                                Ok(id) => waiters.push((id, job.reply)),
+                                Err(e) => {
+                                    let _ = job.reply.send(Err(e));
+                                }
+                            },
+                            Err(_) => continue,
+                        }
+                        continue;
+                    }
+                    match engine.step() {
+                        Ok(results) => {
+                            for r in results {
+                                if let Some(pos) = waiters.iter().position(|(id, _)| *id == r.id)
+                                {
+                                    let (_, reply) = waiters.swap_remove(pos);
+                                    let _ = reply.send(Ok(r));
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // engine error: fail everything in flight
+                            for (_, reply) in waiters.drain(..) {
+                                let _ = reply.send(Err(anyhow!("engine error: {e}")));
+                            }
+                        }
+                    }
+                    if let Ok(mut m) = mj.lock() {
+                        *m = engine.metrics.to_json().to_string();
+                    }
+                }
+            })
+            .expect("spawn engine thread");
+        EngineHandle {
+            tx,
+            metrics_json,
+            stop,
+            thread: Some(thread),
+        }
+    }
+
+    /// Blocking generate through the engine thread.
+    pub fn generate(&self, req: GenRequest) -> Result<GenResult> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Job {
+                req,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request"))?
+    }
+
+    pub fn metrics_json(&self) -> String {
+        self.metrics_json.lock().unwrap().clone()
+    }
+}
+
+impl Drop for EngineHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP server
+// ---------------------------------------------------------------------------
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    listener: TcpListener,
+    handle: Arc<EngineHandle>,
+    pool: ThreadPool,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str, handle: EngineHandle, workers: usize) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(true)?;
+        Ok(Server {
+            addr: listener.local_addr()?,
+            listener,
+            handle: Arc::new(handle),
+            pool: ThreadPool::new(workers),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept loop; returns when the stop flag is set.
+    pub fn serve(&self) -> Result<()> {
+        crate::log_info!("serving on http://{}", self.addr);
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let handle = Arc::clone(&self.handle);
+                    self.pool.execute(move || {
+                        let _ = handle_connection(stream, &handle);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, handle: &EngineHandle) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+
+    // request line
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    // headers
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    let body = String::from_utf8_lossy(&body).into_owned();
+
+    let (status, payload) = route(&method, &path, &body, handle);
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        payload.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+fn route(method: &str, path: &str, body: &str, handle: &EngineHandle) -> (&'static str, String) {
+    match (method, path) {
+        ("GET", "/health") => {
+            let mut o = Object::new();
+            o.insert("status", "ok");
+            o.insert("service", "llm-coopt");
+            ("200 OK", Value::Object(o).to_string())
+        }
+        ("GET", "/metrics") => ("200 OK", handle.metrics_json()),
+        ("POST", "/v1/generate") => match generate_route(body, handle) {
+            Ok(p) => ("200 OK", p),
+            Err(e) => ("400 Bad Request", error_json(&e)),
+        },
+        _ => ("404 Not Found", error_json(&anyhow!("no route {method} {path}"))),
+    }
+}
+
+fn generate_route(body: &str, handle: &EngineHandle) -> Result<String> {
+    let v = json::parse(body).context("invalid JSON body")?;
+    let prompt = v.req_str("prompt")?.to_string();
+    if prompt.is_empty() {
+        bail!("prompt must be non-empty");
+    }
+    let max_new = v
+        .get("max_new_tokens")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(16);
+    let sampling = SamplingParams {
+        temperature: v.get("temperature").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0),
+        top_p: v.get("top_p").and_then(|x| x.as_f64()).unwrap_or(1.0),
+    };
+    let result = handle.generate(GenRequest {
+        prompt,
+        max_new_tokens: max_new,
+        sampling,
+        ignore_eos: v.get("ignore_eos").and_then(|x| x.as_bool()).unwrap_or(false),
+    })?;
+    let mut o = Object::new();
+    o.insert("id", result.id as usize);
+    o.insert("text", result.text.as_str());
+    o.insert("finish", format!("{:?}", result.finish));
+    o.insert("prompt_tokens", result.prompt_tokens);
+    o.insert("generated_tokens", result.generated_tokens);
+    o.insert("latency_s", result.latency_s);
+    o.insert("ttft_s", result.ttft_s);
+    o.insert("sim_time_s", result.sim_time_s);
+    Ok(Value::Object(o).to_string())
+}
+
+fn error_json(e: &anyhow::Error) -> String {
+    let mut o = Object::new();
+    o.insert("error", format!("{e:#}"));
+    Value::Object(o).to_string()
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// Minimal blocking HTTP client matched to the server above.
+pub struct Client {
+    pub addr: String,
+}
+
+impl Client {
+    pub fn new(addr: impl Into<String>) -> Self {
+        Client { addr: addr.into() }
+    }
+
+    pub fn get(&self, path: &str) -> Result<(u16, Value)> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&self, path: &str, body: &Value) -> Result<(u16, Value)> {
+        self.request("POST", path, Some(body.to_string()))
+    }
+
+    pub fn generate(&self, prompt: &str, max_new: usize) -> Result<Value> {
+        let mut o = Object::new();
+        o.insert("prompt", prompt);
+        o.insert("max_new_tokens", max_new);
+        let (status, v) = self.post("/v1/generate", &Value::Object(o))?;
+        if status != 200 {
+            bail!("generate failed ({status}): {v}");
+        }
+        Ok(v)
+    }
+
+    fn request(&self, method: &str, path: &str, body: Option<String>) -> Result<(u16, Value)> {
+        let mut stream = TcpStream::connect(&self.addr)
+            .with_context(|| format!("connecting {}", self.addr))?;
+        stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+        let body = body.unwrap_or_default();
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            self.addr,
+            body.len()
+        );
+        stream.write_all(req.as_bytes())?;
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad status line '{status_line}'"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            reader.read_line(&mut h)?;
+            if h.trim().is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        reader.read_exact(&mut body)?;
+        let v = json::parse(&String::from_utf8_lossy(&body))?;
+        Ok((status, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, COOPT};
+    use crate::runtime::mock::MockBackend;
+
+    fn spawn_server() -> (Server, Client) {
+        let engine = Engine::new(MockBackend::new(), EngineConfig::new("llama-7b-sim", COOPT));
+        let handle = EngineHandle::spawn(engine);
+        let server = Server::bind("127.0.0.1:0", handle, 4).unwrap();
+        let client = Client::new(server.addr.to_string());
+        (server, client)
+    }
+
+    #[test]
+    fn health_metrics_generate_roundtrip() {
+        let (server, client) = spawn_server();
+        let stop = server.stop_flag();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+
+        let (code, v) = client.get("/health").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(v.req_str("status").unwrap(), "ok");
+
+        let v = client.generate("hello over http", 4).unwrap();
+        assert_eq!(v.req_usize("generated_tokens").unwrap(), 4);
+
+        let (code, _m) = client.get("/metrics").unwrap();
+        assert_eq!(code, 200);
+
+        let (code, _e) = client.get("/nope").unwrap();
+        assert_eq!(code, 404);
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_requests_batch() {
+        let (server, client) = spawn_server();
+        let stop = server.stop_flag();
+        let addr = client.addr.clone();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+
+        let pool = ThreadPool::new(6);
+        let results = pool.map((0..6).collect::<Vec<u32>>(), move |i| {
+            let c = Client::new(addr.clone());
+            c.generate(&format!("concurrent prompt {i}"), 5)
+                .map(|v| v.req_usize("generated_tokens").unwrap())
+        });
+        for r in results {
+            assert_eq!(r.unwrap(), 5);
+        }
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_body() {
+        let (server, client) = spawn_server();
+        let stop = server.stop_flag();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+        let (code, v) = client
+            .post("/v1/generate", &json::parse("{\"nope\": 1}").unwrap())
+            .unwrap();
+        assert_eq!(code, 400);
+        assert!(v.req_str("error").unwrap().contains("prompt"));
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+}

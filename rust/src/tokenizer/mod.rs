@@ -1,0 +1,80 @@
+//! Byte-level tokenizer, shared vocabulary with the python trainer
+//! (`python/compile/data.py`): ids 0..=255 are raw bytes, plus PAD/BOS/EOS.
+
+pub const PAD_ID: u32 = 256;
+pub const BOS_ID: u32 = 257;
+pub const EOS_ID: u32 = 258;
+pub const VOCAB_SIZE: usize = 260;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Tokenizer
+    }
+
+    /// Encode UTF-8 text to token ids, optionally wrapping with BOS/EOS.
+    pub fn encode(&self, text: &str, bos: bool, eos: bool) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 2);
+        if bos {
+            out.push(BOS_ID);
+        }
+        out.extend(text.as_bytes().iter().map(|&b| b as u32));
+        if eos {
+            out.push(EOS_ID);
+        }
+        out
+    }
+
+    /// Decode token ids back to text, dropping specials and replacing
+    /// invalid UTF-8 sequences.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&id| id < 256)
+            .map(|&id| id as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, id: u32) -> bool {
+        id >= 256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_ascii() {
+        let t = Tokenizer::new();
+        let ids = t.encode("Q: 2+3=? Answer:", true, true);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(*ids.last().unwrap(), EOS_ID);
+        assert_eq!(t.decode(&ids), "Q: 2+3=? Answer:");
+    }
+
+    #[test]
+    fn round_trip_utf8() {
+        let t = Tokenizer::new();
+        let s = "héllo 🌍";
+        assert_eq!(t.decode(&t.encode(s, false, false)), s);
+    }
+
+    #[test]
+    fn matches_python_layout() {
+        // python: data.encode("A", bos=True) == [257, 65]
+        let t = Tokenizer::new();
+        assert_eq!(t.encode("A", true, false), vec![257, 65]);
+        assert_eq!(VOCAB_SIZE, 260);
+    }
+
+    #[test]
+    fn specials_filtered_on_decode() {
+        let t = Tokenizer::new();
+        assert_eq!(t.decode(&[BOS_ID, 72, 105, EOS_ID, PAD_ID]), "Hi");
+        assert!(t.is_special(PAD_ID) && !t.is_special(255));
+    }
+}

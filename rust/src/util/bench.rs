@@ -1,0 +1,231 @@
+//! Benchmark harness (criterion replacement) for `cargo bench` targets
+//! declared with `harness = false`.
+//!
+//! Each bench binary builds a [`BenchSuite`], registers closures, and the
+//! harness handles warmup, adaptive iteration counts, and a stable report:
+//!
+//! ```text
+//! bench                         iters      mean        p50        p99    thrpt
+//! fig6/llama-13b-sim/coopt         20   41.2 ms    40.9 ms    44.0 ms   777/s
+//! ```
+//!
+//! Results can also be dumped as JSON for EXPERIMENTS.md tooling.
+
+use std::time::{Duration, Instant};
+
+use super::json::{Object, Value};
+use super::stats::Summary;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub std_s: f64,
+    /// optional user-reported units/iteration (e.g. tokens) for throughput
+    pub units_per_iter: f64,
+    /// optional free-form extras for the JSON report
+    pub extra: Object,
+}
+
+pub struct BenchSuite {
+    pub name: &'static str,
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &'static str) -> Self {
+        BenchSuite {
+            name,
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn quick(name: &'static str) -> Self {
+        let mut s = Self::new(name);
+        s.warmup = Duration::from_millis(50);
+        s.measure = Duration::from_millis(400);
+        s
+    }
+
+    /// Benchmark `f`, timing each call.
+    pub fn bench<F: FnMut()>(&mut self, name: impl Into<String>, mut f: F) -> &BenchResult {
+        self.bench_units(name, 1.0, &mut f)
+    }
+
+    /// Benchmark with a units-per-iteration count for throughput reporting.
+    pub fn bench_units<F: FnMut()>(
+        &mut self,
+        name: impl Into<String>,
+        units_per_iter: f64,
+        f: &mut F,
+    ) -> &BenchResult {
+        let name = name.into();
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // measure
+        let mut s = Summary::new();
+        let m0 = Instant::now();
+        let mut iters = 0usize;
+        while (m0.elapsed() < self.measure || iters < self.min_iters)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            s.add(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let r = BenchResult {
+            name,
+            iters,
+            mean_s: s.mean(),
+            p50_s: s.p50(),
+            p99_s: s.p99(),
+            std_s: s.std(),
+            units_per_iter,
+            extra: Object::new(),
+        };
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured result (for harnesses that manage
+    /// their own loop, e.g. whole serving runs).
+    pub fn record(&mut self, name: impl Into<String>, samples: &[f64], units_per_iter: f64) {
+        let mut s = Summary::new();
+        for &x in samples {
+            s.add(x);
+        }
+        self.results.push(BenchResult {
+            name: name.into(),
+            iters: samples.len(),
+            mean_s: s.mean(),
+            p50_s: s.p50(),
+            p99_s: s.p99(),
+            std_s: s.std(),
+            units_per_iter,
+            extra: Object::new(),
+        });
+    }
+
+    pub fn last_extra(&mut self) -> &mut Object {
+        &mut self.results.last_mut().expect("a result").extra
+    }
+
+    pub fn report(&self) {
+        println!("\n== {} ==", self.name);
+        println!(
+            "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12}",
+            "bench", "iters", "mean", "p50", "p99", "thrpt"
+        );
+        for r in &self.results {
+            let thrpt = if r.units_per_iter > 0.0 && r.mean_s > 0.0 {
+                format!("{:.1}/s", r.units_per_iter / r.mean_s)
+            } else {
+                "-".to_string()
+            };
+            println!(
+                "{:<44} {:>6} {:>12} {:>12} {:>12} {:>12}",
+                r.name,
+                r.iters,
+                fmt_dur(r.mean_s),
+                fmt_dur(r.p50_s),
+                fmt_dur(r.p99_s),
+                thrpt
+            );
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let mut o = Object::new();
+            o.insert("name", r.name.as_str());
+            o.insert("iters", r.iters);
+            o.insert("mean_s", r.mean_s);
+            o.insert("p50_s", r.p50_s);
+            o.insert("p99_s", r.p99_s);
+            o.insert("std_s", r.std_s);
+            o.insert("units_per_iter", r.units_per_iter);
+            o.insert("extra", Value::Object(r.extra.clone()));
+            arr.push(Value::Object(o));
+        }
+        let mut top = Object::new();
+        top.insert("suite", self.name);
+        top.insert("results", Value::Array(arr));
+        Value::Object(top)
+    }
+
+    /// Write the JSON report under target/bench-reports/.
+    pub fn write_json(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("target/bench-reports");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+pub fn fmt_dur(secs: f64) -> String {
+    if !secs.is_finite() {
+        "-".to_string()
+    } else if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// `black_box` substitute: defeat the optimizer without unstable features.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut suite = BenchSuite::quick("selftest");
+        suite.min_iters = 3;
+        let mut acc = 0u64;
+        suite.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(suite.results.len(), 1);
+        let r = &suite.results[0];
+        assert!(r.iters >= 3);
+        assert!(r.mean_s >= 0.0);
+        let j = suite.to_json();
+        assert_eq!(j.req_str("suite").unwrap(), "selftest");
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,257 @@
+//! Declarative command-line flag parsing (clap replacement).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, defaults,
+//! required flags, and auto-generated `--help`.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+    required: bool,
+}
+
+/// Builder + result of a parse.  Typical use:
+///
+/// ```ignore
+/// let mut cli = Cli::new("arc_eval", "Reproduce Tables 1-2");
+/// cli.flag("set", "easy", "eval split: easy|challenge");
+/// cli.flag("models", "all", "comma-separated model list");
+/// cli.bool_flag("verbose", "log per-question scores");
+/// let args = cli.parse_or_exit();
+/// let split = args.get("set");
+/// ```
+#[derive(Debug, Clone)]
+pub struct Cli {
+    prog: &'static str,
+    about: &'static str,
+    specs: Vec<Spec>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        Cli {
+            prog,
+            about,
+            specs: Vec::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Optional flag with a default value.
+    pub fn flag(&mut self, name: &'static str, default: &str, help: &'static str) -> &mut Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+            required: false,
+        });
+        self
+    }
+
+    /// Required flag (no default).
+    pub fn req_flag(&mut self, name: &'static str, help: &'static str) -> &mut Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: None,
+            is_bool: false,
+            required: true,
+        });
+        self
+    }
+
+    /// Boolean switch (absent = false).
+    pub fn bool_flag(&mut self, name: &'static str, help: &'static str) -> &mut Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: Some("false".to_string()),
+            is_bool: true,
+            required: false,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [FLAGS]\n\nFLAGS:\n", self.prog, self.about, self.prog);
+        for spec in &self.specs {
+            let d = match (&spec.default, spec.is_bool) {
+                (_, true) => String::new(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s.push_str("  --help               print this message\n");
+        s
+    }
+
+    /// Parse an explicit argv (without the program name).
+    pub fn parse_args(&mut self, argv: &[String]) -> Result<Args> {
+        let mut values: Vec<(String, String)> = self
+            .specs
+            .iter()
+            .filter_map(|s| s.default.clone().map(|d| (s.name.to_string(), d)))
+            .collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name}\n\n{}", self.usage()))?;
+                let value = if spec.is_bool {
+                    match inline_val {
+                        Some(v) => v,
+                        None => "true".to_string(),
+                    }
+                } else {
+                    match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                                .clone()
+                        }
+                    }
+                };
+                values.retain(|(n, _)| n != &name);
+                values.push((name, value));
+            } else {
+                self.positionals.push(arg.clone());
+            }
+            i += 1;
+        }
+        for spec in &self.specs {
+            if spec.required && !values.iter().any(|(n, _)| n == spec.name) {
+                bail!("missing required flag --{}\n\n{}", spec.name, self.usage());
+            }
+        }
+        Ok(Args {
+            values,
+            positionals: std::mem::take(&mut self.positionals),
+        })
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on failure.
+    pub fn parse_or_exit(&mut self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_args(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: Vec<(String, String)>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+            .unwrap_or_else(|| panic!("flag --{name} was never declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an unsigned integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let mut cli = Cli::new("t", "test");
+        cli.flag("a", "1", "").flag("b", "x", "").bool_flag("v", "");
+        let args = cli.parse_args(&argv(&["--a", "5", "--v"])).unwrap();
+        assert_eq!(args.get_usize("a"), 5);
+        assert_eq!(args.get("b"), "x");
+        assert!(args.get_bool("v"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let mut cli = Cli::new("t", "test");
+        cli.flag("n", "0", "");
+        let args = cli.parse_args(&argv(&["--n=42"])).unwrap();
+        assert_eq!(args.get_usize("n"), 42);
+    }
+
+    #[test]
+    fn required_enforced() {
+        let mut cli = Cli::new("t", "test");
+        cli.req_flag("must", "");
+        assert!(cli.parse_args(&argv(&[])).is_err());
+        let mut cli2 = Cli::new("t", "test");
+        cli2.req_flag("must", "");
+        assert!(cli2.parse_args(&argv(&["--must", "y"])).is_ok());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut cli = Cli::new("t", "test");
+        cli.flag("a", "1", "");
+        assert!(cli.parse_args(&argv(&["--zzz", "1"])).is_err());
+    }
+
+    #[test]
+    fn lists_and_positionals() {
+        let mut cli = Cli::new("t", "test");
+        cli.flag("models", "a,b", "");
+        let args = cli.parse_args(&argv(&["pos1", "--models", "x,y,z"])).unwrap();
+        assert_eq!(args.get_list("models"), ["x", "y", "z"]);
+        assert_eq!(args.positionals, ["pos1"]);
+    }
+}

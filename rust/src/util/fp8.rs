@@ -1,0 +1,155 @@
+//! FP8 E4M3FN codec — bit-compatible with `python/compile/kernels/fp8.py`.
+//!
+//! The rust side needs the codec for (a) initializing/inspecting FP8 KV
+//! pools, (b) the platform model's traffic accounting, and (c) tests that
+//! cross-check the python/Pallas implementation via the golden table in
+//! `python/tests/test_fp8.py`.
+//!
+//! Layout: 1 sign | 4 exponent (bias 7) | 3 mantissa; no infinities;
+//! 0x7F/0xFF are NaN; max finite 448; min subnormal 2^-9.  Encode is
+//! round-to-nearest-even with saturation at ±448 (inputs are pre-scaled
+//! by the dynamic quantizer, mirroring the kernel).
+
+pub const E4M3_MAX: f32 = 448.0;
+
+/// Decode one E4M3FN byte to f32.
+#[inline]
+pub fn decode(code: u8) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let ef = (code >> 3) & 0xF;
+    let m = (code & 0x7) as f32;
+    if ef == 0 {
+        sign * m * (1.0 / 512.0)
+    } else if ef == 15 && (code & 0x7) == 7 {
+        f32::NAN
+    } else {
+        sign * (1.0 + m / 8.0) * f32::powi(2.0, ef as i32 - 7)
+    }
+}
+
+/// Encode one f32 to an E4M3FN byte (RNE, saturating at ±448).
+pub fn encode(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7F;
+    }
+    let sign: u8 = if x.is_sign_negative() { 0x80 } else { 0 };
+    let a = x.abs().min(E4M3_MAX);
+    if a == 0.0 {
+        return sign;
+    }
+    // exponent of the value, clipped to the normal/subnormal split
+    let mut e = a.log2().floor();
+    e = e.clamp(-6.0, 8.0);
+    let step = f32::powi(2.0, e as i32 - 3);
+    // round-half-to-even in units of `step`
+    let q = round_half_even((a / step) as f64) as f32 * step;
+    if q == 0.0 {
+        return sign;
+    }
+    let is_sub = q < f32::powi(2.0, -6);
+    if is_sub {
+        let m = (q * 512.0) as u32;
+        sign | m as u8
+    } else {
+        let e2 = q.log2().floor().clamp(-6.0, 8.0);
+        let m = (q / f32::powi(2.0, e2 as i32) * 8.0 - 8.0) as u32;
+        let ef = (e2 as i32 + 7) as u32;
+        sign | ((ef << 3) as u8) | m as u8
+    }
+}
+
+#[inline]
+fn round_half_even(x: f64) -> f64 {
+    let r = x.round(); // half-away-from-zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: choose the even neighbour
+        if r % 2.0 == 0.0 {
+            r
+        } else {
+            r - (r - x).signum()
+        }
+    } else {
+        r
+    }
+}
+
+/// Dynamic symmetric quantization of a slice: returns (codes, scale) with
+/// `scale = amax / 448` (mirrors `fp8.quantize(axis=-1)` per KV head).
+pub fn quantize(xs: &[f32]) -> (Vec<u8>, f32) {
+    let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let scale = (amax.max(1e-12)) / E4M3_MAX;
+    let codes = xs.iter().map(|&x| encode(x / scale)).collect();
+    (codes, scale)
+}
+
+/// Inverse of [`quantize`].
+pub fn dequantize(codes: &[u8], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| decode(c) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_spot_values() {
+        assert_eq!(decode(0x00), 0.0);
+        assert_eq!(decode(0x80), -0.0);
+        assert_eq!(decode(0x38), 1.0); // ef=7 -> 2^0
+        assert_eq!(decode(0xB8), -1.0);
+        assert_eq!(decode(0x7E), 448.0); // max finite
+        assert_eq!(decode(0x01), 1.0 / 512.0); // min subnormal
+        assert!(decode(0x7F).is_nan());
+        assert!(decode(0xFF).is_nan());
+    }
+
+    #[test]
+    fn round_trip_all_codes() {
+        // every finite code must encode back to itself
+        for c in 0u16..256 {
+            let c = c as u8;
+            let v = decode(c);
+            if v.is_nan() {
+                continue;
+            }
+            let back = encode(v);
+            // -0.0 encodes to 0x80 which decodes to -0.0: compare decoded
+            assert_eq!(decode(back), v, "code {c:#x} -> {v} -> {back:#x}");
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(encode(1e9), 0x7E);
+        assert_eq!(encode(-1e9), 0xFE);
+        assert_eq!(encode(449.0), 0x7E);
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 1.0625 is exactly between 1.0 (m=0) and 1.125 (m=1): RNE -> 1.0
+        assert_eq!(decode(encode(1.0625)), 1.0);
+        // 1.1875 between 1.125 (m=1) and 1.25 (m=2): RNE -> 1.25 (even m)
+        assert_eq!(decode(encode(1.1875)), 1.25);
+    }
+
+    #[test]
+    fn quantize_bounds_error() {
+        let xs: Vec<f32> = (0..64).map(|i| ((i * 37 % 101) as f32 - 50.0) * 0.3).collect();
+        let (codes, scale) = quantize(&xs);
+        let back = dequantize(&codes, scale);
+        let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for (a, b) in xs.iter().zip(&back) {
+            // e4m3 relative error <= 2^-4 of the scale-normalized value
+            assert!((a - b).abs() <= amax * 0.0715, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn subnormal_region() {
+        let v = 1.5 / 512.0; // between subnormal steps 1 and 2
+        let d = decode(encode(v));
+        assert!(d == 1.0 / 512.0 || d == 2.0 / 512.0);
+        assert_eq!(decode(encode(3.0 / 512.0)), 3.0 / 512.0);
+    }
+}

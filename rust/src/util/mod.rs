@@ -1,0 +1,25 @@
+//! Offline-environment substrates.
+//!
+//! The build environment has no crates.io access beyond the `xla` crate's
+//! closure, so the usual ecosystem pieces are implemented here as real,
+//! tested modules (DESIGN.md "Offline-toolchain substitutions"):
+//!
+//! * [`json`] — serde_json replacement (parser + writer + accessors)
+//! * [`rng`] — rand replacement (SplitMix64/xoshiro256++, distributions)
+//! * [`fp8`] — E4M3FN codec, bit-compatible with the python/Pallas codec
+//! * [`cli`] — clap replacement (declarative flag parser)
+//! * [`logging`] — log/env_logger replacement
+//! * [`threadpool`] — tokio replacement for our needs (pool + scoped jobs)
+//! * [`bench`] — criterion replacement (warmup + stats harness)
+//! * [`quickprop`] — proptest replacement (randomized properties + shrinking)
+//! * [`stats`] — histograms/percentiles shared by metrics and bench
+
+pub mod bench;
+pub mod cli;
+pub mod fp8;
+pub mod json;
+pub mod logging;
+pub mod quickprop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,217 @@
+//! Mini property-testing framework (proptest replacement).
+//!
+//! Generates random inputs from composable strategies, runs the property,
+//! and on failure greedily shrinks the input before reporting.  Used for
+//! the coordinator invariants (routing, batching, allocator state) in
+//! rust/tests/prop_coordinator.rs and for module-level properties.
+//!
+//! ```ignore
+//! quickprop::check(200, gens::vec(gens::usize_to(100), 0..=32), |xs| {
+//!     let mut ys = xs.clone(); ys.sort(); ys.len() == xs.len()
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// A generator of values plus a shrinker.
+pub struct Strategy<T> {
+    pub gen: Box<dyn Fn(&mut Rng) -> T>,
+    /// Produce strictly "smaller" candidates (possibly empty).
+    pub shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+/// Run `prop` on `cases` random inputs; panic with the (shrunk) minimal
+/// counterexample on failure.
+pub fn check<T: Clone + std::fmt::Debug>(
+    cases: usize,
+    strat: Strategy<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_seeded(0xC0FFEE, cases, strat, prop)
+}
+
+pub fn check_seeded<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    strat: Strategy<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = (strat.gen)(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &strat, &prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed:#x});\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Clone + std::fmt::Debug>(
+    mut failing: T,
+    strat: &Strategy<T>,
+    prop: &impl Fn(&T) -> bool,
+) -> T {
+    // greedy descent, bounded to avoid pathological shrinkers
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in (strat.shrink)(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+/// Ready-made strategies.
+pub mod gens {
+    use super::*;
+
+    /// usize in [0, hi].
+    pub fn usize_to(hi: usize) -> Strategy<usize> {
+        Strategy {
+            gen: Box::new(move |r| r.below(hi + 1)),
+            shrink: Box::new(|&v| {
+                let mut c = Vec::new();
+                if v > 0 {
+                    c.push(0);
+                    c.push(v / 2);
+                    c.push(v - 1);
+                }
+                c.dedup();
+                c
+            }),
+        }
+    }
+
+    /// i64 in [lo, hi].
+    pub fn i64_in(lo: i64, hi: i64) -> Strategy<i64> {
+        Strategy {
+            gen: Box::new(move |r| r.range(lo, hi)),
+            shrink: Box::new(move |&v| {
+                let mut c = Vec::new();
+                let anchor = lo.max(0).min(hi);
+                if v != anchor {
+                    c.push(anchor);
+                    c.push(anchor + (v - anchor) / 2);
+                    c.push(v - (v - anchor).signum());
+                }
+                c.retain(|&x| (lo..=hi).contains(&x) && x != v);
+                c.dedup();
+                c
+            }),
+        }
+    }
+
+    /// Vec of T with length in `len`.
+    pub fn vec<T: Clone + 'static>(
+        elem: Strategy<T>,
+        len: std::ops::RangeInclusive<usize>,
+    ) -> Strategy<Vec<T>> {
+        let (lo, hi) = (*len.start(), *len.end());
+        let elem = std::rc::Rc::new(elem);
+        let elem2 = std::rc::Rc::clone(&elem);
+        Strategy {
+            gen: Box::new(move |r| {
+                let n = lo + r.below(hi - lo + 1);
+                (0..n).map(|_| (elem.gen)(r)).collect()
+            }),
+            shrink: Box::new(move |v: &Vec<T>| {
+                let mut out = Vec::new();
+                // drop halves, drop one element, shrink one element
+                if v.len() > lo {
+                    out.push(v[..v.len() / 2.max(lo)].to_vec());
+                    let mut one_less = v.clone();
+                    one_less.pop();
+                    out.push(one_less);
+                }
+                for i in 0..v.len().min(4) {
+                    for cand in (elem2.shrink)(&v[i]) {
+                        let mut w = v.clone();
+                        w[i] = cand;
+                        out.push(w);
+                    }
+                }
+                out.retain(|w| w.len() >= lo);
+                out
+            }),
+        }
+    }
+
+    /// Pair of independent strategies.
+    pub fn pair<A: Clone + 'static, B: Clone + 'static>(
+        a: Strategy<A>,
+        b: Strategy<B>,
+    ) -> Strategy<(A, B)> {
+        let (ag, ash) = (std::rc::Rc::new(a.gen), std::rc::Rc::new(a.shrink));
+        let (bg, bsh) = (std::rc::Rc::new(b.gen), std::rc::Rc::new(b.shrink));
+        let (ag2, bg2) = (std::rc::Rc::clone(&ag), std::rc::Rc::clone(&bg));
+        let _ = (ag2, bg2);
+        Strategy {
+            gen: Box::new(move |r| ((ag)(r), (bg)(r))),
+            shrink: Box::new(move |(x, y)| {
+                let mut out: Vec<(A, B)> = Vec::new();
+                for c in (ash)(x) {
+                    out.push((c, y.clone()));
+                }
+                for c in (bsh)(y) {
+                    out.push((x.clone(), c));
+                }
+                out
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check(100, gens::usize_to(1000), |&x| x <= 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn fails_and_shrinks() {
+        check(500, gens::usize_to(1000), |&x| x < 500);
+    }
+
+    #[test]
+    fn shrinks_to_boundary() {
+        // capture the panic message and check the shrunk value is minimal
+        let result = std::panic::catch_unwind(|| {
+            check(500, gens::usize_to(1000), |&x| x < 500);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("string panic"),
+            Ok(_) => panic!("property should fail"),
+        };
+        assert!(msg.contains("500"), "shrunk to boundary: {msg}");
+    }
+
+    #[test]
+    fn vec_strategy_respects_len() {
+        check(200, gens::vec(gens::usize_to(10), 2..=5), |v| {
+            (2..=5).contains(&v.len()) && v.iter().all(|&x| x <= 10)
+        });
+    }
+
+    #[test]
+    fn pair_strategy() {
+        check(
+            100,
+            gens::pair(gens::usize_to(10), gens::i64_in(-5, 5)),
+            |&(a, b)| a <= 10 && (-5..=5).contains(&b),
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! Fixed-size worker pool over std threads + channels (the async substrate;
+//! tokio is unavailable offline).
+//!
+//! Used by the HTTP server (connection handling) and the benchmark harness
+//! (parallel client load generation).  Jobs are boxed closures; `join`
+//! blocks until the queue drains.  Panics in jobs are contained per-worker
+//! and surfaced as a counter rather than poisoning the pool.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    pending: Mutex<usize>,
+    all_done: Condvar,
+    panics: AtomicUsize,
+}
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(0),
+            all_done: Condvar::new(),
+            panics: AtomicUsize::new(0),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("coopt-worker-{i}"))
+                    .spawn(move || worker_loop(rx, shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            shared,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Queue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        {
+            let mut p = self.shared.pending.lock().unwrap();
+            *p += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Block until every queued job has finished.
+    pub fn join(&self) {
+        let mut p = self.shared.pending.lock().unwrap();
+        while *p > 0 {
+            p = self.shared.all_done.wait(p).unwrap();
+        }
+    }
+
+    /// Jobs that panicked so far.
+    pub fn panic_count(&self) -> usize {
+        self.shared.panics.load(Ordering::Relaxed)
+    }
+
+    /// Run a closure over each item of an owned vec in parallel, returning
+    /// results in input order (scoped scatter/gather convenience).
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let r = f(item);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx.iter() {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("job completed")).collect()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>, shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Ok(job) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    shared.panics.fetch_add(1, Ordering::Relaxed);
+                }
+                let mut p = shared.pending.lock().unwrap();
+                *p -= 1;
+                if *p == 0 {
+                    shared.all_done.notify_all();
+                }
+            }
+            Err(_) => return, // sender dropped: shutdown
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn contains_panics() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.execute(|| {});
+        pool.join();
+        assert_eq!(pool.panic_count(), 1);
+        // pool still functional
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        pool.execute(move || {
+            c2.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.join();
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool);
+        assert_eq!(c.load(Ordering::Relaxed), 10);
+    }
+}

@@ -1,0 +1,165 @@
+//! Shared experiment harness used by the Fig. 6/7 bench targets and
+//! EXPERIMENTS.md tooling: run one (model, config) pair over a ShareGPT-sim
+//! trace through the full PJRT engine and collect the paper's metrics.
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, OptConfig};
+use crate::coordinator::{Engine, GenRequest};
+use crate::platform::CostModel;
+use crate::runtime::{Backend, Runtime};
+use crate::util::json::{Object, Value};
+use crate::workload::{sharegpt_trace, TraceSpec};
+
+/// One row of Fig. 6 / Fig. 7.
+#[derive(Debug, Clone)]
+pub struct RunRow {
+    pub model: String,
+    pub config: &'static str,
+    pub requests: usize,
+    pub tokens: u64,
+    /// Eq. 11 totals
+    pub latency_wall_s: f64,
+    pub latency_sim_s: f64,
+    /// Eq. 12
+    pub throughput_wall: f64,
+    pub throughput_sim: f64,
+    pub p99_wall_s: f64,
+    pub coordinator_overhead: f64,
+    pub preemptions: u64,
+    pub pool_blocks: usize,
+}
+
+impl RunRow {
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("model", self.model.as_str());
+        o.insert("config", self.config);
+        o.insert("requests", self.requests);
+        o.insert("tokens", self.tokens as usize);
+        o.insert("latency_wall_s", self.latency_wall_s);
+        o.insert("latency_sim_s", self.latency_sim_s);
+        o.insert("throughput_wall", self.throughput_wall);
+        o.insert("throughput_sim", self.throughput_sim);
+        o.insert("p99_wall_s", self.p99_wall_s);
+        o.insert("coordinator_overhead", self.coordinator_overhead);
+        o.insert("preemptions", self.preemptions as usize);
+        o.insert("pool_blocks", self.pool_blocks);
+        Value::Object(o)
+    }
+}
+
+/// Run `trace` through (model, cfg).  With `capacity_coupled`, the KV pool
+/// is sized from the Z100 memory model for this config (the mechanism
+/// behind the paper's "13B gains more" ordering, DESIGN.md).
+pub fn run_trace(
+    rt: &Runtime,
+    model: &str,
+    cfg: OptConfig,
+    trace_spec: &TraceSpec,
+    capacity_coupled: bool,
+) -> Result<RunRow> {
+    let mrt = rt.load_model(model, cfg)?;
+    let mut geometry = *mrt.geometry();
+    if capacity_coupled {
+        let cm = CostModel::for_preset(mrt.preset(), geometry.block_size);
+        geometry.num_pool_blocks =
+            cm.sim_pool_blocks(&cfg, 12.0, 16, geometry.num_pool_blocks);
+    }
+    let pool_blocks = geometry.num_pool_blocks;
+    // Engine reads geometry through the backend; shadow it via a wrapper.
+    let backend = PoolSized { inner: mrt, geometry };
+    let mut engine = Engine::new(backend, EngineConfig::new(model, cfg));
+
+    for req in sharegpt_trace(trace_spec) {
+        engine.submit(GenRequest {
+            prompt: req.prompt,
+            max_new_tokens: req.max_new_tokens,
+            sampling: req.sampling,
+            // fixed token counts across configs => clean Eq. 11/12 deltas
+            ignore_eos: true,
+        })?;
+    }
+    engine.run_to_completion()?;
+    let m = &mut engine.metrics;
+    Ok(RunRow {
+        model: model.to_string(),
+        config: cfg.name,
+        requests: m.requests_finished as usize,
+        tokens: m.tokens_generated,
+        latency_wall_s: m.total_latency_wall_s(),
+        latency_sim_s: m.total_latency_sim_s(),
+        throughput_wall: m.throughput_wall(),
+        throughput_sim: m.throughput_sim(),
+        p99_wall_s: m.latency_wall.p99(),
+        coordinator_overhead: m.coordinator_overhead_frac(),
+        preemptions: m.preemptions,
+        pool_blocks,
+    })
+}
+
+/// Backend wrapper overriding the advertised cache geometry (pool size).
+struct PoolSized<B: Backend> {
+    inner: B,
+    geometry: crate::config::CacheGeometry,
+}
+
+impl<B: Backend> Backend for PoolSized<B> {
+    fn preset(&self) -> &crate::config::ModelPreset {
+        self.inner.preset()
+    }
+    fn geometry(&self) -> &crate::config::CacheGeometry {
+        &self.geometry
+    }
+    fn opt(&self) -> &OptConfig {
+        self.inner.opt()
+    }
+    fn prefill(&mut self, t: &[i32], l: i32, s: &[i32]) -> Result<Vec<f32>> {
+        self.inner.prefill(t, l, s)
+    }
+    fn decode(
+        &mut self,
+        t: &[i32],
+        p: &[i32],
+        b: &[i32],
+        c: &[i32],
+        s: &[i32],
+    ) -> Result<Vec<f32>> {
+        self.inner.decode(t, p, b, c, s)
+    }
+    fn reset_cache(&mut self) -> Result<()> {
+        self.inner.reset_cache()
+    }
+    fn take_exec_time(&mut self) -> std::time::Duration {
+        self.inner.take_exec_time()
+    }
+}
+
+/// Percentage delta of `new` vs `base` where *lower is better*
+/// (positive = improvement), e.g. Fig. 6 latency reductions.
+pub fn reduction_pct(base: f64, new: f64) -> f64 {
+    if base <= 0.0 {
+        return 0.0;
+    }
+    (base - new) / base * 100.0
+}
+
+/// Percentage delta where *higher is better* (Fig. 7 throughput gains).
+pub fn gain_pct(base: f64, new: f64) -> f64 {
+    if base <= 0.0 {
+        return 0.0;
+    }
+    (new - base) / base * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_helpers() {
+        assert!((reduction_pct(100.0, 94.0) - 6.0).abs() < 1e-9);
+        assert!((gain_pct(100.0, 112.0) - 12.0).abs() < 1e-9);
+        assert_eq!(reduction_pct(0.0, 5.0), 0.0);
+    }
+}

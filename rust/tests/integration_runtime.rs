@@ -1,0 +1,166 @@
+//! Cross-language equivalence: the rust PJRT runtime must reproduce the
+//! python serving path's logits (golden.json, written by `compile.aot`)
+//! for every opt config — this pins L1 (Pallas kernels), L2 (jax model),
+//! the HLO-text interchange, and the runtime's buffer plumbing at once.
+//!
+//! Requires `make artifacts`; tests no-op (with a loud eprintln) otherwise.
+
+use llm_coopt::config::{artifacts_dir, opt_config, ALL_CONFIGS};
+use llm_coopt::runtime::{artifacts_available, Backend, Runtime};
+use llm_coopt::util::json;
+
+fn load_golden() -> Option<json::Value> {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: no artifacts at {}", dir.display());
+        return None;
+    }
+    let text = std::fs::read_to_string(dir.join("golden.json")).ok()?;
+    Some(json::parse(&text).expect("golden.json parses"))
+}
+
+fn as_f32_vec(v: &json::Value) -> Vec<f32> {
+    v.as_array()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[test]
+fn runtime_matches_python_golden_all_configs() {
+    let Some(golden) = load_golden() else { return };
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir).expect("runtime");
+    let model = golden.req_str("model").unwrap();
+    let prompt: Vec<i32> = golden
+        .req_array("prompt_tokens")
+        .unwrap()
+        .iter()
+        .map(|x| x.as_i64().unwrap() as i32)
+        .collect();
+    let g = rt.manifest.geometry;
+    let t = prompt.len();
+
+    for cfg in ALL_CONFIGS {
+        let expected = golden.req("configs").unwrap().req(cfg.name).unwrap();
+        let mut mrt = rt.load_model(model, cfg).expect("load model");
+
+        // --- prefill, mirroring write_golden's slot layout
+        let mut toks = vec![256i32; g.max_seq];
+        toks[..t].copy_from_slice(&prompt);
+        let mut slots = vec![-1i32; g.max_seq];
+        let upto = if cfg.skip_filter { t } else { g.max_seq };
+        for (i, s) in slots.iter_mut().enumerate().take(upto) {
+            *s = i as i32;
+        }
+        let logits = mrt.prefill(&toks, t as i32, &slots).expect("prefill");
+        let vocab = mrt.preset().vocab;
+        let got = &logits[(t - 1) * vocab..t * vocab];
+        let want = as_f32_vec(expected.req("prefill_last").unwrap());
+        let d = max_abs_diff(got, &want);
+        assert!(d < 2e-3, "{}: prefill logits diverge by {d}", cfg.name);
+
+        // --- two decode steps
+        for step in expected.req_array("decode_steps").unwrap() {
+            let tok = step.req_usize("token").unwrap() as i32;
+            let pos = step.req_usize("position").unwrap() as i32;
+            let mut token_ids = vec![256i32; g.max_batch];
+            token_ids[0] = tok;
+            let mut positions = vec![0i32; g.max_batch];
+            positions[0] = pos;
+            let mut ctx = vec![0i32; g.max_batch];
+            ctx[0] = pos + 1;
+            let mut sm = vec![-1i32; g.max_batch];
+            sm[0] = pos;
+            let mut bt = vec![0i32; g.max_batch * g.max_blocks];
+            for (i, b) in bt.iter_mut().enumerate().take(g.max_blocks) {
+                *b = i as i32;
+            }
+            let logits = mrt
+                .decode(&token_ids, &positions, &bt, &ctx, &sm)
+                .expect("decode");
+            let got = &logits[..vocab];
+            let want = as_f32_vec(step.req("logits").unwrap());
+            let d = max_abs_diff(got, &want);
+            assert!(d < 2e-3, "{}: decode@{pos} diverges by {d}", cfg.name);
+        }
+        println!("config {} matches golden", cfg.name);
+    }
+}
+
+#[test]
+fn cache_reset_restores_initial_state() {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = opt_config("coopt").unwrap();
+    let mut mrt = rt.load_model("llama-7b-sim", cfg).unwrap();
+    let g = rt.manifest.geometry;
+
+    let mut toks = vec![256i32; g.max_seq];
+    for (i, tk) in toks.iter_mut().enumerate().take(8) {
+        *tk = 65 + i as i32;
+    }
+    let mut slots = vec![-1i32; g.max_seq];
+    for (i, s) in slots.iter_mut().enumerate().take(8) {
+        *s = i as i32;
+    }
+    let a = mrt.prefill(&toks, 8, &slots).unwrap();
+    mrt.reset_cache().unwrap();
+    let b = mrt.prefill(&toks, 8, &slots).unwrap();
+    assert_eq!(a, b, "prefill after reset must be identical");
+}
+
+#[test]
+fn decode_is_deterministic_given_cache_state() {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let cfg = opt_config("original").unwrap();
+    let mut mrt = rt.load_model("llama-7b-sim", cfg).unwrap();
+    let g = rt.manifest.geometry;
+
+    let mut toks = vec![256i32; g.max_seq];
+    toks[0] = 100;
+    toks[1] = 101;
+    let mut slots = vec![-1i32; g.max_seq];
+    // original writes padded positions too
+    for (i, s) in slots.iter_mut().enumerate() {
+        *s = i as i32;
+    }
+    mrt.prefill(&toks, 2, &slots).unwrap();
+
+    // same decode twice from the same cache state: the second call rewrites
+    // the same slot with the same value, so logits must repeat
+    let mut token_ids = vec![256i32; g.max_batch];
+    token_ids[0] = 102;
+    let mut positions = vec![0i32; g.max_batch];
+    positions[0] = 2;
+    let mut ctx = vec![0i32; g.max_batch];
+    ctx[0] = 3;
+    let mut sm = vec![-1i32; g.max_batch];
+    sm[0] = 2;
+    let mut bt = vec![0i32; g.max_batch * g.max_blocks];
+    for (i, b) in bt.iter_mut().enumerate().take(g.max_blocks) {
+        *b = i as i32;
+    }
+    let l1 = mrt.decode(&token_ids, &positions, &bt, &ctx, &sm).unwrap();
+    let l2 = mrt.decode(&token_ids, &positions, &bt, &ctx, &sm).unwrap();
+    assert_eq!(l1, l2);
+    let vocab = mrt.preset().vocab;
+    assert!(l1[..vocab].iter().all(|x| x.is_finite()));
+}

@@ -1,0 +1,63 @@
+//! HTTP server over the real PJRT engine: end-to-end request -> tokens ->
+//! JSON response, plus concurrent batched clients.  SKIPs without artifacts.
+
+use std::sync::atomic::Ordering;
+
+use llm_coopt::config::{artifacts_dir, EngineConfig, COOPT};
+use llm_coopt::coordinator::Engine;
+use llm_coopt::runtime::{artifacts_available, Runtime};
+use llm_coopt::server::{Client, EngineHandle, Server};
+use llm_coopt::util::threadpool::ThreadPool;
+
+#[test]
+fn http_serving_end_to_end() {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: no artifacts at {}", dir.display());
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let mrt = rt.load_model("llama-7b-sim", COOPT).unwrap();
+    let engine = Engine::new(mrt, EngineConfig::new("llama-7b-sim", COOPT));
+    let handle = EngineHandle::spawn(engine);
+    let server = Server::bind("127.0.0.1:0", handle, 4).unwrap();
+    let addr = server.addr.to_string();
+    let stop = server.stop_flag();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    // health
+    let client = Client::new(addr.clone());
+    let (code, v) = client.get("/health").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(v.req_str("status").unwrap(), "ok");
+
+    // single generation (trained models may stop early at EOS)
+    let v = client.generate("Q: 1+2=? Answer:", 4).unwrap();
+    let got = v.req_usize("generated_tokens").unwrap();
+    assert!((1..=4).contains(&got), "generated {got}");
+    assert!(v.req_f64("latency_s").unwrap() > 0.0);
+    assert!(v.req_f64("sim_time_s").unwrap() > 0.0);
+
+    // concurrent clients batch inside the engine
+    let pool = ThreadPool::new(4);
+    let addr2 = addr.clone();
+    let counts = pool.map((0..4).collect::<Vec<u32>>(), move |i| {
+        Client::new(addr2.clone())
+            .generate(&format!("Q: {i}+{i}=? Answer:"), 3)
+            .map(|v| v.req_usize("generated_tokens").unwrap())
+    });
+    let mut total = got;
+    for c in counts {
+        let n = c.unwrap();
+        assert!((1..=3).contains(&n), "generated {n}");
+        total += n;
+    }
+
+    // metrics reflect the traffic
+    let (code, m) = client.get("/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert!(m.req_usize("tokens_generated").unwrap() >= total);
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().unwrap();
+}

@@ -1,0 +1,172 @@
+//! Property tests on the coordinator/cache/scheduler invariants (the
+//! quickprop substrate replaces proptest — DESIGN.md).
+//!
+//! Invariants checked on randomized workloads (prompt lengths, max-new
+//! counts, pool sizes):
+//!   1. conservation: every allocated block is freed by the end;
+//!   2. no sequence loses tokens: generated == requested unless a finite
+//!      finish reason says otherwise;
+//!   3. slot mappings never collide between live sequences within a step
+//!      (checked by the mock backend's contract);
+//!   4. admission never exceeds the pool;
+//!   5. fairness: FCFS — a request never finishes after one submitted
+//!      later with an identical profile, under serial admission.
+
+use llm_coopt::config::{CacheGeometry, EngineConfig, COOPT, ORIGINAL};
+use llm_coopt::coordinator::{Engine, FinishReason, GenRequest};
+use llm_coopt::kvcache::CacheManager;
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::util::quickprop::{check, gens};
+use llm_coopt::util::rng::Rng;
+
+#[test]
+fn engine_conserves_blocks_and_tokens() {
+    check(
+        60,
+        gens::vec(gens::usize_to(30), 1..=10),
+        |profile: &Vec<usize>| {
+            let geometry = CacheGeometry {
+                block_size: 4,
+                max_blocks: 16,
+                num_pool_blocks: 24,
+                max_batch: 4,
+                max_seq: 48,
+            };
+            let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+            let mut e = Engine::new(be, EngineConfig::new("llama-7b-sim", COOPT))
+                .without_cost_model();
+            for (i, &p) in profile.iter().enumerate() {
+                let prompt = format!("{}{}", i, "p".repeat(p.max(1)));
+                let max_new = 1 + p % 7;
+                if e.submit(GenRequest::greedy(prompt, max_new)).is_err() {
+                    return true; // oversized prompt rejected is fine
+                }
+            }
+            let results = match e.run_to_completion() {
+                Ok(r) => r,
+                Err(_) => return false,
+            };
+            if results.len() != profile.len() {
+                return false;
+            }
+            for r in &results {
+                let ok = match r.finish {
+                    FinishReason::MaxNewTokens => r.generated_tokens >= 1,
+                    FinishReason::Eos
+                    | FinishReason::MaxContext
+                    | FinishReason::PreemptOverflow => true,
+                };
+                if !ok {
+                    return false;
+                }
+            }
+            e.cache_stats().blocks_used == 0
+        },
+    );
+}
+
+#[test]
+fn cache_manager_never_leaks_under_random_ops() {
+    check(
+        80,
+        gens::vec(gens::usize_to(9), 1..=40),
+        |ops: &Vec<usize>| {
+            let mut cm = CacheManager::new(CacheGeometry {
+                block_size: 4,
+                max_blocks: 8,
+                num_pool_blocks: 16,
+                max_batch: 4,
+                max_seq: 16,
+            });
+            let mut rng = Rng::new(ops.len() as u64);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next = 1u64;
+            for &op in ops {
+                match op % 3 {
+                    0 => {
+                        // admit
+                        let len = 1 + op % 12;
+                        let prompt: Vec<u32> =
+                            (0..len).map(|_| rng.below(200) as u32).collect();
+                        if cm.can_admit(prompt.len(), &COOPT)
+                            && cm.prefill(next, &prompt, &COOPT).is_ok()
+                        {
+                            live.push(next);
+                            next += 1;
+                        }
+                    }
+                    1 => {
+                        // decode-append on a random live seq
+                        if !live.is_empty() {
+                            let id = live[rng.below(live.len())];
+                            let _ = cm.append_token(id);
+                        }
+                    }
+                    _ => {
+                        // free a random live seq
+                        if !live.is_empty() {
+                            let id = live.swap_remove(rng.below(live.len()));
+                            cm.free_seq(id);
+                        }
+                    }
+                }
+                // invariant: used blocks always within pool bounds
+                let st = cm.stats();
+                if st.blocks_used > st.blocks_total {
+                    return false;
+                }
+            }
+            for id in live.drain(..) {
+                cm.free_seq(id);
+            }
+            cm.stats().blocks_used == 0
+        },
+    );
+}
+
+#[test]
+fn fcfs_completion_order_for_identical_requests() {
+    check(30, gens::usize_to(6), |&n: &usize| {
+        let be = MockBackend::new().with_opt(COOPT);
+        let mut e =
+            Engine::new(be, EngineConfig::new("llama-7b-sim", COOPT)).without_cost_model();
+        let k = 2 + n;
+        for i in 0..k {
+            e.submit(GenRequest::greedy(format!("same prompt {i}"), 4))
+                .unwrap();
+        }
+        let results = e.run_to_completion().unwrap();
+        // identical profiles => ids finish in submission order
+        let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort();
+        ids == sorted
+    });
+}
+
+#[test]
+fn baseline_padding_always_costs_more_blocks() {
+    check(
+        60,
+        gens::pair(gens::usize_to(14), gens::usize_to(1000)),
+        |&(len, seed): &(usize, usize)| {
+            let geometry = CacheGeometry {
+                block_size: 4,
+                max_blocks: 8,
+                num_pool_blocks: 32,
+                max_batch: 4,
+                max_seq: 16,
+            };
+            let mut rng = Rng::new(seed as u64);
+            let prompt: Vec<u32> = (0..len.max(1)).map(|_| rng.below(200) as u32).collect();
+            let mut orig = CacheManager::new(geometry);
+            let mut coopt = CacheManager::new(geometry);
+            let po = orig.prefill(1, &prompt, &ORIGINAL).unwrap();
+            let pc = coopt.prefill(1, &prompt, &COOPT).unwrap();
+            // Eq. 2/5: baseline writes every padded slot, Opt-KV only real ones
+            po.written == geometry.max_seq
+                && pc.written == prompt.len()
+                && orig.stats().blocks_used >= coopt.stats().blocks_used
+        },
+    );
+}
