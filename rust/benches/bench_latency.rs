@@ -8,16 +8,52 @@
 //! We reproduce the *shape* (CoOpt always wins, cuts cluster mid-single-
 //! digit %, 13B-class >= 7B-class); absolutes depend on the Z100 model.
 //!
+//! Also reports the **chunked prefill** (Opt-Pa step 1) latency deltas on
+//! the deterministic mock + Z100 model (runs without artifacts): p50/p95
+//! decode inter-token latency with chunking on vs off, chunk counts, and
+//! inter-chunk stall — the paper's long-prompt mixed-batch scenario.
+//!
 //! Run: cargo bench --bench bench_latency
 
 use llm_coopt::config::{artifacts_dir, ALL_CONFIGS};
 use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
-use llm_coopt::workload::harness::{reduction_pct, run_trace};
+use llm_coopt::workload::harness::{reduction_pct, run_chunk_compare, run_trace};
 use llm_coopt::workload::TraceSpec;
 
 fn main() -> anyhow::Result<()> {
+    // --- chunked prefill: decode inter-token latency, mock + Z100 model
+    println!("chunked prefill — p95 decode inter-token latency (sim), 4 streams + 3 long prompts");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>8} {:>12}",
+        "mode", "p50 itl(s)", "p95 itl(s)", "max itl(s)", "chunks", "stall(s)"
+    );
+    let rows = run_chunk_compare(16, 3, 4, 24)?;
+    let mut chunk_report = Vec::new();
+    for r in &rows {
+        println!(
+            "{:<10} {:>12.4} {:>12.4} {:>12.4} {:>8} {:>12.4}",
+            r.mode, r.itl_sim_p50_s, r.itl_sim_p95_s, r.itl_sim_max_s, r.prefill_chunks,
+            r.chunk_stall_sim_s
+        );
+        chunk_report.push(r.to_json());
+    }
+    if let [one, chk] = &rows[..] {
+        println!(
+            "p95 itl reduction with chunking: {:.1}%\n",
+            reduction_pct(one.itl_sim_p95_s, chk.itl_sim_p95_s)
+        );
+    }
+    std::fs::create_dir_all("target/bench-reports")?;
+    let mut chunk_top = Object::new();
+    chunk_top.insert("figure", "chunked-prefill-latency");
+    chunk_top.insert("rows", Value::Array(chunk_report));
+    std::fs::write(
+        "target/bench-reports/chunked_prefill_latency.json",
+        Value::Object(chunk_top).to_string_pretty(),
+    )?;
+
     let dir = artifacts_dir();
     if !artifacts_available(&dir) {
         eprintln!("SKIP fig6: run `make artifacts` first");

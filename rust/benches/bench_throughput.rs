@@ -7,16 +7,52 @@
 //! Key shape: 13B-class gains ~2x the 7B-class (memory-capacity coupling;
 //! DESIGN.md), CoOpt >= each individual optimization.
 //!
+//! Also reports the **chunked prefill** (Opt-Pa step 1) throughput deltas
+//! on the deterministic mock + Z100 model (runs without artifacts): Eq. 12
+//! generation throughput with chunking on vs off under the long-prompt
+//! mixed-batch scenario, with chunk counts and inter-chunk stall.
+//!
 //! Run: cargo bench --bench bench_throughput
 
 use llm_coopt::config::{artifacts_dir, ALL_CONFIGS};
 use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
-use llm_coopt::workload::harness::{gain_pct, run_trace};
+use llm_coopt::workload::harness::{gain_pct, run_chunk_compare, run_trace};
 use llm_coopt::workload::TraceSpec;
 
 fn main() -> anyhow::Result<()> {
+    // --- chunked prefill: Eq. 12 throughput, mock + Z100 model
+    println!("chunked prefill — generation throughput (sim), 4 streams + 3 long prompts");
+    println!(
+        "{:<10} {:>14} {:>14} {:>8} {:>10} {:>12}",
+        "mode", "sim tok/s", "total lat(s)", "chunks", "tokens", "stall(s)"
+    );
+    let rows = run_chunk_compare(16, 3, 4, 24)?;
+    let mut chunk_report = Vec::new();
+    for r in &rows {
+        println!(
+            "{:<10} {:>12.1}/s {:>14.4} {:>8} {:>10} {:>12.4}",
+            r.mode, r.throughput_sim, r.latency_sim_s, r.prefill_chunks, r.tokens,
+            r.chunk_stall_sim_s
+        );
+        chunk_report.push(r.to_json());
+    }
+    if let [one, chk] = &rows[..] {
+        println!(
+            "throughput delta with chunking: {:+.1}%\n",
+            gain_pct(one.throughput_sim, chk.throughput_sim)
+        );
+    }
+    std::fs::create_dir_all("target/bench-reports")?;
+    let mut chunk_top = Object::new();
+    chunk_top.insert("figure", "chunked-prefill-throughput");
+    chunk_top.insert("rows", Value::Array(chunk_report));
+    std::fs::write(
+        "target/bench-reports/chunked_prefill_throughput.json",
+        Value::Object(chunk_top).to_string_pretty(),
+    )?;
+
     let dir = artifacts_dir();
     if !artifacts_available(&dir) {
         eprintln!("SKIP fig7: run `make artifacts` first");

@@ -25,6 +25,12 @@ pub struct OptConfig {
     pub gqa: bool,
     /// Opt-Pa: valid-block-only attention loop (Eq. 9)
     pub valid_only: bool,
+    /// Opt-Pa step 1 (segmentation): serve prefill in bounded chunks
+    /// interleaved with the decode batch.  Orthogonal to the kernel
+    /// configs — the five named configs keep it off so the AOT graph set
+    /// is unchanged; engines enable it per-deployment via
+    /// [`EngineConfig::with_chunked_prefill`].
+    pub chunked_prefill: bool,
 }
 
 pub const ORIGINAL: OptConfig = OptConfig {
@@ -33,6 +39,7 @@ pub const ORIGINAL: OptConfig = OptConfig {
     skip_filter: false,
     gqa: false,
     valid_only: false,
+    chunked_prefill: false,
 };
 pub const OPTKV: OptConfig = OptConfig {
     name: "optkv",
@@ -40,6 +47,7 @@ pub const OPTKV: OptConfig = OptConfig {
     skip_filter: true,
     gqa: false,
     valid_only: false,
+    chunked_prefill: false,
 };
 pub const OPTGQA: OptConfig = OptConfig {
     name: "optgqa",
@@ -47,6 +55,7 @@ pub const OPTGQA: OptConfig = OptConfig {
     skip_filter: false,
     gqa: true,
     valid_only: false,
+    chunked_prefill: false,
 };
 pub const OPTPA: OptConfig = OptConfig {
     name: "optpa",
@@ -54,6 +63,7 @@ pub const OPTPA: OptConfig = OptConfig {
     skip_filter: false,
     gqa: false,
     valid_only: true,
+    chunked_prefill: false,
 };
 pub const COOPT: OptConfig = OptConfig {
     name: "coopt",
@@ -61,6 +71,7 @@ pub const COOPT: OptConfig = OptConfig {
     skip_filter: true,
     gqa: true,
     valid_only: true,
+    chunked_prefill: false,
 };
 
 pub const ALL_CONFIGS: [OptConfig; 5] = [ORIGINAL, OPTKV, OPTGQA, OPTPA, COOPT];
@@ -189,8 +200,16 @@ pub struct EngineConfig {
     pub opt: OptConfig,
     /// max sequences decoded together (<= manifest max_batch)
     pub max_batch: usize,
-    /// scheduler token budget per scheduling round (prefill admission)
+    /// shared per-step token budget: decode slots plus prefill tokens
+    /// committed in one scheduling round.  One-shot mode additionally
+    /// refuses to admit prompts longer than this; chunked mode splits
+    /// them instead.
     pub max_prefill_tokens: usize,
+    /// Opt-Pa step 1: segment prefill into chunks and interleave them
+    /// with decode batches (bounds decode inter-token stalls)
+    pub chunked_prefill: bool,
+    /// per-chunk token cap when `chunked_prefill` is on
+    pub prefill_chunk_tokens: usize,
     /// default sampling params
     pub max_new_tokens: usize,
     pub temperature: f64,
@@ -206,12 +225,27 @@ impl EngineConfig {
             opt,
             max_batch: 8,
             max_prefill_tokens: 256,
+            chunked_prefill: opt.chunked_prefill,
+            prefill_chunk_tokens: 32,
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: 0,
             top_p: 1.0,
             seed: 0,
         }
+    }
+
+    /// Enable chunked prefill with a per-chunk token cap.
+    pub fn with_chunked_prefill(mut self, chunk_tokens: usize) -> Self {
+        self.chunked_prefill = true;
+        self.prefill_chunk_tokens = chunk_tokens.max(1);
+        self
+    }
+
+    /// Override the shared per-step token budget.
+    pub fn with_step_budget(mut self, tokens: usize) -> Self {
+        self.max_prefill_tokens = tokens.max(1);
+        self
     }
 }
 
@@ -448,6 +482,24 @@ mod tests {
         // optpa only flips the block loop
         let pa = opt_config("optpa").unwrap();
         assert!(pa.valid_only && !pa.fp8_kv && !pa.gqa && !pa.skip_filter);
+    }
+
+    #[test]
+    fn chunked_prefill_knobs() {
+        // the named configs keep chunking off (graph set unchanged)...
+        for c in ALL_CONFIGS {
+            assert!(!c.chunked_prefill, "{}", c.name);
+        }
+        // ...and engines opt in per-deployment
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        assert!(!cfg.chunked_prefill);
+        let cfg = cfg.with_chunked_prefill(16).with_step_budget(48);
+        assert!(cfg.chunked_prefill);
+        assert_eq!(cfg.prefill_chunk_tokens, 16);
+        assert_eq!(cfg.max_prefill_tokens, 48);
+        // degenerate values are clamped to something runnable
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_chunked_prefill(0);
+        assert_eq!(cfg.prefill_chunk_tokens, 1);
     }
 
     #[test]

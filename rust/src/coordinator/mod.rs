@@ -3,16 +3,27 @@
 //!
 //! This is the L3 request path.  Per [`Engine::step`]:
 //!
-//! 1. ask the [`Scheduler`] for a round plan (one prefill + the decode
-//!    batch) subject to [`CacheManager`] admission;
-//! 2. commit the prefill: allocate blocks, build the padded slot mapping
-//!    (the **SkipSet** of Eq. 5 materializes here as -1 slots under
-//!    `skip_filter` configs), run the prefill graph, sample token 0;
+//! 1. ask the [`Scheduler`] for a round plan — a list of prefill windows
+//!    plus the decode batch, under a shared per-step token budget —
+//!    subject to [`CacheManager`] admission;
+//! 2. commit each prefill window (**chunked prefill**, Opt-Pa step 1):
+//!    allocate the window's blocks and build the padded slot mapping (the
+//!    **SkipSet** of Eq. 5 materializes here as -1 slots under
+//!    `skip_filter` configs; committed earlier windows stay -1 too), run
+//!    the prefill graph over the window, and sample token 0 only on the
+//!    *final* window of a prompt.  One-shot mode is the single-window
+//!    case.  A window that cannot get blocks preempts by recompute or is
+//!    retried from its committed offset on a later round;
 //! 3. commit the decode batch: reserve one slot per running sequence
 //!    (preempting by recompute when the pool is exhausted), build padded
-//!    decode inputs, run the decode graph, sample, advance, finish;
+//!    decode inputs, run the decode graph, sample, advance, finish.
+//!    Decodes are reserved out of the step budget before prefill windows,
+//!    so chunked prefill bounds decode inter-token stalls instead of
+//!    monopolizing steps;
 //! 4. account wallclock (PJRT vs coordinator) and simulated Z100 time
-//!    (platform model) for the paper's Eq. 11/12 metrics.
+//!    (platform model) for the paper's Eq. 11/12 metrics, plus per-chunk
+//!    accounting (chunk count, inter-chunk stall, simulated decode
+//!    inter-token latency) for the Fig. 6/7-style chunking deltas.
 //!
 //! The engine is generic over [`Backend`] so the whole L3 logic is unit-
 //! tested against the contract-checking mock without artifacts.
@@ -20,7 +31,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::config::EngineConfig;
 use crate::kvcache::{CacheManager, SeqId};
@@ -28,7 +39,7 @@ use crate::metrics::{EngineMetrics, RequestMetrics};
 use crate::platform::{CostModel, SeqCostInput};
 use crate::runtime::Backend;
 use crate::sampling::{sample, SamplingParams};
-use crate::scheduler::Scheduler;
+use crate::scheduler::{PrefillWork, Scheduler};
 use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
 use crate::util::rng::Rng;
 
@@ -89,6 +100,9 @@ struct Sequence {
     ignore_eos: bool,
     metrics: RequestMetrics,
     finish: Option<FinishReason>,
+    /// simulated clock when this sequence's last prefill chunk finished
+    /// (drives the inter-chunk stall metric)
+    last_chunk_sim_t: Option<f64>,
 }
 
 impl Sequence {
@@ -110,10 +124,14 @@ pub struct Engine<B: Backend> {
     next_id: SeqId,
     pub cfg: EngineConfig,
     finished: Vec<GenResult>,
+    /// simulated prefill time accumulated inside the current step (feeds
+    /// the decode inter-token latency samples: a decode that waited for a
+    /// prefill window pays for it)
+    step_prefill_sim_s: f64,
 }
 
 impl<B: Backend> Engine<B> {
-    pub fn new(backend: B, cfg: EngineConfig) -> Self {
+    pub fn new(backend: B, mut cfg: EngineConfig) -> Self {
         let geometry = *backend.geometry();
         let max_batch = cfg.max_batch.min(geometry.max_batch);
         // engine contexts are sim-scale; map them to the paper's ShareGPT
@@ -121,9 +139,25 @@ impl<B: Backend> Engine<B> {
         let cost = Some(
             CostModel::for_preset(backend.preset(), geometry.block_size).with_ctx_scale(8.0),
         );
+        if cfg.chunked_prefill && !backend.supports_chunked_prefill() {
+            // a mid-prompt window would fail on every retry and wedge the
+            // serving loop; degrade to one-shot prefill instead
+            crate::log_warn!(
+                "backend lacks a chunked prefill graph; falling back to one-shot prefill"
+            );
+            cfg.chunked_prefill = false;
+        }
+        // budget at least one above the decode batch, so a full decode
+        // round always leaves room for one prefill window (no starvation,
+        // and the shared-budget invariant stays strict)
+        let mut sched =
+            Scheduler::new(max_batch).with_step_budget(cfg.max_prefill_tokens.max(max_batch + 1));
+        if cfg.chunked_prefill {
+            sched = sched.with_chunked_prefill(cfg.prefill_chunk_tokens);
+        }
         Engine {
             cache: CacheManager::new(geometry),
-            sched: Scheduler::new(max_batch),
+            sched,
             seqs: HashMap::new(),
             cost,
             metrics: EngineMetrics::new(),
@@ -133,6 +167,7 @@ impl<B: Backend> Engine<B> {
             cfg,
             backend,
             finished: Vec::new(),
+            step_prefill_sim_s: 0.0,
         }
     }
 
@@ -196,6 +231,7 @@ impl<B: Backend> Engine<B> {
                     sim_time_s: 0.0,
                 },
                 finish: None,
+                last_chunk_sim_t: None,
             },
         );
         self.sched.submit(id, prompt_len);
@@ -207,10 +243,11 @@ impl<B: Backend> Engine<B> {
     pub fn step(&mut self) -> Result<Vec<GenResult>> {
         let round_t0 = Instant::now();
         let backend_wall_before = self.metrics.wall_prefill_s + self.metrics.wall_decode_s;
+        self.step_prefill_sim_s = 0.0;
         let decision = self.sched.schedule(&self.cache, self.backend.opt());
 
-        if let Some(id) = decision.prefill {
-            self.run_prefill(id)?;
+        for work in decision.prefills.iter().copied() {
+            self.run_prefill_work(work)?;
         }
 
         let decodes: Vec<SeqId> = decision
@@ -218,17 +255,27 @@ impl<B: Backend> Engine<B> {
             .iter()
             .copied()
             .filter(|id| self.seqs.get(id).map(|s| s.finish.is_none()).unwrap_or(false))
+            // a prefill window above may have preempted a planned decode;
+            // its cache state is gone until re-admission
+            .filter(|id| self.cache.has_seq(*id))
             .collect();
         if !decodes.is_empty() {
             self.run_decode(&decodes)?;
-        } else if decision.prefill.is_none() && !self.sched.is_idle() {
+        } else if decision.prefills.is_empty() && !self.sched.is_idle() {
             // nothing runnable but work pending: the front request cannot be
             // admitted; make room or fail loudly
             if self.sched.num_running() == 0 {
                 bail!(
-                    "stuck: {} waiting requests but no admission possible (pool {} free blocks)",
+                    "stuck: {} waiting requests but no admission possible \
+                     (pool {} free blocks, step budget {} tokens{})",
                     self.sched.num_waiting(),
-                    self.cache.num_free_blocks()
+                    self.cache.num_free_blocks(),
+                    self.cfg.max_prefill_tokens,
+                    if self.cfg.chunked_prefill {
+                        ", chunked"
+                    } else {
+                        "; long prompts need chunked_prefill"
+                    }
                 );
             }
         }
@@ -298,58 +345,130 @@ impl<B: Backend> Engine<B> {
 
     // -----------------------------------------------------------------------
 
-    fn run_prefill(&mut self, id: SeqId) -> Result<()> {
+    /// Commit one prefill window: cache blocks + slot mapping, the
+    /// backend pass over the window, chunk accounting, and — on the final
+    /// window only — sampling of the first generated token.  One-shot
+    /// prefill is the `offset == 0, is_final` case.
+    fn run_prefill_work(&mut self, work: PrefillWork) -> Result<()> {
         let opt = *self.backend.opt();
         let geometry = *self.backend.geometry();
         let max_seq = geometry.max_seq;
+        let id = work.id;
 
-        let seq = self
-            .seqs
-            .get(&id)
-            .ok_or_else(|| anyhow!("prefill of unknown sequence {id}"))?;
+        let Some(seq) = self.seqs.get(&id) else {
+            // finished earlier in this round
+            return Ok(());
+        };
+        if seq.finish.is_some() {
+            return Ok(());
+        }
+        if self.sched.prefill_progress(id).is_none() {
+            // preempted out of the running set by an earlier window's
+            // recompute this round; committing now would leave cache state
+            // behind a waiting sequence and poison its re-admission
+            return Ok(());
+        }
         let tokens = seq.tokens.clone();
-        if tokens.len() > max_seq {
+        let end = work.offset + work.tokens;
+        if tokens.len() > max_seq || end > max_seq {
             // can happen after preemption if the prefix outgrew the graph
             self.finish_seq(id, FinishReason::PreemptOverflow);
             return Ok(());
         }
+        if end > tokens.len() {
+            bail!(
+                "prefill window [{}, {end}) beyond sequence {id} of {} tokens",
+                work.offset,
+                tokens.len()
+            );
+        }
+        let is_final = end == tokens.len();
 
-        let allocs_before = self.cache.stats().blocks_used;
-        let plan = self.cache.prefill(id, &tokens, &opt)?;
-        let new_blocks = self.cache.stats().blocks_used - allocs_before;
+        // commit the window, preempting by recompute on pool exhaustion
+        // (mirrors the decode path); preempting *ourselves* drops the
+        // committed prefix and the sequence re-prefills from offset 0 on
+        // a later round
+        let plan = loop {
+            match self
+                .cache
+                .prefill_chunk(id, &tokens, work.offset, work.tokens, &opt, is_final)
+            {
+                Ok(p) => break p,
+                Err(_) => {
+                    let seqs = &self.seqs;
+                    let victim = self
+                        .sched
+                        .preempt_latest(|v| seqs.get(&v).map(|s| s.tokens.len()).unwrap_or(0));
+                    match victim {
+                        Some(v) if v != id => {
+                            self.preempt_free(v);
+                        }
+                        Some(v) => {
+                            self.preempt_free(v);
+                            return Ok(());
+                        }
+                        None => bail!(
+                            "stuck: prefill window of sequence {id} cannot get KV blocks \
+                             (pool {} free)",
+                            self.cache.num_free_blocks()
+                        ),
+                    }
+                }
+            }
+        };
+        self.sched.record_prefill_progress(id, work.tokens);
 
         let mut padded = vec![PAD_ID as i32; max_seq];
-        for (i, &t) in tokens.iter().enumerate() {
+        for (i, &t) in tokens.iter().take(end).enumerate() {
             padded[i] = t as i32;
         }
         let t0 = Instant::now();
-        let logits = self
-            .backend
-            .prefill(&padded, tokens.len() as i32, &plan.slot_mapping)?;
+        let logits = self.backend.prefill_chunk(
+            &padded,
+            work.offset as i32,
+            work.tokens as i32,
+            &plan.slot_mapping,
+        )?;
         self.metrics.wall_prefill_s += t0.elapsed().as_secs_f64();
         self.metrics.prefill_steps += 1;
+        let chunked = self.cfg.chunked_prefill;
+        if chunked {
+            self.metrics.prefill_chunks += 1;
+        }
 
         let sim_s = self.cost.as_ref().map(|cm| {
-            let c = cm.prefill(tokens.len(), &opt);
-            let _ = new_blocks; // allocator penalty folded into prefill cost
-            c.total_s
+            if chunked {
+                cm.prefill_chunk(work.tokens, work.offset, &opt).total_s
+            } else {
+                cm.prefill(tokens.len(), &opt).total_s
+            }
         });
+        // simulated clock before this window lands (for the inter-chunk
+        // stall metric below)
+        let sim_before = self.metrics.sim_prefill_s + self.metrics.sim_decode_s;
         if let Some(s) = sim_s {
             self.metrics.sim_prefill_s += s;
+            self.step_prefill_sim_s += s;
         }
 
         // sample the first generated token from the last prompt position
         let vocab = self.backend.preset().vocab;
-        let at = (tokens.len() - 1) * vocab;
         let seq = self.seqs.get_mut(&id).unwrap();
+        if let Some(prev) = seq.last_chunk_sim_t {
+            self.metrics.chunk_stall_s += (sim_before - prev).max(0.0);
+        }
+        seq.last_chunk_sim_t = Some(sim_before + sim_s.unwrap_or(0.0));
         if let Some(s) = sim_s {
             seq.metrics.sim_time_s += s;
         }
-        let tok = sample(&logits[at..at + vocab], &seq.sampling, &mut self.rng);
-        seq.metrics.first_token = Some(Instant::now());
-        seq.tokens.push(tok);
-        seq.metrics.generated_tokens = seq.generated();
-        self.check_finish(id, tok);
+        if is_final {
+            let at = (end - 1) * vocab;
+            let tok = sample(&logits[at..at + vocab], &seq.sampling, &mut self.rng);
+            seq.metrics.first_token = Some(Instant::now());
+            seq.tokens.push(tok);
+            seq.metrics.generated_tokens = seq.generated();
+            self.check_finish(id, tok);
+        }
         Ok(())
     }
 
@@ -389,17 +508,15 @@ impl<B: Backend> Engine<B> {
                             .preempt_latest(|v| seqs.get(&v).map(|s| s.tokens.len()).unwrap_or(0));
                         match victim {
                             Some(v) if v != id => {
-                                self.cache.free_seq(v);
+                                self.preempt_free(v);
                                 preempted_now.push(v);
-                                self.metrics.preemptions += 1;
                                 continue;
                             }
                             _ => {
                                 // preempting ourselves or nothing to preempt
                                 if let Some(v) = victim {
-                                    self.cache.free_seq(v);
+                                    self.preempt_free(v);
                                     preempted_now.push(v);
-                                    self.metrics.preemptions += 1;
                                 }
                                 break;
                             }
@@ -454,6 +571,13 @@ impl<B: Backend> Engine<B> {
         });
         if let Some(s) = sim_s {
             self.metrics.sim_decode_s += s;
+            // decode inter-token latency on the simulated clock: each
+            // active sequence waited for this step's prefill windows too —
+            // the stall chunked prefill exists to bound
+            let itl = self.step_prefill_sim_s + s;
+            for _ in 0..active.len() {
+                self.metrics.itl_sim.add(itl);
+            }
         }
 
         // 4. sample + advance
@@ -471,6 +595,18 @@ impl<B: Backend> Engine<B> {
             self.check_finish(id, tok);
         }
         Ok(())
+    }
+
+    /// Recompute-preemption bookkeeping for a victim the scheduler just
+    /// moved back to waiting: free its cache blocks and reset its chunk
+    /// clock so `chunk_stall_s` never counts the requeue span as an
+    /// inter-window stall.
+    fn preempt_free(&mut self, victim: SeqId) {
+        self.cache.free_seq(victim);
+        if let Some(seq) = self.seqs.get_mut(&victim) {
+            seq.last_chunk_sim_t = None;
+        }
+        self.metrics.preemptions += 1;
     }
 
     fn check_finish(&mut self, id: SeqId, last_token: u32) {
@@ -665,6 +801,126 @@ mod tests {
         let mut e = engine(COOPT);
         let huge = "z".repeat(4000);
         assert!(e.submit(GenRequest::greedy(huge, 4)).is_err());
+    }
+
+    fn chunked_engine(chunk: usize, budget: usize) -> Engine<MockBackend> {
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_chunked_prefill(chunk)
+            .with_step_budget(budget);
+        Engine::new(be, cfg)
+    }
+
+    #[test]
+    fn chunked_prefill_spans_steps_and_defers_sampling() {
+        // 40-token prompt, 16-token chunks (= block size): three windows
+        let mut e = chunked_engine(16, 64);
+        let toks: Vec<u32> = (1..=40).collect();
+        let id = e
+            .submit_tokens(toks, 4, SamplingParams::default(), false)
+            .unwrap();
+        let results = e.run_to_completion().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].id, id);
+        assert_eq!(results[0].generated_tokens, 4);
+        assert_eq!(
+            e.backend.chunk_trace,
+            vec![(0, 16), (16, 16), (32, 8)],
+            "windows resume from the committed offset"
+        );
+        assert_eq!(e.metrics.prefill_chunks, 3);
+        assert!(e.metrics.chunk_stall_s >= 0.0);
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn chunked_greedy_output_matches_oneshot() {
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest::greedy(format!("prompt {i} {}", "q".repeat(30 + i)), 6))
+            .collect();
+        let mut one = engine(COOPT);
+        let base = one.generate(reqs.clone()).unwrap();
+        let mut chk = chunked_engine(8, 24);
+        let ours = chk.generate(reqs).unwrap();
+        assert_eq!(base.len(), ours.len());
+        for (a, b) in base.iter().zip(&ours) {
+            assert_eq!(a.tokens, b.tokens, "chunked ≡ one-shot greedy (seq {})", a.id);
+            assert_eq!(a.finish, b.finish);
+        }
+        assert!(chk.metrics.prefill_chunks > 4, "long prompts actually chunked");
+        assert_eq!(chk.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn chunked_falls_back_on_backends_without_chunk_support() {
+        // a backend that leaves the trait defaults in place (like the
+        // one-shot PJRT graphs) must not be driven with mid-prompt
+        // windows — the engine degrades to one-shot scheduling
+        struct OneShotOnly(MockBackend);
+        impl Backend for OneShotOnly {
+            fn preset(&self) -> &crate::config::ModelPreset {
+                self.0.preset()
+            }
+            fn geometry(&self) -> &crate::config::CacheGeometry {
+                self.0.geometry()
+            }
+            fn opt(&self) -> &crate::config::OptConfig {
+                self.0.opt()
+            }
+            fn prefill(&mut self, t: &[i32], l: i32, s: &[i32]) -> Result<Vec<f32>> {
+                self.0.prefill(t, l, s)
+            }
+            fn decode(
+                &mut self,
+                t: &[i32],
+                p: &[i32],
+                b: &[i32],
+                c: &[i32],
+                s: &[i32],
+            ) -> Result<Vec<f32>> {
+                self.0.decode(t, p, b, c, s)
+            }
+            fn reset_cache(&mut self) -> Result<()> {
+                self.0.reset_cache()
+            }
+            fn take_exec_time(&mut self) -> std::time::Duration {
+                self.0.take_exec_time()
+            }
+        }
+        let be = OneShotOnly(MockBackend::new().with_opt(COOPT));
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_chunked_prefill(8);
+        let mut e = Engine::new(be, cfg);
+        assert!(!e.cfg.chunked_prefill, "degraded to one-shot scheduling");
+        let r = e
+            .generate(vec![GenRequest::greedy("fallback still serves", 4)])
+            .unwrap();
+        assert_eq!(r[0].generated_tokens, 4);
+        assert_eq!(e.metrics.prefill_chunks, 0);
+    }
+
+    #[test]
+    fn chunked_mixes_prefill_windows_with_decode_batches() {
+        let mut e = chunked_engine(16, 24);
+        // two short streams keep decoding while a long prompt prefills
+        e.submit(GenRequest::greedy("stream a", 20)).unwrap();
+        e.submit(GenRequest::greedy("stream b", 20)).unwrap();
+        let long: Vec<u32> = (1..=100).collect();
+        e.submit_tokens(long, 3, SamplingParams::default(), false)
+            .unwrap();
+        let results = e.run_to_completion().unwrap();
+        assert_eq!(results.len(), 3);
+        // the long prompt took several windows...
+        let long_windows: Vec<(i32, i32)> = e
+            .backend
+            .chunk_trace
+            .iter()
+            .copied()
+            .filter(|&(o, l)| o > 0 || l > 16)
+            .collect();
+        assert!(long_windows.len() >= 5, "windows: {:?}", e.backend.chunk_trace);
+        // ...and the streams decoded in between (interleaving, not phases)
+        assert!(e.metrics.decode_steps >= 19);
+        assert_eq!(e.cache_stats().blocks_used, 0);
     }
 
     #[test]

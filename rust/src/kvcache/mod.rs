@@ -13,6 +13,9 @@
 //!   baseline reproduces the behaviour the paper criticizes: every padded
 //!   prefill position is written ("all KVs ... regardless of whether they
 //!   are actually useful, including padding and duplicate tokens").
+//!   Prefill commits through [`CacheManager::prefill_chunk`] — Opt-Pa
+//!   step 1 segments a prompt into windows and step 2 lazily maps blocks
+//!   as each window lands; one-shot prefill is the single-window case.
 //! * fragmentation accounting (allocated vs live slots — the Fig. 3
 //!   motivation) and pool bytes per config (FP8 halves traffic;
 //!   the platform model consumes these numbers).
@@ -197,12 +200,52 @@ impl CacheManager {
         self.alloc.num_free() >= self.blocks_needed_prefill(prompt_len, opt) + 1
     }
 
+    /// Chunked-admission check: can a prefill window of `tokens` be
+    /// committed right now?  Chunks write only real tokens, so this is a
+    /// per-chunk bound regardless of `opt` (the baseline's padding blocks
+    /// arrive with the final chunk; mid-prefill shortfalls are handled by
+    /// the engine's preempt-and-retry path).
+    pub fn can_admit_tokens(&self, tokens: usize, _opt: &OptConfig) -> bool {
+        let bs = self.geometry.block_size;
+        self.alloc.num_free() >= tokens.div_ceil(bs) + 1
+    }
+
     /// Plan + commit the prefill of sequence `id` with `prompt` tokens.
     ///
     /// Allocates blocks (sharing full prefix blocks when `opt.skip_filter`
     /// allows the duplicate-token skip) and returns the slot mapping for
-    /// the padded prefill graph.
+    /// the padded prefill graph.  Implemented as a single full-width
+    /// chunk, so one-shot and chunked prefill share one code path.
     pub fn prefill(&mut self, id: SeqId, prompt: &[u32], opt: &OptConfig) -> Result<PrefillPlan> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        self.prefill_chunk(id, prompt, 0, prompt.len(), opt, true)
+    }
+
+    /// Opt-Pa step 1: commit the prefill window `[offset, offset+len)` of
+    /// `prompt` for sequence `id`.
+    ///
+    /// `offset == 0` creates the sequence; later chunks append to it and
+    /// must start exactly at the committed length (the lazy mapping of
+    /// Opt-Pa step 2: blocks materialize as chunks arrive, never ahead of
+    /// them).  Full blocks that fall entirely inside a window reuse the
+    /// prefix-hash index exactly like one-shot prefill, so earlier chunks
+    /// stay shareable across sequences.  The final chunk of a
+    /// non-`skip_filter` config also writes the baseline's padding slots,
+    /// which keeps chunked and one-shot prefill byte-identical in block
+    /// counts and write totals for every opt config.  On pool exhaustion
+    /// the window's allocations are rolled back and earlier chunks stay
+    /// committed, so the caller can retry from the same offset.
+    pub fn prefill_chunk(
+        &mut self,
+        id: SeqId,
+        prompt: &[u32],
+        offset: usize,
+        len: usize,
+        opt: &OptConfig,
+        is_final: bool,
+    ) -> Result<PrefillPlan> {
         let bs = self.geometry.block_size;
         let max_seq = self.geometry.max_seq;
         if prompt.is_empty() {
@@ -211,76 +254,160 @@ impl CacheManager {
         if prompt.len() > max_seq {
             bail!("prompt of {} tokens exceeds max_seq {max_seq}", prompt.len());
         }
-        if self.seqs.contains_key(&id) {
-            bail!("sequence {id} already exists");
+        let end = offset + len;
+        if len == 0 || end > prompt.len() {
+            bail!(
+                "invalid prefill chunk [{offset}, {end}) for a prompt of {} tokens",
+                prompt.len()
+            );
+        }
+        if is_final != (end == prompt.len()) {
+            bail!("chunk finality mismatch: end {end} vs prompt len {}", prompt.len());
+        }
+        if offset == 0 {
+            if self.seqs.contains_key(&id) {
+                bail!("sequence {id} already exists");
+            }
+        } else {
+            let committed = self
+                .seqs
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("prefill chunk for unknown sequence {id}"))?
+                .len;
+            if committed != offset {
+                bail!(
+                    "chunk offset {offset} does not match committed length {committed} of sequence {id}"
+                );
+            }
         }
 
-        let mut st = SeqState::default();
+        let mut table: Vec<BlockId> = self
+            .seqs
+            .get(&id)
+            .map(|st| st.table.clone())
+            .unwrap_or_default();
+        let prior_blocks = table.len();
+        let mut new_blocks: Vec<BlockId> = Vec::new();
+        let mut shared_now: Vec<BlockId> = Vec::new();
         let mut slot_mapping = vec![-1i32; max_seq];
         let mut reused_blocks = 0usize;
+        let mut fail: Option<&'static str> = None;
 
-        // --- phase 1: full prefix blocks, possibly shared (SkipSet members)
-        let full_blocks = prompt.len() / bs;
-        for b in 0..full_blocks {
-            let chunk = &prompt[b * bs..(b + 1) * bs];
-            let h = prefix_hash(&prompt[..b * bs], chunk);
-            if opt.skip_filter {
-                if let Some(&phys) = self.prefix_index.get(&h) {
-                    // duplicate tokens: reuse the block read-only, skip writes
-                    self.alloc.incref(phys);
-                    st.table.push(phys);
-                    st.shared_prefix_blocks += 1;
-                    reused_blocks += 1;
-                    self.prefix_hits += 1;
-                    continue; // slots stay -1  (Eq. 5 SkipSet)
-                }
-            }
-            let phys = match self.alloc.alloc() {
-                Some(p) => p,
-                None => {
-                    self.rollback(&st);
-                    bail!("out of KV blocks during prefill");
-                }
-            };
-            if opt.skip_filter {
-                self.index_block(phys, h);
-            }
-            st.table.push(phys);
-            for o in 0..bs {
-                slot_mapping[b * bs + o] = (phys as usize * bs + o) as i32;
-            }
-        }
-
-        // --- phase 2: tail (partial block) + baseline padding writes
-        let write_upto = if opt.skip_filter {
-            prompt.len() // Opt-KV: only real tokens
-        } else {
-            max_seq // baseline: every padded position (incl. useless ones)
-        };
-        let mut pos = full_blocks * bs;
+        // the final chunk of the padded baseline also writes every padding
+        // position (Eq. 2 behaviour the paper criticizes)
+        let write_upto = if is_final && !opt.skip_filter { max_seq } else { end };
+        let mut pos = offset;
         while pos < write_upto {
             let b = pos / bs;
-            if b >= st.table.len() {
-                let phys = match self.alloc.alloc() {
-                    Some(p) => p,
-                    None => {
-                        self.rollback(&st);
-                        bail!("out of KV blocks during prefill");
+            let block_start = b * bs;
+            // whole prompt block inside the window: prefix-share candidate
+            if pos == block_start && block_start + bs <= end && b >= table.len() {
+                let chunk_toks = &prompt[block_start..block_start + bs];
+                let h = prefix_hash(&prompt[..block_start], chunk_toks);
+                if opt.skip_filter {
+                    if let Some(&phys) = self.prefix_index.get(&h) {
+                        // duplicate tokens: reuse read-only, skip writes
+                        // (prefix_hits counted after the window commits,
+                        // so a rolled-back window doesn't inflate stats)
+                        self.alloc.incref(phys);
+                        table.push(phys);
+                        shared_now.push(phys);
+                        reused_blocks += 1;
+                        pos = block_start + bs;
+                        continue; // slots stay -1  (Eq. 5 SkipSet)
                     }
-                };
-                st.table.push(phys);
+                }
+                match self.alloc.alloc() {
+                    Some(phys) => {
+                        if opt.skip_filter {
+                            self.index_block(phys, h);
+                        }
+                        table.push(phys);
+                        new_blocks.push(phys);
+                        for o in 0..bs {
+                            slot_mapping[block_start + o] = (phys as usize * bs + o) as i32;
+                        }
+                        pos = block_start + bs;
+                        continue;
+                    }
+                    None => {
+                        fail = Some("out of KV blocks during prefill");
+                        break;
+                    }
+                }
             }
-            let phys = st.table[b];
+            // partial coverage: chunk tail, unaligned window, or padding
+            if b >= table.len() {
+                match self.alloc.alloc() {
+                    Some(phys) => {
+                        table.push(phys);
+                        new_blocks.push(phys);
+                    }
+                    None => {
+                        fail = Some("out of KV blocks during prefill");
+                        break;
+                    }
+                }
+            }
+            let phys = table[b];
+            if self.alloc.refcount(phys) > 1 {
+                // only *full* blocks are ever shared, and chunks never
+                // revisit committed positions — guard anyway
+                fail = Some("attempted write into shared block");
+                break;
+            }
             slot_mapping[pos] = (phys as usize * bs + pos % bs) as i32;
             pos += 1;
         }
 
-        st.len = prompt.len();
+        if let Some(msg) = fail {
+            for phys in new_blocks {
+                if self.alloc.decref(phys) {
+                    self.unindex_block(phys);
+                }
+            }
+            for phys in shared_now {
+                if self.alloc.decref(phys) {
+                    self.unindex_block(phys);
+                }
+            }
+            bail!("{msg}");
+        }
+
+        // blocks whose last slot landed in this window became full and
+        // shareable — including blocks filled across *split* windows,
+        // which the full-block branch above never saw whole.  (Such a
+        // block cannot be consumed shared by the sequence that wrote it —
+        // part of it was committed before the content was known — but it
+        // is now a provider for later sequences, matching one-shot
+        // prefill's index contents.)
+        if opt.skip_filter {
+            for b in offset / bs..end / bs {
+                let phys = table[b];
+                if self.alloc.refcount(phys) == 1 && !self.block_hash.contains_key(&phys) {
+                    let h = prefix_hash(&prompt[..b * bs], &prompt[b * bs..(b + 1) * bs]);
+                    if !self.prefix_index.contains_key(&h) {
+                        self.index_block(phys, h);
+                    }
+                }
+            }
+        }
+
+        self.prefix_hits += shared_now.len() as u64;
         let written = slot_mapping.iter().filter(|&&s| s >= 0).count();
-        let skipped = max_seq - written;
+        // account the padded-graph skip total so chunk sums equal the
+        // one-shot numbers: window skips now, padding skips on the final
+        // chunk (for the baseline the padding is written, not skipped)
+        let pad = if is_final { max_seq - prompt.len() } else { 0 };
+        let skipped = (len + pad).saturating_sub(written);
         self.total_writes += written as u64;
         self.skipped_writes += skipped as u64;
-        self.seqs.insert(id, st);
+        let shared_added = reused_blocks;
+        let st = self.seqs.entry(id).or_default();
+        debug_assert!(table.len() >= prior_blocks);
+        st.table = table;
+        st.len = end;
+        st.shared_prefix_blocks += shared_added;
         Ok(PrefillPlan {
             slot_mapping,
             written,
@@ -401,13 +528,6 @@ impl CacheManager {
         }
     }
 
-    fn rollback(&mut self, st: &SeqState) {
-        for &b in &st.table {
-            if self.alloc.decref(b) {
-                self.unindex_block(b);
-            }
-        }
-    }
 }
 
 /// FNV-1a over (prefix tokens, block tokens) — identifies a full block by
@@ -600,6 +720,140 @@ mod tests {
         cm.prefill(1, &[1, 2, 3], &COOPT).unwrap();
         cm.append_token(1).unwrap(); // pos 3 (ctx 4 = max)
         assert!(cm.append_token(1).is_err());
+    }
+
+    #[test]
+    fn chunked_prefill_matches_oneshot_coopt() {
+        let prompt: Vec<u32> = (0..13).map(|i| 40 + i).collect();
+        let mut one = CacheManager::new(geom());
+        let p = one.prefill(1, &prompt, &COOPT).unwrap();
+        let mut chunked = CacheManager::new(geom());
+        // windows 5 + 3 + 5 (unaligned on purpose)
+        let a = chunked.prefill_chunk(1, &prompt, 0, 5, &COOPT, false).unwrap();
+        let b = chunked.prefill_chunk(1, &prompt, 5, 3, &COOPT, false).unwrap();
+        let c = chunked.prefill_chunk(1, &prompt, 8, 5, &COOPT, true).unwrap();
+        assert_eq!(a.written + b.written + c.written, p.written);
+        assert_eq!(a.skipped + b.skipped + c.skipped, p.skipped);
+        assert_eq!(chunked.seq_len(1), one.seq_len(1));
+        assert_eq!(chunked.stats().blocks_used, one.stats().blocks_used);
+        assert_eq!(chunked.stats().total_writes, one.stats().total_writes);
+        assert_eq!(chunked.block_table_row(1).len(), one.block_table_row(1).len());
+    }
+
+    #[test]
+    fn chunked_prefill_matches_oneshot_baseline_padding() {
+        let prompt: Vec<u32> = (0..6).map(|i| 10 + i).collect();
+        let mut one = CacheManager::new(geom());
+        let p = one.prefill(1, &prompt, &ORIGINAL).unwrap();
+        let mut chunked = CacheManager::new(geom());
+        let a = chunked.prefill_chunk(1, &prompt, 0, 4, &ORIGINAL, false).unwrap();
+        let b = chunked.prefill_chunk(1, &prompt, 4, 2, &ORIGINAL, true).unwrap();
+        // the final chunk writes the baseline padding, like one-shot
+        assert_eq!(a.written + b.written, p.written);
+        assert_eq!(p.written, 16);
+        assert_eq!(a.skipped + b.skipped, p.skipped);
+        assert_eq!(chunked.stats().blocks_used, one.stats().blocks_used);
+    }
+
+    #[test]
+    fn chunked_prefill_shares_prefix_blocks_across_sequences() {
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23, 5];
+        let mut cm = CacheManager::new(geom());
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        // second sequence arrives in block-aligned chunks: both full
+        // blocks are shared exactly as in one-shot prefill
+        let a = cm.prefill_chunk(2, &prompt, 0, 4, &COOPT, false).unwrap();
+        let b = cm.prefill_chunk(2, &prompt, 4, 5, &COOPT, true).unwrap();
+        assert_eq!(a.reused_blocks, 1);
+        assert_eq!(b.reused_blocks, 1);
+        assert_eq!(a.written + b.written, 1, "only the tail token is written");
+        assert_eq!(cm.block_table_row(1)[..2], cm.block_table_row(2)[..2]);
+        cm.free_seq(1);
+        cm.free_seq(2);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn blocks_split_across_windows_still_become_shareable() {
+        // windows smaller than a block: every block is filled piecewise,
+        // yet once full it must enter the prefix index so a later
+        // sequence can share it exactly as after one-shot prefill
+        let prompt: Vec<u32> = (0..9).map(|i| 60 + i).collect();
+        let mut cm = CacheManager::new(geom()); // block_size 4
+        let mut off = 0;
+        while off < prompt.len() {
+            let take = 3.min(prompt.len() - off);
+            let fin = off + take == prompt.len();
+            cm.prefill_chunk(1, &prompt, off, take, &COOPT, fin).unwrap();
+            off += take;
+        }
+        let p2 = cm.prefill(2, &prompt, &COOPT).unwrap();
+        assert_eq!(p2.reused_blocks, 2, "both full blocks shared despite split windows");
+        assert_eq!(cm.block_table_row(1)[..2], cm.block_table_row(2)[..2]);
+        cm.free_seq(1);
+        cm.free_seq(2);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn chunk_offset_must_match_committed_length() {
+        let prompt: Vec<u32> = (0..12).collect();
+        let mut cm = CacheManager::new(geom());
+        cm.prefill_chunk(1, &prompt, 0, 4, &COOPT, false).unwrap();
+        // gap and overlap both rejected; retry from the committed offset works
+        assert!(cm.prefill_chunk(1, &prompt, 8, 4, &COOPT, false).is_err());
+        assert!(cm.prefill_chunk(1, &prompt, 0, 4, &COOPT, false).is_err());
+        assert!(cm.prefill_chunk(1, &prompt, 4, 8, &COOPT, true).is_ok());
+        assert_eq!(cm.seq_len(1), 12);
+        // finality must agree with the window
+        let mut cm2 = CacheManager::new(geom());
+        assert!(cm2.prefill_chunk(2, &prompt, 0, 4, &COOPT, true).is_err());
+    }
+
+    #[test]
+    fn failed_chunk_keeps_earlier_chunks_committed() {
+        let mut cm = CacheManager::new(CacheGeometry {
+            block_size: 4,
+            max_blocks: 8,
+            num_pool_blocks: 2,
+            max_batch: 4,
+            max_seq: 32,
+        });
+        let prompt: Vec<u32> = (0..20).collect();
+        cm.prefill_chunk(1, &prompt, 0, 8, &COOPT, false).unwrap();
+        assert_eq!(cm.stats().blocks_used, 2);
+        // pool exhausted: the window rolls back, the prefix survives
+        assert!(cm.prefill_chunk(1, &prompt, 8, 8, &COOPT, false).is_err());
+        assert_eq!(cm.seq_len(1), 8, "committed prefix intact");
+        assert_eq!(cm.stats().blocks_used, 2, "window allocations rolled back");
+    }
+
+    #[test]
+    fn failed_window_does_not_count_prefix_hits() {
+        let mut cm = CacheManager::new(CacheGeometry {
+            block_size: 4,
+            max_blocks: 8,
+            num_pool_blocks: 3,
+            max_batch: 4,
+            max_seq: 16,
+        });
+        let a: Vec<u32> = (0..12).collect();
+        cm.prefill(1, &a, &COOPT).unwrap(); // 3 blocks, pool exhausted
+        let mut b = a[..8].to_vec();
+        b.extend([90, 91, 92, 93]);
+        // shares two blocks, then fails allocating the third
+        assert!(cm.prefill(2, &b, &COOPT).is_err());
+        assert_eq!(cm.stats().prefix_hits, 0, "rolled-back window counts no hits");
+        assert_eq!(cm.stats().blocks_used, 3);
+        assert!(!cm.has_seq(2));
+    }
+
+    #[test]
+    fn chunked_admission_bound() {
+        let cm = CacheManager::new(geom()); // 16 blocks of 4
+        assert!(cm.can_admit_tokens(4, &COOPT));
+        assert!(cm.can_admit_tokens(56, &ORIGINAL)); // 14 blocks + headroom
+        assert!(!cm.can_admit_tokens(64, &COOPT)); // 16 blocks + headroom > pool
     }
 
     #[test]

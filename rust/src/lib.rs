@@ -24,11 +24,11 @@
 //! | [`util`] | offline substrates: JSON, RNG, FP8, CLI, thread pool, bench, property testing |
 //! | [`config`] | model/opt/engine presets mirroring `python/compile/presets.py` |
 //! | [`tokenizer`] | byte-level tokenizer shared with the python trainer |
-//! | [`kvcache`] | paged block allocator, block tables, slot mapping + SkipSet (Eq. 5) |
-//! | [`scheduler`] | continuous-batching scheduler (waiting/running/preempted) |
-//! | [`runtime`] | PJRT artifact loading + execution with persistent buffers |
-//! | [`platform`] | DCU Z100 memory-hierarchy/roofline cost model (Eqs. 2–4) |
-//! | [`coordinator`] | the engine: schedule → step → sample → stream |
+//! | [`kvcache`] | paged block allocator, block tables, slot mapping + SkipSet (Eq. 5); incremental `prefill_chunk` (Opt-Pa step 1/2: segment, then lazily map) |
+//! | [`scheduler`] | continuous-batching scheduler (waiting/running/preempted) with chunked prefill: per-step token budget shared by decode slots + prefill windows |
+//! | [`runtime`] | PJRT artifact loading + execution with persistent buffers; `Backend::prefill_chunk` contract for chunked prefill |
+//! | [`platform`] | DCU Z100 memory-hierarchy/roofline cost model (Eqs. 2–4) + per-window prefill-chunk costs |
+//! | [`coordinator`] | the engine: schedule → commit prefill windows → decode batch → sample → stream (sampling defers to a prompt's final window) |
 //! | [`sampling`] | greedy / temperature / top-k / top-p / MCQ scoring |
 //! | [`server`] | hand-rolled HTTP/1.1 front-end + client |
 //! | [`workload`] | ShareGPT-like traces, ARC-sim loader, arrival processes |

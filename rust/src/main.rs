@@ -30,8 +30,24 @@ fn main() -> Result<()> {
         .flag("prompt", "", "generate: the prompt")
         .flag("max-new-tokens", "32", "generate: tokens to produce")
         .flag("temperature", "0.0", "generate: sampling temperature")
+        .flag(
+            "prefill-chunk-tokens",
+            "0",
+            "chunked prefill (Opt-Pa step 1): per-chunk token budget, 0 = one-shot \
+             (mid-prompt chunks need a backend with a chunked prefill graph)",
+        )
         .flag("set", "easy", "eval: easy | challenge");
     let args = cli.parse_or_exit();
+
+    let engine_cfg = |model: &str, opt| {
+        let cfg = EngineConfig::new(model, opt);
+        let chunk = args.get_usize("prefill-chunk-tokens");
+        if chunk > 0 {
+            cfg.with_chunked_prefill(chunk)
+        } else {
+            cfg
+        }
+    };
 
     let dir = if args.get("artifacts").is_empty() {
         artifacts_dir()
@@ -72,7 +88,7 @@ fn main() -> Result<()> {
             let rt = Runtime::new(&dir)?;
             let mrt = rt.load_model(model, opt)?;
             log_info!("compiled {model}/{} in {:?}", opt.name, mrt.compile_time);
-            let engine = Engine::new(mrt, EngineConfig::new(model, opt));
+            let engine = Engine::new(mrt, engine_cfg(model, opt));
             let handle = EngineHandle::spawn(engine);
             let server = Server::bind(args.get("addr"), handle, args.get_usize("workers"))?;
             server.serve()
@@ -86,7 +102,7 @@ fn main() -> Result<()> {
             }
             let rt = Runtime::new(&dir)?;
             let mrt = rt.load_model(model, opt)?;
-            let mut engine = Engine::new(mrt, EngineConfig::new(model, opt));
+            let mut engine = Engine::new(mrt, engine_cfg(model, opt));
             let results = engine.generate(vec![GenRequest {
                 prompt: prompt.to_string(),
                 max_new_tokens: args.get_usize("max-new-tokens"),

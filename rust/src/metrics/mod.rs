@@ -36,6 +36,12 @@ pub struct EngineMetrics {
     pub requests_finished: u64,
     pub tokens_generated: u64,
     pub prefill_steps: u64,
+    /// prefill windows committed by chunked prefill (Opt-Pa step 1);
+    /// zero when the engine runs one-shot prefill
+    pub prefill_chunks: u64,
+    /// simulated seconds spent between consecutive windows of the same
+    /// prompt (inter-chunk stall — the price of interleaving decodes)
+    pub chunk_stall_s: f64,
     pub decode_steps: u64,
     pub preemptions: u64,
     /// wallclock seconds inside PJRT execute calls
@@ -50,6 +56,10 @@ pub struct EngineMetrics {
     pub latency_wall: Summary,
     pub latency_sim: Summary,
     pub ttft_wall: Summary,
+    /// per-sequence decode inter-token latency on the simulated clock,
+    /// one sample per (decode step, active lane); includes the prefill
+    /// windows the step ran first — the stall chunked prefill bounds
+    pub itl_sim: Summary,
     run_started: Option<Instant>,
     run_finished: Option<Instant>,
 }
@@ -123,8 +133,14 @@ impl EngineMetrics {
         o.insert("requests_finished", self.requests_finished as usize);
         o.insert("tokens_generated", self.tokens_generated as usize);
         o.insert("prefill_steps", self.prefill_steps as usize);
+        o.insert("prefill_chunks", self.prefill_chunks as usize);
+        o.insert("chunk_stall_sim_s", self.chunk_stall_s);
         o.insert("decode_steps", self.decode_steps as usize);
         o.insert("preemptions", self.preemptions as usize);
+        if self.itl_sim.count() > 0 {
+            o.insert("itl_sim_p50_s", self.itl_sim.p50());
+            o.insert("itl_sim_p95_s", self.itl_sim.p95());
+        }
         o.insert("throughput_wall_tok_s", self.throughput_wall());
         o.insert("throughput_sim_tok_s", self.throughput_sim());
         o.insert("total_latency_wall_s", self.total_latency_wall_s());
@@ -157,6 +173,22 @@ mod tests {
         };
         assert_eq!(r.latency().unwrap(), Duration::from_millis(50));
         assert_eq!(r.ttft().unwrap(), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn chunk_metrics_serialize() {
+        let mut m = EngineMetrics::new();
+        // empty engines must not emit NaN percentiles
+        let j = m.to_json();
+        assert!(!j.to_string().contains("itl_sim_p95_s"));
+        m.prefill_chunks = 5;
+        m.chunk_stall_s = 0.25;
+        m.itl_sim.add(0.1);
+        m.itl_sim.add(0.2);
+        let j = m.to_json();
+        assert_eq!(j.req_usize("prefill_chunks").unwrap(), 5);
+        assert!((j.req_f64("chunk_stall_sim_s").unwrap() - 0.25).abs() < 1e-12);
+        assert!(j.req_f64("itl_sim_p95_s").unwrap() >= j.req_f64("itl_sim_p50_s").unwrap());
     }
 
     #[test]

@@ -42,6 +42,9 @@ pub struct PlatformSpec {
     pub alloc_penalty_s: f64,
     /// fixed per-token-write overhead (cache-management instructions)
     pub write_op_s: f64,
+    /// fixed per-kernel-pass launch/ramp overhead; chunked prefill pays
+    /// it once per window (the monolithic prefill amortizes it)
+    pub pass_launch_s: f64,
     /// per-block softmax reduction/synchronization overhead: warp-level
     /// broadcast chain (baseline) vs shared-memory block_sum (Opt-Pa)
     pub sync_warp_s: f64,
@@ -67,6 +70,7 @@ impl Default for PlatformSpec {
             clock_hz: 1.5e9,
             alloc_penalty_s: 4.0e-6,
             write_op_s: 30.0e-9,
+            pass_launch_s: 25.0e-6,
             sync_warp_s: 220.0e-9,
             sync_blocksum_s: 60.0e-9,
             gemm_eff: 0.70,
@@ -339,6 +343,58 @@ impl CostModel {
         ((self.paper_pool_blocks(opt) as f64 / scale) as usize).clamp(lo, hi)
     }
 
+    /// Cost of one chunked-prefill window (Opt-Pa step 1): `chunk_len`
+    /// tokens starting at `offset`, attending to all prior context.
+    ///
+    /// Each window streams the weights again — that is the overhead
+    /// chunking trades for bounded decode stalls (a whole-prompt sum of
+    /// window costs exceeds the one-shot cost, but no single window
+    /// approaches it), and the prior-context KV is re-read through the
+    /// Eq. 3 cache model.
+    pub fn prefill_chunk(&self, chunk_len: usize, offset: usize, opt: &OptConfig) -> StepCost {
+        let s = &self.spec;
+        let g = &self.geom;
+        let t = (chunk_len as f64 * self.ctx_scale).round().max(1.0);
+        let prior = (offset as f64 * self.ctx_scale).round();
+
+        let gemm_flops = 2.0 * g.param_count() * t;
+        // window queries attend to the prior context plus the causal half
+        // of the window itself
+        let attn_flops =
+            4.0 * g.n_heads as f64 * g.head_dim as f64 * (t * prior + t * t / 2.0);
+        let compute_s = (gemm_flops + attn_flops) / (s.fp16_flops * s.gemm_eff);
+
+        let weight_bytes = g.param_count() * g.weight_bits / 8.0;
+        let weights_mem_s = weight_bytes / s.bandwidth_bytes_per_s;
+
+        // chunked prefill writes exactly the window's tokens (the lazy
+        // mapping never materializes padding ahead of the final window)
+        let kv_tok_bytes = g.kv_bytes_per_token_layer(opt) * g.layers as f64;
+        let write_bytes = t * kv_tok_bytes;
+        let kv_read_bytes = prior * kv_tok_bytes;
+        let kv_mem_s = kv_read_bytes / self.effective_kv_bandwidth(kv_read_bytes);
+        let new_blocks = (t as usize).div_ceil(self.block_size);
+        let alloc_s = new_blocks as f64
+            * if opt.skip_filter {
+                s.alloc_penalty_s * 0.25
+            } else {
+                s.alloc_penalty_s
+            };
+        let write_s = t * s.write_op_s + write_bytes / s.bandwidth_bytes_per_s;
+        let overhead_s = alloc_s + write_s + s.pass_launch_s;
+
+        let total_s = (weights_mem_s + kv_mem_s).max(compute_s) + overhead_s;
+        StepCost {
+            weights_mem_s,
+            kv_mem_s,
+            compute_s,
+            overhead_s,
+            total_s,
+            bytes_moved: weight_bytes + write_bytes + kv_read_bytes,
+            flops: gemm_flops + attn_flops,
+        }
+    }
+
     /// Cost of prefilling one sequence (`prompt_len` real tokens, padded
     /// to `padded_len` on the baseline write path).
     pub fn prefill(&self, prompt_len: usize, opt: &OptConfig) -> StepCost {
@@ -484,6 +540,26 @@ mod tests {
             o / p - 1.0
         };
         assert!(g(64) > g(20), "more padding => bigger Opt-Pa win");
+    }
+
+    #[test]
+    fn chunked_prefill_bounds_stalls_but_costs_more_total() {
+        let m = model();
+        let one = m.prefill(512, &COOPT);
+        let chunks: Vec<StepCost> = (0..4)
+            .map(|i| m.prefill_chunk(128, i * 128, &COOPT))
+            .collect();
+        let sum: f64 = chunks.iter().map(|c| c.total_s).sum();
+        // each window is far cheaper than the monolithic prefill (the
+        // bounded decode stall)...
+        for c in &chunks {
+            assert!(c.total_s < one.total_s * 0.6, "{} vs {}", c.total_s, one.total_s);
+        }
+        // ...but the whole-prompt sum pays the per-chunk weight restream
+        assert!(sum > one.total_s, "sum {sum} vs one-shot {}", one.total_s);
+        // later windows re-read more prior KV
+        assert!(chunks[3].kv_mem_s >= chunks[0].kv_mem_s);
+        assert!(chunks[3].total_s >= chunks[0].total_s);
     }
 
     #[test]

@@ -27,6 +27,9 @@ pub struct MockBackend {
     pub seed: u32,
     /// record of every (ctx_lens, slot_mapping) decode saw, for tests
     pub decode_trace: Vec<(Vec<i32>, Vec<i32>)>,
+    /// record of every prefill window as (offset, chunk_len), for tests
+    /// (one-shot prefill records (0, seq_len))
+    pub chunk_trace: Vec<(i32, i32)>,
 }
 
 impl MockBackend {
@@ -45,6 +48,7 @@ impl MockBackend {
             exec_time: Duration::ZERO,
             seed: 0,
             decode_trace: Vec::new(),
+            chunk_trace: Vec::new(),
         }
     }
 
@@ -106,6 +110,7 @@ impl Backend for MockBackend {
             }
         }
         self.prefill_calls += 1;
+        self.chunk_trace.push((0, seq_len));
         self.spin();
         let vocab = self.preset.vocab;
         let mut logits = vec![0.0f32; s * vocab];
@@ -114,6 +119,52 @@ impl Backend for MockBackend {
         let favored = 32 + (self.seed + last) % 200;
         let row = self.logits_for(favored, vocab);
         let at = (seq_len as usize - 1) * vocab;
+        logits[at..at + vocab].copy_from_slice(&row);
+        Ok(logits)
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        token_ids: &[i32],
+        offset: i32,
+        chunk_len: i32,
+        slot_mapping: &[i32],
+    ) -> Result<Vec<f32>> {
+        let s = self.geometry.max_seq;
+        if token_ids.len() != s || slot_mapping.len() != s {
+            bail!("mock: chunk inputs not padded to max_seq");
+        }
+        if offset < 0 || chunk_len <= 0 {
+            bail!("mock: bad chunk window [{offset}, {})", offset + chunk_len);
+        }
+        let end = (offset + chunk_len) as usize;
+        if end > s {
+            bail!("mock: chunk end {end} exceeds max_seq {s}");
+        }
+        // contract: everything up to the window's end is a real token
+        for (i, &t) in token_ids.iter().enumerate().take(end) {
+            if t < 0 {
+                bail!("mock: negative token at position {i} of a chunk ending at {end}");
+            }
+        }
+        // contract: earlier chunks already wrote their slots — a window
+        // must never re-write positions before its offset
+        for (i, &m) in slot_mapping.iter().enumerate().take(offset as usize) {
+            if m != -1 {
+                bail!("mock: chunk at offset {offset} re-writes earlier slot at position {i}");
+            }
+        }
+        self.prefill_calls += 1;
+        self.chunk_trace.push((offset, chunk_len));
+        self.spin();
+        let vocab = self.preset.vocab;
+        let mut logits = vec![0.0f32; s * vocab];
+        // identical function of the last visible token as one-shot
+        // prefill, so chunked and one-shot greedy decoding agree exactly
+        let last = token_ids[end - 1] as u32;
+        let favored = 32 + (self.seed + last) % 200;
+        let row = self.logits_for(favored, vocab);
+        let at = (end - 1) * vocab;
         logits[at..at + vocab].copy_from_slice(&row);
         Ok(logits)
     }
@@ -177,6 +228,10 @@ impl Backend for MockBackend {
         Ok(logits)
     }
 
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
     fn reset_cache(&mut self) -> Result<()> {
         Ok(())
     }
@@ -225,6 +280,38 @@ mod tests {
         // inactive lane with a slot
         slots[1] = 3;
         assert!(m.decode(&toks, &pos, &bt, &ctx, &slots).is_err());
+    }
+
+    #[test]
+    fn chunk_contract_and_equivalence() {
+        let mut m = MockBackend::new();
+        let s = m.geometry().max_seq;
+        let mut toks = vec![0i32; s];
+        for (i, t) in toks.iter_mut().enumerate().take(12) {
+            *t = 40 + i as i32;
+        }
+        let mut slots = vec![-1i32; s];
+        for (i, sl) in slots.iter_mut().enumerate().take(12) {
+            *sl = i as i32;
+        }
+        // one-shot row at position 11
+        let one = m.prefill(&toks, 12, &slots).unwrap();
+        // the same prompt as a mid-prompt chunk [8, 12): final row agrees
+        let mut chunk_slots = vec![-1i32; s];
+        for (i, sl) in chunk_slots.iter_mut().enumerate().take(12).skip(8) {
+            *sl = i as i32;
+        }
+        let two = m.prefill_chunk(&toks, 8, 4, &chunk_slots).unwrap();
+        let vocab = m.preset().vocab;
+        assert_eq!(one[11 * vocab..12 * vocab], two[11 * vocab..12 * vocab]);
+        assert_eq!(m.chunk_trace, vec![(0, 12), (8, 4)]);
+        // contract violations
+        assert!(m.prefill_chunk(&toks, 8, 0, &chunk_slots).is_err(), "empty window");
+        assert!(m.prefill_chunk(&toks, 8, 4, &slots).is_err(), "re-writes earlier slots");
+        assert!(
+            m.prefill_chunk(&toks, (s - 2) as i32, 4, &chunk_slots).is_err(),
+            "window past max_seq"
+        );
     }
 
     #[test]

@@ -35,6 +35,42 @@ pub trait Backend {
     /// max_seq.  Returns logits `[max_seq * vocab]` (row-major).
     fn prefill(&mut self, token_ids: &[i32], seq_len: i32, slot_mapping: &[i32])
         -> Result<Vec<f32>>;
+    /// Chunked prefill (Opt-Pa step 1): process prompt positions
+    /// `[offset, offset+chunk_len)` attending to all earlier KV.
+    /// `token_ids` is the full padded prompt (real tokens in
+    /// `0..offset+chunk_len`); `slot_mapping` carries writes only for the
+    /// window (earlier positions are already resident and map to -1).
+    /// Returns logits `[max_seq * vocab]`; only the row at
+    /// `offset+chunk_len-1` is meaningful, and the engine samples it only
+    /// on the final chunk.
+    ///
+    /// The default covers the window == whole-prompt case with the
+    /// one-shot prefill graph and rejects true mid-prompt chunks — the
+    /// AOT graph set is one-shot, so the PJRT runtime inherits this;
+    /// the mock backend implements real chunk semantics for the engine
+    /// suite.
+    fn prefill_chunk(
+        &mut self,
+        token_ids: &[i32],
+        offset: i32,
+        chunk_len: i32,
+        slot_mapping: &[i32],
+    ) -> Result<Vec<f32>> {
+        if offset == 0 {
+            return self.prefill(token_ids, chunk_len, slot_mapping);
+        }
+        bail!(
+            "backend does not support chunked prefill (chunk at offset {offset}); \
+             lower a chunked prefill graph or disable chunked_prefill"
+        )
+    }
+    /// Whether [`Backend::prefill_chunk`] handles mid-prompt windows
+    /// (`offset > 0`).  The engine consults this at construction and
+    /// falls back to one-shot scheduling when false, so a chunked config
+    /// can never wedge a backend whose graphs are one-shot.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
     /// Batched decode step; all arrays padded to max_batch.  Returns
     /// logits `[max_batch * vocab]`.
     #[allow(clippy::too_many_arguments)]

@@ -80,6 +80,9 @@ impl Summary {
     pub fn p90(&mut self) -> f64 {
         self.percentile(90.0)
     }
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }

@@ -117,6 +117,14 @@ impl<B: Backend> Backend for PoolSized<B> {
     fn prefill(&mut self, t: &[i32], l: i32, s: &[i32]) -> Result<Vec<f32>> {
         self.inner.prefill(t, l, s)
     }
+    // forward explicitly so the inner backend's chunk semantics (e.g. the
+    // mock's) are not shadowed by the trait defaults
+    fn prefill_chunk(&mut self, t: &[i32], o: i32, l: i32, s: &[i32]) -> Result<Vec<f32>> {
+        self.inner.prefill_chunk(t, o, l, s)
+    }
+    fn supports_chunked_prefill(&self) -> bool {
+        self.inner.supports_chunked_prefill()
+    }
     fn decode(
         &mut self,
         t: &[i32],
@@ -133,6 +141,94 @@ impl<B: Backend> Backend for PoolSized<B> {
     fn take_exec_time(&mut self) -> std::time::Duration {
         self.inner.take_exec_time()
     }
+}
+
+/// One row of the chunked-prefill comparison (both benches report it).
+#[derive(Debug, Clone)]
+pub struct ChunkCompareRow {
+    pub mode: &'static str,
+    /// decode inter-token latency percentiles on the simulated clock
+    pub itl_sim_p50_s: f64,
+    pub itl_sim_p95_s: f64,
+    pub itl_sim_max_s: f64,
+    /// Eq. 11 / Eq. 12 aggregates
+    pub latency_sim_s: f64,
+    pub throughput_sim: f64,
+    pub prefill_chunks: u64,
+    pub chunk_stall_sim_s: f64,
+    pub tokens: u64,
+}
+
+impl ChunkCompareRow {
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("mode", self.mode);
+        o.insert("itl_sim_p50_s", self.itl_sim_p50_s);
+        o.insert("itl_sim_p95_s", self.itl_sim_p95_s);
+        o.insert("itl_sim_max_s", self.itl_sim_max_s);
+        o.insert("latency_sim_s", self.latency_sim_s);
+        o.insert("throughput_sim", self.throughput_sim);
+        o.insert("prefill_chunks", self.prefill_chunks as usize);
+        o.insert("chunk_stall_sim_s", self.chunk_stall_sim_s);
+        o.insert("tokens", self.tokens as usize);
+        Value::Object(o)
+    }
+}
+
+/// Chunked-vs-one-shot prefill comparison over the deterministic mock
+/// backend (runs without artifacts): `streams` short decode streams keep
+/// generating while `long_prompts` long prompts (each ≥ 4x the chunk
+/// size) arrive behind them.  One-shot mode runs each long prefill as a
+/// monolithic step between decodes — its cost lands on every stream's
+/// inter-token latency; chunked mode bounds that stall to one window.
+/// Returns the `[one-shot, chunked]` rows.
+pub fn run_chunk_compare(
+    chunk_tokens: usize,
+    long_prompts: usize,
+    streams: usize,
+    max_new: usize,
+) -> Result<Vec<ChunkCompareRow>> {
+    use crate::runtime::mock::MockBackend;
+    use crate::sampling::SamplingParams;
+
+    let long_len = 6 * chunk_tokens; // ≥ 4x the chunk budget by construction
+    let mut rows = Vec::new();
+    for (mode, chunked) in [("oneshot", false), ("chunked", true)] {
+        let be = MockBackend::new().with_opt(crate::config::COOPT);
+        let mut cfg = EngineConfig::new("llama-7b-sim", crate::config::COOPT);
+        if chunked {
+            // a tight step budget: decodes first, about one window of
+            // prefill per step
+            cfg = cfg
+                .with_chunked_prefill(chunk_tokens)
+                .with_step_budget(chunk_tokens + streams + 2);
+        }
+        let mut engine = Engine::new(be, cfg);
+        for i in 0..streams {
+            let toks: Vec<u32> = (0..8).map(|t| 33 + ((i * 17 + t) % 80) as u32).collect();
+            engine.submit_tokens(toks, max_new, SamplingParams::default(), true)?;
+        }
+        for i in 0..long_prompts {
+            let toks: Vec<u32> = (0..long_len)
+                .map(|t| 33 + ((i * 31 + t * 7) % 80) as u32)
+                .collect();
+            engine.submit_tokens(toks, 4, SamplingParams::default(), true)?;
+        }
+        engine.run_to_completion()?;
+        let m = &mut engine.metrics;
+        rows.push(ChunkCompareRow {
+            mode,
+            itl_sim_p50_s: m.itl_sim.p50(),
+            itl_sim_p95_s: m.itl_sim.p95(),
+            itl_sim_max_s: m.itl_sim.max(),
+            latency_sim_s: m.total_latency_sim_s(),
+            throughput_sim: m.throughput_sim(),
+            prefill_chunks: m.prefill_chunks,
+            chunk_stall_sim_s: m.chunk_stall_s,
+            tokens: m.tokens_generated,
+        });
+    }
+    Ok(rows)
 }
 
 /// Percentage delta of `new` vs `base` where *lower is better*

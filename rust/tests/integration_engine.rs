@@ -2,12 +2,19 @@
 //! batched serving, all five opt configs, output agreement between the
 //! baseline and the optimized paths, and the greedy answer path used by
 //! the accuracy tables.  SKIPs without artifacts.
+//!
+//! The chunked-prefill section at the bottom runs on the deterministic
+//! mock backend and needs no artifacts: long-prompt admission past the
+//! step budget, resume-from-offset of partial prefills, preemption
+//! recovery, and the p95 decode inter-token latency win.
 
-use llm_coopt::config::{artifacts_dir, EngineConfig, ALL_CONFIGS, COOPT, ORIGINAL};
+use llm_coopt::config::{artifacts_dir, CacheGeometry, EngineConfig, ALL_CONFIGS, COOPT, ORIGINAL};
 use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::runtime::mock::MockBackend;
 use llm_coopt::runtime::{artifacts_available, Runtime};
-use llm_coopt::sampling::mcq_scores;
+use llm_coopt::sampling::{mcq_scores, SamplingParams};
 use llm_coopt::tokenizer::Tokenizer;
+use llm_coopt::workload::harness::run_chunk_compare;
 
 fn runtime() -> Option<Runtime> {
     let dir = artifacts_dir();
@@ -137,5 +144,137 @@ fn sim_time_orders_configs_like_fig6() {
         "coopt {:?} < original {:?}",
         total["coopt"],
         total["original"]
+    );
+}
+
+// ---------------------------------------------------------------------------
+// chunked prefill (Opt-Pa step 1) — mock backend, no artifacts needed
+// ---------------------------------------------------------------------------
+
+/// A prompt longer than the per-step token budget is undeliverable in
+/// one-shot mode (the engine fails loudly instead of hanging) and
+/// completes once chunked prefill splits it across steps.
+#[test]
+fn long_prompt_admission_needs_chunked_prefill() {
+    let long: Vec<u32> = (0..100).map(|i| 33 + (i % 90)).collect();
+
+    // one-shot, step budget 32 < prompt: admission is impossible
+    let be = MockBackend::new().with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_step_budget(32);
+    let mut e = Engine::new(be, cfg);
+    e.submit_tokens(long.clone(), 4, SamplingParams::default(), false)
+        .unwrap();
+    let err = e.run_to_completion().unwrap_err().to_string();
+    assert!(err.contains("stuck"), "unexpected error: {err}");
+
+    // same budget with chunking: the prompt lands window by window
+    let be = MockBackend::new().with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_step_budget(32)
+        .with_chunked_prefill(16);
+    let mut e = Engine::new(be, cfg);
+    e.submit_tokens(long, 4, SamplingParams::default(), false)
+        .unwrap();
+    let results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].generated_tokens, 4);
+    assert!(e.metrics.prefill_chunks >= 7, "chunks: {}", e.metrics.prefill_chunks);
+    assert_eq!(e.cache_stats().blocks_used, 0);
+}
+
+/// A partially-prefilled prompt resumes from its committed offset across
+/// steps (never restarting at zero) while decode streams keep running.
+#[test]
+fn partial_prefill_resumes_from_committed_offset() {
+    let be = MockBackend::new().with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_step_budget(24)
+        .with_chunked_prefill(16);
+    let mut e = Engine::new(be, cfg);
+    // streams short enough (3 tokens) that they always land as a single
+    // window — every multi-window trace entry below belongs to the long
+    // prompt
+    for i in 0..3 {
+        e.submit(GenRequest::greedy(format!("s{i}"), 16)).unwrap();
+    }
+    let long: Vec<u32> = (0..96).map(|i| 40 + (i % 80)).collect();
+    let long_id = e
+        .submit_tokens(long, 3, SamplingParams::default(), false)
+        .unwrap();
+    let results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), 4);
+    let long_result = results.iter().find(|r| r.id == long_id).unwrap();
+    assert_eq!(long_result.generated_tokens, 3);
+
+    // the long prompt's windows: strictly increasing offsets, each
+    // resuming exactly where the previous ended — no restarts
+    let long_windows: Vec<(i32, i32)> = e
+        .backend
+        .chunk_trace
+        .iter()
+        .copied()
+        .filter(|&(o, l)| o > 0 || l >= 10)
+        .collect();
+    assert!(long_windows.len() >= 4, "windows: {:?}", e.backend.chunk_trace);
+    let mut expect = long_windows[0].0;
+    for &(off, len) in &long_windows {
+        assert_eq!(off, expect, "window resumed from committed offset");
+        expect = off + len;
+    }
+    assert_eq!(expect, 96, "prefill completed exactly at the prompt length");
+    assert_eq!(e.cache_stats().blocks_used, 0);
+}
+
+/// Pool pressure mid-prefill: preemption by recompute recovers and every
+/// request still completes with a clean pool.
+#[test]
+fn preempted_partial_prefill_recovers() {
+    let geometry = CacheGeometry {
+        block_size: 4,
+        max_blocks: 16,
+        num_pool_blocks: 14,
+        max_batch: 4,
+        max_seq: 48,
+    };
+    let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_step_budget(16)
+        .with_chunked_prefill(8);
+    let mut e = Engine::new(be, cfg);
+    for i in 0..2 {
+        e.submit(GenRequest::greedy(format!("ss {i}"), 12)).unwrap();
+    }
+    let long: Vec<u32> = (0..32).map(|i| 40 + (i % 80)).collect();
+    e.submit_tokens(long, 2, SamplingParams::default(), false)
+        .unwrap();
+    let results = e.run_to_completion().unwrap();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert!(r.generated_tokens >= 1, "every request makes progress");
+    }
+    assert_eq!(e.cache_stats().blocks_used, 0, "no leaked blocks after preemption");
+}
+
+/// Acceptance: with a prompt ≥ 4x the chunk budget running alongside 4
+/// decode streams, chunked prefill lowers the p95 (and worst-case)
+/// simulated decode inter-token latency vs the one-shot baseline.
+#[test]
+fn chunked_prefill_lowers_p95_decode_itl() {
+    let rows = run_chunk_compare(16, 3, 4, 24).unwrap();
+    let one = rows.iter().find(|r| r.mode == "oneshot").unwrap();
+    let chk = rows.iter().find(|r| r.mode == "chunked").unwrap();
+    assert_eq!(one.tokens, chk.tokens, "same generated workload");
+    assert!(chk.prefill_chunks >= 3 * 4, "long prompts actually chunked");
+    assert!(
+        chk.itl_sim_p95_s < one.itl_sim_p95_s,
+        "p95 itl: chunked {} vs one-shot {}",
+        chk.itl_sim_p95_s,
+        one.itl_sim_p95_s
+    );
+    assert!(
+        chk.itl_sim_max_s < one.itl_sim_max_s,
+        "max itl: chunked {} vs one-shot {}",
+        chk.itl_sim_max_s,
+        one.itl_sim_max_s
     );
 }

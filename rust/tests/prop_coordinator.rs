@@ -16,6 +16,7 @@ use llm_coopt::config::{CacheGeometry, EngineConfig, COOPT, ORIGINAL};
 use llm_coopt::coordinator::{Engine, FinishReason, GenRequest};
 use llm_coopt::kvcache::CacheManager;
 use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::sampling::SamplingParams;
 use llm_coopt::util::quickprop::{check, gens};
 use llm_coopt::util::rng::Rng;
 
@@ -142,6 +143,110 @@ fn fcfs_completion_order_for_identical_requests() {
         sorted.sort();
         ids == sorted
     });
+}
+
+/// Opt-Pa step 1 equivalence: for random prompts, chunk sizes, and step
+/// budgets, greedy decoding with chunked prefill produces token-for-token
+/// identical output to one-shot prefill, with identical final cache
+/// accounting (acceptance: ≥ 100 random cases).
+#[test]
+fn chunked_prefill_equals_oneshot_greedy() {
+    check(
+        120,
+        gens::pair(
+            gens::pair(gens::usize_to(99), gens::usize_to(39)),
+            gens::pair(gens::usize_to(64), gens::usize_to(1000)),
+        ),
+        |&((len0, chunk0), (budget0, seed)): &((usize, usize), (usize, usize))| {
+            let long_len = 1 + len0; // 1..=100 prompt tokens
+            let chunk = 1 + chunk0; // 1..=40 tokens per window
+            let budget = 8 + budget0; // 8..=72 shared step tokens
+            let mut rng = Rng::new(seed as u64 ^ 0xC0DE);
+            let long: Vec<u32> = (0..long_len).map(|_| 33 + rng.below(200) as u32).collect();
+            let streams = seed % 3; // 0..=2 short decode streams alongside
+            let stream_toks: Vec<Vec<u32>> = (0..streams)
+                .map(|_| (0..1 + rng.below(10)).map(|_| 33 + rng.below(200) as u32).collect())
+                .collect();
+
+            let run = |chunked: bool| {
+                let be = MockBackend::new().with_opt(COOPT);
+                let mut cfg = EngineConfig::new("llama-7b-sim", COOPT);
+                if chunked {
+                    cfg = cfg.with_chunked_prefill(chunk).with_step_budget(budget);
+                }
+                let mut e = Engine::new(be, cfg).without_cost_model();
+                for t in &stream_toks {
+                    e.submit_tokens(t.clone(), 3, SamplingParams::default(), false)
+                        .unwrap();
+                }
+                e.submit_tokens(long.clone(), 5, SamplingParams::default(), false)
+                    .unwrap();
+                let mut r = e.run_to_completion().unwrap();
+                r.sort_by_key(|x| x.id);
+                let outs: Vec<Vec<u32>> = r.into_iter().map(|x| x.tokens).collect();
+                (outs, e.cache_stats())
+            };
+            let (base, base_stats) = run(false);
+            let (ours, our_stats) = run(true);
+            base == ours
+                && base_stats.blocks_used == our_stats.blocks_used
+                && base_stats.blocks_used == 0
+                && base_stats.total_writes == our_stats.total_writes
+                && base_stats.prefix_hits == our_stats.prefix_hits
+        },
+    );
+}
+
+/// Cache-level Opt-Pa equivalence: committing a prompt as arbitrary
+/// (even unaligned) windows yields the same block counts and write
+/// totals as one-shot prefill, for both the SkipSet path and the padded
+/// baseline.
+#[test]
+fn chunked_cache_commit_matches_oneshot() {
+    check(
+        150,
+        gens::pair(gens::pair(gens::usize_to(15), gens::usize_to(6)), gens::usize_to(1000)),
+        |&((len0, chunk0), seed): &((usize, usize), usize)| {
+            let len = 1 + len0; // 1..=16 (geometry max_seq)
+            let chunk = 1 + chunk0; // 1..=7, deliberately misaligned vs bs 4
+            let geometry = CacheGeometry {
+                block_size: 4,
+                max_blocks: 8,
+                num_pool_blocks: 32,
+                max_batch: 4,
+                max_seq: 16,
+            };
+            let mut rng = Rng::new(seed as u64);
+            let prompt: Vec<u32> = (0..len).map(|_| rng.below(200) as u32).collect();
+            for opt in [COOPT, ORIGINAL] {
+                let mut one = CacheManager::new(geometry);
+                let p = one.prefill(1, &prompt, &opt).unwrap();
+                let mut chunked = CacheManager::new(geometry);
+                let mut off = 0;
+                let mut written = 0;
+                let mut skipped = 0;
+                while off < len {
+                    let take = chunk.min(len - off);
+                    let fin = off + take == len;
+                    let c = chunked
+                        .prefill_chunk(1, &prompt, off, take, &opt, fin)
+                        .unwrap();
+                    written += c.written;
+                    skipped += c.skipped;
+                    off += take;
+                }
+                if written != p.written
+                    || skipped != p.skipped
+                    || chunked.seq_len(1) != one.seq_len(1)
+                    || chunked.stats().blocks_used != one.stats().blocks_used
+                    || chunked.stats().total_writes != one.stats().total_writes
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,184 @@
+//! Offline stand-in for the `anyhow` crate (DESIGN.md "offline-toolchain
+//! substitutions"): the build environment has no crates.io access, so the
+//! subset of the anyhow API this workspace uses is implemented here —
+//! `Error`, `Result`, the `anyhow!`/`bail!`/`ensure!` macros, and the
+//! `Context` extension trait for `Result` and `Option`.
+//!
+//! Error values carry a single pre-rendered message; `context` prepends,
+//! so `{e}` and `{e:#}` both print the full chain outermost-first, which
+//! is what the callers format.
+
+use std::fmt;
+
+/// `anyhow::Result<T>` with the same defaulted error parameter.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A rendered error with its context chain folded into one message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (outermost-first, anyhow's `{:#}` shape).
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn macro_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} items");
+        assert_eq!(e.to_string(), "got 3 items");
+        let e = anyhow!("got {} items", 4);
+        assert_eq!(e.to_string(), "got 4 items");
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope: {}", 7);
+            }
+            let _f: Result<()> = Err(io_err()).map_err(Into::into);
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(inner(true).unwrap_err().to_string(), "nope: 7");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("slot {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "slot 2");
+    }
+
+    #[test]
+    fn from_std_error_keeps_sources() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("missing thing"));
+        // alternate formatting is the same rendered chain
+        assert_eq!(format!("{e:#}"), e.to_string());
+    }
+
+    #[test]
+    fn ensure_forms() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert_eq!(check(12).unwrap_err().to_string(), "x too big: 12");
+    }
+}
