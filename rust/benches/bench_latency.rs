@@ -19,10 +19,19 @@ use llm_coopt::config::{artifacts_dir, ALL_CONFIGS};
 use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
-use llm_coopt::workload::harness::{reduction_pct, run_chunk_compare, run_trace};
+use llm_coopt::workload::harness::{
+    reduction_pct, run_chunk_compare, run_trace, write_bench_serve,
+};
 use llm_coopt::workload::TraceSpec;
 
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("COOPT_BENCH_QUICK").is_ok();
+
+    // (the swap-vs-recompute tiered-KV comparison — including its ITL
+    // percentiles — is owned by bench_throughput, which writes the
+    // swap_vs_recompute section of BENCH_serve.json; running the same
+    // simulation here would just duplicate the rows)
+
     // --- chunked prefill: decode inter-token latency, mock + Z100 model
     println!("chunked prefill — p95 decode inter-token latency (sim), 4 streams + 3 long prompts");
     println!(
@@ -45,6 +54,8 @@ fn main() -> anyhow::Result<()> {
             reduction_pct(one.itl_sim_p95_s, chk.itl_sim_p95_s)
         );
     }
+    let path = write_bench_serve("chunked_prefill_latency", &chunk_report)?;
+    println!("serve summary -> {}", path.display());
     std::fs::create_dir_all("target/bench-reports")?;
     let mut chunk_top = Object::new();
     chunk_top.insert("figure", "chunked-prefill-latency");
@@ -60,7 +71,6 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let rt = Runtime::new(&dir)?;
-    let quick = std::env::var("COOPT_BENCH_QUICK").is_ok();
     let spec = TraceSpec {
         num_requests: if quick { 8 } else { 24 },
         max_new: if quick { 8 } else { 32 },

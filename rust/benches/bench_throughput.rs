@@ -18,10 +18,46 @@ use llm_coopt::config::{artifacts_dir, ALL_CONFIGS};
 use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
-use llm_coopt::workload::harness::{gain_pct, run_chunk_compare, run_trace};
+use llm_coopt::workload::harness::{
+    gain_pct, run_chunk_compare, run_swap_compare, run_trace, write_bench_serve,
+};
 use llm_coopt::workload::TraceSpec;
 
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("COOPT_BENCH_QUICK").is_ok();
+
+    // --- two-tier KV (Opt-KV tier manager): swap-instead-of-recompute
+    // throughput win under a pool-exhausting workload (no artifacts)
+    println!("tiered KV — Eq. 12 throughput under an undersized pool");
+    println!(
+        "{:<10} {:>14} {:>14} {:>9} {:>10} {:>10} {:>10}",
+        "mode", "sim tok/s", "total lat(s)", "preempt", "swap o/i", "recomp_tok", "tokens"
+    );
+    let swap_rows = run_swap_compare(if quick { 6 } else { 8 }, if quick { 12 } else { 24 })?;
+    let mut swap_report = Vec::new();
+    for r in &swap_rows {
+        println!(
+            "{:<10} {:>12.1}/s {:>14.4} {:>9} {:>6}/{:<3} {:>10} {:>10}",
+            r.mode,
+            r.throughput_sim,
+            r.latency_sim_s,
+            r.preemptions,
+            r.swap_outs,
+            r.swap_ins,
+            r.tokens_recomputed,
+            r.tokens
+        );
+        swap_report.push(r.to_json());
+    }
+    if let [base, swap] = &swap_rows[..] {
+        println!(
+            "throughput with the host tier: {:+.1}% (recomputed tokens {} -> {})\n",
+            gain_pct(base.throughput_sim, swap.throughput_sim),
+            base.tokens_recomputed,
+            swap.tokens_recomputed
+        );
+    }
+    write_bench_serve("swap_vs_recompute", &swap_report)?;
     // --- chunked prefill: Eq. 12 throughput, mock + Z100 model
     println!("chunked prefill — generation throughput (sim), 4 streams + 3 long prompts");
     println!(
@@ -44,6 +80,8 @@ fn main() -> anyhow::Result<()> {
             gain_pct(one.throughput_sim, chk.throughput_sim)
         );
     }
+    let path = write_bench_serve("chunked_prefill_throughput", &chunk_report)?;
+    println!("serve summary -> {}", path.display());
     std::fs::create_dir_all("target/bench-reports")?;
     let mut chunk_top = Object::new();
     chunk_top.insert("figure", "chunked-prefill-throughput");
@@ -59,7 +97,6 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let rt = Runtime::new(&dir)?;
-    let quick = std::env::var("COOPT_BENCH_QUICK").is_ok();
     let spec = TraceSpec {
         num_requests: if quick { 8 } else { 24 },
         max_new: if quick { 8 } else { 32 },

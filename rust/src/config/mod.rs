@@ -193,6 +193,42 @@ impl CacheGeometry {
     }
 }
 
+/// How preemption exits when the device KV pool is exhausted and a host
+/// tier is configured (Opt-KV tier manager; deployment knob like
+/// `chunked_prefill`, so the five named opt configs are unaffected).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SwapPolicy {
+    /// cost-based: swap when the PCIe round trip is cheaper than
+    /// recomputing the victim's prefill (the platform model decides)
+    #[default]
+    Auto,
+    /// always swap when the host tier has capacity
+    Always,
+    /// never swap: drop-and-recompute (the single-tier baseline)
+    Never,
+}
+
+impl SwapPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(SwapPolicy::Auto),
+            "always" => Ok(SwapPolicy::Always),
+            "never" => Ok(SwapPolicy::Never),
+            other => Err(anyhow!(
+                "unknown swap policy '{other}' (expected auto|always|never)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SwapPolicy::Auto => "auto",
+            SwapPolicy::Always => "always",
+            SwapPolicy::Never => "never",
+        }
+    }
+}
+
 /// Engine/scheduler tunables.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -210,6 +246,12 @@ pub struct EngineConfig {
     pub chunked_prefill: bool,
     /// per-chunk token cap when `chunked_prefill` is on
     pub prefill_chunk_tokens: usize,
+    /// Opt-KV tier manager: host-tier capacity in blocks (0 disables the
+    /// two-tier hierarchy; preemption then always drops and recomputes)
+    pub host_pool_blocks: usize,
+    /// swap-vs-recompute preemption policy (only meaningful with a host
+    /// pool and a backend that supports KV swap)
+    pub swap_policy: SwapPolicy,
     /// default sampling params
     pub max_new_tokens: usize,
     pub temperature: f64,
@@ -227,6 +269,8 @@ impl EngineConfig {
             max_prefill_tokens: 256,
             chunked_prefill: opt.chunked_prefill,
             prefill_chunk_tokens: 32,
+            host_pool_blocks: 0,
+            swap_policy: SwapPolicy::Auto,
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: 0,
@@ -245,6 +289,20 @@ impl EngineConfig {
     /// Override the shared per-step token budget.
     pub fn with_step_budget(mut self, tokens: usize) -> Self {
         self.max_prefill_tokens = tokens.max(1);
+        self
+    }
+
+    /// Attach a host tier of `blocks` KV blocks (Opt-KV tier manager):
+    /// preemption may swap a victim's blocks over PCIe instead of
+    /// dropping them and recomputing its prefill.
+    pub fn with_host_pool(mut self, blocks: usize) -> Self {
+        self.host_pool_blocks = blocks;
+        self
+    }
+
+    /// Choose the swap-vs-recompute preemption policy.
+    pub fn with_swap_policy(mut self, policy: SwapPolicy) -> Self {
+        self.swap_policy = policy;
         self
     }
 }
@@ -500,6 +558,22 @@ mod tests {
         // degenerate values are clamped to something runnable
         let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_chunked_prefill(0);
         assert_eq!(cfg.prefill_chunk_tokens, 1);
+    }
+
+    #[test]
+    fn host_tier_knobs() {
+        // off by default: single-tier drop-and-recompute
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        assert_eq!(cfg.host_pool_blocks, 0);
+        assert_eq!(cfg.swap_policy, SwapPolicy::Auto);
+        let cfg = cfg.with_host_pool(64).with_swap_policy(SwapPolicy::Always);
+        assert_eq!(cfg.host_pool_blocks, 64);
+        assert_eq!(cfg.swap_policy, SwapPolicy::Always);
+        // parse round-trips
+        for p in [SwapPolicy::Auto, SwapPolicy::Always, SwapPolicy::Never] {
+            assert_eq!(SwapPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(SwapPolicy::parse("bogus").is_err());
     }
 
     #[test]

@@ -15,8 +15,8 @@
 //!    case.  A window that cannot get blocks preempts by recompute or is
 //!    retried from its committed offset on a later round;
 //! 3. commit the decode batch: reserve one slot per running sequence
-//!    (preempting by recompute when the pool is exhausted), build padded
-//!    decode inputs, run the decode graph, sample, advance, finish.
+//!    (preempting when the pool is exhausted), build padded decode
+//!    inputs, run the decode graph, sample, advance, finish.
 //!    Decodes are reserved out of the step budget before prefill windows,
 //!    so chunked prefill bounds decode inter-token stalls instead of
 //!    monopolizing steps;
@@ -24,6 +24,22 @@
 //!    (platform model) for the paper's Eq. 11/12 metrics, plus per-chunk
 //!    accounting (chunk count, inter-chunk stall, simulated decode
 //!    inter-token latency) for the Fig. 6/7-style chunking deltas.
+//!
+//! **Two-tier KV hierarchy (Opt-KV tier manager).**  With a host pool
+//! configured ([`EngineConfig::with_host_pool`]) and a backend that
+//! supports KV swap, preemption no longer always drops a victim's blocks:
+//! a cost-based policy ([`crate::config::SwapPolicy`]) compares the PCIe
+//! round trip of the victim's blocks (FP8 blocks move at half the FP16
+//! bytes) against re-running its prefill, and swaps when the transfer is
+//! cheaper.  Swapped sequences sit in the scheduler's `Swapped` state and
+//! come back through an **async prefetch queue**: at the end of each step
+//! the engine stages swap-ins one step ahead of the scheduler (oldest
+//! first, capacity- and batch-aware); the next step drains completed
+//! prefetches before scheduling, and the sequence resumes decoding at its
+//! exact offset — no token is ever recomputed on the swap path.  When
+//! nothing is runnable, a demand swap-in (prefetch miss) or, failing
+//! that, a drop-to-recompute keeps the engine from wedging.  Backends
+//! without swap support degrade to drop-and-recompute at construction.
 //!
 //! The engine is generic over [`Backend`] so the whole L3 logic is unit-
 //! tested against the contract-checking mock without artifacts.
@@ -33,7 +49,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, SwapPolicy};
 use crate::kvcache::{CacheManager, SeqId};
 use crate::metrics::{EngineMetrics, RequestMetrics};
 use crate::platform::{CostModel, SeqCostInput};
@@ -128,6 +144,12 @@ pub struct Engine<B: Backend> {
     /// the decode inter-token latency samples: a decode that waited for a
     /// prefill window pays for it)
     step_prefill_sim_s: f64,
+    /// async prefetch queue: sequences whose swap-in was staged at the end
+    /// of the previous step; they rejoin the running set at the start of
+    /// the next one (the copy overlaps the step in between)
+    in_flight_prefetch: Vec<SeqId>,
+    /// paper-scale bytes one swapped block moves over PCIe (metrics)
+    swap_block_bytes: f64,
 }
 
 impl<B: Backend> Engine<B> {
@@ -147,6 +169,15 @@ impl<B: Backend> Engine<B> {
             );
             cfg.chunked_prefill = false;
         }
+        if cfg.host_pool_blocks > 0 && !backend.supports_kv_swap() {
+            // a host tier the backend cannot copy into would wedge every
+            // swap; degrade to single-tier drop-and-recompute preemption
+            crate::log_warn!(
+                "backend lacks KV swap support; host tier disabled \
+                 (preemption falls back to drop-and-recompute)"
+            );
+            cfg.host_pool_blocks = 0;
+        }
         // budget at least one above the decode batch, so a full decode
         // round always leaves room for one prefill window (no starvation,
         // and the shared-budget invariant stays strict)
@@ -155,8 +186,16 @@ impl<B: Backend> Engine<B> {
         if cfg.chunked_prefill {
             sched = sched.with_chunked_prefill(cfg.prefill_chunk_tokens);
         }
+        let mut cache = CacheManager::new(geometry);
+        if cfg.host_pool_blocks > 0 {
+            cache.enable_host_tier(cfg.host_pool_blocks);
+        }
+        let swap_block_bytes = cost
+            .as_ref()
+            .map(|cm| cm.swap_block_bytes(backend.opt()))
+            .unwrap_or(0.0);
         Engine {
-            cache: CacheManager::new(geometry),
+            cache,
             sched,
             seqs: HashMap::new(),
             cost,
@@ -168,6 +207,8 @@ impl<B: Backend> Engine<B> {
             backend,
             finished: Vec::new(),
             step_prefill_sim_s: 0.0,
+            in_flight_prefetch: Vec::new(),
+            swap_block_bytes,
         }
     }
 
@@ -185,8 +226,32 @@ impl<B: Backend> Engine<B> {
         self.cache.stats()
     }
 
+    /// Host-tier occupancy (Opt-KV tier manager).
+    pub fn tier_stats(&self) -> crate::kvcache::tier::TierStats {
+        self.cache.tier_stats()
+    }
+
+    /// Engine metrics plus cache/tier stats as one JSON object — the
+    /// `GET /metrics` payload.
+    pub fn stats_json(&mut self) -> crate::util::json::Value {
+        let cs = self.cache.stats();
+        let ts = self.cache.tier_stats();
+        let mut v = self.metrics.to_json();
+        if let crate::util::json::Value::Object(o) = &mut v {
+            o.insert("cache_blocks_total", cs.blocks_total);
+            o.insert("cache_blocks_used", cs.blocks_used);
+            o.insert("cache_fragmentation", cs.fragmentation);
+            o.insert("cache_prefix_hits", cs.prefix_hits as usize);
+            o.insert("host_pool_blocks", ts.host_capacity_blocks);
+            o.insert("host_blocks_used", ts.host_used_blocks);
+            o.insert("swapped_seqs", ts.swapped_seqs);
+            o.insert("pinned_shared_blocks", ts.pinned_shared_blocks);
+        }
+        v
+    }
+
     pub fn num_pending(&self) -> usize {
-        self.sched.num_waiting() + self.sched.num_running()
+        self.sched.num_waiting() + self.sched.num_running() + self.sched.num_swapped()
     }
 
     /// Submit a request; returns its sequence id.
@@ -244,6 +309,10 @@ impl<B: Backend> Engine<B> {
         let round_t0 = Instant::now();
         let backend_wall_before = self.metrics.wall_prefill_s + self.metrics.wall_decode_s;
         self.step_prefill_sim_s = 0.0;
+        // prefetches staged at the end of the previous step have landed:
+        // swapped sequences rejoin the running set one step ahead of the
+        // decode batch that needs them (the copy overlapped that step)
+        self.drain_prefetches();
         let decision = self.sched.schedule(&self.cache, self.backend.opt());
 
         for work in decision.prefills.iter().copied() {
@@ -262,9 +331,9 @@ impl<B: Backend> Engine<B> {
         if !decodes.is_empty() {
             self.run_decode(&decodes)?;
         } else if decision.prefills.is_empty() && !self.sched.is_idle() {
-            // nothing runnable but work pending: the front request cannot be
-            // admitted; make room or fail loudly
-            if self.sched.num_running() == 0 {
+            // nothing runnable but work pending: resume a swapped
+            // sequence (prefetch miss), make room, or fail loudly
+            if self.sched.num_running() == 0 && !self.resume_swapped_now()? {
                 bail!(
                     "stuck: {} waiting requests but no admission possible \
                      (pool {} free blocks, step budget {} tokens{})",
@@ -279,6 +348,9 @@ impl<B: Backend> Engine<B> {
                 );
             }
         }
+
+        // stage swap-ins one step ahead of the scheduler (async prefetch)
+        self.issue_prefetches()?;
 
         // L3 overhead = round wallclock minus time spent inside backend calls
         let _ = self.backend.take_exec_time();
@@ -384,36 +456,35 @@ impl<B: Backend> Engine<B> {
         }
         let is_final = end == tokens.len();
 
-        // commit the window, preempting by recompute on pool exhaustion
-        // (mirrors the decode path); preempting *ourselves* drops the
-        // committed prefix and the sequence re-prefills from offset 0 on
-        // a later round
+        // commit the window, preempting on pool exhaustion (mirrors the
+        // decode path); the victim exits via swap or recompute per
+        // policy.  Preempting *ourselves* either swaps the committed
+        // prefix (resumed at the same offset later) or drops it (the
+        // sequence re-prefills from offset 0 on a later round)
         let plan = loop {
             match self
                 .cache
                 .prefill_chunk(id, &tokens, work.offset, work.tokens, &opt, is_final)
             {
                 Ok(p) => break p,
-                Err(_) => {
-                    let seqs = &self.seqs;
-                    let victim = self
-                        .sched
-                        .preempt_latest(|v| seqs.get(&v).map(|s| s.tokens.len()).unwrap_or(0));
-                    match victim {
-                        Some(v) if v != id => {
-                            self.preempt_free(v);
-                        }
-                        Some(v) => {
-                            self.preempt_free(v);
+                Err(_) => match self.preempt_one(&[])? {
+                    Some(v) if v != id => {}
+                    Some(_) => return Ok(()),
+                    None => {
+                        if !self.in_flight_prefetch.is_empty() || self.sched.num_swapped() > 0
+                        {
+                            // blocks are pinned by host-tier traffic;
+                            // retry this window on a later round once the
+                            // swapped sequences drain
                             return Ok(());
                         }
-                        None => bail!(
+                        bail!(
                             "stuck: prefill window of sequence {id} cannot get KV blocks \
                              (pool {} free)",
                             self.cache.num_free_blocks()
-                        ),
+                        )
                     }
-                }
+                },
             }
         };
         self.sched.record_prefill_progress(id, work.tokens);
@@ -478,9 +549,10 @@ impl<B: Backend> Engine<B> {
         let b = geometry.max_batch;
         let mb = geometry.max_blocks;
 
-        // 1. reserve a slot per sequence, preempting on pool exhaustion
-        let mut active: Vec<SeqId> = Vec::with_capacity(ids.len());
-        let mut slots: Vec<i32> = Vec::with_capacity(ids.len());
+        // 1. reserve a slot per sequence, preempting on pool exhaustion.
+        // (id, slot) stay paired so dropping a lane that was preempted
+        // after reserving can never desynchronize the decode inputs.
+        let mut lanes: Vec<(SeqId, i32)> = Vec::with_capacity(ids.len());
         let mut preempted_now: Vec<SeqId> = Vec::new();
         let allocs_before = self.cache.stats().blocks_used;
         for &id in ids.iter().take(b) {
@@ -490,8 +562,7 @@ impl<B: Backend> Engine<B> {
             loop {
                 match self.cache.append_token(id) {
                     Ok((slot, _pos)) => {
-                        active.push(id);
-                        slots.push(slot);
+                        lanes.push((id, slot));
                         break;
                     }
                     Err(_) => {
@@ -502,31 +573,30 @@ impl<B: Backend> Engine<B> {
                             self.finish_seq(id, FinishReason::MaxContext);
                             break;
                         }
-                        let seqs = &self.seqs;
-                        let victim = self
-                            .sched
-                            .preempt_latest(|v| seqs.get(&v).map(|s| s.tokens.len()).unwrap_or(0));
-                        match victim {
+                        // lanes that already reserved their decode slot
+                        // this step must not swap — their reserved slot
+                        // is only written by the decode pass below, so a
+                        // swap would preserve an unwritten position.
+                        // Dropping them is always safe.
+                        let appended: Vec<SeqId> = lanes.iter().map(|&(l, _)| l).collect();
+                        match self.preempt_one(&appended)? {
                             Some(v) if v != id => {
-                                self.preempt_free(v);
                                 preempted_now.push(v);
                                 continue;
                             }
-                            _ => {
-                                // preempting ourselves or nothing to preempt
-                                if let Some(v) = victim {
-                                    self.preempt_free(v);
-                                    preempted_now.push(v);
-                                }
+                            Some(v) => {
+                                // preempted ourselves
+                                preempted_now.push(v);
                                 break;
                             }
+                            None => break,
                         }
                     }
                 }
             }
         }
-        active.retain(|id| !preempted_now.contains(id));
-        if active.is_empty() {
+        lanes.retain(|(id, _)| !preempted_now.contains(id));
+        if lanes.is_empty() {
             return Ok(());
         }
         let new_blocks = self.cache.stats().blocks_used.saturating_sub(allocs_before);
@@ -537,14 +607,14 @@ impl<B: Backend> Engine<B> {
         let mut ctx_lens = vec![0i32; b];
         let mut slot_mapping = vec![-1i32; b];
         let mut block_tables = vec![0i32; b * mb];
-        let mut cost_inputs: Vec<SeqCostInput> = Vec::with_capacity(active.len());
-        for (lane, &id) in active.iter().enumerate() {
+        let mut cost_inputs: Vec<SeqCostInput> = Vec::with_capacity(lanes.len());
+        for (lane, &(id, slot)) in lanes.iter().enumerate() {
             let seq = &self.seqs[&id];
             let ctx = self.cache.seq_len(id); // includes the new token
             token_ids[lane] = *seq.tokens.last().unwrap() as i32;
             positions[lane] = (ctx - 1) as i32;
             ctx_lens[lane] = ctx as i32;
-            slot_mapping[lane] = slots[lane];
+            slot_mapping[lane] = slot;
             let row = self.cache.block_table_row(id);
             block_tables[lane * mb..(lane + 1) * mb].copy_from_slice(&row);
             cost_inputs.push(SeqCostInput {
@@ -566,7 +636,7 @@ impl<B: Backend> Engine<B> {
         self.metrics.decode_steps += 1;
 
         let sim_s = self.cost.as_ref().map(|cm| {
-            cm.decode_step(&cost_inputs, &opt, new_blocks, active.len())
+            cm.decode_step(&cost_inputs, &opt, new_blocks, lanes.len())
                 .total_s
         });
         if let Some(s) = sim_s {
@@ -575,15 +645,15 @@ impl<B: Backend> Engine<B> {
             // active sequence waited for this step's prefill windows too —
             // the stall chunked prefill exists to bound
             let itl = self.step_prefill_sim_s + s;
-            for _ in 0..active.len() {
+            for _ in 0..lanes.len() {
                 self.metrics.itl_sim.add(itl);
             }
         }
 
         // 4. sample + advance
         let vocab = self.backend.preset().vocab;
-        let per_seq_sim = sim_s.map(|s| s / active.len() as f64);
-        for (lane, &id) in active.iter().enumerate() {
+        let per_seq_sim = sim_s.map(|s| s / lanes.len() as f64);
+        for (lane, &(id, _)) in lanes.iter().enumerate() {
             let row = &logits[lane * vocab..(lane + 1) * vocab];
             let seq = self.seqs.get_mut(&id).unwrap();
             let tok = sample(row, &seq.sampling, &mut self.rng);
@@ -597,16 +667,170 @@ impl<B: Backend> Engine<B> {
         Ok(())
     }
 
-    /// Recompute-preemption bookkeeping for a victim the scheduler just
-    /// moved back to waiting: free its cache blocks and reset its chunk
-    /// clock so `chunk_stall_s` never counts the requeue span as an
-    /// inter-window stall.
-    fn preempt_free(&mut self, victim: SeqId) {
-        self.cache.free_seq(victim);
+    /// Evict one running sequence to make room: the newest admission is
+    /// the victim; its exit — host-tier swap or drop-and-recompute — is
+    /// chosen per the [`SwapPolicy`] and the platform cost model.
+    /// Sequences in `no_swap` (lanes that already reserved an unwritten
+    /// decode slot this step) always drop.  Returns the victim id, or
+    /// `None` when nothing is evictable.
+    fn preempt_one(&mut self, no_swap: &[SeqId]) -> Result<Option<SeqId>> {
+        let Some(victim) = self.sched.peek_preempt_victim() else {
+            return Ok(None);
+        };
+        let committed = self.cache.seq_len(victim);
+        if !no_swap.contains(&victim) && self.should_swap(victim) {
+            // swap exit: sole-owner blocks stream to the host tier; the
+            // scheduler keeps the sequence's progress for an exact resume
+            let ops = self.cache.swap_out(victim)?;
+            for &(blk, slot) in &ops.copies {
+                self.backend.swap_out(blk, slot)?;
+            }
+            self.sched.preempt_swap(victim);
+            self.metrics.swap_outs += 1;
+            self.metrics.blocks_swapped_out += ops.copies.len() as u64;
+            self.metrics.bytes_swapped_out +=
+                (ops.copies.len() as f64 * self.swap_block_bytes) as u64;
+            self.metrics.recompute_avoided_tokens += ops.tokens as u64;
+            if let Some(cm) = &self.cost {
+                self.metrics.sim_swap_s +=
+                    cm.swap_transfer(ops.copies.len(), self.backend.opt()).total_s;
+            }
+        } else {
+            // recompute exit: blocks dropped, the whole committed prefix
+            // is re-prefilled on re-admission
+            let full_len = self.seqs.get(&victim).map(|s| s.tokens.len()).unwrap_or(0);
+            self.cache.free_seq(victim);
+            self.sched.preempt_drop(victim, full_len);
+            self.metrics.tokens_recomputed += committed as u64;
+        }
+        // either exit resets the victim's chunk clock so `chunk_stall_s`
+        // never counts the off-device span as an inter-window stall
         if let Some(seq) = self.seqs.get_mut(&victim) {
             seq.last_chunk_sim_t = None;
         }
         self.metrics.preemptions += 1;
+        Ok(Some(victim))
+    }
+
+    /// The Opt-KV evict-vs-recompute decision for `victim`.
+    fn should_swap(&self, victim: SeqId) -> bool {
+        if self.cfg.swap_policy == SwapPolicy::Never || !self.cache.has_host_tier() {
+            return false;
+        }
+        // None = not resident or the host pool cannot take it
+        let Some(plan) = self.cache.swap_out_plan(victim) else {
+            return false;
+        };
+        match self.cfg.swap_policy {
+            SwapPolicy::Always => true,
+            SwapPolicy::Never => unreachable!("handled above"),
+            SwapPolicy::Auto => match &self.cost {
+                Some(cm) => {
+                    cm.swap_beats_recompute(plan.host_blocks, plan.tokens, self.backend.opt())
+                }
+                // no platform model: preserving work beats redoing it
+                None => true,
+            },
+        }
+    }
+
+    /// Execute a swap-in end to end (cache metadata + backend copies);
+    /// returns the number of blocks moved.
+    fn swap_in_seq(&mut self, id: SeqId) -> Result<usize> {
+        let ops = self.cache.swap_in(id)?;
+        for &(slot, blk) in &ops.copies {
+            self.backend.swap_in(slot, blk)?;
+        }
+        let n = ops.copies.len();
+        self.metrics.swap_ins += 1;
+        self.metrics.blocks_swapped_in += n as u64;
+        self.metrics.bytes_swapped_in += (n as f64 * self.swap_block_bytes) as u64;
+        if let Some(cm) = &self.cost {
+            self.metrics.sim_swap_s += cm.swap_transfer(n, self.backend.opt()).total_s;
+        }
+        Ok(n)
+    }
+
+    /// Start of step: prefetches staged last step have completed; their
+    /// sequences rejoin the running set (their swap latency overlapped
+    /// the intervening step — a prefetch hit).
+    fn drain_prefetches(&mut self) {
+        for id in std::mem::take(&mut self.in_flight_prefetch) {
+            if self.sched.resume_swapped(id) {
+                self.metrics.prefetch_hits += 1;
+            }
+        }
+    }
+
+    /// End of step: stage swap-ins one step ahead of the scheduler's
+    /// decode batch, oldest swapped sequence first, while device blocks
+    /// and batch slots allow.
+    fn issue_prefetches(&mut self) -> Result<()> {
+        if !self.cache.has_host_tier() {
+            return Ok(());
+        }
+        for id in self.sched.swapped_ids() {
+            if self.in_flight_prefetch.contains(&id) {
+                continue;
+            }
+            if self.sched.num_running() + self.in_flight_prefetch.len() >= self.sched.max_batch()
+            {
+                break;
+            }
+            let needed = self.cache.swap_in_blocks_needed(id);
+            // headroom: every running sequence — and every prefetch
+            // already staged this pass — may claim a fresh block next
+            // step; don't trade one preemption for another
+            let headroom = self.sched.num_running() + self.in_flight_prefetch.len() + 1;
+            if self.cache.num_free_blocks() < needed + headroom {
+                break; // FCFS: a smaller sequence must not jump the queue
+            }
+            self.swap_in_seq(id)?;
+            self.in_flight_prefetch.push(id);
+        }
+        Ok(())
+    }
+
+    /// Nothing is runnable: bring a swapped sequence back on demand (a
+    /// prefetch miss — the engine waits on the transfer), or abandon its
+    /// host copy and recompute.  Returns false when there is nothing to
+    /// resume (genuinely stuck).
+    fn resume_swapped_now(&mut self) -> Result<bool> {
+        if !self.in_flight_prefetch.is_empty() {
+            // staged prefetches resume at the next step
+            return Ok(true);
+        }
+        let Some(&id) = self.sched.swapped_ids().first() else {
+            return Ok(false);
+        };
+        if self.cache.num_free_blocks() < self.cache.swap_in_blocks_needed(id) {
+            // the device pool cannot take it back even now: abandon the
+            // host copy and recompute (a backend copy failure below, by
+            // contrast, is a real error and propagates)
+            let committed = self.cache.swapped_len(id);
+            let full_len = self.seqs.get(&id).map(|s| s.tokens.len()).unwrap_or(0);
+            for slot in self.cache.drop_swapped(id) {
+                self.backend.swap_discard(slot)?;
+            }
+            self.sched.drop_swapped(id, full_len);
+            // the swap-out's credit was not earned after all: the tokens
+            // are recomputed, not avoided
+            self.metrics.recompute_avoided_tokens = self
+                .metrics
+                .recompute_avoided_tokens
+                .saturating_sub(committed as u64);
+            self.metrics.tokens_recomputed += committed as u64;
+            return Ok(true);
+        }
+        let blocks = self.swap_in_seq(id)?;
+        self.sched.resume_swapped(id);
+        self.metrics.prefetch_misses += 1;
+        if let Some(cm) = &self.cost {
+            // demand swap-in: the engine stalls on the transfer
+            self.metrics.sim_swap_blocked_s +=
+                cm.swap_transfer(blocks, self.backend.opt()).total_s;
+        }
+        Ok(true)
     }
 
     fn check_finish(&mut self, id: SeqId, last_token: u32) {
@@ -921,6 +1145,151 @@ mod tests {
         // ...and the streams decoded in between (interleaving, not phases)
         assert!(e.metrics.decode_steps >= 19);
         assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    fn tiered_engine(pool: usize, host: usize, policy: SwapPolicy) -> Engine<MockBackend> {
+        let geometry = crate::config::CacheGeometry {
+            block_size: 4,
+            max_blocks: 16,
+            num_pool_blocks: pool,
+            max_batch: 4,
+            max_seq: 48,
+        };
+        let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_host_pool(host)
+            .with_swap_policy(policy);
+        Engine::new(be, cfg)
+    }
+
+    fn pressure_reqs() -> Vec<GenRequest> {
+        (0..6)
+            .map(|i| GenRequest::greedy(format!("pp{i} {}", "y".repeat(16)), 12))
+            .collect()
+    }
+
+    #[test]
+    fn swap_preemption_is_semantically_invisible() {
+        // unconstrained reference: a pool that never preempts
+        let mut base = tiered_engine(96, 0, SwapPolicy::Never);
+        let expected = base.generate(pressure_reqs()).unwrap();
+        assert_eq!(base.metrics.preemptions, 0, "reference must not preempt");
+
+        for policy in [SwapPolicy::Always, SwapPolicy::Auto] {
+            let mut e = tiered_engine(12, 64, policy);
+            let got = e.generate(pressure_reqs()).unwrap();
+            assert_eq!(expected.len(), got.len());
+            for (a, b) in expected.iter().zip(&got) {
+                assert_eq!(a.tokens, b.tokens, "{policy:?}: swap must not change outputs");
+                assert_eq!(a.finish, b.finish);
+            }
+            assert!(e.metrics.swap_outs > 0, "{policy:?}: pool pressure must swap");
+            assert!(e.metrics.recompute_avoided_tokens > 0);
+            assert_eq!(e.cache_stats().blocks_used, 0);
+            assert_eq!(e.tier_stats().host_used_blocks, 0, "host tier drains");
+            // every host-tier resume is a prefetch hit or a demand miss
+            assert_eq!(
+                e.metrics.prefetch_hits + e.metrics.prefetch_misses,
+                e.metrics.swap_ins
+            );
+            // the mock's copy semantics saw matched out/in block traffic
+            let outs = e.backend.swap_trace.iter().filter(|t| t.0 == 'O').count() as u64;
+            assert_eq!(outs, e.metrics.blocks_swapped_out);
+        }
+    }
+
+    #[test]
+    fn swap_avoids_recompute_that_drop_pays() {
+        let run = |host, policy| {
+            let mut e = tiered_engine(12, host, policy);
+            e.generate(pressure_reqs()).unwrap();
+            (
+                e.metrics.tokens_recomputed,
+                e.metrics.recompute_avoided_tokens,
+                e.metrics.preemptions,
+            )
+        };
+        let (recomputed_drop, avoided_drop, pre_drop) = run(0, SwapPolicy::Never);
+        assert!(pre_drop > 0, "workload must force preemption");
+        assert!(recomputed_drop > 0, "drop-and-recompute pays in tokens");
+        assert_eq!(avoided_drop, 0);
+        let (recomputed_swap, avoided_swap, pre_swap) = run(64, SwapPolicy::Always);
+        assert!(pre_swap > 0);
+        assert!(avoided_swap > 0);
+        assert!(
+            recomputed_swap < recomputed_drop,
+            "tiered path recomputes less: {recomputed_swap} vs {recomputed_drop}"
+        );
+    }
+
+    #[test]
+    fn swap_falls_back_to_drop_when_host_pool_tiny() {
+        // host pool of 1 block cannot take any victim: every preemption
+        // must fall back to recompute, and the run still completes
+        let mut e = tiered_engine(12, 1, SwapPolicy::Always);
+        let results = e.generate(pressure_reqs()).unwrap();
+        assert_eq!(results.len(), 6);
+        assert!(e.metrics.preemptions > 0);
+        assert_eq!(e.cache_stats().blocks_used, 0);
+        assert_eq!(e.tier_stats().host_used_blocks, 0);
+    }
+
+    #[test]
+    fn host_tier_disabled_without_backend_swap_support() {
+        struct NoSwap(MockBackend);
+        impl Backend for NoSwap {
+            fn preset(&self) -> &crate::config::ModelPreset {
+                self.0.preset()
+            }
+            fn geometry(&self) -> &crate::config::CacheGeometry {
+                self.0.geometry()
+            }
+            fn opt(&self) -> &crate::config::OptConfig {
+                self.0.opt()
+            }
+            fn prefill(&mut self, t: &[i32], l: i32, s: &[i32]) -> Result<Vec<f32>> {
+                self.0.prefill(t, l, s)
+            }
+            fn decode(
+                &mut self,
+                t: &[i32],
+                p: &[i32],
+                b: &[i32],
+                c: &[i32],
+                s: &[i32],
+            ) -> Result<Vec<f32>> {
+                self.0.decode(t, p, b, c, s)
+            }
+            fn reset_cache(&mut self) -> Result<()> {
+                self.0.reset_cache()
+            }
+            fn take_exec_time(&mut self) -> std::time::Duration {
+                self.0.take_exec_time()
+            }
+        }
+        // swap defaults to unsupported: the engine degrades instead of
+        // wedging the first time a preemption tries to swap
+        let be = NoSwap(MockBackend::new().with_opt(COOPT));
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_host_pool(64);
+        let mut e = Engine::new(be, cfg);
+        assert_eq!(e.cfg.host_pool_blocks, 0, "degraded to single tier");
+        let r = e
+            .generate(vec![GenRequest::greedy("still serves", 4)])
+            .unwrap();
+        assert_eq!(r[0].generated_tokens, 4);
+        assert_eq!(e.metrics.swap_outs, 0);
+    }
+
+    #[test]
+    fn stats_json_surfaces_tier_state() {
+        let mut e = tiered_engine(12, 64, SwapPolicy::Always);
+        e.generate(pressure_reqs()).unwrap();
+        let v = e.stats_json();
+        assert_eq!(v.req_usize("host_pool_blocks").unwrap(), 64);
+        assert_eq!(v.req_usize("host_blocks_used").unwrap(), 0);
+        assert!(v.req_usize("swap_outs").unwrap() > 0);
+        assert!(v.req_f64("prefetch_hit_rate").unwrap() >= 0.0);
+        assert_eq!(v.req_usize("cache_blocks_used").unwrap(), 0);
     }
 
     #[test]

@@ -19,12 +19,23 @@
 //! * fragmentation accounting (allocated vs live slots — the Fig. 3
 //!   motivation) and pool bytes per config (FP8 halves traffic;
 //!   the platform model consumes these numbers).
+//! * a **two-tier residency extension** ([`tier`]): an optional host-side
+//!   block pool with block-granular `swap_out`/`swap_in`, so preemption
+//!   can preserve a victim's KV over PCIe instead of recomputing it.
+//!   Prefix-hash sharing stays correct across tiers — a shared block is
+//!   never moved while another reader holds it (the swapped sequence just
+//!   keeps its refcount), and a swapped-out sole-owner block leaves the
+//!   prefix index until swap-in restores it.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
 use crate::config::{CacheGeometry, OptConfig};
+
+pub mod tier;
+
+use self::tier::{HostPool, SwapEntry, SwapInOps, SwapOutOps, SwapOutPlan, SwappedSeq, TierStats};
 
 pub type BlockId = u32;
 pub type SeqId = u64;
@@ -151,6 +162,10 @@ pub struct CacheManager {
     prefix_index: HashMap<u64, BlockId>,
     /// inverse map for eviction when a block is freed
     block_hash: HashMap<BlockId, u64>,
+    /// optional host tier (Opt-KV tier manager); `None` = single-tier
+    host: Option<HostPool>,
+    /// sequences whose KV currently lives (partly) in the host tier
+    swapped: HashMap<SeqId, SwappedSeq>,
     prefix_hits: u64,
     skipped_writes: u64,
     total_writes: u64,
@@ -164,10 +179,24 @@ impl CacheManager {
             seqs: HashMap::new(),
             prefix_index: HashMap::new(),
             block_hash: HashMap::new(),
+            host: None,
+            swapped: HashMap::new(),
             prefix_hits: 0,
             skipped_writes: 0,
             total_writes: 0,
         }
+    }
+
+    /// Attach a host tier of `capacity_blocks` blocks (Opt-KV tier
+    /// manager).  Zero capacity leaves the cache single-tier.
+    pub fn enable_host_tier(&mut self, capacity_blocks: usize) {
+        if capacity_blocks > 0 {
+            self.host = Some(HostPool::new(capacity_blocks));
+        }
+    }
+
+    pub fn has_host_tier(&self) -> bool {
+        self.host.is_some()
     }
 
     pub fn num_free_blocks(&self) -> usize {
@@ -446,12 +475,15 @@ impl CacheManager {
             bail!("attempted write into shared block {phys}");
         }
         if self.alloc.refcount(phys) > 1 {
-            // decref the shared copy and take a private block
-            self.alloc.decref(phys);
+            // take a private block, then release the shared copy — the
+            // reverse order would leak our reference if the pool is
+            // exhausted (the table would keep pointing at a block we no
+            // longer own)
             let fresh = self
                 .alloc
                 .alloc()
                 .ok_or_else(|| anyhow::anyhow!("out of KV blocks during COW"))?;
+            self.alloc.decref(phys);
             st.table[b] = fresh;
         }
         let phys = st.table[b];
@@ -472,7 +504,8 @@ impl CacheManager {
         row
     }
 
-    /// Free a sequence's blocks (end of generation or preemption).
+    /// Free a sequence's blocks (end of generation or preemption).  Also
+    /// covers sequences resident in the host tier.
     pub fn free_seq(&mut self, id: SeqId) {
         if let Some(st) = self.seqs.remove(&id) {
             for b in st.table {
@@ -480,6 +513,208 @@ impl CacheManager {
                     self.unindex_block(b);
                 }
             }
+        } else if self.swapped.contains_key(&id) {
+            self.drop_swapped(id);
+        }
+    }
+
+    // ---- two-tier residency (Opt-KV tier manager) -------------------------
+
+    pub fn is_swapped(&self, id: SeqId) -> bool {
+        self.swapped.contains_key(&id)
+    }
+
+    /// Committed context length of a swapped sequence (the exact decode
+    /// offset it resumes at).
+    pub fn swapped_len(&self, id: SeqId) -> usize {
+        self.swapped.get(&id).map(|s| s.len).unwrap_or(0)
+    }
+
+    /// Device blocks a swap-in of `id` must allocate.
+    pub fn swap_in_blocks_needed(&self, id: SeqId) -> usize {
+        self.swapped.get(&id).map(|s| s.host_blocks()).unwrap_or(0)
+    }
+
+    /// What swapping `id` out would involve, or `None` when the host tier
+    /// is absent, the sequence is not resident, or the host pool cannot
+    /// take its sole-owner blocks.  Read-only: policy runs on this before
+    /// anything is mutated.
+    pub fn swap_out_plan(&self, id: SeqId) -> Option<SwapOutPlan> {
+        let host = self.host.as_ref()?;
+        let st = self.seqs.get(&id)?;
+        let mut host_blocks = 0usize;
+        let mut shared_blocks = 0usize;
+        for &phys in &st.table {
+            if self.alloc.refcount(phys) == 1 {
+                host_blocks += 1;
+            } else {
+                shared_blocks += 1;
+            }
+        }
+        if host_blocks > host.free() {
+            return None;
+        }
+        Some(SwapOutPlan {
+            host_blocks,
+            shared_blocks,
+            tokens: st.len,
+        })
+    }
+
+    /// Move `id`'s sole-owner blocks to the host tier and release their
+    /// device blocks.  Shared blocks stay device-resident with this
+    /// sequence's reference intact, so prefix sharing survives the swap.
+    ///
+    /// The caller **must** execute the returned copies through the
+    /// backend before anything else can allocate (and overwrite) the
+    /// freed device blocks — the engine does both in one breath.
+    pub fn swap_out(&mut self, id: SeqId) -> Result<SwapOutOps> {
+        if self.swap_out_plan(id).is_none() {
+            bail!("cannot swap out sequence {id} (no host tier, not resident, or host pool full)");
+        }
+        let st = self.seqs.remove(&id).expect("planned above");
+        let mut entries = Vec::with_capacity(st.table.len());
+        let mut copies = Vec::new();
+        for &phys in &st.table {
+            if self.alloc.refcount(phys) == 1 {
+                let slot = self
+                    .host
+                    .as_mut()
+                    .expect("planned above")
+                    .alloc()
+                    .expect("capacity checked by the plan");
+                let hash = self.block_hash.get(&phys).copied();
+                let freed = self.alloc.decref(phys);
+                debug_assert!(freed);
+                self.unindex_block(phys);
+                copies.push((phys, slot));
+                entries.push(SwapEntry::Host { slot, hash });
+            } else {
+                // shared: keep our reference; the block may only leave the
+                // device once every reader has released it
+                entries.push(SwapEntry::Device(phys));
+            }
+        }
+        let freed_blocks = copies.len();
+        let tokens = st.len;
+        self.swapped.insert(
+            id,
+            SwappedSeq {
+                entries,
+                len: st.len,
+                shared_prefix_blocks: st.shared_prefix_blocks,
+            },
+        );
+        Ok(SwapOutOps {
+            copies,
+            freed_blocks,
+            tokens,
+        })
+    }
+
+    /// Bring a swapped sequence back to the device tier: allocate a device
+    /// block per host entry and rebuild the block table (shared entries
+    /// reattach the same physical block).  Fails without mutating when the
+    /// device pool cannot take the host blocks.  The caller must execute
+    /// the returned copies through the backend before stepping the
+    /// sequence.
+    pub fn swap_in(&mut self, id: SeqId) -> Result<SwapInOps> {
+        let needed = match self.swapped.get(&id) {
+            Some(s) => s.host_blocks(),
+            None => bail!("sequence {id} is not swapped out"),
+        };
+        if self.alloc.num_free() < needed {
+            bail!(
+                "swap-in of sequence {id} needs {needed} device blocks, {} free",
+                self.alloc.num_free()
+            );
+        }
+        let sw = self.swapped.remove(&id).expect("checked above");
+        let mut table = Vec::with_capacity(sw.entries.len());
+        let mut copies = Vec::new();
+        for entry in sw.entries {
+            match entry {
+                SwapEntry::Device(phys) => table.push(phys),
+                SwapEntry::Host { slot, hash } => {
+                    let phys = self.alloc.alloc().expect("free count checked above");
+                    if let Some(h) = hash {
+                        // restore shareability unless the hash was re-taken
+                        // by a block created while we were swapped out
+                        if !self.prefix_index.contains_key(&h) {
+                            self.index_block(phys, h);
+                        }
+                    }
+                    self.host
+                        .as_mut()
+                        .expect("swapped implies a host tier")
+                        .release();
+                    copies.push((slot, phys));
+                    table.push(phys);
+                }
+            }
+        }
+        self.seqs.insert(
+            id,
+            SeqState {
+                table,
+                len: sw.len,
+                shared_prefix_blocks: sw.shared_prefix_blocks,
+            },
+        );
+        Ok(SwapInOps {
+            copies,
+            resume_len: sw.len,
+        })
+    }
+
+    /// Abandon a swapped sequence: release its host slots and its
+    /// references on shared device blocks (recompute fallback — the
+    /// scheduler re-queues it as a fresh prefill).  Returns the freed
+    /// host slots so the caller can tell the backend to discard their
+    /// staging buffers (slot ids are never reused, so an undiscarded
+    /// slot is a permanent leak on a real backend).
+    pub fn drop_swapped(&mut self, id: SeqId) -> Vec<tier::HostSlotId> {
+        let Some(sw) = self.swapped.remove(&id) else {
+            return Vec::new();
+        };
+        let mut freed_slots = Vec::new();
+        for entry in sw.entries {
+            match entry {
+                SwapEntry::Device(phys) => {
+                    if self.alloc.decref(phys) {
+                        self.unindex_block(phys);
+                    }
+                }
+                SwapEntry::Host { slot, .. } => {
+                    self.host
+                        .as_mut()
+                        .expect("swapped implies a host tier")
+                        .release();
+                    freed_slots.push(slot);
+                }
+            }
+        }
+        freed_slots
+    }
+
+    /// Host-tier occupancy snapshot.
+    pub fn tier_stats(&self) -> TierStats {
+        let (cap, used) = self
+            .host
+            .as_ref()
+            .map(|h| (h.capacity(), h.used()))
+            .unwrap_or((0, 0));
+        let pinned = self
+            .swapped
+            .values()
+            .flat_map(|s| s.entries.iter())
+            .filter(|e| matches!(e, SwapEntry::Device(_)))
+            .count();
+        TierStats {
+            host_capacity_blocks: cap,
+            host_used_blocks: used,
+            swapped_seqs: self.swapped.len(),
+            pinned_shared_blocks: pinned,
         }
     }
 
@@ -862,5 +1097,213 @@ mod tests {
         let fp16 = cm.bytes_per_block(4, 32, &ORIGINAL);
         let fp8 = cm.bytes_per_block(4, 32, &COOPT);
         assert!(fp8 < fp16, "{fp8} vs {fp16}");
+    }
+
+    // ---- allocator refcount edge cases (the tier manager relies on these)
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "incref of free block")]
+    fn allocator_incref_on_freed_block_panics() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.alloc().unwrap();
+        a.decref(b);
+        a.incref(b);
+    }
+
+    #[test]
+    fn allocator_exhaustion_and_reuse_ordering() {
+        let mut a = BlockAllocator::new(3);
+        let mut got = Vec::new();
+        while let Some(b) = a.alloc() {
+            got.push(b);
+        }
+        assert_eq!(got.len(), 3);
+        assert_eq!(a.num_free(), 0);
+        assert!(a.alloc().is_none(), "exhausted pool refuses");
+        // free in a known order: the free list is LIFO, so the most
+        // recently freed block is handed out first
+        a.decref(got[0]);
+        a.decref(got[2]);
+        assert_eq!(a.alloc(), Some(got[2]));
+        assert_eq!(a.alloc(), Some(got[0]));
+        assert!(a.alloc().is_none());
+        assert_eq!(a.total_frees, 2);
+        assert_eq!(a.total_allocs, 5);
+    }
+
+    #[test]
+    fn allocator_refcount_lifecycle_across_shares() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.alloc().unwrap();
+        a.incref(b);
+        a.incref(b);
+        assert_eq!(a.refcount(b), 3);
+        assert!(!a.decref(b));
+        assert!(!a.decref(b));
+        assert_eq!(a.refcount(b), 1);
+        assert_eq!(a.num_used(), 1, "still allocated until the last ref drops");
+        assert!(a.decref(b));
+        assert_eq!(a.num_used(), 0);
+    }
+
+    // ---- two-tier residency (Opt-KV tier manager) -------------------------
+
+    fn tiered(host_blocks: usize) -> CacheManager {
+        let mut cm = CacheManager::new(geom());
+        cm.enable_host_tier(host_blocks);
+        cm
+    }
+
+    #[test]
+    fn swap_out_in_roundtrip_preserves_table_and_len() {
+        let mut cm = tiered(8);
+        let prompt: Vec<u32> = (0..10).map(|i| 50 + i).collect();
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        cm.append_token(1).unwrap();
+        let len_before = cm.seq_len(1);
+        let used_before = cm.stats().blocks_used;
+
+        let ops = cm.swap_out(1).unwrap();
+        assert_eq!(ops.copies.len(), 3, "3 sole-owner blocks move to host");
+        assert_eq!(ops.freed_blocks, 3);
+        assert_eq!(ops.tokens, len_before);
+        assert!(cm.is_swapped(1));
+        assert!(!cm.has_seq(1));
+        assert_eq!(cm.swapped_len(1), len_before);
+        assert_eq!(cm.stats().blocks_used, used_before - 3);
+        assert_eq!(cm.tier_stats().host_used_blocks, 3);
+
+        let back = cm.swap_in(1).unwrap();
+        assert_eq!(back.copies.len(), 3);
+        assert_eq!(back.resume_len, len_before);
+        assert!(cm.has_seq(1));
+        assert_eq!(cm.seq_len(1), len_before, "resumes at the exact offset");
+        assert_eq!(cm.stats().blocks_used, used_before);
+        assert_eq!(cm.tier_stats().host_used_blocks, 0);
+        // decoding continues as if nothing happened
+        cm.append_token(1).unwrap();
+        cm.free_seq(1);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn swap_refused_without_host_tier_or_capacity() {
+        let mut cm = CacheManager::new(geom());
+        cm.prefill(1, &[1, 2, 3, 4, 5], &COOPT).unwrap();
+        assert!(cm.swap_out_plan(1).is_none(), "no host tier");
+        assert!(cm.swap_out(1).is_err());
+        assert!(cm.has_seq(1), "refused swap leaves the sequence resident");
+
+        let mut cm = tiered(1); // 5 tokens need 2 host blocks
+        cm.prefill(1, &[1, 2, 3, 4, 5], &COOPT).unwrap();
+        assert!(cm.swap_out_plan(1).is_none(), "host pool too small");
+        assert!(cm.swap_out(1).is_err());
+        assert_eq!(cm.stats().blocks_used, 2, "nothing mutated");
+    }
+
+    #[test]
+    fn shared_prefix_block_survives_one_readers_swap() {
+        let mut cm = tiered(8);
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23, 5];
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        let p2 = cm.prefill(2, &prompt, &COOPT).unwrap();
+        assert_eq!(p2.reused_blocks, 2);
+        let shared: Vec<i32> = cm.block_table_row(1)[..2].to_vec();
+
+        // swapping seq 2 moves only its private tail; the shared blocks
+        // stay on device, pinned by seq 2's retained references
+        let ops = cm.swap_out(2).unwrap();
+        assert_eq!(ops.copies.len(), 1, "only the sole-owner tail block moves");
+        assert_eq!(cm.tier_stats().pinned_shared_blocks, 2);
+
+        // the surviving reader keeps decoding on the same physical blocks
+        assert_eq!(cm.block_table_row(1)[..2], shared[..]);
+        cm.append_token(1).unwrap();
+
+        // even freeing the surviving reader must not free the shared
+        // blocks — the swapped sequence still holds them
+        cm.free_seq(1);
+        let back = cm.swap_in(2).unwrap();
+        assert_eq!(back.copies.len(), 1);
+        assert_eq!(
+            cm.block_table_row(2)[..2],
+            shared[..],
+            "swap-in reattaches the identical shared blocks"
+        );
+        cm.free_seq(2);
+        assert_eq!(cm.stats().blocks_used, 0);
+        assert_eq!(cm.tier_stats().host_used_blocks, 0);
+    }
+
+    #[test]
+    fn swap_out_unindexes_and_swap_in_reindexes_prefix_blocks() {
+        let mut cm = tiered(8);
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23];
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        cm.swap_out(1).unwrap();
+        // while seq 1 is on the host, its blocks are unshareable: a new
+        // identical prompt allocates fresh blocks
+        let p2 = cm.prefill(2, &prompt, &COOPT).unwrap();
+        assert_eq!(p2.reused_blocks, 0, "host-resident blocks serve no prefix match");
+        cm.free_seq(2);
+        // back on device, the blocks are shareable again
+        cm.swap_in(1).unwrap();
+        let p3 = cm.prefill(3, &prompt, &COOPT).unwrap();
+        assert_eq!(p3.reused_blocks, 2, "swap-in restored the prefix index");
+        cm.free_seq(1);
+        cm.free_seq(3);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn swap_in_fails_cleanly_when_device_pool_full() {
+        let mut cm = tiered(8);
+        let prompt: Vec<u32> = (0..12).map(|i| 70 + i).collect();
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        cm.swap_out(1).unwrap();
+        // fill the device pool down to a single free block
+        let mut id = 10u64;
+        while cm.can_admit(12, &COOPT) {
+            let p: Vec<u32> = (0..12).map(|x| id as u32 * 100 + x).collect();
+            cm.prefill(id, &p, &COOPT).unwrap();
+            id += 1;
+        }
+        let free_before = cm.num_free_blocks();
+        assert!(free_before < cm.swap_in_blocks_needed(1));
+        assert!(cm.swap_in(1).is_err());
+        assert!(cm.is_swapped(1), "failed swap-in leaves the host copy intact");
+        assert_eq!(cm.num_free_blocks(), free_before, "nothing allocated");
+        // free everything: swap-in now succeeds
+        for seq in 10..id {
+            cm.free_seq(seq);
+        }
+        cm.swap_in(1).unwrap();
+        cm.free_seq(1);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn drop_swapped_releases_both_tiers() {
+        let mut cm = tiered(8);
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23, 5];
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        cm.prefill(2, &prompt, &COOPT).unwrap();
+        cm.swap_out(2).unwrap();
+        let slots = cm.drop_swapped(2);
+        assert_eq!(slots.len(), 1, "the abandoned host slot is reported for discard");
+        assert!(!cm.is_swapped(2));
+        assert_eq!(cm.tier_stats().host_used_blocks, 0);
+        // seq 1 unharmed, and the pool drains to zero afterwards
+        cm.append_token(1).unwrap();
+        cm.free_seq(1);
+        assert_eq!(cm.stats().blocks_used, 0);
+        // free_seq on a swapped id routes through drop_swapped too
+        cm.prefill(3, &prompt, &COOPT).unwrap();
+        cm.swap_out(3).unwrap();
+        cm.free_seq(3);
+        assert!(!cm.is_swapped(3));
+        assert_eq!(cm.stats().blocks_used, 0);
+        assert_eq!(cm.tier_stats().host_used_blocks, 0);
     }
 }

@@ -1,0 +1,191 @@
+//! Two-tier KV memory hierarchy — the **Opt-KV tier manager**.
+//!
+//! The paper's Opt-KV strategy treats the KV cache read/write paths as the
+//! dominant memory-bandwidth bottleneck.  This module extends the paged
+//! device pool with a **host tier**: when the device pool is exhausted,
+//! the engine can *swap* a victim sequence's blocks to host memory over
+//! PCIe instead of dropping them and recomputing the whole prefill (the
+//! policy comparison of arXiv:2504.06319 / arXiv:2604.05012 — swap +
+//! prefetch beats recompute-on-preempt for realistic traffic).
+//!
+//! Residency model (block granular):
+//!
+//! * a **sole-owner** device block (refcount 1) moves to a [`HostPool`]
+//!   slot on swap-out; its device block returns to the free list and its
+//!   prefix-hash entry is removed (a host-resident block can serve no
+//!   device-side prefix match).  The hash is remembered so swap-in can
+//!   re-index the block if the hash is still vacant.
+//! * a **shared** device block (refcount > 1) never moves: the swapped
+//!   sequence *keeps its reference*, so the block can neither be freed nor
+//!   duplicated for the surviving readers — prefix sharing stays correct
+//!   across tiers by construction, and swap-in reattaches the same
+//!   physical block.
+//!
+//! The actual byte copies are executed by the backend
+//! ([`crate::runtime::Backend::swap_out`]/[`swap_in`]); this module owns
+//! the *metadata*: which block lives where, host-slot allocation, and the
+//! accounting the engine's cost-based evict-vs-recompute policy and async
+//! prefetch queue are built on (see [`crate::coordinator`]).
+
+use crate::kvcache::BlockId;
+
+/// Host-tier slot id (stable for the lifetime of one swapped block).
+pub type HostSlotId = u64;
+
+/// Where one logical block of a swapped sequence lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapEntry {
+    /// Still resident on device: a prefix-shared block whose other readers
+    /// keep it alive.  The swapped sequence retains its refcount.
+    Device(BlockId),
+    /// Copied to the host tier; `hash` restores the prefix index on
+    /// swap-in when the block had been shareable.
+    Host { slot: HostSlotId, hash: Option<u64> },
+}
+
+/// Per-sequence state while swapped out (mirrors the resident `SeqState`).
+#[derive(Debug, Clone)]
+pub struct SwappedSeq {
+    /// logical block -> residency, same order as the block table
+    pub entries: Vec<SwapEntry>,
+    /// committed context length (tokens); the sequence resumes decoding
+    /// at exactly this offset after swap-in
+    pub len: usize,
+    /// carried over for the resident state's accounting
+    pub shared_prefix_blocks: usize,
+}
+
+impl SwappedSeq {
+    /// Device blocks needed to bring this sequence back.
+    pub fn host_blocks(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| matches!(e, SwapEntry::Host { .. }))
+            .count()
+    }
+}
+
+/// Fixed-capacity host-side block pool.  Slot ids are never reused while
+/// live, which lets the backend key its host buffers by slot.
+#[derive(Debug, Clone)]
+pub struct HostPool {
+    capacity: usize,
+    used: usize,
+    next_slot: HostSlotId,
+}
+
+impl HostPool {
+    pub fn new(capacity: usize) -> Self {
+        HostPool {
+            capacity,
+            used: 0,
+            next_slot: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    pub fn free(&self) -> usize {
+        self.capacity - self.used
+    }
+
+    /// Claim one host slot; `None` when the pool is full.
+    pub fn alloc(&mut self) -> Option<HostSlotId> {
+        if self.used >= self.capacity {
+            return None;
+        }
+        self.used += 1;
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        Some(slot)
+    }
+
+    /// Release a slot back to the pool.
+    pub fn release(&mut self) {
+        debug_assert!(self.used > 0, "host pool release underflow");
+        self.used = self.used.saturating_sub(1);
+    }
+}
+
+/// What a swap-out of one sequence would involve (drives the engine's
+/// cost-based evict-vs-recompute decision before anything is mutated).
+#[derive(Debug, Clone, Copy)]
+pub struct SwapOutPlan {
+    /// sole-owner blocks that would move to the host tier
+    pub host_blocks: usize,
+    /// shared blocks that stay device-resident (swap frees nothing here)
+    pub shared_blocks: usize,
+    /// committed tokens — the prefill a recompute would have to redo
+    pub tokens: usize,
+}
+
+/// Committed swap-out: the backend must execute `copies` (device block ->
+/// host slot) immediately, before any further allocation can recycle the
+/// freed device blocks.
+#[derive(Debug, Clone)]
+pub struct SwapOutOps {
+    pub copies: Vec<(BlockId, HostSlotId)>,
+    /// device blocks returned to the free list
+    pub freed_blocks: usize,
+    /// committed tokens preserved (recompute avoided if swapped back in)
+    pub tokens: usize,
+}
+
+/// Committed swap-in: the backend must execute `copies` (host slot ->
+/// device block) before the sequence is stepped again.
+#[derive(Debug, Clone)]
+pub struct SwapInOps {
+    pub copies: Vec<(HostSlotId, BlockId)>,
+    /// context length the sequence resumes decoding at
+    pub resume_len: usize,
+}
+
+/// Host-tier occupancy snapshot (surfaced in `/metrics` and benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TierStats {
+    pub host_capacity_blocks: usize,
+    pub host_used_blocks: usize,
+    pub swapped_seqs: usize,
+    /// shared device blocks currently pinned by swapped sequences
+    pub pinned_shared_blocks: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_pool_alloc_release() {
+        let mut p = HostPool::new(2);
+        assert_eq!(p.free(), 2);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b, "slot ids are unique");
+        assert!(p.alloc().is_none(), "capacity enforced");
+        p.release();
+        assert_eq!(p.free(), 1);
+        let c = p.alloc().unwrap();
+        assert_ne!(c, b, "slot ids are never reused while the pool lives");
+        assert_eq!(p.used(), 2);
+    }
+
+    #[test]
+    fn swapped_seq_counts_host_blocks() {
+        let s = SwappedSeq {
+            entries: vec![
+                SwapEntry::Device(3),
+                SwapEntry::Host { slot: 0, hash: None },
+                SwapEntry::Host { slot: 1, hash: Some(42) },
+            ],
+            len: 11,
+            shared_prefix_blocks: 1,
+        };
+        assert_eq!(s.host_blocks(), 2);
+    }
+}

@@ -24,11 +24,11 @@
 //! | [`util`] | offline substrates: JSON, RNG, FP8, CLI, thread pool, bench, property testing |
 //! | [`config`] | model/opt/engine presets mirroring `python/compile/presets.py` |
 //! | [`tokenizer`] | byte-level tokenizer shared with the python trainer |
-//! | [`kvcache`] | paged block allocator, block tables, slot mapping + SkipSet (Eq. 5); incremental `prefill_chunk` (Opt-Pa step 1/2: segment, then lazily map) |
-//! | [`scheduler`] | continuous-batching scheduler (waiting/running/preempted) with chunked prefill: per-step token budget shared by decode slots + prefill windows |
-//! | [`runtime`] | PJRT artifact loading + execution with persistent buffers; `Backend::prefill_chunk` contract for chunked prefill |
-//! | [`platform`] | DCU Z100 memory-hierarchy/roofline cost model (Eqs. 2–4) + per-window prefill-chunk costs |
-//! | [`coordinator`] | the engine: schedule → commit prefill windows → decode batch → sample → stream (sampling defers to a prompt's final window) |
+//! | [`kvcache`] | paged block allocator, block tables, slot mapping + SkipSet (Eq. 5); incremental `prefill_chunk` (Opt-Pa step 1/2); two-tier host-offload residency ([`kvcache::tier`], Opt-KV tier manager) |
+//! | [`scheduler`] | continuous-batching scheduler (waiting/running/swapped) with chunked prefill: per-step token budget shared by decode slots + prefill windows; swap-aware preemption exits |
+//! | [`runtime`] | PJRT artifact loading + execution with persistent buffers; `Backend::prefill_chunk` + `Backend::{swap_out,swap_in}` contracts |
+//! | [`platform`] | DCU Z100 memory-hierarchy/roofline cost model (Eqs. 2–4), per-window prefill-chunk costs, PCIe swap-vs-recompute costs |
+//! | [`coordinator`] | the engine: drain prefetches → schedule → commit prefill windows → decode batch → sample → stream → stage swap-ins (async prefetch, one step ahead) |
 //! | [`sampling`] | greedy / temperature / top-k / top-p / MCQ scoring |
 //! | [`server`] | hand-rolled HTTP/1.1 front-end + client |
 //! | [`workload`] | ShareGPT-like traces, ARC-sim loader, arrival processes |

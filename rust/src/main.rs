@@ -8,7 +8,7 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
-use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig};
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig, SwapPolicy};
 use llm_coopt::coordinator::{Engine, GenRequest};
 use llm_coopt::eval;
 use llm_coopt::runtime::Runtime;
@@ -36,17 +36,36 @@ fn main() -> Result<()> {
             "chunked prefill (Opt-Pa step 1): per-chunk token budget, 0 = one-shot \
              (mid-prompt chunks need a backend with a chunked prefill graph)",
         )
+        .flag(
+            "host-pool-blocks",
+            "0",
+            "two-tier KV (Opt-KV tier manager): host-tier pool capacity in blocks, \
+             0 = single tier.  Preemption then swaps a victim's KV over PCIe and \
+             prefetches it back instead of recomputing its prefill; backends \
+             without KV swap support fall back to drop-and-recompute",
+        )
+        .flag(
+            "swap-policy",
+            "auto",
+            "swap-vs-recompute preemption policy with a host pool: auto = \
+             cost-based (PCIe round trip vs prefill recompute on the Z100 model), \
+             always, never",
+        )
         .flag("set", "easy", "eval: easy | challenge");
     let args = cli.parse_or_exit();
 
-    let engine_cfg = |model: &str, opt| {
-        let cfg = EngineConfig::new(model, opt);
+    let engine_cfg = |model: &str, opt| -> Result<EngineConfig> {
+        let mut cfg = EngineConfig::new(model, opt);
         let chunk = args.get_usize("prefill-chunk-tokens");
         if chunk > 0 {
-            cfg.with_chunked_prefill(chunk)
-        } else {
-            cfg
+            cfg = cfg.with_chunked_prefill(chunk);
         }
+        let host = args.get_usize("host-pool-blocks");
+        if host > 0 {
+            cfg = cfg.with_host_pool(host);
+        }
+        cfg = cfg.with_swap_policy(SwapPolicy::parse(args.get("swap-policy"))?);
+        Ok(cfg)
     };
 
     let dir = if args.get("artifacts").is_empty() {
@@ -88,7 +107,7 @@ fn main() -> Result<()> {
             let rt = Runtime::new(&dir)?;
             let mrt = rt.load_model(model, opt)?;
             log_info!("compiled {model}/{} in {:?}", opt.name, mrt.compile_time);
-            let engine = Engine::new(mrt, engine_cfg(model, opt));
+            let engine = Engine::new(mrt, engine_cfg(model, opt)?);
             let handle = EngineHandle::spawn(engine);
             let server = Server::bind(args.get("addr"), handle, args.get_usize("workers"))?;
             server.serve()
@@ -102,7 +121,7 @@ fn main() -> Result<()> {
             }
             let rt = Runtime::new(&dir)?;
             let mrt = rt.load_model(model, opt)?;
-            let mut engine = Engine::new(mrt, engine_cfg(model, opt));
+            let mut engine = Engine::new(mrt, engine_cfg(model, opt)?);
             let results = engine.generate(vec![GenRequest {
                 prompt: prompt.to_string(),
                 max_new_tokens: args.get_usize("max-new-tokens"),

@@ -44,6 +44,29 @@ pub struct EngineMetrics {
     pub chunk_stall_s: f64,
     pub decode_steps: u64,
     pub preemptions: u64,
+    // --- Opt-KV tier manager (two-tier KV hierarchy) -----------------------
+    /// preemptions that swapped the victim to the host tier
+    pub swap_outs: u64,
+    /// sequences brought back from the host tier
+    pub swap_ins: u64,
+    pub blocks_swapped_out: u64,
+    pub blocks_swapped_in: u64,
+    /// paper-scale bytes moved over the host<->device link
+    pub bytes_swapped_out: u64,
+    pub bytes_swapped_in: u64,
+    /// swap-ins staged ahead by the async prefetch queue (overlapped)
+    pub prefetch_hits: u64,
+    /// swap-ins performed on demand (the scheduler had to wait)
+    pub prefetch_misses: u64,
+    /// tokens re-prefilled because a preemption dropped KV (recompute)
+    pub tokens_recomputed: u64,
+    /// tokens whose re-prefill the tier manager avoided by swapping
+    pub recompute_avoided_tokens: u64,
+    /// simulated seconds of swap traffic (total, incl. overlapped)
+    pub sim_swap_s: f64,
+    /// simulated swap seconds the engine actually waited on (prefetch
+    /// misses); counted against Eq. 12 throughput
+    pub sim_swap_blocked_s: f64,
     /// wallclock seconds inside PJRT execute calls
     pub wall_prefill_s: f64,
     pub wall_decode_s: f64,
@@ -108,11 +131,24 @@ impl EngineMetrics {
         }
     }
 
-    /// Eq. 12 on the simulated clock: engine-busy simulated seconds.
+    /// Eq. 12 on the simulated clock: engine-busy simulated seconds
+    /// (prefill + decode + swap transfers the engine waited on; prefetch
+    /// hits overlap and cost nothing here).
     pub fn throughput_sim(&self) -> f64 {
-        let t = self.sim_prefill_s + self.sim_decode_s;
+        let t = self.sim_prefill_s + self.sim_decode_s + self.sim_swap_blocked_s;
         if t > 0.0 {
             self.tokens_generated as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of host-tier resumes the prefetch queue staged ahead of
+    /// the scheduler (1.0 = swap latency fully hidden).
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let total = self.prefetch_hits + self.prefetch_misses;
+        if total > 0 {
+            self.prefetch_hits as f64 / total as f64
         } else {
             0.0
         }
@@ -137,6 +173,22 @@ impl EngineMetrics {
         o.insert("chunk_stall_sim_s", self.chunk_stall_s);
         o.insert("decode_steps", self.decode_steps as usize);
         o.insert("preemptions", self.preemptions as usize);
+        o.insert("swap_outs", self.swap_outs as usize);
+        o.insert("swap_ins", self.swap_ins as usize);
+        o.insert("blocks_swapped_out", self.blocks_swapped_out as usize);
+        o.insert("blocks_swapped_in", self.blocks_swapped_in as usize);
+        o.insert("bytes_swapped_out", self.bytes_swapped_out as usize);
+        o.insert("bytes_swapped_in", self.bytes_swapped_in as usize);
+        o.insert("prefetch_hits", self.prefetch_hits as usize);
+        o.insert("prefetch_misses", self.prefetch_misses as usize);
+        o.insert("prefetch_hit_rate", self.prefetch_hit_rate());
+        o.insert("tokens_recomputed", self.tokens_recomputed as usize);
+        o.insert(
+            "recompute_avoided_tokens",
+            self.recompute_avoided_tokens as usize,
+        );
+        o.insert("sim_swap_s", self.sim_swap_s);
+        o.insert("sim_swap_blocked_s", self.sim_swap_blocked_s);
         if self.itl_sim.count() > 0 {
             o.insert("itl_sim_p50_s", self.itl_sim.p50());
             o.insert("itl_sim_p95_s", self.itl_sim.p95());
@@ -189,6 +241,28 @@ mod tests {
         assert_eq!(j.req_usize("prefill_chunks").unwrap(), 5);
         assert!((j.req_f64("chunk_stall_sim_s").unwrap() - 0.25).abs() < 1e-12);
         assert!(j.req_f64("itl_sim_p95_s").unwrap() >= j.req_f64("itl_sim_p50_s").unwrap());
+    }
+
+    #[test]
+    fn swap_metrics_serialize_and_hit_rate() {
+        let mut m = EngineMetrics::new();
+        assert_eq!(m.prefetch_hit_rate(), 0.0, "no resumes yet");
+        m.swap_outs = 3;
+        m.swap_ins = 3;
+        m.prefetch_hits = 2;
+        m.prefetch_misses = 1;
+        m.tokens_recomputed = 7;
+        m.recompute_avoided_tokens = 41;
+        m.sim_swap_s = 0.5;
+        m.sim_swap_blocked_s = 0.125;
+        m.tokens_generated = 10;
+        m.sim_decode_s = 0.375;
+        let j = m.to_json();
+        assert_eq!(j.req_usize("swap_outs").unwrap(), 3);
+        assert_eq!(j.req_usize("recompute_avoided_tokens").unwrap(), 41);
+        assert!((j.req_f64("prefetch_hit_rate").unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        // blocked swap time counts against Eq. 12; overlapped time doesn't
+        assert!((m.throughput_sim() - 10.0 / 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -45,6 +45,12 @@ pub struct PlatformSpec {
     /// fixed per-kernel-pass launch/ramp overhead; chunked prefill pays
     /// it once per window (the monolithic prefill amortizes it)
     pub pass_launch_s: f64,
+    /// host<->device interconnect bandwidth (PCIe gen3 x16 class — the
+    /// Z100 sits on physically separate CPU/GPU memory, §2); the Opt-KV
+    /// tier manager streams swapped KV blocks over this link
+    pub pcie_bandwidth_bytes_per_s: f64,
+    /// fixed DMA setup/launch latency per swap transfer batch
+    pub swap_launch_s: f64,
     /// per-block softmax reduction/synchronization overhead: warp-level
     /// broadcast chain (baseline) vs shared-memory block_sum (Opt-Pa)
     pub sync_warp_s: f64,
@@ -71,6 +77,8 @@ impl Default for PlatformSpec {
             alloc_penalty_s: 4.0e-6,
             write_op_s: 30.0e-9,
             pass_launch_s: 25.0e-6,
+            pcie_bandwidth_bytes_per_s: 16.0e9,
+            swap_launch_s: 10.0e-6,
             sync_warp_s: 220.0e-9,
             sync_blocksum_s: 60.0e-9,
             gemm_eff: 0.70,
@@ -343,6 +351,44 @@ impl CostModel {
         ((self.paper_pool_blocks(opt) as f64 / scale) as usize).clamp(lo, hi)
     }
 
+    /// Paper-scale bytes one swapped KV block carries over PCIe (FP8
+    /// blocks move at half the bytes of FP16 — the Opt-KV read/write
+    /// cost model applied to the interconnect).
+    pub fn swap_block_bytes(&self, opt: &OptConfig) -> f64 {
+        self.geom.kv_bytes_per_token_layer(opt)
+            * self.geom.layers as f64
+            * self.block_size as f64
+            * self.ctx_scale
+    }
+
+    /// One-way host<->device transfer time for `blocks` KV blocks (the
+    /// tier manager's swap-out or swap-in leg).
+    pub fn swap_transfer(&self, blocks: usize, opt: &OptConfig) -> StepCost {
+        if blocks == 0 {
+            return StepCost::default();
+        }
+        let bytes = blocks as f64 * self.swap_block_bytes(opt);
+        let total_s = bytes / self.spec.pcie_bandwidth_bytes_per_s + self.spec.swap_launch_s;
+        StepCost {
+            total_s,
+            bytes_moved: bytes,
+            overhead_s: self.spec.swap_launch_s,
+            ..StepCost::default()
+        }
+    }
+
+    /// The Opt-KV evict-vs-recompute decision: is a full swap round trip
+    /// (out now + in later) of `blocks` cheaper than re-running the
+    /// prefill of `tokens` committed tokens?  FP8 halves the transfer
+    /// bytes, so the tiered path wins even more often under Opt-KV.
+    pub fn swap_beats_recompute(&self, blocks: usize, tokens: usize, opt: &OptConfig) -> bool {
+        if tokens == 0 {
+            return false; // nothing to save
+        }
+        let round_trip = 2.0 * self.swap_transfer(blocks, opt).total_s;
+        round_trip < self.prefill(tokens, opt).total_s
+    }
+
     /// Cost of one chunked-prefill window (Opt-Pa step 1): `chunk_len`
     /// tokens starting at `offset`, attending to all prior context.
     ///
@@ -585,5 +631,34 @@ mod tests {
     fn empty_batch_is_free() {
         let m = model();
         assert_eq!(m.decode_step(&[], &ORIGINAL, 0, 0).total_s, 0.0);
+    }
+
+    #[test]
+    fn swap_transfer_scales_and_fp8_halves_bytes() {
+        let m = model();
+        let one = m.swap_transfer(4, &ORIGINAL);
+        let two = m.swap_transfer(8, &ORIGINAL);
+        assert!(two.total_s > one.total_s);
+        assert!((two.bytes_moved - 2.0 * one.bytes_moved).abs() < 1.0);
+        // FP8 blocks swap at roughly half the FP16 bytes (scales add a
+        // little): the Opt-KV traffic saving extends to the PCIe link
+        let fp16 = m.swap_block_bytes(&OPTGQA);
+        let fp8 = m.swap_block_bytes(&COOPT);
+        assert!(fp8 < 0.6 * fp16, "fp8 {fp8} vs fp16 {fp16}");
+        assert_eq!(m.swap_transfer(0, &COOPT).total_s, 0.0);
+    }
+
+    #[test]
+    fn swap_beats_recompute_for_realistic_victims() {
+        // a preempted decode sequence: tens of committed tokens across a
+        // handful of blocks — the PCIe round trip is orders of magnitude
+        // cheaper than re-running the paper-scale prefill (the
+        // arXiv:2504.06319 / 2604.05012 observation Opt-KV banks on)
+        let m = model().with_ctx_scale(8.0);
+        for opt in [ORIGINAL, COOPT] {
+            assert!(m.swap_beats_recompute(4, 48, &opt), "{}", opt.name);
+        }
+        // nothing committed => nothing to save
+        assert!(!m.swap_beats_recompute(0, 0, &COOPT));
     }
 }

@@ -6,7 +6,17 @@
 //! kernel time for scheduling experiments.  The mock also *verifies* the
 //! coordinator's invariants on every call (padding discipline, slot/ctx
 //! consistency), turning every engine test into a contract check.
+//!
+//! **KV swap (Opt-KV tier manager)**: the mock implements real copy
+//! semantics over per-block payload stamps.  Every KV write marks its
+//! block device-resident; [`MockBackend::swap_out`] moves the payload to
+//! a host store keyed by slot and [`MockBackend::swap_in`] moves it back,
+//! with every transfer recorded in `swap_trace`.  The decode contract
+//! then checks *residency*: stepping a sequence whose block was swapped
+//! out (and never swapped back) fails loudly instead of silently reading
+//! stale KV — the exact bug class a tiered engine can introduce.
 
+use std::collections::HashMap;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -30,6 +40,13 @@ pub struct MockBackend {
     /// record of every prefill window as (offset, chunk_len), for tests
     /// (one-shot prefill records (0, seq_len))
     pub chunk_trace: Vec<(i32, i32)>,
+    /// device-resident KV payload stamps, one per written block
+    device_payload: HashMap<u32, u64>,
+    /// host-tier payload stamps, keyed by host slot
+    host_payload: HashMap<u64, u64>,
+    /// record of every swap as ('O'|'I', device block, host slot)
+    pub swap_trace: Vec<(char, u32, u64)>,
+    stamp: u64,
 }
 
 impl MockBackend {
@@ -49,12 +66,27 @@ impl MockBackend {
             seed: 0,
             decode_trace: Vec::new(),
             chunk_trace: Vec::new(),
+            device_payload: HashMap::new(),
+            host_payload: HashMap::new(),
+            swap_trace: Vec::new(),
+            stamp: 0,
         }
     }
 
     pub fn with_opt(mut self, opt: OptConfig) -> Self {
         self.opt = opt;
         self
+    }
+
+    /// Mark the block behind every written slot device-resident.
+    fn stamp_writes(&mut self, slot_mapping: &[i32]) {
+        let bs = self.geometry.block_size;
+        for &sl in slot_mapping {
+            if sl >= 0 {
+                self.stamp += 1;
+                self.device_payload.insert((sl as usize / bs) as u32, self.stamp);
+            }
+        }
     }
 
     fn spin(&mut self) {
@@ -111,6 +143,7 @@ impl Backend for MockBackend {
         }
         self.prefill_calls += 1;
         self.chunk_trace.push((0, seq_len));
+        self.stamp_writes(slot_mapping);
         self.spin();
         let vocab = self.preset.vocab;
         let mut logits = vec![0.0f32; s * vocab];
@@ -156,6 +189,7 @@ impl Backend for MockBackend {
         }
         self.prefill_calls += 1;
         self.chunk_trace.push((offset, chunk_len));
+        self.stamp_writes(slot_mapping);
         self.spin();
         let vocab = self.preset.vocab;
         let mut logits = vec![0.0f32; s * vocab];
@@ -211,6 +245,33 @@ impl Backend for MockBackend {
                 bail!("mock: lane {lane} ctx {ctx} overflows the block table");
             }
         }
+        // this step's writes land first (a fresh tail block is written by
+        // this very call), then residency is enforced: every block the
+        // kernel would traverse must hold device-resident payload — a
+        // swapped-out block that was never swapped back fails here
+        for lane in 0..b {
+            if ctx_lens[lane] > 0 {
+                self.stamp += 1;
+                let blk = (slot_mapping[lane] as usize / self.geometry.block_size) as u32;
+                self.device_payload.insert(blk, self.stamp);
+            }
+        }
+        for lane in 0..b {
+            let ctx = ctx_lens[lane];
+            if ctx == 0 {
+                continue;
+            }
+            let valid = (ctx as usize).div_ceil(self.geometry.block_size);
+            for j in 0..valid {
+                let blk = block_tables[lane * mb + j];
+                if blk < 0 || !self.device_payload.contains_key(&(blk as u32)) {
+                    bail!(
+                        "mock: lane {lane} reads block {blk} (logical {j}) that is not \
+                         device-resident — swapped out without swap-in?"
+                    );
+                }
+            }
+        }
         self.decode_calls += 1;
         self.decode_trace
             .push((ctx_lens.to_vec(), slot_mapping.to_vec()));
@@ -232,7 +293,47 @@ impl Backend for MockBackend {
         true
     }
 
+    fn swap_out(&mut self, device_block: u32, host_slot: u64) -> Result<()> {
+        if self.host_payload.contains_key(&host_slot) {
+            bail!("mock: swap_out into occupied host slot {host_slot}");
+        }
+        let Some(payload) = self.device_payload.remove(&device_block) else {
+            bail!(
+                "mock: swap_out of block {device_block} that holds no device payload \
+                 (never written, or already swapped out)"
+            );
+        };
+        self.host_payload.insert(host_slot, payload);
+        self.swap_trace.push(('O', device_block, host_slot));
+        self.spin();
+        Ok(())
+    }
+
+    fn swap_in(&mut self, host_slot: u64, device_block: u32) -> Result<()> {
+        let Some(payload) = self.host_payload.remove(&host_slot) else {
+            bail!("mock: swap_in from empty host slot {host_slot}");
+        };
+        self.device_payload.insert(device_block, payload);
+        self.swap_trace.push(('I', device_block, host_slot));
+        self.spin();
+        Ok(())
+    }
+
+    fn swap_discard(&mut self, host_slot: u64) -> Result<()> {
+        if self.host_payload.remove(&host_slot).is_none() {
+            bail!("mock: swap_discard of empty host slot {host_slot}");
+        }
+        self.swap_trace.push(('D', 0, host_slot));
+        Ok(())
+    }
+
+    fn supports_kv_swap(&self) -> bool {
+        true
+    }
+
     fn reset_cache(&mut self) -> Result<()> {
+        self.device_payload.clear();
+        self.host_payload.clear();
         Ok(())
     }
 
@@ -312,6 +413,59 @@ mod tests {
             m.prefill_chunk(&toks, (s - 2) as i32, 4, &chunk_slots).is_err(),
             "window past max_seq"
         );
+    }
+
+    #[test]
+    fn swap_copy_semantics_and_residency_contract() {
+        let mut m = MockBackend::with_geometry(CacheGeometry {
+            block_size: 4,
+            max_blocks: 4,
+            num_pool_blocks: 8,
+            max_batch: 2,
+            max_seq: 16,
+        });
+        let s = m.geometry().max_seq;
+        // prefill 8 tokens into blocks 0 and 1
+        let mut toks = vec![0i32; s];
+        let mut slots = vec![-1i32; s];
+        for i in 0..8 {
+            toks[i] = 40 + i as i32;
+            slots[i] = i as i32;
+        }
+        m.prefill(&toks, 8, &slots).unwrap();
+
+        // decode over both blocks works while resident
+        let g = *m.geometry();
+        let mut ctx = vec![0i32; g.max_batch];
+        let mut pos = vec![0i32; g.max_batch];
+        let mut sm = vec![-1i32; g.max_batch];
+        let tid = vec![1i32; g.max_batch];
+        let mut bt = vec![0i32; g.max_batch * g.max_blocks];
+        bt[0] = 0;
+        bt[1] = 1;
+        bt[2] = 2;
+        ctx[0] = 9;
+        pos[0] = 8;
+        sm[0] = 8; // writes block 2
+        assert!(m.decode(&tid, &pos, &bt, &ctx, &sm).is_ok());
+
+        // swap block 1 out: decoding over it must now fail loudly
+        m.swap_out(1, 7).unwrap();
+        assert!(
+            m.decode(&tid, &pos, &bt, &ctx, &sm).is_err(),
+            "decode over a swapped-out block must be rejected"
+        );
+        // double swap-out and empty-slot swap-in rejected
+        assert!(m.swap_out(1, 8).is_err());
+        assert!(m.swap_in(9, 1).is_err());
+        // occupied host slot rejected (block 0 is still resident)
+        assert!(m.swap_out(0, 7).is_err());
+
+        // swap back in (into a different device block): decode resumes
+        m.swap_in(7, 1).unwrap();
+        assert!(m.decode(&tid, &pos, &bt, &ctx, &sm).is_ok());
+        assert_eq!(m.swap_trace, vec![('O', 1, 7), ('I', 1, 7)]);
+        assert!(m.supports_kv_swap());
     }
 
     #[test]

@@ -71,6 +71,43 @@ pub trait Backend {
     fn supports_chunked_prefill(&self) -> bool {
         false
     }
+    /// Opt-KV tier manager: copy one KV block device -> host (slot ids
+    /// come from the cache's [`crate::kvcache::tier::HostPool`]).  The
+    /// engine calls this immediately after the cache releases the device
+    /// block, before anything can recycle it.
+    ///
+    /// The default rejects: the AOT graph set has no host staging
+    /// buffers, so the PJRT runtime inherits this and the engine degrades
+    /// to drop-and-recompute preemption (no engine ever wedges on a
+    /// backend without swap support).  The mock implements real copy
+    /// semantics with a swap trace.
+    fn swap_out(&mut self, device_block: u32, host_slot: u64) -> Result<()> {
+        bail!(
+            "backend does not support KV swap (block {device_block} -> host slot {host_slot}); \
+             preemption must drop and recompute"
+        )
+    }
+    /// Opt-KV tier manager: copy one KV block host -> device.  Must be
+    /// executed before the owning sequence is stepped again.
+    fn swap_in(&mut self, host_slot: u64, device_block: u32) -> Result<()> {
+        bail!(
+            "backend does not support KV swap (host slot {host_slot} -> block {device_block}); \
+             preemption must drop and recompute"
+        )
+    }
+    /// Opt-KV tier manager: a swapped-out block's host copy was abandoned
+    /// (drop-to-recompute fallback) — release its staging buffer.  Host
+    /// slot ids are never reused, so skipping this leaks host memory on a
+    /// real backend.  Default no-op (backends without swap never see one).
+    fn swap_discard(&mut self, _host_slot: u64) -> Result<()> {
+        Ok(())
+    }
+    /// Whether [`Backend::swap_out`]/[`Backend::swap_in`] move real KV
+    /// bytes.  The engine consults this at construction and disables the
+    /// host tier when false.
+    fn supports_kv_swap(&self) -> bool {
+        false
+    }
     /// Batched decode step; all arrays padded to max_batch.  Returns
     /// logits `[max_batch * vocab]`.
     #[allow(clippy::too_many_arguments)]

@@ -23,13 +23,17 @@
 //!    admits more load).  One-shot mode (chunking off) keeps the seed
 //!    behaviour: whole-prompt admission, at most one prefill per round,
 //!    and the admitted sequence joins the decode batch immediately.
-//! 4. **Preemption by recompute** — if a step cannot get a block, the
-//!    most-recently-admitted running sequence is evicted: its blocks are
-//!    freed and it re-enters the waiting queue with its full token prefix
-//!    (re-prefilled from offset 0 on next admission), exactly vLLM's
-//!    recompute preemption.  Mid-prefill sequences that merely run out of
-//!    *budget* are not preempted — they resume from their committed
-//!    offset on the next round.
+//! 4. **Preemption** — if a step cannot get a block, the most-recently-
+//!    admitted running sequence is evicted.  Two exits exist: *drop*
+//!    (blocks freed, the sequence re-enters the waiting queue with its
+//!    full token prefix and re-prefills from offset 0 — vLLM's recompute
+//!    preemption) and *swap* (the Opt-KV tier manager moved its blocks to
+//!    the host tier; the sequence enters the `Swapped` state keeping its
+//!    prefill progress, and is re-admitted via prefetch completion at its
+//!    exact decode offset instead of re-queuing as a fresh prefill).  The
+//!    engine chooses per victim with a cost model.  Mid-prefill sequences
+//!    that merely run out of *budget* are not preempted — they resume
+//!    from their committed offset on the next round.
 
 use std::collections::VecDeque;
 
@@ -87,6 +91,9 @@ impl ScheduleDecision {
 pub struct Scheduler {
     waiting: VecDeque<Entry>,
     running: Vec<Entry>,
+    /// sequences preempted to the host tier (Opt-KV tier manager); they
+    /// keep their prefill progress and resume via swap-in, not re-prefill
+    swapped: Vec<Entry>,
     max_batch: usize,
     /// shared per-step token budget (decode slots + prefill tokens)
     step_token_budget: usize,
@@ -98,6 +105,8 @@ pub struct Scheduler {
     pub total_admissions: u64,
     /// prefill windows handed out (chunked mode accounting)
     pub total_chunks: u64,
+    /// preemptions that exited via the host tier instead of recompute
+    pub total_swap_preemptions: u64,
 }
 
 impl Scheduler {
@@ -105,6 +114,7 @@ impl Scheduler {
         Scheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
+            swapped: Vec::new(),
             max_batch,
             step_token_budget: usize::MAX,
             chunked: false,
@@ -113,6 +123,7 @@ impl Scheduler {
             total_preemptions: 0,
             total_admissions: 0,
             total_chunks: 0,
+            total_swap_preemptions: 0,
         }
     }
 
@@ -151,8 +162,16 @@ impl Scheduler {
         self.running.len()
     }
 
+    pub fn num_swapped(&self) -> usize {
+        self.swapped.len()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
     pub fn is_idle(&self) -> bool {
-        self.waiting.is_empty() && self.running.is_empty()
+        self.waiting.is_empty() && self.running.is_empty() && self.swapped.is_empty()
     }
 
     pub fn running_ids(&self) -> Vec<SeqId> {
@@ -173,9 +192,10 @@ impl Scheduler {
         }
     }
 
-    /// Remove a finished sequence from the running set.
+    /// Remove a finished sequence from the running (or swapped) set.
     pub fn finish(&mut self, id: SeqId) {
         self.running.retain(|e| e.id != id);
+        self.swapped.retain(|e| e.id != id);
     }
 
     /// Plan the next round.  `cache` is consulted for admission headroom;
@@ -192,8 +212,11 @@ impl Scheduler {
         let mut d = ScheduleDecision::default();
 
         // 1. admit one waiting sequence if there's room and it fits the
-        // step budget in one shot
-        if self.running.len() < self.max_batch {
+        // step budget in one shot.  Swapped sequences outrank waiting
+        // ones (running > swapped > waiting): while any sequence sits in
+        // the host tier, its resume gets the freed blocks, not a new
+        // admission — otherwise sustained traffic starves it forever.
+        if self.swapped.is_empty() && self.running.len() < self.max_batch {
             if let Some(front) = self.waiting.front() {
                 if front.prefix_len <= self.step_token_budget
                     && cache.can_admit(front.prefix_len, opt)
@@ -282,8 +305,11 @@ impl Scheduler {
             remaining -= take;
         }
 
-        // 4. admit waiting sequences while batch headroom and budget remain
-        while remaining > 0 && self.running.len() < self.max_batch {
+        // 4. admit waiting sequences while batch headroom and budget
+        // remain — unless sequences sit in the host tier: swapped
+        // outranks waiting (running > swapped > waiting), so their
+        // prefetch gets the freed blocks first
+        while self.swapped.is_empty() && remaining > 0 && self.running.len() < self.max_batch {
             let Some(front) = self.waiting.front() else { break };
             // the whole prompt must eventually fit the pool, and the first
             // window must fit right now
@@ -313,25 +339,88 @@ impl Scheduler {
         d
     }
 
-    /// Preempt the most recently admitted running sequence (recompute
-    /// policy).  `current_len` is its full token count (prompt+generated),
-    /// which becomes its re-prefill prefix.  Returns the victim id.
-    pub fn preempt_latest(&mut self, current_len: impl Fn(SeqId) -> usize) -> Option<SeqId> {
-        let idx = self
-            .running
+    /// The sequence preemption would evict next (newest admission), with
+    /// nothing moved yet — the engine decides swap vs drop per victim.
+    pub fn peek_preempt_victim(&self) -> Option<SeqId> {
+        self.running
             .iter()
-            .enumerate()
-            .max_by_key(|(_, e)| e.admitted_at)
-            .map(|(i, _)| i)?;
-        let mut e = self.running.remove(idx);
-        e.prefix_len = current_len(e.id);
+            .max_by_key(|e| e.admitted_at)
+            .map(|e| e.id)
+    }
+
+    fn take_running(&mut self, id: SeqId) -> Option<Entry> {
+        let idx = self.running.iter().position(|e| e.id == id)?;
+        Some(self.running.remove(idx))
+    }
+
+    /// Preempt `id` by recompute: back to the waiting queue with its full
+    /// token count as the re-prefill prefix, progress reset.
+    pub fn preempt_drop(&mut self, id: SeqId, current_len: usize) -> bool {
+        let Some(mut e) = self.take_running(id) else {
+            return false;
+        };
+        e.prefix_len = current_len;
         // recompute preemption drops the committed KV, so prefill restarts
         e.prefill_done = 0;
-        let id = e.id;
         self.waiting.push_front(e);
         self.total_preemptions += 1;
-        Some(id)
+        true
     }
+
+    /// Preempt `id` by swap: into the `Swapped` state with its prefill
+    /// progress intact (the cache keeps the committed KV in the host
+    /// tier; on resume the sequence continues at its exact offset).
+    pub fn preempt_swap(&mut self, id: SeqId) -> bool {
+        let Some(e) = self.take_running(id) else {
+            return false;
+        };
+        self.swapped.push(e);
+        self.total_preemptions += 1;
+        self.total_swap_preemptions += 1;
+        true
+    }
+
+    /// A swapped sequence's blocks are device-resident again: rejoin the
+    /// running set (decode batch or prefill continuation, depending on
+    /// its preserved progress).  The entry re-enters at its
+    /// admission-stamp position, preserving the invariant that `running`
+    /// is ordered oldest-first (the preemption victim is always the last,
+    /// not-yet-stepped lane of a decode round).
+    pub fn resume_swapped(&mut self, id: SeqId) -> bool {
+        let Some(idx) = self.swapped.iter().position(|e| e.id == id) else {
+            return false;
+        };
+        let e = self.swapped.remove(idx);
+        let at = self
+            .running
+            .iter()
+            .position(|r| r.admitted_at > e.admitted_at)
+            .unwrap_or(self.running.len());
+        self.running.insert(at, e);
+        true
+    }
+
+    /// Abandon a swapped sequence's host copy: requeue it as a fresh
+    /// recompute prefill (the tier manager could not bring it back).
+    pub fn drop_swapped(&mut self, id: SeqId, current_len: usize) -> bool {
+        let Some(idx) = self.swapped.iter().position(|e| e.id == id) else {
+            return false;
+        };
+        let mut e = self.swapped.remove(idx);
+        e.prefix_len = current_len;
+        e.prefill_done = 0;
+        self.waiting.push_front(e);
+        true
+    }
+
+    /// Swapped sequence ids, oldest admission first (the prefetch order).
+    pub fn swapped_ids(&self) -> Vec<SeqId> {
+        let mut v: Vec<(u64, SeqId)> =
+            self.swapped.iter().map(|e| (e.admitted_at, e.id)).collect();
+        v.sort_unstable();
+        v.into_iter().map(|(_, id)| id).collect()
+    }
+
 }
 
 /// Size of the next prefill window: `cap`-bounded remainder, aligned down
@@ -438,8 +527,9 @@ mod tests {
             s.schedule(&c, &COOPT);
         }
         assert_eq!(s.num_running(), 3);
-        let victim = s.preempt_latest(|_| 7).unwrap();
+        let victim = s.peek_preempt_victim().unwrap();
         assert_eq!(victim, 3, "newest admitted preempted first");
+        assert!(s.preempt_drop(victim, 7));
         assert_eq!(s.num_waiting(), 1);
         // re-admitted at front with its grown prefix
         let d = s.schedule(&c, &COOPT);
@@ -608,6 +698,63 @@ mod tests {
     }
 
     #[test]
+    fn swap_preemption_preserves_progress_and_resumes() {
+        let mut s = Scheduler::new(4).with_step_budget(32).with_chunked_prefill(8);
+        let c = roomy_cache();
+        s.submit(1, 20);
+        apply(&mut s, &c); // first 8-token window committed
+        assert_eq!(s.prefill_progress(1), Some(8));
+
+        // swap exit: progress survives, the seq leaves running
+        assert_eq!(s.peek_preempt_victim(), Some(1));
+        assert!(s.preempt_swap(1));
+        assert_eq!(s.num_running(), 0);
+        assert_eq!(s.num_swapped(), 1);
+        assert!(!s.is_idle(), "swapped sequences keep the scheduler busy");
+        assert_eq!(s.total_swap_preemptions, 1);
+        assert_eq!(s.total_preemptions, 1);
+
+        // resume: the next window continues from the committed offset,
+        // never from zero
+        assert!(s.resume_swapped(1));
+        assert_eq!(s.prefill_progress(1), Some(8));
+        let d = s.schedule(&c, &COOPT);
+        assert_eq!(d.prefills[0].offset, 8);
+    }
+
+    #[test]
+    fn drop_swapped_requeues_as_recompute() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        s.submit(1, 4);
+        s.schedule(&c, &COOPT);
+        assert!(s.preempt_swap(1));
+        // the tier manager failed to bring it back: recompute fallback
+        assert!(s.drop_swapped(1, 9));
+        assert_eq!(s.num_swapped(), 0);
+        let d = s.schedule(&c, &COOPT);
+        assert_eq!(d.prefills[0], PrefillWork { id: 1, offset: 0, tokens: 9, is_final: true });
+    }
+
+    #[test]
+    fn swapped_ids_ordered_oldest_first_and_finish_clears() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        for id in 1..=3u64 {
+            s.submit(id, 4);
+            s.schedule(&c, &COOPT);
+        }
+        assert!(s.preempt_swap(3));
+        assert!(s.preempt_swap(1));
+        assert_eq!(s.swapped_ids(), vec![1, 3], "oldest admission first");
+        s.finish(3);
+        assert_eq!(s.swapped_ids(), vec![1]);
+        s.finish(1);
+        s.finish(2);
+        assert!(s.is_idle());
+    }
+
+    #[test]
     fn record_progress_caps_at_prefix() {
         let mut s = Scheduler::new(2).with_step_budget(32).with_chunked_prefill(8);
         let c = roomy_cache();
@@ -618,8 +765,9 @@ mod tests {
         s.record_prefill_progress(1, 8);
         assert_eq!(s.prefill_progress(1), Some(10), "capped at the prefix");
         // preemption resets progress for recompute
-        let v = s.preempt_latest(|_| 10).unwrap();
+        let v = s.peek_preempt_victim().unwrap();
         assert_eq!(v, 1);
+        assert!(s.preempt_drop(v, 10));
         let d = s.schedule(&c, &COOPT);
         assert_eq!(d.prefills[0].offset, 0);
     }

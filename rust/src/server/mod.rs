@@ -17,7 +17,7 @@
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -58,36 +58,39 @@ impl EngineHandle {
             .name("coopt-engine".into())
             .spawn(move || {
                 let mut waiters: Vec<(u64, Sender<Result<GenResult>>)> = Vec::new();
+                let submit =
+                    |engine: &mut Engine<B>,
+                     job: Job,
+                     waiters: &mut Vec<(u64, Sender<Result<GenResult>>)>| {
+                        match engine.submit(job.req) {
+                            Ok(id) => waiters.push((id, job.reply)),
+                            Err(e) => {
+                                let _ = job.reply.send(Err(e));
+                            }
+                        }
+                    };
                 engine.metrics.start_run();
                 loop {
                     if st.load(Ordering::Relaxed) {
                         return;
                     }
-                    // drain incoming jobs; block briefly when idle
+                    // idle: block on the job channel instead of polling —
+                    // the timeout only exists to honor the stop flag
+                    if engine.num_pending() == 0 {
+                        match rx.recv_timeout(Duration::from_millis(100)) {
+                            Ok(job) => submit(&mut engine, job, &mut waiters),
+                            Err(RecvTimeoutError::Timeout) => continue,
+                            Err(RecvTimeoutError::Disconnected) => return,
+                        }
+                    }
+                    // busy: opportunistically drain whatever else queued so
+                    // concurrent requests batch into the same round
                     loop {
                         match rx.try_recv() {
-                            Ok(job) => match engine.submit(job.req) {
-                                Ok(id) => waiters.push((id, job.reply)),
-                                Err(e) => {
-                                    let _ = job.reply.send(Err(e));
-                                }
-                            },
+                            Ok(job) => submit(&mut engine, job, &mut waiters),
                             Err(TryRecvError::Empty) => break,
                             Err(TryRecvError::Disconnected) => return,
                         }
-                    }
-                    if engine.num_pending() == 0 {
-                        // idle: wait for work (with a timeout to honor stop)
-                        match rx.recv_timeout(Duration::from_millis(20)) {
-                            Ok(job) => match engine.submit(job.req) {
-                                Ok(id) => waiters.push((id, job.reply)),
-                                Err(e) => {
-                                    let _ = job.reply.send(Err(e));
-                                }
-                            },
-                            Err(_) => continue,
-                        }
-                        continue;
                     }
                     match engine.step() {
                         Ok(results) => {
@@ -107,7 +110,9 @@ impl EngineHandle {
                         }
                     }
                     if let Ok(mut m) = mj.lock() {
-                        *m = engine.metrics.to_json().to_string();
+                        // metrics + cache-tier stats (swap/prefetch counters,
+                        // host pool occupancy) for GET /metrics
+                        *m = engine.stats_json().to_string();
                     }
                 }
             })
@@ -393,8 +398,21 @@ mod tests {
         let v = client.generate("hello over http", 4).unwrap();
         assert_eq!(v.req_usize("generated_tokens").unwrap(), 4);
 
-        let (code, _m) = client.get("/metrics").unwrap();
-        assert_eq!(code, 200);
+        // cache-tier stats ride along in /metrics (published after the
+        // engine's next step; poll briefly to avoid racing it)
+        let mut m = Value::Null;
+        for _ in 0..100 {
+            let (code, v) = client.get("/metrics").unwrap();
+            assert_eq!(code, 200);
+            if v.get("swap_outs").is_some() {
+                m = v;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(m.req_usize("swap_outs").unwrap(), 0);
+        assert_eq!(m.req_usize("host_pool_blocks").unwrap(), 0);
+        assert!(m.req_usize("cache_blocks_total").unwrap() > 0);
 
         let (code, _e) = client.get("/nope").unwrap();
         assert_eq!(code, 404);

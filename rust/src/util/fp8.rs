@@ -145,6 +145,65 @@ mod tests {
         }
     }
 
+    /// Property: for random vectors, the quantize -> dequantize round
+    /// trip stays inside the E4M3 error bound (relative to the per-vector
+    /// amax the dynamic scale normalizes by).  The FP8 path carries
+    /// swapped KV block payloads, so this bound is what the tier manager
+    /// silently relies on.
+    #[test]
+    fn prop_quantize_roundtrip_error_bound() {
+        use crate::util::quickprop::{check, gens};
+        check(
+            200,
+            gens::vec(gens::i64_in(-1_000_000, 1_000_000), 1..=64),
+            |xs: &Vec<i64>| {
+                let v: Vec<f32> = xs.iter().map(|&i| i as f32 * 0.0137).collect();
+                let (codes, scale) = quantize(&v);
+                let back = dequantize(&codes, scale);
+                if back.len() != v.len() {
+                    return false;
+                }
+                let amax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                // e4m3 worst-case quantization error after dynamic scaling
+                // is amax/448 * 2^5 / 2 = amax * 0.0357; allow fp slack
+                v.iter()
+                    .zip(&back)
+                    .all(|(a, b)| (a - b).abs() <= amax.max(1e-12) * 0.0715)
+            },
+        );
+    }
+
+    /// Property: the dynamic scale is exactly amax/448, and the
+    /// max-magnitude element lands on ±E4M3_MAX after scaling (no
+    /// headroom wasted, no saturation of in-range values).
+    #[test]
+    fn prop_quantize_scale_correctness() {
+        use crate::util::quickprop::{check, gens};
+        check(
+            200,
+            gens::vec(gens::i64_in(-100_000, 100_000), 1..=48),
+            |xs: &Vec<i64>| {
+                let v: Vec<f32> = xs.iter().map(|&i| i as f32 * 0.31).collect();
+                let (codes, scale) = quantize(&v);
+                let amax = v.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                if amax <= 1e-12 {
+                    // all-zero vector: any positive scale decodes to zeros
+                    return scale > 0.0 && dequantize(&codes, scale).iter().all(|&b| b == 0.0);
+                }
+                if (scale - amax / E4M3_MAX).abs() > scale * 1e-6 {
+                    return false;
+                }
+                let (i, &m) = v
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                    .unwrap();
+                let d = decode(codes[i]);
+                (d.abs() - E4M3_MAX).abs() < 1e-3 && (d < 0.0) == (m < 0.0)
+            },
+        );
+    }
+
     #[test]
     fn subnormal_region() {
         let v = 1.5 / 512.0; // between subnormal steps 1 and 2

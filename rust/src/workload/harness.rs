@@ -125,6 +125,18 @@ impl<B: Backend> Backend for PoolSized<B> {
     fn supports_chunked_prefill(&self) -> bool {
         self.inner.supports_chunked_prefill()
     }
+    fn swap_out(&mut self, device_block: u32, host_slot: u64) -> Result<()> {
+        self.inner.swap_out(device_block, host_slot)
+    }
+    fn swap_in(&mut self, host_slot: u64, device_block: u32) -> Result<()> {
+        self.inner.swap_in(host_slot, device_block)
+    }
+    fn swap_discard(&mut self, host_slot: u64) -> Result<()> {
+        self.inner.swap_discard(host_slot)
+    }
+    fn supports_kv_swap(&self) -> bool {
+        self.inner.supports_kv_swap()
+    }
     fn decode(
         &mut self,
         t: &[i32],
@@ -229,6 +241,128 @@ pub fn run_chunk_compare(
         });
     }
     Ok(rows)
+}
+
+/// One row of the swap-vs-recompute comparison (Opt-KV tier manager).
+#[derive(Debug, Clone)]
+pub struct SwapCompareRow {
+    pub mode: &'static str,
+    pub throughput_sim: f64,
+    pub latency_sim_s: f64,
+    pub itl_sim_p50_s: f64,
+    pub itl_sim_p95_s: f64,
+    pub tokens: u64,
+    pub preemptions: u64,
+    pub swap_outs: u64,
+    pub swap_ins: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_misses: u64,
+    pub tokens_recomputed: u64,
+    pub recompute_avoided_tokens: u64,
+}
+
+impl SwapCompareRow {
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("mode", self.mode);
+        o.insert("throughput_sim", self.throughput_sim);
+        o.insert("latency_sim_s", self.latency_sim_s);
+        o.insert("itl_sim_p50_s", self.itl_sim_p50_s);
+        o.insert("itl_sim_p95_s", self.itl_sim_p95_s);
+        o.insert("tokens", self.tokens as usize);
+        o.insert("preemptions", self.preemptions as usize);
+        o.insert("swap_outs", self.swap_outs as usize);
+        o.insert("swap_ins", self.swap_ins as usize);
+        o.insert("prefetch_hits", self.prefetch_hits as usize);
+        o.insert("prefetch_misses", self.prefetch_misses as usize);
+        o.insert("tokens_recomputed", self.tokens_recomputed as usize);
+        o.insert(
+            "recompute_avoided_tokens",
+            self.recompute_avoided_tokens as usize,
+        );
+        Value::Object(o)
+    }
+}
+
+/// Swap-vs-recompute comparison over the deterministic mock backend (runs
+/// without artifacts): a device pool sized to force preemption serves
+/// `requests` growing decode streams, once with single-tier
+/// drop-and-recompute preemption and once with the two-tier host pool
+/// (swap + async prefetch).  Same workload, same generated tokens; the
+/// tiered run should drive `tokens_recomputed` toward zero and win on
+/// Eq. 12 throughput.  Returns the `[recompute, swap]` rows.
+pub fn run_swap_compare(requests: usize, max_new: usize) -> Result<Vec<SwapCompareRow>> {
+    use crate::config::{CacheGeometry, SwapPolicy, COOPT};
+    use crate::runtime::mock::MockBackend;
+    use crate::sampling::SamplingParams;
+
+    let geometry = CacheGeometry {
+        block_size: 4,
+        max_blocks: 16,
+        num_pool_blocks: 12, // deliberately undersized: preemption city
+        max_batch: 4,
+        max_seq: 48,
+    };
+    let mut rows = Vec::new();
+    // host tier sized above the worst case (requests x blocks-per-seq) so
+    // the swap path never degrades to recompute mid-comparison
+    for (mode, host_blocks) in [("recompute", 0usize), ("swap", 128usize)] {
+        let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_host_pool(host_blocks)
+            .with_swap_policy(SwapPolicy::Auto);
+        let mut engine = Engine::new(be, cfg);
+        for i in 0..requests {
+            let toks: Vec<u32> = (0..16 + (i % 5) * 2)
+                .map(|t| 33 + ((i * 13 + t * 3) % 80) as u32)
+                .collect();
+            engine.submit_tokens(toks, max_new, SamplingParams::default(), true)?;
+        }
+        engine.run_to_completion()?;
+        let m = &mut engine.metrics;
+        rows.push(SwapCompareRow {
+            mode,
+            throughput_sim: m.throughput_sim(),
+            latency_sim_s: m.total_latency_sim_s(),
+            itl_sim_p50_s: m.itl_sim.p50(),
+            itl_sim_p95_s: m.itl_sim.p95(),
+            tokens: m.tokens_generated,
+            preemptions: m.preemptions,
+            swap_outs: m.swap_outs,
+            swap_ins: m.swap_ins,
+            prefetch_hits: m.prefetch_hits,
+            prefetch_misses: m.prefetch_misses,
+            tokens_recomputed: m.tokens_recomputed,
+            recompute_avoided_tokens: m.recompute_avoided_tokens,
+        });
+    }
+    Ok(rows)
+}
+
+/// Merge one named section into `target/bench-reports/BENCH_serve.json`,
+/// the machine-readable serving-perf summary tracked across PRs
+/// (throughput, ITL percentiles, swap/prefetch counters).  Each bench
+/// target owns its sections; existing ones from other targets survive.
+pub fn write_bench_serve(section: &str, rows: &[Value]) -> Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/bench-reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_serve.json");
+    let mut sections = Object::new();
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        if let Ok(v) = crate::util::json::parse(&text) {
+            if let Some(existing) = v.get("sections").and_then(|s| s.as_object()) {
+                for (k, val) in existing.iter() {
+                    sections.insert(k, val.clone());
+                }
+            }
+        }
+    }
+    sections.insert(section, Value::Array(rows.to_vec()));
+    let mut top = Object::new();
+    top.insert("bench", "serve");
+    top.insert("sections", Value::Object(sections));
+    std::fs::write(&path, Value::Object(top).to_string_pretty())?;
+    Ok(path)
 }
 
 /// Percentage delta of `new` vs `base` where *lower is better*
