@@ -38,7 +38,8 @@ fn main() -> anyhow::Result<()> {
         "{:<10} {:>12} {:>12} {:>12} {:>8} {:>12}",
         "mode", "p50 itl(s)", "p95 itl(s)", "max itl(s)", "chunks", "stall(s)"
     );
-    let rows = run_chunk_compare(16, 3, 4, 24)?;
+    let (chunk_tokens, long_prompts, streams, chunk_max_new) = (16, 3, 4, 24);
+    let rows = run_chunk_compare(chunk_tokens, long_prompts, streams, chunk_max_new)?;
     let mut chunk_report = Vec::new();
     for r in &rows {
         println!(
@@ -54,7 +55,13 @@ fn main() -> anyhow::Result<()> {
             reduction_pct(one.itl_sim_p95_s, chk.itl_sim_p95_s)
         );
     }
-    let path = write_bench_serve("chunked_prefill_latency", &chunk_report)?;
+    let path = write_bench_serve(
+        "chunked_prefill_latency",
+        &chunk_report,
+        &format!(
+            "chunk={chunk_tokens},long={long_prompts},streams={streams},max_new={chunk_max_new}"
+        ),
+    )?;
     println!("serve summary -> {}", path.display());
     std::fs::create_dir_all("target/bench-reports")?;
     let mut chunk_top = Object::new();

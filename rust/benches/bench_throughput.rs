@@ -14,12 +14,14 @@
 //!
 //! Run: cargo bench --bench bench_throughput
 
-use llm_coopt::config::{artifacts_dir, ALL_CONFIGS};
+use llm_coopt::config::{artifacts_dir, builtin_preset, ALL_CONFIGS, COOPT};
+use llm_coopt::platform::{CostModel, SeqCostInput};
 use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
 use llm_coopt::workload::harness::{
-    gain_pct, run_chunk_compare, run_swap_compare, run_trace, write_bench_serve,
+    gain_pct, run_chunk_compare, run_spec_compare, run_swap_compare, run_trace,
+    write_bench_serve,
 };
 use llm_coopt::workload::TraceSpec;
 
@@ -33,7 +35,8 @@ fn main() -> anyhow::Result<()> {
         "{:<10} {:>14} {:>14} {:>9} {:>10} {:>10} {:>10}",
         "mode", "sim tok/s", "total lat(s)", "preempt", "swap o/i", "recomp_tok", "tokens"
     );
-    let swap_rows = run_swap_compare(if quick { 6 } else { 8 }, if quick { 12 } else { 24 })?;
+    let (swap_requests, swap_max_new) = if quick { (6, 12) } else { (8, 24) };
+    let swap_rows = run_swap_compare(swap_requests, swap_max_new)?;
     let mut swap_report = Vec::new();
     for r in &swap_rows {
         println!(
@@ -57,14 +60,80 @@ fn main() -> anyhow::Result<()> {
             swap.tokens_recomputed
         );
     }
-    write_bench_serve("swap_vs_recompute", &swap_report)?;
+    write_bench_serve(
+        "swap_vs_recompute",
+        &swap_report,
+        &format!("requests={swap_requests},max_new={swap_max_new}"),
+    )?;
+
+    // --- speculative decoding: draft-and-verify multi-token commits
+    // (greedy, output-identical by construction; mock + Z100 model)
+    println!("speculative decoding — Eq. 12 throughput, draft-and-verify vs one-token decode");
+    println!(
+        "{:<10} {:>3} {:>14} {:>9} {:>8} {:>8} {:>8}",
+        "mode", "k", "sim tok/s", "tok/step", "accept", "rounds", "tokens"
+    );
+    let (spec_requests, spec_max_new, spec_ks) = (3, if quick { 16 } else { 32 }, [2usize, 4]);
+    let spec_rows = run_spec_compare(spec_requests, spec_max_new, &spec_ks)?;
+    let mut spec_report = Vec::new();
+    for r in &spec_rows {
+        println!(
+            "{:<10} {:>3} {:>12.1}/s {:>9.2} {:>7.1}% {:>8} {:>8}",
+            r.mode,
+            r.draft_tokens,
+            r.throughput_sim,
+            r.tokens_per_step,
+            r.acceptance_rate * 100.0,
+            r.decode_rounds,
+            r.tokens
+        );
+        spec_report.push(r.to_json());
+    }
+    if let Some(base) = spec_rows.first() {
+        for r in spec_rows.iter().skip(1) {
+            println!(
+                "k={}: throughput {:+.1}% vs one-token decode ({:.2} tokens/step at {:.0}% acceptance)",
+                r.draft_tokens,
+                gain_pct(base.throughput_sim, r.throughput_sim),
+                r.tokens_per_step,
+                r.acceptance_rate * 100.0
+            );
+        }
+    }
+    // analytic crossover on the Z100 model: the acceptance rate below
+    // which drafting stops paying for itself (weight-stream-bound batch)
+    let cm = CostModel::for_preset(&builtin_preset("llama-7b-sim").unwrap(), 16)
+        .with_ctx_scale(8.0);
+    let cross_seqs: Vec<SeqCostInput> = (0..3)
+        .map(|_| SeqCostInput {
+            ctx_len: 24,
+            allocated_blocks: 2,
+        })
+        .collect();
+    for k in [2usize, 4] {
+        match cm.spec_crossover_acceptance(&cross_seqs, &COOPT, k, 0.125) {
+            Some(a) => println!(
+                "k={k}: speculation beats one-token decode above ≈ {:.0}% acceptance",
+                a * 100.0
+            ),
+            None => println!("k={k}: speculation cannot beat one-token decode at this batch"),
+        }
+    }
+    println!();
+    write_bench_serve(
+        "speculative_decode",
+        &spec_report,
+        &format!("requests={spec_requests},max_new={spec_max_new},ks={spec_ks:?}"),
+    )?;
+
     // --- chunked prefill: Eq. 12 throughput, mock + Z100 model
     println!("chunked prefill — generation throughput (sim), 4 streams + 3 long prompts");
     println!(
         "{:<10} {:>14} {:>14} {:>8} {:>10} {:>12}",
         "mode", "sim tok/s", "total lat(s)", "chunks", "tokens", "stall(s)"
     );
-    let rows = run_chunk_compare(16, 3, 4, 24)?;
+    let (chunk_tokens, long_prompts, streams, chunk_max_new) = (16, 3, 4, 24);
+    let rows = run_chunk_compare(chunk_tokens, long_prompts, streams, chunk_max_new)?;
     let mut chunk_report = Vec::new();
     for r in &rows {
         println!(
@@ -80,7 +149,13 @@ fn main() -> anyhow::Result<()> {
             gain_pct(one.throughput_sim, chk.throughput_sim)
         );
     }
-    let path = write_bench_serve("chunked_prefill_throughput", &chunk_report)?;
+    let path = write_bench_serve(
+        "chunked_prefill_throughput",
+        &chunk_report,
+        &format!(
+            "chunk={chunk_tokens},long={long_prompts},streams={streams},max_new={chunk_max_new}"
+        ),
+    )?;
     println!("serve summary -> {}", path.display());
     std::fs::create_dir_all("target/bench-reports")?;
     let mut chunk_top = Object::new();

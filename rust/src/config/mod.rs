@@ -229,6 +229,77 @@ impl SwapPolicy {
     }
 }
 
+/// Acceptance rule for speculative decoding (draft-and-verify).
+///
+/// Greedy requests (temperature 0) always verify by exact argmax match
+/// regardless of policy — speculation is output-preserving there by
+/// construction.  The policy chooses what happens for *sampled*
+/// requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpecPolicy {
+    /// deterministic-verification override: every position (accepted,
+    /// corrected, and the bonus commit) is the target argmax even for
+    /// temperature>0 requests — a reproducibility/throughput mode that
+    /// intentionally overrides sampling during speculation
+    Greedy,
+    /// standard rejection sampling over the same filtered candidate set
+    /// `sample` uses (accept with prob min(1, p/q), sample the residual
+    /// on reject) — preserves the target sampling distribution, top-k
+    /// and top-p included, given the `Backend::draft` contract (each
+    /// proposal distributed as its reported logits; a deterministic
+    /// draft chain reports a point mass); the default
+    #[default]
+    Stochastic,
+}
+
+impl SpecPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "greedy" => Ok(SpecPolicy::Greedy),
+            "stochastic" => Ok(SpecPolicy::Stochastic),
+            other => Err(anyhow!(
+                "unknown spec policy '{other}' (expected greedy|stochastic)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecPolicy::Greedy => "greedy",
+            SpecPolicy::Stochastic => "stochastic",
+        }
+    }
+}
+
+/// Speculative decoding (draft-and-verify) deployment knobs.  Like
+/// `chunked_prefill` and the host pool, this is orthogonal to the five
+/// named opt configs: `draft_tokens == 0` (the default) keeps the
+/// one-token decode path and the AOT graph set unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecConfig {
+    /// draft length k: tokens proposed per running sequence per decode
+    /// round; a verify pass scores k+1 positions and commits the accepted
+    /// prefix plus one corrected/bonus token.  0 disables speculation.
+    pub draft_tokens: usize,
+    /// draft model size as a fraction of the target (the platform model
+    /// streams draft weights at this fraction of the target's bytes on
+    /// every draft micro-step)
+    pub shrink: f64,
+    /// acceptance rule (greedy token match or stochastic rejection
+    /// sampling)
+    pub policy: SpecPolicy,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig {
+            draft_tokens: 0,
+            shrink: 0.125,
+            policy: SpecPolicy::Stochastic,
+        }
+    }
+}
+
 /// Engine/scheduler tunables.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -252,6 +323,16 @@ pub struct EngineConfig {
     /// swap-vs-recompute preemption policy (only meaningful with a host
     /// pool and a backend that supports KV swap)
     pub swap_policy: SwapPolicy,
+    /// Opt-KV tier manager: how many decode batches' worth of swapped
+    /// sequences the async prefetch queue may stage ahead of the
+    /// scheduler (the ROADMAP's multi-step prefetch depth knob; 1 — the
+    /// default — stages what the next step's batch can absorb, deeper
+    /// values trade device blocks for hidden swap latency)
+    pub prefetch_depth: usize,
+    /// speculative decoding (draft-and-verify) knobs; `spec.draft_tokens
+    /// == 0` keeps the one-token decode path.  Backends without
+    /// draft/verify support degrade to one-token decode at construction.
+    pub spec: SpecConfig,
     /// default sampling params
     pub max_new_tokens: usize,
     pub temperature: f64,
@@ -271,6 +352,8 @@ impl EngineConfig {
             prefill_chunk_tokens: 32,
             host_pool_blocks: 0,
             swap_policy: SwapPolicy::Auto,
+            prefetch_depth: 1,
+            spec: SpecConfig::default(),
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: 0,
@@ -303,6 +386,32 @@ impl EngineConfig {
     /// Choose the swap-vs-recompute preemption policy.
     pub fn with_swap_policy(mut self, policy: SwapPolicy) -> Self {
         self.swap_policy = policy;
+        self
+    }
+
+    /// Cap the swap-ins the async prefetch queue stages ahead per step.
+    pub fn with_prefetch_depth(mut self, depth: usize) -> Self {
+        self.prefetch_depth = depth.max(1);
+        self
+    }
+
+    /// Enable speculative decoding with a draft length of `k` tokens per
+    /// round (a verify pass can commit up to k+1 tokens).
+    pub fn with_speculation(mut self, k: usize) -> Self {
+        self.spec.draft_tokens = k;
+        self
+    }
+
+    /// Choose the speculative acceptance rule.
+    pub fn with_spec_policy(mut self, policy: SpecPolicy) -> Self {
+        self.spec.policy = policy;
+        self
+    }
+
+    /// Set the draft model's size as a fraction of the target (drives the
+    /// platform model's draft-weight restream cost).
+    pub fn with_spec_shrink(mut self, shrink: f64) -> Self {
+        self.spec.shrink = shrink.clamp(0.01, 1.0);
         self
     }
 }
@@ -574,6 +683,39 @@ mod tests {
             assert_eq!(SwapPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(SwapPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn speculation_knobs() {
+        // off by default: one-token decode, graph set unchanged
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        assert_eq!(cfg.spec.draft_tokens, 0);
+        assert_eq!(
+            cfg.spec.policy,
+            SpecPolicy::Stochastic,
+            "distribution-preserving by default"
+        );
+        assert_eq!(cfg.prefetch_depth, 1);
+        let cfg = cfg
+            .with_speculation(4)
+            .with_spec_policy(SpecPolicy::Greedy)
+            .with_spec_shrink(0.25)
+            .with_prefetch_depth(3);
+        assert_eq!(cfg.spec.draft_tokens, 4);
+        assert_eq!(cfg.spec.policy, SpecPolicy::Greedy);
+        assert!((cfg.spec.shrink - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.prefetch_depth, 3);
+        // degenerate values are clamped to something runnable
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_spec_shrink(0.0)
+            .with_prefetch_depth(0);
+        assert!(cfg.spec.shrink > 0.0);
+        assert_eq!(cfg.prefetch_depth, 1);
+        // parse round-trips
+        for p in [SpecPolicy::Greedy, SpecPolicy::Stochastic] {
+            assert_eq!(SpecPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(SpecPolicy::parse("bogus").is_err());
     }
 
     #[test]

@@ -41,6 +41,21 @@
 //! that, a drop-to-recompute keeps the engine from wedging.  Backends
 //! without swap support degrade to drop-and-recompute at construction.
 //!
+//! **Speculative decoding (draft-and-verify).**  With
+//! [`crate::config::SpecConfig::draft_tokens`] `k > 0` and a backend that
+//! supports speculation, a decode round becomes: reserve k+1 KV slots per
+//! lane, draft k proposals with a shrunk draft model, score all k+1
+//! positions in ONE verify pass (the whole KV cache — the decode
+//! bottleneck Opt-KV exists for — is re-read once for up to k+1 token
+//! commits), commit the accepted prefix plus one corrected/bonus token,
+//! and roll the rejected suffix back
+//! ([`crate::kvcache::CacheManager::truncate_seq`]).  Greedy speculation
+//! is token-for-token identical to sequential greedy decode; stochastic
+//! acceptance preserves the target distribution via standard rejection
+//! sampling.  Speculative tokens are charged against the shared per-step
+//! budget, so chunked prefill and preemption keep composing; backends
+//! without draft/verify degrade to one-token decode at construction.
+//!
 //! The engine is generic over [`Backend`] so the whole L3 logic is unit-
 //! tested against the contract-checking mock without artifacts.
 
@@ -54,7 +69,7 @@ use crate::kvcache::{CacheManager, SeqId};
 use crate::metrics::{EngineMetrics, RequestMetrics};
 use crate::platform::{CostModel, SeqCostInput};
 use crate::runtime::Backend;
-use crate::sampling::{sample, SamplingParams};
+use crate::sampling::{sample, verify_token, SamplingParams, SpecDecision};
 use crate::scheduler::{PrefillWork, Scheduler};
 use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
 use crate::util::rng::Rng;
@@ -178,13 +193,30 @@ impl<B: Backend> Engine<B> {
             );
             cfg.host_pool_blocks = 0;
         }
+        if cfg.spec.draft_tokens > 0 && !backend.supports_speculation() {
+            // verify would fail on the first round and wedge the serving
+            // loop; degrade to one-token decode instead (mirrors the
+            // chunked-prefill and swap fallbacks)
+            crate::log_warn!(
+                "backend lacks draft/verify support; speculative decoding disabled \
+                 (one-token decode)"
+            );
+            cfg.spec.draft_tokens = 0;
+        }
         // budget at least one above the decode batch, so a full decode
         // round always leaves room for one prefill window (no starvation,
-        // and the shared-budget invariant stays strict)
+        // and the shared-budget invariant stays strict).  Speculation
+        // deliberately does NOT raise this floor: a user's tight
+        // prefill budget keeps binding (the speculative reserve can eat
+        // the whole budget, in which case the scheduler's one-token
+        // progress floor still advances prefill)
         let mut sched =
             Scheduler::new(max_batch).with_step_budget(cfg.max_prefill_tokens.max(max_batch + 1));
         if cfg.chunked_prefill {
             sched = sched.with_chunked_prefill(cfg.prefill_chunk_tokens);
+        }
+        if cfg.spec.draft_tokens > 0 {
+            sched = sched.with_speculation(cfg.spec.draft_tokens);
         }
         let mut cache = CacheManager::new(geometry);
         if cfg.host_pool_blocks > 0 {
@@ -329,7 +361,33 @@ impl<B: Backend> Engine<B> {
             .filter(|id| self.cache.has_seq(*id))
             .collect();
         if !decodes.is_empty() {
-            self.run_decode(&decodes)?;
+            let spec_k = self.cfg.spec.draft_tokens;
+            let max_ctx = self.backend.geometry().max_context();
+            if spec_k > 0 {
+                // draft-and-verify: lanes that can take a full k+1-slot
+                // reservation speculate; lanes too close to max context
+                // finish out on the one-token path
+                let (spec_ids, plain_ids): (Vec<SeqId>, Vec<SeqId>) = decodes
+                    .iter()
+                    .copied()
+                    .partition(|id| self.cache.seq_len(*id) + spec_k + 1 <= max_ctx);
+                if !spec_ids.is_empty() {
+                    self.run_spec_decode(&spec_ids, spec_k)?;
+                }
+                // speculation above may have preempted a planned plain lane
+                let plain_ids: Vec<SeqId> = plain_ids
+                    .into_iter()
+                    .filter(|id| {
+                        self.seqs.get(id).map(|s| s.finish.is_none()).unwrap_or(false)
+                    })
+                    .filter(|id| self.cache.has_seq(*id))
+                    .collect();
+                if !plain_ids.is_empty() {
+                    self.run_decode(&plain_ids)?;
+                }
+            } else {
+                self.run_decode(&decodes)?;
+            }
         } else if decision.prefills.is_empty() && !self.sched.is_idle() {
             // nothing runnable but work pending: resume a swapped
             // sequence (prefetch miss), make room, or fail loudly
@@ -634,6 +692,9 @@ impl<B: Backend> Engine<B> {
         )?;
         self.metrics.wall_decode_s += t0.elapsed().as_secs_f64();
         self.metrics.decode_steps += 1;
+        self.metrics.decode_tokens_committed += lanes.len() as u64;
+        self.metrics.decode_lanes_sum += lanes.len() as u64;
+        self.metrics.decode_batch_slots += self.sched.max_batch() as u64;
 
         let sim_s = self.cost.as_ref().map(|cm| {
             cm.decode_step(&cost_inputs, &opt, new_blocks, lanes.len())
@@ -663,6 +724,262 @@ impl<B: Backend> Engine<B> {
                 seq.metrics.sim_time_s += s;
             }
             self.check_finish(id, tok);
+        }
+        Ok(())
+    }
+
+    /// One speculative decode round (draft-and-verify) over `ids`:
+    ///
+    /// 1. reserve `k+1` KV slots per lane (the positions a verify pass
+    ///    writes), preempting on pool exhaustion exactly like the decode
+    ///    path — a lane that cannot complete its reservation rolls the
+    ///    partial window back and degrades to one-token decode;
+    /// 2. draft `k` proposals per lane with the backend's draft model;
+    /// 3. verify all `k+1` positions per lane in ONE batched pass —
+    ///    the whole KV cache is re-read once for up to k+1 commits;
+    /// 4. per lane, accept the longest agreeing draft prefix
+    ///    ([`verify_token`]: greedy match or stochastic rejection
+    ///    sampling), commit it plus one corrected/bonus token, and roll
+    ///    the rejected suffix back ([`CacheManager::truncate_seq`]).
+    ///
+    /// Greedy speculation is token-for-token identical to sequential
+    /// greedy decode (the verify rows are the same distributions decode
+    /// would have produced); only the step count changes.
+    fn run_spec_decode(&mut self, ids: &[SeqId], k: usize) -> Result<()> {
+        struct SpecLane {
+            id: SeqId,
+            /// committed context before the reservation (first fed position)
+            base: usize,
+            /// the k+1 reserved write slots
+            slots: Vec<i32>,
+        }
+
+        let opt = *self.backend.opt();
+        let geometry = *self.backend.geometry();
+        let b = geometry.max_batch;
+        let mb = geometry.max_blocks;
+        let vocab = self.backend.preset().vocab;
+
+        // 1. reserve k+1 slots per lane, preempting on pool exhaustion
+        let mut lanes: Vec<SpecLane> = Vec::with_capacity(ids.len());
+        let mut preempted_now: Vec<SeqId> = Vec::new();
+        let mut degraded: Vec<SeqId> = Vec::new();
+        let allocs_before = self.cache.stats().blocks_used;
+        'lane: for &id in ids.iter().take(b) {
+            if preempted_now.contains(&id) {
+                continue;
+            }
+            let base = self.cache.seq_len(id);
+            let mut slots: Vec<i32> = Vec::with_capacity(k + 1);
+            while slots.len() < k + 1 {
+                match self.cache.append_token(id) {
+                    Ok((slot, _pos)) => slots.push(slot),
+                    Err(_) => {
+                        // roll the partial reservation back *before*
+                        // choosing a victim: with no unwritten slots left,
+                        // even a self-preemption may exit via swap, so
+                        // mid-speculation preemption stays semantically
+                        // invisible.  Lanes that completed their window
+                        // still hold unwritten slots and must drop, never
+                        // swap — but the victim is always the newest
+                        // admission, which sits at or after `id` in the
+                        // admission-ordered decode batch, so in practice
+                        // completed windows are never chosen.
+                        self.cache.truncate_seq(id, base)?;
+                        slots.clear();
+                        if self.sched.num_running() <= 1 {
+                            // alone in the pool: preempting ourselves
+                            // would just swap-thrash; the one-token path
+                            // needs a fraction of the blocks and always
+                            // makes progress
+                            degraded.push(id);
+                            continue 'lane;
+                        }
+                        let no_swap: Vec<SeqId> = lanes.iter().map(|l| l.id).collect();
+                        match self.preempt_one(&no_swap)? {
+                            Some(v) if v != id => {
+                                preempted_now.push(v);
+                                lanes.retain(|l| l.id != v);
+                                continue;
+                            }
+                            Some(v) => {
+                                // preempted ourselves
+                                preempted_now.push(v);
+                                continue 'lane;
+                            }
+                            None => {
+                                // pool wedged mid-speculation: fall back
+                                // to the one-token decode path, which
+                                // needs a fraction of the blocks
+                                degraded.push(id);
+                                continue 'lane;
+                            }
+                        }
+                    }
+                }
+            }
+            lanes.push(SpecLane { id, base, slots });
+        }
+        lanes.retain(|l| !preempted_now.contains(&l.id));
+        if lanes.is_empty() {
+            if !degraded.is_empty() {
+                return self.run_decode(&degraded);
+            }
+            return Ok(());
+        }
+        let new_blocks = self.cache.stats().blocks_used.saturating_sub(allocs_before);
+
+        // 2. draft k proposals per lane
+        let n = k + 1;
+        let mut token_ids = vec![PAD_ID as i32; b];
+        let mut positions = vec![0i32; b];
+        let mut draft_ctx = vec![0i32; b];
+        for (lane, l) in lanes.iter().enumerate() {
+            let seq = &self.seqs[&l.id];
+            token_ids[lane] = *seq.tokens.last().unwrap() as i32;
+            positions[lane] = l.base as i32;
+            draft_ctx[lane] = (l.base + 1) as i32;
+        }
+        let t0 = Instant::now();
+        let (draft_toks, draft_logits) =
+            self.backend.draft(&token_ids, &positions, &draft_ctx, k)?;
+
+        // 3. verify all k+1 positions in one batched pass
+        let mut v_tokens = vec![PAD_ID as i32; b * n];
+        let mut v_slots = vec![-1i32; b * n];
+        let mut v_ctx = vec![0i32; b];
+        let mut block_tables = vec![0i32; b * mb];
+        let mut cost_inputs: Vec<SeqCostInput> = Vec::with_capacity(lanes.len());
+        for (lane, l) in lanes.iter().enumerate() {
+            v_tokens[lane * n] = token_ids[lane];
+            for i in 0..k {
+                v_tokens[lane * n + 1 + i] = draft_toks[lane * k + i];
+            }
+            for (i, &s) in l.slots.iter().enumerate() {
+                v_slots[lane * n + i] = s;
+            }
+            let ctx = self.cache.seq_len(l.id); // base + k + 1
+            v_ctx[lane] = ctx as i32;
+            let row = self.cache.block_table_row(l.id);
+            block_tables[lane * mb..(lane + 1) * mb].copy_from_slice(&row);
+            cost_inputs.push(SeqCostInput {
+                ctx_len: ctx,
+                allocated_blocks: row_allocated(&row, ctx, geometry.block_size, &opt, geometry.max_seq),
+            });
+        }
+        let logits = self
+            .backend
+            .verify(&v_tokens, &positions, &block_tables, &v_ctx, &v_slots, k)?;
+        self.metrics.wall_decode_s += t0.elapsed().as_secs_f64();
+        self.metrics.spec_rounds += 1;
+        self.metrics.decode_lanes_sum += lanes.len() as u64;
+        self.metrics.decode_batch_slots += self.sched.max_batch() as u64;
+
+        let sim_s = self.cost.as_ref().map(|cm| {
+            let draft = cm.draft_step(&cost_inputs, &opt, k, self.cfg.spec.shrink);
+            let verify = cm.verify_batch(&cost_inputs, &opt, k, new_blocks, lanes.len() * n);
+            draft.total_s + verify.total_s
+        });
+        if let Some(s) = sim_s {
+            self.metrics.sim_decode_s += s;
+            let itl = self.step_prefill_sim_s + s;
+            for _ in 0..lanes.len() {
+                self.metrics.itl_sim.add(itl);
+            }
+        }
+
+        // 4. accept, commit, roll back
+        let per_seq_sim = sim_s.map(|s| s / lanes.len() as f64);
+        let max_ctx = geometry.max_context();
+        let policy = self.cfg.spec.policy;
+        for (lane, l) in lanes.iter().enumerate() {
+            let id = l.id;
+            let (sampling, ignore_eos, max_new, gen_before, len_before) = {
+                let s = &self.seqs[&id];
+                (s.sampling, s.ignore_eos, s.max_new, s.generated(), s.tokens.len())
+            };
+            // decide the committed token list: the longest accepted draft
+            // prefix, then one corrected (on rejection) or bonus (on full
+            // acceptance) token from the target's own distribution
+            let mut commit: Vec<u32> = Vec::with_capacity(n);
+            let mut accepted_drafts = 0usize;
+            let mut rejected = false;
+            for i in 0..k {
+                let d = draft_toks[lane * k + i] as u32;
+                let target = &logits[(lane * n + i) * vocab..(lane * n + i + 1) * vocab];
+                let draft = &draft_logits[(lane * k + i) * vocab..(lane * k + i + 1) * vocab];
+                match verify_token(d, target, draft, &sampling, policy, &mut self.rng) {
+                    SpecDecision::Accept => {
+                        commit.push(d);
+                        accepted_drafts += 1;
+                    }
+                    SpecDecision::Reject(c) => {
+                        commit.push(c);
+                        rejected = true;
+                        break;
+                    }
+                }
+            }
+            if !rejected {
+                // all k drafts accepted: the verify pass's final row is
+                // the distribution after d_k — a free (k+1)-th commit.
+                // Under the greedy rule (greedy request, or the Greedy
+                // deterministic-verification override) the bonus is the
+                // argmax like every verified position, so one rule
+                // governs the whole round
+                let target = &logits[(lane * n + k) * vocab..(lane * n + k + 1) * vocab];
+                let tok = if sampling.temperature <= 0.0
+                    || policy == crate::config::SpecPolicy::Greedy
+                {
+                    crate::sampling::argmax(target) as u32
+                } else {
+                    sample(target, &sampling, &mut self.rng)
+                };
+                commit.push(tok);
+            }
+            // stop at the first finish trigger, exactly where sequential
+            // decode would have stopped (same checks, same order as
+            // `check_finish`)
+            let mut take = 0usize;
+            for (j, &t) in commit.iter().enumerate() {
+                take = j + 1;
+                if (t == EOS_ID && !ignore_eos)
+                    || gen_before + take >= max_new
+                    || len_before + take >= max_ctx
+                {
+                    break;
+                }
+            }
+            commit.truncate(take);
+
+            // roll back the KV of rejected/unused suffix positions: keep
+            // exactly the fed tokens preceding each committed one (the
+            // last committed token's KV stays unwritten, the decode-path
+            // invariant)
+            self.cache.truncate_seq(id, l.base + commit.len())?;
+
+            self.metrics.spec_drafted += k as u64;
+            self.metrics.spec_accepted += accepted_drafts.min(commit.len()) as u64;
+            self.metrics.decode_tokens_committed += commit.len() as u64;
+            let seq = self.seqs.get_mut(&id).unwrap();
+            seq.tokens.extend_from_slice(&commit);
+            seq.metrics.generated_tokens = seq.generated();
+            if let Some(s) = per_seq_sim {
+                seq.metrics.sim_time_s += s;
+            }
+            let last = *commit.last().unwrap();
+            self.check_finish(id, last);
+        }
+
+        // lanes whose reservation could not complete take the one-token
+        // path this round (no wedge, just a smaller commit)
+        let degraded: Vec<SeqId> = degraded
+            .into_iter()
+            .filter(|id| self.seqs.get(id).map(|s| s.finish.is_none()).unwrap_or(false))
+            .filter(|id| self.cache.has_seq(*id))
+            .collect();
+        if !degraded.is_empty() {
+            self.run_decode(&degraded)?;
         }
         Ok(())
     }
@@ -764,7 +1081,12 @@ impl<B: Backend> Engine<B> {
 
     /// End of step: stage swap-ins one step ahead of the scheduler's
     /// decode batch, oldest swapped sequence first, while device blocks
-    /// and batch slots allow.
+    /// and batch slots allow.  [`EngineConfig::prefetch_depth`] scales
+    /// how far ahead the queue reaches: up to `depth` decode batches'
+    /// worth of sequences may be staged (depth 1 — the default — stages
+    /// exactly what the next step's batch can absorb, the original
+    /// behaviour; deeper queues hide more swap latency at the cost of
+    /// device blocks held by not-yet-schedulable sequences).
     fn issue_prefetches(&mut self) -> Result<()> {
         if !self.cache.has_host_tier() {
             return Ok(());
@@ -773,7 +1095,8 @@ impl<B: Backend> Engine<B> {
             if self.in_flight_prefetch.contains(&id) {
                 continue;
             }
-            if self.sched.num_running() + self.in_flight_prefetch.len() >= self.sched.max_batch()
+            if self.sched.num_running() + self.in_flight_prefetch.len()
+                >= self.sched.max_batch() * self.cfg.prefetch_depth.max(1)
             {
                 break;
             }
@@ -851,7 +1174,13 @@ impl<B: Backend> Engine<B> {
     }
 
     fn finish_seq(&mut self, id: SeqId, reason: FinishReason) {
-        self.cache.free_seq(id);
+        // a sequence can finish while host-resident; its staging buffers
+        // must be released or they leak (host slot ids are never reused)
+        for slot in self.cache.free_seq(id) {
+            if let Err(e) = self.backend.swap_discard(slot) {
+                crate::log_warn!("swap_discard of host slot {slot} failed: {e}");
+            }
+        }
         self.sched.finish(id);
         if let Some(mut seq) = self.seqs.remove(&id) {
             seq.metrics.finished = Some(Instant::now());
@@ -1290,6 +1619,238 @@ mod tests {
         assert!(v.req_usize("swap_outs").unwrap() > 0);
         assert!(v.req_f64("prefetch_hit_rate").unwrap() >= 0.0);
         assert_eq!(v.req_usize("cache_blocks_used").unwrap(), 0);
+    }
+
+    fn spec_engine(k: usize) -> Engine<MockBackend> {
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_speculation(k);
+        Engine::new(be, cfg)
+    }
+
+    #[test]
+    fn greedy_speculation_matches_one_token_decode() {
+        let reqs: Vec<GenRequest> = (0..5)
+            .map(|i| GenRequest::greedy(format!("spec prompt {i} {}", "s".repeat(10 + i)), 12))
+            .collect();
+        let mut base = engine(COOPT);
+        let expected = base.generate(reqs.clone()).unwrap();
+        for k in [1usize, 2, 4] {
+            let mut e = spec_engine(k);
+            let got = e.generate(reqs.clone()).unwrap();
+            assert_eq!(expected.len(), got.len());
+            for (a, b) in expected.iter().zip(&got) {
+                assert_eq!(a.tokens, b.tokens, "k={k}: speculation must not change outputs");
+                assert_eq!(a.finish, b.finish);
+            }
+            assert!(e.metrics.spec_rounds > 0, "k={k}: verify passes ran");
+            assert!(e.metrics.spec_drafted > 0);
+            assert_eq!(e.cache_stats().blocks_used, 0, "k={k}: rollback leaks no blocks");
+            // the whole point: more than one token per decode round
+            assert!(
+                e.metrics.tokens_per_step() > 1.0,
+                "k={k}: tokens/step {}",
+                e.metrics.tokens_per_step()
+            );
+            assert!(
+                e.metrics.decode_steps + e.metrics.spec_rounds
+                    < base.metrics.decode_steps,
+                "k={k}: speculation takes fewer rounds"
+            );
+            // the mock's draft deliberately disagrees sometimes
+            let rate = e.metrics.acceptance_rate();
+            assert!(rate > 0.0 && rate < 1.0, "k={k}: acceptance {rate}");
+        }
+    }
+
+    #[test]
+    fn speculation_commits_through_finish_boundaries() {
+        // max_new not a multiple of k+1: the cutoff must stop at exactly
+        // max_new tokens, like sequential decode
+        for max_new in [1usize, 2, 3, 5, 7] {
+            let mut base = engine(COOPT);
+            let expected = base
+                .generate(vec![GenRequest::greedy("boundary test", max_new)])
+                .unwrap();
+            let mut e = spec_engine(4);
+            let got = e
+                .generate(vec![GenRequest::greedy("boundary test", max_new)])
+                .unwrap();
+            assert_eq!(expected[0].tokens, got[0].tokens, "max_new={max_new}");
+            assert_eq!(got[0].generated_tokens, max_new);
+            assert_eq!(expected[0].finish, got[0].finish);
+            assert_eq!(e.cache_stats().blocks_used, 0);
+        }
+    }
+
+    #[test]
+    fn speculation_composes_with_chunked_prefill() {
+        let reqs: Vec<GenRequest> = (0..3)
+            .map(|i| GenRequest::greedy(format!("long {} {}", i, "c".repeat(40)), 10))
+            .collect();
+        let mut base = engine(COOPT);
+        let expected = base.generate(reqs.clone()).unwrap();
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_chunked_prefill(8)
+            .with_step_budget(48)
+            .with_speculation(3);
+        let mut e = Engine::new(be, cfg);
+        let got = e.generate(reqs).unwrap();
+        for (a, b) in expected.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+        assert!(e.metrics.prefill_chunks > 0, "prompts actually chunked");
+        assert!(e.metrics.spec_rounds > 0, "and decode rounds speculated");
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn speculation_survives_pool_exhaustion_with_swap() {
+        // unconstrained one-token reference vs a speculative engine on an
+        // undersized pool with a host tier: preemption mid-speculation
+        // must stay semantically invisible (reservations roll back before
+        // the victim exits via swap)
+        let mut base = tiered_engine(96, 0, SwapPolicy::Never);
+        let expected = base.generate(pressure_reqs()).unwrap();
+        assert_eq!(base.metrics.preemptions, 0);
+
+        let geometry = crate::config::CacheGeometry {
+            block_size: 4,
+            max_blocks: 16,
+            num_pool_blocks: 12,
+            max_batch: 4,
+            max_seq: 48,
+        };
+        let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_host_pool(160)
+            .with_swap_policy(SwapPolicy::Always)
+            .with_speculation(3);
+        let mut e = Engine::new(be, cfg);
+        let got = e.generate(pressure_reqs()).unwrap();
+        assert_eq!(expected.len(), got.len());
+        for (a, b) in expected.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens, "speculation + swap must not change outputs");
+            assert_eq!(a.finish, b.finish);
+        }
+        assert!(e.metrics.preemptions > 0, "pool pressure must preempt");
+        assert!(e.metrics.spec_rounds > 0, "speculation actually ran");
+        assert_eq!(e.cache_stats().blocks_used, 0);
+        assert_eq!(e.tier_stats().host_used_blocks, 0, "host tier drains");
+    }
+
+    #[test]
+    fn stochastic_speculation_serves_and_accounts() {
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_speculation(3)
+            .with_spec_policy(crate::config::SpecPolicy::Stochastic);
+        let mut e = Engine::new(be, cfg);
+        let mut req = GenRequest::greedy("stochastic spec", 16);
+        req.sampling.temperature = 0.8;
+        req.ignore_eos = true;
+        let r = e.generate(vec![req]).unwrap();
+        assert_eq!(r[0].generated_tokens, 16);
+        assert!(e.metrics.spec_rounds > 0);
+        assert_eq!(
+            e.metrics.decode_tokens_committed + 1, // + the prefill-sampled token
+            r[0].generated_tokens as u64
+        );
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn speculation_disabled_without_backend_support() {
+        // a backend that leaves the trait defaults in place (like the
+        // one-shot PJRT graphs) must never be driven with draft/verify
+        struct OneTokenOnly(MockBackend);
+        impl Backend for OneTokenOnly {
+            fn preset(&self) -> &crate::config::ModelPreset {
+                self.0.preset()
+            }
+            fn geometry(&self) -> &crate::config::CacheGeometry {
+                self.0.geometry()
+            }
+            fn opt(&self) -> &crate::config::OptConfig {
+                self.0.opt()
+            }
+            fn prefill(&mut self, t: &[i32], l: i32, s: &[i32]) -> Result<Vec<f32>> {
+                self.0.prefill(t, l, s)
+            }
+            fn decode(
+                &mut self,
+                t: &[i32],
+                p: &[i32],
+                b: &[i32],
+                c: &[i32],
+                s: &[i32],
+            ) -> Result<Vec<f32>> {
+                self.0.decode(t, p, b, c, s)
+            }
+            fn reset_cache(&mut self) -> Result<()> {
+                self.0.reset_cache()
+            }
+            fn take_exec_time(&mut self) -> std::time::Duration {
+                self.0.take_exec_time()
+            }
+        }
+        let be = OneTokenOnly(MockBackend::new().with_opt(COOPT));
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_speculation(4);
+        let mut e = Engine::new(be, cfg);
+        assert_eq!(e.cfg.spec.draft_tokens, 0, "degraded to one-token decode");
+        let r = e
+            .generate(vec![GenRequest::greedy("fallback still serves", 6)])
+            .unwrap();
+        assert_eq!(r[0].generated_tokens, 6);
+        assert_eq!(e.metrics.spec_rounds, 0);
+        assert!((e.metrics.tokens_per_step() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speculation_degrades_near_max_context() {
+        // tiny context: lanes whose remaining room is under k+1 finish on
+        // the one-token path instead of wedging or overshooting
+        let geometry = crate::config::CacheGeometry {
+            block_size: 4,
+            max_blocks: 4,
+            num_pool_blocks: 16,
+            max_batch: 2,
+            max_seq: 12,
+        };
+        let run = |k: usize| {
+            let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+            let mut cfg = EngineConfig::new("llama-7b-sim", COOPT);
+            if k > 0 {
+                cfg = cfg.with_speculation(k);
+            }
+            let mut e = Engine::new(be, cfg);
+            let toks: Vec<u32> = (40..46).collect();
+            e.submit_tokens(toks, 32, SamplingParams::default(), true).unwrap();
+            let r = e.run_to_completion().unwrap();
+            (r[0].tokens.clone(), r[0].finish, e)
+        };
+        let (base_toks, base_fin, _) = run(0);
+        let (spec_toks, spec_fin, e) = run(4);
+        assert_eq!(base_toks, spec_toks, "max-context cutoff identical");
+        assert_eq!(base_fin, spec_fin);
+        assert_eq!(base_fin, FinishReason::MaxContext);
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn spec_metrics_reach_stats_json() {
+        let mut e = spec_engine(3);
+        e.generate(vec![
+            GenRequest::greedy("metrics one", 10),
+            GenRequest::greedy("metrics two", 10),
+        ])
+        .unwrap();
+        let v = e.stats_json();
+        assert!(v.req_usize("spec_rounds").unwrap() > 0);
+        assert!(v.req_f64("tokens_per_step").unwrap() > 1.0);
+        let occ = v.req_f64("decode_batch_occupancy").unwrap();
+        assert!(occ > 0.0 && occ <= 1.0);
+        assert!(v.req_f64("acceptance_rate").unwrap() > 0.0);
     }
 
     #[test]

@@ -124,6 +124,10 @@ struct SeqState {
     len: usize,
     /// physical blocks borrowed via prefix sharing (refcounted, read-only)
     shared_prefix_blocks: usize,
+    /// block-table floor materialized by prefill — [`CacheManager::truncate_seq`]
+    /// never frees below it, so the padded baseline's padding blocks
+    /// survive speculative rollback exactly as one-shot prefill left them
+    min_blocks: usize,
 }
 
 /// Outcome of planning a prefill write (drives the prefill graph inputs).
@@ -434,6 +438,11 @@ impl CacheManager {
         let shared_added = reused_blocks;
         let st = self.seqs.entry(id).or_default();
         debug_assert!(table.len() >= prior_blocks);
+        // the padded baseline's padding blocks are a prefill artifact:
+        // speculative rollback (truncate_seq) must leave them exactly as
+        // one-shot prefill did.  SkipSet configs materialize no padding,
+        // so their floor is the natural ceil(len / block_size).
+        st.min_blocks = if opt.skip_filter { 0 } else { table.len() };
         st.table = table;
         st.len = end;
         st.shared_prefix_blocks += shared_added;
@@ -492,6 +501,87 @@ impl CacheManager {
         Ok(((phys as usize * bs + pos % bs) as i32, pos))
     }
 
+    /// Speculative-decode rollback: un-write the tail of `id` back to
+    /// `new_len` committed tokens.
+    ///
+    /// Whole blocks past the new boundary leave the sequence's table —
+    /// a shared block is decref'd so its other readers are untouched, and
+    /// a block that actually frees also leaves the prefix index — except
+    /// blocks the prefill itself materialized (the padded baseline's
+    /// padding span), which stay with the sequence exactly as one-shot
+    /// prefill left them.  If the new boundary falls *inside* a
+    /// prefix-shared block, the sequence gets a private copy
+    /// (copy-on-write) so a resumed append can never write a sharer's
+    /// slots; the engine's reservation path COWs before any KV write, so
+    /// it never hits this case — it exists for API completeness, and on a
+    /// real backend it would additionally need a partial-block copy.
+    ///
+    /// Returns the number of blocks released from the table.  Rolled-back
+    /// slots need no backend call: they are unindexed metadata-side and
+    /// simply re-written by whichever allocation claims them next.
+    pub fn truncate_seq(&mut self, id: SeqId, new_len: usize) -> Result<usize> {
+        let bs = self.geometry.block_size;
+        let (dropped, cow_block) = {
+            let alloc = &self.alloc;
+            let Some(st) = self.seqs.get_mut(&id) else {
+                bail!("truncate of unknown sequence {id}");
+            };
+            if new_len > st.len {
+                bail!(
+                    "cannot truncate sequence {id} to {new_len} beyond its {} committed tokens",
+                    st.len
+                );
+            }
+            if new_len == st.len {
+                return Ok(0);
+            }
+            st.len = new_len;
+            let keep = new_len
+                .div_ceil(bs)
+                .max(st.min_blocks)
+                .min(st.table.len());
+            let dropped = st.table.split_off(keep);
+            let cow_block = if new_len % bs != 0 {
+                let b = new_len / bs;
+                (b < st.table.len() && alloc.refcount(st.table[b]) > 1).then_some(b)
+            } else {
+                None
+            };
+            (dropped, cow_block)
+        };
+        let released = dropped.len();
+        let mut shared_released = 0usize;
+        for phys in dropped {
+            if self.alloc.refcount(phys) > 1 {
+                shared_released += 1;
+            }
+            if self.alloc.decref(phys) {
+                self.unindex_block(phys);
+            }
+        }
+        if let Some(b) = cow_block {
+            // boundary inside a shared block: take the private block
+            // first, then release the shared reference (append_token's
+            // ordering note — the reverse would leak on exhaustion)
+            let fresh = self
+                .alloc
+                .alloc()
+                .ok_or_else(|| anyhow::anyhow!("out of KV blocks during truncate COW"))?;
+            shared_released += 1;
+            let st = self.seqs.get_mut(&id).expect("present above");
+            let old = st.table[b];
+            st.table[b] = fresh;
+            if self.alloc.decref(old) {
+                self.unindex_block(old);
+            }
+        }
+        if shared_released > 0 {
+            let st = self.seqs.get_mut(&id).expect("present above");
+            st.shared_prefix_blocks = st.shared_prefix_blocks.saturating_sub(shared_released);
+        }
+        Ok(released)
+    }
+
     /// Padded block-table row for the decode graph.
     pub fn block_table_row(&self, id: SeqId) -> Vec<i32> {
         let max_blocks = self.geometry.max_blocks;
@@ -505,16 +595,24 @@ impl CacheManager {
     }
 
     /// Free a sequence's blocks (end of generation or preemption).  Also
-    /// covers sequences resident in the host tier.
-    pub fn free_seq(&mut self, id: SeqId) {
+    /// covers sequences resident in the host tier: any freed host slots
+    /// are returned so the caller can issue
+    /// [`crate::runtime::Backend::swap_discard`] for them — slot ids are
+    /// never reused, so an undiscarded slot is a permanent staging-buffer
+    /// leak on a real backend.  Device-resident sequences return an empty
+    /// list.
+    pub fn free_seq(&mut self, id: SeqId) -> Vec<tier::HostSlotId> {
         if let Some(st) = self.seqs.remove(&id) {
             for b in st.table {
                 if self.alloc.decref(b) {
                     self.unindex_block(b);
                 }
             }
+            Vec::new()
         } else if self.swapped.contains_key(&id) {
-            self.drop_swapped(id);
+            self.drop_swapped(id)
+        } else {
+            Vec::new()
         }
     }
 
@@ -603,6 +701,7 @@ impl CacheManager {
                 entries,
                 len: st.len,
                 shared_prefix_blocks: st.shared_prefix_blocks,
+                min_blocks: st.min_blocks,
             },
         );
         Ok(SwapOutOps {
@@ -659,6 +758,7 @@ impl CacheManager {
                 table,
                 len: sw.len,
                 shared_prefix_blocks: sw.shared_prefix_blocks,
+                min_blocks: sw.min_blocks,
             },
         );
         Ok(SwapInOps {
@@ -1147,6 +1247,161 @@ mod tests {
         assert_eq!(a.num_used(), 0);
     }
 
+    // ---- speculative rollback (truncate_seq) ------------------------------
+
+    #[test]
+    fn truncate_across_block_boundary_frees_whole_blocks() {
+        let mut cm = CacheManager::new(geom()); // block_size 4
+        cm.prefill(1, &[1, 2, 3, 4, 5, 6], &COOPT).unwrap();
+        // grow to 11 tokens: blocks [0..4)(prefill) [4..8) [8..11)
+        for _ in 0..5 {
+            cm.append_token(1).unwrap();
+        }
+        assert_eq!(cm.seq_len(1), 11);
+        assert_eq!(cm.stats().blocks_used, 3);
+        // roll back across a boundary: 11 -> 6 drops the third block
+        // entirely and the second block's tail positions
+        let released = cm.truncate_seq(1, 6).unwrap();
+        assert_eq!(released, 1);
+        assert_eq!(cm.seq_len(1), 6);
+        assert_eq!(cm.stats().blocks_used, 2);
+        // rolling back to exactly a block boundary keeps the whole
+        // boundary block and frees everything past it
+        for _ in 0..3 {
+            cm.append_token(1).unwrap(); // len 9, 3 blocks again
+        }
+        assert_eq!(cm.truncate_seq(1, 8).unwrap(), 1);
+        assert_eq!(cm.seq_len(1), 8);
+        assert_eq!(cm.stats().blocks_used, 2);
+        // degenerate calls
+        assert!(cm.truncate_seq(1, 10).is_err(), "beyond committed length");
+        assert!(cm.truncate_seq(9, 1).is_err(), "unknown sequence");
+        assert_eq!(cm.truncate_seq(1, 8).unwrap(), 0, "no-op truncate");
+        cm.free_seq(1);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn truncate_into_prefix_shared_block_cows_and_keeps_sharer_intact() {
+        let mut cm = CacheManager::new(geom());
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23];
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        let p2 = cm.prefill(2, &prompt, &COOPT).unwrap();
+        assert_eq!(p2.reused_blocks, 2);
+        let shared: Vec<i32> = cm.block_table_row(1)[..2].to_vec();
+
+        // truncate seq 2 into the middle of its second (shared) block:
+        // it must get a private copy, never a write path into the
+        // sharer's slots
+        cm.truncate_seq(2, 6).unwrap();
+        assert_eq!(cm.seq_len(2), 6);
+        assert_ne!(
+            cm.block_table_row(2)[1],
+            shared[1],
+            "boundary block copied-on-write"
+        );
+        assert_eq!(cm.block_table_row(1)[..2], shared[..], "sharer untouched");
+        // resuming appends lands in the private copy and allocates as usual
+        let (slot, pos) = cm.append_token(2).unwrap();
+        assert_eq!(pos, 6);
+        assert_eq!(slot as usize / 4, cm.block_table_row(2)[1] as usize);
+        // the sharer keeps decoding on the original physical blocks
+        cm.append_token(1).unwrap();
+        assert_eq!(cm.block_table_row(1)[..2], shared[..]);
+        cm.free_seq(1);
+        cm.free_seq(2);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn truncate_fully_dropping_shared_block_only_drops_one_reference() {
+        let mut cm = CacheManager::new(geom());
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23];
+        cm.prefill(1, &prompt, &COOPT).unwrap();
+        cm.prefill(2, &prompt, &COOPT).unwrap();
+        let shared = cm.block_table_row(1)[1];
+        // block-aligned truncate that drops seq 2's whole second block
+        // (shared): the sharer's data must survive
+        let released = cm.truncate_seq(2, 4).unwrap();
+        assert_eq!(released, 1);
+        assert_eq!(cm.block_table_row(1)[1], shared);
+        cm.append_token(1).unwrap();
+        cm.free_seq(1);
+        cm.free_seq(2);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn truncate_then_resume_matches_never_speculated() {
+        // speculative round shape: reserve, roll back, re-append — the
+        // final table/len must match a run that never speculated
+        let prompt: Vec<u32> = (0..6).map(|i| 50 + i).collect();
+        let mut plain = CacheManager::new(geom());
+        plain.prefill(1, &prompt, &COOPT).unwrap();
+        for _ in 0..3 {
+            plain.append_token(1).unwrap();
+        }
+        let mut spec = CacheManager::new(geom());
+        spec.prefill(1, &prompt, &COOPT).unwrap();
+        // reserve 4 speculative positions, reject 3 of them
+        for _ in 0..4 {
+            spec.append_token(1).unwrap();
+        }
+        spec.truncate_seq(1, 7).unwrap();
+        for _ in 0..2 {
+            spec.append_token(1).unwrap();
+        }
+        assert_eq!(spec.seq_len(1), plain.seq_len(1));
+        assert_eq!(
+            spec.block_table_row(1).len(),
+            plain.block_table_row(1).len()
+        );
+        assert_eq!(spec.stats().blocks_used, plain.stats().blocks_used);
+        spec.free_seq(1);
+        assert_eq!(spec.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn truncate_respects_baseline_padding_floor() {
+        // the padded baseline materialized its padding blocks at prefill;
+        // speculative rollback must not free them
+        let mut cm = CacheManager::new(geom()); // max_seq 16, bs 4
+        cm.prefill(1, &[1, 2, 3, 4, 5, 6], &ORIGINAL).unwrap();
+        assert_eq!(cm.stats().blocks_used, 4, "padded span allocated");
+        cm.append_token(1).unwrap();
+        cm.append_token(1).unwrap();
+        let released = cm.truncate_seq(1, 7).unwrap();
+        assert_eq!(released, 0, "padding blocks stay with the sequence");
+        assert_eq!(cm.stats().blocks_used, 4);
+        assert_eq!(cm.seq_len(1), 7);
+        // and the sequence keeps appending into the retained span
+        let (_, pos) = cm.append_token(1).unwrap();
+        assert_eq!(pos, 7);
+        cm.free_seq(1);
+        assert_eq!(cm.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn truncate_survives_swap_roundtrip() {
+        // min_blocks and rollback behaviour are preserved across the host
+        // tier: swap out, swap in, then roll back
+        let mut cm = tiered(8);
+        cm.prefill(1, &[1, 2, 3, 4, 5, 6], &COOPT).unwrap();
+        for _ in 0..4 {
+            cm.append_token(1).unwrap();
+        }
+        cm.swap_out(1).unwrap();
+        cm.swap_in(1).unwrap();
+        assert_eq!(cm.seq_len(1), 10);
+        let released = cm.truncate_seq(1, 7).unwrap();
+        assert_eq!(released, 1);
+        assert_eq!(cm.seq_len(1), 7);
+        cm.append_token(1).unwrap();
+        cm.free_seq(1);
+        assert_eq!(cm.stats().blocks_used, 0);
+        assert_eq!(cm.tier_stats().host_used_blocks, 0);
+    }
+
     // ---- two-tier residency (Opt-KV tier manager) -------------------------
 
     fn tiered(host_blocks: usize) -> CacheManager {
@@ -1298,10 +1553,14 @@ mod tests {
         cm.append_token(1).unwrap();
         cm.free_seq(1);
         assert_eq!(cm.stats().blocks_used, 0);
-        // free_seq on a swapped id routes through drop_swapped too
+        // free_seq on a swapped id routes through drop_swapped too, and
+        // surfaces the freed host slots for the backend to discard
         cm.prefill(3, &prompt, &COOPT).unwrap();
         cm.swap_out(3).unwrap();
-        cm.free_seq(3);
+        let freed = cm.free_seq(3);
+        // seq 3 swapped alone: all 3 sole-owner blocks went to the host,
+        // and all 3 slots come back for the backend to discard
+        assert_eq!(freed.len(), 3, "host slots reported for swap_discard");
         assert!(!cm.is_swapped(3));
         assert_eq!(cm.stats().blocks_used, 0);
         assert_eq!(cm.tier_stats().host_used_blocks, 0);

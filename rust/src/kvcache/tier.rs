@@ -53,6 +53,10 @@ pub struct SwappedSeq {
     pub len: usize,
     /// carried over for the resident state's accounting
     pub shared_prefix_blocks: usize,
+    /// carried over: the block-table floor prefill materialized (see
+    /// `CacheManager::truncate_seq` — speculative rollback must not free
+    /// the padded baseline's prefill blocks)
+    pub min_blocks: usize,
 }
 
 impl SwappedSeq {
@@ -185,6 +189,7 @@ mod tests {
             ],
             len: 11,
             shared_prefix_blocks: 1,
+            min_blocks: 0,
         };
         assert_eq!(s.host_blocks(), 2);
     }

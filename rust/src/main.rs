@@ -8,7 +8,7 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
-use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig, SwapPolicy};
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig, SpecPolicy, SwapPolicy};
 use llm_coopt::coordinator::{Engine, GenRequest};
 use llm_coopt::eval;
 use llm_coopt::runtime::Runtime;
@@ -51,6 +51,34 @@ fn main() -> Result<()> {
              cost-based (PCIe round trip vs prefill recompute on the Z100 model), \
              always, never",
         )
+        .flag(
+            "prefetch-depth",
+            "1",
+            "two-tier KV: decode batches' worth of swapped sequences the async \
+             prefetch queue may stage ahead of the scheduler (deeper hides more \
+             swap latency, holds more device blocks)",
+        )
+        .flag(
+            "spec-tokens",
+            "0",
+            "speculative decoding: draft length k per decode round (a verify \
+             pass scores k+1 positions and can commit k+1 tokens), 0 = off. \
+             Backends without draft/verify support fall back to one-token decode",
+        )
+        .flag(
+            "spec-policy",
+            "stochastic",
+            "speculative acceptance rule for sampled requests: stochastic = \
+             rejection sampling (distribution-preserving, incl. top-k/top-p; \
+             greedy requests always verify by exact argmax match) or greedy = \
+             deterministic argmax verification even under temperature sampling",
+        )
+        .flag(
+            "spec-shrink",
+            "0.125",
+            "draft model size as a fraction of the target (drives the Z100 \
+             model's draft-weight restream cost)",
+        )
         .flag("set", "easy", "eval: easy | challenge");
     let args = cli.parse_or_exit();
 
@@ -65,6 +93,14 @@ fn main() -> Result<()> {
             cfg = cfg.with_host_pool(host);
         }
         cfg = cfg.with_swap_policy(SwapPolicy::parse(args.get("swap-policy"))?);
+        cfg = cfg.with_prefetch_depth(args.get_usize("prefetch-depth"));
+        let spec = args.get_usize("spec-tokens");
+        if spec > 0 {
+            cfg = cfg.with_speculation(spec);
+        }
+        cfg = cfg
+            .with_spec_policy(SpecPolicy::parse(args.get("spec-policy"))?)
+            .with_spec_shrink(args.get_f64("spec-shrink"));
         Ok(cfg)
     };
 

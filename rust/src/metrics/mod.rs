@@ -44,6 +44,21 @@ pub struct EngineMetrics {
     pub chunk_stall_s: f64,
     pub decode_steps: u64,
     pub preemptions: u64,
+    // --- speculative decoding (draft-and-verify) ---------------------------
+    /// verify passes executed (each scores k+1 positions in one step)
+    pub spec_rounds: u64,
+    /// draft tokens proposed across all verify passes
+    pub spec_drafted: u64,
+    /// draft tokens accepted and committed
+    pub spec_accepted: u64,
+    /// tokens committed by decode + verify rounds (excludes the token
+    /// sampled at the end of prefill) — the numerator of tokens/step
+    pub decode_tokens_committed: u64,
+    /// active lanes summed over decode + verify rounds (occupancy
+    /// numerator)
+    pub decode_lanes_sum: u64,
+    /// batch slots offered over those rounds (occupancy denominator)
+    pub decode_batch_slots: u64,
     // --- Opt-KV tier manager (two-tier KV hierarchy) -----------------------
     /// preemptions that swapped the victim to the host tier
     pub swap_outs: u64,
@@ -143,6 +158,38 @@ impl EngineMetrics {
         }
     }
 
+    /// Draft-token acceptance rate of the speculative verify passes
+    /// (0.0 when speculation never ran).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_drafted > 0 {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Tokens committed per decode/verify round — 1.0 on the one-token
+    /// decode path, up to k+1 under speculation.  The first metric that
+    /// can exceed one token per step.
+    pub fn tokens_per_step(&self) -> f64 {
+        let rounds = self.decode_steps + self.spec_rounds;
+        if rounds > 0 {
+            self.decode_tokens_committed as f64 / rounds as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean fraction of the decode batch actually occupied by running
+    /// lanes (batch efficiency, visible from `GET /metrics`).
+    pub fn decode_batch_occupancy(&self) -> f64 {
+        if self.decode_batch_slots > 0 {
+            self.decode_lanes_sum as f64 / self.decode_batch_slots as f64
+        } else {
+            0.0
+        }
+    }
+
     /// Fraction of host-tier resumes the prefetch queue staged ahead of
     /// the scheduler (1.0 = swap latency fully hidden).
     pub fn prefetch_hit_rate(&self) -> f64 {
@@ -173,6 +220,12 @@ impl EngineMetrics {
         o.insert("chunk_stall_sim_s", self.chunk_stall_s);
         o.insert("decode_steps", self.decode_steps as usize);
         o.insert("preemptions", self.preemptions as usize);
+        o.insert("spec_rounds", self.spec_rounds as usize);
+        o.insert("spec_drafted", self.spec_drafted as usize);
+        o.insert("spec_accepted", self.spec_accepted as usize);
+        o.insert("acceptance_rate", self.acceptance_rate());
+        o.insert("tokens_per_step", self.tokens_per_step());
+        o.insert("decode_batch_occupancy", self.decode_batch_occupancy());
         o.insert("swap_outs", self.swap_outs as usize);
         o.insert("swap_ins", self.swap_ins as usize);
         o.insert("blocks_swapped_out", self.blocks_swapped_out as usize);
@@ -263,6 +316,32 @@ mod tests {
         assert!((j.req_f64("prefetch_hit_rate").unwrap() - 2.0 / 3.0).abs() < 1e-12);
         // blocked swap time counts against Eq. 12; overlapped time doesn't
         assert!((m.throughput_sim() - 10.0 / 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spec_metrics_serialize_and_derive() {
+        let mut m = EngineMetrics::new();
+        assert_eq!(m.acceptance_rate(), 0.0);
+        assert_eq!(m.tokens_per_step(), 0.0);
+        assert_eq!(m.decode_batch_occupancy(), 0.0);
+        // 5 plain decode rounds (1 token each) + 5 verify rounds that
+        // committed 17 of 20 drafts plus their 5 correction tokens
+        m.decode_steps = 5;
+        m.spec_rounds = 5;
+        m.spec_drafted = 20;
+        m.spec_accepted = 17;
+        m.decode_tokens_committed = 5 + 17 + 5;
+        m.decode_lanes_sum = 30;
+        m.decode_batch_slots = 40;
+        assert!((m.acceptance_rate() - 0.85).abs() < 1e-12);
+        assert!((m.tokens_per_step() - 2.7).abs() < 1e-12);
+        assert!((m.decode_batch_occupancy() - 0.75).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.req_usize("spec_rounds").unwrap(), 5);
+        assert_eq!(j.req_usize("spec_accepted").unwrap(), 17);
+        assert!((j.req_f64("tokens_per_step").unwrap() - 2.7).abs() < 1e-12);
+        assert!((j.req_f64("decode_batch_occupancy").unwrap() - 0.75).abs() < 1e-12);
+        assert!((j.req_f64("acceptance_rate").unwrap() - 0.85).abs() < 1e-12);
     }
 
     #[test]

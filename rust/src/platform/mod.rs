@@ -246,26 +246,58 @@ impl CostModel {
         new_blocks: usize,
         tokens_written: usize,
     ) -> StepCost {
+        self.attention_step(seqs, opt, new_blocks, tokens_written, 1)
+    }
+
+    /// Speculative decoding: cost of one verify pass scoring `k + 1`
+    /// positions per lane in a single kernel invocation.  This is the
+    /// amortization speculation buys — the weights stream once and the KV
+    /// cache is read once for up to k+1 token commits (instead of once
+    /// per token on the sequential path); only the GEMM compute and the
+    /// KV writes scale with k+1.
+    pub fn verify_batch(
+        &self,
+        seqs: &[SeqCostInput],
+        opt: &OptConfig,
+        k: usize,
+        new_blocks: usize,
+        tokens_written: usize,
+    ) -> StepCost {
+        self.attention_step(seqs, opt, new_blocks, tokens_written, k + 1)
+    }
+
+    /// One attention-phase step with `q_tokens` query positions per lane
+    /// (1 = plain decode, k+1 = a speculative verify pass).
+    fn attention_step(
+        &self,
+        seqs: &[SeqCostInput],
+        opt: &OptConfig,
+        new_blocks: usize,
+        tokens_written: usize,
+        q_tokens: usize,
+    ) -> StepCost {
         let s = &self.spec;
         let g = &self.geom;
         let b = seqs.len() as f64;
+        let q = q_tokens as f64;
         if seqs.is_empty() {
             return StepCost::default();
         }
 
-        // 1. weights stream once per step (GPTQ 4-bit), GEMM compute per lane
+        // 1. weights stream once per step (GPTQ 4-bit), GEMM compute per
+        // lane and query token
         let weight_bytes = g.param_count() * g.weight_bits / 8.0;
         let weights_mem_s = weight_bytes / s.bandwidth_bytes_per_s;
-        let gemm_flops = 2.0 * g.param_count() * b;
+        let gemm_flops = 2.0 * g.param_count() * b * q;
         let gemm_s = gemm_flops / (s.fp16_flops * s.gemm_eff);
 
         // 2. attention KV traffic (Eq. 2/4): blocks touched per sequence
         let kv_tok_bytes = g.kv_bytes_per_token_layer(opt) * g.layers as f64;
         let mut kv_bytes = 0.0;
         let mut blocks_touched = 0usize;
-        for q in seqs {
-            let ctx = (q.ctx_len as f64 * self.ctx_scale).round() as usize;
-            let alloc = (q.allocated_blocks as f64 * self.ctx_scale).round() as usize;
+        for sq in seqs {
+            let ctx = (sq.ctx_len as f64 * self.ctx_scale).round() as usize;
+            let alloc = (sq.allocated_blocks as f64 * self.ctx_scale).round() as usize;
             let touched = if opt.valid_only {
                 ctx.div_ceil(self.block_size)
             } else {
@@ -278,13 +310,15 @@ impl CostModel {
         let kv_mem_s = kv_bytes / self.effective_kv_bandwidth(kv_bytes);
 
         // attention compute: q.K^T + p.V over every touched token, per
-        // layer (4*Hq*D flops per key token per layer); FP8 dequant runs
-        // at full SIMD INT8 rate
+        // layer and per query position (4*Hq*D flops per key token per
+        // layer); FP8 dequant runs at full SIMD INT8 rate and is paid
+        // once on the single KV read regardless of q
         let attn_flops = 4.0
             * g.n_heads as f64
             * g.head_dim as f64
             * g.layers as f64
-            * self.used_cache_tokens(blocks_touched) as f64;
+            * self.used_cache_tokens(blocks_touched) as f64
+            * q;
         let dequant_flops = if opt.fp8_kv {
             kv_bytes * s.fp8_dequant_flops_per_byte
         } else {
@@ -292,7 +326,6 @@ impl CostModel {
         };
         let attn_s = attn_flops / (s.fp16_flops * s.attn_compute_eff)
             + dequant_flops / s.fp16_flops;
-        let _ = b;
 
         // 3. overheads: softmax reductions per (seq x kv-head x block),
         //    allocator penalty on fresh blocks, per-write fixed cost
@@ -325,6 +358,96 @@ impl CostModel {
             bytes_moved: weight_bytes + kv_bytes + write_bytes,
             flops: gemm_flops + attn_flops + dequant_flops,
         }
+    }
+
+    /// Speculative decoding: cost of drafting `k` tokens per lane with a
+    /// draft model shrunk to `shrink` of the target's parameters.  The
+    /// draft chain is sequential — each of the k micro-steps restreams
+    /// the (shrunk) draft weights and re-reads the draft's equally shrunk
+    /// KV — which is exactly the overhead the verify pass's k-fold
+    /// KV-read amortization has to beat.
+    pub fn draft_step(
+        &self,
+        seqs: &[SeqCostInput],
+        opt: &OptConfig,
+        k: usize,
+        shrink: f64,
+    ) -> StepCost {
+        let s = &self.spec;
+        let g = &self.geom;
+        if seqs.is_empty() || k == 0 {
+            return StepCost::default();
+        }
+        let b = seqs.len() as f64;
+        let shrink = shrink.clamp(0.01, 1.0);
+        let kf = k as f64;
+
+        let weight_bytes = g.param_count() * g.weight_bits / 8.0 * shrink;
+        let weights_mem_s = kf * weight_bytes / s.bandwidth_bytes_per_s;
+        let gemm_flops = 2.0 * g.param_count() * shrink * b * kf;
+        let gemm_s = gemm_flops / (s.fp16_flops * s.gemm_eff);
+
+        // draft KV stream: each micro-step re-reads the draft's context
+        let kv_tok_bytes = g.kv_bytes_per_token_layer(opt) * g.layers as f64 * shrink;
+        let mut kv_bytes = 0.0;
+        for q in seqs {
+            let ctx = (q.ctx_len as f64 * self.ctx_scale).round();
+            kv_bytes += ctx * kv_tok_bytes * kf;
+        }
+        let kv_mem_s = kv_bytes / self.effective_kv_bandwidth(kv_bytes / kf);
+
+        // k sequential kernel launches (the micro-steps cannot batch)
+        let overhead_s = kf * s.pass_launch_s;
+        let total_s = (weights_mem_s + kv_mem_s).max(gemm_s) + overhead_s;
+        StepCost {
+            weights_mem_s,
+            kv_mem_s,
+            compute_s: gemm_s,
+            overhead_s,
+            total_s,
+            bytes_moved: kf * weight_bytes + kv_bytes,
+            flops: gemm_flops,
+        }
+    }
+
+    /// Acceptance rate at which speculative decoding breaks even with
+    /// one-token decode on Eq. 12 throughput for this batch shape:
+    /// solves `E[committed](α) = (t_draft + t_verify) / t_decode` with
+    /// `E[committed](α) = Σ_{i=0..k} α^i` (the accepted geometric prefix
+    /// plus the corrected/bonus token).  Returns `None` when even perfect
+    /// acceptance (k+1 commits per round) cannot break even.
+    pub fn spec_crossover_acceptance(
+        &self,
+        seqs: &[SeqCostInput],
+        opt: &OptConfig,
+        k: usize,
+        shrink: f64,
+    ) -> Option<f64> {
+        if seqs.is_empty() || k == 0 {
+            return None;
+        }
+        let t1 = self.decode_step(seqs, opt, 0, seqs.len()).total_s;
+        if t1 <= 0.0 {
+            return None;
+        }
+        let spec_s = self.draft_step(seqs, opt, k, shrink).total_s
+            + self.verify_batch(seqs, opt, k, 0, seqs.len() * (k + 1)).total_s;
+        let need = spec_s / t1; // tokens a round must commit to break even
+        let committed = |a: f64| -> f64 { (0..=k).map(|i| a.powi(i as i32)).sum() };
+        if committed(1.0) < need {
+            return None;
+        }
+        // E[committed] is monotone in α: bisect
+        let (mut lo, mut hi) = (0.0f64, 1.0f64);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if committed(mid) < need {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(0.5 * (lo + hi))
     }
 
     /// KV pool capacity in *blocks* once the GPTQ weights are resident
@@ -631,6 +754,77 @@ mod tests {
     fn empty_batch_is_free() {
         let m = model();
         assert_eq!(m.decode_step(&[], &ORIGINAL, 0, 0).total_s, 0.0);
+    }
+
+    #[test]
+    fn verify_amortizes_the_kv_read_over_k_tokens() {
+        let m = model();
+        // small batch: the memory-bound regime where speculation matters
+        let seqs = batch(512, 2, 32);
+        let k = 4;
+        let one = m.decode_step(&seqs, &COOPT, 0, 2);
+        let verify = m.verify_batch(&seqs, &COOPT, k, 0, 2 * (k + 1));
+        // the KV stream is read once either way...
+        assert!((verify.kv_mem_s - one.kv_mem_s).abs() < 1e-12);
+        // ...so a verify pass costs far less than k+1 sequential steps
+        assert!(verify.total_s > one.total_s);
+        assert!(
+            verify.total_s < (k + 1) as f64 * one.total_s * 0.7,
+            "verify {} vs {}x decode {}",
+            verify.total_s,
+            k + 1,
+            one.total_s
+        );
+        // compute does scale with the extra query tokens
+        assert!(verify.compute_s > one.compute_s * 2.0);
+    }
+
+    #[test]
+    fn draft_cost_scales_with_k_and_shrink() {
+        let m = model();
+        let seqs = batch(256, 4, 16);
+        let d2 = m.draft_step(&seqs, &COOPT, 2, 0.125);
+        let d4 = m.draft_step(&seqs, &COOPT, 4, 0.125);
+        assert!(d4.total_s > d2.total_s, "more drafts cost more");
+        let big = m.draft_step(&seqs, &COOPT, 4, 0.5);
+        assert!(big.total_s > d4.total_s, "a bigger draft model costs more");
+        // a shrunk draft chain is cheaper than running the target k times
+        let target_k = 4.0 * m.decode_step(&seqs, &COOPT, 0, 4).total_s;
+        assert!(d4.total_s < target_k, "{} vs {}", d4.total_s, target_k);
+        assert_eq!(m.draft_step(&[], &COOPT, 4, 0.125).total_s, 0.0);
+        assert_eq!(m.draft_step(&seqs, &COOPT, 0, 0.125).total_s, 0.0);
+    }
+
+    #[test]
+    fn spec_crossover_exists_and_speculation_wins_above_it() {
+        let m = model().with_ctx_scale(8.0);
+        // decode at small batch is weight-stream-bound on the Z100: the
+        // regime where a verify pass amortizes the restream over k+1
+        // commits (at large batch decode turns GEMM-bound and the
+        // crossover rightly disappears)
+        let seqs = batch(24, 2, 2);
+        for k in [2usize, 4] {
+            let a = m
+                .spec_crossover_acceptance(&seqs, &COOPT, k, 0.125)
+                .expect("a small draft model must be able to break even");
+            assert!((0.0..1.0).contains(&a), "crossover {a} out of range");
+            // throughput above the crossover beats one-token decode;
+            // below it, loses
+            let t1 = m.decode_step(&seqs, &COOPT, 0, 2).total_s;
+            let spec = m.draft_step(&seqs, &COOPT, k, 0.125).total_s
+                + m.verify_batch(&seqs, &COOPT, k, 0, 2 * (k + 1)).total_s;
+            let committed = |alpha: f64| (0..=k).map(|i| alpha.powi(i as i32)).sum::<f64>();
+            let hi = (a + 0.1).min(1.0);
+            assert!(committed(hi) / spec >= 1.0 / t1 * 0.999);
+            if a > 0.1 {
+                assert!(committed(a - 0.1) / spec < 1.0 / t1);
+            }
+        }
+        // an oversized draft model can make speculation unwinnable
+        let heavy = m.spec_crossover_acceptance(&seqs, &COOPT, 1, 1.0);
+        if let Some(a) = heavy {
+            assert!(a > 0.5, "a full-size draft should need near-perfect acceptance");
+        }
     }
 
     #[test]

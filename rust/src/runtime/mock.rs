@@ -16,7 +16,7 @@
 //! out (and never swapped back) fails loudly instead of silently reading
 //! stale KV — the exact bug class a tiered engine can introduce.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -46,6 +46,14 @@ pub struct MockBackend {
     host_payload: HashMap<u64, u64>,
     /// record of every swap as ('O'|'I', device block, host slot)
     pub swap_trace: Vec<(char, u32, u64)>,
+    /// speculative decoding: every verify pass as (active lanes, k)
+    pub spec_trace: Vec<(usize, usize)>,
+    pub draft_calls: usize,
+    pub verify_calls: usize,
+    /// the draft chain disagrees with the target whenever
+    /// `(seed + last) % draft_divergence == 0` (0 = a perfect draft),
+    /// so rejection sampling and KV rollback are actually exercised
+    pub draft_divergence: u64,
     stamp: u64,
 }
 
@@ -69,6 +77,10 @@ impl MockBackend {
             device_payload: HashMap::new(),
             host_payload: HashMap::new(),
             swap_trace: Vec::new(),
+            spec_trace: Vec::new(),
+            draft_calls: 0,
+            verify_calls: 0,
+            draft_divergence: 5,
             stamp: 0,
         }
     }
@@ -100,6 +112,27 @@ impl MockBackend {
         let mut row = vec![0.0f32; vocab];
         row[(favored as usize) % vocab] = 10.0;
         row
+    }
+
+    /// The decode-path target function: the token the target model favors
+    /// after `last` (shared by `decode` and `verify` so greedy
+    /// speculation is provably output-preserving against sequential
+    /// decode).
+    fn target_favored(&self, last: u32) -> u32 {
+        32 + (self.seed + last + 7) % 200
+    }
+
+    /// The draft model's proposal after `last`: agrees with the target
+    /// except at the configured divergence points.
+    fn draft_favored(&self, last: u32) -> u32 {
+        if self.draft_divergence > 0
+            && (self.seed as u64 + last as u64) % self.draft_divergence == 0
+        {
+            // always differs from target_favored (offset 84 mod 200)
+            32 + (self.seed + last + 91) % 200
+        } else {
+            self.target_favored(last)
+        }
     }
 }
 
@@ -282,7 +315,7 @@ impl Backend for MockBackend {
             if ctx_lens[lane] == 0 {
                 continue;
             }
-            let favored = 32 + (self.seed + token_ids[lane] as u32 + 7) % 200;
+            let favored = self.target_favored(token_ids[lane] as u32);
             let row = self.logits_for(favored, vocab);
             logits[lane * vocab..(lane + 1) * vocab].copy_from_slice(&row);
         }
@@ -290,6 +323,168 @@ impl Backend for MockBackend {
     }
 
     fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn draft(
+        &mut self,
+        token_ids: &[i32],
+        positions: &[i32],
+        ctx_lens: &[i32],
+        k: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let b = self.geometry.max_batch;
+        if token_ids.len() != b || positions.len() != b || ctx_lens.len() != b {
+            bail!("mock: draft inputs not padded to max_batch");
+        }
+        if k == 0 {
+            bail!("mock: draft of zero tokens");
+        }
+        let vocab = self.preset.vocab;
+        let mut toks = vec![-1i32; b * k];
+        let mut logits = vec![0.0f32; b * k * vocab];
+        for lane in 0..b {
+            let ctx = ctx_lens[lane];
+            if ctx == 0 {
+                continue;
+            }
+            if positions[lane] != ctx - 1 {
+                bail!(
+                    "mock: draft lane {lane} position {} != ctx-1 {}",
+                    positions[lane],
+                    ctx - 1
+                );
+            }
+            if token_ids[lane] < 0 {
+                bail!("mock: draft lane {lane} fed a padding token");
+            }
+            // greedy draft chain: each proposal conditions on the previous
+            let mut last = token_ids[lane] as u32;
+            for i in 0..k {
+                let favored = self.draft_favored(last);
+                let row = self.logits_for(favored, vocab);
+                logits[(lane * k + i) * vocab..(lane * k + i + 1) * vocab]
+                    .copy_from_slice(&row);
+                toks[lane * k + i] = favored as i32;
+                last = favored;
+            }
+        }
+        self.draft_calls += 1;
+        self.spin();
+        Ok((toks, logits))
+    }
+
+    fn verify(
+        &mut self,
+        token_ids: &[i32],
+        positions: &[i32],
+        block_tables: &[i32],
+        ctx_lens: &[i32],
+        slot_mapping: &[i32],
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        let b = self.geometry.max_batch;
+        let mb = self.geometry.max_blocks;
+        let bs = self.geometry.block_size;
+        let n = k + 1;
+        if token_ids.len() != b * n
+            || positions.len() != b
+            || ctx_lens.len() != b
+            || slot_mapping.len() != b * n
+            || block_tables.len() != b * mb
+        {
+            bail!("mock: verify inputs not padded to max_batch x (k+1)");
+        }
+        // contract checks the real runtime silently relies on
+        let mut seen_slots: HashSet<i32> = HashSet::new();
+        for lane in 0..b {
+            let ctx = ctx_lens[lane];
+            if ctx == 0 {
+                for i in 0..n {
+                    if slot_mapping[lane * n + i] != -1 {
+                        bail!("mock: inactive verify lane {lane} has a write slot");
+                    }
+                }
+                continue;
+            }
+            if positions[lane] + n as i32 != ctx {
+                bail!(
+                    "mock: verify lane {lane} spans [{}, {}) but ctx is {ctx}",
+                    positions[lane],
+                    positions[lane] + n as i32
+                );
+            }
+            if (ctx as usize).div_ceil(bs) > mb {
+                bail!("mock: verify lane {lane} ctx {ctx} overflows the block table");
+            }
+            for i in 0..n {
+                if token_ids[lane * n + i] < 0 {
+                    bail!("mock: verify lane {lane} fed a padding token at position {i}");
+                }
+                let sl = slot_mapping[lane * n + i];
+                if sl < 0 {
+                    bail!("mock: verify lane {lane} lost its write slot at position {i}");
+                }
+                if !seen_slots.insert(sl) {
+                    bail!("mock: verify slot {sl} written twice in one pass");
+                }
+            }
+        }
+        // this pass's k+1 writes per lane land first, then residency is
+        // enforced over every block the kernel would traverse (a
+        // rolled-back block that was recycled without a rewrite, or a
+        // swapped-out block, fails here)
+        for lane in 0..b {
+            if ctx_lens[lane] == 0 {
+                continue;
+            }
+            for i in 0..n {
+                self.stamp += 1;
+                let blk = (slot_mapping[lane * n + i] as usize / bs) as u32;
+                self.device_payload.insert(blk, self.stamp);
+            }
+        }
+        for lane in 0..b {
+            let ctx = ctx_lens[lane];
+            if ctx == 0 {
+                continue;
+            }
+            let valid = (ctx as usize).div_ceil(bs);
+            for j in 0..valid {
+                let blk = block_tables[lane * mb + j];
+                if blk < 0 || !self.device_payload.contains_key(&(blk as u32)) {
+                    bail!(
+                        "mock: verify lane {lane} reads block {blk} (logical {j}) that is \
+                         not device-resident"
+                    );
+                }
+            }
+        }
+        self.verify_calls += 1;
+        self.spec_trace
+            .push((ctx_lens.iter().filter(|&&c| c > 0).count(), k));
+        self.spin();
+        let vocab = self.preset.vocab;
+        let mut logits = vec![0.0f32; b * n * vocab];
+        for lane in 0..b {
+            if ctx_lens[lane] == 0 {
+                continue;
+            }
+            for i in 0..n {
+                // row i = the target distribution for the token following
+                // fed token i — the same function `decode` applies, so a
+                // verify pass scores exactly what k+1 sequential decode
+                // steps would have
+                let favored = self.target_favored(token_ids[lane * n + i] as u32);
+                let row = self.logits_for(favored, vocab);
+                logits[(lane * n + i) * vocab..(lane * n + i + 1) * vocab]
+                    .copy_from_slice(&row);
+            }
+        }
+        Ok(logits)
+    }
+
+    fn supports_speculation(&self) -> bool {
         true
     }
 
@@ -466,6 +661,118 @@ mod tests {
         assert!(m.decode(&tid, &pos, &bt, &ctx, &sm).is_ok());
         assert_eq!(m.swap_trace, vec![('O', 1, 7), ('I', 1, 7)]);
         assert!(m.supports_kv_swap());
+    }
+
+    #[test]
+    fn draft_chain_is_deterministic_and_sometimes_diverges() {
+        let mut m = MockBackend::new();
+        let g = *m.geometry();
+        let b = g.max_batch;
+        let mut ctx = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        let mut toks = vec![-1i32; b];
+        ctx[0] = 6;
+        pos[0] = 5;
+        toks[0] = 50;
+        let (t1, l1) = m.draft(&toks, &pos, &ctx, 4).unwrap();
+        let (t2, l2) = m.draft(&toks, &pos, &ctx, 4).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(l1, l2);
+        assert_eq!(m.draft_calls, 2);
+        // inactive lanes propose nothing
+        assert!(t1[4..].iter().all(|&t| t == -1));
+        // the proposals are the draft chain over the draft function
+        let mut last = 50u32;
+        for i in 0..4 {
+            let expect = m.draft_favored(last);
+            assert_eq!(t1[i] as u32, expect);
+            assert_eq!(
+                crate::sampling::argmax(&l1[i * m.preset().vocab..(i + 1) * m.preset().vocab]),
+                expect as usize
+            );
+            last = expect;
+        }
+        // over the token range, the draft must both agree and disagree
+        // with the target somewhere (otherwise rejection is never hit)
+        let (mut agree, mut differ) = (false, false);
+        for t in 32..232u32 {
+            if m.draft_favored(t) == m.target_favored(t) {
+                agree = true;
+            } else {
+                differ = true;
+            }
+        }
+        assert!(agree && differ);
+        // contract violations
+        pos[0] = 4;
+        assert!(m.draft(&toks, &pos, &ctx, 4).is_err(), "position/ctx mismatch");
+        pos[0] = 5;
+        assert!(m.draft(&toks, &pos, &ctx, 0).is_err(), "zero draft length");
+    }
+
+    #[test]
+    fn verify_scores_k_plus_one_positions_like_sequential_decode() {
+        let mut m = MockBackend::with_geometry(CacheGeometry {
+            block_size: 4,
+            max_blocks: 4,
+            num_pool_blocks: 8,
+            max_batch: 2,
+            max_seq: 16,
+        });
+        let g = *m.geometry();
+        let (b, mb) = (g.max_batch, g.max_blocks);
+        // prefill 5 tokens into blocks 0..2 so the context is resident
+        let s = g.max_seq;
+        let mut ptoks = vec![0i32; s];
+        let mut pslots = vec![-1i32; s];
+        for i in 0..5 {
+            ptoks[i] = 40 + i as i32;
+            pslots[i] = i as i32;
+        }
+        m.prefill(&ptoks, 5, &pslots).unwrap();
+
+        let k = 2usize;
+        let n = k + 1;
+        // fed tokens [44, 60, 61] at positions 5..8 (ctx 8 after writes)
+        let mut toks = vec![-1i32; b * n];
+        toks[0] = 44;
+        toks[1] = 60;
+        toks[2] = 61;
+        let mut pos = vec![0i32; b];
+        pos[0] = 5;
+        let mut ctx = vec![0i32; b];
+        ctx[0] = 8;
+        let mut slots = vec![-1i32; b * n];
+        slots[0] = 5;
+        slots[1] = 6;
+        slots[2] = 7;
+        let mut bt = vec![0i32; b * mb];
+        bt[0] = 0;
+        bt[1] = 1;
+        let logits = m.verify(&toks, &pos, &bt, &ctx, &slots, k).unwrap();
+        let vocab = m.preset().vocab;
+        // each row equals the decode function of its fed token
+        for (i, &t) in [44u32, 60, 61].iter().enumerate() {
+            assert_eq!(
+                crate::sampling::argmax(&logits[i * vocab..(i + 1) * vocab]),
+                m.target_favored(t) as usize
+            );
+        }
+        assert_eq!(m.spec_trace, vec![(1, 2)]);
+        // contract violations: duplicate slot, lost slot, bad span
+        let mut dup = slots.clone();
+        dup[2] = 6;
+        assert!(m.verify(&toks, &pos, &bt, &ctx, &dup, k).is_err());
+        let mut lost = slots.clone();
+        lost[1] = -1;
+        assert!(m.verify(&toks, &pos, &bt, &ctx, &lost, k).is_err());
+        let mut bad_ctx = ctx.clone();
+        bad_ctx[0] = 9;
+        assert!(m.verify(&toks, &pos, &bt, &bad_ctx, &slots, k).is_err());
+        // a swapped-out block under the context fails residency
+        m.swap_out(0, 7).unwrap();
+        assert!(m.verify(&toks, &pos, &bt, &ctx, &slots, k).is_err());
+        assert!(m.supports_speculation());
     }
 
     #[test]

@@ -108,6 +108,79 @@ pub trait Backend {
     fn supports_kv_swap(&self) -> bool {
         false
     }
+    /// Speculative decoding: propose `k` draft tokens per active lane
+    /// with a shrunk draft model.  Inputs are padded to max_batch as in
+    /// [`Backend::decode`]; `ctx_lens[lane]` counts the fed token and
+    /// `positions[lane] == ctx_lens[lane] - 1`.  Returns `(tokens,
+    /// logits)`: tokens `[max_batch * k]` — the draft chain's proposals
+    /// (-1 on inactive lanes) — and logits `[max_batch * k * vocab]`, the
+    /// draft distribution each proposal was taken from (the `q` of
+    /// standard speculative rejection sampling).
+    ///
+    /// **Contract:** each proposal must actually be distributed according
+    /// to its returned logits row — rejection sampling preserves the
+    /// target distribution only under `d ~ q`.  A *deterministic* draft
+    /// chain therefore must report (near-)one-hot logits for its choice,
+    /// which makes `q` a point mass and the acceptance rule collapse to
+    /// "accept with probability p(d)" — still exactly
+    /// distribution-preserving.  The mock's greedy chain does this (its
+    /// rows put ~all mass on the proposed token); a backend that samples
+    /// its drafts must return the distribution it sampled from.
+    ///
+    /// The default rejects: the AOT graph set has no draft model, so the
+    /// PJRT runtime inherits this and engines degrade to one-token decode
+    /// via [`Backend::supports_speculation`].  The mock implements a
+    /// deterministic draft chain that deliberately disagrees with the
+    /// target now and then, so the rejection/rollback path is exercised.
+    fn draft(
+        &mut self,
+        _token_ids: &[i32],
+        _positions: &[i32],
+        _ctx_lens: &[i32],
+        k: usize,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        bail!(
+            "backend does not support speculative drafting (k={k}); \
+             disable speculation or lower a draft graph"
+        )
+    }
+
+    /// Speculative decoding: score `k + 1` positions per lane in ONE
+    /// target-model pass — the amortization speculation buys: the whole
+    /// KV cache is re-read once for up to k+1 token commits instead of
+    /// once per token.  `token_ids`/`slot_mapping` are
+    /// `[max_batch * (k+1)]`: each lane row holds the last committed
+    /// token followed by its k draft proposals, with the KV write slot of
+    /// each position; `positions[lane]` is the first fed position and
+    /// `ctx_lens[lane]` the context *including* all k+1 writes.  Returns
+    /// logits `[max_batch * (k+1) * vocab]`, where row `(lane, i)` is the
+    /// target distribution for the token following fed token `i`.  The
+    /// engine rolls rejected suffix positions back through
+    /// [`crate::kvcache::CacheManager::truncate_seq`].
+    #[allow(clippy::too_many_arguments)]
+    fn verify(
+        &mut self,
+        _token_ids: &[i32],
+        _positions: &[i32],
+        _block_tables: &[i32],
+        _ctx_lens: &[i32],
+        _slot_mapping: &[i32],
+        k: usize,
+    ) -> Result<Vec<f32>> {
+        bail!(
+            "backend does not support speculative verification (k={k}); \
+             disable speculation or lower a multi-token scoring graph"
+        )
+    }
+
+    /// Whether [`Backend::draft`]/[`Backend::verify`] are implemented.
+    /// The engine consults this at construction and falls back to
+    /// one-token decode when false, so a speculative config can never
+    /// wedge a backend whose graphs score one position per pass.
+    fn supports_speculation(&self) -> bool {
+        false
+    }
+
     /// Batched decode step; all arrays padded to max_batch.  Returns
     /// logits `[max_batch * vocab]`.
     #[allow(clippy::too_many_arguments)]

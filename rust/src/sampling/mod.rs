@@ -2,8 +2,13 @@
 //!
 //! Greedy/temperature/top-k/top-p for generation; `mcq_scores` implements
 //! the ARC single-token scoring protocol (§4.3.2: argmax over the choice
-//! letters' next-token log-probs).
+//! letters' next-token log-probs).  [`verify_token`] is the speculative
+//! draft-and-verify acceptance rule: greedy token match, or standard
+//! rejection sampling over the (target, draft) distribution pair, which
+//! provably preserves the target distribution when drafts are samples of
+//! the draft distribution.
 
+use crate::config::SpecPolicy;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone, Copy)]
@@ -73,6 +78,141 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
         }
     }
     idx[probs.len() - 1] as u32
+}
+
+/// Outcome of verifying one speculative draft token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecDecision {
+    /// the draft token is committed as-is
+    Accept,
+    /// the draft is rejected; the carried token is the correction the
+    /// target model commits instead (speculation stops at this position)
+    Reject(u32),
+}
+
+/// Verify one draft token against the target model's logits at the same
+/// position.
+///
+/// Greedy rule (temperature <= 0, or the [`SpecPolicy::Greedy`]
+/// deterministic-verification override): accept iff the draft equals the
+/// target argmax, otherwise reject to the argmax — the exact token
+/// sequential greedy decode would emit, so greedy speculation is
+/// output-preserving by construction.
+///
+/// Stochastic rule ([`SpecPolicy::Stochastic`], the default, under
+/// temperature sampling): standard speculative rejection sampling over
+/// the *same filtered candidate set [`sample`] uses* (temperature
+/// softmax after top-k, then nucleus truncation) — accept with
+/// probability `min(1, p(d)/q(d))`; on rejection sample from the
+/// residual `max(p - q, 0)` renormalized.  When the draft was sampled
+/// from `q`, the committed token is distributed exactly as `sample`
+/// would have drawn it (see the distribution-preservation tests below).
+pub fn verify_token(
+    draft: u32,
+    target_logits: &[f32],
+    draft_logits: &[f32],
+    params: &SamplingParams,
+    policy: SpecPolicy,
+    rng: &mut Rng,
+) -> SpecDecision {
+    if params.temperature <= 0.0 || policy == SpecPolicy::Greedy {
+        let best = argmax(target_logits) as u32;
+        return if draft == best {
+            SpecDecision::Accept
+        } else {
+            SpecDecision::Reject(best)
+        };
+    }
+    let p = filtered_probs(target_logits, params);
+    let q = filtered_probs(draft_logits, params);
+    let d = draft as usize;
+    // d ~ q in theory; guard the q(d)=0 corner so a token the target's
+    // filtered set excludes can never be committed
+    let accept_p = if q[d] > 0.0 {
+        (p[d] / q[d]).min(1.0)
+    } else if p[d] > 0.0 {
+        1.0
+    } else {
+        0.0
+    };
+    if rng.f64() < accept_p {
+        return SpecDecision::Accept;
+    }
+    // residual distribution: where the target puts mass the draft did not
+    let mut resid: Vec<f64> = p.iter().zip(&q).map(|(&pi, &qi)| (pi - qi).max(0.0)).collect();
+    let z: f64 = resid.iter().sum();
+    if z <= 0.0 {
+        // p == q everywhere; any target sample is a valid correction
+        return SpecDecision::Reject(sample_from_probs(&p, rng));
+    }
+    for r in &mut resid {
+        *r /= z;
+    }
+    SpecDecision::Reject(sample_from_probs(&resid, rng))
+}
+
+/// The probability distribution [`sample`] actually draws from:
+/// temperature softmax over the top-k set, then nucleus (top-p)
+/// truncation, renormalized and scattered back over the full vocabulary
+/// (zero outside the kept set).  Mirrors `sample`'s filtering exactly so
+/// speculative rejection sampling preserves its distribution, top-k and
+/// top-p included.
+fn filtered_probs(logits: &[f32], params: &SamplingParams) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+    if params.top_k > 0 {
+        idx.truncate(params.top_k.max(1));
+    }
+    let inv_t = 1.0 / params.temperature.max(1e-6);
+    let m = logits[idx[0]] as f64;
+    let mut probs: Vec<f64> = idx
+        .iter()
+        .map(|&i| ((logits[i] as f64 - m) * inv_t).exp())
+        .collect();
+    let sum: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    if params.top_p < 1.0 {
+        let mut cum = 0.0;
+        let mut keep = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= params.top_p {
+                keep = i + 1;
+                break;
+            }
+        }
+        probs.truncate(keep);
+        idx.truncate(keep);
+        let s: f64 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= s;
+        }
+    }
+    let mut full = vec![0.0f64; logits.len()];
+    for (j, &i) in idx.iter().enumerate() {
+        full[i] = probs[j];
+    }
+    full
+}
+
+fn sample_from_probs(probs: &[f64], rng: &mut Rng) -> u32 {
+    let mut target = rng.f64();
+    let mut last_nonzero = 0usize;
+    for (i, &p) in probs.iter().enumerate() {
+        if p > 0.0 {
+            last_nonzero = i;
+            target -= p;
+            if target <= 0.0 {
+                return i as u32;
+            }
+        }
+    }
+    // float-accumulation fallback: these arrays span the full vocabulary
+    // with zeros outside the kept candidate set, so the fallback must be
+    // a kept token, never a raw trailing index
+    last_nonzero as u32
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -164,6 +304,116 @@ mod tests {
         let logits = vec![1.0f32, 2.0, 3.0];
         let total: f64 = (0..3).map(|i| log_prob(&logits, i).exp()).sum();
         assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_verify_matches_sequential_greedy() {
+        let mut rng = Rng::new(0);
+        let mut target = vec![0.0f32; 8];
+        target[3] = 5.0;
+        let draft = vec![0.0f32; 8];
+        let p = SamplingParams::default();
+        assert_eq!(
+            verify_token(3, &target, &draft, &p, SpecPolicy::Greedy, &mut rng),
+            SpecDecision::Accept
+        );
+        assert_eq!(
+            verify_token(5, &target, &draft, &p, SpecPolicy::Greedy, &mut rng),
+            SpecDecision::Reject(3)
+        );
+        // temperature 0 forces the greedy rule even for Stochastic policy
+        assert_eq!(
+            verify_token(5, &target, &draft, &p, SpecPolicy::Stochastic, &mut rng),
+            SpecDecision::Reject(3)
+        );
+    }
+
+    /// The rejection-sampling guarantee: when drafts are drawn from the
+    /// draft distribution q, the committed token (accepted draft or
+    /// residual correction) is distributed exactly as the target p.
+    #[test]
+    fn stochastic_verify_preserves_target_distribution() {
+        let target = vec![1.0f32, 0.0, 2.0, -1.0];
+        let draft = vec![0.0f32, 1.5, 0.5, 0.0];
+        let params = SamplingParams {
+            temperature: 1.0,
+            ..Default::default()
+        };
+        let p = filtered_probs(&target, &params);
+        let q = filtered_probs(&draft, &params);
+        let mut rng = Rng::new(42);
+        let n = 100_000usize;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let d = sample_from_probs(&q, &mut rng);
+            let committed = match verify_token(
+                d,
+                &target,
+                &draft,
+                &params,
+                SpecPolicy::Stochastic,
+                &mut rng,
+            ) {
+                SpecDecision::Accept => d,
+                SpecDecision::Reject(c) => c,
+            };
+            counts[committed as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let freq = c as f64 / n as f64;
+            assert!(
+                (freq - p[i]).abs() < 0.01,
+                "token {i}: observed {freq:.4} vs target {:.4}",
+                p[i]
+            );
+        }
+    }
+
+    /// Same guarantee with top-k/top-p active: the filtered candidate
+    /// set matches `sample`'s, so verification can never commit a token
+    /// sequential sampling could not emit.
+    #[test]
+    fn stochastic_verify_respects_top_k_and_top_p() {
+        let target = vec![3.0f32, 2.5, 2.0, -1.0, -2.0];
+        let draft = vec![2.0f32, 3.0, 1.0, 4.0, -2.0];
+        let params = SamplingParams {
+            temperature: 1.0,
+            top_k: 3,
+            top_p: 0.95,
+        };
+        let p = filtered_probs(&target, &params);
+        // the target's filtered set excludes tokens 3 and 4
+        assert_eq!(p[3], 0.0);
+        assert_eq!(p[4], 0.0);
+        let q = filtered_probs(&draft, &params);
+        let mut rng = Rng::new(7);
+        let n = 50_000usize;
+        let mut counts = [0usize; 5];
+        for _ in 0..n {
+            let d = sample_from_probs(&q, &mut rng);
+            let committed = match verify_token(
+                d,
+                &target,
+                &draft,
+                &params,
+                SpecPolicy::Stochastic,
+                &mut rng,
+            ) {
+                SpecDecision::Accept => d,
+                SpecDecision::Reject(c) => c,
+            };
+            counts[committed as usize] += 1;
+        }
+        assert_eq!(counts[3], 0, "token outside the target's top-k never commits");
+        assert_eq!(counts[4], 0);
+        for (i, &c) in counts.iter().enumerate().take(3) {
+            let freq = c as f64 / n as f64;
+            assert!(
+                (freq - p[i]).abs() < 0.015,
+                "token {i}: observed {freq:.4} vs target {:.4}",
+                p[i]
+            );
+        }
     }
 
     #[test]

@@ -97,6 +97,10 @@ pub struct Scheduler {
     max_batch: usize,
     /// shared per-step token budget (decode slots + prefill tokens)
     step_token_budget: usize,
+    /// budget tokens one decode lane may commit per round: 1, or
+    /// 1 + draft length under speculative decoding (each verify pass can
+    /// commit the accepted prefix plus one corrected token)
+    decode_tokens_per_seq: usize,
     /// chunked prefill on/off + per-chunk cap
     chunked: bool,
     chunk_tokens: usize,
@@ -117,6 +121,7 @@ impl Scheduler {
             swapped: Vec::new(),
             max_batch,
             step_token_budget: usize::MAX,
+            decode_tokens_per_seq: 1,
             chunked: false,
             chunk_tokens: 32,
             stamp: 0,
@@ -137,6 +142,15 @@ impl Scheduler {
     pub fn with_chunked_prefill(mut self, chunk_tokens: usize) -> Self {
         self.chunked = true;
         self.chunk_tokens = chunk_tokens.max(1);
+        self
+    }
+
+    /// Speculative decoding: each decode lane may commit up to
+    /// `1 + draft_tokens` tokens per round, and is charged that many
+    /// tokens of the shared step budget up front, so prefill windows
+    /// shrink accordingly and the shared bound keeps holding.
+    pub fn with_speculation(mut self, draft_tokens: usize) -> Self {
+        self.decode_tokens_per_seq = 1 + draft_tokens;
         self
     }
 
@@ -262,13 +276,16 @@ impl Scheduler {
             .take(self.max_batch)
             .collect();
 
-        // 2. shared budget: decode slots are reserved first, so decodes
-        // are never starved by prefill work.  If the decode batch alone
-        // meets the budget, one token is still granted so prefill can
-        // never be starved either (the engine sizes the budget above
-        // max_batch, making the shared bound strict in practice).
+        // 2. shared budget: decode slots are reserved first — charged at
+        // the full speculative commit width, so a verify pass never
+        // overdraws the budget — and decodes are never starved by prefill
+        // work.  If the decode batch alone meets the budget, one token is
+        // still granted so prefill can never be starved either (the
+        // engine sizes the budget above the decode reserve, making the
+        // shared bound strict in practice).
         let budget = self.step_token_budget.max(1);
-        let mut remaining = budget.saturating_sub(d.decodes.len());
+        let mut remaining =
+            budget.saturating_sub(d.decodes.len() * self.decode_tokens_per_seq);
         if remaining == 0
             && (!self.waiting.is_empty()
                 || self.running.iter().any(|e| e.prefill_done < e.prefix_len))
@@ -684,6 +701,43 @@ mod tests {
             apply(&mut s, &c);
         }
         assert_eq!(s.prefill_progress(9), Some(8));
+    }
+
+    #[test]
+    fn speculative_tokens_charge_the_shared_budget() {
+        // 3 decoding lanes at draft length 3 reserve 3 * (1+3) = 12 of a
+        // 16-token budget; prefill windows get what is left
+        let mut s = Scheduler::new(4)
+            .with_step_budget(16)
+            .with_chunked_prefill(8)
+            .with_speculation(3);
+        let c = roomy_cache();
+        for id in 1..=3u64 {
+            s.submit(id, 2);
+        }
+        for _ in 0..4 {
+            apply(&mut s, &c); // short prompts complete their prefill
+        }
+        s.submit(9, 20);
+        let d = apply(&mut s, &c);
+        assert_eq!(d.decodes.len(), 3);
+        assert!(
+            d.prefill_tokens() <= 16 - 3 * 4,
+            "prefill {} must fit the budget after the speculative reserve",
+            d.prefill_tokens()
+        );
+        assert!(d.prefill_tokens() > 0, "and prefill still progresses");
+        // without speculation the same round grants more prefill
+        let mut s1 = Scheduler::new(4).with_step_budget(16).with_chunked_prefill(8);
+        for id in 1..=3u64 {
+            s1.submit(id, 2);
+        }
+        for _ in 0..4 {
+            apply(&mut s1, &c);
+        }
+        s1.submit(9, 20);
+        let d1 = apply(&mut s1, &c);
+        assert!(d1.prefill_tokens() > d.prefill_tokens());
     }
 
     #[test]

@@ -413,6 +413,13 @@ mod tests {
         assert_eq!(m.req_usize("swap_outs").unwrap(), 0);
         assert_eq!(m.req_usize("host_pool_blocks").unwrap(), 0);
         assert!(m.req_usize("cache_blocks_total").unwrap() > 0);
+        // batch-efficiency gauges ride along: tokens committed per decode
+        // round and decode-batch occupancy (1 token/step, one lane of 8,
+        // on this single-request one-token engine)
+        assert!((m.req_f64("tokens_per_step").unwrap() - 1.0).abs() < 1e-9);
+        let occ = m.req_f64("decode_batch_occupancy").unwrap();
+        assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
+        assert_eq!(m.req_usize("spec_rounds").unwrap(), 0);
 
         let (code, _e) = client.get("/nope").unwrap();
         assert_eq!(code, 404);
