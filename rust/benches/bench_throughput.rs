@@ -20,8 +20,8 @@ use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
 use llm_coopt::workload::harness::{
-    gain_pct, run_chunk_compare, run_spec_compare, run_swap_compare, run_trace,
-    write_bench_serve,
+    gain_pct, run_adaptive_spec_compare, run_chunk_compare, run_spec_compare,
+    run_swap_compare, run_trace, write_bench_serve, AdaptiveSpecPoint,
 };
 use llm_coopt::workload::TraceSpec;
 
@@ -124,6 +124,53 @@ fn main() -> anyhow::Result<()> {
         "speculative_decode",
         &spec_report,
         &format!("requests={spec_requests},max_new={spec_max_new},ks={spec_ks:?}"),
+    )?;
+
+    // --- adaptive speculation: fixed-k sweep vs the online controller
+    // over (divergence, batch) points where no single fixed k wins
+    // everywhere (outputs token-identical by construction)
+    println!("adaptive speculation — fixed-k sweep vs online controller");
+    println!(
+        "{:<12} {:>4} {:>6} {:>14} {:>9} {:>8} {:>7} {:>7}",
+        "mode", "div", "batch", "sim tok/s", "tok/step", "accept", "rounds", "k_last"
+    );
+    let ad_points = [
+        // weight-stream-bound lone stream, strong draft: long k wins
+        AdaptiveSpecPoint { divergence: 10, batch: 1 },
+        // same batch, weak draft (~50% divergence): short k wins
+        AdaptiveSpecPoint { divergence: 2, batch: 1 },
+        // GEMM-bound batch: only k = 0 wins, whatever the draft
+        AdaptiveSpecPoint { divergence: 10, batch: 6 },
+    ];
+    let (ad_max_new, ad_fixed_ks, ad_k_max) = (if quick { 32 } else { 48 }, [1usize, 2, 4], 4);
+    let ad_rows = run_adaptive_spec_compare(&ad_points, ad_max_new, &ad_fixed_ks, ad_k_max)?;
+    for r in &ad_rows {
+        println!(
+            "{:<12} {:>4} {:>6} {:>12.1}/s {:>9.2} {:>7.1}% {:>7} {:>7}",
+            r.req_str("mode").unwrap_or("?"),
+            r.req_usize("divergence").unwrap_or(0),
+            r.req_usize("batch").unwrap_or(0),
+            r.req_f64("throughput_sim").unwrap_or(0.0),
+            r.req_f64("tokens_per_step").unwrap_or(0.0),
+            r.req_f64("acceptance_rate").unwrap_or(0.0) * 100.0,
+            r.req_usize("decode_rounds").unwrap_or(0),
+            r.get("k_last")
+                .and_then(|v| v.as_usize())
+                .map(|k| k.to_string())
+                .unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!();
+    write_bench_serve(
+        "adaptive_speculation",
+        &ad_rows,
+        &format!(
+            "points={:?},max_new={ad_max_new},fixed_ks={ad_fixed_ks:?},k_max={ad_k_max}",
+            ad_points
+                .iter()
+                .map(|p| (p.divergence, p.batch))
+                .collect::<Vec<_>>()
+        ),
     )?;
 
     // --- chunked prefill: Eq. 12 throughput, mock + Z100 model

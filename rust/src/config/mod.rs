@@ -271,15 +271,52 @@ impl SpecPolicy {
     }
 }
 
+/// How the draft length k is chosen (speculative decoding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpecMode {
+    /// the PR-3 behaviour: `draft_tokens` is the draft length every
+    /// round (a construction-time constant)
+    #[default]
+    Fixed,
+    /// closed-loop: a per-step controller picks k from the measured
+    /// acceptance rate (EWMA, global + per-sequence) and the cost
+    /// model's regime detector
+    /// ([`crate::platform::CostModel::best_draft_len`]), bounded by
+    /// `k_max`; k = 0 (plain decode) when the batch is GEMM-bound or
+    /// acceptance collapses
+    Adaptive,
+}
+
+impl SpecMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fixed" => Ok(SpecMode::Fixed),
+            "adaptive" => Ok(SpecMode::Adaptive),
+            other => Err(anyhow!(
+                "unknown spec mode '{other}' (expected fixed|adaptive)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecMode::Fixed => "fixed",
+            SpecMode::Adaptive => "adaptive",
+        }
+    }
+}
+
 /// Speculative decoding (draft-and-verify) deployment knobs.  Like
 /// `chunked_prefill` and the host pool, this is orthogonal to the five
-/// named opt configs: `draft_tokens == 0` (the default) keeps the
-/// one-token decode path and the AOT graph set unchanged.
+/// named opt configs: the default (`Fixed` mode, `draft_tokens == 0`)
+/// keeps the one-token decode path and the AOT graph set unchanged.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SpecConfig {
-    /// draft length k: tokens proposed per running sequence per decode
-    /// round; a verify pass scores k+1 positions and commits the accepted
-    /// prefix plus one corrected/bonus token.  0 disables speculation.
+    /// fixed-mode draft length k: tokens proposed per running sequence
+    /// per decode round; a verify pass scores k+1 positions and commits
+    /// the accepted prefix plus one corrected/bonus token.  0 disables
+    /// speculation in `Fixed` mode (adaptive mode ignores this and
+    /// searches `0..=k_max` online).
     pub draft_tokens: usize,
     /// draft model size as a fraction of the target (the platform model
     /// streams draft weights at this fraction of the target's bytes on
@@ -288,6 +325,17 @@ pub struct SpecConfig {
     /// acceptance rule (greedy token match or stochastic rejection
     /// sampling)
     pub policy: SpecPolicy,
+    /// fixed vs adaptive draft-length selection
+    pub mode: SpecMode,
+    /// adaptive mode: upper bound of the per-round draft-length search
+    /// (0 disables speculation in adaptive mode)
+    pub k_max: usize,
+    /// adaptive mode: EWMA smoothing factor of the acceptance-rate
+    /// estimator (weight of the newest round; clamped to (0, 1])
+    pub ewma_alpha: f64,
+    /// adaptive mode: per-position acceptance below which a lane (or the
+    /// whole controller) is instantly demoted to plain decode
+    pub demote_acceptance: f64,
 }
 
 impl Default for SpecConfig {
@@ -296,7 +344,38 @@ impl Default for SpecConfig {
             draft_tokens: 0,
             shrink: 0.125,
             policy: SpecPolicy::Stochastic,
+            mode: SpecMode::Fixed,
+            k_max: 4,
+            ewma_alpha: 0.25,
+            demote_acceptance: 0.25,
         }
+    }
+}
+
+impl SpecConfig {
+    /// Whether any speculative path is configured (fixed k > 0, or
+    /// adaptive with a non-zero search bound).
+    pub fn enabled(&self) -> bool {
+        match self.mode {
+            SpecMode::Fixed => self.draft_tokens > 0,
+            SpecMode::Adaptive => self.k_max > 0,
+        }
+    }
+
+    /// Largest draft length a round may use (the scheduler's worst-case
+    /// budget charge and the engine's reservation bound).
+    pub fn max_draft(&self) -> usize {
+        match self.mode {
+            SpecMode::Fixed => self.draft_tokens,
+            SpecMode::Adaptive => self.k_max,
+        }
+    }
+
+    /// Disable speculation entirely (the backend-degradation path).
+    pub fn disable(&mut self) {
+        self.draft_tokens = 0;
+        self.k_max = 0;
+        self.mode = SpecMode::Fixed;
     }
 }
 
@@ -405,6 +484,29 @@ impl EngineConfig {
     /// Choose the speculative acceptance rule.
     pub fn with_spec_policy(mut self, policy: SpecPolicy) -> Self {
         self.spec.policy = policy;
+        self
+    }
+
+    /// Enable *adaptive* speculation: a per-step controller picks the
+    /// draft length in `0..=k_max` from the measured acceptance rate and
+    /// the cost model's regime detector (`--spec-mode adaptive`).
+    pub fn with_adaptive_speculation(mut self, k_max: usize) -> Self {
+        self.spec.mode = SpecMode::Adaptive;
+        self.spec.k_max = k_max;
+        self
+    }
+
+    /// Adaptive speculation: EWMA smoothing factor of the acceptance
+    /// estimator (weight of the newest round).
+    pub fn with_spec_ewma_alpha(mut self, alpha: f64) -> Self {
+        self.spec.ewma_alpha = alpha.clamp(0.01, 1.0);
+        self
+    }
+
+    /// Adaptive speculation: acceptance threshold below which a lane (or
+    /// the controller) is instantly demoted to plain decode.
+    pub fn with_spec_demote_acceptance(mut self, a: f64) -> Self {
+        self.spec.demote_acceptance = a.clamp(0.0, 1.0);
         self
     }
 
@@ -716,6 +818,47 @@ mod tests {
             assert_eq!(SpecPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(SpecPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn adaptive_speculation_knobs() {
+        // default: fixed mode, speculation off, adaptive knobs at their
+        // documented defaults
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        assert_eq!(cfg.spec.mode, SpecMode::Fixed);
+        assert!(!cfg.spec.enabled());
+        assert_eq!(cfg.spec.k_max, 4);
+        assert!((cfg.spec.ewma_alpha - 0.25).abs() < 1e-12);
+        assert!((cfg.spec.demote_acceptance - 0.25).abs() < 1e-12);
+        // fixed mode: draft_tokens is the bound
+        let fixed = cfg.clone().with_speculation(3);
+        assert!(fixed.spec.enabled());
+        assert_eq!(fixed.spec.max_draft(), 3);
+        // adaptive mode: k_max is the bound, draft_tokens is ignored
+        let ad = cfg
+            .clone()
+            .with_adaptive_speculation(6)
+            .with_spec_ewma_alpha(0.5)
+            .with_spec_demote_acceptance(0.1);
+        assert_eq!(ad.spec.mode, SpecMode::Adaptive);
+        assert!(ad.spec.enabled());
+        assert_eq!(ad.spec.max_draft(), 6);
+        assert!((ad.spec.ewma_alpha - 0.5).abs() < 1e-12);
+        assert!((ad.spec.demote_acceptance - 0.1).abs() < 1e-12);
+        // adaptive with k_max 0 is off; disable() kills either mode
+        assert!(!cfg.clone().with_adaptive_speculation(0).spec.enabled());
+        let mut s = ad.spec;
+        s.disable();
+        assert!(!s.enabled());
+        assert_eq!(s.max_draft(), 0);
+        // degenerate alpha clamped to something usable
+        let c = EngineConfig::new("llama-7b-sim", COOPT).with_spec_ewma_alpha(0.0);
+        assert!(c.spec.ewma_alpha > 0.0);
+        // parse round-trips
+        for m in [SpecMode::Fixed, SpecMode::Adaptive] {
+            assert_eq!(SpecMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SpecMode::parse("bogus").is_err());
     }
 
     #[test]

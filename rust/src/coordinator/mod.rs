@@ -56,6 +56,26 @@
 //! budget, so chunked prefill and preemption keep composing; backends
 //! without draft/verify degrade to one-token decode at construction.
 //!
+//! **Adaptive speculation (`--spec-mode adaptive`).**  The draft length
+//! need not be a constant: with [`crate::config::SpecMode::Adaptive`]
+//! the engine runs a per-step [`SpecController`] that closes the
+//! feedback loop between the measured acceptance rate (EWMA over
+//! verified positions, global + per-sequence) and the cost model's
+//! regime detector ([`CostModel::best_draft_len`]).  Each round, before
+//! scheduling, the controller picks `k_t` — cold-start jump to the
+//! cost-model optimum, then ±1 bounded steps, instant demotion to plain
+//! decode when the batch turns GEMM-bound or acceptance collapses, and
+//! sparse re-probing so a transient collapse is not permanent — and the
+//! scheduler charges each decode lane exactly `1 + k_lane` of the shared
+//! step budget (`Scheduler::set_spec_round`; acceptance-demoted lanes
+//! ride along at k = 0 in the same round).  Knobs of record:
+//! `--spec-mode fixed|adaptive`, `--spec-k-max` (search bound),
+//! `--spec-ewma-alpha` (estimator smoothing); see
+//! [`crate::coordinator::spec`] for the decision rule.  The controller
+//! changes only *how many* tokens are drafted per round — acceptance
+//! stays [`verify_token`], so greedy adaptive speculation remains
+//! token-for-token identical to one-token decode while k moves.
+//!
 //! The engine is generic over [`Backend`] so the whole L3 logic is unit-
 //! tested against the contract-checking mock without artifacts.
 
@@ -64,7 +84,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::config::{EngineConfig, SwapPolicy};
+use crate::config::{EngineConfig, SpecMode, SwapPolicy};
 use crate::kvcache::{CacheManager, SeqId};
 use crate::metrics::{EngineMetrics, RequestMetrics};
 use crate::platform::{CostModel, SeqCostInput};
@@ -73,6 +93,9 @@ use crate::sampling::{sample, verify_token, SamplingParams, SpecDecision};
 use crate::scheduler::{PrefillWork, Scheduler};
 use crate::tokenizer::{Tokenizer, EOS_ID, PAD_ID};
 use crate::util::rng::Rng;
+
+pub mod spec;
+pub use spec::SpecController;
 
 /// Why a sequence stopped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -165,6 +188,17 @@ pub struct Engine<B: Backend> {
     in_flight_prefetch: Vec<SeqId>,
     /// paper-scale bytes one swapped block moves over PCIe (metrics)
     swap_block_bytes: f64,
+    /// adaptive speculation: the online draft-length controller
+    /// (`None` in fixed mode or with speculation off)
+    spec_ctl: Option<SpecController>,
+    /// this round's draft length, chosen by [`Engine::plan_spec_round`]
+    /// before the scheduler runs (fixed mode: the configured constant)
+    round_spec_k: usize,
+    /// lanes taking the plain one-token path this round (per-lane k = 0:
+    /// controller-demoted or too close to max context)
+    round_plain: Vec<SeqId>,
+    /// cost-model regime of this round's planned decode batch
+    round_memory_bound: Option<bool>,
 }
 
 impl<B: Backend> Engine<B> {
@@ -193,7 +227,7 @@ impl<B: Backend> Engine<B> {
             );
             cfg.host_pool_blocks = 0;
         }
-        if cfg.spec.draft_tokens > 0 && !backend.supports_speculation() {
+        if cfg.spec.enabled() && !backend.supports_speculation() {
             // verify would fail on the first round and wedge the serving
             // loop; degrade to one-token decode instead (mirrors the
             // chunked-prefill and swap fallbacks)
@@ -201,7 +235,7 @@ impl<B: Backend> Engine<B> {
                 "backend lacks draft/verify support; speculative decoding disabled \
                  (one-token decode)"
             );
-            cfg.spec.draft_tokens = 0;
+            cfg.spec.disable();
         }
         // budget at least one above the decode batch, so a full decode
         // round always leaves room for one prefill window (no starvation,
@@ -215,8 +249,10 @@ impl<B: Backend> Engine<B> {
         if cfg.chunked_prefill {
             sched = sched.with_chunked_prefill(cfg.prefill_chunk_tokens);
         }
-        if cfg.spec.draft_tokens > 0 {
-            sched = sched.with_speculation(cfg.spec.draft_tokens);
+        if cfg.spec.enabled() {
+            // worst-case charge until the first plan_spec_round; adaptive
+            // mode re-sets the per-lane charge every round
+            sched = sched.with_speculation(cfg.spec.max_draft());
         }
         let mut cache = CacheManager::new(geometry);
         if cfg.host_pool_blocks > 0 {
@@ -226,6 +262,11 @@ impl<B: Backend> Engine<B> {
             .as_ref()
             .map(|cm| cm.swap_block_bytes(backend.opt()))
             .unwrap_or(0.0);
+        let spec_ctl = if cfg.spec.enabled() && cfg.spec.mode == SpecMode::Adaptive {
+            Some(SpecController::new(&cfg.spec))
+        } else {
+            None
+        };
         Engine {
             cache,
             sched,
@@ -241,7 +282,20 @@ impl<B: Backend> Engine<B> {
             step_prefill_sim_s: 0.0,
             in_flight_prefetch: Vec::new(),
             swap_block_bytes,
+            spec_ctl,
+            round_spec_k: 0,
+            round_plain: Vec::new(),
+            round_memory_bound: None,
         }
+    }
+
+    /// The adaptive controller's chosen-k decision trace (bench
+    /// evidence; empty in fixed mode).
+    pub fn spec_k_trace(&self) -> Vec<u8> {
+        self.spec_ctl
+            .as_ref()
+            .map(|c| c.k_trace().to_vec())
+            .unwrap_or_default()
     }
 
     /// Disable the simulated-platform accounting (micro-benchmarks).
@@ -345,6 +399,11 @@ impl<B: Backend> Engine<B> {
         // swapped sequences rejoin the running set one step ahead of the
         // decode batch that needs them (the copy overlapped that step)
         self.drain_prefetches();
+        // pick this round's draft length (and per-lane k=0 set) *before*
+        // scheduling, so the shared budget charges the k actually in
+        // flight — adaptive k shrinking immediately widens the very next
+        // step's prefill windows
+        self.plan_spec_round();
         let decision = self.sched.schedule(&self.cache, self.backend.opt());
 
         for work in decision.prefills.iter().copied() {
@@ -361,16 +420,18 @@ impl<B: Backend> Engine<B> {
             .filter(|id| self.cache.has_seq(*id))
             .collect();
         if !decodes.is_empty() {
-            let spec_k = self.cfg.spec.draft_tokens;
+            let spec_k = self.round_spec_k;
             let max_ctx = self.backend.geometry().max_context();
             if spec_k > 0 {
                 // draft-and-verify: lanes that can take a full k+1-slot
-                // reservation speculate; lanes too close to max context
-                // finish out on the one-token path
-                let (spec_ids, plain_ids): (Vec<SeqId>, Vec<SeqId>) = decodes
-                    .iter()
-                    .copied()
-                    .partition(|id| self.cache.seq_len(*id) + spec_k + 1 <= max_ctx);
+                // reservation speculate; lanes too close to max context —
+                // or demoted by the controller's per-lane acceptance
+                // estimate — ride along on the one-token path
+                let (spec_ids, plain_ids): (Vec<SeqId>, Vec<SeqId>) =
+                    decodes.iter().copied().partition(|id| {
+                        self.cache.seq_len(*id) + spec_k + 1 <= max_ctx
+                            && !self.round_plain.contains(id)
+                    });
                 if !spec_ids.is_empty() {
                     self.run_spec_decode(&spec_ids, spec_k)?;
                 }
@@ -474,6 +535,84 @@ impl<B: Backend> Engine<B> {
     }
 
     // -----------------------------------------------------------------------
+
+    /// Choose this round's draft length and plain-lane set, and hand the
+    /// scheduler the per-lane budget charges, *before* the round is
+    /// scheduled.  Fixed mode keeps the configured constant k (the PR 3
+    /// behaviour) but still classifies the batch's regime for the
+    /// metrics gauges; adaptive mode runs the [`SpecController`]
+    /// decision rule over the decode-ready batch.
+    fn plan_spec_round(&mut self) {
+        self.round_spec_k = 0;
+        self.round_plain.clear();
+        self.round_memory_bound = None;
+        if !self.cfg.spec.enabled() {
+            return;
+        }
+        let opt = *self.backend.opt();
+        let geometry = *self.backend.geometry();
+        let max_ctx = geometry.max_context();
+        let ids: Vec<SeqId> = self
+            .sched
+            .decode_ready_ids()
+            .into_iter()
+            .filter(|id| self.cache.has_seq(*id))
+            .collect();
+        let inputs: Vec<SeqCostInput> = ids
+            .iter()
+            .map(|&id| {
+                let ctx = self.cache.seq_len(id);
+                let row = self.cache.block_table_row(id);
+                SeqCostInput {
+                    ctx_len: ctx,
+                    allocated_blocks: row_allocated(
+                        &row,
+                        ctx,
+                        geometry.block_size,
+                        &opt,
+                        geometry.max_seq,
+                    ),
+                }
+            })
+            .collect();
+        let (k, mut plain, memory_bound) = match self.spec_ctl.as_mut() {
+            Some(ctl) => {
+                let plan = ctl.decide(self.cost.as_ref(), &inputs, &ids, &opt);
+                (plan.k, plan.plain, plan.memory_bound)
+            }
+            None => {
+                let mb = if inputs.is_empty() {
+                    None
+                } else {
+                    self.cost
+                        .as_ref()
+                        .map(|cm| cm.decode_is_memory_bound(&inputs, &opt))
+                };
+                (self.cfg.spec.draft_tokens, Vec::new(), mb)
+            }
+        };
+        // lanes too close to max context cannot take a k+1 reservation;
+        // charge them as the plain lanes they will decode as
+        if k > 0 {
+            for &id in &ids {
+                if self.cache.seq_len(id) + k + 1 > max_ctx && !plain.contains(&id) {
+                    plain.push(id);
+                }
+            }
+        }
+        self.sched.set_spec_round(k, plain.clone());
+        self.metrics.spec_k_current = k;
+        if let Some(ctl) = &self.spec_ctl {
+            self.metrics.spec_ctrl_transitions = ctl.transitions;
+            self.metrics.spec_acceptance_ewma = ctl.acceptance();
+        }
+        if let Some(mb) = memory_bound {
+            self.metrics.spec_regime = crate::platform::regime_name(mb);
+        }
+        self.round_spec_k = k;
+        self.round_plain = plain;
+        self.round_memory_bound = memory_bound;
+    }
 
     /// Commit one prefill window: cache blocks + slot mapping, the
     /// backend pass over the window, chunk accounting, and — on the final
@@ -725,6 +864,11 @@ impl<B: Backend> Engine<B> {
             }
             self.check_finish(id, tok);
         }
+        if self.cfg.spec.enabled() {
+            // a k=0 round in the histogram + per-regime tokens/step
+            self.metrics
+                .record_spec_round(0, lanes.len() as u64, self.round_memory_bound);
+        }
         Ok(())
     }
 
@@ -892,6 +1036,9 @@ impl<B: Backend> Engine<B> {
         let per_seq_sim = sim_s.map(|s| s / lanes.len() as f64);
         let max_ctx = geometry.max_context();
         let policy = self.cfg.spec.policy;
+        let mut round_committed = 0u64;
+        let mut round_accepted = 0usize;
+        let mut round_examined = 0usize;
         for (lane, l) in lanes.iter().enumerate() {
             let id = l.id;
             let (sampling, ignore_eos, max_new, gen_before, len_before) = {
@@ -958,6 +1105,17 @@ impl<B: Backend> Engine<B> {
             // invariant)
             self.cache.truncate_seq(id, l.base + commit.len())?;
 
+            // feed the controller's acceptance estimator: each examined
+            // position is one Bernoulli trial of the per-position rate
+            // (pre-cutoff counts — draft quality, not finish artifacts)
+            let examined = accepted_drafts + rejected as usize;
+            round_accepted += accepted_drafts;
+            round_examined += examined;
+            if let Some(ctl) = self.spec_ctl.as_mut() {
+                ctl.observe_lane(id, accepted_drafts, examined);
+            }
+            round_committed += commit.len() as u64;
+
             self.metrics.spec_drafted += k as u64;
             self.metrics.spec_accepted += accepted_drafts.min(commit.len()) as u64;
             self.metrics.decode_tokens_committed += commit.len() as u64;
@@ -969,6 +1127,11 @@ impl<B: Backend> Engine<B> {
             }
             let last = *commit.last().unwrap();
             self.check_finish(id, last);
+        }
+        self.metrics
+            .record_spec_round(k, round_committed, self.round_memory_bound);
+        if let Some(ctl) = self.spec_ctl.as_mut() {
+            ctl.observe_round(round_accepted, round_examined);
         }
 
         // lanes whose reservation could not complete take the one-token
@@ -1182,6 +1345,9 @@ impl<B: Backend> Engine<B> {
             }
         }
         self.sched.finish(id);
+        if let Some(ctl) = self.spec_ctl.as_mut() {
+            ctl.forget(id);
+        }
         if let Some(mut seq) = self.seqs.remove(&id) {
             seq.metrics.finished = Some(Instant::now());
             seq.finish = Some(reason);
@@ -1804,6 +1970,96 @@ mod tests {
         assert_eq!(r[0].generated_tokens, 6);
         assert_eq!(e.metrics.spec_rounds, 0);
         assert!((e.metrics.tokens_per_step() - 1.0).abs() < 1e-9);
+        // the adaptive controller degrades identically: no draft graph,
+        // no controller
+        let be = OneTokenOnly(MockBackend::new().with_opt(COOPT));
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_adaptive_speculation(4);
+        let mut e = Engine::new(be, cfg);
+        assert!(!e.cfg.spec.enabled(), "adaptive degraded to one-token decode");
+        let r = e
+            .generate(vec![GenRequest::greedy("adaptive fallback serves", 5)])
+            .unwrap();
+        assert_eq!(r[0].generated_tokens, 5);
+        assert_eq!(e.metrics.spec_rounds, 0);
+        assert!(e.metrics.spec_k_hist.is_empty(), "no speculative accounting");
+    }
+
+    #[test]
+    fn adaptive_speculation_matches_one_token_decode() {
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest::greedy(format!("adaptive prompt {i} {}", "a".repeat(8 + i)), 14))
+            .collect();
+        let mut base = engine(COOPT);
+        let expected = base.generate(reqs.clone()).unwrap();
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_adaptive_speculation(4);
+        let mut e = Engine::new(be, cfg);
+        let got = e.generate(reqs).unwrap();
+        assert_eq!(expected.len(), got.len());
+        for (a, b) in expected.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens, "adaptive speculation must not change outputs");
+            assert_eq!(a.finish, b.finish);
+        }
+        assert!(e.metrics.spec_rounds > 0, "the controller actually drafted");
+        assert!(e.metrics.tokens_per_step() > 1.0);
+        assert!(!e.metrics.spec_k_hist.is_empty());
+        assert!(!e.spec_k_trace().is_empty(), "chosen-k trace recorded");
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn adaptive_controller_goes_plain_on_gemm_bound_batches() {
+        // 8 concurrent lanes on the default geometry: the cost model
+        // classifies decode as GEMM-bound, where speculation cannot win —
+        // the controller must serve plain one-token rounds throughout.
+        // Chunked prefill admits the whole batch in round one, so the
+        // controller never sees a small warm-up batch.
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_chunked_prefill(32)
+            .with_adaptive_speculation(4);
+        let mut e = Engine::new(be, cfg);
+        let reqs: Vec<GenRequest> = (0..8)
+            .map(|i| GenRequest::greedy(format!("batchy prompt number {i}"), 10))
+            .collect();
+        let results = e.generate(reqs).unwrap();
+        assert_eq!(results.len(), 8);
+        assert_eq!(e.metrics.spec_rounds, 0, "GEMM-bound: no verify pass ever pays");
+        assert_eq!(e.metrics.spec_k_current, 0);
+        assert_eq!(e.metrics.spec_regime, "gemm-bound");
+        assert!(e.metrics.rounds_gemm_bound > 0);
+        assert!((e.metrics.tokens_per_step_gemm() - 1.0).abs() < 1e-9);
+        assert!(e.spec_k_trace().iter().all(|&k| k == 0));
+        // the same batch at fixed k=4 wastefully drafts anyway — the
+        // exact foot-gun the controller removes
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_chunked_prefill(32)
+            .with_speculation(4);
+        let mut fixed = Engine::new(be, cfg);
+        let reqs: Vec<GenRequest> = (0..8)
+            .map(|i| GenRequest::greedy(format!("batchy prompt number {i}"), 10))
+            .collect();
+        fixed.generate(reqs).unwrap();
+        assert!(fixed.metrics.spec_rounds > 0);
+        assert_eq!(fixed.metrics.spec_regime, "gemm-bound");
+    }
+
+    #[test]
+    fn adaptive_controller_state_reaches_stats_json() {
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_adaptive_speculation(4);
+        let mut e = Engine::new(be, cfg);
+        e.generate(vec![GenRequest::greedy("controller gauges", 12)])
+            .unwrap();
+        let v = e.stats_json();
+        let hist = v.get("spec_k_hist").expect("k histogram exposed");
+        assert!(hist.req_usize("0").is_ok() || hist.req_usize("4").is_ok());
+        assert!(v.req_f64("spec_acceptance_ewma").unwrap() > 0.0);
+        assert_eq!(v.req_str("spec_regime").unwrap(), "weight-stream-bound");
+        assert!(v.req_usize("rounds_weight_stream_bound").unwrap() > 0);
+        assert!(v.req_f64("tokens_per_step_weight_stream").unwrap() > 1.0);
+        assert!(v.get("spec_k_current").is_some());
     }
 
     #[test]

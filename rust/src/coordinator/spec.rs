@@ -1,0 +1,500 @@
+//! Adaptive speculation: the online draft-length controller.
+//!
+//! PR 3's `--spec-tokens K` is a foot-gun: the right k depends on the
+//! draft's acceptance rate *and* on the batch's compute regime, both of
+//! which move at runtime (`CostModel::spec_crossover_acceptance` proves
+//! speculation is unwinnable in the GEMM-bound large-batch regime and
+//! most profitable when decode is weight-stream-bound).  This module
+//! closes the loop: every scheduling round the [`SpecController`] picks
+//! `k_t` from the measured acceptance and the cost model's regime
+//! detector ([`CostModel::best_draft_len`]).
+//!
+//! **Acceptance estimator.**  Each verified position is a Bernoulli
+//! trial of the per-position acceptance rate α (the geometric model the
+//! cost model prices rounds with): a round that accepts `a` drafts and
+//! rejects at most one examined `a + rejected` positions.  The
+//! controller keeps EWMAs of the *counts* (accepted, examined) and
+//! estimates α as their ratio — unlike an EWMA of per-round ratios this
+//! weights rounds by evidence (a 0-of-1 round barely moves a 4-of-4
+//! history) and is unbiased for the geometric model.  The estimator is
+//! seeded with [`PRIOR_ACCEPTANCE`] at weight [`PRIOR_WEIGHT`], so the
+//! cold start is an optimistic probe that real measurements quickly
+//! overwrite.  A global estimator drives `k_t`; per-sequence estimators
+//! let one hard-to-draft lane be demoted to plain decode (per-lane
+//! k = 0) while easy lanes keep long drafts.
+//!
+//! **Decision rule**, per round with a non-empty decode batch:
+//!
+//! 1. `k* = best_draft_len(batch, ctx_lens, α̂)` — the cost-model search
+//!    over `1..=k_max` against one-token decode (0 when nothing wins);
+//! 2. the first decision jumps straight to `k*` (the cold-start probe);
+//!    afterwards k moves by at most ±1 per round toward `k*` so the
+//!    controller cannot oscillate across the regime boundary;
+//! 3. **instant demotion**: `k* == 0` (GEMM-bound batch) or
+//!    `α̂ < demote_acceptance` (acceptance collapse) drops k to 0 in one
+//!    round — a collapsing draft must not be ridden down one step at a
+//!    time;
+//! 4. **re-probing**: plain decode produces no acceptance measurements,
+//!    so a k = 0 controller would be stuck forever.  When the demotion
+//!    was acceptance-driven (the cost model would still pick k > 0 at
+//!    the optimistic prior), one k = 1 probe round is scheduled every
+//!    [`REPROBE_ROUNDS`] plain rounds; a genuinely bad draft re-demotes
+//!    immediately, a recovered one ramps back up.  Regime-driven
+//!    demotion never probes — no acceptance can rescue a GEMM-bound
+//!    batch, and the regime is re-evaluated from batch shape alone every
+//!    round.
+//!
+//! Without a platform cost model the controller falls back to a pure
+//! acceptance rule: `k_max` while `α̂ ≥ demote_acceptance`, else 0.
+//!
+//! The controller only chooses *how many* tokens to draft; acceptance
+//! itself stays [`crate::sampling::verify_token`] — greedy speculation
+//! remains token-for-token identical to one-token decode at every k
+//! (property-tested in `tests/prop_spec.rs` while k is actively
+//! changing).
+
+use std::collections::HashMap;
+
+use crate::config::{OptConfig, SpecConfig};
+use crate::kvcache::SeqId;
+use crate::platform::{CostModel, SeqCostInput};
+
+/// Optimistic per-position acceptance assumed before any measurement
+/// (the cold-start probe operating point).
+pub const PRIOR_ACCEPTANCE: f64 = 0.9;
+/// Pseudo-observations backing the prior: large enough that one unlucky
+/// first round cannot crater the estimate, small enough that a few real
+/// rounds dominate it.
+pub const PRIOR_WEIGHT: f64 = 2.0;
+/// Plain rounds between probes while demoted for low acceptance.
+pub const REPROBE_ROUNDS: u32 = 6;
+
+/// What the engine does with this round's decode batch.
+#[derive(Debug, Clone, Default)]
+pub struct RoundPlan {
+    /// global draft length for the round (0 = plain one-token decode)
+    pub k: usize,
+    /// lanes taking the plain path even when `k > 0` (per-lane k = 0:
+    /// acceptance-demoted sequences)
+    pub plain: Vec<SeqId>,
+    /// cost-model regime of the planned batch (`None` without a model
+    /// or without decode lanes)
+    pub memory_bound: Option<bool>,
+}
+
+/// EWMA acceptance state of one sequence.
+#[derive(Debug, Clone)]
+struct LaneAcc {
+    accepted: f64,
+    examined: f64,
+    /// consecutive rounds this lane spent demoted (drives its re-probe)
+    plain_rounds: u32,
+}
+
+impl LaneAcc {
+    fn new() -> Self {
+        LaneAcc {
+            accepted: PRIOR_ACCEPTANCE * PRIOR_WEIGHT,
+            examined: PRIOR_WEIGHT,
+            plain_rounds: 0,
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        self.accepted / self.examined
+    }
+}
+
+/// Online draft-length controller (one per engine; adaptive mode only).
+#[derive(Debug)]
+pub struct SpecController {
+    /// current global draft length
+    k: usize,
+    /// false until the first decision over a non-empty batch (the
+    /// cold-start jump to the cost model's k* happens exactly once)
+    started: bool,
+    /// EWMA of accepted draft counts (global)
+    accepted: f64,
+    /// EWMA of examined position counts (global)
+    examined: f64,
+    /// consecutive acceptance-demoted rounds (drives re-probing)
+    plain_rounds: u32,
+    per_seq: HashMap<SeqId, LaneAcc>,
+    k_max: usize,
+    alpha: f64,
+    demote: f64,
+    shrink: f64,
+    /// draft-length changes made so far (mirrored into the metrics)
+    pub transitions: u64,
+    /// chosen k per decision round, capped at [`Self::TRACE_CAP`]
+    /// entries (the bench's chosen-k trace)
+    trace: Vec<u8>,
+}
+
+impl SpecController {
+    const TRACE_CAP: usize = 4096;
+
+    pub fn new(cfg: &SpecConfig) -> Self {
+        SpecController {
+            k: 0,
+            started: false,
+            accepted: PRIOR_ACCEPTANCE * PRIOR_WEIGHT,
+            examined: PRIOR_WEIGHT,
+            plain_rounds: 0,
+            per_seq: HashMap::new(),
+            k_max: cfg.k_max,
+            alpha: cfg.ewma_alpha.clamp(0.01, 1.0),
+            demote: cfg.demote_acceptance,
+            shrink: cfg.shrink,
+            transitions: 0,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Current global draft length.
+    pub fn current_k(&self) -> usize {
+        self.k
+    }
+
+    /// The EWMA per-position acceptance estimate.
+    pub fn acceptance(&self) -> f64 {
+        self.accepted / self.examined
+    }
+
+    /// Chosen-k decision trace (bench evidence), oldest first.
+    pub fn k_trace(&self) -> &[u8] {
+        &self.trace
+    }
+
+    /// Decide this round's draft length and plain-lane set.  `inputs`
+    /// and `ids` describe the decode-ready batch, aligned index-wise.
+    pub fn decide(
+        &mut self,
+        cost: Option<&CostModel>,
+        inputs: &[SeqCostInput],
+        ids: &[SeqId],
+        opt: &OptConfig,
+    ) -> RoundPlan {
+        debug_assert_eq!(inputs.len(), ids.len());
+        if inputs.is_empty() {
+            // nothing will decode: keep all state as-is (prefill-only
+            // rounds must not consume the cold start or the probe clock)
+            return RoundPlan {
+                k: self.k,
+                plain: Vec::new(),
+                memory_bound: None,
+            };
+        }
+        let memory_bound = cost.map(|cm| cm.decode_is_memory_bound(inputs, opt));
+        let a_est = self.acceptance();
+        let k_star = match cost {
+            Some(cm) => cm.best_draft_len(inputs, opt, self.k_max, a_est, self.shrink),
+            // no platform model: pure acceptance rule
+            None => {
+                if a_est >= self.demote {
+                    self.k_max
+                } else {
+                    0
+                }
+            }
+        };
+        let mut next = if !self.started {
+            self.started = true;
+            k_star
+        } else if k_star == 0 || a_est < self.demote {
+            // instant demotion: GEMM-bound batch or acceptance collapse
+            0
+        } else {
+            k_star.clamp(self.k.saturating_sub(1), self.k + 1).min(self.k_max)
+        };
+        let mut probing = false;
+        if next == 0 {
+            // re-probe only when acceptance (not the regime) demoted us:
+            // at the optimistic prior the cost model would still draft
+            let prior_k = match cost {
+                Some(cm) => {
+                    cm.best_draft_len(inputs, opt, self.k_max, PRIOR_ACCEPTANCE, self.shrink)
+                }
+                None => self.k_max,
+            };
+            if prior_k > 0 {
+                self.plain_rounds += 1;
+                if self.plain_rounds >= REPROBE_ROUNDS {
+                    next = 1;
+                    probing = true;
+                    self.plain_rounds = 0;
+                }
+            } else {
+                self.plain_rounds = 0;
+            }
+        } else {
+            self.plain_rounds = 0;
+        }
+        if next != self.k {
+            self.transitions += 1;
+        }
+        self.k = next;
+        if self.trace.len() < Self::TRACE_CAP {
+            self.trace.push(next.min(u8::MAX as usize) as u8);
+        }
+
+        // per-lane demotion: a sequence whose own acceptance collapsed
+        // takes the plain path while the rest of the batch keeps
+        // drafting; every REPROBE_ROUNDS plain rounds it gets one probe.
+        // A *global* probe round bypasses per-lane demotion entirely —
+        // after a global collapse every lane's estimate is down too, and
+        // demoting them all would leave the probe with nothing to
+        // measure (wasting the probe and stretching recovery from
+        // REPROBE_ROUNDS to its square)
+        let mut plain = Vec::new();
+        if next > 0 && !probing {
+            for &id in ids {
+                let Some(lane) = self.per_seq.get_mut(&id) else {
+                    continue; // never measured: speculate optimistically
+                };
+                if lane.rate() >= self.demote {
+                    lane.plain_rounds = 0;
+                    continue;
+                }
+                lane.plain_rounds += 1;
+                if lane.plain_rounds >= REPROBE_ROUNDS {
+                    lane.plain_rounds = 0; // probe round: let it draft
+                } else {
+                    plain.push(id);
+                }
+            }
+        }
+        RoundPlan {
+            k: next,
+            plain,
+            memory_bound,
+        }
+    }
+
+    /// Record one lane's verify outcome: `accepted` drafts accepted,
+    /// `examined = accepted + 1` if a draft was rejected (the failed
+    /// trial), else `accepted`.
+    pub fn observe_lane(&mut self, id: SeqId, accepted: usize, examined: usize) {
+        if examined == 0 {
+            return;
+        }
+        let lane = self.per_seq.entry(id).or_insert_with(LaneAcc::new);
+        lane.accepted = (1.0 - self.alpha) * lane.accepted + self.alpha * accepted as f64;
+        lane.examined = (1.0 - self.alpha) * lane.examined + self.alpha * examined as f64;
+    }
+
+    /// Fold one verify round's pooled counts into the global estimator
+    /// (one EWMA step per round, however many lanes it had).
+    pub fn observe_round(&mut self, accepted: usize, examined: usize) {
+        if examined == 0 {
+            return;
+        }
+        self.accepted = (1.0 - self.alpha) * self.accepted + self.alpha * accepted as f64;
+        self.examined = (1.0 - self.alpha) * self.examined + self.alpha * examined as f64;
+    }
+
+    /// Drop a finished sequence's per-lane state.
+    pub fn forget(&mut self, id: SeqId) {
+        self.per_seq.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{builtin_preset, COOPT};
+
+    fn cfg() -> SpecConfig {
+        SpecConfig {
+            mode: crate::config::SpecMode::Adaptive,
+            ..SpecConfig::default()
+        }
+    }
+
+    fn cost() -> CostModel {
+        CostModel::for_preset(&builtin_preset("llama-7b-sim").unwrap(), 16).with_ctx_scale(8.0)
+    }
+
+    fn batch(n: usize) -> (Vec<SeqCostInput>, Vec<SeqId>) {
+        (
+            (0..n)
+                .map(|_| SeqCostInput {
+                    ctx_len: 24,
+                    allocated_blocks: 2,
+                })
+                .collect(),
+            (1..=n as u64).collect(),
+        )
+    }
+
+    #[test]
+    fn cold_start_jumps_to_cost_model_best_then_steps_by_one() {
+        let cm = cost();
+        let mut c = SpecController::new(&cfg());
+        let (inp, ids) = batch(1);
+        // first decision: straight to the optimistic-prior best (k=4 at
+        // batch 1), no ramp
+        let p = c.decide(Some(&cm), &inp, &ids, &COOPT);
+        assert_eq!(p.k, 4);
+        assert_eq!(p.memory_bound, Some(true));
+        assert!(p.plain.is_empty());
+        // a weak round drags the estimate but k moves at most one step
+        c.observe_round(0, 1);
+        c.observe_round(1, 2);
+        let a = c.acceptance();
+        assert!(a < PRIOR_ACCEPTANCE);
+        let p = c.decide(Some(&cm), &inp, &ids, &COOPT);
+        assert!(p.k >= 3, "bounded step: 4 -> {} (acceptance {a})", p.k);
+        assert!(c.transitions >= 1);
+        assert_eq!(c.k_trace().first(), Some(&4u8));
+    }
+
+    #[test]
+    fn estimator_is_evidence_weighted() {
+        let mut c = SpecController::new(&cfg());
+        // four perfect 4-of-4 rounds pull the estimate up near 1
+        for _ in 0..4 {
+            c.observe_round(4, 4);
+        }
+        assert!(c.acceptance() > 0.95, "{}", c.acceptance());
+        // one 0-of-1 round barely moves a 4-of-4 history (ratio of
+        // count-EWMAs, not an EWMA of ratios)
+        c.observe_round(0, 1);
+        assert!(c.acceptance() > 0.8, "{}", c.acceptance());
+        // sustained rejection eventually collapses it
+        for _ in 0..12 {
+            c.observe_round(0, 1);
+        }
+        assert!(c.acceptance() < 0.25, "{}", c.acceptance());
+    }
+
+    #[test]
+    fn acceptance_collapse_demotes_instantly_and_reprobes() {
+        let cm = cost();
+        let mut c = SpecController::new(&cfg());
+        let (inp, ids) = batch(1);
+        assert_eq!(c.decide(Some(&cm), &inp, &ids, &COOPT).k, 4);
+        // collapse: every draft rejected
+        for _ in 0..16 {
+            c.observe_round(0, 1);
+        }
+        let p = c.decide(Some(&cm), &inp, &ids, &COOPT);
+        assert_eq!(p.k, 0, "instant demotion, not a ±1 walk down");
+        // plain rounds give no measurements; after REPROBE_ROUNDS the
+        // controller schedules exactly one k=1 probe
+        let mut ks = Vec::new();
+        for _ in 0..(2 * REPROBE_ROUNDS) {
+            ks.push(c.decide(Some(&cm), &inp, &ids, &COOPT).k);
+        }
+        assert_eq!(ks.iter().filter(|&&k| k == 1).count(), 2, "{ks:?}");
+        assert!(ks.iter().all(|&k| k <= 1));
+        // a recovered draft ramps back up from the probes
+        for _ in 0..40 {
+            let p = c.decide(Some(&cm), &inp, &ids, &COOPT);
+            if p.k > 0 {
+                c.observe_round(p.k, p.k); // perfect acceptance now
+            }
+        }
+        assert_eq!(c.current_k(), 4, "recovery reaches k_max");
+    }
+
+    #[test]
+    fn global_probe_bypasses_per_lane_demotion() {
+        // a global collapse drags every lane's estimate down with it;
+        // the global probe round must still draft on all lanes or it
+        // measures nothing and recovery stalls
+        let cm = cost();
+        let mut c = SpecController::new(&cfg());
+        let (inp, ids) = batch(2);
+        assert!(c.decide(Some(&cm), &inp, &ids, &COOPT).k > 0);
+        for _ in 0..16 {
+            c.observe_lane(1, 0, 1);
+            c.observe_lane(2, 0, 1);
+            c.observe_round(0, 2);
+        }
+        assert_eq!(c.decide(Some(&cm), &inp, &ids, &COOPT).k, 0, "collapsed");
+        // drive to the probe round: it must arrive with an empty plain
+        // set so every lane actually drafts and gets measured
+        let mut probed = false;
+        for _ in 0..(2 * REPROBE_ROUNDS) {
+            let p = c.decide(Some(&cm), &inp, &ids, &COOPT);
+            if p.k > 0 {
+                probed = true;
+                assert!(
+                    p.plain.is_empty(),
+                    "probe round demoted its own lanes: {:?}",
+                    p.plain
+                );
+                // the probe measured a recovered draft on both lanes
+                c.observe_lane(1, 1, 1);
+                c.observe_lane(2, 1, 1);
+                c.observe_round(2, 2);
+            }
+        }
+        assert!(probed, "the probe round must fire within REPROBE_ROUNDS");
+    }
+
+    #[test]
+    fn gemm_bound_batch_is_plain_decode_and_never_probes() {
+        let cm = cost();
+        let mut c = SpecController::new(&cfg());
+        let (inp, ids) = batch(8);
+        for _ in 0..(3 * REPROBE_ROUNDS) {
+            let p = c.decide(Some(&cm), &inp, &ids, &COOPT);
+            assert_eq!(p.k, 0, "GEMM-bound: speculation unwinnable");
+            assert_eq!(p.memory_bound, Some(false));
+        }
+        // the regime is re-evaluated from batch shape: shrinking the
+        // batch back to 1 lifts k without any acceptance history
+        let (inp1, ids1) = batch(1);
+        let p = c.decide(Some(&cm), &inp1, &ids1, &COOPT);
+        assert!(p.k > 0, "regime recovery needs no probe clock");
+    }
+
+    #[test]
+    fn per_lane_demotion_isolates_a_bad_lane() {
+        let cm = cost();
+        let mut c = SpecController::new(&cfg());
+        let (inp, ids) = batch(2);
+        assert!(c.decide(Some(&cm), &inp, &ids, &COOPT).k > 0);
+        // lane 1 drafts perfectly, lane 2 is hopeless; the pooled global
+        // estimate stays healthy
+        for _ in 0..16 {
+            c.observe_lane(1, 4, 4);
+            c.observe_lane(2, 0, 1);
+            c.observe_round(4, 5);
+        }
+        let p = c.decide(Some(&cm), &inp, &ids, &COOPT);
+        assert!(p.k > 0, "global k survives one bad lane");
+        assert_eq!(p.plain, vec![2], "only the collapsed lane is demoted");
+        // the demoted lane gets a probe round every REPROBE_ROUNDS
+        let mut probed = 0;
+        for _ in 0..(2 * REPROBE_ROUNDS) {
+            if !c.decide(Some(&cm), &inp, &ids, &COOPT).plain.contains(&2) {
+                probed += 1;
+            }
+        }
+        assert_eq!(probed, 2);
+        // finishing the lane clears its state
+        c.forget(2);
+        assert!(c.decide(Some(&cm), &inp, &ids, &COOPT).plain.is_empty());
+    }
+
+    #[test]
+    fn empty_batch_keeps_state_and_no_cost_model_falls_back() {
+        let mut c = SpecController::new(&cfg());
+        let p = c.decide(None, &[], &[], &COOPT);
+        assert_eq!(p.k, 0);
+        assert_eq!(p.memory_bound, None);
+        assert!(!c.started, "prefill-only rounds must not burn the cold start");
+        // acceptance-only fallback without a platform model: k_max while
+        // healthy, 0 on collapse
+        let (inp, ids) = batch(1);
+        assert_eq!(c.decide(None, &inp, &ids, &COOPT).k, 4);
+        for _ in 0..16 {
+            c.observe_round(0, 1);
+        }
+        assert_eq!(c.decide(None, &inp, &ids, &COOPT).k, 0);
+        assert!(c.transitions >= 2);
+    }
+}

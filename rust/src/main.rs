@@ -8,7 +8,7 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
-use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig, SpecPolicy, SwapPolicy};
+use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig, SpecMode, SpecPolicy, SwapPolicy};
 use llm_coopt::coordinator::{Engine, GenRequest};
 use llm_coopt::eval;
 use llm_coopt::runtime::Runtime;
@@ -66,6 +66,26 @@ fn main() -> Result<()> {
              Backends without draft/verify support fall back to one-token decode",
         )
         .flag(
+            "spec-mode",
+            "fixed",
+            "draft-length selection: fixed (--spec-tokens K every round) or \
+             adaptive (an online controller picks k in 0..=spec-k-max each \
+             round from the measured acceptance rate and the Z100 cost \
+             model's regime detector; k=0 on GEMM-bound batches)",
+        )
+        .flag(
+            "spec-k-max",
+            "4",
+            "adaptive speculation: upper bound of the per-round draft-length \
+             search",
+        )
+        .flag(
+            "spec-ewma-alpha",
+            "0.25",
+            "adaptive speculation: EWMA weight of the newest acceptance \
+             measurement (higher adapts faster, lower is steadier)",
+        )
+        .flag(
             "spec-policy",
             "stochastic",
             "speculative acceptance rule for sampled requests: stochastic = \
@@ -98,9 +118,13 @@ fn main() -> Result<()> {
         if spec > 0 {
             cfg = cfg.with_speculation(spec);
         }
+        if SpecMode::parse(args.get("spec-mode"))? == SpecMode::Adaptive {
+            cfg = cfg.with_adaptive_speculation(args.get_usize("spec-k-max"));
+        }
         cfg = cfg
             .with_spec_policy(SpecPolicy::parse(args.get("spec-policy"))?)
-            .with_spec_shrink(args.get_f64("spec-shrink"));
+            .with_spec_shrink(args.get_f64("spec-shrink"))
+            .with_spec_ewma_alpha(args.get_f64("spec-ewma-alpha"));
         Ok(cfg)
     };
 

@@ -59,6 +59,28 @@ pub struct EngineMetrics {
     pub decode_lanes_sum: u64,
     /// batch slots offered over those rounds (occupancy denominator)
     pub decode_batch_slots: u64,
+    // --- adaptive speculation (online draft-length controller) -------------
+    /// rounds by draft length: `spec_k_hist[k]` counts decode/verify
+    /// rounds that ran at draft length k (index 0 = plain one-token
+    /// rounds; empty when speculation is disabled)
+    pub spec_k_hist: Vec<u64>,
+    /// the controller's current global draft length (gauge)
+    pub spec_k_current: usize,
+    /// draft-length changes the controller has made
+    pub spec_ctrl_transitions: u64,
+    /// the controller's EWMA per-position acceptance estimate (gauge;
+    /// 0.0 in fixed mode or before the first measurement)
+    pub spec_acceptance_ewma: f64,
+    /// cost-model regime of the last planned decode batch (gauge):
+    /// "weight-stream-bound", "gemm-bound", or "" when unknown
+    pub spec_regime: &'static str,
+    /// decode/verify rounds and committed tokens split by the cost-model
+    /// regime they ran in (tokens/step per regime is the controller's
+    /// report card: > 1 where speculation pays, ~1 where it cannot)
+    pub rounds_weight_stream_bound: u64,
+    pub tokens_weight_stream_bound: u64,
+    pub rounds_gemm_bound: u64,
+    pub tokens_gemm_bound: u64,
     // --- Opt-KV tier manager (two-tier KV hierarchy) -----------------------
     /// preemptions that swapped the victim to the host tier
     pub swap_outs: u64,
@@ -180,6 +202,45 @@ impl EngineMetrics {
         }
     }
 
+    /// Count one decode/verify round at draft length `k` and attribute
+    /// its committed tokens to the cost-model regime it ran in.
+    pub fn record_spec_round(&mut self, k: usize, committed: u64, memory_bound: Option<bool>) {
+        if self.spec_k_hist.len() <= k {
+            self.spec_k_hist.resize(k + 1, 0);
+        }
+        self.spec_k_hist[k] += 1;
+        match memory_bound {
+            Some(true) => {
+                self.rounds_weight_stream_bound += 1;
+                self.tokens_weight_stream_bound += committed;
+            }
+            Some(false) => {
+                self.rounds_gemm_bound += 1;
+                self.tokens_gemm_bound += committed;
+            }
+            None => {}
+        }
+    }
+
+    /// Tokens committed per round inside the weight-stream-bound regime
+    /// (0.0 when no round was classified there).
+    pub fn tokens_per_step_weight_stream(&self) -> f64 {
+        if self.rounds_weight_stream_bound > 0 {
+            self.tokens_weight_stream_bound as f64 / self.rounds_weight_stream_bound as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Tokens committed per round inside the GEMM-bound regime.
+    pub fn tokens_per_step_gemm(&self) -> f64 {
+        if self.rounds_gemm_bound > 0 {
+            self.tokens_gemm_bound as f64 / self.rounds_gemm_bound as f64
+        } else {
+            0.0
+        }
+    }
+
     /// Mean fraction of the decode batch actually occupied by running
     /// lanes (batch efficiency, visible from `GET /metrics`).
     pub fn decode_batch_occupancy(&self) -> f64 {
@@ -226,6 +287,30 @@ impl EngineMetrics {
         o.insert("acceptance_rate", self.acceptance_rate());
         o.insert("tokens_per_step", self.tokens_per_step());
         o.insert("decode_batch_occupancy", self.decode_batch_occupancy());
+        // adaptive speculation: live controller state + round histogram
+        o.insert("spec_k_current", self.spec_k_current);
+        o.insert("spec_ctrl_transitions", self.spec_ctrl_transitions as usize);
+        o.insert("spec_acceptance_ewma", self.spec_acceptance_ewma);
+        o.insert("spec_regime", self.spec_regime);
+        if !self.spec_k_hist.is_empty() {
+            let mut hist = Object::new();
+            for (k, &n) in self.spec_k_hist.iter().enumerate() {
+                hist.insert(format!("{k}"), n as usize);
+            }
+            o.insert("spec_k_hist", hist);
+        }
+        if self.rounds_weight_stream_bound > 0 || self.rounds_gemm_bound > 0 {
+            o.insert(
+                "rounds_weight_stream_bound",
+                self.rounds_weight_stream_bound as usize,
+            );
+            o.insert("rounds_gemm_bound", self.rounds_gemm_bound as usize);
+            o.insert(
+                "tokens_per_step_weight_stream",
+                self.tokens_per_step_weight_stream(),
+            );
+            o.insert("tokens_per_step_gemm", self.tokens_per_step_gemm());
+        }
         o.insert("swap_outs", self.swap_outs as usize);
         o.insert("swap_ins", self.swap_ins as usize);
         o.insert("blocks_swapped_out", self.blocks_swapped_out as usize);
@@ -342,6 +427,45 @@ mod tests {
         assert!((j.req_f64("tokens_per_step").unwrap() - 2.7).abs() < 1e-12);
         assert!((j.req_f64("decode_batch_occupancy").unwrap() - 0.75).abs() < 1e-12);
         assert!((j.req_f64("acceptance_rate").unwrap() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_spec_metrics_serialize() {
+        let mut m = EngineMetrics::new();
+        // no speculation: the histogram and regime split stay out of the
+        // JSON entirely
+        let j = m.to_json().to_string();
+        assert!(!j.contains("spec_k_hist"));
+        assert!(!j.contains("rounds_gemm_bound"));
+        // a run that spent 2 rounds at k=0 (GEMM-bound), then 3 at k=3
+        // (weight-stream-bound) committing 4 tokens each
+        m.record_spec_round(0, 1, Some(false));
+        m.record_spec_round(0, 1, Some(false));
+        for _ in 0..3 {
+            m.record_spec_round(3, 4, Some(true));
+        }
+        m.spec_k_current = 3;
+        m.spec_ctrl_transitions = 2;
+        m.spec_acceptance_ewma = 0.87;
+        m.spec_regime = crate::platform::regime_name(true);
+        assert_eq!(m.spec_k_hist, vec![2, 0, 0, 3]);
+        assert!((m.tokens_per_step_gemm() - 1.0).abs() < 1e-12);
+        assert!((m.tokens_per_step_weight_stream() - 4.0).abs() < 1e-12);
+        let j = m.to_json();
+        let hist = j.get("spec_k_hist").expect("histogram serialized");
+        assert_eq!(hist.req_usize("0").unwrap(), 2);
+        assert_eq!(hist.req_usize("3").unwrap(), 3);
+        assert_eq!(j.req_usize("spec_k_current").unwrap(), 3);
+        assert_eq!(j.req_usize("spec_ctrl_transitions").unwrap(), 2);
+        assert!((j.req_f64("spec_acceptance_ewma").unwrap() - 0.87).abs() < 1e-12);
+        assert_eq!(j.req_str("spec_regime").unwrap(), "weight-stream-bound");
+        assert_eq!(j.req_usize("rounds_weight_stream_bound").unwrap(), 3);
+        assert_eq!(j.req_usize("rounds_gemm_bound").unwrap(), 2);
+        assert!((j.req_f64("tokens_per_step_weight_stream").unwrap() - 4.0).abs() < 1e-12);
+        // a round without a cost model is counted in the histogram only
+        m.record_spec_round(1, 2, None);
+        assert_eq!(m.spec_k_hist, vec![2, 1, 0, 3]);
+        assert_eq!(m.rounds_weight_stream_bound + m.rounds_gemm_bound, 5);
     }
 
     #[test]

@@ -48,6 +48,13 @@ pub struct MockBackend {
     pub swap_trace: Vec<(char, u32, u64)>,
     /// speculative decoding: every verify pass as (active lanes, k)
     pub spec_trace: Vec<(usize, usize)>,
+    /// the draft length of every draft call, in order — adaptive
+    /// speculation legitimately varies k between rounds, and tests
+    /// assert the trace shows it
+    pub draft_k_trace: Vec<usize>,
+    /// k of the most recent draft not yet consumed by a verify: the
+    /// verify of the same round must score the same k positions
+    pending_draft_k: Option<usize>,
     pub draft_calls: usize,
     pub verify_calls: usize,
     /// the draft chain disagrees with the target whenever
@@ -78,6 +85,8 @@ impl MockBackend {
             host_payload: HashMap::new(),
             swap_trace: Vec::new(),
             spec_trace: Vec::new(),
+            draft_k_trace: Vec::new(),
+            pending_draft_k: None,
             draft_calls: 0,
             verify_calls: 0,
             draft_divergence: 5,
@@ -370,6 +379,10 @@ impl Backend for MockBackend {
             }
         }
         self.draft_calls += 1;
+        self.draft_k_trace.push(k);
+        // the k of a round is free to differ from the previous round's
+        // (adaptive speculation) but the round's own verify must match
+        self.pending_draft_k = Some(k);
         self.spin();
         Ok((toks, logits))
     }
@@ -394,6 +407,13 @@ impl Backend for MockBackend {
             || block_tables.len() != b * mb
         {
             bail!("mock: verify inputs not padded to max_batch x (k+1)");
+        }
+        // contract: a verify scores exactly the positions its round
+        // drafted — k may change between rounds, never inside one
+        if let Some(dk) = self.pending_draft_k.take() {
+            if dk != k {
+                bail!("mock: verify k={k} does not match the round's drafted k={dk}");
+            }
         }
         // contract checks the real runtime silently relies on
         let mut seen_slots: HashSet<i32> = HashSet::new();
@@ -529,6 +549,7 @@ impl Backend for MockBackend {
     fn reset_cache(&mut self) -> Result<()> {
         self.device_payload.clear();
         self.host_payload.clear();
+        self.pending_draft_k = None;
         Ok(())
     }
 
@@ -773,6 +794,66 @@ mod tests {
         m.swap_out(0, 7).unwrap();
         assert!(m.verify(&toks, &pos, &bt, &ctx, &slots, k).is_err());
         assert!(m.supports_speculation());
+    }
+
+    #[test]
+    fn draft_verify_k_may_change_between_rounds_but_not_inside_one() {
+        let mut m = MockBackend::with_geometry(CacheGeometry {
+            block_size: 4,
+            max_blocks: 4,
+            num_pool_blocks: 8,
+            max_batch: 2,
+            max_seq: 16,
+        });
+        let g = *m.geometry();
+        let (b, mb) = (g.max_batch, g.max_blocks);
+        let s = g.max_seq;
+        // make blocks 0..2 resident
+        let mut ptoks = vec![0i32; s];
+        let mut pslots = vec![-1i32; s];
+        for i in 0..5 {
+            ptoks[i] = 40 + i as i32;
+            pslots[i] = i as i32;
+        }
+        m.prefill(&ptoks, 5, &pslots).unwrap();
+        let mut pos = vec![0i32; b];
+        pos[0] = 5;
+        let mut dctx = vec![0i32; b];
+        dctx[0] = 6;
+        let mut dtoks = vec![-1i32; b];
+        dtoks[0] = 44;
+        let verify_inputs = |k: usize| {
+            let n = k + 1;
+            let mut toks = vec![-1i32; b * n];
+            let mut slots = vec![-1i32; b * n];
+            for i in 0..n {
+                toks[i] = 44 + i as i32;
+                slots[i] = 5 + i as i32;
+            }
+            let mut ctx = vec![0i32; b];
+            ctx[0] = (6 + k) as i32;
+            let mut bt = vec![0i32; b * mb];
+            bt[0] = 0;
+            bt[1] = 1;
+            bt[2] = 2;
+            (toks, slots, ctx, bt)
+        };
+        // round 1 at k=2: verify with a different k is a contract error
+        m.draft(&dtoks, &pos, &dctx, 2).unwrap();
+        let (t, sl, ctx, bt) = verify_inputs(1);
+        assert!(
+            m.verify(&t, &pos, &bt, &ctx, &sl, 1).is_err(),
+            "verify k=1 after draft k=2 must be rejected"
+        );
+        // the failed verify consumed the pending draft; a fresh round at
+        // a *different* k is legal — adaptive speculation in action
+        m.draft(&dtoks, &pos, &dctx, 1).unwrap();
+        let (t, sl, ctx, bt) = verify_inputs(1);
+        m.verify(&t, &pos, &bt, &ctx, &sl, 1).unwrap();
+        m.draft(&dtoks, &pos, &dctx, 3).unwrap();
+        let (t, sl, ctx, bt) = verify_inputs(3);
+        m.verify(&t, &pos, &bt, &ctx, &sl, 3).unwrap();
+        assert_eq!(m.draft_k_trace, vec![2, 1, 3], "the k trace shows the variation");
     }
 
     #[test]

@@ -127,6 +127,13 @@ pub trait Backend {
     /// rows put ~all mass on the proposed token); a backend that samples
     /// its drafts must return the distribution it sampled from.
     ///
+    /// `k` is a *per-round* argument, not a construction-time constant:
+    /// the adaptive speculation controller legitimately changes it
+    /// between rounds (including k = 0 rounds that skip draft/verify
+    /// entirely), and a backend must not cache it.  Within one round the
+    /// paired [`Backend::verify`] call always scores the same `k`
+    /// positions (the mock enforces this pairing).
+    ///
     /// The default rejects: the AOT graph set has no draft model, so the
     /// PJRT runtime inherits this and engines degrade to one-token decode
     /// via [`Backend::supports_speculation`].  The mock implements a

@@ -99,8 +99,14 @@ pub struct Scheduler {
     step_token_budget: usize,
     /// budget tokens one decode lane may commit per round: 1, or
     /// 1 + draft length under speculative decoding (each verify pass can
-    /// commit the accepted prefix plus one corrected token)
+    /// commit the accepted prefix plus one corrected token).  Adaptive
+    /// speculation re-sets this *per round* ([`Self::set_spec_round`])
+    /// so the shared budget always charges the k actually in flight.
     decode_tokens_per_seq: usize,
+    /// lanes charged 1 token this round regardless of
+    /// `decode_tokens_per_seq` (per-lane k = 0: controller-demoted or
+    /// too close to max context to take a k+1 reservation)
+    plain_lanes: Vec<SeqId>,
     /// chunked prefill on/off + per-chunk cap
     chunked: bool,
     chunk_tokens: usize,
@@ -122,6 +128,7 @@ impl Scheduler {
             max_batch,
             step_token_budget: usize::MAX,
             decode_tokens_per_seq: 1,
+            plain_lanes: Vec::new(),
             chunked: false,
             chunk_tokens: 32,
             stamp: 0,
@@ -152,6 +159,39 @@ impl Scheduler {
     pub fn with_speculation(mut self, draft_tokens: usize) -> Self {
         self.decode_tokens_per_seq = 1 + draft_tokens;
         self
+    }
+
+    /// Adaptive speculation: set this round's draft length and the lanes
+    /// taking the plain one-token path (per-lane k = 0).  The next
+    /// [`Self::schedule`] charges each decode lane exactly `1 + k_lane`
+    /// budget tokens — k shrinking immediately widens the prefill windows
+    /// of the very next step, and k growing only re-slices the *fixed*
+    /// step budget (a user's tight prefill bound is never inflated; when
+    /// the speculative reserve eats the whole budget the one-token
+    /// progress floor still advances prefill).
+    pub fn set_spec_round(&mut self, draft_tokens: usize, plain_lanes: Vec<SeqId>) {
+        self.decode_tokens_per_seq = 1 + draft_tokens;
+        self.plain_lanes = plain_lanes;
+    }
+
+    /// Budget tokens one decode lane is charged this round.
+    fn decode_charge(&self, id: SeqId) -> usize {
+        if self.plain_lanes.contains(&id) {
+            1
+        } else {
+            self.decode_tokens_per_seq
+        }
+    }
+
+    /// Running sequences whose prefill is complete — the candidates for
+    /// the next decode batch, in admission order (what the adaptive
+    /// speculation controller sizes its cost-model batch from).
+    pub fn decode_ready_ids(&self) -> Vec<SeqId> {
+        self.running
+            .iter()
+            .filter(|e| e.prefill_done >= e.prefix_len)
+            .map(|e| e.id)
+            .collect()
     }
 
     pub fn is_chunked(&self) -> bool {
@@ -284,8 +324,8 @@ impl Scheduler {
         // engine sizes the budget above the decode reserve, making the
         // shared bound strict in practice).
         let budget = self.step_token_budget.max(1);
-        let mut remaining =
-            budget.saturating_sub(d.decodes.len() * self.decode_tokens_per_seq);
+        let decode_charge: usize = d.decodes.iter().map(|&id| self.decode_charge(id)).sum();
+        let mut remaining = budget.saturating_sub(decode_charge);
         if remaining == 0
             && (!self.waiting.is_empty()
                 || self.running.iter().any(|e| e.prefill_done < e.prefix_len))
@@ -738,6 +778,107 @@ mod tests {
         s1.submit(9, 20);
         let d1 = apply(&mut s1, &c);
         assert!(d1.prefill_tokens() > d.prefill_tokens());
+    }
+
+    #[test]
+    fn shrinking_k_immediately_widens_prefill_windows() {
+        // 3 decoding lanes, 16-token budget: at k=3 the speculative
+        // reserve is 12 tokens; dropping to k=1 the very next round must
+        // free 6 of them for prefill — no lag, no hysteresis
+        let mut s = Scheduler::new(4)
+            .with_step_budget(16)
+            .with_chunked_prefill(8)
+            .with_speculation(3);
+        let c = roomy_cache();
+        for id in 1..=3u64 {
+            s.submit(id, 2);
+        }
+        for _ in 0..4 {
+            apply(&mut s, &c); // short prompts complete their prefill
+        }
+        s.submit(9, 40);
+        let d_k3 = apply(&mut s, &c);
+        assert_eq!(d_k3.decodes.len(), 3);
+        assert!(d_k3.prefill_tokens() <= 16 - 3 * 4);
+        s.set_spec_round(1, Vec::new());
+        let d_k1 = apply(&mut s, &c);
+        assert_eq!(d_k1.decodes.len(), 3);
+        assert!(
+            d_k1.prefill_tokens() > d_k3.prefill_tokens(),
+            "k 3->1 must widen the next window: {} vs {}",
+            d_k1.prefill_tokens(),
+            d_k3.prefill_tokens()
+        );
+        assert!(d_k1.prefill_tokens() + 3 * 2 <= 16, "and stay in budget");
+    }
+
+    #[test]
+    fn growing_k_never_inflates_a_tight_budget() {
+        // regression on the PR 3 fix: a user's tight step budget stays
+        // the bound no matter how large k grows — the speculative
+        // reserve re-slices it, the one-token floor keeps prefill alive
+        let budget = 5;
+        let mut s = Scheduler::new(4)
+            .with_step_budget(budget)
+            .with_chunked_prefill(8);
+        let c = roomy_cache();
+        for id in 1..=3u64 {
+            s.submit(id, 2);
+        }
+        for _ in 0..4 {
+            apply(&mut s, &c);
+        }
+        s.submit(9, 24);
+        for k in [0usize, 1, 3, 7] {
+            s.set_spec_round(k, Vec::new());
+            let d = apply(&mut s, &c);
+            assert_eq!(d.decodes.len(), 3);
+            let charge: usize = d.decodes.len() * (1 + k);
+            if charge >= budget {
+                assert_eq!(
+                    d.prefill_tokens(),
+                    1,
+                    "k={k}: saturated budget still grants the progress floor"
+                );
+            } else {
+                assert!(
+                    d.prefill_tokens() + charge <= budget,
+                    "k={k}: prefill {} + decode charge {charge} over budget {budget}",
+                    d.prefill_tokens()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_batch_charges_each_lane_exactly_one_plus_k_lane() {
+        // 4 decoding lanes at k=3, two of them demoted to plain decode:
+        // the charge is 2*(1+3) + 2*1 = 10 of an 18-token budget, so the
+        // admission window gets exactly the 8 left (block-aligned)
+        let mut s = Scheduler::new(5)
+            .with_step_budget(18)
+            .with_chunked_prefill(16);
+        let c = roomy_cache(); // block_size 4
+        for id in 1..=4u64 {
+            s.submit(id, 2);
+        }
+        for _ in 0..5 {
+            apply(&mut s, &c);
+        }
+        s.submit(9, 40);
+        s.set_spec_round(3, vec![2, 4]);
+        let d = apply(&mut s, &c);
+        assert_eq!(d.decodes.len(), 4);
+        assert_eq!(
+            d.prefill_tokens(),
+            18 - (2 * 4 + 2 * 1),
+            "per-lane charge must be exactly 1 + k_lane"
+        );
+        // demoting every lane frees the full reserve: 18 - 4 = 14,
+        // aligned down to the 12-token block boundary
+        s.set_spec_round(3, vec![1, 2, 3, 4]);
+        let d = apply(&mut s, &c);
+        assert_eq!(d.prefill_tokens(), 12, "all-plain batch charges 1 per lane");
     }
 
     #[test]

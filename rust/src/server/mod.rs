@@ -420,9 +420,50 @@ mod tests {
         let occ = m.req_f64("decode_batch_occupancy").unwrap();
         assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ}");
         assert_eq!(m.req_usize("spec_rounds").unwrap(), 0);
+        // adaptive-speculation gauges ride along even when speculation
+        // is off (k 0, regime unknown, histogram omitted)
+        assert_eq!(m.req_usize("spec_k_current").unwrap(), 0);
+        assert_eq!(m.req_str("spec_regime").unwrap(), "");
+        assert!(m.get("spec_k_hist").is_none());
 
         let (code, _e) = client.get("/nope").unwrap();
         assert_eq!(code, 404);
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_expose_live_adaptive_controller_state() {
+        let engine = Engine::new(
+            MockBackend::new(),
+            EngineConfig::new("llama-7b-sim", COOPT).with_adaptive_speculation(4),
+        );
+        let handle = EngineHandle::spawn(engine);
+        let server = Server::bind("127.0.0.1:0", handle, 2).unwrap();
+        let client = Client::new(server.addr.to_string());
+        let stop = server.stop_flag();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+
+        let v = client.generate("adaptive over http", 8).unwrap();
+        assert_eq!(v.req_usize("generated_tokens").unwrap(), 8);
+        // the controller's state publishes after the engine's next step
+        let mut m = Value::Null;
+        for _ in 0..100 {
+            let (code, v) = client.get("/metrics").unwrap();
+            assert_eq!(code, 200);
+            if v.get("spec_k_hist").is_some() {
+                m = v;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let hist = m.get("spec_k_hist").expect("live k histogram");
+        assert!(hist.as_object().is_some());
+        assert!(m.req_f64("spec_acceptance_ewma").unwrap() > 0.0);
+        assert_eq!(m.req_str("spec_regime").unwrap(), "weight-stream-bound");
+        assert!(m.req_f64("tokens_per_step_weight_stream").unwrap() > 1.0);
+        assert!(m.get("spec_k_current").is_some());
 
         stop.store(true, Ordering::Relaxed);
         srv.join().unwrap();

@@ -461,6 +461,127 @@ pub fn run_spec_compare(
     Ok(rows)
 }
 
+/// One (draft divergence, concurrent batch) operating point of the
+/// adaptive-speculation sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveSpecPoint {
+    /// the mock draft disagrees with the target every `divergence`-th
+    /// token (10 ≈ 90% per-position acceptance, 2 ≈ 50%)
+    pub divergence: u64,
+    /// concurrent greedy streams (the decode batch width — what moves
+    /// the batch between the weight-stream-bound and GEMM-bound regimes)
+    pub batch: usize,
+}
+
+/// Adaptive-vs-fixed-k speculation sweep over the deterministic mock +
+/// Z100 cost model (runs without artifacts).  At each sweep point the
+/// same greedy workload runs at every fixed k in `{0} ∪ fixed_ks` and
+/// once with the adaptive controller (`k_max`); all runs are asserted
+/// token-identical (greedy speculation is exact at any k, moving or
+/// not).  The sweep is chosen so *no single fixed k wins everywhere* —
+/// small batches reward long drafts, high divergence rewards short
+/// ones, and the GEMM-bound large batch rewards k = 0 — which is
+/// exactly the case for closing the loop: the adaptive rows should
+/// match the best fixed k of each point (tokens/step within 2%) without
+/// anyone retuning `--spec-tokens`.  Adaptive rows record the chosen-k
+/// trace, final k, round histogram, and regime classification.
+pub fn run_adaptive_spec_compare(
+    points: &[AdaptiveSpecPoint],
+    max_new: usize,
+    fixed_ks: &[usize],
+    k_max: usize,
+) -> Result<Vec<Value>> {
+    use crate::runtime::mock::MockBackend;
+    use crate::sampling::SamplingParams;
+
+    let mut rows = Vec::new();
+    for &point in points {
+        let mut base_tokens: Option<Vec<Vec<u32>>> = None;
+        // modes: fixed k = 0 (baseline), each fixed k, then adaptive
+        let fixed_modes: Vec<Option<usize>> = std::iter::once(Some(0))
+            .chain(fixed_ks.iter().copied().map(Some))
+            .chain(std::iter::once(None))
+            .collect();
+        for mode_k in fixed_modes {
+            let mut be = MockBackend::new().with_opt(crate::config::COOPT);
+            be.draft_divergence = point.divergence;
+            // chunked prefill admits the whole batch in round one, so
+            // the controller sees the true batch width from its first
+            // decision instead of a one-lane warm-up
+            let mut cfg = EngineConfig::new("llama-7b-sim", crate::config::COOPT)
+                .with_chunked_prefill(32);
+            cfg = match mode_k {
+                Some(0) => cfg,
+                Some(k) => cfg.with_speculation(k),
+                None => cfg.with_adaptive_speculation(k_max),
+            };
+            let mut engine = Engine::new(be, cfg);
+            for i in 0..point.batch {
+                let toks: Vec<u32> = (0..8 + (i % 4) * 3)
+                    .map(|t| 33 + ((i * 11 + t * 5) % 80) as u32)
+                    .collect();
+                engine.submit_tokens(toks, max_new, SamplingParams::default(), true)?;
+            }
+            let mut results = engine.run_to_completion()?;
+            results.sort_by_key(|r| r.id);
+            let outs: Vec<Vec<u32>> = results.iter().map(|r| r.tokens.clone()).collect();
+            match &base_tokens {
+                None => base_tokens = Some(outs),
+                Some(base) => {
+                    if *base != outs {
+                        anyhow::bail!(
+                            "outputs diverged from one-token decode at \
+                             divergence={} batch={} mode={mode_k:?}",
+                            point.divergence,
+                            point.batch
+                        );
+                    }
+                }
+            }
+            let m = &engine.metrics;
+            let mut o = Object::new();
+            o.insert("divergence", point.divergence as usize);
+            o.insert("batch", point.batch);
+            match mode_k {
+                Some(k) => {
+                    o.insert("mode", format!("fixed-k{k}"));
+                    o.insert("draft_k", k);
+                }
+                None => {
+                    o.insert("mode", "adaptive");
+                    o.insert("draft_k", k_max);
+                }
+            }
+            o.insert("tokens", m.tokens_generated as usize);
+            o.insert("decode_rounds", (m.decode_steps + m.spec_rounds) as usize);
+            o.insert("spec_rounds", m.spec_rounds as usize);
+            o.insert("tokens_per_step", m.tokens_per_step());
+            o.insert("acceptance_rate", m.acceptance_rate());
+            o.insert("throughput_sim", m.throughput_sim());
+            o.insert("latency_sim_s", m.total_latency_sim_s());
+            if mode_k.is_none() {
+                o.insert("k_last", m.spec_k_current);
+                o.insert("regime", m.spec_regime);
+                o.insert("ctrl_transitions", m.spec_ctrl_transitions as usize);
+                o.insert("acceptance_ewma", m.spec_acceptance_ewma);
+                let mut hist = Object::new();
+                for (k, &n) in m.spec_k_hist.iter().enumerate() {
+                    hist.insert(format!("{k}"), n as usize);
+                }
+                o.insert("k_hist", hist);
+                let trace: Vec<Value> = engine
+                    .spec_k_trace()
+                    .iter()
+                    .map(|&k| Value::from(k as usize))
+                    .collect();
+                o.insert("k_trace", Value::Array(trace));
+            }
+            rows.push(Value::Object(o));
+        }
+    }
+    Ok(rows)
+}
+
 /// Short git commit of the working tree, for the BENCH_serve header
 /// ("which code produced these rows").
 fn git_commit_short() -> String {

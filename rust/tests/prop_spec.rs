@@ -127,6 +127,115 @@ fn greedy_speculation_is_exact_for_every_opt_config() {
     );
 }
 
+/// Acceptance (adaptive speculation): the controller changing k between
+/// rounds — cold-start probe, ±1 steps, per-lane and global demotion,
+/// re-probing — must stay token-for-token identical to one-token greedy
+/// decode across all five opt configs, under the same undersized-pool /
+/// swap-exit preemption setup as the fixed-k property.  Divergence and
+/// k_max vary per case so the controller actually moves: the suite
+/// asserts controller transitions, verify rounds, preemptions, and
+/// rejections all occurred somewhere.
+#[test]
+fn adaptive_greedy_speculation_is_exact_while_k_changes() {
+    let total_spec_rounds = Cell::new(0u64);
+    let total_preemptions = Cell::new(0u64);
+    let total_transitions = Cell::new(0u64);
+    let distinct_ks = Cell::new(0u64);
+    check(
+        120,
+        gens::pair(
+            gens::vec(gens::usize_to(11), 1..=6),
+            gens::pair(gens::usize_to(3), gens::usize_to(1000)),
+        ),
+        |&(ref profile, (km0, seed)): &(Vec<usize>, (usize, usize))| {
+            let k_max = 1 + km0; // adaptive search bound 1..=4
+            let opt = ALL_CONFIGS[seed % ALL_CONFIGS.len()];
+            // vary the draft quality so the controller's estimate —
+            // and therefore k — actually moves across the suite
+            let divergence = [2u64, 3, 5, 10][seed % 4];
+            let pool = 14;
+            let mut rng = Rng::new(seed as u64 ^ 0xADA7);
+            let reqs: Vec<(Vec<u32>, usize)> = profile
+                .iter()
+                .map(|&p| {
+                    let len = 1 + p; // 1..=12 prompt tokens
+                    let toks: Vec<u32> =
+                        (0..len).map(|_| 33 + rng.below(200) as u32).collect();
+                    (toks, 2 + p % 8)
+                })
+                .collect();
+            let run = |adaptive: bool, pool_blocks: usize, host: usize| {
+                let mut be = MockBackend::with_geometry(geometry(pool_blocks)).with_opt(opt);
+                be.draft_divergence = divergence;
+                let mut cfg = EngineConfig::new("llama-7b-sim", opt)
+                    .with_host_pool(host)
+                    .with_swap_policy(SwapPolicy::Always);
+                if adaptive {
+                    cfg = cfg.with_adaptive_speculation(k_max);
+                }
+                let mut e = Engine::new(be, cfg);
+                for (toks, max_new) in &reqs {
+                    e.submit_tokens(toks.clone(), *max_new, SamplingParams::default(), false)
+                        .unwrap();
+                }
+                let mut r = match e.run_to_completion() {
+                    Ok(r) => r,
+                    Err(_) => return None,
+                };
+                r.sort_by_key(|x| x.id);
+                Some((
+                    r.into_iter()
+                        .map(|x| (x.tokens, x.finish))
+                        .collect::<Vec<_>>(),
+                    e,
+                ))
+            };
+            // unconstrained one-token reference
+            let Some((expected, base)) = run(false, 96, 0) else {
+                return false;
+            };
+            if base.metrics.preemptions != 0 {
+                return false;
+            }
+            // adaptive run under pool pressure, swap-exit preemption
+            let Some((got, e)) = run(true, pool, 160) else {
+                return false;
+            };
+            total_spec_rounds.set(total_spec_rounds.get() + e.metrics.spec_rounds);
+            total_preemptions.set(total_preemptions.get() + e.metrics.preemptions);
+            total_transitions.set(total_transitions.get() + e.metrics.spec_ctrl_transitions);
+            let ks_used = e
+                .metrics
+                .spec_k_hist
+                .iter()
+                .filter(|&&n| n > 0)
+                .count() as u64;
+            distinct_ks.set(distinct_ks.get().max(ks_used));
+            expected == got
+                && e.cache_stats().blocks_used == 0
+                && e.tier_stats().host_used_blocks == 0
+                && e.tier_stats().swapped_seqs == 0
+                && e.metrics.spec_accepted <= e.metrics.spec_drafted
+        },
+    );
+    assert!(
+        total_spec_rounds.get() > 0,
+        "the suite must actually run verify passes"
+    );
+    assert!(
+        total_preemptions.get() > 0,
+        "the undersized pool must force preemption under the controller"
+    );
+    assert!(
+        total_transitions.get() > 0,
+        "the controller must actually change k somewhere in the suite"
+    );
+    assert!(
+        distinct_ks.get() >= 2,
+        "some run must mix draft lengths (k actively changing mid-stream)"
+    );
+}
+
 /// Acceptance: the bench comparison the CI smoke publishes —
 /// tokens_per_step > 1 under speculation, token-identical outputs
 /// (asserted inside run_spec_compare), and an Eq. 12 throughput win at

@@ -152,6 +152,44 @@ fn prefix_sharing_survives_swap_under_pressure() {
     assert_eq!(e.tier_stats().host_used_blocks, 0);
 }
 
+/// Acceptance: swap invisibility also holds while the *adaptive*
+/// speculation controller is changing the draft length over the same
+/// pressured pool — mid-speculation preemption rolls reservations back
+/// before the victim exits via swap, whatever k the round picked.
+#[test]
+fn swap_stays_invisible_under_adaptive_speculation() {
+    let mk_reqs = || -> Vec<(Vec<u32>, usize)> {
+        (0..6u32)
+            .map(|i| {
+                let toks: Vec<u32> = (0..10 + i % 4).map(|t| 40 + i * 9 + t).collect();
+                (toks, 8 + (i as usize % 3))
+            })
+            .collect()
+    };
+    let run = |mut e: Engine<MockBackend>| {
+        for (toks, max_new) in mk_reqs() {
+            e.submit_tokens(toks, max_new, SamplingParams::default(), false)
+                .unwrap();
+        }
+        let mut r = e.run_to_completion().unwrap();
+        r.sort_by_key(|x| x.id);
+        (r.into_iter().map(|x| x.tokens).collect::<Vec<_>>(), e)
+    };
+    let (expected, base) = run(engine(96, 0, SwapPolicy::Never));
+    assert_eq!(base.metrics.preemptions, 0, "reference must be unconstrained");
+    let be = MockBackend::with_geometry(geometry(12)).with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_host_pool(160)
+        .with_swap_policy(SwapPolicy::Always)
+        .with_adaptive_speculation(3);
+    let (got, e) = run(Engine::new(be, cfg));
+    assert_eq!(expected, got, "adaptive speculation + swap must not change outputs");
+    assert!(e.metrics.preemptions > 0, "pool pressure must preempt");
+    assert!(e.metrics.spec_rounds > 0, "the controller actually drafted");
+    assert_eq!(e.cache_stats().blocks_used, 0);
+    assert_eq!(e.tier_stats().host_used_blocks, 0, "host tier drains");
+}
+
 /// Acceptance: under a pool-exhausting workload, the host tier drives
 /// tokens-recomputed to ~0 and improves Eq. 12 throughput versus the
 /// drop-and-recompute baseline (the numbers the benches publish in
