@@ -20,10 +20,10 @@ use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
 use llm_coopt::workload::harness::{
-    gain_pct, run_adaptive_spec_compare, run_chunk_compare, run_spec_compare,
-    run_swap_compare, run_trace, write_bench_serve, AdaptiveSpecPoint,
+    gain_pct, run_adaptive_spec_compare, run_chunk_compare, run_router_compare,
+    run_spec_compare, run_swap_compare, run_trace, write_bench_serve, AdaptiveSpecPoint,
 };
-use llm_coopt::workload::TraceSpec;
+use llm_coopt::workload::{MultiTenantSpec, TraceSpec};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("COOPT_BENCH_QUICK").is_ok();
@@ -170,6 +170,60 @@ fn main() -> anyhow::Result<()> {
                 .iter()
                 .map(|p| (p.divergence, p.batch))
                 .collect::<Vec<_>>()
+        ),
+    )?;
+
+    // --- multi-replica routing: the same multi-tenant skewed-prefix
+    // trace placed across N engines by each policy (outputs asserted
+    // token-identical inside the harness; mock + Z100 model)
+    println!("multi-replica routing — cluster Eq. 12 throughput + prefix-hit rate");
+    println!(
+        "{:<16} {:>3} {:>14} {:>11} {:>8} {:>9} {:>6}",
+        "policy", "N", "cluster tok/s", "busy max(s)", "spread", "hit rate", "hits"
+    );
+    let mt_spec = MultiTenantSpec::default();
+    let router_counts = [1usize, 2, 4];
+    let router_rows = run_router_compare(&router_counts, &mt_spec)?;
+    for r in &router_rows {
+        println!(
+            "{:<16} {:>3} {:>12.1}/s {:>11.4} {:>8.3} {:>8.1}% {:>6}",
+            r.req_str("policy")?,
+            r.req_usize("replicas")?,
+            r.req_f64("cluster_throughput_sim")?,
+            r.req_f64("busy_max_s")?,
+            r.req_f64("busy_spread")?,
+            r.req_f64("prefix_hit_rate")? * 100.0,
+            r.req_usize("prefix_hits")?,
+        );
+    }
+    let at = |policy: &str, n: usize| {
+        router_rows.iter().find(|r| {
+            r.req_str("policy").ok() == Some(policy)
+                && r.req_usize("replicas").ok() == Some(n)
+        })
+    };
+    if let (Some(rr), Some(ll), Some(pa)) = (
+        at("round_robin", 4),
+        at("least_loaded", 4),
+        at("prefix_affinity", 4),
+    ) {
+        println!(
+            "N=4: least_loaded {:+.1}% cluster throughput vs round_robin; \
+             prefix_affinity hit rate {:.1}% vs {:.1}%\n",
+            gain_pct(
+                rr.req_f64("cluster_throughput_sim")?,
+                ll.req_f64("cluster_throughput_sim")?
+            ),
+            pa.req_f64("prefix_hit_rate")? * 100.0,
+            rr.req_f64("prefix_hit_rate")? * 100.0,
+        );
+    }
+    write_bench_serve(
+        "multi_replica_routing",
+        &router_rows,
+        &format!(
+            "requests={},tenants={},zipf_s={},seed={:#x},replicas={router_counts:?}",
+            mt_spec.num_requests, mt_spec.tenants, mt_spec.zipf_s, mt_spec.seed
         ),
     )?;
 

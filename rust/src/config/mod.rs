@@ -229,6 +229,55 @@ impl SwapPolicy {
     }
 }
 
+/// How the multi-replica router places incoming requests across its N
+/// engines (a serve-time deployment knob like [`SwapPolicy`]; with one
+/// replica every policy degenerates to the same choice).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouterPolicy {
+    /// rotate over non-draining replicas (the load-blind baseline)
+    RoundRobin,
+    /// lowest load score: estimated outstanding tokens plus queue depth,
+    /// discounted by the replica's measured service speed
+    /// (`tokens_per_step` / `spec_regime` gauges) and inflated by its KV
+    /// pressure (free device/host blocks)
+    #[default]
+    LeastLoaded,
+    /// prefer the replica whose KV cache already holds the prompt's
+    /// leading block-aligned prefix (cluster-level Opt-KV reuse);
+    /// falls back to least-loaded when following affinity would push the
+    /// cross-replica load imbalance above the cost model's threshold,
+    /// so one hot prefix cannot wedge a replica
+    PrefixAffinity,
+}
+
+impl RouterPolicy {
+    pub const ALL: [RouterPolicy; 3] = [
+        RouterPolicy::RoundRobin,
+        RouterPolicy::LeastLoaded,
+        RouterPolicy::PrefixAffinity,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round_robin" => Ok(RouterPolicy::RoundRobin),
+            "least_loaded" => Ok(RouterPolicy::LeastLoaded),
+            "prefix_affinity" => Ok(RouterPolicy::PrefixAffinity),
+            other => Err(anyhow!(
+                "unknown router policy '{other}' \
+                 (expected round_robin|least_loaded|prefix_affinity)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round_robin",
+            RouterPolicy::LeastLoaded => "least_loaded",
+            RouterPolicy::PrefixAffinity => "prefix_affinity",
+        }
+    }
+}
+
 /// Acceptance rule for speculative decoding (draft-and-verify).
 ///
 /// Greedy requests (temperature 0) always verify by exact argmax match
@@ -859,6 +908,15 @@ mod tests {
             assert_eq!(SpecMode::parse(m.name()).unwrap(), m);
         }
         assert!(SpecMode::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn router_policy_knobs() {
+        assert_eq!(RouterPolicy::default(), RouterPolicy::LeastLoaded);
+        for p in RouterPolicy::ALL {
+            assert_eq!(RouterPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RouterPolicy::parse("bogus").is_err());
     }
 
     #[test]

@@ -128,6 +128,20 @@ impl GenRequest {
     }
 }
 
+/// A replica's live load signals (see [`Engine::load_signals`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSignals {
+    /// requests submitted and not yet finished (waiting+running+swapped)
+    pub pending: usize,
+    pub free_device_blocks: usize,
+    pub total_device_blocks: usize,
+    pub free_host_blocks: usize,
+    /// tokens committed per decode/verify round (run-cumulative average)
+    pub tokens_per_step: f64,
+    /// cost-model regime of the last planned decode batch
+    pub gemm_bound: bool,
+}
+
 #[derive(Debug, Clone)]
 pub struct GenResult {
     pub id: SeqId,
@@ -315,6 +329,24 @@ impl<B: Backend> Engine<B> {
     /// Host-tier occupancy (Opt-KV tier manager).
     pub fn tier_stats(&self) -> crate::kvcache::tier::TierStats {
         self.cache.tier_stats()
+    }
+
+    /// Live load signals for the multi-replica router — ONE derivation
+    /// shared by the sync bench/test driver ([`crate::router::Router`])
+    /// and the serving snapshot publisher
+    /// ([`crate::server::MetricsSnapshot`]), so what CI benchmarks and
+    /// what production routes on can never drift apart.
+    pub fn load_signals(&self) -> LoadSignals {
+        let cs = self.cache.stats();
+        let ts = self.cache.tier_stats();
+        LoadSignals {
+            pending: self.num_pending(),
+            free_device_blocks: cs.blocks_total.saturating_sub(cs.blocks_used),
+            total_device_blocks: cs.blocks_total,
+            free_host_blocks: ts.host_capacity_blocks.saturating_sub(ts.host_used_blocks),
+            tokens_per_step: self.metrics.tokens_per_step(),
+            gemm_bound: self.metrics.spec_regime == crate::platform::regime_name(false),
+        }
     }
 
     /// Engine metrics plus cache/tier stats as one JSON object — the

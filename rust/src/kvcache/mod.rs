@@ -886,6 +886,21 @@ fn prefix_hash(prefix: &[u32], chunk: &[u32]) -> u64 {
     h
 }
 
+/// Routing-affinity key of a prompt: the prefix-cache hash of its
+/// *first* full KV block (`block_size` tokens at position 0), computed
+/// with the same content+position hash the sharing index uses.  The
+/// multi-replica router keys on the first block only — requests that
+/// share a system prompt share it, while their divergent tails would
+/// make any longer block-aligned key unique and useless for affinity.
+/// `None` when the prompt doesn't fill one block (nothing sharable to
+/// route on).
+pub fn leading_prefix_hash(tokens: &[u32], block_size: usize) -> Option<u64> {
+    if block_size == 0 || tokens.len() < block_size {
+        return None;
+    }
+    Some(prefix_hash(&[], &tokens[..block_size]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -899,6 +914,26 @@ mod tests {
             max_batch: 4,
             max_seq: 16,
         }
+    }
+
+    #[test]
+    fn leading_prefix_hash_keys_on_first_block_only() {
+        // same first block, different tails -> same affinity key
+        let a = [1u32, 2, 3, 4, 50, 51];
+        let b = [1u32, 2, 3, 4, 90];
+        assert_eq!(leading_prefix_hash(&a, 4), leading_prefix_hash(&b, 4));
+        assert!(leading_prefix_hash(&a, 4).is_some());
+        // a different first block -> a different key
+        let c = [9u32, 2, 3, 4, 50, 51];
+        assert_ne!(leading_prefix_hash(&a, 4), leading_prefix_hash(&c, 4));
+        // too short to fill a block (or degenerate geometry) -> no key
+        assert_eq!(leading_prefix_hash(&[1, 2, 3], 4), None);
+        assert_eq!(leading_prefix_hash(&a, 0), None);
+        // matches the sharing index's hash for the same block
+        assert_eq!(
+            leading_prefix_hash(&a, 4),
+            Some(prefix_hash(&[], &[1, 2, 3, 4]))
+        );
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! | [`platform`] | DCU Z100 memory-hierarchy/roofline cost model (Eqs. 2–4), per-window prefill-chunk costs, PCIe swap-vs-recompute costs |
 //! | [`coordinator`] | the engine: drain prefetches → schedule → commit prefill windows → decode batch → sample → stream → stage swap-ins (async prefetch, one step ahead) |
 //! | [`sampling`] | greedy / temperature / top-k / top-p / MCQ scoring |
+//! | [`router`] | multi-replica front-end: round_robin / least_loaded / prefix_affinity placement over N engines, per-replica drain/health, cluster metrics aggregation |
 //! | [`server`] | hand-rolled HTTP/1.1 front-end + client |
 //! | [`workload`] | ShareGPT-like traces, ARC-sim loader, arrival processes |
 //! | [`eval`] | ARC harness reproducing Tables 1–2 |
@@ -41,6 +42,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod metrics;
 pub mod platform;
+pub mod router;
 pub mod runtime;
 pub mod sampling;
 pub mod scheduler;

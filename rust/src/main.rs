@@ -8,12 +8,15 @@
 //! ```
 
 use anyhow::{bail, Context, Result};
-use llm_coopt::config::{artifacts_dir, opt_config, EngineConfig, SpecMode, SpecPolicy, SwapPolicy};
+use llm_coopt::config::{
+    artifacts_dir, opt_config, EngineConfig, RouterPolicy, SpecMode, SpecPolicy, SwapPolicy,
+};
 use llm_coopt::coordinator::{Engine, GenRequest};
 use llm_coopt::eval;
+use llm_coopt::router::RouterHandle;
 use llm_coopt::runtime::Runtime;
 use llm_coopt::sampling::SamplingParams;
-use llm_coopt::server::{EngineHandle, Server};
+use llm_coopt::server::Server;
 use llm_coopt::util::cli::Cli;
 use llm_coopt::workload::load_mcq_set;
 use llm_coopt::log_info;
@@ -27,6 +30,22 @@ fn main() -> Result<()> {
         .flag("artifacts", "", "artifacts dir (default ./artifacts)")
         .flag("addr", "127.0.0.1:8090", "serve: bind address")
         .flag("workers", "8", "serve: HTTP worker threads")
+        .flag(
+            "replicas",
+            "1",
+            "serve: engine replicas behind the router, each with its own \
+             scheduler, KV cache, and tier manager (1 = the single-engine path)",
+        )
+        .flag(
+            "router-policy",
+            "least_loaded",
+            "serve: request placement across replicas: round_robin, \
+             least_loaded (live queue depth + free device/host KV blocks + \
+             spec_regime/tokens_per_step gauges), or prefix_affinity (route \
+             shared leading prefixes to the replica already holding them, \
+             falling back to least_loaded above the cost model's \
+             load-imbalance threshold)",
+        )
         .flag("prompt", "", "generate: the prompt")
         .flag("max-new-tokens", "32", "generate: tokens to produce")
         .flag("temperature", "0.0", "generate: sampling temperature")
@@ -164,12 +183,20 @@ fn main() -> Result<()> {
         "serve" => {
             let opt = opt_config(args.get("config"))?;
             let model = args.get("model");
+            let replicas = args.get_usize("replicas").max(1);
+            let policy = RouterPolicy::parse(args.get("router-policy"))?;
             let rt = Runtime::new(&dir)?;
-            let mrt = rt.load_model(model, opt)?;
-            log_info!("compiled {model}/{} in {:?}", opt.name, mrt.compile_time);
-            let engine = Engine::new(mrt, engine_cfg(model, opt)?);
-            let handle = EngineHandle::spawn(engine);
-            let server = Server::bind(args.get("addr"), handle, args.get_usize("workers"))?;
+            let mut engines = Vec::with_capacity(replicas);
+            for i in 0..replicas {
+                let mrt = rt.load_model(model, opt)?;
+                if i == 0 {
+                    log_info!("compiled {model}/{} in {:?}", opt.name, mrt.compile_time);
+                }
+                engines.push(Engine::new(mrt, engine_cfg(model, opt)?));
+            }
+            let router = RouterHandle::spawn(engines, policy);
+            let server =
+                Server::bind_router(args.get("addr"), router, args.get_usize("workers"))?;
             server.serve()
         }
         "generate" => {

@@ -671,6 +671,45 @@ impl CostModel {
             flops: gemm_flops + attn_flops,
         }
     }
+
+    /// How much cross-replica load imbalance ([`replica_imbalance`]) the
+    /// router's prefix-affinity policy may cause before it abandons the
+    /// cache-holding replica: the ratio of what one affinity hit saves (a
+    /// one-block prefill window the prompt would otherwise recompute from
+    /// scratch on a cold replica) to what skew costs (one extra decode
+    /// round on the preferred replica before the cluster drains).  A
+    /// cheap decode round relative to the saved prefill tolerates more
+    /// skew; the clamp keeps degenerate geometries inside a sane band.
+    pub fn affinity_imbalance_threshold(&self, opt: &OptConfig) -> f64 {
+        let saved = self.prefill_chunk(self.block_size, 0, opt).total_s;
+        let seq = SeqCostInput {
+            ctx_len: self.block_size * 4,
+            allocated_blocks: 4,
+        };
+        let round = self.decode_step(&[seq], opt, 1, 1).total_s;
+        if round <= 0.0 || !saved.is_finite() {
+            return 1.0;
+        }
+        (saved / round).clamp(0.25, 4.0)
+    }
+}
+
+/// Normalized cross-replica load imbalance: `(max - min) / mean` of the
+/// per-replica load scores; 0.0 for a single replica or an idle cluster.
+/// The router's prefix-affinity fallback compares this (computed as if
+/// the incoming request were placed on the prefix-holding replica)
+/// against [`CostModel::affinity_imbalance_threshold`].
+pub fn replica_imbalance(loads: &[f64]) -> f64 {
+    if loads.len() <= 1 {
+        return 0.0;
+    }
+    let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+    let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+    (max - min) / mean
 }
 
 /// Expected tokens a speculative round commits at per-position acceptance
@@ -1000,5 +1039,25 @@ mod tests {
         }
         // nothing committed => nothing to save
         assert!(!m.swap_beats_recompute(0, 0, &COOPT));
+    }
+
+    #[test]
+    fn replica_imbalance_measures_spread() {
+        assert_eq!(replica_imbalance(&[]), 0.0);
+        assert_eq!(replica_imbalance(&[7.0]), 0.0, "one replica is balanced");
+        assert_eq!(replica_imbalance(&[0.0, 0.0, 0.0]), 0.0, "idle cluster");
+        assert_eq!(replica_imbalance(&[5.0, 5.0, 5.0]), 0.0);
+        // (max - min) / mean: 4 replicas at [3, 1, 1, 3] -> 2 / 2 = 1
+        assert!((replica_imbalance(&[3.0, 1.0, 1.0, 3.0]) - 1.0).abs() < 1e-12);
+        // one wedged replica dominates
+        assert!(replica_imbalance(&[10.0, 0.0]) > 1.9);
+    }
+
+    #[test]
+    fn affinity_threshold_is_finite_and_clamped() {
+        for opt in ALL_CONFIGS {
+            let t = model().with_ctx_scale(8.0).affinity_imbalance_threshold(&opt);
+            assert!((0.25..=4.0).contains(&t), "{}: threshold {t}", opt.name);
+        }
     }
 }

@@ -1,18 +1,31 @@
 //! HTTP/1.1 serving front-end (hand-rolled; tokio/axum unavailable
 //! offline) + a matching client.
 //!
-//! Architecture: one *engine thread* owns the [`Engine`] and runs the
-//! continuous-batching loop; HTTP connections are handled by a
-//! [`ThreadPool`], each request is submitted over an mpsc channel with a
-//! oneshot-style reply channel, so concurrent HTTP requests batch
-//! together inside the engine — the same structure as vLLM's
-//! AsyncLLMEngine front-end.
+//! Architecture: each replica is one *engine thread* owning an
+//! [`Engine`] and running the continuous-batching loop; a
+//! [`crate::router::RouterHandle`] in front fans incoming requests out
+//! across the N replicas with a pluggable placement policy
+//! ([`crate::config::RouterPolicy`]).  HTTP connections are handled by a
+//! [`ThreadPool`], each request is routed and then submitted over the
+//! chosen replica's mpsc channel with a oneshot-style reply channel, so
+//! concurrent HTTP requests batch together inside that engine — the
+//! same structure as vLLM's AsyncLLMEngine front-end, replicated.  The
+//! single-engine [`Server::bind`] path is the N = 1 special case.
+//!
+//! Each engine thread publishes its metrics as an atomically-replaced
+//! [`MetricsSnapshot`] `Arc` stamped with a step sequence number, so the
+//! router's cross-replica aggregation can never observe a torn
+//! mid-update view of any replica.
 //!
 //! Endpoints:
-//!   GET  /health            -> {"status":"ok", ...}
-//!   GET  /metrics           -> engine metrics JSON (Eq. 11/12 fields)
+//!   GET  /health            -> {"status":"ok", "replicas":[...], ...}
+//!   GET  /metrics           -> cluster metrics JSON (Eq. 11/12 fields,
+//!                              flat for N=1) + per-replica views
 //!   POST /v1/generate       -> {"text": ..., "finish": ..., ...}
 //!       body: {"prompt": "...", "max_new_tokens": 16, "temperature": 0.0}
+//!   POST /admin/drain       -> stop routing new requests to a replica
+//!       body: {"replica": 0}     (in-flight requests finish)
+//!   POST /admin/undrain     -> put a drained replica back in rotation
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,6 +37,7 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{Engine, GenRequest, GenResult};
+use crate::router::RouterHandle;
 use crate::runtime::Backend;
 use crate::sampling::SamplingParams;
 use crate::util::json::{self, Object, Value};
@@ -38,10 +52,64 @@ struct Job {
     reply: Sender<Result<GenResult>>,
 }
 
+/// One atomically-published view of a replica's metrics.  The engine
+/// thread replaces the whole `Arc<MetricsSnapshot>` after each step, so
+/// a reader either sees the previous step's snapshot or this one —
+/// never a torn mix — and `seq` records which step produced it (the
+/// router stamps it into the per-replica `/metrics` views).  The typed
+/// gauges are the router's live load signals, extracted engine-side so
+/// routing never has to parse JSON.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// engine steps completed when this snapshot was taken (0 = the
+    /// pre-first-step publish)
+    pub seq: u64,
+    /// the full `GET /metrics` payload (engine metrics + cache/tier stats)
+    pub json: String,
+    /// requests submitted and not yet finished (waiting+running+swapped)
+    pub pending: usize,
+    pub free_device_blocks: usize,
+    pub total_device_blocks: usize,
+    pub free_host_blocks: usize,
+    /// tokens committed per decode/verify round (≥ 1 under speculation)
+    pub tokens_per_step: f64,
+    /// cost-model regime of the last planned decode batch
+    pub gemm_bound: bool,
+}
+
+impl MetricsSnapshot {
+    fn empty() -> Self {
+        MetricsSnapshot {
+            seq: 0,
+            json: "{}".to_string(),
+            pending: 0,
+            free_device_blocks: 0,
+            total_device_blocks: 0,
+            free_host_blocks: 0,
+            tokens_per_step: 0.0,
+            gemm_bound: false,
+        }
+    }
+}
+
+fn snapshot_engine<B: Backend>(engine: &mut Engine<B>, seq: u64) -> MetricsSnapshot {
+    let s = engine.load_signals();
+    MetricsSnapshot {
+        seq,
+        json: engine.stats_json().to_string(),
+        pending: s.pending,
+        free_device_blocks: s.free_device_blocks,
+        total_device_blocks: s.total_device_blocks,
+        free_host_blocks: s.free_host_blocks,
+        tokens_per_step: s.tokens_per_step,
+        gemm_bound: s.gemm_bound,
+    }
+}
+
 /// Handle to the background engine loop.
 pub struct EngineHandle {
     tx: Sender<Job>,
-    metrics_json: Arc<Mutex<String>>,
+    snapshot: Arc<Mutex<Arc<MetricsSnapshot>>>,
     stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -50,9 +118,9 @@ impl EngineHandle {
     /// Take ownership of the engine and run it on a dedicated thread.
     pub fn spawn<B: Backend + Send + 'static>(mut engine: Engine<B>) -> Self {
         let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
-        let metrics_json = Arc::new(Mutex::new("{}".to_string()));
+        let snapshot = Arc::new(Mutex::new(Arc::new(MetricsSnapshot::empty())));
         let stop = Arc::new(AtomicBool::new(false));
-        let mj = Arc::clone(&metrics_json);
+        let mj = Arc::clone(&snapshot);
         let st = Arc::clone(&stop);
         let thread = std::thread::Builder::new()
             .name("coopt-engine".into())
@@ -70,6 +138,12 @@ impl EngineHandle {
                         }
                     };
                 engine.metrics.start_run();
+                let mut seq = 0u64;
+                // publish a pre-first-step snapshot so /metrics (and the
+                // router's load gauges) are valid before any traffic
+                if let Ok(mut m) = mj.lock() {
+                    *m = Arc::new(snapshot_engine(&mut engine, seq));
+                }
                 loop {
                     if st.load(Ordering::Relaxed) {
                         return;
@@ -109,17 +183,18 @@ impl EngineHandle {
                             }
                         }
                     }
+                    // metrics + cache-tier stats for GET /metrics: swap the
+                    // Arc so readers never see a half-written snapshot
+                    seq += 1;
                     if let Ok(mut m) = mj.lock() {
-                        // metrics + cache-tier stats (swap/prefetch counters,
-                        // host pool occupancy) for GET /metrics
-                        *m = engine.stats_json().to_string();
+                        *m = Arc::new(snapshot_engine(&mut engine, seq));
                     }
                 }
             })
             .expect("spawn engine thread");
         EngineHandle {
             tx,
-            metrics_json,
+            snapshot,
             stop,
             thread: Some(thread),
         }
@@ -139,8 +214,18 @@ impl EngineHandle {
             .map_err(|_| anyhow!("engine dropped the request"))?
     }
 
+    /// The latest atomically-published metrics snapshot.
+    pub fn snapshot(&self) -> Arc<MetricsSnapshot> {
+        Arc::clone(&self.snapshot.lock().unwrap())
+    }
+
     pub fn metrics_json(&self) -> String {
-        self.metrics_json.lock().unwrap().clone()
+        self.snapshot().json.clone()
+    }
+
+    /// Whether the engine thread is still running (replica health).
+    pub fn is_alive(&self) -> bool {
+        self.thread.as_ref().map(|t| !t.is_finished()).unwrap_or(false)
     }
 }
 
@@ -160,20 +245,26 @@ impl Drop for EngineHandle {
 pub struct Server {
     pub addr: std::net::SocketAddr,
     listener: TcpListener,
-    handle: Arc<EngineHandle>,
+    router: Arc<RouterHandle>,
     pool: ThreadPool,
     stop: Arc<AtomicBool>,
 }
 
 impl Server {
-    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port) over a
+    /// single engine — the N = 1 special case of [`Server::bind_router`].
     pub fn bind(addr: &str, handle: EngineHandle, workers: usize) -> Result<Self> {
+        Self::bind_router(addr, RouterHandle::single(handle), workers)
+    }
+
+    /// Bind over a multi-replica router (`--replicas N`).
+    pub fn bind_router(addr: &str, router: RouterHandle, workers: usize) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         listener.set_nonblocking(true)?;
         Ok(Server {
             addr: listener.local_addr()?,
             listener,
-            handle: Arc::new(handle),
+            router: Arc::new(router),
             pool: ThreadPool::new(workers),
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -185,16 +276,21 @@ impl Server {
 
     /// Accept loop; returns when the stop flag is set.
     pub fn serve(&self) -> Result<()> {
-        crate::log_info!("serving on http://{}", self.addr);
+        crate::log_info!(
+            "serving on http://{} ({} replica(s), {} routing)",
+            self.addr,
+            self.router.num_replicas(),
+            self.router.policy_name()
+        );
         loop {
             if self.stop.load(Ordering::Relaxed) {
                 return Ok(());
             }
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    let handle = Arc::clone(&self.handle);
+                    let router = Arc::clone(&self.router);
                     self.pool.execute(move || {
-                        let _ = handle_connection(stream, &handle);
+                        let _ = handle_connection(stream, &router);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -206,7 +302,7 @@ impl Server {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, handle: &EngineHandle) -> Result<()> {
+fn handle_connection(mut stream: TcpStream, handle: &RouterHandle) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
 
@@ -245,16 +341,40 @@ fn handle_connection(mut stream: TcpStream, handle: &EngineHandle) -> Result<()>
     Ok(())
 }
 
-fn route(method: &str, path: &str, body: &str, handle: &EngineHandle) -> (&'static str, String) {
+fn route(method: &str, path: &str, body: &str, handle: &RouterHandle) -> (&'static str, String) {
     match (method, path) {
         ("GET", "/health") => {
             let mut o = Object::new();
             o.insert("status", "ok");
             o.insert("service", "llm-coopt");
+            o.insert("num_replicas", handle.num_replicas());
+            o.insert("router_policy", handle.policy_name());
+            let reps: Vec<Value> = handle
+                .status()
+                .into_iter()
+                .map(|s| {
+                    let mut r = Object::new();
+                    r.insert("replica", s.replica);
+                    r.insert("healthy", s.healthy);
+                    r.insert("draining", s.draining);
+                    r.insert("in_flight", s.in_flight);
+                    Value::Object(r)
+                })
+                .collect();
+            o.insert("replicas", Value::Array(reps));
             ("200 OK", Value::Object(o).to_string())
         }
         ("GET", "/metrics") => ("200 OK", handle.metrics_json()),
         ("POST", "/v1/generate") => match generate_route(body, handle) {
+            Ok(p) => ("200 OK", p),
+            Err(e) if is_unavailable(&e) => ("503 Service Unavailable", error_json(&e)),
+            Err(e) => ("400 Bad Request", error_json(&e)),
+        },
+        ("POST", "/admin/drain") => match drain_route(body, handle, true) {
+            Ok(p) => ("200 OK", p),
+            Err(e) => ("400 Bad Request", error_json(&e)),
+        },
+        ("POST", "/admin/undrain") => match drain_route(body, handle, false) {
             Ok(p) => ("200 OK", p),
             Err(e) => ("400 Bad Request", error_json(&e)),
         },
@@ -262,7 +382,30 @@ fn route(method: &str, path: &str, body: &str, handle: &EngineHandle) -> (&'stat
     }
 }
 
-fn generate_route(body: &str, handle: &EngineHandle) -> Result<String> {
+/// Mark a replica drained (no new requests routed to it; in-flight ones
+/// finish) or put it back in rotation.  `replica` defaults to 0 — the
+/// only replica — when absent; a present-but-malformed value is an
+/// error, never a silent drain of replica 0.
+fn drain_route(body: &str, handle: &RouterHandle, draining: bool) -> Result<String> {
+    let replica = if body.trim().is_empty() {
+        0
+    } else {
+        let v = json::parse(body).context("invalid JSON body")?;
+        match v.get("replica") {
+            None => 0,
+            Some(r) => r
+                .as_usize()
+                .ok_or_else(|| anyhow!("\"replica\" must be a non-negative integer"))?,
+        }
+    };
+    handle.set_draining(replica, draining)?;
+    let mut o = Object::new();
+    o.insert("replica", replica);
+    o.insert("draining", draining);
+    Ok(Value::Object(o).to_string())
+}
+
+fn generate_route(body: &str, handle: &RouterHandle) -> Result<String> {
     let v = json::parse(body).context("invalid JSON body")?;
     let prompt = v.req_str("prompt")?.to_string();
     if prompt.is_empty() {
@@ -293,6 +436,18 @@ fn generate_route(body: &str, handle: &EngineHandle) -> Result<String> {
     o.insert("ttft_s", result.ttft_s);
     o.insert("sim_time_s", result.sim_time_s);
     Ok(Value::Object(o).to_string())
+}
+
+/// Server-side failures on the generate path — nothing routable, or the
+/// chosen replica's engine thread died under the request — are 503 so
+/// clients retry; everything else (bad JSON, empty prompt, oversized
+/// prompt) stays a client error.
+fn is_unavailable(e: &anyhow::Error) -> bool {
+    let s = e.to_string();
+    s.contains("no routable replica")
+        || s.contains("engine thread gone")
+        || s.contains("engine dropped the request")
+        || s.contains("engine error")
 }
 
 fn error_json(e: &anyhow::Error) -> String {
@@ -485,6 +640,140 @@ mod tests {
         for r in results {
             assert_eq!(r.unwrap(), 5);
         }
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn multi_replica_metrics_drain_and_unavailable() {
+        use crate::config::RouterPolicy;
+        let engines = vec![
+            Engine::new(MockBackend::new(), EngineConfig::new("llama-7b-sim", COOPT)),
+            Engine::new(MockBackend::new(), EngineConfig::new("llama-7b-sim", COOPT)),
+        ];
+        let router = RouterHandle::spawn(engines, RouterPolicy::RoundRobin);
+        let server = Server::bind_router("127.0.0.1:0", router, 4).unwrap();
+        let client = Client::new(server.addr.to_string());
+        let stop = server.stop_flag();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+
+        // health reports per-replica status
+        let (code, h) = client.get("/health").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(h.req_usize("num_replicas").unwrap(), 2);
+        let reps = h.req_array("replicas").unwrap();
+        assert_eq!(reps.len(), 2);
+        assert!(reps[0].req_bool("healthy").unwrap());
+
+        // two sequential requests round-robin across both replicas
+        for i in 0..2 {
+            let v = client.generate(&format!("replica tour {i}"), 3).unwrap();
+            assert_eq!(v.req_usize("generated_tokens").unwrap(), 3);
+        }
+
+        // drain replica 0; the next requests all land on replica 1
+        let mut body = Object::new();
+        body.insert("replica", 0usize);
+        let (code, d) = client
+            .post("/admin/drain", &Value::Object(body.clone()))
+            .unwrap();
+        assert_eq!(code, 200);
+        assert!(d.req_bool("draining").unwrap());
+        let (_, h) = client.get("/health").unwrap();
+        assert!(h.req_array("replicas").unwrap()[0].req_bool("draining").unwrap());
+        for i in 0..2 {
+            client.generate(&format!("drained era {i}"), 3).unwrap();
+        }
+
+        // aggregated /metrics: cluster sums + seq-stamped replica views
+        // (snapshots publish after each engine's next step; poll briefly)
+        let mut split = (0usize, 0usize);
+        for _ in 0..200 {
+            let (code, m) = client.get("/metrics").unwrap();
+            assert_eq!(code, 200);
+            let reps = m.req_array("replicas").unwrap();
+            let tok = |i: usize| {
+                reps[i]
+                    .req("metrics")
+                    .and_then(|x| x.req_usize("tokens_generated"))
+                    .unwrap_or(0)
+            };
+            split = (tok(0), tok(1));
+            if split.0 + split.1 >= 12 {
+                assert_eq!(m.req_usize("tokens_generated").unwrap(), 12);
+                assert_eq!(m.req_usize("num_replicas").unwrap(), 2);
+                assert_eq!(m.req_str("router_policy").unwrap(), "round_robin");
+                assert!(reps[0].req_usize("seq").unwrap() > 0);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(split, (3, 9), "drain steered traffic to replica 1");
+
+        // drain the last replica: generate must 503, not wedge
+        let mut body1 = Object::new();
+        body1.insert("replica", 1usize);
+        client.post("/admin/drain", &Value::Object(body1)).unwrap();
+        let mut req = Object::new();
+        req.insert("prompt", "nowhere to go");
+        let (code, e) = client.post("/v1/generate", &Value::Object(req)).unwrap();
+        assert_eq!(code, 503);
+        assert!(e.req_str("error").unwrap().contains("no routable replica"));
+
+        // undrain restores service
+        let (code, _) = client
+            .post("/admin/undrain", &Value::Object(body))
+            .unwrap();
+        assert_eq!(code, 200);
+        let v = client.generate("back online", 2).unwrap();
+        assert_eq!(v.req_usize("generated_tokens").unwrap(), 2);
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn unavailable_classification_tracks_engine_error_strings() {
+        // these messages originate in EngineHandle::generate, the engine
+        // thread's error fan-out, and RouterHandle::generate; this test
+        // is the link that fails if any of them is reworded without
+        // updating is_unavailable (a 503 regressing to 400 would stop
+        // clients from retrying a server-side failure)
+        for msg in [
+            "no routable replica (all draining or dead)",
+            "engine thread gone",
+            "engine dropped the request",
+            "engine error: stuck: 3 waiting requests",
+        ] {
+            assert!(is_unavailable(&anyhow!("{msg}")), "{msg} must be 503");
+        }
+        for msg in ["invalid JSON body", "prompt must be non-empty", "empty prompt"] {
+            assert!(!is_unavailable(&anyhow!("{msg}")), "{msg} must stay 400");
+        }
+    }
+
+    #[test]
+    fn single_replica_metrics_snapshot_is_seq_stamped() {
+        // the N = 1 path keeps the flat payload and gains the replicas
+        // array with a monotone snapshot sequence number
+        let (server, client) = spawn_server();
+        let stop = server.stop_flag();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+        client.generate("seq stamp", 3).unwrap();
+        let mut last_seq = 0usize;
+        for _ in 0..100 {
+            let (_, m) = client.get("/metrics").unwrap();
+            let reps = m.req_array("replicas").unwrap();
+            assert_eq!(reps.len(), 1);
+            let seq = reps[0].req_usize("seq").unwrap();
+            assert!(seq >= last_seq, "snapshot seq went backwards");
+            last_seq = seq;
+            if m.req_usize("tokens_generated").unwrap_or(0) >= 3 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(last_seq > 0, "engine never published a post-step snapshot");
         stop.store(true, Ordering::Relaxed);
         srv.join().unwrap();
     }

@@ -9,7 +9,7 @@ use crate::coordinator::{Engine, GenRequest};
 use crate::platform::CostModel;
 use crate::runtime::{Backend, Runtime};
 use crate::util::json::{Object, Value};
-use crate::workload::{sharegpt_trace, TraceSpec};
+use crate::workload::{multi_tenant_trace, sharegpt_trace, MultiTenantSpec, TraceSpec};
 
 /// One row of Fig. 6 / Fig. 7.
 #[derive(Debug, Clone)]
@@ -576,6 +576,129 @@ pub fn run_adaptive_spec_compare(
                     .collect();
                 o.insert("k_trace", Value::Array(trace));
             }
+            rows.push(Value::Object(o));
+        }
+    }
+    Ok(rows)
+}
+
+/// Multi-replica routing comparison over the deterministic mock backend
+/// (runs without artifacts): the same multi-tenant skewed-prefix trace
+/// is routed across N replicas (for each N in `replica_counts`) under
+/// each [`crate::config::RouterPolicy`].  Every run is asserted
+/// token-identical to the first (greedy + ignore_eos; engine outputs are
+/// placement-invariant, so routing must never change what a request
+/// gets back).  The deltas are:
+///
+/// * **cluster Eq. 12 throughput** — total generated tokens over the
+///   busiest replica's simulated busy seconds (replicas run in
+///   parallel, so the slowest one sets the cluster's finishing time);
+/// * **per-replica spread** — [`crate::platform::replica_imbalance`] of
+///   the busy seconds and of the decode-batch occupancy gauges;
+/// * **cluster prefix-hit rate** — reused blocks over the total full
+///   prompt blocks submitted (the same denominator for every policy, so
+///   rates compare directly).
+pub fn run_router_compare(
+    replica_counts: &[usize],
+    spec: &MultiTenantSpec,
+) -> Result<Vec<Value>> {
+    use crate::config::{RouterPolicy, COOPT};
+    use crate::platform::replica_imbalance;
+    use crate::router::Router;
+    use crate::runtime::mock::MockBackend;
+    use crate::tokenizer::Tokenizer;
+
+    let trace = multi_tenant_trace(spec);
+    // the hit-rate denominator is policy- and N-invariant: full prompt
+    // blocks submitted, computed once over the trace
+    let tokenizer = Tokenizer::new();
+    let block_size = MockBackend::new().geometry().block_size;
+    let opportunities: usize = trace
+        .iter()
+        .map(|req| tokenizer.encode(&req.prompt, true, false).len() / block_size)
+        .sum();
+    let mut baseline: Option<Vec<Vec<u32>>> = None;
+    let mut rows = Vec::new();
+    for &n in replica_counts {
+        for policy in RouterPolicy::ALL {
+            let engines: Vec<Engine<MockBackend>> = (0..n)
+                .map(|_| {
+                    Engine::new(
+                        MockBackend::new().with_opt(COOPT),
+                        EngineConfig::new("llama-7b-sim", COOPT),
+                    )
+                })
+                .collect();
+            let mut router = Router::new(engines, policy);
+            for req in &trace {
+                router.submit(GenRequest {
+                    prompt: req.prompt.clone(),
+                    max_new_tokens: req.max_new_tokens,
+                    sampling: req.sampling,
+                    // fixed token counts across policies => clean deltas
+                    ignore_eos: true,
+                })?;
+            }
+            let results = router.run_to_completion()?;
+            let outs: Vec<Vec<u32>> = results.iter().map(|r| r.result.tokens.clone()).collect();
+            match &baseline {
+                None => baseline = Some(outs),
+                Some(base) => {
+                    if *base != outs {
+                        anyhow::bail!(
+                            "routing changed outputs at replicas={n} policy={}",
+                            policy.name()
+                        );
+                    }
+                }
+            }
+            let mut routed_counts = vec![0usize; n];
+            for r in &results {
+                routed_counts[r.replica] += 1;
+            }
+            let mut busy: Vec<f64> = Vec::with_capacity(n);
+            let mut occupancy: Vec<f64> = Vec::with_capacity(n);
+            let mut tokens = 0u64;
+            let mut hits = 0u64;
+            for e in router.replicas() {
+                let m = &e.metrics;
+                busy.push(m.sim_prefill_s + m.sim_decode_s + m.sim_swap_blocked_s);
+                occupancy.push(m.decode_batch_occupancy());
+                tokens += m.tokens_generated;
+                hits += e.cache_stats().prefix_hits;
+            }
+            let busy_max = busy.iter().cloned().fold(0.0f64, f64::max);
+            let mut o = Object::new();
+            o.insert("policy", policy.name());
+            o.insert("replicas", n);
+            o.insert("requests", trace.len());
+            o.insert("tokens", tokens as usize);
+            o.insert(
+                "cluster_throughput_sim",
+                if busy_max > 0.0 {
+                    tokens as f64 / busy_max
+                } else {
+                    0.0
+                },
+            );
+            o.insert("busy_max_s", busy_max);
+            o.insert("busy_spread", replica_imbalance(&busy));
+            o.insert("occupancy_spread", replica_imbalance(&occupancy));
+            o.insert("prefix_hits", hits as usize);
+            o.insert("prefix_block_opportunities", opportunities);
+            o.insert(
+                "prefix_hit_rate",
+                if opportunities > 0 {
+                    hits as f64 / opportunities as f64
+                } else {
+                    0.0
+                },
+            );
+            o.insert("token_identical", true);
+            o.insert(
+                "routed",
+                Value::Array(routed_counts.into_iter().map(Value::from).collect()),
+            );
             rows.push(Value::Object(o));
         }
     }

@@ -111,6 +111,99 @@ pub fn sharegpt_trace(spec: &TraceSpec) -> Vec<TraceRequest> {
         .collect()
 }
 
+/// Multi-tenant skewed-prefix trace parameters — the workload
+/// multi-replica routing policies differentiate on.  Each tenant owns a
+/// shared system prompt (a block-aligned prefix every one of its
+/// requests starts with, which prefix-affinity routing can colocate),
+/// tenant popularity is Zipfian, and per-request tail/response lengths
+/// are heavy-tailed log-normals (the skew load-aware routing exists to
+/// absorb — round-robin stacks the whales).
+#[derive(Debug, Clone)]
+pub struct MultiTenantSpec {
+    pub num_requests: usize,
+    pub tenants: usize,
+    /// Zipf exponent of tenant popularity (tenant 0 is the hottest)
+    pub zipf_s: f64,
+    /// per-tenant system prompt length band in bytes; the hottest
+    /// tenants get the longest prompts (more sharable full blocks)
+    pub system_prompt_min: usize,
+    pub system_prompt_max: usize,
+    /// log-normal user-turn tail appended after the system prompt
+    pub tail_mu: f64,
+    pub tail_sigma: f64,
+    pub min_tail: usize,
+    pub max_tail: usize,
+    /// log-normal response-length cap
+    pub response_mu: f64,
+    pub response_sigma: f64,
+    pub min_new: usize,
+    pub max_new: usize,
+    /// mean arrival rate (req/s); 0 = all at t=0 (offered-load mode)
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for MultiTenantSpec {
+    fn default() -> Self {
+        // sized to the sim geometry: prompt ≤ 64 + 1 + 48 + BOS = 114
+        // ≤ max_seq 128, prompt + response ≤ 154 ≤ max_context 160
+        MultiTenantSpec {
+            num_requests: 48,
+            tenants: 12,
+            zipf_s: 1.1,
+            system_prompt_min: 31,
+            system_prompt_max: 63,
+            tail_mu: 3.0,
+            tail_sigma: 0.8,
+            min_tail: 4,
+            max_tail: 48,
+            response_mu: 2.9,
+            response_sigma: 0.9,
+            min_new: 4,
+            max_new: 40,
+            arrival_rate: 0.0,
+            seed: 0xA117,
+        }
+    }
+}
+
+/// Generate a deterministic multi-tenant trace from the spec.
+pub fn multi_tenant_trace(spec: &MultiTenantSpec) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(spec.seed);
+    let denom = spec.tenants.saturating_sub(1).max(1);
+    let sys_prompts: Vec<String> = (0..spec.tenants)
+        .map(|t| {
+            // hottest tenant (rank 0) gets the longest shared prefix;
+            // the tenant marker keeps first blocks distinct across
+            // tenants, so affinity keys never collide
+            let len = spec.system_prompt_max
+                - (spec.system_prompt_max - spec.system_prompt_min) * t / denom;
+            let prefix = format!("tenant{t} ");
+            let body = synth_text(&mut rng, len.saturating_sub(prefix.len()).max(1));
+            format!("{prefix}{body}")
+        })
+        .collect();
+    let mut t_arr = 0.0f64;
+    (0..spec.num_requests)
+        .map(|_| {
+            if spec.arrival_rate > 0.0 {
+                t_arr += rng.exponential(spec.arrival_rate);
+            }
+            let tenant = rng.zipf(spec.tenants, spec.zipf_s);
+            let tail = (rng.lognormal(spec.tail_mu, spec.tail_sigma) as usize)
+                .clamp(spec.min_tail, spec.max_tail);
+            let new = (rng.lognormal(spec.response_mu, spec.response_sigma) as usize)
+                .clamp(spec.min_new, spec.max_new);
+            TraceRequest {
+                arrival_s: t_arr,
+                prompt: format!("{} {}", sys_prompts[tenant], synth_text(&mut rng, tail)),
+                max_new_tokens: new,
+                sampling: SamplingParams::default(),
+            }
+        })
+        .collect()
+}
+
 /// Deterministic pseudo-text of ~`len` bytes (byte-level tokens = bytes).
 fn synth_text(rng: &mut Rng, len: usize) -> String {
     const WORDS: [&str; 16] = [
@@ -239,6 +332,60 @@ mod tests {
             }
         }
         assert!(shared > 10, "found {shared} shared-prefix prompts");
+    }
+
+    #[test]
+    fn multi_tenant_trace_is_deterministic_and_bounded() {
+        let spec = MultiTenantSpec::default();
+        let a = multi_tenant_trace(&spec);
+        let b = multi_tenant_trace(&spec);
+        assert_eq!(a.len(), spec.num_requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        for r in &a {
+            // fits the sim geometry with BOS and the full response
+            assert!(r.prompt.len() + 1 <= 128, "prompt {} too long", r.prompt.len());
+            assert!(r.prompt.len() + 1 + r.max_new_tokens <= 160);
+            assert!((spec.min_new..=spec.max_new).contains(&r.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn multi_tenant_popularity_is_zipfian_with_shared_prefixes() {
+        let spec = MultiTenantSpec {
+            num_requests: 200,
+            ..Default::default()
+        };
+        let trace = multi_tenant_trace(&spec);
+        // count requests per tenant via the distinct tenant markers
+        let mut counts = vec![0usize; spec.tenants];
+        for r in &trace {
+            let t: usize = r
+                .prompt
+                .strip_prefix("tenant")
+                .and_then(|s| s.split(' ').next())
+                .and_then(|s| s.parse().ok())
+                .expect("tenant marker");
+            counts[t] += 1;
+        }
+        assert!(counts[0] > counts[spec.tenants - 1], "head tenant hottest: {counts:?}");
+        assert!(counts[0] > spec.num_requests / spec.tenants, "skewed, not uniform");
+        // same-tenant requests share a multi-block prefix (>= 31 bytes of
+        // system prompt), different tenants diverge inside block 0
+        let same: Vec<&TraceRequest> = trace
+            .iter()
+            .filter(|r| r.prompt.starts_with("tenant0 "))
+            .collect();
+        assert!(same.len() >= 2);
+        let common = same[0]
+            .prompt
+            .bytes()
+            .zip(same[1].prompt.bytes())
+            .take_while(|(a, b)| a == b)
+            .count();
+        assert!(common >= 31, "shared system prompt, got {common} bytes");
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Property + acceptance tests for multi-replica routing.
+//!
+//! The contract under test: **routing is semantically invisible** — for
+//! every routing policy and replica count, an N-replica router returns
+//! token-identical per-request outputs to a single engine under greedy
+//! sampling, in submission order.  Placement may move a request to any
+//! replica (and with it the cluster's throughput and prefix-hit
+//! profile), but never what the request gets back.  The acceptance test
+//! pins the bench gates: on the default skewed multi-tenant trace at
+//! N = 4, least_loaded beats round_robin on cluster Eq. 12 throughput
+//! and prefix_affinity beats both on the cluster prefix-hit rate.
+
+use llm_coopt::config::{EngineConfig, RouterPolicy, COOPT};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::router::Router;
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::util::quickprop::{check, gens};
+use llm_coopt::workload::harness::run_router_compare;
+use llm_coopt::workload::MultiTenantSpec;
+
+fn mock_engine() -> Engine<MockBackend> {
+    Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    )
+}
+
+/// Property: 40 random multi-tenant workloads, each checked across all
+/// three policies at N ∈ {1, 2, 3} — 360 cluster runs against their
+/// single-engine reference outputs.
+#[test]
+fn routing_is_token_identical_to_single_engine() {
+    check(
+        40,
+        gens::pair(gens::vec(gens::usize_to(11), 1..=10), gens::usize_to(1000)),
+        |&(ref profile, seed): &(Vec<usize>, usize)| {
+            // each profile entry is one request: a tenant-shared prefix
+            // (exercises affinity keys) plus a unique tail, and a small
+            // per-request decode budget
+            let reqs: Vec<GenRequest> = profile
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| {
+                    let tenant = p % 3;
+                    GenRequest::greedy(
+                        format!(
+                            "tenantprop{tenant} {} tail {seed} {i} {}",
+                            "s".repeat(20 + 2 * tenant),
+                            "y".repeat(p)
+                        ),
+                        2 + (p + seed) % 6,
+                    )
+                })
+                .collect();
+            let mut single = mock_engine();
+            let base = single.generate(reqs.clone()).unwrap();
+            for n in [1usize, 2, 3] {
+                for policy in RouterPolicy::ALL {
+                    let engines: Vec<Engine<MockBackend>> =
+                        (0..n).map(|_| mock_engine()).collect();
+                    let mut router = Router::new(engines, policy);
+                    for r in &reqs {
+                        router.submit(r.clone()).unwrap();
+                    }
+                    let got = router.run_to_completion().unwrap();
+                    if got.len() != base.len() {
+                        return false;
+                    }
+                    for (a, b) in base.iter().zip(&got) {
+                        if a.tokens != b.result.tokens
+                            || a.finish != b.result.finish
+                            || b.replica >= n
+                        {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Acceptance: the CI bench gates hold on the default trace, so `cargo
+/// test` catches a routing regression without running the bench.
+#[test]
+fn router_compare_gates_hold_on_default_trace() {
+    let rows = run_router_compare(&[1, 4], &MultiTenantSpec::default()).unwrap();
+    let at = |policy: &str, n: usize| {
+        rows.iter()
+            .find(|r| {
+                r.req_str("policy").unwrap() == policy && r.req_usize("replicas").unwrap() == n
+            })
+            .unwrap()
+    };
+    let rr = at("round_robin", 4);
+    let ll = at("least_loaded", 4);
+    let pa = at("prefix_affinity", 4);
+    // Eq. 12: balancing the makespan raises cluster throughput
+    assert!(
+        ll.req_f64("cluster_throughput_sim").unwrap()
+            > rr.req_f64("cluster_throughput_sim").unwrap(),
+        "least_loaded {:.2} tok/s must beat round_robin {:.2}",
+        ll.req_f64("cluster_throughput_sim").unwrap(),
+        rr.req_f64("cluster_throughput_sim").unwrap()
+    );
+    assert!(
+        ll.req_f64("busy_spread").unwrap() <= rr.req_f64("busy_spread").unwrap(),
+        "least_loaded must not spread busy time worse than round_robin"
+    );
+    // placement-aware cache reuse: affinity wins the cluster hit rate
+    assert!(
+        pa.req_f64("prefix_hit_rate").unwrap() > rr.req_f64("prefix_hit_rate").unwrap(),
+        "prefix_affinity {:.3} hit rate must beat round_robin {:.3}",
+        pa.req_f64("prefix_hit_rate").unwrap(),
+        rr.req_f64("prefix_hit_rate").unwrap()
+    );
+    assert!(
+        pa.req_f64("prefix_hit_rate").unwrap() >= ll.req_f64("prefix_hit_rate").unwrap()
+    );
+    // N = 1 degeneracy: one replica makes every policy the same cluster
+    let r1 = at("round_robin", 1);
+    for p in ["least_loaded", "prefix_affinity"] {
+        let o = at(p, 1);
+        assert_eq!(
+            o.req_usize("prefix_hits").unwrap(),
+            r1.req_usize("prefix_hits").unwrap()
+        );
+        assert!(
+            (o.req_f64("cluster_throughput_sim").unwrap()
+                - r1.req_f64("cluster_throughput_sim").unwrap())
+            .abs()
+                < 1e-9
+        );
+    }
+    // the harness bails on any output divergence; the flag records it
+    for r in &rows {
+        assert!(r.req_bool("token_identical").unwrap());
+    }
+}
