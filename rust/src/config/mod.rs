@@ -278,6 +278,76 @@ impl RouterPolicy {
     }
 }
 
+/// What phases of work a replica accepts in a disaggregated
+/// prefill/decode (PD) cluster.  A serve-time deployment knob like
+/// [`RouterPolicy`]: the default (`Mixed` everywhere) keeps PR 5's
+/// uniform cluster, and a single engine ignores its role entirely.
+///
+/// A `Prefill` replica runs prompts to prefill completion and then
+/// hands the sequence off to a decode-capable replica, migrating its
+/// KV blocks through the host tier when the cost model says the PCIe
+/// round trip beats re-prefilling on the destination.  A `Decode`
+/// replica is kept out of the prefill-heavy placement set so long
+/// prompts cannot stall its inter-token latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplicaRole {
+    /// runs prefill, hands sequences off at prefill completion
+    Prefill,
+    /// preferred target for decode work and migrated sequences
+    Decode,
+    /// accepts both phases (the uniform-cluster baseline and the
+    /// fallback when migration doesn't pay)
+    #[default]
+    Mixed,
+}
+
+impl ReplicaRole {
+    pub const ALL: [ReplicaRole; 3] = [
+        ReplicaRole::Prefill,
+        ReplicaRole::Decode,
+        ReplicaRole::Mixed,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "prefill" => Ok(ReplicaRole::Prefill),
+            "decode" => Ok(ReplicaRole::Decode),
+            "mixed" => Ok(ReplicaRole::Mixed),
+            other => Err(anyhow!(
+                "unknown replica role '{other}' (expected prefill|decode|mixed)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplicaRole::Prefill => "prefill",
+            ReplicaRole::Decode => "decode",
+            ReplicaRole::Mixed => "mixed",
+        }
+    }
+
+    /// Whether this role accepts new prefill-phase placements.
+    pub fn accepts_prefill(&self) -> bool {
+        !matches!(self, ReplicaRole::Decode)
+    }
+
+    /// Whether this role can own a sequence through its decode phase.
+    pub fn accepts_decode(&self) -> bool {
+        !matches!(self, ReplicaRole::Prefill)
+    }
+}
+
+/// Parse a comma-separated role list (`--replica-roles`), e.g.
+/// `prefill,decode,mixed`.  An empty string means no role overrides
+/// (every replica stays `Mixed`).
+pub fn parse_replica_roles(s: &str) -> Result<Vec<ReplicaRole>> {
+    if s.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(',').map(|r| ReplicaRole::parse(r.trim())).collect()
+}
+
 /// Acceptance rule for speculative decoding (draft-and-verify).
 ///
 /// Greedy requests (temperature 0) always verify by exact argmax match
@@ -461,6 +531,10 @@ pub struct EngineConfig {
     /// == 0` keeps the one-token decode path.  Backends without
     /// draft/verify support degrade to one-token decode at construction.
     pub spec: SpecConfig,
+    /// PD disaggregation: what phases this engine accepts when it runs
+    /// behind the router (`Mixed` = the uniform-cluster default; a
+    /// standalone engine ignores its role)
+    pub role: ReplicaRole,
     /// default sampling params
     pub max_new_tokens: usize,
     pub temperature: f64,
@@ -482,6 +556,7 @@ impl EngineConfig {
             swap_policy: SwapPolicy::Auto,
             prefetch_depth: 1,
             spec: SpecConfig::default(),
+            role: ReplicaRole::Mixed,
             max_new_tokens: 32,
             temperature: 0.0,
             top_k: 0,
@@ -563,6 +638,12 @@ impl EngineConfig {
     /// platform model's draft-weight restream cost).
     pub fn with_spec_shrink(mut self, shrink: f64) -> Self {
         self.spec.shrink = shrink.clamp(0.01, 1.0);
+        self
+    }
+
+    /// Assign this engine's PD role (`--replica-roles`).
+    pub fn with_role(mut self, role: ReplicaRole) -> Self {
+        self.role = role;
         self
     }
 }
@@ -917,6 +998,35 @@ mod tests {
             assert_eq!(RouterPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(RouterPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn replica_role_knobs() {
+        assert_eq!(ReplicaRole::default(), ReplicaRole::Mixed);
+        for r in ReplicaRole::ALL {
+            assert_eq!(ReplicaRole::parse(r.name()).unwrap(), r);
+        }
+        assert!(ReplicaRole::parse("bogus").is_err());
+        // phase admission matrix
+        assert!(ReplicaRole::Prefill.accepts_prefill());
+        assert!(!ReplicaRole::Prefill.accepts_decode());
+        assert!(!ReplicaRole::Decode.accepts_prefill());
+        assert!(ReplicaRole::Decode.accepts_decode());
+        assert!(ReplicaRole::Mixed.accepts_prefill());
+        assert!(ReplicaRole::Mixed.accepts_decode());
+        // engines default to mixed and opt in per-deployment
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        assert_eq!(cfg.role, ReplicaRole::Mixed);
+        let cfg = cfg.with_role(ReplicaRole::Prefill);
+        assert_eq!(cfg.role, ReplicaRole::Prefill);
+        // role-list parsing for --replica-roles
+        let roles = parse_replica_roles("prefill, decode,mixed").unwrap();
+        assert_eq!(
+            roles,
+            vec![ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed]
+        );
+        assert!(parse_replica_roles("").unwrap().is_empty());
+        assert!(parse_replica_roles("prefill,bogus").is_err());
     }
 
     #[test]

@@ -76,6 +76,21 @@
 //! stays [`verify_token`], so greedy adaptive speculation remains
 //! token-for-token identical to one-token decode while k moves.
 //!
+//! **Disaggregated prefill/decode (PD) replicas.**  With
+//! [`crate::config::ReplicaRole::Prefill`] the engine parks every prompt
+//! whose final window just sampled its first token in the scheduler's
+//! `Migrating` state instead of decoding it locally
+//! ([`Engine::take_handoff_ready`]); the router packages it
+//! ([`Engine::make_handoff`]) — KV blocks staged through transient host
+//! slots into portable payloads when the cost model prices the PCIe
+//! round trip under a re-prefill of the committed prefix, a token-only
+//! envelope otherwise — and re-admits it on a decode-capable replica at
+//! its exact decode offset ([`Engine::migrate_in_seq`]).  Both paths are
+//! token-for-token identical to an unconstrained single replica: the
+//! sampled-but-undecoded tail token travels in the envelope and is never
+//! re-sampled (a re-prefill window ends one position before it, so the
+//! final-window sampling cannot re-run).
+//!
 //! The engine is generic over [`Backend`] so the whole L3 logic is unit-
 //! tested against the contract-checking mock without artifacts.
 
@@ -84,7 +99,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::config::{EngineConfig, SpecMode, SwapPolicy};
+use crate::config::{EngineConfig, ReplicaRole, SpecMode, SwapPolicy};
 use crate::kvcache::{CacheManager, SeqId};
 use crate::metrics::{EngineMetrics, RequestMetrics};
 use crate::platform::{CostModel, SeqCostInput};
@@ -140,6 +155,43 @@ pub struct LoadSignals {
     pub tokens_per_step: f64,
     /// cost-model regime of the last planned decode batch
     pub gemm_bound: bool,
+}
+
+/// One KV block's payload travelling in a [`SeqHandoff`] envelope.
+#[derive(Debug, Clone)]
+pub struct BlockExport {
+    /// opaque backend payload handle, staged through a host slot by
+    /// [`crate::runtime::Backend::export_block`]
+    pub payload: u64,
+    /// content+position hash when the block was full and prefix-indexed
+    /// on the source — lets the destination reuse an identical block it
+    /// already holds instead of importing
+    pub hash: Option<u64>,
+}
+
+/// A sequence packaged for cross-replica migration (disaggregated PD
+/// hand-off).  Produced by [`Engine::make_handoff`] on the source,
+/// consumed by [`Engine::migrate_in_seq`] on the destination.
+#[derive(Debug, Clone)]
+pub struct SeqHandoff {
+    /// prompt + generated, including the sampled-but-undecoded tail
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub sampling: SamplingParams,
+    pub ignore_eos: bool,
+    /// committed KV length on the source (`tokens.len() - 1`: the tail
+    /// token's KV position is unwritten, the decode-path invariant)
+    pub resume_len: usize,
+    /// source-side preemption-headroom floor, carried so the
+    /// destination's re-admission keeps the same guarantee
+    pub min_blocks: usize,
+    /// KV payloads in block-table order; empty = token-only hand-off
+    /// (the destination re-prefills the committed prefix)
+    pub blocks: Vec<BlockExport>,
+    /// request accounting carried across replicas (arrival, TTFT — the
+    /// first token was sampled on the source)
+    pub metrics: RequestMetrics,
 }
 
 #[derive(Debug, Clone)]
@@ -213,6 +265,12 @@ pub struct Engine<B: Backend> {
     round_plain: Vec<SeqId>,
     /// cost-model regime of this round's planned decode batch
     round_memory_bound: Option<bool>,
+    /// prefill-role hand-off queue: sequences whose final prompt window
+    /// landed this step and now sit in the scheduler's `Migrating` state
+    /// (KV still resident) until the router packages them
+    /// ([`Engine::make_handoff`]) or returns them
+    /// ([`Engine::abort_handoff`])
+    handoff_ready: Vec<SeqId>,
 }
 
 impl<B: Backend> Engine<B> {
@@ -300,6 +358,7 @@ impl<B: Backend> Engine<B> {
             round_spec_k: 0,
             round_plain: Vec::new(),
             round_memory_bound: None,
+            handoff_ready: Vec::new(),
         }
     }
 
@@ -364,12 +423,35 @@ impl<B: Backend> Engine<B> {
             o.insert("host_blocks_used", ts.host_used_blocks);
             o.insert("swapped_seqs", ts.swapped_seqs);
             o.insert("pinned_shared_blocks", ts.pinned_shared_blocks);
+            o.insert("replica_role", self.cfg.role.name());
         }
         v
     }
 
     pub fn num_pending(&self) -> usize {
-        self.sched.num_waiting() + self.sched.num_running() + self.sched.num_swapped()
+        self.sched.num_waiting()
+            + self.sched.num_running()
+            + self.sched.num_swapped()
+            + self.sched.num_migrating()
+    }
+
+    /// Sequences parked for cross-replica hand-off (waiting on the
+    /// router to collect them, not on this engine's scheduler).
+    pub fn num_migrating(&self) -> usize {
+        self.sched.num_migrating()
+    }
+
+    /// This replica's PD role (scheduling specialization).
+    pub fn role(&self) -> ReplicaRole {
+        self.cfg.role
+    }
+
+    /// Re-role a live replica (the PD autoscaler's lever).  Takes effect
+    /// at the next step: a Prefill replica turning Mixed simply stops
+    /// parking finished prompts; sequences already parked stay in the
+    /// hand-off queue until collected or aborted.
+    pub fn set_role(&mut self, role: ReplicaRole) {
+        self.cfg.role = role;
     }
 
     /// Submit a request; returns its sequence id.
@@ -450,6 +532,10 @@ impl<B: Backend> Engine<B> {
             // a prefill window above may have preempted a planned decode;
             // its cache state is gone until re-admission
             .filter(|id| self.cache.has_seq(*id))
+            // a prefill-role replica may have parked a planned decode for
+            // hand-off in this same round (a one-shot prompt lands in the
+            // decode list of the very step that prefills it)
+            .filter(|id| !self.handoff_ready.contains(id))
             .collect();
         if !decodes.is_empty() {
             let spec_k = self.round_spec_k;
@@ -483,8 +569,13 @@ impl<B: Backend> Engine<B> {
             }
         } else if decision.prefills.is_empty() && !self.sched.is_idle() {
             // nothing runnable but work pending: resume a swapped
-            // sequence (prefetch miss), make room, or fail loudly
-            if self.sched.num_running() == 0 && !self.resume_swapped_now()? {
+            // sequence (prefetch miss), make room, or fail loudly.
+            // Parked hand-offs are the router's to collect — the engine
+            // is waiting on the dispatcher, not stuck.
+            if self.sched.num_running() == 0
+                && !self.resume_swapped_now()?
+                && self.sched.num_migrating() == 0
+            {
                 bail!(
                     "stuck: {} waiting requests but no admission possible \
                      (pool {} free blocks, step budget {} tokens{})",
@@ -518,6 +609,19 @@ impl<B: Backend> Engine<B> {
         let mut out = Vec::new();
         self.metrics.start_run();
         while !self.sched.is_idle() {
+            if self.sched.num_waiting() == 0
+                && self.sched.num_running() == 0
+                && self.sched.num_swapped() == 0
+                && self.sched.num_migrating() > 0
+            {
+                // nobody is driving the hand-off: spinning here would
+                // never terminate, so fail loudly instead
+                bail!(
+                    "run_to_completion with {} sequence(s) parked for hand-off; \
+                     collect them via make_handoff or return them via abort_handoff",
+                    self.sched.num_migrating()
+                );
+            }
             out.extend(self.step()?);
         }
         self.metrics.finish_run();
@@ -564,6 +668,212 @@ impl<B: Backend> Engine<B> {
         let vocab = self.backend.preset().vocab;
         let at = (tokens.len() - 1) * vocab;
         Ok(logits[at..at + vocab].to_vec())
+    }
+
+    // ---- cross-replica hand-off (disaggregated prefill/decode) ------------
+
+    /// Drain the hand-off queue: sequences parked by a prefill-role
+    /// replica, awaiting [`Engine::make_handoff`] or
+    /// [`Engine::abort_handoff`].
+    pub fn take_handoff_ready(&mut self) -> Vec<SeqId> {
+        std::mem::take(&mut self.handoff_ready)
+    }
+
+    /// Re-park a sequence for a later dispatch round.  Used by the
+    /// router when every decode-capable destination is batch-full right
+    /// now: deferring keeps the KV hand-off path open (slots free as
+    /// destination sequences finish) instead of burning the transfer on
+    /// the token fallback.  The sequence stays in the scheduler's
+    /// `Migrating` state throughout, so it is never stepped meanwhile.
+    pub fn defer_handoff(&mut self, id: SeqId) {
+        if !self.handoff_ready.contains(&id) {
+            self.handoff_ready.push(id);
+        }
+    }
+
+    /// Whether a migrated sequence could be admitted straight into the
+    /// running batch — the KV path of [`Engine::migrate_in_seq`]; a
+    /// full batch forces its token fallback.
+    pub fn has_batch_slot(&self) -> bool {
+        self.sched.num_running() < self.sched.max_batch()
+    }
+
+    /// True when at least one sequence is parked for hand-off.
+    pub fn has_handoff_ready(&self) -> bool {
+        !self.handoff_ready.is_empty()
+    }
+
+    /// Package a parked sequence for migration to another replica.
+    ///
+    /// The KV path stages every resident block through a transient host
+    /// slot into a portable payload (the swap fabric reused as a
+    /// transport), taken when the backend supports migration, the host
+    /// tier has staging capacity, and the [`SwapPolicy`] prices the PCIe
+    /// round trip under re-prefilling the committed prefix (`Always`
+    /// forces it, `Never` forbids it, `Auto` asks the cost model —
+    /// exactly the swap-vs-recompute rule).  Otherwise the envelope is
+    /// token-only and the destination re-prefills.  Either way the
+    /// sequence leaves this replica entirely.
+    pub fn make_handoff(&mut self, id: SeqId) -> Result<SeqHandoff> {
+        let Some(seq) = self.seqs.get(&id) else {
+            bail!("hand-off of unknown sequence {id}");
+        };
+        debug_assert!(seq.finish.is_none(), "finished sequences are not parked");
+        let resume_len = seq.tokens.len() - 1;
+        let take_kv = if !self.backend.supports_kv_migration() || !self.cache.can_migrate_out(id)
+        {
+            false
+        } else {
+            match self.cfg.swap_policy {
+                SwapPolicy::Never => false,
+                SwapPolicy::Always => true,
+                SwapPolicy::Auto => match &self.cost {
+                    Some(cm) => cm.swap_beats_recompute(
+                        self.cache.seq_blocks(id),
+                        resume_len,
+                        self.backend.opt(),
+                    ),
+                    // no platform model: moving bytes beats redoing work
+                    None => true,
+                },
+            }
+        };
+        if !self.sched.complete_migration(id) {
+            bail!("hand-off of sequence {id} that was never parked (begin_migration)");
+        }
+        self.handoff_ready.retain(|&h| h != id);
+        let (blocks, resume_len, min_blocks) = if take_kv {
+            let ops = self.cache.migrate_out(id)?;
+            debug_assert_eq!(ops.resume_len, resume_len, "committed KV length drifted");
+            let mut blocks = Vec::with_capacity(ops.stages.len());
+            for (&(blk, slot), &hash) in ops.stages.iter().zip(&ops.hashes) {
+                let payload = self.backend.export_block(blk, slot)?;
+                self.cache.release_host_slot(slot);
+                self.backend.swap_discard(slot)?;
+                blocks.push(BlockExport { payload, hash });
+            }
+            self.metrics.migrations_out += 1;
+            self.metrics.migrated_blocks_out += ops.stages.len() as u64;
+            self.metrics.migration_bytes +=
+                (ops.stages.len() as f64 * self.swap_block_bytes) as u64;
+            if let Some(cm) = &self.cost {
+                self.metrics.sim_swap_s +=
+                    cm.swap_transfer(ops.stages.len(), self.backend.opt()).total_s;
+            }
+            (blocks, ops.resume_len, ops.min_blocks)
+        } else {
+            // token-only hand-off: drop residency here; the destination
+            // pays the re-prefill (it accounts the recomputed tokens)
+            for slot in self.cache.free_seq(id) {
+                self.backend.swap_discard(slot)?;
+            }
+            self.metrics.migrations_token_fallback += 1;
+            (Vec::new(), resume_len, 0)
+        };
+        let seq = self.seqs.remove(&id).expect("present per the lookup above");
+        Ok(SeqHandoff {
+            tokens: seq.tokens,
+            prompt_len: seq.prompt_len,
+            max_new: seq.max_new,
+            sampling: seq.sampling,
+            ignore_eos: seq.ignore_eos,
+            resume_len,
+            min_blocks,
+            blocks,
+            metrics: seq.metrics,
+        })
+    }
+
+    /// Return a parked sequence to local decode (no destination could
+    /// take it, or the router priced the migration out).  The KV is
+    /// still resident; the scheduler re-ranks the sequence among the
+    /// running set at its original admission stamp.
+    pub fn abort_handoff(&mut self, id: SeqId) -> bool {
+        self.handoff_ready.retain(|&h| h != id);
+        self.sched.abort_migration(id)
+    }
+
+    /// Admit a handed-off sequence on this replica; returns its id here.
+    ///
+    /// The KV path re-admits decode-ready at the exact source offset:
+    /// envelope payloads import into fresh device blocks, blocks whose
+    /// hash this replica already holds are reused through the prefix
+    /// index.  When the envelope carries no payloads, the backend cannot
+    /// import, the batch is full, or the device pool cannot take the
+    /// fresh blocks, the sequence falls back to re-prefilling its
+    /// committed prefix — semantically identical, just slower: the
+    /// re-prefill windows end one position before the sampled tail, so
+    /// the first token is never re-sampled.
+    pub fn migrate_in_seq(&mut self, h: SeqHandoff) -> Result<SeqId> {
+        let max_seq = self.backend.geometry().max_seq;
+        if h.tokens.is_empty() || h.resume_len + 1 != h.tokens.len() {
+            bail!(
+                "malformed hand-off envelope: {} tokens, committed {}",
+                h.tokens.len(),
+                h.resume_len
+            );
+        }
+        if h.tokens.len() > max_seq {
+            bail!(
+                "hand-off of {} tokens exceeds max_seq {max_seq}",
+                h.tokens.len()
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut kv_landed = false;
+        if !h.blocks.is_empty()
+            && self.backend.supports_kv_migration()
+            && self.sched.num_running() < self.sched.max_batch()
+        {
+            let hashes: Vec<Option<u64>> = h.blocks.iter().map(|b| b.hash).collect();
+            // a full pool is a fallback, not a failure
+            if let Ok(ops) = self.cache.migrate_in(id, &hashes, h.resume_len, h.min_blocks) {
+                for &(idx, blk) in &ops.imports {
+                    self.backend.import_block(blk, h.blocks[idx].payload)?;
+                }
+                self.sched.admit_migrated(id, h.resume_len);
+                self.metrics.migrations_in += 1;
+                self.metrics.migrated_blocks_in += ops.imports.len() as u64;
+                self.metrics.migration_bytes +=
+                    (ops.imports.len() as f64 * self.swap_block_bytes) as u64;
+                if let Some(cm) = &self.cost {
+                    self.metrics.sim_swap_s +=
+                        cm.swap_transfer(ops.imports.len(), self.backend.opt()).total_s;
+                }
+                kv_landed = true;
+            }
+        }
+        if !kv_landed {
+            // token fallback: the scheduler prefix ends at the committed
+            // length, so prefill windows never cover the sampled tail
+            // (is_final compares against the full token vector) and the
+            // sequence turns decode-ready exactly where the source left it
+            if !h.blocks.is_empty() {
+                // a KV envelope that failed to land; token-only envelopes
+                // were already counted by the source
+                self.metrics.migrations_token_fallback += 1;
+            }
+            self.metrics.tokens_recomputed += h.resume_len as u64;
+            self.sched.submit(id, h.resume_len);
+        }
+        let mut metrics = h.metrics;
+        metrics.id = id;
+        self.seqs.insert(
+            id,
+            Sequence {
+                id,
+                tokens: h.tokens,
+                prompt_len: h.prompt_len,
+                max_new: h.max_new,
+                sampling: h.sampling,
+                ignore_eos: h.ignore_eos,
+                metrics,
+                finish: None,
+                last_chunk_sim_t: None,
+            },
+        );
+        Ok(id)
     }
 
     // -----------------------------------------------------------------------
@@ -768,6 +1078,16 @@ impl<B: Backend> Engine<B> {
             seq.tokens.push(tok);
             seq.metrics.generated_tokens = seq.generated();
             self.check_finish(id, tok);
+            if self.cfg.role == ReplicaRole::Prefill
+                && self.seqs.get(&id).map(|s| s.finish.is_none()).unwrap_or(false)
+                && self.sched.begin_migration(id)
+            {
+                // prefill replica: prompt done, first token sampled —
+                // park the sequence for the router to hand off to a
+                // decode-capable replica (KV stays resident until
+                // make_handoff packages or abort_handoff returns it)
+                self.handoff_ready.push(id);
+            }
         }
         Ok(())
     }
@@ -2149,5 +2469,245 @@ mod tests {
         // wallclock must dominate
         assert!(e.metrics.wall_coordinator_s > 0.0);
         assert!(e.metrics.coordinator_overhead_frac() > 0.2);
+    }
+
+    fn pd_reqs() -> Vec<GenRequest> {
+        (0..4)
+            .map(|i| GenRequest::greedy(format!("pd prompt {i} {}", "h".repeat(20 + i)), 8))
+            .collect()
+    }
+
+    /// Drive a prefill-role source until every request has been packaged,
+    /// feeding each envelope into the destination as it surfaces.
+    fn drain_handoffs(
+        src: &mut Engine<MockBackend>,
+        dst: &mut Engine<impl Backend>,
+        expect: usize,
+    ) {
+        let mut moved = 0usize;
+        let mut rounds = 0;
+        while moved < expect {
+            src.step().unwrap();
+            for id in src.take_handoff_ready() {
+                let h = src.make_handoff(id).unwrap();
+                dst.migrate_in_seq(h).unwrap();
+                moved += 1;
+            }
+            rounds += 1;
+            assert!(rounds < 200, "hand-offs never surfaced ({moved}/{expect})");
+        }
+    }
+
+    #[test]
+    fn kv_handoff_between_replicas_is_token_identical() {
+        // reference: one unconstrained mixed replica
+        let mut base = engine(COOPT);
+        let expected = base.generate(pd_reqs()).unwrap();
+
+        // prefill replica (host tier = migration staging) + decode replica
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_host_pool(64)
+            .with_swap_policy(SwapPolicy::Always)
+            .with_role(ReplicaRole::Prefill);
+        let mut src = Engine::new(be, cfg);
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_role(ReplicaRole::Decode);
+        let mut dst = Engine::new(be, cfg);
+
+        for r in pd_reqs() {
+            src.submit(r).unwrap();
+        }
+        drain_handoffs(&mut src, &mut dst, 4);
+        assert_eq!(src.num_pending(), 0, "source replica fully drained");
+        let mut got = dst.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(expected.len(), got.len());
+        for (a, b) in expected.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens, "hand-off must not change outputs");
+            assert_eq!(a.finish, b.finish);
+            assert_eq!(a.generated_tokens, b.generated_tokens);
+        }
+        // Always policy: every hand-off took the KV path
+        assert_eq!(src.metrics.migrations_out, 4);
+        assert!(src.metrics.migrated_blocks_out > 0);
+        assert!(src.metrics.migration_bytes > 0);
+        assert_eq!(src.metrics.migrations_token_fallback, 0);
+        assert_eq!(dst.metrics.migrations_in, 4);
+        assert_eq!(dst.metrics.tokens_recomputed, 0, "KV path recomputes nothing");
+        // both pools drain; the transient staging slots were all released
+        assert_eq!(src.cache_stats().blocks_used, 0);
+        assert_eq!(src.tier_stats().host_used_blocks, 0);
+        assert_eq!(dst.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn handoff_degrades_to_reprefill_without_backend_migration() {
+        // a backend that leaves the migration defaults in place must get
+        // the token-only envelope, and the destination re-prefills —
+        // outputs still identical to the unconstrained reference
+        struct NoMigrate(MockBackend);
+        impl Backend for NoMigrate {
+            fn preset(&self) -> &crate::config::ModelPreset {
+                self.0.preset()
+            }
+            fn geometry(&self) -> &crate::config::CacheGeometry {
+                self.0.geometry()
+            }
+            fn opt(&self) -> &crate::config::OptConfig {
+                self.0.opt()
+            }
+            fn prefill(&mut self, t: &[i32], l: i32, s: &[i32]) -> Result<Vec<f32>> {
+                self.0.prefill(t, l, s)
+            }
+            fn decode(
+                &mut self,
+                t: &[i32],
+                p: &[i32],
+                b: &[i32],
+                c: &[i32],
+                s: &[i32],
+            ) -> Result<Vec<f32>> {
+                self.0.decode(t, p, b, c, s)
+            }
+            fn reset_cache(&mut self) -> Result<()> {
+                self.0.reset_cache()
+            }
+            fn take_exec_time(&mut self) -> std::time::Duration {
+                self.0.take_exec_time()
+            }
+        }
+        let mut base = engine(COOPT);
+        let expected = base.generate(pd_reqs()).unwrap();
+
+        let be = NoMigrate(MockBackend::new().with_opt(COOPT));
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_role(ReplicaRole::Prefill);
+        let mut src = Engine::new(be, cfg);
+        let mut dst = engine(COOPT);
+
+        for r in pd_reqs() {
+            src.submit(r).unwrap();
+        }
+        let mut moved = 0usize;
+        let mut rounds = 0;
+        while moved < 4 {
+            src.step().unwrap();
+            for id in src.take_handoff_ready() {
+                let h = src.make_handoff(id).unwrap();
+                assert!(h.blocks.is_empty(), "no migration support: token-only");
+                dst.migrate_in_seq(h).unwrap();
+                moved += 1;
+            }
+            rounds += 1;
+            assert!(rounds < 200);
+        }
+        let mut got = dst.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        for (a, b) in expected.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens, "re-prefill hand-off must not change outputs");
+            assert_eq!(a.finish, b.finish);
+        }
+        assert_eq!(src.metrics.migrations_out, 0);
+        assert_eq!(src.metrics.migrations_token_fallback, 4);
+        assert!(
+            dst.metrics.tokens_recomputed > 0,
+            "the destination paid the re-prefill"
+        );
+        // the sampled tail travelled in the envelope: exactly one prefill
+        // sample per request, on the source
+        assert_eq!(dst.metrics.migrations_in, 0);
+        assert_eq!(src.cache_stats().blocks_used, 0);
+        assert_eq!(dst.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn aborted_handoff_finishes_locally() {
+        let be = MockBackend::new().with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_role(ReplicaRole::Prefill);
+        let mut e = Engine::new(be, cfg);
+        e.submit(GenRequest::greedy("park and return", 6)).unwrap();
+        let mut parked = Vec::new();
+        let mut rounds = 0;
+        while parked.is_empty() {
+            e.step().unwrap();
+            parked = e.take_handoff_ready();
+            rounds += 1;
+            assert!(rounds < 50, "prompt never parked");
+        }
+        assert_eq!(e.num_pending(), 1, "migrating still counts as pending");
+        for id in parked {
+            assert!(e.abort_handoff(id), "parked sequence must be abortable");
+        }
+        // re-roled by the autoscaler mid-flight: decodes locally now
+        e.set_role(ReplicaRole::Mixed);
+        let r = e.run_to_completion().unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].generated_tokens, 6);
+        let mut base = engine(COOPT);
+        let expected = base
+            .generate(vec![GenRequest::greedy("park and return", 6)])
+            .unwrap();
+        assert_eq!(expected[0].tokens, r[0].tokens, "abort must not change outputs");
+        assert_eq!(e.metrics.migrations_out, 0);
+        assert_eq!(e.cache_stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn handoff_survives_pool_pressure_on_both_sides() {
+        // tiny destination pool: migrate-in may fall back to re-prefill
+        // and decode runs under preemption — outputs must stay identical
+        let mut base = tiered_engine(96, 0, SwapPolicy::Never);
+        let expected = base.generate(pressure_reqs()).unwrap();
+        assert_eq!(base.metrics.preemptions, 0);
+
+        let geometry = crate::config::CacheGeometry {
+            block_size: 4,
+            max_blocks: 16,
+            num_pool_blocks: 24,
+            max_batch: 4,
+            max_seq: 48,
+        };
+        let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_host_pool(64)
+            .with_swap_policy(SwapPolicy::Always)
+            .with_role(ReplicaRole::Prefill);
+        let mut src = Engine::new(be, cfg);
+        // destination under real pressure, with a host tier sized so
+        // preemption exits via swap (drop-recompute would diverge only in
+        // cost, not tokens, but swap exercises the racier path)
+        let geometry = crate::config::CacheGeometry {
+            block_size: 4,
+            max_blocks: 16,
+            num_pool_blocks: 12,
+            max_batch: 4,
+            max_seq: 48,
+        };
+        let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_host_pool(64)
+            .with_swap_policy(SwapPolicy::Always)
+            .with_role(ReplicaRole::Decode);
+        let mut dst = Engine::new(be, cfg);
+
+        for r in pressure_reqs() {
+            src.submit(r).unwrap();
+        }
+        drain_handoffs(&mut src, &mut dst, 6);
+        let mut got = dst.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(expected.len(), got.len());
+        for (a, b) in expected.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens, "pressure must not change outputs");
+            assert_eq!(a.finish, b.finish);
+        }
+        assert_eq!(
+            src.metrics.migrations_out + src.metrics.migrations_token_fallback,
+            6
+        );
+        assert_eq!(src.cache_stats().blocks_used, 0);
+        assert_eq!(src.tier_stats().host_used_blocks, 0);
+        assert_eq!(dst.cache_stats().blocks_used, 0);
+        assert_eq!(dst.tier_stats().host_used_blocks, 0);
     }
 }

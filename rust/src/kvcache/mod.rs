@@ -35,7 +35,10 @@ use crate::config::{CacheGeometry, OptConfig};
 
 pub mod tier;
 
-use self::tier::{HostPool, SwapEntry, SwapInOps, SwapOutOps, SwapOutPlan, SwappedSeq, TierStats};
+use self::tier::{
+    HostPool, MigrateInOps, MigrateOutOps, SwapEntry, SwapInOps, SwapOutOps, SwapOutPlan,
+    SwappedSeq, TierStats,
+};
 
 pub type BlockId = u32;
 pub type SeqId = u64;
@@ -746,7 +749,7 @@ impl CacheManager {
                     self.host
                         .as_mut()
                         .expect("swapped implies a host tier")
-                        .release();
+                        .release(slot);
                     copies.push((slot, phys));
                     table.push(phys);
                 }
@@ -789,12 +792,147 @@ impl CacheManager {
                     self.host
                         .as_mut()
                         .expect("swapped implies a host tier")
-                        .release();
+                        .release(slot);
                     freed_slots.push(slot);
                 }
             }
         }
         freed_slots
+    }
+
+    // ---- cross-replica migration (disaggregated PD hand-off) --------------
+
+    /// Physical blocks sequence `id` currently holds (0 if not
+    /// resident).  The migration cost policy prices `seq_blocks` x PCIe
+    /// transfer against re-prefilling `seq_len` tokens.
+    pub fn seq_blocks(&self, id: SeqId) -> usize {
+        self.seqs.get(&id).map(|s| s.table.len()).unwrap_or(0)
+    }
+
+    /// True when `id`'s blocks can stage through the host tier right
+    /// now (host tier present with capacity for *every* block — shared
+    /// blocks must travel too, the destination holds no references on
+    /// this device's pool).
+    pub fn can_migrate_out(&self, id: SeqId) -> bool {
+        match (self.host.as_ref(), self.seqs.get(&id)) {
+            (Some(host), Some(st)) => host.free() >= st.table.len(),
+            _ => false,
+        }
+    }
+
+    /// Export sequence `id` for a cross-replica hand-off: stage every
+    /// block through a host slot, release this replica's references,
+    /// and remove the sequence.  The caller **must** execute the
+    /// returned stages through the backend before anything recycles the
+    /// freed device blocks, then release the staging slots via
+    /// [`CacheManager::release_host_slot`] once the payloads are in the
+    /// hand-off envelope.  Fails without mutating.
+    pub fn migrate_out(&mut self, id: SeqId) -> Result<MigrateOutOps> {
+        if !self.can_migrate_out(id) {
+            bail!(
+                "cannot migrate out sequence {id} (no host tier, not resident, or host pool full)"
+            );
+        }
+        let st = self.seqs.remove(&id).expect("resident per the check");
+        let mut stages = Vec::with_capacity(st.table.len());
+        let mut hashes = Vec::with_capacity(st.table.len());
+        for &phys in &st.table {
+            let slot = self
+                .host
+                .as_mut()
+                .expect("host tier per the check")
+                .alloc()
+                .expect("capacity per the check");
+            // capture the hash before the decref can free + unindex it;
+            // a shared block keeps its index for the surviving readers
+            hashes.push(self.block_hash.get(&phys).copied());
+            stages.push((phys, slot));
+            if self.alloc.decref(phys) {
+                self.unindex_block(phys);
+            }
+        }
+        Ok(MigrateOutOps {
+            stages,
+            hashes,
+            resume_len: st.len,
+            min_blocks: st.min_blocks,
+        })
+    }
+
+    /// Release one transient migration staging slot after the backend
+    /// has exported its payload.
+    pub fn release_host_slot(&mut self, slot: tier::HostSlotId) {
+        if let Some(host) = self.host.as_mut() {
+            host.release(slot);
+        }
+    }
+
+    /// Re-admit a migrated sequence on this replica at its exact decode
+    /// offset.  Blocks whose content+position hash the destination
+    /// already holds are reused through the prefix index (counted as
+    /// prefix hits, skipped from the import list); the rest allocate
+    /// fresh device blocks the backend must import the envelope
+    /// payloads into.  Imported full blocks re-enter the prefix index,
+    /// so shareability survives the hand-off.  Fails without mutating
+    /// when the device pool cannot take the fresh blocks.
+    pub fn migrate_in(
+        &mut self,
+        id: SeqId,
+        hashes: &[Option<u64>],
+        resume_len: usize,
+        min_blocks: usize,
+    ) -> Result<MigrateInOps> {
+        if self.seqs.contains_key(&id) || self.swapped.contains_key(&id) {
+            bail!("sequence {id} already exists");
+        }
+        // read-only pass: which incoming blocks this replica already holds
+        let reuse: Vec<Option<BlockId>> = hashes
+            .iter()
+            .map(|h| h.and_then(|h| self.prefix_index.get(&h).copied()))
+            .collect();
+        let fresh = reuse.iter().filter(|r| r.is_none()).count();
+        if self.alloc.num_free() < fresh {
+            bail!(
+                "migrate-in of sequence {id} needs {fresh} device blocks, {} free",
+                self.alloc.num_free()
+            );
+        }
+        let mut table = Vec::with_capacity(hashes.len());
+        let mut imports = Vec::new();
+        let mut reused_blocks = 0usize;
+        for (i, r) in reuse.iter().enumerate() {
+            match r {
+                Some(phys) => {
+                    self.alloc.incref(*phys);
+                    table.push(*phys);
+                    reused_blocks += 1;
+                }
+                None => {
+                    let phys = self.alloc.alloc().expect("free count checked above");
+                    if let Some(h) = hashes[i] {
+                        if !self.prefix_index.contains_key(&h) {
+                            self.index_block(phys, h);
+                        }
+                    }
+                    imports.push((i, phys));
+                    table.push(phys);
+                }
+            }
+        }
+        self.prefix_hits += reused_blocks as u64;
+        self.seqs.insert(
+            id,
+            SeqState {
+                table,
+                len: resume_len,
+                shared_prefix_blocks: reused_blocks,
+                min_blocks,
+            },
+        );
+        Ok(MigrateInOps {
+            imports,
+            reused_blocks,
+        })
     }
 
     /// Host-tier occupancy snapshot.
@@ -1599,5 +1737,126 @@ mod tests {
         assert!(!cm.is_swapped(3));
         assert_eq!(cm.stats().blocks_used, 0);
         assert_eq!(cm.tier_stats().host_used_blocks, 0);
+    }
+
+    // ---- cross-replica migration (disaggregated PD hand-off) --------------
+
+    #[test]
+    fn migrate_out_in_roundtrip_across_managers() {
+        let mut src = tiered(8);
+        let mut dst = tiered(8);
+        let prompt: Vec<u32> = (0..10).map(|i| 50 + i).collect();
+        src.prefill(1, &prompt, &COOPT).unwrap();
+        src.append_token(1).unwrap();
+        let len = src.seq_len(1);
+        assert_eq!(src.seq_blocks(1), 3);
+
+        let out = src.migrate_out(1).unwrap();
+        assert_eq!(out.stages.len(), 3, "every block stages through the host tier");
+        assert_eq!(out.resume_len, len);
+        assert!(!src.has_seq(1), "the source forgets the sequence");
+        assert_eq!(src.stats().blocks_used, 0, "source device blocks freed");
+        for &(_, slot) in &out.stages {
+            src.release_host_slot(slot);
+        }
+        assert_eq!(src.tier_stats().host_used_blocks, 0, "staging is transient");
+
+        let inn = dst
+            .migrate_in(1, &out.hashes, out.resume_len, out.min_blocks)
+            .unwrap();
+        assert_eq!(inn.imports.len(), 3, "cold destination imports every block");
+        assert_eq!(inn.reused_blocks, 0);
+        assert_eq!(dst.seq_len(1), len, "resumes at the exact decode offset");
+        // decoding continues as if the sequence had always lived here
+        dst.append_token(1).unwrap();
+        dst.free_seq(1);
+        assert_eq!(dst.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn migrate_in_reuses_hash_matched_blocks_and_reindexes() {
+        let mut src = tiered(8);
+        let mut dst = tiered(8);
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23, 5];
+        // the destination already serves the same tenant prompt
+        dst.prefill(9, &prompt, &COOPT).unwrap();
+        src.prefill(1, &prompt, &COOPT).unwrap();
+        let out = src.migrate_out(1).unwrap();
+        assert_eq!(out.hashes.iter().filter(|h| h.is_some()).count(), 2);
+        let inn = dst
+            .migrate_in(1, &out.hashes, out.resume_len, out.min_blocks)
+            .unwrap();
+        assert_eq!(inn.reused_blocks, 2, "full prefix blocks reused on arrival");
+        assert_eq!(inn.imports.len(), 1, "only the private tail block imports");
+        assert_eq!(
+            dst.block_table_row(1)[..2],
+            dst.block_table_row(9)[..2],
+            "migrated sequence shares the destination's physical blocks"
+        );
+        dst.free_seq(9);
+        // imported blocks re-entered the prefix index: a later identical
+        // prompt shares them even though the original sharer is gone
+        dst.append_token(1).unwrap();
+        let p3 = dst.prefill(3, &prompt, &COOPT).unwrap();
+        assert_eq!(p3.reused_blocks, 2, "prefix re-indexing preserved");
+        dst.free_seq(1);
+        dst.free_seq(3);
+        assert_eq!(dst.stats().blocks_used, 0);
+    }
+
+    #[test]
+    fn migrate_out_stages_shared_blocks_without_harming_survivors() {
+        let mut src = tiered(8);
+        let prompt = [7u32, 8, 9, 10, 20, 21, 22, 23, 5];
+        src.prefill(1, &prompt, &COOPT).unwrap();
+        let p2 = src.prefill(2, &prompt, &COOPT).unwrap();
+        assert_eq!(p2.reused_blocks, 2);
+        let shared: Vec<i32> = src.block_table_row(1)[..2].to_vec();
+        let out = src.migrate_out(2).unwrap();
+        assert_eq!(out.stages.len(), 3, "shared blocks travel too");
+        for &(_, slot) in &out.stages {
+            src.release_host_slot(slot);
+        }
+        // the survivor keeps decoding on the same physical blocks
+        assert_eq!(src.block_table_row(1)[..2], shared[..]);
+        src.append_token(1).unwrap();
+        src.free_seq(1);
+        assert_eq!(src.stats().blocks_used, 0);
+        assert_eq!(src.tier_stats().host_used_blocks, 0);
+    }
+
+    #[test]
+    fn migrate_refused_without_capacity_and_fails_clean() {
+        // no host tier: nothing to stage through
+        let mut cm = CacheManager::new(geom());
+        cm.prefill(1, &[1, 2, 3, 4, 5], &COOPT).unwrap();
+        assert!(!cm.can_migrate_out(1));
+        assert!(cm.migrate_out(1).is_err());
+        assert!(cm.has_seq(1), "refused migrate leaves the sequence resident");
+
+        // host pool too small for the whole table
+        let mut cm = tiered(1);
+        cm.prefill(1, &[1, 2, 3, 4, 5], &COOPT).unwrap();
+        assert!(!cm.can_migrate_out(1));
+        assert!(cm.migrate_out(1).is_err());
+        assert_eq!(cm.stats().blocks_used, 2, "nothing mutated");
+
+        // destination pool too small: migrate_in fails without mutating
+        let mut src = tiered(8);
+        let prompt: Vec<u32> = (0..12).map(|i| 70 + i).collect();
+        src.prefill(1, &prompt, &COOPT).unwrap();
+        let out = src.migrate_out(1).unwrap();
+        let mut dst = CacheManager::new(CacheGeometry {
+            block_size: 4,
+            max_blocks: 8,
+            num_pool_blocks: 2,
+            max_batch: 4,
+            max_seq: 16,
+        });
+        assert!(dst
+            .migrate_in(1, &out.hashes, out.resume_len, out.min_blocks)
+            .is_err());
+        assert_eq!(dst.stats().blocks_used, 0, "failed migrate-in allocates nothing");
+        assert!(!dst.has_seq(1));
     }
 }

@@ -71,10 +71,16 @@ impl SwappedSeq {
 
 /// Fixed-capacity host-side block pool.  Slot ids are never reused while
 /// live, which lets the backend key its host buffers by slot.
+///
+/// Accounting is *slot-addressed*: the pool tracks exactly which slots
+/// are live, so a double release of one slot is caught instead of
+/// silently masking a leak of another while the backend's host buffer
+/// for the leaked slot stays resident.  Migration turns these slots
+/// into cross-replica transport, so the books must be airtight.
 #[derive(Debug, Clone)]
 pub struct HostPool {
     capacity: usize,
-    used: usize,
+    live: std::collections::HashSet<HostSlotId>,
     next_slot: HostSlotId,
 }
 
@@ -82,7 +88,7 @@ impl HostPool {
     pub fn new(capacity: usize) -> Self {
         HostPool {
             capacity,
-            used: 0,
+            live: std::collections::HashSet::new(),
             next_slot: 0,
         }
     }
@@ -92,28 +98,30 @@ impl HostPool {
     }
 
     pub fn used(&self) -> usize {
-        self.used
+        self.live.len()
     }
 
     pub fn free(&self) -> usize {
-        self.capacity - self.used
+        self.capacity - self.live.len()
     }
 
     /// Claim one host slot; `None` when the pool is full.
     pub fn alloc(&mut self) -> Option<HostSlotId> {
-        if self.used >= self.capacity {
+        if self.live.len() >= self.capacity {
             return None;
         }
-        self.used += 1;
         let slot = self.next_slot;
         self.next_slot += 1;
+        self.live.insert(slot);
         Some(slot)
     }
 
-    /// Release a slot back to the pool.
-    pub fn release(&mut self) {
-        debug_assert!(self.used > 0, "host pool release underflow");
-        self.used = self.used.saturating_sub(1);
+    /// Release a live slot back to the pool.  Releasing a slot that is
+    /// not live (double free, or a slot never allocated) is an
+    /// accounting bug upstream; debug builds assert on it.
+    pub fn release(&mut self, slot: HostSlotId) {
+        let was_live = self.live.remove(&slot);
+        debug_assert!(was_live, "host pool release of non-live slot {slot}");
     }
 }
 
@@ -150,6 +158,41 @@ pub struct SwapInOps {
     pub resume_len: usize,
 }
 
+/// Committed migrate-out of one sequence (cross-replica PD hand-off).
+/// Unlike a swap-out, *every* block — shared or not — stages through a
+/// host slot: the destination replica holds no references on this
+/// device's blocks, so each payload must travel whole.  The caller must
+/// execute `stages` (device block -> host slot exports) through the
+/// backend before anything recycles the freed device blocks, then
+/// release the staging slots once the payloads are in the hand-off
+/// envelope.
+#[derive(Debug, Clone)]
+pub struct MigrateOutOps {
+    /// (device block, staging host slot) per logical block, table order
+    pub stages: Vec<(BlockId, HostSlotId)>,
+    /// prefix-index hash per logical block (`None` = partial or
+    /// unindexed); the destination re-indexes imported full blocks and
+    /// reuses hash matches it already holds
+    pub hashes: Vec<Option<u64>>,
+    /// committed context length — the exact decode offset the sequence
+    /// resumes at on the destination
+    pub resume_len: usize,
+    /// carried block-table floor (see [`SwappedSeq`]'s field of the
+    /// same name)
+    pub min_blocks: usize,
+}
+
+/// Committed migrate-in: the backend must import the payloads for
+/// `imports` (logical block index -> freshly allocated device block)
+/// before the sequence is stepped.  Hash-matched blocks already
+/// resident on the destination are reused instead (prefix re-indexing
+/// preserved) and do not appear here.
+#[derive(Debug, Clone)]
+pub struct MigrateInOps {
+    pub imports: Vec<(usize, BlockId)>,
+    pub reused_blocks: usize,
+}
+
 /// Host-tier occupancy snapshot (surfaced in `/metrics` and benches).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TierStats {
@@ -172,11 +215,23 @@ mod tests {
         let b = p.alloc().unwrap();
         assert_ne!(a, b, "slot ids are unique");
         assert!(p.alloc().is_none(), "capacity enforced");
-        p.release();
+        p.release(a);
         assert_eq!(p.free(), 1);
         let c = p.alloc().unwrap();
         assert_ne!(c, b, "slot ids are never reused while the pool lives");
         assert_eq!(p.used(), 2);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-live slot")]
+    fn host_pool_double_release_asserts() {
+        let mut p = HostPool::new(2);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        p.release(a);
+        // releasing `a` again must not silently mask a leak of `b`
+        p.release(a);
     }
 
     #[test]

@@ -9,11 +9,12 @@
 
 use anyhow::{bail, Context, Result};
 use llm_coopt::config::{
-    artifacts_dir, opt_config, EngineConfig, RouterPolicy, SpecMode, SpecPolicy, SwapPolicy,
+    artifacts_dir, opt_config, parse_replica_roles, EngineConfig, RouterPolicy, SpecMode,
+    SpecPolicy, SwapPolicy,
 };
 use llm_coopt::coordinator::{Engine, GenRequest};
 use llm_coopt::eval;
-use llm_coopt::router::RouterHandle;
+use llm_coopt::router::{start_autoscaler, RouterHandle};
 use llm_coopt::runtime::Runtime;
 use llm_coopt::sampling::SamplingParams;
 use llm_coopt::server::Server;
@@ -45,6 +46,22 @@ fn main() -> Result<()> {
              shared leading prefixes to the replica already holding them, \
              falling back to least_loaded above the cost model's \
              load-imbalance threshold)",
+        )
+        .flag(
+            "replica-roles",
+            "",
+            "serve: comma-separated PD role per replica (prefill|decode|mixed), \
+             e.g. prefill,decode,mixed.  Empty = all mixed.  Prefill-role \
+             replicas hand each sequence's KV off through the host tier to a \
+             decode-capable replica at prefill completion when the Z100 model \
+             prices the PCIe transfer under re-prefilling",
+        )
+        .flag(
+            "pd-autoscale",
+            "false",
+            "serve: run the queue-depth/occupancy-spread autoscaler, which \
+             drains idle replicas, re-admits them on backlog, and re-roles \
+             the idlest replica toward the saturated phase (true|false)",
         )
         .flag("prompt", "", "generate: the prompt")
         .flag("max-new-tokens", "32", "generate: tokens to produce")
@@ -185,6 +202,13 @@ fn main() -> Result<()> {
             let model = args.get("model");
             let replicas = args.get_usize("replicas").max(1);
             let policy = RouterPolicy::parse(args.get("router-policy"))?;
+            let roles = parse_replica_roles(args.get("replica-roles"))?;
+            if !roles.is_empty() && roles.len() != replicas {
+                bail!(
+                    "--replica-roles names {} roles for {replicas} replicas",
+                    roles.len()
+                );
+            }
             let rt = Runtime::new(&dir)?;
             let mut engines = Vec::with_capacity(replicas);
             for i in 0..replicas {
@@ -192,11 +216,19 @@ fn main() -> Result<()> {
                 if i == 0 {
                     log_info!("compiled {model}/{} in {:?}", opt.name, mrt.compile_time);
                 }
-                engines.push(Engine::new(mrt, engine_cfg(model, opt)?));
+                let mut cfg = engine_cfg(model, opt)?;
+                if let Some(&role) = roles.get(i) {
+                    cfg = cfg.with_role(role);
+                }
+                engines.push(Engine::new(mrt, cfg));
             }
             let router = RouterHandle::spawn(engines, policy);
             let server =
                 Server::bind_router(args.get("addr"), router, args.get_usize("workers"))?;
+            if args.get_bool("pd-autoscale") {
+                start_autoscaler(&server.router(), std::time::Duration::from_millis(500));
+                log_info!("pd autoscaler running (500ms tick)");
+            }
             server.serve()
         }
         "generate" => {

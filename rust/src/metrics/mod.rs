@@ -99,6 +99,21 @@ pub struct EngineMetrics {
     pub tokens_recomputed: u64,
     /// tokens whose re-prefill the tier manager avoided by swapping
     pub recompute_avoided_tokens: u64,
+    // --- PD disaggregation (cross-replica KV migration) --------------------
+    /// sequences this engine handed off to another replica with their KV
+    /// blocks exported through the host tier
+    pub migrations_out: u64,
+    /// sequences re-admitted here with imported KV blocks
+    pub migrations_in: u64,
+    pub migrated_blocks_out: u64,
+    pub migrated_blocks_in: u64,
+    /// paper-scale bytes a KV hand-off moved over the host tier (export
+    /// plus import are each charged once by the side that performed them)
+    pub migration_bytes: u64,
+    /// hand-offs that fell back to token-level transfer (destination
+    /// re-prefills; the cost model said migration wouldn't pay or the
+    /// transport was unavailable)
+    pub migrations_token_fallback: u64,
     /// simulated seconds of swap traffic (total, incl. overlapped)
     pub sim_swap_s: f64,
     /// simulated swap seconds the engine actually waited on (prefetch
@@ -325,6 +340,15 @@ impl EngineMetrics {
             "recompute_avoided_tokens",
             self.recompute_avoided_tokens as usize,
         );
+        o.insert("migrations_out", self.migrations_out as usize);
+        o.insert("migrations_in", self.migrations_in as usize);
+        o.insert("migrated_blocks_out", self.migrated_blocks_out as usize);
+        o.insert("migrated_blocks_in", self.migrated_blocks_in as usize);
+        o.insert("migration_bytes", self.migration_bytes as usize);
+        o.insert(
+            "migrations_token_fallback",
+            self.migrations_token_fallback as usize,
+        );
         o.insert("sim_swap_s", self.sim_swap_s);
         o.insert("sim_swap_blocked_s", self.sim_swap_blocked_s);
         if self.itl_sim.count() > 0 {
@@ -398,6 +422,19 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.req_usize("swap_outs").unwrap(), 3);
         assert_eq!(j.req_usize("recompute_avoided_tokens").unwrap(), 41);
+        // migration counters ride the same record and serialize by key
+        m.migrations_out = 2;
+        m.migrations_in = 1;
+        m.migrated_blocks_out = 6;
+        m.migration_bytes = 4096;
+        m.migrations_token_fallback = 1;
+        let j = m.to_json();
+        assert_eq!(j.req_usize("migrations_out").unwrap(), 2);
+        assert_eq!(j.req_usize("migrations_in").unwrap(), 1);
+        assert_eq!(j.req_usize("migrated_blocks_out").unwrap(), 6);
+        assert_eq!(j.req_usize("migrated_blocks_in").unwrap(), 0);
+        assert_eq!(j.req_usize("migration_bytes").unwrap(), 4096);
+        assert_eq!(j.req_usize("migrations_token_fallback").unwrap(), 1);
         assert!((j.req_f64("prefetch_hit_rate").unwrap() - 2.0 / 3.0).abs() < 1e-12);
         // blocked swap time counts against Eq. 12; overlapped time doesn't
         assert!((m.throughput_sim() - 10.0 / 0.5).abs() < 1e-9);

@@ -41,19 +41,37 @@
 //! Per-replica drain (`/admin/drain`) takes a replica out of rotation
 //! without killing in-flight work; health is the engine thread's
 //! liveness.  N = 1 degenerates to the single-engine path.
+//!
+//! **Disaggregated prefill/decode (PD).**  With
+//! [`ReplicaRole`]s assigned (`--replica-roles`), placement becomes
+//! phase-aware: a request whose prompt dominates its decode budget
+//! starts on a `Prefill` replica when the cost model prices the
+//! later KV hand-off (committed-prefix blocks over the PCIe host
+//! tier) under re-prefilling it ([`handoff_pays`]) — otherwise it
+//! falls back to the `Mixed` pool.  At prefill completion the
+//! prefill engine parks the sequence
+//! ([`Engine::take_handoff_ready`]); the router re-admits it on the
+//! least-loaded decode-capable replica
+//! ([`Engine::migrate_in_seq`]), waiter and all.  The sync driver
+//! interleaves replica stepping with hand-off dispatch; the threaded
+//! driver runs a dedicated dispatcher thread draining the cluster's
+//! hand-off bus ([`crate::server::HandoffEnvelope`]).  An optional
+//! autoscaler ([`RouterHandle::autoscale_tick`]) re-roles replicas
+//! and rotates them in and out of the drain set from the cluster
+//! queue-depth and occupancy-spread gauges.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::RouterPolicy;
+use crate::config::{OptConfig, ReplicaRole, RouterPolicy};
 use crate::coordinator::{Engine, GenRequest, GenResult};
 use crate::kvcache::{leading_prefix_hash, SeqId};
 use crate::platform::{replica_imbalance, CostModel};
 use crate::runtime::Backend;
-use crate::server::{EngineHandle, MetricsSnapshot};
+use crate::server::{EngineHandle, HandoffEnvelope, MetricsSnapshot};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Object, Value};
 
@@ -251,6 +269,98 @@ pub fn pick_replica(
     }
 }
 
+/// Should this request start on a dedicated prefill replica and hand
+/// off at prefill completion?  Yes only when the prompt dominates the
+/// decode budget (there is real prefill work to specialize on) AND the
+/// cost model prices moving the committed prefix — its KV blocks
+/// through the PCIe host tier — under re-prefilling it on the decode
+/// side.  Otherwise the request is better served by a mixed placement
+/// and the router routes it through the ordinary decode-capable pool.
+/// `pricing` is `None` when no cost model is available (N = 1 wrapper,
+/// tests), which prices every prefill-heavy hand-off as paying.
+pub fn handoff_pays(
+    pricing: Option<&(CostModel, OptConfig)>,
+    block_size: usize,
+    prompt_tokens: usize,
+    max_new_tokens: usize,
+) -> bool {
+    if prompt_tokens < 4 * max_new_tokens.max(1) {
+        return false;
+    }
+    match pricing {
+        // +1 block: the sampled first decode token travels in the
+        // hand-off envelope but its KV lands in a possibly-fresh tail
+        // block on the destination
+        Some((cm, opt)) => cm.swap_beats_recompute(
+            prompt_tokens.div_ceil(block_size.max(1)) + 1,
+            prompt_tokens,
+            opt,
+        ),
+        None => true,
+    }
+}
+
+/// Role-aware wrapper around [`pick_replica`]: restrict placement to
+/// the replicas whose [`ReplicaRole`] fits the request's phase, falling
+/// back to the remaining roles when the preferred pool has nothing
+/// routable — roles are a preference, availability is a guarantee.
+/// Requests bound for a prefill replica (`to_prefill`, per
+/// [`handoff_pays`]) prefer the dedicated `Prefill` pool; everything
+/// else prefers the decode-capable (`Decode`/`Mixed`) pool.
+#[allow(clippy::too_many_arguments)]
+pub fn pick_replica_pd(
+    policy: RouterPolicy,
+    loads: &[ReplicaLoad],
+    roles: &[ReplicaRole],
+    to_prefill: bool,
+    prefix: Option<u64>,
+    prefix_owner: &HashMap<u64, usize>,
+    rr_next: &mut usize,
+    incoming_cost: f64,
+    affinity_threshold: f64,
+) -> Option<usize> {
+    let tiers: &[&[ReplicaRole]] = if to_prefill {
+        &[
+            &[ReplicaRole::Prefill],
+            &[ReplicaRole::Decode, ReplicaRole::Mixed],
+        ]
+    } else {
+        &[
+            &[ReplicaRole::Decode, ReplicaRole::Mixed],
+            &[ReplicaRole::Prefill],
+        ]
+    };
+    for tier in tiers {
+        // mask out-of-tier replicas as draining in a scratch copy so
+        // the policy core (including the round-robin cursor and the
+        // affinity fallback) sees them exactly like drained ones
+        let mut masked = loads.to_vec();
+        let mut any = false;
+        for (l, r) in masked.iter_mut().zip(roles) {
+            if !tier.contains(r) {
+                l.draining = true;
+            } else if l.healthy && !l.draining {
+                any = true;
+            }
+        }
+        if !any {
+            continue;
+        }
+        if let Some(c) = pick_replica(
+            policy,
+            &masked,
+            prefix,
+            prefix_owner,
+            rr_next,
+            incoming_cost,
+            affinity_threshold,
+        ) {
+            return Some(c);
+        }
+    }
+    None
+}
+
 // ---------------------------------------------------------------------------
 // synchronous driver (benches/tests)
 // ---------------------------------------------------------------------------
@@ -271,11 +381,17 @@ pub struct Router<B: Backend> {
     tokenizer: Tokenizer,
     block_size: usize,
     affinity_threshold: f64,
+    /// PD role per replica (mirrors each engine's own `cfg.role`)
+    roles: Vec<ReplicaRole>,
+    /// hand-off pricing inputs; `None` prices every prefill-heavy
+    /// hand-off as paying (see [`handoff_pays`])
+    pricing: Option<(CostModel, OptConfig)>,
     rr_next: usize,
     prefix_owner: HashMap<u64, usize>,
     outstanding: Vec<f64>,
     draining: Vec<bool>,
-    /// (replica, seq id) per submission, in submission order
+    /// (replica, seq id) per submission, in submission order; hand-off
+    /// dispatch remaps an entry to its destination replica + new id
     routed: Vec<(usize, SeqId)>,
 }
 
@@ -284,13 +400,21 @@ impl<B: Backend> Router<B> {
         assert!(!replicas.is_empty(), "router needs at least one replica");
         let geometry = *replicas[0].backend.geometry();
         let affinity_threshold = affinity_threshold_for(&replicas[0].backend);
+        let pricing = Some((
+            CostModel::for_preset(replicas[0].backend.preset(), geometry.block_size)
+                .with_ctx_scale(8.0),
+            *replicas[0].backend.opt(),
+        ));
         let n = replicas.len();
+        let roles = replicas.iter().map(|e| e.role()).collect();
         Router {
             replicas,
             policy,
             tokenizer: Tokenizer::new(),
             block_size: geometry.block_size,
             affinity_threshold,
+            roles,
+            pricing,
             rr_next: 0,
             prefix_owner: HashMap::new(),
             outstanding: vec![0.0; n],
@@ -305,6 +429,26 @@ impl<B: Backend> Router<B> {
         self
     }
 
+    /// Assign PD roles, one per replica: sets each engine's own role
+    /// (so prefill replicas park finished prompts) and the router's
+    /// placement table.
+    pub fn with_roles(mut self, roles: Vec<ReplicaRole>) -> Self {
+        assert_eq!(roles.len(), self.replicas.len(), "one role per replica");
+        for (e, &r) in self.replicas.iter_mut().zip(&roles) {
+            e.set_role(r);
+        }
+        self.roles = roles;
+        self
+    }
+
+    /// Drop the cost-model gate on hand-off placement: every
+    /// prefill-heavy request routes through a prefill replica (tests —
+    /// keeps PD behaviour independent of the cost-model constants).
+    pub fn with_unpriced_handoff(mut self) -> Self {
+        self.pricing = None;
+        self
+    }
+
     pub fn num_replicas(&self) -> usize {
         self.replicas.len()
     }
@@ -315,6 +459,12 @@ impl<B: Backend> Router<B> {
 
     pub fn replicas(&self) -> &[Engine<B>] {
         &self.replicas
+    }
+
+    /// Mutable view, e.g. for percentile reads (sorting is lazy) after
+    /// a run has completed.
+    pub fn replicas_mut(&mut self) -> &mut [Engine<B>] {
+        &mut self.replicas
     }
 
     pub fn set_draining(&mut self, replica: usize, draining: bool) {
@@ -345,10 +495,12 @@ impl<B: Backend> Router<B> {
 
     /// Route and submit one request; returns (replica, sequence id).
     pub fn submit(&mut self, req: GenRequest) -> Result<(usize, SeqId)> {
+        let pd_active = self.roles.iter().any(|&r| r != ReplicaRole::Mixed);
         // round-robin reads neither the cost estimate nor the prefix
-        // key, so it skips the router-side tokenization entirely
-        let (cost, prefix) = match self.policy {
-            RouterPolicy::RoundRobin => (0.0, None),
+        // key, so it skips the router-side tokenization entirely — but
+        // PD placement needs the prompt length, so roles force it on
+        let (cost, prefix, prompt_tokens) = match self.policy {
+            RouterPolicy::RoundRobin if !pd_active => (0.0, None, 0),
             _ => {
                 let tokens = self.tokenizer.encode(&req.prompt, true, false);
                 let prefix = if self.policy == RouterPolicy::PrefixAffinity {
@@ -359,19 +511,40 @@ impl<B: Backend> Router<B> {
                 (
                     request_cost_estimate(tokens.len(), req.max_new_tokens),
                     prefix,
+                    tokens.len(),
                 )
             }
         };
         let loads = self.loads();
-        let choice = pick_replica(
-            self.policy,
-            &loads,
-            prefix,
-            &self.prefix_owner,
-            &mut self.rr_next,
-            cost,
-            self.affinity_threshold,
-        )
+        let choice = if pd_active {
+            let to_prefill = handoff_pays(
+                self.pricing.as_ref(),
+                self.block_size,
+                prompt_tokens,
+                req.max_new_tokens,
+            );
+            pick_replica_pd(
+                self.policy,
+                &loads,
+                &self.roles,
+                to_prefill,
+                prefix,
+                &self.prefix_owner,
+                &mut self.rr_next,
+                cost,
+                self.affinity_threshold,
+            )
+        } else {
+            pick_replica(
+                self.policy,
+                &loads,
+                prefix,
+                &self.prefix_owner,
+                &mut self.rr_next,
+                cost,
+                self.affinity_threshold,
+            )
+        }
         .ok_or_else(|| anyhow!("no routable replica (all draining)"))?;
         if let Some(h) = prefix {
             record_prefix_owner(&mut self.prefix_owner, h, choice, &loads);
@@ -382,16 +555,97 @@ impl<B: Backend> Router<B> {
         Ok((choice, id))
     }
 
+    /// Collect parked sequences from prefill-role replicas and re-admit
+    /// each on the least-loaded decode-capable replica.  A sequence with
+    /// no routable destination at all is aborted back to local decode;
+    /// one whose destinations are merely batch-full right now is
+    /// deferred to a later round, so the hand-off lands on the KV path
+    /// once a decode slot frees instead of degrading to re-prefill.
+    /// Returns whether any hand-off was resolved (moved or aborted).
+    fn dispatch_handoffs(&mut self) -> Result<bool> {
+        let mut moved = false;
+        for i in 0..self.replicas.len() {
+            for id in self.replicas[i].take_handoff_ready() {
+                let loads = self.loads();
+                let routable = |j: &usize| {
+                    *j != i && self.roles[*j].accepts_decode() && !self.draining[*j]
+                };
+                if !(0..self.replicas.len()).any(|j| routable(&j)) {
+                    // back to local decode: still progress
+                    moved |= self.replicas[i].abort_handoff(id);
+                    continue;
+                }
+                let dest = (0..self.replicas.len())
+                    .filter(routable)
+                    .filter(|&j| self.replicas[j].has_batch_slot())
+                    .min_by(|&a, &b| load_score(&loads[a]).total_cmp(&load_score(&loads[b])));
+                let Some(j) = dest else {
+                    // all destinations batch-full: retry next round
+                    self.replicas[i].defer_handoff(id);
+                    continue;
+                };
+                let h = self.replicas[i].make_handoff(id)?;
+                // the remaining work (its decode tokens) moves with it
+                let rest = 5.0 * h.max_new.saturating_sub(h.tokens.len() - h.prompt_len) as f64;
+                let new_id = self.replicas[j].migrate_in_seq(h)?;
+                self.outstanding[i] = (self.outstanding[i] - rest).max(0.0);
+                self.outstanding[j] += rest;
+                for slot in self.routed.iter_mut() {
+                    if *slot == (i, id) {
+                        *slot = (j, new_id);
+                    }
+                }
+                moved = true;
+            }
+        }
+        Ok(moved)
+    }
+
     /// Drive every replica to completion; results come back in
-    /// submission order (replicas are independent, so running them in
-    /// sequence leaves each one's simulated-clock metrics untouched).
+    /// submission order.  Without PD roles the replicas are independent
+    /// and run in sequence (leaving each one's simulated-clock metrics
+    /// untouched); with roles assigned they are stepped round-robin so
+    /// hand-offs dispatch between rounds, exactly like the serving
+    /// path's dispatcher thread.
     pub fn run_to_completion(&mut self) -> Result<Vec<RoutedResult>> {
         let mut by_key: HashMap<(usize, SeqId), GenResult> = HashMap::new();
-        for (i, engine) in self.replicas.iter_mut().enumerate() {
-            for r in engine.run_to_completion()? {
-                by_key.insert((i, r.id), r);
+        let pd_active = self.roles.iter().any(|&r| r != ReplicaRole::Mixed);
+        if !pd_active {
+            for (i, engine) in self.replicas.iter_mut().enumerate() {
+                for r in engine.run_to_completion()? {
+                    by_key.insert((i, r.id), r);
+                }
+                self.outstanding[i] = 0.0;
             }
-            self.outstanding[i] = 0.0;
+        } else {
+            for e in self.replicas.iter_mut() {
+                e.metrics.start_run();
+            }
+            loop {
+                let mut progressed = false;
+                for i in 0..self.replicas.len() {
+                    // parked sequences wait on dispatch, not stepping
+                    if self.replicas[i].num_pending() > self.replicas[i].num_migrating() {
+                        for r in self.replicas[i].step()? {
+                            by_key.insert((i, r.id), r);
+                        }
+                        progressed = true;
+                    }
+                }
+                progressed |= self.dispatch_handoffs()?;
+                if self.replicas.iter().all(|e| e.num_pending() == 0) {
+                    break;
+                }
+                if !progressed {
+                    bail!("router wedged: pending work but no replica can progress");
+                }
+            }
+            for e in self.replicas.iter_mut() {
+                e.metrics.finish_run();
+            }
+            for o in self.outstanding.iter_mut() {
+                *o = 0.0;
+            }
         }
         std::mem::take(&mut self.routed)
             .into_iter()
@@ -416,6 +670,25 @@ pub struct ReplicaStatus {
     pub healthy: bool,
     pub draining: bool,
     pub in_flight: usize,
+    pub role: ReplicaRole,
+}
+
+/// [`ReplicaRole`] packed into an atomic for the lock-free role table
+/// (the autoscaler writes it while the routing path reads it).
+fn role_code(r: ReplicaRole) -> u8 {
+    match r {
+        ReplicaRole::Prefill => 0,
+        ReplicaRole::Decode => 1,
+        ReplicaRole::Mixed => 2,
+    }
+}
+
+fn role_from_code(c: u8) -> ReplicaRole {
+    match c {
+        0 => ReplicaRole::Prefill,
+        1 => ReplicaRole::Decode,
+        _ => ReplicaRole::Mixed,
+    }
 }
 
 struct RouterReplica {
@@ -455,6 +728,12 @@ const CLUSTER_SUM_KEYS: &[&str] = &[
     "host_pool_blocks",
     "host_blocks_used",
     "swapped_seqs",
+    "migrations_out",
+    "migrations_in",
+    "migrated_blocks_out",
+    "migrated_blocks_in",
+    "migration_bytes",
+    "migrations_token_fallback",
 ];
 
 /// Threaded N-replica front-end: each replica is an [`EngineHandle`]
@@ -462,16 +741,26 @@ const CLUSTER_SUM_KEYS: &[&str] = &[
 /// plus the router's own in-flight accounting.  The [`crate::server`]
 /// HTTP layer serves through this.
 pub struct RouterHandle {
-    replicas: Vec<RouterReplica>,
+    replicas: Arc<Vec<RouterReplica>>,
+    /// lock-free PD role table ([`role_code`]); the engines hold their
+    /// own copy, updated via [`EngineHandle::set_role`] messages
+    roles: Arc<Vec<AtomicU8>>,
     policy: RouterPolicy,
     tokenizer: Tokenizer,
     block_size: usize,
     affinity_threshold: f64,
+    /// hand-off pricing inputs; `None` (N = 1 wrapper) prices every
+    /// prefill-heavy hand-off as paying
+    pricing: Option<(CostModel, OptConfig)>,
     state: Mutex<RouteState>,
 }
 
 impl RouterHandle {
-    /// Spawn one engine thread per replica.
+    /// Spawn one engine thread per replica, plus the hand-off
+    /// dispatcher draining the cluster's hand-off bus: a prefill-role
+    /// engine ships each sequence it parks at prefill completion (with
+    /// its waiting client) to the bus, and the dispatcher re-admits it
+    /// on the least-loaded decode-capable replica.
     pub fn spawn<B: Backend + Send + 'static>(
         engines: Vec<Engine<B>>,
         policy: RouterPolicy,
@@ -479,20 +768,41 @@ impl RouterHandle {
         assert!(!engines.is_empty(), "router needs at least one replica");
         let geometry = *engines[0].backend.geometry();
         let affinity_threshold = affinity_threshold_for(&engines[0].backend);
+        let pricing = Some((
+            CostModel::for_preset(engines[0].backend.preset(), geometry.block_size)
+                .with_ctx_scale(8.0),
+            *engines[0].backend.opt(),
+        ));
         let n = engines.len();
-        RouterHandle {
-            replicas: engines
+        let roles: Arc<Vec<AtomicU8>> = Arc::new(
+            engines
+                .iter()
+                .map(|e| AtomicU8::new(role_code(e.role())))
+                .collect(),
+        );
+        let (handoff_tx, handoff_rx) = std::sync::mpsc::channel();
+        let replicas: Arc<Vec<RouterReplica>> = Arc::new(
+            engines
                 .into_iter()
-                .map(|e| RouterReplica {
-                    handle: EngineHandle::spawn(e),
+                .enumerate()
+                .map(|(i, e)| RouterReplica {
+                    handle: EngineHandle::spawn_routed(e, i, handoff_tx.clone()),
                     in_flight: AtomicUsize::new(0),
                     draining: AtomicBool::new(false),
                 })
                 .collect(),
+        );
+        // the dispatcher exits when every engine thread (sender) is gone
+        drop(handoff_tx);
+        spawn_handoff_dispatcher(Arc::clone(&replicas), Arc::clone(&roles), handoff_rx);
+        RouterHandle {
+            replicas,
+            roles,
             policy,
             tokenizer: Tokenizer::new(),
             block_size: geometry.block_size,
             affinity_threshold,
+            pricing,
             state: Mutex::new(RouteState {
                 rr_next: 0,
                 prefix_owner: HashMap::new(),
@@ -506,15 +816,17 @@ impl RouterHandle {
     /// policy is the identity there, so no cost model is consulted).
     pub fn single(handle: EngineHandle) -> Self {
         RouterHandle {
-            replicas: vec![RouterReplica {
+            replicas: Arc::new(vec![RouterReplica {
                 handle,
                 in_flight: AtomicUsize::new(0),
                 draining: AtomicBool::new(false),
-            }],
+            }]),
+            roles: Arc::new(vec![AtomicU8::new(role_code(ReplicaRole::Mixed))]),
             policy: RouterPolicy::RoundRobin,
             tokenizer: Tokenizer::new(),
             block_size: 16,
             affinity_threshold: 1.0,
+            pricing: None,
             state: Mutex::new(RouteState {
                 rr_next: 0,
                 prefix_owner: HashMap::new(),
@@ -523,12 +835,47 @@ impl RouterHandle {
         }
     }
 
+    /// Drop the cost-model gate on hand-off placement: every
+    /// prefill-heavy request starts on a prefill replica regardless of
+    /// what the PCIe-vs-re-prefill pricing says.  Deterministic PD
+    /// activation for tests and benches.
+    pub fn with_unpriced_handoff(mut self) -> Self {
+        self.pricing = None;
+        self
+    }
+
     pub fn num_replicas(&self) -> usize {
         self.replicas.len()
     }
 
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    /// A replica's current PD role (the router's placement table).
+    pub fn role(&self, replica: usize) -> ReplicaRole {
+        role_from_code(self.roles[replica].load(Ordering::Relaxed))
+    }
+
+    fn roles_vec(&self) -> Vec<ReplicaRole> {
+        self.roles
+            .iter()
+            .map(|r| role_from_code(r.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Re-role a replica (`/admin/role`, autoscaler): the placement
+    /// table updates immediately; the engine thread applies the role
+    /// before its next step, so an in-progress park still completes.
+    pub fn set_role(&self, replica: usize, role: ReplicaRole) -> Result<()> {
+        let r = self.replicas.get(replica).ok_or_else(|| {
+            anyhow!(
+                "no replica {replica} (cluster has {})",
+                self.replicas.len()
+            )
+        })?;
+        self.roles[replica].store(role_code(role), Ordering::Relaxed);
+        r.handle.set_role(role)
     }
 
     /// Take a replica out of rotation (or put it back).  In-flight
@@ -553,8 +900,20 @@ impl RouterHandle {
                 healthy: r.handle.is_alive(),
                 draining: r.draining.load(Ordering::Relaxed),
                 in_flight: r.in_flight.load(Ordering::Relaxed),
+                role: self.role(i),
             })
             .collect()
+    }
+
+    /// The router's outstanding-token estimates, one per replica.  They
+    /// must drain back to zero as requests finish — success or failure —
+    /// or least-loaded placement is permanently biased (tests).
+    pub fn outstanding_estimates(&self) -> Vec<f64> {
+        self.state
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .outstanding
+            .clone()
     }
 
     fn loads(&self, outstanding: &[f64]) -> Vec<ReplicaLoad> {
@@ -581,12 +940,18 @@ impl RouterHandle {
     }
 
     /// Route one request and generate through the chosen replica
-    /// (blocking, like [`EngineHandle::generate`]).
+    /// (blocking, like [`EngineHandle::generate`]).  With PD roles
+    /// assigned, a prefill-heavy request whose hand-off pays starts on
+    /// a prefill replica; the reply then comes from whichever replica
+    /// the sequence migrated to.
     pub fn generate(&self, req: GenRequest) -> Result<GenResult> {
+        let roles = self.roles_vec();
+        let pd_active = roles.iter().any(|&r| r != ReplicaRole::Mixed);
         // round-robin reads neither the cost estimate nor the prefix
-        // key, so it skips the router-side tokenization entirely
-        let (cost, prefix) = match self.policy {
-            RouterPolicy::RoundRobin => (0.0, None),
+        // key, so it skips the router-side tokenization entirely — but
+        // PD placement needs the prompt length, so roles force it on
+        let (cost, prefix, prompt_tokens) = match self.policy {
+            RouterPolicy::RoundRobin if !pd_active => (0.0, None, 0),
             _ => {
                 let tokens = self.tokenizer.encode(&req.prompt, true, false);
                 let prefix = if self.policy == RouterPolicy::PrefixAffinity {
@@ -597,22 +962,48 @@ impl RouterHandle {
                 (
                     request_cost_estimate(tokens.len(), req.max_new_tokens),
                     prefix,
+                    tokens.len(),
                 )
             }
         };
         let choice = {
-            let mut guard = self.state.lock().unwrap();
+            // recover a poisoned lock: the routing state is plain
+            // bookkeeping (cursor, owner map, token estimates), valid
+            // whatever a panicking thread was doing.  Propagating the
+            // poison would wedge every subsequent request permanently.
+            let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
             let st = &mut *guard;
             let loads = self.loads(&st.outstanding);
-            let Some(c) = pick_replica(
-                self.policy,
-                &loads,
-                prefix,
-                &st.prefix_owner,
-                &mut st.rr_next,
-                cost,
-                self.affinity_threshold,
-            ) else {
+            let picked = if pd_active {
+                let to_prefill = handoff_pays(
+                    self.pricing.as_ref(),
+                    self.block_size,
+                    prompt_tokens,
+                    req.max_new_tokens,
+                );
+                pick_replica_pd(
+                    self.policy,
+                    &loads,
+                    &roles,
+                    to_prefill,
+                    prefix,
+                    &st.prefix_owner,
+                    &mut st.rr_next,
+                    cost,
+                    self.affinity_threshold,
+                )
+            } else {
+                pick_replica(
+                    self.policy,
+                    &loads,
+                    prefix,
+                    &st.prefix_owner,
+                    &mut st.rr_next,
+                    cost,
+                    self.affinity_threshold,
+                )
+            };
+            let Some(c) = picked else {
                 bail!("no routable replica (all draining or dead)");
             };
             if let Some(h) = prefix {
@@ -624,9 +1015,12 @@ impl RouterHandle {
         self.replicas[choice].in_flight.fetch_add(1, Ordering::Relaxed);
         let result = self.replicas[choice].handle.generate(req);
         self.replicas[choice].in_flight.fetch_sub(1, Ordering::Relaxed);
-        if let Ok(mut st) = self.state.lock() {
-            st.outstanding[choice] = (st.outstanding[choice] - cost).max(0.0);
-        }
+        // same poison recovery as the routing path above: the two must
+        // agree, or one panicking thread leaks its outstanding-token
+        // estimate forever and biases least_loaded away from the replica
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.outstanding[choice] = (st.outstanding[choice] - cost).max(0.0);
+        drop(st);
         result
     }
 
@@ -653,6 +1047,12 @@ impl RouterHandle {
         };
         top.insert("num_replicas", self.replicas.len());
         top.insert("router_policy", self.policy.name());
+        let role_names: Vec<Value> = self
+            .roles_vec()
+            .into_iter()
+            .map(|r| r.name().into())
+            .collect();
+        top.insert("replica_roles", Value::Array(role_names));
         let reps: Vec<Value> = parsed
             .into_iter()
             .zip(snaps.iter())
@@ -664,6 +1064,7 @@ impl RouterHandle {
                 o.insert("healthy", st.healthy);
                 o.insert("draining", st.draining);
                 o.insert("in_flight", st.in_flight);
+                o.insert("role", st.role.name());
                 o.insert("pending", snap.pending);
                 o.insert("metrics", v);
                 Value::Object(o)
@@ -671,6 +1072,178 @@ impl RouterHandle {
             .collect();
         top.insert("replicas", Value::Array(reps));
         Value::Object(top).to_string()
+    }
+
+    /// One autoscaling control step over the cluster's queue-depth and
+    /// occupancy-spread signals; returns what it did (`"scale_up"`,
+    /// `"scale_down"`, `"rerole"`, `"noop"`) for the serve loop's log
+    /// and the tests.  Capacity rotates through the existing
+    /// `/admin/drain` mechanism, so scaling down never kills in-flight
+    /// work, and a drained replica is re-admitted (scaled up) the
+    /// moment the backlog crosses the high-water mark.  Re-roling
+    /// pushes the idlest replica toward the busiest one's
+    /// specialization when the spread says one phase pool is
+    /// saturated, but never strands a phase: the active set always
+    /// keeps at least one prefill-capable and one decode-capable
+    /// replica.
+    pub fn autoscale_tick(&self) -> &'static str {
+        let n = self.replicas.len();
+        if n < 2 {
+            return "noop";
+        }
+        let depths: Vec<f64> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                let pending = r.handle.snapshot().pending;
+                r.in_flight.load(Ordering::Relaxed).max(pending) as f64
+            })
+            .collect();
+        let live = |i: usize| self.replicas[i].handle.is_alive();
+        let draining = |i: usize| self.replicas[i].draining.load(Ordering::Relaxed);
+        let active: Vec<usize> = (0..n).filter(|&i| live(i) && !draining(i)).collect();
+        let parked: Vec<usize> = (0..n).filter(|&i| live(i) && draining(i)).collect();
+        let total: f64 = active.iter().map(|&i| depths[i]).sum();
+        // scale up: backlog past the active pool's high-water mark and
+        // drained capacity is available
+        if !parked.is_empty() && total >= AUTOSCALE_HIGH_DEPTH * active.len().max(1) as f64 {
+            let _ = self.set_draining(parked[0], false);
+            return "scale_up";
+        }
+        // scale down: cluster nearly idle — rotate out the
+        // highest-index idle replica whose absence keeps both phases
+        // covered
+        if active.len() > 1 && total <= AUTOSCALE_LOW_DEPTH {
+            let survives = |without: usize| {
+                let rest: Vec<ReplicaRole> = active
+                    .iter()
+                    .filter(|&&i| i != without)
+                    .map(|&i| self.role(i))
+                    .collect();
+                rest.iter().any(|r| r.accepts_prefill()) && rest.iter().any(|r| r.accepts_decode())
+            };
+            if let Some(&victim) = active
+                .iter()
+                .rev()
+                .find(|&&i| depths[i] == 0.0 && survives(i))
+            {
+                let _ = self.set_draining(victim, true);
+                return "scale_down";
+            }
+        }
+        // re-role: one phase pool saturated while another replica
+        // idles — give the idlest replica the busiest one's role
+        if active.len() >= 2 {
+            let spread: Vec<f64> = active.iter().map(|&i| depths[i]).collect();
+            if replica_imbalance(&spread) > AUTOSCALE_REROLE_SPREAD {
+                let busiest = *active
+                    .iter()
+                    .max_by(|&&a, &&b| depths[a].total_cmp(&depths[b]))
+                    .unwrap();
+                let idlest = *active
+                    .iter()
+                    .min_by(|&&a, &&b| depths[a].total_cmp(&depths[b]))
+                    .unwrap();
+                let want = self.role(busiest);
+                let covered = {
+                    let rest: Vec<ReplicaRole> = active
+                        .iter()
+                        .map(|&i| if i == idlest { want } else { self.role(i) })
+                        .collect();
+                    rest.iter().any(|r| r.accepts_prefill())
+                        && rest.iter().any(|r| r.accepts_decode())
+                };
+                if busiest != idlest
+                    && want != ReplicaRole::Mixed
+                    && self.role(idlest) != want
+                    && covered
+                {
+                    let _ = self.set_role(idlest, want);
+                    return "rerole";
+                }
+            }
+        }
+        "noop"
+    }
+}
+
+/// Autoscaler watermarks: scale up when the active pool's total queue
+/// depth exceeds this many requests per active replica, scale down when
+/// the whole cluster's depth falls to the low mark, and consider
+/// re-roling when the queue-depth spread ([`replica_imbalance`]) says
+/// one phase pool is saturated while another idles.
+const AUTOSCALE_HIGH_DEPTH: f64 = 4.0;
+const AUTOSCALE_LOW_DEPTH: f64 = 1.0;
+const AUTOSCALE_REROLE_SPREAD: f64 = 1.0;
+
+/// Run [`RouterHandle::autoscale_tick`] on a background thread every
+/// `interval` (`--pd-autoscale`).  Holds only a weak reference, so the
+/// thread winds down when the router is dropped.
+pub fn start_autoscaler(router: &Arc<RouterHandle>, interval: std::time::Duration) {
+    let weak = Arc::downgrade(router);
+    std::thread::Builder::new()
+        .name("coopt-autoscale".into())
+        .spawn(move || loop {
+            std::thread::sleep(interval);
+            let Some(r) = weak.upgrade() else { return };
+            let action = r.autoscale_tick();
+            if action != "noop" {
+                crate::log_info!("autoscaler: {action}");
+            }
+        })
+        .expect("spawn autoscaler thread");
+}
+
+/// The hand-off dispatcher: one thread draining the cluster's hand-off
+/// bus.  Each envelope goes to the least-loaded decode-capable replica;
+/// the source replica is the fallback (a migrated-in sequence is
+/// decode-ready and never re-parks, so sending it home is always safe).
+/// Runs until every engine thread (every bus sender) is gone.
+fn spawn_handoff_dispatcher(
+    replicas: Arc<Vec<RouterReplica>>,
+    roles: Arc<Vec<AtomicU8>>,
+    rx: std::sync::mpsc::Receiver<HandoffEnvelope>,
+) {
+    std::thread::Builder::new()
+        .name("coopt-handoff".into())
+        .spawn(move || {
+            while let Ok(env) = rx.recv() {
+                dispatch_one_handoff(&replicas, &roles, env);
+            }
+        })
+        .expect("spawn hand-off dispatcher");
+}
+
+fn dispatch_one_handoff(replicas: &[RouterReplica], roles: &[AtomicU8], env: HandoffEnvelope) {
+    let depth = |j: usize| {
+        let pending = replicas[j].handle.snapshot().pending;
+        replicas[j].in_flight.load(Ordering::Relaxed).max(pending)
+    };
+    let dest = (0..replicas.len())
+        .filter(|&j| {
+            j != env.from
+                && role_from_code(roles[j].load(Ordering::Relaxed)).accepts_decode()
+                && replicas[j].handle.is_alive()
+                && !replicas[j].draining.load(Ordering::Relaxed)
+        })
+        .min_by_key(|&j| depth(j))
+        .unwrap_or(env.from);
+    let HandoffEnvelope {
+        from,
+        handoff,
+        reply,
+    } = env;
+    if let Err((h, r)) = replicas[dest].handle.migrate_in(handoff, reply) {
+        // destination thread died between the health check and the
+        // send: fall back to the source, then fail the waiter
+        let failed = if dest != from {
+            replicas[from].handle.migrate_in(h, r)
+        } else {
+            Err((h, r))
+        };
+        if let Err((_, r)) = failed {
+            let _ = r.send(Err(anyhow!("engine error: hand-off destination lost")));
+        }
     }
 }
 
@@ -712,7 +1285,7 @@ fn cluster_aggregate(parsed: &[Value]) -> Object {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{EngineConfig, COOPT};
+    use crate::config::{EngineConfig, SwapPolicy, COOPT};
     use crate::runtime::mock::MockBackend;
 
     fn loads(n: usize) -> Vec<ReplicaLoad> {
@@ -1071,5 +1644,304 @@ mod tests {
     fn request_cost_estimate_weighs_decode_heavier() {
         assert!(request_cost_estimate(10, 10) > request_cost_estimate(30, 4));
         assert_eq!(request_cost_estimate(0, 0), 0.0);
+    }
+
+    // ---- disaggregated prefill/decode -------------------------------------
+
+    #[test]
+    fn pd_placement_masks_roles_and_falls_back() {
+        let roles = [ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed];
+        let owners = HashMap::new();
+        let mut ls = loads(3);
+        let mut rr = 0;
+        let mut pd = |ls: &[ReplicaLoad], to_prefill: bool| {
+            pick_replica_pd(
+                RouterPolicy::LeastLoaded,
+                ls,
+                &roles,
+                to_prefill,
+                None,
+                &owners,
+                &mut rr,
+                10.0,
+                1.0,
+            )
+        };
+        // prefill-bound requests land on the prefill pool, everything
+        // else on the decode-capable pool
+        assert_eq!(pd(&ls, true), Some(0));
+        assert_eq!(pd(&ls, false), Some(1));
+        // preferred pool drained: fall back to the other tier rather
+        // than refusing the request
+        ls[0].draining = true;
+        assert_eq!(pd(&ls, true), Some(1));
+        ls[0].draining = false;
+        ls[1].draining = true;
+        ls[2].healthy = false;
+        assert_eq!(pd(&ls, false), Some(0), "prefill replica is the fallback");
+        ls[0].draining = true;
+        assert_eq!(pd(&ls, true), None, "nothing routable");
+    }
+
+    #[test]
+    fn handoff_pays_gates_on_prefill_dominance_then_price() {
+        let be = MockBackend::new().with_opt(COOPT);
+        let pricing = (
+            CostModel::for_preset(be.preset(), 16).with_ctx_scale(8.0),
+            *be.opt(),
+        );
+        // decode-heavy requests never start on a prefill replica, with
+        // or without a cost model
+        assert!(!handoff_pays(Some(&pricing), 16, 10, 10));
+        assert!(!handoff_pays(None, 16, 10, 10));
+        // prefill-heavy and unpriced: always pays
+        assert!(handoff_pays(None, 16, 96, 4));
+        // priced: exactly the cost model's swap-vs-recompute relation
+        // (+1 block for the sampled tail's landing block)
+        let expect = pricing.0.swap_beats_recompute(96usize.div_ceil(16) + 1, 96, &pricing.1);
+        assert_eq!(handoff_pays(Some(&pricing), 16, 96, 4), expect);
+    }
+
+    fn pd_engine(role: ReplicaRole) -> Engine<MockBackend> {
+        Engine::new(
+            MockBackend::new().with_opt(COOPT),
+            EngineConfig::new("llama-7b-sim", COOPT)
+                .with_host_pool(64)
+                .with_swap_policy(SwapPolicy::Always)
+                .with_role(role),
+        )
+    }
+
+    fn pd_reqs(n: usize, pad: usize, max_new: usize) -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| GenRequest::greedy(format!("pd handoff {i} {}", "p".repeat(pad + i)), max_new))
+            .collect()
+    }
+
+    #[test]
+    fn pd_split_cluster_matches_single_engine_and_hands_off() {
+        let reqs = pd_reqs(6, 40, 4);
+        let mut single = mock_engine();
+        let base = single.generate(reqs.clone()).unwrap();
+        let mut router = Router::new(
+            vec![
+                pd_engine(ReplicaRole::Prefill),
+                pd_engine(ReplicaRole::Decode),
+                pd_engine(ReplicaRole::Mixed),
+            ],
+            RouterPolicy::LeastLoaded,
+        )
+        .with_unpriced_handoff();
+        let mut picks = Vec::new();
+        for r in &reqs {
+            picks.push(router.submit(r.clone()).unwrap().0);
+        }
+        assert!(
+            picks.iter().all(|&p| p == 0),
+            "prefill-heavy requests start on the prefill replica: {picks:?}"
+        );
+        let got = router.run_to_completion().unwrap();
+        assert_eq!(base.len(), got.len());
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.tokens, b.result.tokens, "hand-off is token-identical");
+            assert_eq!(a.finish, b.result.finish);
+            assert_ne!(b.replica, 0, "decode finished away from the prefill replica");
+        }
+        let pre = &router.replicas()[0];
+        assert_eq!(pre.metrics.migrations_out, 6, "every sequence left via the host tier");
+        assert_eq!(pre.metrics.decode_steps, 0, "the prefill replica never decodes");
+        assert!(pre.metrics.migration_bytes > 0);
+        let landed: u64 = router.replicas().iter().map(|e| e.metrics.migrations_in).sum();
+        assert_eq!(landed, 6);
+        for e in router.replicas() {
+            assert_eq!(e.tier_stats().host_used_blocks, 0, "staging slots all released");
+            assert_eq!(e.cache_stats().blocks_used, 0);
+        }
+    }
+
+    #[test]
+    fn pd_without_destination_aborts_to_local_decode() {
+        let reqs = pd_reqs(2, 40, 3);
+        let mut single = mock_engine();
+        let base = single.generate(reqs.clone()).unwrap();
+        let mut router = Router::new(
+            vec![pd_engine(ReplicaRole::Prefill), pd_engine(ReplicaRole::Prefill)],
+            RouterPolicy::LeastLoaded,
+        )
+        .with_unpriced_handoff();
+        for r in &reqs {
+            router.submit(r.clone()).unwrap();
+        }
+        let got = router.run_to_completion().unwrap();
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.tokens, b.result.tokens, "aborted hand-off still decodes locally");
+        }
+        let moved: u64 = router.replicas().iter().map(|e| e.metrics.migrations_out).sum();
+        assert_eq!(moved, 0, "no decode-capable destination: nothing migrates");
+    }
+
+    #[test]
+    fn poisoned_route_state_recovers_on_both_paths() {
+        let router = RouterHandle::spawn(
+            vec![mock_engine(), mock_engine()],
+            RouterPolicy::LeastLoaded,
+        );
+        // a panic while holding the routing lock poisons it for good
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = router.state.lock().unwrap();
+            panic!("poison the route state");
+        }));
+        assert!(router.state.lock().is_err(), "mutex is poisoned");
+        // both lock sites (placement and the completion-side estimate
+        // decrement) must shrug it off: requests keep routing and the
+        // estimates keep draining — a wedged router here was the bug
+        for i in 0..4 {
+            let r = router
+                .generate(GenRequest::greedy(format!("after poison {i}"), 3))
+                .unwrap();
+            assert_eq!(r.generated_tokens, 3);
+        }
+        for o in router.outstanding_estimates() {
+            assert!(o.abs() < 1e-9, "outstanding estimate leaked: {o}");
+        }
+    }
+
+    struct FlakyDecode {
+        inner: MockBackend,
+        fail: bool,
+    }
+    impl Backend for FlakyDecode {
+        fn preset(&self) -> &crate::config::ModelPreset {
+            self.inner.preset()
+        }
+        fn geometry(&self) -> &crate::config::CacheGeometry {
+            self.inner.geometry()
+        }
+        fn opt(&self) -> &OptConfig {
+            self.inner.opt()
+        }
+        fn prefill(&mut self, t: &[i32], l: i32, s: &[i32]) -> Result<Vec<f32>> {
+            self.inner.prefill(t, l, s)
+        }
+        fn decode(
+            &mut self,
+            t: &[i32],
+            p: &[i32],
+            b: &[i32],
+            c: &[i32],
+            s: &[i32],
+        ) -> Result<Vec<f32>> {
+            if self.fail {
+                bail!("simulated accelerator fault");
+            }
+            self.inner.decode(t, p, b, c, s)
+        }
+        fn reset_cache(&mut self) -> Result<()> {
+            self.inner.reset_cache()
+        }
+        fn take_exec_time(&mut self) -> std::time::Duration {
+            self.inner.take_exec_time()
+        }
+    }
+
+    #[test]
+    fn replica_death_mid_request_rebalances_accounting() {
+        let mk = |fail| {
+            Engine::new(
+                FlakyDecode { inner: MockBackend::new().with_opt(COOPT), fail },
+                EngineConfig::new("llama-7b-sim", COOPT),
+            )
+        };
+        let router = RouterHandle::spawn(vec![mk(false), mk(true)], RouterPolicy::LeastLoaded);
+        let r = router
+            .generate(GenRequest::greedy("healthy replica", 3))
+            .unwrap();
+        assert_eq!(r.generated_tokens, 3);
+        // force the next request onto the faulty replica, which dies
+        // mid-request (prefill lands, the first decode step faults)
+        router.set_draining(0, true).unwrap();
+        let err = router
+            .generate(GenRequest::greedy("doomed request", 3))
+            .unwrap_err();
+        assert!(err.to_string().contains("engine error"), "{err}");
+        // the failure leaves no residue in the router's books: the
+        // in-flight gauges and outstanding estimates return to balance,
+        // so least-loaded placement is never permanently biased
+        let st = router.status();
+        assert_eq!(st[0].in_flight + st[1].in_flight, 0);
+        for o in router.outstanding_estimates() {
+            assert!(o.abs() < 1e-9, "outstanding estimate leaked: {o}");
+        }
+        assert!(st[1].healthy, "the engine thread survives a step fault");
+        router.set_draining(0, false).unwrap();
+        let r = router
+            .generate(GenRequest::greedy("back to balance", 2))
+            .unwrap();
+        assert_eq!(r.generated_tokens, 2);
+    }
+
+    #[test]
+    fn router_handle_hands_off_through_the_dispatcher() {
+        let router = RouterHandle::spawn(
+            vec![pd_engine(ReplicaRole::Prefill), pd_engine(ReplicaRole::Decode)],
+            RouterPolicy::LeastLoaded,
+        )
+        .with_unpriced_handoff();
+        assert_eq!(router.role(0), ReplicaRole::Prefill);
+        let reqs = pd_reqs(3, 40, 4);
+        let mut single = mock_engine();
+        let base = single.generate(reqs.clone()).unwrap();
+        for (req, b) in reqs.iter().zip(&base) {
+            let got = router.generate(req.clone()).unwrap();
+            assert_eq!(got.tokens, b.tokens, "threaded hand-off is token-identical");
+        }
+        // the migration counters reach the aggregated cluster view
+        // (snapshots publish after each engine's next step; poll)
+        let mut seen = false;
+        for _ in 0..400 {
+            let v = json::parse(&router.metrics_json()).unwrap();
+            if v.req_usize("migrations_out").unwrap_or(0) >= 3
+                && v.req_usize("migrations_in").unwrap_or(0) >= 3
+            {
+                assert_eq!(v.req_array("replica_roles").unwrap().len(), 2);
+                seen = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(seen, "migration counters never reached the cluster metrics");
+        // books balanced after the hand-offs
+        for o in router.outstanding_estimates() {
+            assert!(o.abs() < 1e-9);
+        }
+        let st = router.status();
+        assert_eq!(st[0].in_flight + st[1].in_flight, 0);
+    }
+
+    #[test]
+    fn autoscaler_rotates_reroles_and_keeps_coverage() {
+        let router = RouterHandle::spawn(
+            vec![mock_engine(), mock_engine(), mock_engine()],
+            RouterPolicy::LeastLoaded,
+        );
+        // idle cluster: drain one replica per tick down to a floor of one
+        assert_eq!(router.autoscale_tick(), "scale_down");
+        assert_eq!(router.autoscale_tick(), "scale_down");
+        assert_eq!(router.autoscale_tick(), "noop", "never drains the last replica");
+        assert_eq!(router.status().iter().filter(|s| s.draining).count(), 2);
+        // queue-depth surge past the high-water mark: re-admit capacity
+        router.replicas[0].in_flight.store(8, Ordering::Relaxed);
+        assert_eq!(router.autoscale_tick(), "scale_up");
+        assert_eq!(router.status().iter().filter(|s| s.draining).count(), 1);
+        // still saturated: the next tick re-admits the rest
+        router.set_role(0, ReplicaRole::Prefill).unwrap();
+        assert_eq!(router.autoscale_tick(), "scale_up");
+        // the backlog sits entirely on the prefill replica while the
+        // others idle: the idlest replica adopts its specialization
+        assert_eq!(router.autoscale_tick(), "rerole");
+        assert_eq!(router.role(1), ReplicaRole::Prefill);
+        // and then holds: the idlest replica already specializes, so
+        // another tick must not churn roles
+        assert_eq!(router.autoscale_tick(), "noop");
     }
 }

@@ -546,6 +546,36 @@ impl Backend for MockBackend {
         true
     }
 
+    fn export_block(&mut self, device_block: u32, host_slot: u64) -> Result<u64> {
+        if self.host_payload.contains_key(&host_slot) {
+            bail!("mock: export_block into occupied host slot {host_slot}");
+        }
+        // a migration export COPIES: the device payload stays resident
+        // until the cache actually frees the block, and the returned
+        // payload is what travels in the hand-off envelope
+        let Some(&payload) = self.device_payload.get(&device_block) else {
+            bail!(
+                "mock: export_block of block {device_block} that holds no device \
+                 payload (never written, or already swapped out)"
+            );
+        };
+        self.host_payload.insert(host_slot, payload);
+        self.swap_trace.push(('E', device_block, host_slot));
+        self.spin();
+        Ok(payload)
+    }
+
+    fn import_block(&mut self, device_block: u32, payload: u64) -> Result<()> {
+        self.device_payload.insert(device_block, payload);
+        self.swap_trace.push(('M', device_block, payload));
+        self.spin();
+        Ok(())
+    }
+
+    fn supports_kv_migration(&self) -> bool {
+        true
+    }
+
     fn reset_cache(&mut self) -> Result<()> {
         self.device_payload.clear();
         self.host_payload.clear();
@@ -682,6 +712,64 @@ mod tests {
         assert!(m.decode(&tid, &pos, &bt, &ctx, &sm).is_ok());
         assert_eq!(m.swap_trace, vec![('O', 1, 7), ('I', 1, 7)]);
         assert!(m.supports_kv_swap());
+    }
+
+    #[test]
+    fn export_copies_and_import_restores_residency() {
+        let mut src = MockBackend::with_geometry(CacheGeometry {
+            block_size: 4,
+            max_blocks: 4,
+            num_pool_blocks: 8,
+            max_batch: 2,
+            max_seq: 16,
+        });
+        let s = src.geometry().max_seq;
+        let mut toks = vec![0i32; s];
+        let mut slots = vec![-1i32; s];
+        for i in 0..8 {
+            toks[i] = 40 + i as i32;
+            slots[i] = i as i32;
+        }
+        src.prefill(&toks, 8, &slots).unwrap();
+
+        // export copies: the source block stays device-resident
+        let p0 = src.export_block(0, 3).unwrap();
+        let p1 = src.export_block(1, 4).unwrap();
+        let g = *src.geometry();
+        let mut ctx = vec![0i32; g.max_batch];
+        let mut pos = vec![0i32; g.max_batch];
+        let mut sm = vec![-1i32; g.max_batch];
+        let tid = vec![1i32; g.max_batch];
+        let mut bt = vec![0i32; g.max_batch * g.max_blocks];
+        bt[1] = 1;
+        bt[2] = 2;
+        ctx[0] = 9;
+        pos[0] = 8;
+        sm[0] = 8;
+        assert!(
+            src.decode(&tid, &pos, &bt, &ctx, &sm).is_ok(),
+            "export must not evict the source copy"
+        );
+        // staging slots behave like swap slots: occupied is rejected,
+        // discard releases them
+        assert!(src.export_block(2, 3).is_err(), "occupied staging slot");
+        assert!(src.export_block(9, 5).is_err(), "unwritten block");
+        src.swap_discard(3).unwrap();
+        src.swap_discard(4).unwrap();
+
+        // a second backend imports the payloads and can decode over them
+        let mut dst = MockBackend::with_geometry(g);
+        dst.import_block(0, p0).unwrap();
+        dst.import_block(1, p1).unwrap();
+        let mut dctx = vec![0i32; g.max_batch];
+        let mut dpos = vec![0i32; g.max_batch];
+        let mut dsm = vec![-1i32; g.max_batch];
+        dctx[0] = 9;
+        dpos[0] = 8;
+        dsm[0] = 8;
+        assert!(dst.decode(&tid, &dpos, &bt, &dctx, &dsm).is_ok());
+        assert!(dst.supports_kv_migration());
+        assert_eq!(dst.swap_trace, vec![('M', 0, p0), ('M', 1, p1)]);
     }
 
     #[test]

@@ -108,6 +108,37 @@ pub trait Backend {
     fn supports_kv_swap(&self) -> bool {
         false
     }
+    /// PD disaggregation: export one KV block's payload through a host
+    /// staging slot for a cross-replica hand-off.  Unlike
+    /// [`Backend::swap_out`] this *copies* — the returned opaque payload
+    /// travels in the hand-off envelope while the host slot is released
+    /// right after (the slot is staging, not residence).  The engine
+    /// calls this before anything can recycle the freed device block.
+    ///
+    /// The default rejects, so backends without migration support make
+    /// the router fall back to token-level hand-off (the destination
+    /// re-prefills); no engine ever wedges on it.
+    fn export_block(&mut self, device_block: u32, host_slot: u64) -> Result<u64> {
+        bail!(
+            "backend does not support KV migration (export block {device_block} \
+             via host slot {host_slot}); hand-off must fall back to re-prefill"
+        )
+    }
+    /// PD disaggregation: import one exported KV payload into a freshly
+    /// allocated device block on the destination replica.  Must be
+    /// executed before the migrated sequence is stepped.
+    fn import_block(&mut self, device_block: u32, payload: u64) -> Result<()> {
+        bail!(
+            "backend does not support KV migration (import payload {payload} \
+             into block {device_block}); hand-off must fall back to re-prefill"
+        )
+    }
+    /// Whether [`Backend::export_block`]/[`Backend::import_block`] move
+    /// real KV bytes.  Consulted per hand-off; when false the router's
+    /// PD path transfers tokens only and the destination re-prefills.
+    fn supports_kv_migration(&self) -> bool {
+        false
+    }
     /// Speculative decoding: propose `k` draft tokens per active lane
     /// with a shrunk draft model.  Inputs are padded to max_batch as in
     /// [`Backend::decode`]; `ctx_lens[lane]` counts the fed token and

@@ -94,6 +94,10 @@ pub struct Scheduler {
     /// sequences preempted to the host tier (Opt-KV tier manager); they
     /// keep their prefill progress and resume via swap-in, not re-prefill
     swapped: Vec<Entry>,
+    /// sequences mid-hand-off to another replica (PD disaggregation);
+    /// invisible to scheduling and preemption — the hand-off either
+    /// completes (the destination admits them) or aborts back to running
+    migrating: Vec<Entry>,
     max_batch: usize,
     /// shared per-step token budget (decode slots + prefill tokens)
     step_token_budget: usize,
@@ -125,6 +129,7 @@ impl Scheduler {
             waiting: VecDeque::new(),
             running: Vec::new(),
             swapped: Vec::new(),
+            migrating: Vec::new(),
             max_batch,
             step_token_budget: usize::MAX,
             decode_tokens_per_seq: 1,
@@ -220,12 +225,19 @@ impl Scheduler {
         self.swapped.len()
     }
 
+    pub fn num_migrating(&self) -> usize {
+        self.migrating.len()
+    }
+
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
 
     pub fn is_idle(&self) -> bool {
-        self.waiting.is_empty() && self.running.is_empty() && self.swapped.is_empty()
+        self.waiting.is_empty()
+            && self.running.is_empty()
+            && self.swapped.is_empty()
+            && self.migrating.is_empty()
     }
 
     pub fn running_ids(&self) -> Vec<SeqId> {
@@ -246,10 +258,12 @@ impl Scheduler {
         }
     }
 
-    /// Remove a finished sequence from the running (or swapped) set.
+    /// Remove a finished sequence from the running (or swapped/migrating)
+    /// set.
     pub fn finish(&mut self, id: SeqId) {
         self.running.retain(|e| e.id != id);
         self.swapped.retain(|e| e.id != id);
+        self.migrating.retain(|e| e.id != id);
     }
 
     /// Plan the next round.  `cache` is consulted for admission headroom;
@@ -478,6 +492,57 @@ impl Scheduler {
         v.into_iter().map(|(_, id)| id).collect()
     }
 
+    // --- PD disaggregation: the `Migrating` hand-off state -----------------
+
+    /// Move a running sequence into the `Migrating` hand-off state: it
+    /// leaves scheduling (and the preemption victim pool, which only
+    /// scans `running`) while the engine packages its hand-off envelope.
+    pub fn begin_migration(&mut self, id: SeqId) -> bool {
+        let Some(e) = self.take_running(id) else {
+            return false;
+        };
+        self.migrating.push(e);
+        true
+    }
+
+    /// The hand-off left this replica (the destination owns the sequence
+    /// now): drop the local entry.
+    pub fn complete_migration(&mut self, id: SeqId) -> bool {
+        let before = self.migrating.len();
+        self.migrating.retain(|e| e.id != id);
+        self.migrating.len() < before
+    }
+
+    /// The hand-off found no destination: the sequence returns to the
+    /// running set at its admission-stamp position (same ordering
+    /// invariant as [`Self::resume_swapped`]) and decodes here.
+    pub fn abort_migration(&mut self, id: SeqId) -> bool {
+        let Some(idx) = self.migrating.iter().position(|e| e.id == id) else {
+            return false;
+        };
+        let e = self.migrating.remove(idx);
+        let at = self
+            .running
+            .iter()
+            .position(|r| r.admitted_at > e.admitted_at)
+            .unwrap_or(self.running.len());
+        self.running.insert(at, e);
+        true
+    }
+
+    /// Admit a migrated-in sequence on the destination replica, already
+    /// prefilled through `prefix_len` tokens: it joins `running`
+    /// decode-ready at its exact committed offset (no re-prefill).
+    pub fn admit_migrated(&mut self, id: SeqId, prefix_len: usize) {
+        self.stamp += 1;
+        self.running.push(Entry {
+            id,
+            prefix_len,
+            prefill_done: prefix_len,
+            admitted_at: self.stamp,
+        });
+        self.total_admissions += 1;
+    }
 }
 
 /// Size of the next prefill window: `cap`-bounded remainder, aligned down
@@ -946,6 +1011,71 @@ mod tests {
         assert_eq!(s.swapped_ids(), vec![1]);
         s.finish(1);
         s.finish(2);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn migrating_state_is_invisible_to_scheduling_and_preemption() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        for id in 1..=2u64 {
+            s.submit(id, 4);
+            s.schedule(&c, &COOPT);
+        }
+        assert_eq!(s.num_running(), 2);
+        // seq 2 (newest) enters the hand-off state
+        assert!(s.begin_migration(2));
+        assert_eq!(s.num_migrating(), 1);
+        assert_eq!(s.num_running(), 1);
+        assert!(!s.is_idle(), "a mid-hand-off sequence keeps the engine busy");
+        // it is neither scheduled nor a preemption victim while migrating
+        let d = s.schedule(&c, &COOPT);
+        assert_eq!(d.decodes, vec![1]);
+        assert_eq!(s.peek_preempt_victim(), Some(1));
+        // completion drops it; abort of a completed hand-off is a no-op
+        assert!(s.complete_migration(2));
+        assert!(!s.abort_migration(2));
+        assert_eq!(s.num_migrating(), 0);
+        s.finish(1);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn aborted_migration_rejoins_running_in_stamp_order() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        for id in 1..=3u64 {
+            s.submit(id, 4);
+            s.schedule(&c, &COOPT);
+        }
+        // the middle admission migrates, then aborts: it must re-enter
+        // between its older and newer neighbours, keeping the newest
+        // admission the preemption victim
+        assert!(s.begin_migration(2));
+        assert!(s.abort_migration(2));
+        assert_eq!(s.running_ids(), vec![1, 2, 3]);
+        assert_eq!(s.peek_preempt_victim(), Some(3));
+        // migrating a non-running id fails cleanly
+        assert!(!s.begin_migration(99));
+    }
+
+    #[test]
+    fn admit_migrated_is_decode_ready_at_its_offset() {
+        let mut s = Scheduler::new(4).with_step_budget(32).with_chunked_prefill(8);
+        let c = roomy_cache();
+        // a sequence arrives mid-stream from another replica, already
+        // committed through 13 tokens
+        s.admit_migrated(7, 13);
+        assert_eq!(s.num_running(), 1);
+        assert_eq!(s.prefill_progress(7), Some(13));
+        assert_eq!(s.decode_ready_ids(), vec![7]);
+        let d = s.schedule(&c, &COOPT);
+        assert!(d.prefills.is_empty(), "no re-prefill on the destination");
+        assert_eq!(d.decodes, vec![7]);
+        assert_eq!(s.total_admissions, 1);
+        // finish clears the migrating set too
+        assert!(s.begin_migration(7));
+        s.finish(7);
         assert!(s.is_idle());
     }
 

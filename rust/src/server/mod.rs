@@ -36,7 +36,8 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{Engine, GenRequest, GenResult};
+use crate::config::ReplicaRole;
+use crate::coordinator::{Engine, GenRequest, GenResult, SeqHandoff};
 use crate::router::RouterHandle;
 use crate::runtime::Backend;
 use crate::sampling::SamplingParams;
@@ -47,9 +48,30 @@ use crate::util::threadpool::ThreadPool;
 // engine thread
 // ---------------------------------------------------------------------------
 
-struct Job {
-    req: GenRequest,
-    reply: Sender<Result<GenResult>>,
+enum Job {
+    Generate {
+        req: GenRequest,
+        reply: Sender<Result<GenResult>>,
+    },
+    /// re-admit a sequence handed off from another replica (the reply
+    /// channel is the original client's waiter, travelling with it)
+    MigrateIn {
+        handoff: Box<SeqHandoff>,
+        reply: Sender<Result<GenResult>>,
+    },
+    /// re-role the engine (PD autoscaler / `/admin/role`); applied
+    /// before its next step
+    SetRole(ReplicaRole),
+}
+
+/// A sequence parked by a prefill-role engine at prefill completion,
+/// packaged for re-admission elsewhere.  The engine thread publishes
+/// these on the router's hand-off bus; `reply` is the waiting client,
+/// which travels to whichever replica finishes the sequence.
+pub struct HandoffEnvelope {
+    pub from: usize,
+    pub handoff: SeqHandoff,
+    pub reply: Sender<Result<GenResult>>,
 }
 
 /// One atomically-published view of a replica's metrics.  The engine
@@ -116,7 +138,27 @@ pub struct EngineHandle {
 
 impl EngineHandle {
     /// Take ownership of the engine and run it on a dedicated thread.
-    pub fn spawn<B: Backend + Send + 'static>(mut engine: Engine<B>) -> Self {
+    pub fn spawn<B: Backend + Send + 'static>(engine: Engine<B>) -> Self {
+        Self::spawn_inner(engine, None)
+    }
+
+    /// Like [`EngineHandle::spawn`], wired to the cluster's hand-off
+    /// bus: when this (prefill-role) engine parks a sequence at prefill
+    /// completion, the loop packages it ([`Engine::make_handoff`]) and
+    /// ships it — waiter attached — as a [`HandoffEnvelope`] for the
+    /// router's dispatcher to re-admit on a decode-capable replica.
+    pub fn spawn_routed<B: Backend + Send + 'static>(
+        engine: Engine<B>,
+        replica: usize,
+        handoff_tx: Sender<HandoffEnvelope>,
+    ) -> Self {
+        Self::spawn_inner(engine, Some((replica, handoff_tx)))
+    }
+
+    fn spawn_inner<B: Backend + Send + 'static>(
+        mut engine: Engine<B>,
+        handoff: Option<(usize, Sender<HandoffEnvelope>)>,
+    ) -> Self {
         let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
         let snapshot = Arc::new(Mutex::new(Arc::new(MetricsSnapshot::empty())));
         let stop = Arc::new(AtomicBool::new(false));
@@ -126,17 +168,28 @@ impl EngineHandle {
             .name("coopt-engine".into())
             .spawn(move || {
                 let mut waiters: Vec<(u64, Sender<Result<GenResult>>)> = Vec::new();
-                let submit =
-                    |engine: &mut Engine<B>,
-                     job: Job,
-                     waiters: &mut Vec<(u64, Sender<Result<GenResult>>)>| {
-                        match engine.submit(job.req) {
-                            Ok(id) => waiters.push((id, job.reply)),
+                let submit = |engine: &mut Engine<B>,
+                              job: Job,
+                              waiters: &mut Vec<(u64, Sender<Result<GenResult>>)>| {
+                    match job {
+                        Job::Generate { req, reply } => match engine.submit(req) {
+                            Ok(id) => waiters.push((id, reply)),
                             Err(e) => {
-                                let _ = job.reply.send(Err(e));
+                                let _ = reply.send(Err(e));
+                            }
+                        },
+                        Job::MigrateIn { handoff, reply } => {
+                            match engine.migrate_in_seq(*handoff) {
+                                Ok(id) => waiters.push((id, reply)),
+                                Err(e) => {
+                                    let _ = reply
+                                        .send(Err(anyhow!("engine error: migrate-in failed: {e}")));
+                                }
                             }
                         }
-                    };
+                        Job::SetRole(role) => engine.set_role(role),
+                    }
+                };
                 engine.metrics.start_run();
                 let mut seq = 0u64;
                 // publish a pre-first-step snapshot so /metrics (and the
@@ -183,6 +236,39 @@ impl EngineHandle {
                             }
                         }
                     }
+                    // ship parked hand-offs to the bus with their
+                    // waiters; no bus (or no waiter left after an
+                    // engine error) aborts back to local decode
+                    for id in engine.take_handoff_ready() {
+                        let pos = waiters.iter().position(|(w, _)| *w == id);
+                        let (Some(pos), Some((replica, htx))) = (pos, handoff.as_ref()) else {
+                            engine.abort_handoff(id);
+                            continue;
+                        };
+                        match engine.make_handoff(id) {
+                            Ok(h) => {
+                                let (_, reply) = waiters.swap_remove(pos);
+                                let env = HandoffEnvelope {
+                                    from: *replica,
+                                    handoff: h,
+                                    reply,
+                                };
+                                if let Err(e) = htx.send(env) {
+                                    // dispatcher gone; the sequence is
+                                    // already detached from this engine
+                                    let _ = e.0.reply.send(Err(anyhow!(
+                                        "engine error: hand-off dispatcher gone"
+                                    )));
+                                }
+                            }
+                            Err(e) => {
+                                // unrecoverable mid-export; fail the waiter
+                                let (_, reply) = waiters.swap_remove(pos);
+                                let _ =
+                                    reply.send(Err(anyhow!("engine error: hand-off failed: {e}")));
+                            }
+                        }
+                    }
                     // metrics + cache-tier stats for GET /metrics: swap the
                     // Arc so readers never see a half-written snapshot
                     seq += 1;
@@ -204,7 +290,7 @@ impl EngineHandle {
     pub fn generate(&self, req: GenRequest) -> Result<GenResult> {
         let (reply_tx, reply_rx) = channel();
         self.tx
-            .send(Job {
+            .send(Job::Generate {
                 req,
                 reply: reply_tx,
             })
@@ -212,6 +298,34 @@ impl EngineHandle {
         reply_rx
             .recv()
             .map_err(|_| anyhow!("engine dropped the request"))?
+    }
+
+    /// Queue a handed-off sequence for re-admission on this engine;
+    /// `reply` is the travelling waiter.  On a dead engine thread the
+    /// payload comes back so the caller can redirect it.
+    #[allow(clippy::result_large_err)]
+    pub fn migrate_in(
+        &self,
+        handoff: SeqHandoff,
+        reply: Sender<Result<GenResult>>,
+    ) -> std::result::Result<(), (SeqHandoff, Sender<Result<GenResult>>)> {
+        self.tx
+            .send(Job::MigrateIn {
+                handoff: Box::new(handoff),
+                reply,
+            })
+            .map_err(|e| match e.0 {
+                Job::MigrateIn { handoff, reply } => (*handoff, reply),
+                _ => unreachable!("send returns the job it was given"),
+            })
+    }
+
+    /// Tell the engine thread to change its PD role; applied before its
+    /// next step.
+    pub fn set_role(&self, role: ReplicaRole) -> Result<()> {
+        self.tx
+            .send(Job::SetRole(role))
+            .map_err(|_| anyhow!("engine thread gone"))
     }
 
     /// The latest atomically-published metrics snapshot.
@@ -272,6 +386,11 @@ impl Server {
 
     pub fn stop_flag(&self) -> Arc<AtomicBool> {
         Arc::clone(&self.stop)
+    }
+
+    /// The router behind this server (autoscaler wiring, tests).
+    pub fn router(&self) -> Arc<RouterHandle> {
+        Arc::clone(&self.router)
     }
 
     /// Accept loop; returns when the stop flag is set.
@@ -358,6 +477,7 @@ fn route(method: &str, path: &str, body: &str, handle: &RouterHandle) -> (&'stat
                     r.insert("healthy", s.healthy);
                     r.insert("draining", s.draining);
                     r.insert("in_flight", s.in_flight);
+                    r.insert("role", s.role.name());
                     Value::Object(r)
                 })
                 .collect();
@@ -375,6 +495,10 @@ fn route(method: &str, path: &str, body: &str, handle: &RouterHandle) -> (&'stat
             Err(e) => ("400 Bad Request", error_json(&e)),
         },
         ("POST", "/admin/undrain") => match drain_route(body, handle, false) {
+            Ok(p) => ("200 OK", p),
+            Err(e) => ("400 Bad Request", error_json(&e)),
+        },
+        ("POST", "/admin/role") => match role_route(body, handle) {
             Ok(p) => ("200 OK", p),
             Err(e) => ("400 Bad Request", error_json(&e)),
         },
@@ -402,6 +526,26 @@ fn drain_route(body: &str, handle: &RouterHandle, draining: bool) -> Result<Stri
     let mut o = Object::new();
     o.insert("replica", replica);
     o.insert("draining", draining);
+    Ok(Value::Object(o).to_string())
+}
+
+/// Re-role a replica: `{"replica": 0, "role": "prefill"|"decode"|"mixed"}`.
+/// The router's placement table updates immediately; the engine thread
+/// applies the role before its next step.  Like `/admin/drain`,
+/// `replica` defaults to 0 when absent.
+fn role_route(body: &str, handle: &RouterHandle) -> Result<String> {
+    let v = json::parse(body).context("invalid JSON body")?;
+    let replica = match v.get("replica") {
+        None => 0,
+        Some(r) => r
+            .as_usize()
+            .ok_or_else(|| anyhow!("\"replica\" must be a non-negative integer"))?,
+    };
+    let role = ReplicaRole::parse(v.req_str("role")?)?;
+    handle.set_role(replica, role)?;
+    let mut o = Object::new();
+    o.insert("replica", replica);
+    o.insert("role", role.name());
     Ok(Value::Object(o).to_string())
 }
 
@@ -788,6 +932,78 @@ mod tests {
             .unwrap();
         assert_eq!(code, 400);
         assert!(v.req_str("error").unwrap().contains("prompt"));
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn pd_roles_hand_off_and_admin_role_over_http() {
+        use crate::config::{RouterPolicy, SwapPolicy};
+        let pd = |role| {
+            Engine::new(
+                MockBackend::new(),
+                EngineConfig::new("llama-7b-sim", COOPT)
+                    .with_host_pool(64)
+                    .with_swap_policy(SwapPolicy::Always)
+                    .with_role(role),
+            )
+        };
+        let router = RouterHandle::spawn(
+            vec![pd(ReplicaRole::Prefill), pd(ReplicaRole::Decode)],
+            RouterPolicy::LeastLoaded,
+        )
+        .with_unpriced_handoff();
+        let server = Server::bind_router("127.0.0.1:0", router, 4).unwrap();
+        let client = Client::new(server.addr.to_string());
+        let stop = server.stop_flag();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+
+        // roles surface in /health
+        let (code, h) = client.get("/health").unwrap();
+        assert_eq!(code, 200);
+        let reps = h.req_array("replicas").unwrap();
+        assert_eq!(reps[0].req_str("role").unwrap(), "prefill");
+        assert_eq!(reps[1].req_str("role").unwrap(), "decode");
+
+        // a prefill-heavy request starts on the prefill replica, hands
+        // its KV off through the host tier, and decodes on the decode
+        // replica — the reply travels with it
+        let long_prompt = format!("pd over http {}", "h".repeat(48));
+        let v = client.generate(&long_prompt, 4).unwrap();
+        assert_eq!(v.req_usize("generated_tokens").unwrap(), 4);
+        let mut migrated = false;
+        for _ in 0..200 {
+            let (_, m) = client.get("/metrics").unwrap();
+            if m.req_usize("migrations_out").unwrap_or(0) >= 1
+                && m.req_usize("migrations_in").unwrap_or(0) >= 1
+            {
+                assert_eq!(m.req_array("replica_roles").unwrap().len(), 2);
+                migrated = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(migrated, "hand-off never reached /metrics");
+
+        // /admin/role re-roles a replica at runtime
+        let mut body = Object::new();
+        body.insert("replica", 0usize);
+        body.insert("role", "mixed");
+        let (code, r) = client.post("/admin/role", &Value::Object(body)).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(r.req_str("role").unwrap(), "mixed");
+        let (_, h) = client.get("/health").unwrap();
+        assert_eq!(
+            h.req_array("replicas").unwrap()[0].req_str("role").unwrap(),
+            "mixed"
+        );
+        // a bad role is a client error, not a 500
+        let mut bad = Object::new();
+        bad.insert("replica", 0usize);
+        bad.insert("role", "turbo");
+        let (code, _) = client.post("/admin/role", &Value::Object(bad)).unwrap();
+        assert_eq!(code, 400);
+
         stop.store(true, Ordering::Relaxed);
         srv.join().unwrap();
     }

@@ -9,7 +9,9 @@ use crate::coordinator::{Engine, GenRequest};
 use crate::platform::CostModel;
 use crate::runtime::{Backend, Runtime};
 use crate::util::json::{Object, Value};
-use crate::workload::{multi_tenant_trace, sharegpt_trace, MultiTenantSpec, TraceSpec};
+use crate::workload::{
+    multi_tenant_trace, pd_trace, sharegpt_trace, MultiTenantSpec, PdTraceSpec, TraceSpec,
+};
 
 /// One row of Fig. 6 / Fig. 7.
 #[derive(Debug, Clone)]
@@ -136,6 +138,15 @@ impl<B: Backend> Backend for PoolSized<B> {
     }
     fn supports_kv_swap(&self) -> bool {
         self.inner.supports_kv_swap()
+    }
+    fn export_block(&mut self, device_block: u32, host_slot: u64) -> Result<u64> {
+        self.inner.export_block(device_block, host_slot)
+    }
+    fn import_block(&mut self, device_block: u32, payload: u64) -> Result<()> {
+        self.inner.import_block(device_block, payload)
+    }
+    fn supports_kv_migration(&self) -> bool {
+        self.inner.supports_kv_migration()
     }
     fn draft(
         &mut self,
@@ -705,6 +716,133 @@ pub fn run_router_compare(
     Ok(rows)
 }
 
+/// Disaggregated prefill/decode comparison: the bursty long-prefill +
+/// steady-decode trace ([`crate::workload::pd_trace`]) routed across a
+/// 4-replica cluster twice — once with specialized roles (two prefill
+/// replicas handing KV off through the host tier to two decode
+/// replicas) and once all-mixed (PR 5's uniform cluster).  Hand-off is
+/// unpriced so the split actually activates on every prefill-heavy
+/// request; both runs are asserted token-identical to an unconstrained
+/// single engine.  The headline delta is the cluster decode ITL p95:
+/// mixed replicas stall their decode batches behind every burst's
+/// one-shot prefill, while decode-role replicas only ever pay short
+/// steady prefills and block imports.  Rows also report the migration
+/// bill (blocks shipped, bytes over PCIe, tokens re-prefilled on the
+/// fallback path) so the hand-off's cost side stays visible.
+pub fn run_pd_compare(spec: &PdTraceSpec) -> Result<Vec<Value>> {
+    use crate::config::{ReplicaRole, RouterPolicy, SwapPolicy, COOPT};
+    use crate::platform::replica_imbalance;
+    use crate::router::Router;
+    use crate::runtime::mock::MockBackend;
+
+    let trace = pd_trace(spec);
+    let reqs: Vec<GenRequest> = trace
+        .iter()
+        .map(|req| GenRequest {
+            prompt: req.prompt.clone(),
+            max_new_tokens: req.max_new_tokens,
+            sampling: req.sampling,
+            // fixed token counts across modes => clean ITL deltas
+            ignore_eos: true,
+        })
+        .collect();
+    // token-identity reference: one unconstrained engine, no tiering
+    let mut reference = Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    );
+    let base: Vec<Vec<u32>> = reference
+        .generate(reqs.clone())?
+        .into_iter()
+        .map(|r| r.tokens)
+        .collect();
+
+    let modes: [(&'static str, [ReplicaRole; 4]); 2] = [
+        (
+            "pd_split",
+            [
+                ReplicaRole::Prefill,
+                ReplicaRole::Prefill,
+                ReplicaRole::Decode,
+                ReplicaRole::Decode,
+            ],
+        ),
+        ("mixed", [ReplicaRole::Mixed; 4]),
+    ];
+    let mut rows = Vec::new();
+    for (mode, roles) in modes {
+        let engines: Vec<Engine<MockBackend>> = roles
+            .iter()
+            .map(|&role| {
+                Engine::new(
+                    MockBackend::new().with_opt(COOPT),
+                    EngineConfig::new("llama-7b-sim", COOPT)
+                        .with_host_pool(96)
+                        .with_swap_policy(SwapPolicy::Always)
+                        .with_role(role),
+                )
+            })
+            .collect();
+        let mut router = Router::new(engines, RouterPolicy::LeastLoaded).with_unpriced_handoff();
+        for req in &reqs {
+            router.submit(req.clone())?;
+        }
+        let results = router.run_to_completion()?;
+        let outs: Vec<Vec<u32>> = results.iter().map(|r| r.result.tokens.clone()).collect();
+        if outs != base {
+            anyhow::bail!("disaggregation changed outputs in mode {mode}");
+        }
+        let mut busy: Vec<f64> = Vec::new();
+        let mut tokens = 0u64;
+        let (mut itl_p50, mut itl_p95) = (0.0f64, 0.0f64);
+        let (mut mig_out, mut mig_in) = (0u64, 0u64);
+        let (mut mig_blocks, mut mig_bytes) = (0u64, 0u64);
+        let (mut fallbacks, mut recomputed) = (0u64, 0u64);
+        for e in router.replicas_mut() {
+            let m = &mut e.metrics;
+            busy.push(m.sim_prefill_s + m.sim_decode_s + m.sim_swap_blocked_s);
+            tokens += m.tokens_generated;
+            // cluster decode tail = the worst replica's tail (role-pure
+            // prefill replicas take no decode steps and drop out as NaN)
+            itl_p50 = itl_p50.max(m.itl_sim.p50());
+            itl_p95 = itl_p95.max(m.itl_sim.p95());
+            mig_out += m.migrations_out;
+            mig_in += m.migrations_in;
+            mig_blocks += m.migrated_blocks_out;
+            mig_bytes += m.migration_bytes;
+            fallbacks += m.migrations_token_fallback;
+            recomputed += m.tokens_recomputed;
+        }
+        let busy_max = busy.iter().cloned().fold(0.0f64, f64::max);
+        let mut o = Object::new();
+        o.insert("mode", mode);
+        o.insert("replicas", roles.len());
+        o.insert(
+            "roles",
+            Value::Array(roles.iter().map(|r| Value::from(r.name())).collect()),
+        );
+        o.insert("requests", trace.len());
+        o.insert("tokens", tokens as usize);
+        o.insert("decode_itl_sim_p50_s", itl_p50);
+        o.insert("decode_itl_sim_p95_s", itl_p95);
+        o.insert(
+            "cluster_throughput_sim",
+            if busy_max > 0.0 { tokens as f64 / busy_max } else { 0.0 },
+        );
+        o.insert("busy_max_s", busy_max);
+        o.insert("busy_spread", replica_imbalance(&busy));
+        o.insert("migrations_out", mig_out as usize);
+        o.insert("migrations_in", mig_in as usize);
+        o.insert("migrated_blocks", mig_blocks as usize);
+        o.insert("migration_bytes", mig_bytes as usize);
+        o.insert("migrations_token_fallback", fallbacks as usize);
+        o.insert("tokens_recomputed", recomputed as usize);
+        o.insert("token_identical", true);
+        rows.push(Value::Object(o));
+    }
+    Ok(rows)
+}
+
 /// Short git commit of the working tree, for the BENCH_serve header
 /// ("which code produced these rows").
 fn git_commit_short() -> String {
@@ -810,5 +948,32 @@ mod tests {
         assert!((reduction_pct(100.0, 94.0) - 6.0).abs() < 1e-9);
         assert!((gain_pct(100.0, 112.0) - 12.0).abs() < 1e-9);
         assert_eq!(reduction_pct(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn pd_compare_activates_handoff_and_stays_token_identical() {
+        // the default spec's trace is pinned by the workload tests to
+        // contain both burst and steady phases, so hand-offs must fire;
+        // run_pd_compare bails internally on any token divergence, so a
+        // clean return already proves identity vs the single engine
+        let rows = run_pd_compare(&PdTraceSpec::default()).unwrap();
+        assert_eq!(rows.len(), 2);
+        let field = |row: &Value, key: &str| row.get(key).and_then(Value::as_f64).unwrap();
+        let pd = &rows[0];
+        let mixed = &rows[1];
+        assert_eq!(pd.get("mode").and_then(Value::as_str), Some("pd_split"));
+        assert_eq!(mixed.get("mode").and_then(Value::as_str), Some("mixed"));
+        // the split must actually move KV: hand-offs happen and ship bytes
+        assert!(field(pd, "migrations_out") > 0.0);
+        assert!(field(pd, "migrations_in") > 0.0);
+        assert!(field(pd, "migration_bytes") > 0.0);
+        // the uniform cluster never migrates — the counters stay zero
+        assert_eq!(field(mixed, "migrations_out"), 0.0);
+        assert_eq!(field(mixed, "migration_bytes"), 0.0);
+        for row in &rows {
+            assert_eq!(row.get("token_identical").and_then(Value::as_bool), Some(true));
+            assert!(field(row, "tokens") > 0.0);
+            assert!(field(row, "decode_itl_sim_p95_s") > 0.0);
+        }
     }
 }

@@ -204,6 +204,101 @@ pub fn multi_tenant_trace(spec: &MultiTenantSpec) -> Vec<TraceRequest> {
         .collect()
 }
 
+/// Disaggregated-PD stress trace parameters: a steady stream of
+/// decode-heavy requests (short prompts, long responses) punctuated by
+/// bursts of prefill-heavy ones (long prompts, short responses).  On a
+/// mixed cluster every replica's decode batches stall behind the
+/// bursts' prefill work; a PD-split cluster absorbs the bursts on its
+/// prefill pool and hands the sequences off through the host tier, so
+/// decode inter-token latency stays flat — exactly what the
+/// `disaggregated_pd` bench section measures.
+#[derive(Debug, Clone)]
+pub struct PdTraceSpec {
+    pub num_requests: usize,
+    /// fraction of requests that are prefill-heavy burst members
+    pub burst_frac: f64,
+    /// burst arrivals come in clumps of this size
+    pub burst_size: usize,
+    /// long-prompt band of burst requests (bytes)
+    pub burst_prompt_min: usize,
+    pub burst_prompt_max: usize,
+    /// decode budget of burst requests (short: they exist to prefill)
+    pub burst_new: usize,
+    /// the steady decode-heavy stream: short prompts, long responses
+    pub steady_prompt_min: usize,
+    pub steady_prompt_max: usize,
+    pub steady_new_min: usize,
+    pub steady_new_max: usize,
+    /// mean arrival rate (req/s); 0 = all at t=0 (offered-load mode)
+    pub arrival_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for PdTraceSpec {
+    fn default() -> Self {
+        // prompt + BOS ≤ max_seq 128, prompt + BOS + response ≤
+        // max_context 160; bursts sit firmly past the 4x
+        // prefill-dominance gate, the steady stream firmly under it
+        PdTraceSpec {
+            num_requests: 48,
+            burst_frac: 0.4,
+            burst_size: 4,
+            burst_prompt_min: 80,
+            burst_prompt_max: 110,
+            burst_new: 4,
+            steady_prompt_min: 8,
+            steady_prompt_max: 24,
+            steady_new_min: 24,
+            steady_new_max: 40,
+            arrival_rate: 0.0,
+            seed: 0xBD2D,
+        }
+    }
+}
+
+/// Generate a deterministic PD stress trace from the spec.
+pub fn pd_trace(spec: &PdTraceSpec) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0f64;
+    let mut burst_left = 0usize;
+    (0..spec.num_requests)
+        .map(|i| {
+            let start_burst = burst_left == 0
+                && rng.bool(spec.burst_frac / spec.burst_size.max(1) as f64);
+            if start_burst {
+                burst_left = spec.burst_size.max(1);
+            }
+            // burst members arrive together: only the steady stream and
+            // each burst's head pay an inter-arrival gap
+            if spec.arrival_rate > 0.0 && (burst_left == 0 || start_burst) {
+                t += rng.exponential(spec.arrival_rate);
+            }
+            let (prompt, new) = if burst_left > 0 {
+                burst_left -= 1;
+                let span = spec.burst_prompt_max - spec.burst_prompt_min + 1;
+                let len = spec.burst_prompt_min + rng.below(span);
+                let marker = format!("burst{i} ");
+                let body = synth_text(&mut rng, len.saturating_sub(marker.len()).max(1));
+                (format!("{marker}{body}"), spec.burst_new)
+            } else {
+                let span = spec.steady_prompt_max - spec.steady_prompt_min + 1;
+                let len = spec.steady_prompt_min + rng.below(span);
+                let new_span = spec.steady_new_max - spec.steady_new_min + 1;
+                let new = spec.steady_new_min + rng.below(new_span);
+                let marker = format!("steady{i} ");
+                let body = synth_text(&mut rng, len.saturating_sub(marker.len()).max(1));
+                (format!("{marker}{body}"), new)
+            };
+            TraceRequest {
+                arrival_s: t,
+                prompt,
+                max_new_tokens: new,
+                sampling: SamplingParams::default(),
+            }
+        })
+        .collect()
+}
+
 /// Deterministic pseudo-text of ~`len` bytes (byte-level tokens = bytes).
 fn synth_text(rng: &mut Rng, len: usize) -> String {
     const WORDS: [&str; 16] = [
@@ -386,6 +481,55 @@ mod tests {
             .take_while(|(a, b)| a == b)
             .count();
         assert!(common >= 31, "shared system prompt, got {common} bytes");
+    }
+
+    #[test]
+    fn pd_trace_mixes_bursty_prefill_with_steady_decode() {
+        let spec = PdTraceSpec::default();
+        let a = pd_trace(&spec);
+        let b = pd_trace(&spec);
+        assert_eq!(a.len(), spec.num_requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let bursts: Vec<&TraceRequest> =
+            a.iter().filter(|r| r.prompt.starts_with("burst")).collect();
+        let steady: Vec<&TraceRequest> =
+            a.iter().filter(|r| r.prompt.starts_with("steady")).collect();
+        assert_eq!(bursts.len() + steady.len(), a.len());
+        assert!(!bursts.is_empty() && !steady.is_empty(), "both phases present");
+        for r in &a {
+            // fits the sim geometry with BOS and the full response
+            assert!(r.prompt.len() + 1 <= 128);
+            assert!(r.prompt.len() + 1 + r.max_new_tokens <= 160);
+        }
+        // burst members sit past the router's 4x prefill-dominance
+        // gate, the steady stream sits under it: the trace exercises
+        // both sides of handoff_pays
+        for r in &bursts {
+            assert!(r.prompt.len() >= 4 * r.max_new_tokens);
+        }
+        for r in &steady {
+            assert!(r.prompt.len() < 4 * r.max_new_tokens);
+        }
+        // with open-loop arrivals, members of one burst arrive together
+        let spec = PdTraceSpec {
+            arrival_rate: 20.0,
+            ..PdTraceSpec::default()
+        };
+        let t = pd_trace(&spec);
+        let mut clumped = 0;
+        for w in t.windows(2) {
+            if w[0].prompt.starts_with("burst")
+                && w[1].prompt.starts_with("burst")
+                && w[1].arrival_s == w[0].arrival_s
+            {
+                clumped += 1;
+            }
+        }
+        assert!(clumped > 0, "burst members share arrival stamps");
+        assert!(t.last().unwrap().arrival_s > 0.0);
     }
 
     #[test]

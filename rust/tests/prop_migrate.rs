@@ -1,0 +1,186 @@
+//! Property tests for disaggregated prefill/decode hand-off: migrating
+//! a sequence's KV between replicas through the host tier must be
+//! *semantically invisible*.  For every PD role layout, routing policy,
+//! and random burst/steady workload mix, a cluster with hand-off
+//! enabled returns token-identical per-request outputs to a single
+//! unconstrained engine — including when the hand-off races preemption
+//! and swap on an undersized device pool.  The mock backend enforces
+//! copy semantics (residency contract) on every decode, so each case
+//! doubles as a migration-correctness check: an exported block that
+//! landed wrong would change the tokens, not just the timing.
+
+use std::cell::Cell;
+
+use llm_coopt::config::{
+    CacheGeometry, EngineConfig, ReplicaRole, RouterPolicy, SwapPolicy, COOPT,
+};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::router::Router;
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::util::quickprop::{check, gens};
+
+fn geometry(pool_blocks: usize) -> CacheGeometry {
+    CacheGeometry {
+        block_size: 4,
+        max_blocks: 16,
+        num_pool_blocks: pool_blocks,
+        max_batch: 4,
+        max_seq: 48,
+    }
+}
+
+/// The host tier is sized for the worst case so preemption always
+/// swaps: the recompute fallback re-samples a decoded tail token
+/// through the prefill function, which the mock deliberately
+/// distinguishes from decode — exact equality is the swap and
+/// migration paths' guarantee, not recompute's.
+fn pd_engine(pool_blocks: usize, role: ReplicaRole) -> Engine<MockBackend> {
+    let be = MockBackend::with_geometry(geometry(pool_blocks)).with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_host_pool(160)
+        .with_swap_policy(SwapPolicy::Always)
+        .with_role(role);
+    Engine::new(be, cfg)
+}
+
+const ROLE_SETS: [&[ReplicaRole]; 4] = [
+    &[ReplicaRole::Prefill, ReplicaRole::Decode],
+    &[ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed],
+    &[ReplicaRole::Prefill, ReplicaRole::Prefill, ReplicaRole::Decode],
+    &[ReplicaRole::Mixed, ReplicaRole::Decode],
+];
+
+/// Property: ≥ 100 random workloads, each a mix of prefill-heavy burst
+/// requests (past the 4x dominance gate, so the unpriced router always
+/// hands them off) and decode-heavy steady requests, run through a PD
+/// cluster whose device pools are undersized to force preemption and
+/// swap *while* hand-offs are in flight.  Greedy outputs must match the
+/// unconstrained single engine token for token, every tier must drain
+/// to zero, and the suite as a whole must actually migrate and preempt.
+#[test]
+fn pd_handoff_is_token_identical_over_random_workloads() {
+    let total_migrations = Cell::new(0u64);
+    let total_fallbacks = Cell::new(0u64);
+    let total_preempts = Cell::new(0u64);
+    check(
+        120,
+        gens::pair(gens::vec(gens::usize_to(23), 1..=8), gens::usize_to(1000)),
+        |&(ref profile, seed): &(Vec<usize>, usize)| {
+            let reqs: Vec<GenRequest> = profile
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| {
+                    if p % 2 == 0 {
+                        // prefill-heavy burst: long prompt, tiny decode
+                        // budget (max 40 prompt + 4 new = 11 of the 12
+                        // pool blocks, so it fits but races preemption)
+                        GenRequest::greedy(
+                            format!("mig{seed} {i} {}", "b".repeat(5 + p)),
+                            2 + p % 3,
+                        )
+                    } else {
+                        // steady decode-heavy stream, under the gate
+                        GenRequest::greedy(
+                            format!("st{seed} {i} {}", "s".repeat(p % 7)),
+                            4 + p % 8,
+                        )
+                    }
+                })
+                .collect();
+            // unconstrained reference: one engine, big pool, single tier
+            let mut single = Engine::new(
+                MockBackend::with_geometry(geometry(96)).with_opt(COOPT),
+                EngineConfig::new("llama-7b-sim", COOPT),
+            );
+            let base = single.generate(reqs.clone()).unwrap();
+            if single.metrics.preemptions != 0 {
+                return false; // reference must be genuinely unconstrained
+            }
+            let roles = ROLE_SETS[seed % ROLE_SETS.len()];
+            let policy = RouterPolicy::ALL[profile.len() % RouterPolicy::ALL.len()];
+            let engines: Vec<Engine<MockBackend>> =
+                roles.iter().map(|&r| pd_engine(12, r)).collect();
+            let mut router = Router::new(engines, policy).with_unpriced_handoff();
+            for r in &reqs {
+                router.submit(r.clone()).unwrap();
+            }
+            let got = router.run_to_completion().unwrap();
+            if got.len() != base.len() {
+                return false;
+            }
+            for (a, b) in base.iter().zip(&got) {
+                if a.tokens != b.result.tokens
+                    || a.finish != b.result.finish
+                    || b.replica >= roles.len()
+                {
+                    return false;
+                }
+            }
+            for e in router.replicas() {
+                total_migrations.set(total_migrations.get() + e.metrics.migrations_out);
+                total_fallbacks
+                    .set(total_fallbacks.get() + e.metrics.migrations_token_fallback);
+                total_preempts.set(total_preempts.get() + e.metrics.preemptions);
+                // both tiers drain: no leaked device blocks, host slots,
+                // swapped residue, or half-migrated sequences
+                if e.cache_stats().blocks_used != 0
+                    || e.tier_stats().host_used_blocks != 0
+                    || e.tier_stats().swapped_seqs != 0
+                    || e.num_migrating() != 0
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+    assert!(
+        total_migrations.get() > 0,
+        "the suite must actually exercise the KV hand-off path"
+    );
+    assert!(
+        total_preempts.get() > 0,
+        "the undersized pools must force preemption racing the hand-offs"
+    );
+    // the fallback path (KV could not land: full batch or pool on the
+    // destination) is allowed, but must never dominate: deferral keeps
+    // most hand-offs on the exact-KV path
+    assert!(
+        total_fallbacks.get() <= total_migrations.get(),
+        "token fallback dominated the hand-off path ({} of {})",
+        total_fallbacks.get(),
+        total_migrations.get()
+    );
+}
+
+/// Acceptance: a drained prefill tier must not strand its parked
+/// sequences — with every decode-capable destination draining, the
+/// hand-off aborts back to local decode and the outputs still match.
+#[test]
+fn handoff_with_drained_destinations_aborts_to_local_decode() {
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| GenRequest::greedy(format!("drain {i} {}", "d".repeat(24 + i)), 3))
+        .collect();
+    let mut single = Engine::new(
+        MockBackend::with_geometry(geometry(96)).with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    );
+    let base = single.generate(reqs.clone()).unwrap();
+
+    let engines = vec![pd_engine(24, ReplicaRole::Prefill), pd_engine(24, ReplicaRole::Decode)];
+    let mut router = Router::new(engines, RouterPolicy::LeastLoaded).with_unpriced_handoff();
+    for r in &reqs {
+        router.submit(r.clone()).unwrap();
+    }
+    // the only decode-capable replica starts draining after placement:
+    // parked sequences have nowhere to go and must finish where they are
+    router.set_draining(1, true);
+    let got = router.run_to_completion().unwrap();
+    assert_eq!(got.len(), base.len());
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.tokens, b.result.tokens, "abort-to-local-decode changed outputs");
+        assert_eq!(b.replica, 0, "draining destination must not receive hand-offs");
+    }
+    let m: u64 = router.replicas().iter().map(|e| e.metrics.migrations_out).sum();
+    assert_eq!(m, 0, "no hand-off may leave the cluster while the decode tier drains");
+}
