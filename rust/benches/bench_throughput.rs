@@ -20,8 +20,9 @@ use llm_coopt::runtime::{artifacts_available, Runtime};
 use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
 use llm_coopt::workload::harness::{
-    gain_pct, reduction_pct, run_adaptive_spec_compare, run_chunk_compare, run_pd_compare,
-    run_router_compare, run_spec_compare, run_swap_compare, run_trace, write_bench_serve,
+    gain_pct, reduction_pct, run_adaptive_spec_compare, run_chunk_compare,
+    run_observability_compare, run_pd_compare, run_router_compare, run_spec_compare,
+    run_swap_compare, run_trace, write_bench_serve,
     AdaptiveSpecPoint,
 };
 use llm_coopt::workload::{MultiTenantSpec, PdTraceSpec, TraceSpec};
@@ -271,6 +272,45 @@ fn main() -> anyhow::Result<()> {
             "requests={},burst_frac={},burst_size={},burst_new={},seed={:#x},replicas=4",
             pd_spec.num_requests, pd_spec.burst_frac, pd_spec.burst_size, pd_spec.burst_new,
             pd_spec.seed
+        ),
+    )?;
+
+    // --- observability: tracing overhead on the multi-tenant Zipfian
+    // trace — flight recorder + full event sampling vs tracing off
+    // (outputs asserted token-identical inside the harness; the sim
+    // clock never prices trace bookkeeping, so the Eq. 12 ratio is 1.0)
+    println!("observability — tracing overhead, traced (depth=64, sample=1.0) vs untraced");
+    println!(
+        "{:<10} {:>14} {:>10} {:>8} {:>22}",
+        "mode", "sim tok/s", "busy(s)", "tokens", "phase reconcile err(s)"
+    );
+    let obs_rows = run_observability_compare(&mt_spec)?;
+    for r in &obs_rows {
+        println!(
+            "{:<10} {:>12.1}/s {:>10.4} {:>8} {:>22.3e}",
+            r.req_str("mode")?,
+            r.req_f64("throughput_sim")?,
+            r.req_f64("busy_s")?,
+            r.req_usize("tokens")?,
+            r.req_f64("phase_reconcile_max_err_s")?,
+        );
+    }
+    let traced = &obs_rows[0];
+    println!(
+        "Eq. 12 sim-throughput ratio traced/untraced: {:.4} (gate >= 0.97); \
+         chrome trace -> {}\n",
+        traced.req_f64("sim_throughput_ratio")?,
+        traced
+            .get("chrome_trace_path")
+            .and_then(Value::as_str)
+            .unwrap_or("-"),
+    );
+    write_bench_serve(
+        "observability",
+        &obs_rows,
+        &format!(
+            "requests={},tenants={},zipf_s={},seed={:#x},depths=[64,0],samples=[1.0,0.0]",
+            mt_spec.num_requests, mt_spec.tenants, mt_spec.zipf_s, mt_spec.seed
         ),
     )?;
 

@@ -541,6 +541,14 @@ pub struct EngineConfig {
     pub top_k: usize,
     pub top_p: f64,
     pub seed: u64,
+    /// flight-recorder capacity in finished-request timelines kept per
+    /// replica for `GET /admin/trace` (`--trace-depth`; 0 disables the
+    /// recorder — phase attribution in `/metrics` stays on)
+    pub trace_depth: usize,
+    /// fraction of requests whose per-event timeline is recorded
+    /// (`--trace-sample`, deterministic per request id); phase breakdowns
+    /// and histograms are always exact regardless of sampling
+    pub trace_sample: f64,
 }
 
 impl EngineConfig {
@@ -562,6 +570,8 @@ impl EngineConfig {
             top_k: 0,
             top_p: 1.0,
             seed: 0,
+            trace_depth: 64,
+            trace_sample: 1.0,
         }
     }
 
@@ -644,6 +654,19 @@ impl EngineConfig {
     /// Assign this engine's PD role (`--replica-roles`).
     pub fn with_role(mut self, role: ReplicaRole) -> Self {
         self.role = role;
+        self
+    }
+
+    /// Size the flight-recorder ring (`--trace-depth`; 0 disables it).
+    pub fn with_trace_depth(mut self, depth: usize) -> Self {
+        self.trace_depth = depth;
+        self
+    }
+
+    /// Set the per-request event-timeline sampling rate
+    /// (`--trace-sample`, clamped to `0.0..=1.0`).
+    pub fn with_trace_sample(mut self, s: f64) -> Self {
+        self.trace_sample = s.clamp(0.0, 1.0);
         self
     }
 }
@@ -915,6 +938,25 @@ mod tests {
             assert_eq!(SwapPolicy::parse(p.name()).unwrap(), p);
         }
         assert!(SwapPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn trace_knobs() {
+        // tracing on by default: full sampling, 64-deep flight recorder
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        assert_eq!(cfg.trace_depth, 64);
+        assert!((cfg.trace_sample - 1.0).abs() < 1e-12);
+        let cfg = cfg.with_trace_depth(8).with_trace_sample(0.25);
+        assert_eq!(cfg.trace_depth, 8);
+        assert!((cfg.trace_sample - 0.25).abs() < 1e-12);
+        // 0 disables the recorder; sample clamps into [0, 1]
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_trace_depth(0)
+            .with_trace_sample(7.0);
+        assert_eq!(cfg.trace_depth, 0);
+        assert!((cfg.trace_sample - 1.0).abs() < 1e-12);
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_trace_sample(-3.0);
+        assert!(cfg.trace_sample.abs() < 1e-12);
     }
 
     #[test]

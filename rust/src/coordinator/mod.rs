@@ -102,6 +102,7 @@ use anyhow::{bail, Result};
 use crate::config::{EngineConfig, ReplicaRole, SpecMode, SwapPolicy};
 use crate::kvcache::{CacheManager, SeqId};
 use crate::metrics::{EngineMetrics, RequestMetrics};
+use crate::obs::{trace_sampled, FlightRecorder, Phase, PhaseBreakdown, ReqTrace};
 use crate::platform::{CostModel, SeqCostInput};
 use crate::runtime::Backend;
 use crate::sampling::{sample, verify_token, SamplingParams, SpecDecision};
@@ -130,6 +131,9 @@ pub struct GenRequest {
     /// benchmarking mode: always generate max_new_tokens (vLLM's
     /// --ignore-eos), so configs produce identical token counts
     pub ignore_eos: bool,
+    /// client-supplied correlation id, echoed in the result, the request
+    /// trace, and `/admin/trace` lookups
+    pub corr_id: Option<String>,
 }
 
 impl GenRequest {
@@ -139,6 +143,7 @@ impl GenRequest {
             max_new_tokens,
             sampling: SamplingParams::default(),
             ignore_eos: false,
+            corr_id: None,
         }
     }
 }
@@ -192,6 +197,10 @@ pub struct SeqHandoff {
     /// request accounting carried across replicas (arrival, TTFT — the
     /// first token was sampled on the source)
     pub metrics: RequestMetrics,
+    /// lifecycle trace carried across replicas: the `Migration` phase
+    /// opened on the source stays open through transit, so hand-off time
+    /// lands in the destination's per-phase breakdown
+    pub trace: ReqTrace,
 }
 
 #[derive(Debug, Clone)]
@@ -206,6 +215,12 @@ pub struct GenResult {
     pub latency_s: f64,
     pub ttft_s: f64,
     pub sim_time_s: f64,
+    /// echo of [`GenRequest::corr_id`]
+    pub corr_id: Option<String>,
+    /// per-phase latency attribution (queue / prefill / decode /
+    /// swap-blocked / migration wallclock partitions `latency_s`;
+    /// spec overhead is sim-clock and overlaps decode)
+    pub phases: PhaseBreakdown,
 }
 
 #[derive(Debug)]
@@ -223,6 +238,9 @@ struct Sequence {
     /// simulated clock when this sequence's last prefill chunk finished
     /// (drives the inter-chunk stall metric)
     last_chunk_sim_t: Option<f64>,
+    /// lifecycle trace: which phase the request is in right now, closed
+    /// spans per phase, and (when sampled) the event timeline
+    trace: ReqTrace,
 }
 
 impl Sequence {
@@ -271,6 +289,9 @@ pub struct Engine<B: Backend> {
     /// ([`Engine::make_handoff`]) or returns them
     /// ([`Engine::abort_handoff`])
     handoff_ready: Vec<SeqId>,
+    /// bounded ring of recent finished-request timelines — the
+    /// `GET /admin/trace` payload (`--trace-depth` sizes it)
+    recorder: FlightRecorder,
 }
 
 impl<B: Backend> Engine<B> {
@@ -339,6 +360,7 @@ impl<B: Backend> Engine<B> {
         } else {
             None
         };
+        let recorder = FlightRecorder::new(cfg.trace_depth);
         Engine {
             cache,
             sched,
@@ -359,6 +381,7 @@ impl<B: Backend> Engine<B> {
             round_plain: Vec::new(),
             round_memory_bound: None,
             handoff_ready: Vec::new(),
+            recorder,
         }
     }
 
@@ -421,11 +444,19 @@ impl<B: Backend> Engine<B> {
             o.insert("cache_prefix_hits", cs.prefix_hits as usize);
             o.insert("host_pool_blocks", ts.host_capacity_blocks);
             o.insert("host_blocks_used", ts.host_used_blocks);
+            o.insert("host_blocks_peak", ts.host_used_peak_blocks);
             o.insert("swapped_seqs", ts.swapped_seqs);
             o.insert("pinned_shared_blocks", ts.pinned_shared_blocks);
             o.insert("replica_role", self.cfg.role.name());
         }
         v
+    }
+
+    /// Flight-recorder dump — the `GET /admin/trace` payload: recent
+    /// finished-request timelines, oldest first, optionally filtered by
+    /// engine-assigned id or client correlation id.
+    pub fn trace_json(&self, id: Option<u64>, corr: Option<&str>) -> crate::util::json::Value {
+        self.recorder.to_json(id, corr)
     }
 
     pub fn num_pending(&self) -> usize {
@@ -457,7 +488,13 @@ impl<B: Backend> Engine<B> {
     /// Submit a request; returns its sequence id.
     pub fn submit(&mut self, req: GenRequest) -> Result<SeqId> {
         let tokens = self.tokenizer.encode(&req.prompt, true, false);
-        self.submit_tokens(tokens, req.max_new_tokens, req.sampling, req.ignore_eos)
+        let id = self.submit_tokens(tokens, req.max_new_tokens, req.sampling, req.ignore_eos)?;
+        if req.corr_id.is_some() {
+            if let Some(seq) = self.seqs.get_mut(&id) {
+                seq.trace.corr_id = req.corr_id;
+            }
+        }
+        Ok(id)
     }
 
     pub fn submit_tokens(
@@ -477,6 +514,7 @@ impl<B: Backend> Engine<B> {
         let id = self.next_id;
         self.next_id += 1;
         let prompt_len = tokens.len();
+        let arrival = Instant::now();
         self.seqs.insert(
             id,
             Sequence {
@@ -490,13 +528,14 @@ impl<B: Backend> Engine<B> {
                     id,
                     prompt_tokens: prompt_len,
                     generated_tokens: 0,
-                    arrival: Instant::now(),
+                    arrival,
                     first_token: None,
                     finished: None,
                     sim_time_s: 0.0,
                 },
                 finish: None,
                 last_chunk_sim_t: None,
+                trace: ReqTrace::new(id, arrival, trace_sampled(id, self.cfg.trace_sample)),
             },
         );
         self.sched.submit(id, prompt_len);
@@ -519,6 +558,17 @@ impl<B: Backend> Engine<B> {
         // step's prefill windows
         self.plan_spec_round();
         let decision = self.sched.schedule(&self.cache, self.backend.opt());
+
+        // stamp Queued→Prefill on every admission (first and re-admission
+        // after a drop-recompute preemption alike)
+        if !decision.admitted.is_empty() {
+            let now = Instant::now();
+            for id in &decision.admitted {
+                if let Some(seq) = self.seqs.get_mut(id) {
+                    seq.trace.transition(now, Phase::Prefill, "admitted");
+                }
+            }
+        }
 
         for work in decision.prefills.iter().copied() {
             self.run_prefill_work(work)?;
@@ -770,7 +820,12 @@ impl<B: Backend> Engine<B> {
             self.metrics.migrations_token_fallback += 1;
             (Vec::new(), resume_len, 0)
         };
-        let seq = self.seqs.remove(&id).expect("present per the lookup above");
+        let mut seq = self.seqs.remove(&id).expect("present per the lookup above");
+        // the trace leaves in its Migration phase (opened when the
+        // sequence was parked); transit time accrues until the
+        // destination admits it
+        seq.trace
+            .note(Instant::now(), if take_kv { "migrate_out" } else { "migrate_out_tokens" });
         Ok(SeqHandoff {
             tokens: seq.tokens,
             prompt_len: seq.prompt_len,
@@ -781,6 +836,7 @@ impl<B: Backend> Engine<B> {
             min_blocks,
             blocks,
             metrics: seq.metrics,
+            trace: seq.trace,
         })
     }
 
@@ -790,7 +846,14 @@ impl<B: Backend> Engine<B> {
     /// running set at its original admission stamp.
     pub fn abort_handoff(&mut self, id: SeqId) -> bool {
         self.handoff_ready.retain(|&h| h != id);
-        self.sched.abort_migration(id)
+        let aborted = self.sched.abort_migration(id);
+        if aborted {
+            if let Some(seq) = self.seqs.get_mut(&id) {
+                // back to local decode: the prompt is done, KV resident
+                seq.trace.transition(Instant::now(), Phase::Decode, "migration_abort");
+            }
+        }
+        aborted
     }
 
     /// Admit a handed-off sequence on this replica; returns its id here.
@@ -859,6 +922,15 @@ impl<B: Backend> Engine<B> {
         }
         let mut metrics = h.metrics;
         metrics.id = id;
+        let mut trace = h.trace;
+        trace.id = id;
+        if kv_landed {
+            // decode-ready at the source offset: Migration closes here
+            trace.transition(Instant::now(), Phase::Decode, "migrate_in");
+        } else {
+            // token fallback re-prefills: back through the waiting queue
+            trace.transition(Instant::now(), Phase::Queued, "migrate_in_fallback");
+        }
         self.seqs.insert(
             id,
             Sequence {
@@ -871,6 +943,7 @@ impl<B: Backend> Engine<B> {
                 metrics,
                 finish: None,
                 last_chunk_sim_t: None,
+                trace,
             },
         );
         Ok(id)
@@ -1070,6 +1143,10 @@ impl<B: Backend> Engine<B> {
         seq.last_chunk_sim_t = Some(sim_before + sim_s.unwrap_or(0.0));
         if let Some(s) = sim_s {
             seq.metrics.sim_time_s += s;
+            seq.trace.add_sim(s);
+        }
+        if chunked && !is_final {
+            seq.trace.note_now("prefill_chunk");
         }
         if is_final {
             let at = (end - 1) * vocab;
@@ -1087,6 +1164,12 @@ impl<B: Backend> Engine<B> {
                 // decode-capable replica (KV stays resident until
                 // make_handoff packages or abort_handoff returns it)
                 self.handoff_ready.push(id);
+                if let Some(seq) = self.seqs.get_mut(&id) {
+                    seq.trace.transition(Instant::now(), Phase::Migration, "migrate_park");
+                }
+            } else if let Some(seq) = self.seqs.get_mut(&id) {
+                // still alive locally: the prompt is done, decode begins
+                seq.trace.transition(Instant::now(), Phase::Decode, "prefill_done");
             }
         }
         Ok(())
@@ -1198,7 +1281,7 @@ impl<B: Backend> Engine<B> {
             // the stall chunked prefill exists to bound
             let itl = self.step_prefill_sim_s + s;
             for _ in 0..lanes.len() {
-                self.metrics.itl_sim.add(itl);
+                self.metrics.record_itl_sim(itl);
             }
         }
 
@@ -1213,7 +1296,9 @@ impl<B: Backend> Engine<B> {
             seq.metrics.generated_tokens = seq.generated();
             if let Some(s) = per_seq_sim {
                 seq.metrics.sim_time_s += s;
+                seq.trace.add_sim(s);
             }
+            seq.trace.note_now("decode_round");
             self.check_finish(id, tok);
         }
         if self.cfg.spec.enabled() {
@@ -1371,21 +1456,25 @@ impl<B: Backend> Engine<B> {
         self.metrics.decode_lanes_sum += lanes.len() as u64;
         self.metrics.decode_batch_slots += self.sched.max_batch() as u64;
 
-        let sim_s = self.cost.as_ref().map(|cm| {
+        // the draft pass is the speculative overhead: decode would have
+        // run the verify-sized target pass anyway (trace attribution)
+        let sim_parts = self.cost.as_ref().map(|cm| {
             let draft = cm.draft_step(&cost_inputs, &opt, k, self.cfg.spec.shrink);
             let verify = cm.verify_batch(&cost_inputs, &opt, k, new_blocks, lanes.len() * n);
-            draft.total_s + verify.total_s
+            (draft.total_s, verify.total_s)
         });
+        let sim_s = sim_parts.map(|(d, v)| d + v);
         if let Some(s) = sim_s {
             self.metrics.sim_decode_s += s;
             let itl = self.step_prefill_sim_s + s;
             for _ in 0..lanes.len() {
-                self.metrics.itl_sim.add(itl);
+                self.metrics.record_itl_sim(itl);
             }
         }
 
         // 4. accept, commit, roll back
         let per_seq_sim = sim_s.map(|s| s / lanes.len() as f64);
+        let per_seq_draft = sim_parts.map(|(d, _)| d / lanes.len() as f64);
         let max_ctx = geometry.max_context();
         let policy = self.cfg.spec.policy;
         let mut round_committed = 0u64;
@@ -1476,7 +1565,12 @@ impl<B: Backend> Engine<B> {
             seq.metrics.generated_tokens = seq.generated();
             if let Some(s) = per_seq_sim {
                 seq.metrics.sim_time_s += s;
+                seq.trace.add_sim(s);
             }
+            if let Some(d) = per_seq_draft {
+                seq.trace.sim_spec_overhead_s += d;
+            }
+            seq.trace.note_now("verify_round");
             let last = *commit.last().unwrap();
             self.check_finish(id, last);
         }
@@ -1518,6 +1612,13 @@ impl<B: Backend> Engine<B> {
                 self.backend.swap_out(blk, slot)?;
             }
             self.sched.preempt_swap(victim);
+            if let Some(seq) = self.seqs.get_mut(&victim) {
+                // remember where to resume (mid-prefill victims return to
+                // Prefill, decode-ready ones to Decode)
+                seq.trace.resume_phase = seq.trace.cur_phase();
+                seq.trace.preemptions += 1;
+                seq.trace.transition(Instant::now(), Phase::SwapBlocked, "swap_out");
+            }
             self.metrics.swap_outs += 1;
             self.metrics.blocks_swapped_out += ops.copies.len() as u64;
             self.metrics.bytes_swapped_out +=
@@ -1533,6 +1634,10 @@ impl<B: Backend> Engine<B> {
             let full_len = self.seqs.get(&victim).map(|s| s.tokens.len()).unwrap_or(0);
             self.cache.free_seq(victim);
             self.sched.preempt_drop(victim, full_len);
+            if let Some(seq) = self.seqs.get_mut(&victim) {
+                seq.trace.preemptions += 1;
+                seq.trace.transition(Instant::now(), Phase::Queued, "preempt_drop");
+            }
             self.metrics.tokens_recomputed += committed as u64;
         }
         // either exit resets the victim's chunk clock so `chunk_stall_s`
@@ -1590,6 +1695,10 @@ impl<B: Backend> Engine<B> {
         for id in std::mem::take(&mut self.in_flight_prefetch) {
             if self.sched.resume_swapped(id) {
                 self.metrics.prefetch_hits += 1;
+                if let Some(seq) = self.seqs.get_mut(&id) {
+                    let back = seq.trace.resume_phase;
+                    seq.trace.transition(Instant::now(), back, "swap_in");
+                }
             }
         }
     }
@@ -1651,6 +1760,9 @@ impl<B: Backend> Engine<B> {
                 self.backend.swap_discard(slot)?;
             }
             self.sched.drop_swapped(id, full_len);
+            if let Some(seq) = self.seqs.get_mut(&id) {
+                seq.trace.transition(Instant::now(), Phase::Queued, "drop_swapped");
+            }
             // the swap-out's credit was not earned after all: the tokens
             // are recomputed, not avoided
             self.metrics.recompute_avoided_tokens = self
@@ -1662,6 +1774,10 @@ impl<B: Backend> Engine<B> {
         }
         let blocks = self.swap_in_seq(id)?;
         self.sched.resume_swapped(id);
+        if let Some(seq) = self.seqs.get_mut(&id) {
+            let back = seq.trace.resume_phase;
+            seq.trace.transition(Instant::now(), back, "swap_in_demand");
+        }
         self.metrics.prefetch_misses += 1;
         if let Some(cm) = &self.cost {
             // demand swap-in: the engine stalls on the transfer
@@ -1701,9 +1817,12 @@ impl<B: Backend> Engine<B> {
             ctl.forget(id);
         }
         if let Some(mut seq) = self.seqs.remove(&id) {
-            seq.metrics.finished = Some(Instant::now());
+            let now = Instant::now();
+            seq.metrics.finished = Some(now);
             seq.finish = Some(reason);
+            let breakdown = seq.trace.finish(now);
             self.metrics.record_request(&seq.metrics);
+            self.metrics.record_phases(&breakdown);
             self.metrics.tokens_generated = self.metrics.tokens_generated.max(0);
             let gen_tokens: Vec<u32> = seq.tokens[seq.prompt_len..]
                 .iter()
@@ -1725,7 +1844,12 @@ impl<B: Backend> Engine<B> {
                     .unwrap_or(0.0),
                 ttft_s: seq.metrics.ttft().map(|d| d.as_secs_f64()).unwrap_or(0.0),
                 sim_time_s: seq.metrics.sim_time_s,
+                corr_id: seq.trace.corr_id.clone(),
+                phases: breakdown,
             });
+            if self.recorder.capacity() > 0 {
+                self.recorder.push(seq.trace.to_json(&breakdown));
+            }
         }
     }
 }
@@ -2134,6 +2258,10 @@ mod tests {
         let v = e.stats_json();
         assert_eq!(v.req_usize("host_pool_blocks").unwrap(), 64);
         assert_eq!(v.req_usize("host_blocks_used").unwrap(), 0);
+        assert!(
+            v.req_usize("host_blocks_peak").unwrap() > 0,
+            "swaps ran, so the host tier high-water mark is nonzero"
+        );
         assert!(v.req_usize("swap_outs").unwrap() > 0);
         assert!(v.req_f64("prefetch_hit_rate").unwrap() >= 0.0);
         assert_eq!(v.req_usize("cache_blocks_used").unwrap(), 0);

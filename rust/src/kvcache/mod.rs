@@ -937,11 +937,11 @@ impl CacheManager {
 
     /// Host-tier occupancy snapshot.
     pub fn tier_stats(&self) -> TierStats {
-        let (cap, used) = self
+        let (cap, used, peak) = self
             .host
             .as_ref()
-            .map(|h| (h.capacity(), h.used()))
-            .unwrap_or((0, 0));
+            .map(|h| (h.capacity(), h.used(), h.used_peak()))
+            .unwrap_or((0, 0, 0));
         let pinned = self
             .swapped
             .values()
@@ -951,6 +951,7 @@ impl CacheManager {
         TierStats {
             host_capacity_blocks: cap,
             host_used_blocks: used,
+            host_used_peak_blocks: peak,
             swapped_seqs: self.swapped.len(),
             pinned_shared_blocks: pinned,
         }

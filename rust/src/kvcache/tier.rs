@@ -82,6 +82,7 @@ pub struct HostPool {
     capacity: usize,
     live: std::collections::HashSet<HostSlotId>,
     next_slot: HostSlotId,
+    used_peak: usize,
 }
 
 impl HostPool {
@@ -90,6 +91,7 @@ impl HostPool {
             capacity,
             live: std::collections::HashSet::new(),
             next_slot: 0,
+            used_peak: 0,
         }
     }
 
@@ -99,6 +101,13 @@ impl HostPool {
 
     pub fn used(&self) -> usize {
         self.live.len()
+    }
+
+    /// High-water mark of live slots over the pool's lifetime — sizes the
+    /// host tier for a re-run of the same trace (a pool that never fills
+    /// is over-provisioned; a pool pinned at capacity forced recomputes).
+    pub fn used_peak(&self) -> usize {
+        self.used_peak
     }
 
     pub fn free(&self) -> usize {
@@ -113,6 +122,7 @@ impl HostPool {
         let slot = self.next_slot;
         self.next_slot += 1;
         self.live.insert(slot);
+        self.used_peak = self.used_peak.max(self.live.len());
         Some(slot)
     }
 
@@ -198,6 +208,8 @@ pub struct MigrateInOps {
 pub struct TierStats {
     pub host_capacity_blocks: usize,
     pub host_used_blocks: usize,
+    /// high-water mark of host slots in use (see [`HostPool::used_peak`])
+    pub host_used_peak_blocks: usize,
     pub swapped_seqs: usize,
     /// shared device blocks currently pinned by swapped sequences
     pub pinned_shared_blocks: usize,
@@ -217,6 +229,7 @@ mod tests {
         assert!(p.alloc().is_none(), "capacity enforced");
         p.release(a);
         assert_eq!(p.free(), 1);
+        assert_eq!(p.used_peak(), 2, "peak survives release");
         let c = p.alloc().unwrap();
         assert_ne!(c, b, "slot ids are never reused while the pool lives");
         assert_eq!(p.used(), 2);

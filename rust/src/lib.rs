@@ -35,12 +35,14 @@
 //! | [`workload`] | ShareGPT-like traces, ARC-sim loader, arrival processes |
 //! | [`eval`] | ARC harness reproducing Tables 1–2 |
 //! | [`metrics`] | counters/histograms; Eq. 11 latency, Eq. 12 throughput |
+//! | [`obs`] | request-lifecycle tracing: per-phase latency attribution, mergeable latency histograms, flight recorder, Chrome trace + Prometheus export |
 
 pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 pub mod platform;
 pub mod router;
 pub mod runtime;

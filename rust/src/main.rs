@@ -135,8 +135,35 @@ fn main() -> Result<()> {
             "draft model size as a fraction of the target (drives the Z100 \
              model's draft-weight restream cost)",
         )
+        .flag(
+            "trace-depth",
+            "64",
+            "request-lifecycle tracing: finished-request timelines kept per \
+             replica in the flight-recorder ring (GET /admin/trace), 0 = off. \
+             Per-phase latency attribution stays on either way",
+        )
+        .flag(
+            "trace-sample",
+            "1.0",
+            "request-lifecycle tracing: fraction of requests recording the \
+             full event timeline (deterministic by request id).  Unsampled \
+             requests keep their phase breakdown but carry no events",
+        )
+        .flag(
+            "log-level",
+            "",
+            "stderr log level: error|warn|info|debug|trace (overrides \
+             LLM_COOPT_LOG; also gates the structured JSON events the \
+             serving path emits on dropped replies)",
+        )
         .flag("set", "easy", "eval: easy | challenge");
     let args = cli.parse_or_exit();
+
+    if !args.get("log-level").is_empty() {
+        llm_coopt::util::logging::set_level(llm_coopt::util::logging::Level::parse(
+            args.get("log-level"),
+        )?);
+    }
 
     let engine_cfg = |model: &str, opt| -> Result<EngineConfig> {
         let mut cfg = EngineConfig::new(model, opt);
@@ -160,7 +187,9 @@ fn main() -> Result<()> {
         cfg = cfg
             .with_spec_policy(SpecPolicy::parse(args.get("spec-policy"))?)
             .with_spec_shrink(args.get_f64("spec-shrink"))
-            .with_spec_ewma_alpha(args.get_f64("spec-ewma-alpha"));
+            .with_spec_ewma_alpha(args.get_f64("spec-ewma-alpha"))
+            .with_trace_depth(args.get_usize("trace-depth"))
+            .with_trace_sample(args.get_f64("trace-sample"));
         Ok(cfg)
     };
 
@@ -249,6 +278,7 @@ fn main() -> Result<()> {
                     ..Default::default()
                 },
                 ignore_eos: false,
+                corr_id: None,
             }])?;
             let r = &results[0];
             println!("prompt   : {}", r.prompt);
@@ -256,6 +286,15 @@ fn main() -> Result<()> {
             println!(
                 "tokens={} finish={:?} latency={:.3}s sim_time={:.4}s",
                 r.generated_tokens, r.finish, r.latency_s, r.sim_time_s
+            );
+            println!(
+                "phases  : queue={:.4}s prefill={:.4}s decode={:.4}s \
+                 swap_blocked={:.4}s migration={:.4}s",
+                r.phases.queue_s,
+                r.phases.prefill_s,
+                r.phases.decode_s,
+                r.phases.swap_blocked_s,
+                r.phases.migration_s
             );
             Ok(())
         }

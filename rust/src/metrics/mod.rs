@@ -4,6 +4,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::obs::{LatencyHist, PhaseBreakdown};
 use crate::util::json::{Object, Value};
 use crate::util::stats::Summary;
 
@@ -135,6 +136,25 @@ pub struct EngineMetrics {
     /// one sample per (decode step, active lane); includes the prefill
     /// windows the step ran first — the stall chunked prefill bounds
     pub itl_sim: Summary,
+    // --- request-lifecycle observability (obs module) ----------------------
+    /// log-bucketed *mergeable* latency histograms: unlike the `Summary`
+    /// percentiles above, per-replica copies of these merge exactly, so
+    /// the cluster aggregate's percentiles are true union percentiles
+    pub hist_ttft_wall: LatencyHist,
+    pub hist_e2e_wall: LatencyHist,
+    pub hist_itl_sim: LatencyHist,
+    pub hist_queue_wall: LatencyHist,
+    /// wallclock seconds finished requests spent in each lifecycle phase
+    /// (the phases partition each request's E2E, so these five sum to
+    /// `total_latency_wall_s` up to clock-read jitter)
+    pub phase_queue_s: f64,
+    pub phase_prefill_s: f64,
+    pub phase_decode_s: f64,
+    pub phase_swap_blocked_s: f64,
+    pub phase_migration_s: f64,
+    /// simulated draft-cost seconds of speculation (overlaps decode on
+    /// the sim clock; reported separately, not part of the partition)
+    pub phase_spec_overhead_sim_s: f64,
     run_started: Option<Instant>,
     run_finished: Option<Instant>,
 }
@@ -156,12 +176,34 @@ impl EngineMetrics {
         self.requests_finished += 1;
         self.tokens_generated += r.generated_tokens as u64;
         if let Some(l) = r.latency() {
-            self.latency_wall.add(l.as_secs_f64());
+            let s = l.as_secs_f64();
+            self.latency_wall.add(s);
+            self.hist_e2e_wall.record(s);
         }
         if let Some(t) = r.ttft() {
-            self.ttft_wall.add(t.as_secs_f64());
+            let s = t.as_secs_f64();
+            self.ttft_wall.add(s);
+            self.hist_ttft_wall.record(s);
         }
         self.latency_sim.add(r.sim_time_s);
+    }
+
+    /// One decode inter-token-latency sample (simulated clock).
+    pub fn record_itl_sim(&mut self, s: f64) {
+        self.itl_sim.add(s);
+        self.hist_itl_sim.record(s);
+    }
+
+    /// Fold a finished request's phase breakdown into the run totals and
+    /// the queue-wait histogram.
+    pub fn record_phases(&mut self, b: &PhaseBreakdown) {
+        self.phase_queue_s += b.queue_s;
+        self.phase_prefill_s += b.prefill_s;
+        self.phase_decode_s += b.decode_s;
+        self.phase_swap_blocked_s += b.swap_blocked_s;
+        self.phase_migration_s += b.migration_s;
+        self.phase_spec_overhead_sim_s += b.spec_overhead_sim_s;
+        self.hist_queue_wall.record(b.queue_s);
     }
 
     /// Eq. 11: total latency = sum over requests.
@@ -351,6 +393,21 @@ impl EngineMetrics {
         );
         o.insert("sim_swap_s", self.sim_swap_s);
         o.insert("sim_swap_blocked_s", self.sim_swap_blocked_s);
+        // per-phase wallclock attribution of finished requests (sums to
+        // total_latency_wall_s) + the sim-clock speculation overhead
+        o.insert("phase_queue_s", self.phase_queue_s);
+        o.insert("phase_prefill_s", self.phase_prefill_s);
+        o.insert("phase_decode_s", self.phase_decode_s);
+        o.insert("phase_swap_blocked_s", self.phase_swap_blocked_s);
+        o.insert("phase_migration_s", self.phase_migration_s);
+        o.insert("phase_spec_overhead_sim_s", self.phase_spec_overhead_sim_s);
+        // mergeable log-bucketed histograms (exact cluster aggregation)
+        let mut hist = Object::new();
+        hist.insert("ttft_wall", self.hist_ttft_wall.to_json());
+        hist.insert("e2e_wall", self.hist_e2e_wall.to_json());
+        hist.insert("itl_sim", self.hist_itl_sim.to_json());
+        hist.insert("queue_wall", self.hist_queue_wall.to_json());
+        o.insert("hist", hist);
         if self.itl_sim.count() > 0 {
             o.insert("itl_sim_p50_s", self.itl_sim.p50());
             o.insert("itl_sim_p95_s", self.itl_sim.p95());
@@ -403,6 +460,51 @@ mod tests {
         assert_eq!(j.req_usize("prefill_chunks").unwrap(), 5);
         assert!((j.req_f64("chunk_stall_sim_s").unwrap() - 0.25).abs() < 1e-12);
         assert!(j.req_f64("itl_sim_p95_s").unwrap() >= j.req_f64("itl_sim_p50_s").unwrap());
+    }
+
+    #[test]
+    fn phase_breakdowns_and_hists_serialize() {
+        let mut m = EngineMetrics::new();
+        // the hist object is always present; empty hists carry count 0
+        let j = m.to_json();
+        let h = j.get("hist").expect("hist object");
+        assert_eq!(h.get("ttft_wall").unwrap().req_usize("count").unwrap(), 0);
+        let t0 = Instant::now();
+        m.record_request(&RequestMetrics {
+            id: 7,
+            prompt_tokens: 8,
+            generated_tokens: 4,
+            arrival: t0,
+            first_token: Some(t0 + Duration::from_millis(5)),
+            finished: Some(t0 + Duration::from_millis(40)),
+            sim_time_s: 0.01,
+        });
+        m.record_itl_sim(0.002);
+        m.record_phases(&PhaseBreakdown {
+            queue_s: 0.010,
+            prefill_s: 0.008,
+            decode_s: 0.015,
+            swap_blocked_s: 0.005,
+            migration_s: 0.002,
+            spec_overhead_sim_s: 0.001,
+            e2e_s: 0.040,
+        });
+        let j = m.to_json();
+        assert!((j.req_f64("phase_queue_s").unwrap() - 0.010).abs() < 1e-12);
+        assert!((j.req_f64("phase_swap_blocked_s").unwrap() - 0.005).abs() < 1e-12);
+        assert!((j.req_f64("phase_spec_overhead_sim_s").unwrap() - 0.001).abs() < 1e-12);
+        // the five wall phases sum to the request's E2E
+        let sum = j.req_f64("phase_queue_s").unwrap()
+            + j.req_f64("phase_prefill_s").unwrap()
+            + j.req_f64("phase_decode_s").unwrap()
+            + j.req_f64("phase_swap_blocked_s").unwrap()
+            + j.req_f64("phase_migration_s").unwrap();
+        assert!((sum - 0.040).abs() < 1e-12);
+        let h = j.get("hist").expect("hist object");
+        for key in ["ttft_wall", "e2e_wall", "itl_sim", "queue_wall"] {
+            let parsed = LatencyHist::from_json(h.get(key).unwrap()).expect(key);
+            assert_eq!(parsed.count(), 1, "{key}");
+        }
     }
 
     #[test]

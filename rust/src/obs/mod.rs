@@ -1,0 +1,992 @@
+//! Observability: request-lifecycle tracing, mergeable latency
+//! histograms, and the per-replica flight recorder.
+//!
+//! Every request carries a [`ReqTrace`] through router → scheduler →
+//! coordinator → KV tier → migration.  The trace partitions the
+//! request's wallclock lifetime into exclusive phases — at any instant a
+//! request is in exactly one of [`Phase`]'s states — so the per-phase
+//! seconds *telescope*: closing each span at the next transition makes
+//! queue + prefill + decode + swap-blocked + migration sum to the E2E
+//! latency with no unattributed gap and no double count.  Simulated-Z100
+//! attribution (including speculative draft overhead, which overlaps
+//! decode and therefore cannot be a wall phase) rides alongside.
+//!
+//! [`LatencyHist`] is the cluster-mergeable replacement for percentile
+//! `Summary`s in aggregated `/metrics`: every replica buckets into the
+//! same canonical exponential bounds, so merging is an elementwise count
+//! addition — the merged histogram *is* the histogram of the union of
+//! samples (exact, unlike averaging per-replica percentiles).
+//!
+//! The [`FlightRecorder`] keeps a bounded ring of recent finished-request
+//! timelines per engine, dumped by `GET /admin/trace` and exportable as
+//! Chrome `trace_event` JSON ([`chrome_trace`]) from the bench harness.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::json::{Object, Value};
+use crate::util::logging::{self, Level};
+
+// ---------------------------------------------------------------------------
+// phases
+// ---------------------------------------------------------------------------
+
+/// Exclusive request lifecycle states.  A request occupies exactly one
+/// at any wall instant; transitions are driven by the coordinator as it
+/// applies scheduler decisions, tier ops, and migration steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// waiting for admission (incl. re-queued after a drop-preemption or
+    /// a token-level migration fallback)
+    Queued = 0,
+    /// admitted, committing prefill windows (chunked or one-shot)
+    Prefill = 1,
+    /// decode / verify rounds
+    Decode = 2,
+    /// KV parked on the host tier after a swap-preemption
+    SwapBlocked = 3,
+    /// parked in `Migrating`: KV export, transit, and import
+    Migration = 4,
+}
+
+impl Phase {
+    pub const COUNT: usize = 5;
+    pub const ALL: [Phase; Phase::COUNT] = [
+        Phase::Queued,
+        Phase::Prefill,
+        Phase::Decode,
+        Phase::SwapBlocked,
+        Phase::Migration,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::SwapBlocked => "swap_blocked",
+            Phase::Migration => "migration",
+        }
+    }
+}
+
+/// One timestamped lifecycle event (wall offset since arrival plus the
+/// request's accumulated simulated-Z100 seconds at that moment).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub t_wall_s: f64,
+    pub sim_s: f64,
+    pub label: &'static str,
+    /// phase in effect *after* this event
+    pub phase: Phase,
+}
+
+/// Cap on recorded events per request: a runaway decode cannot grow a
+/// trace without bound; overflow is counted, not silently dropped.
+pub const MAX_TRACE_EVENTS: usize = 256;
+
+/// Per-request lifecycle trace: exclusive wall-phase accumulators plus
+/// the (sampled) event timeline.  Phase accounting is always on — it
+/// feeds the phase breakdown and the queue-wait histogram; only the
+/// event timeline is gated by `--trace-sample`.
+#[derive(Debug, Clone)]
+pub struct ReqTrace {
+    pub id: u64,
+    pub corr_id: Option<String>,
+    pub arrival: Instant,
+    cur_phase: Phase,
+    cur_since: Instant,
+    wall_s: [f64; Phase::COUNT],
+    /// simulated seconds of speculative draft cost attributed to this
+    /// request (overlaps the decode phase; sim-clock, not a wall phase)
+    pub sim_spec_overhead_s: f64,
+    /// running sim-second attribution mirror (events stamp this)
+    pub sim_s: f64,
+    /// phase to return to when a swap-blocked request resumes (a victim
+    /// can be swapped mid-prefill or mid-decode)
+    pub resume_phase: Phase,
+    pub preemptions: u64,
+    events: Vec<TraceEvent>,
+    events_enabled: bool,
+    dropped_events: u64,
+    finished: bool,
+}
+
+impl ReqTrace {
+    pub fn new(id: u64, arrival: Instant, events_enabled: bool) -> Self {
+        let mut t = ReqTrace {
+            id,
+            corr_id: None,
+            arrival,
+            cur_phase: Phase::Queued,
+            cur_since: arrival,
+            wall_s: [0.0; Phase::COUNT],
+            sim_spec_overhead_s: 0.0,
+            sim_s: 0.0,
+            resume_phase: Phase::Decode,
+            preemptions: 0,
+            events: Vec::new(),
+            events_enabled,
+            dropped_events: 0,
+            finished: false,
+        };
+        t.push_event(0.0, "queued", Phase::Queued);
+        t
+    }
+
+    pub fn cur_phase(&self) -> Phase {
+        self.cur_phase
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn phase_wall_s(&self, p: Phase) -> f64 {
+        self.wall_s[p as usize]
+    }
+
+    fn push_event(&mut self, t_wall_s: f64, label: &'static str, phase: Phase) {
+        if !self.events_enabled {
+            return;
+        }
+        if self.events.len() >= MAX_TRACE_EVENTS {
+            self.dropped_events += 1;
+            return;
+        }
+        self.events.push(TraceEvent {
+            t_wall_s,
+            sim_s: self.sim_s,
+            label,
+            phase,
+        });
+    }
+
+    /// Close the current phase span and enter `phase`.  The span's wall
+    /// seconds land on the phase being *left*, so the per-phase totals
+    /// telescope to exactly `finished - arrival`.
+    pub fn transition(&mut self, now: Instant, phase: Phase, label: &'static str) {
+        let span = (now - self.cur_since).as_secs_f64();
+        self.wall_s[self.cur_phase as usize] += span;
+        self.cur_phase = phase;
+        self.cur_since = now;
+        self.push_event((now - self.arrival).as_secs_f64(), label, phase);
+    }
+
+    /// Record an event without a phase change (prefill-chunk commits,
+    /// decode/verify rounds, tier ops observed mid-phase).
+    pub fn note(&mut self, now: Instant, label: &'static str) {
+        let phase = self.cur_phase;
+        self.push_event((now - self.arrival).as_secs_f64(), label, phase);
+    }
+
+    /// [`ReqTrace::note`] at the current wall time, skipping the clock
+    /// read entirely when the event timeline is not sampled — the
+    /// hot-loop form for per-round decode/verify marks.
+    pub fn note_now(&mut self, label: &'static str) {
+        if self.events_enabled {
+            self.note(Instant::now(), label);
+        }
+    }
+
+    /// Attribute simulated-Z100 seconds to this request (mirrors the
+    /// metrics-side `sim_time_s` charge so events carry both clocks).
+    pub fn add_sim(&mut self, s: f64) {
+        self.sim_s += s;
+    }
+
+    /// Close the final span.  Idempotent: migration hand-off re-admission
+    /// never re-finishes an already-finished trace.
+    pub fn finish(&mut self, now: Instant) -> PhaseBreakdown {
+        if !self.finished {
+            let span = (now - self.cur_since).as_secs_f64();
+            self.wall_s[self.cur_phase as usize] += span;
+            self.cur_since = now;
+            self.finished = true;
+            self.push_event((now - self.arrival).as_secs_f64(), "finished", self.cur_phase);
+        }
+        PhaseBreakdown {
+            queue_s: self.wall_s[Phase::Queued as usize],
+            prefill_s: self.wall_s[Phase::Prefill as usize],
+            decode_s: self.wall_s[Phase::Decode as usize],
+            swap_blocked_s: self.wall_s[Phase::SwapBlocked as usize],
+            migration_s: self.wall_s[Phase::Migration as usize],
+            spec_overhead_sim_s: self.sim_spec_overhead_s,
+            e2e_s: (now - self.arrival).as_secs_f64(),
+        }
+    }
+
+    /// Full timeline as JSON (the flight-recorder / `/admin/trace`
+    /// payload shape).
+    pub fn to_json(&self, breakdown: &PhaseBreakdown) -> Value {
+        let mut o = Object::new();
+        o.insert("id", self.id as usize);
+        match &self.corr_id {
+            Some(c) => o.insert("corr_id", c.as_str()),
+            None => o.insert("corr_id", Value::Null),
+        }
+        o.insert("phases", breakdown.to_json());
+        o.insert("preemptions", self.preemptions as usize);
+        let mut evs = Vec::with_capacity(self.events.len());
+        for e in &self.events {
+            let mut eo = Object::new();
+            eo.insert("t_wall_s", e.t_wall_s);
+            eo.insert("sim_s", e.sim_s);
+            eo.insert("label", e.label);
+            eo.insert("phase", e.phase.name());
+            evs.push(Value::Object(eo));
+        }
+        o.insert("events", Value::Array(evs));
+        if self.dropped_events > 0 {
+            o.insert("dropped_events", self.dropped_events as usize);
+        }
+        Value::Object(o)
+    }
+}
+
+/// Where a finished request's latency went.  The five wall phases
+/// partition `e2e_s` exactly (telescoping spans); `spec_overhead_sim_s`
+/// is the simulated draft-cost share and overlaps decode.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseBreakdown {
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub swap_blocked_s: f64,
+    pub migration_s: f64,
+    pub spec_overhead_sim_s: f64,
+    pub e2e_s: f64,
+}
+
+impl PhaseBreakdown {
+    /// Sum of the exclusive wall phases — equals `e2e_s` up to float
+    /// rounding of the span additions.
+    pub fn phase_sum_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s + self.swap_blocked_s + self.migration_s
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("queue_s", self.queue_s);
+        o.insert("prefill_s", self.prefill_s);
+        o.insert("decode_s", self.decode_s);
+        o.insert("swap_blocked_s", self.swap_blocked_s);
+        o.insert("migration_s", self.migration_s);
+        o.insert("spec_overhead_sim_s", self.spec_overhead_sim_s);
+        o.insert("e2e_s", self.e2e_s);
+        Value::Object(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// mergeable histograms
+// ---------------------------------------------------------------------------
+
+/// Canonical bucket table: bounds `HIST_BASE_S * HIST_GROWTH^i`, i in
+/// `0..HIST_BUCKETS` (1 µs … ~1100 s), plus one overflow bucket.  Every
+/// replica uses the same table, which is what makes merges exact.
+pub const HIST_BASE_S: f64 = 1e-6;
+pub const HIST_GROWTH: f64 = 2.0;
+pub const HIST_BUCKETS: usize = 40;
+
+/// Upper bound of bucket `i` (seconds).
+pub fn hist_bound(i: usize) -> f64 {
+    HIST_BASE_S * HIST_GROWTH.powi(i as i32)
+}
+
+/// Log-bucketed latency histogram over the canonical bounds.  Merging
+/// two histograms (elementwise count addition + sum/min/max folds)
+/// yields exactly the histogram of the combined sample set, so cluster
+/// percentiles are computed once over merged counts instead of averaging
+/// per-replica percentiles.
+#[derive(Debug, Clone)]
+pub struct LatencyHist {
+    counts: Vec<u64>, // HIST_BUCKETS + 1 (last = overflow)
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            counts: vec![0; HIST_BUCKETS + 1],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let mut idx = HIST_BUCKETS;
+        for i in 0..HIST_BUCKETS {
+            if x < hist_bound(i) {
+                idx = i;
+                break;
+            }
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Elementwise merge: after this, `self` is exactly the histogram of
+    /// the union of both sample sets.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// q-th percentile (q in [0, 100]), linearly interpolated inside the
+    /// winning bucket and clamped to the recorded min/max.  NaN when
+    /// empty.  Depends only on (counts, min, max), so merged histograms
+    /// answer exactly as the union would.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q / 100.0 * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = if i == 0 { 0.0 } else { hist_bound(i - 1) };
+                let hi = if i < HIST_BUCKETS {
+                    hist_bound(i)
+                } else {
+                    self.max.max(lo)
+                };
+                let frac = (target - seen) as f64 / c as f64;
+                let est = lo + (hi - lo) * frac;
+                return est.clamp(self.min, self.max);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Sparse JSON: only non-zero buckets travel over `/metrics`.
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("count", self.total as usize);
+        o.insert("sum", self.sum);
+        if self.total > 0 {
+            o.insert("min", self.min);
+            o.insert("max", self.max);
+        }
+        let mut buckets = Object::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                buckets.insert(format!("{i}"), c as usize);
+            }
+        }
+        o.insert("buckets", buckets);
+        Value::Object(o)
+    }
+
+    /// Inverse of [`LatencyHist::to_json`]; `None` on malformed input
+    /// (a replica speaking a different schema must not poison the merge).
+    pub fn from_json(v: &Value) -> Option<LatencyHist> {
+        let mut h = LatencyHist::new();
+        h.total = v.get("count")?.as_usize()? as u64;
+        h.sum = v.get("sum")?.as_f64()?;
+        if h.total > 0 {
+            h.min = v.get("min")?.as_f64()?;
+            h.max = v.get("max")?.as_f64()?;
+        }
+        let buckets = v.get("buckets")?.as_object()?;
+        let mut counted = 0u64;
+        for (k, c) in buckets.iter() {
+            let i: usize = k.parse().ok()?;
+            if i > HIST_BUCKETS {
+                return None;
+            }
+            let c = c.as_usize()? as u64;
+            h.counts[i] = c;
+            counted += c;
+        }
+        if counted != h.total {
+            return None;
+        }
+        Some(h)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder
+// ---------------------------------------------------------------------------
+
+/// Bounded ring of recent finished-request timelines (one per engine).
+/// Capacity comes from `--trace-depth`; 0 disables recording entirely.
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    cap: usize,
+    ring: VecDeque<Value>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        FlightRecorder {
+            cap,
+            ring: VecDeque::with_capacity(cap.min(64)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    pub fn push(&mut self, trace: Value) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.ring.len() >= self.cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(trace);
+    }
+
+    /// Dump the ring (oldest first), optionally filtered by engine
+    /// request id or client correlation id.
+    pub fn to_json(&self, id: Option<u64>, corr: Option<&str>) -> Value {
+        let items = self
+            .ring
+            .iter()
+            .filter(|t| match id {
+                Some(want) => t.get("id").and_then(Value::as_usize) == Some(want as usize),
+                None => true,
+            })
+            .filter(|t| match corr {
+                Some(want) => t.get("corr_id").and_then(Value::as_str) == Some(want),
+                None => true,
+            })
+            .cloned()
+            .collect();
+        Value::Array(items)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// deterministic sampling
+// ---------------------------------------------------------------------------
+
+fn fnv1a_u64(x: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in x.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic per-request sampling decision for `--trace-sample`:
+/// hash the engine-assigned id so the same id samples the same way on
+/// every replica and every run (no RNG on the request path).
+pub fn trace_sampled(id: u64, sample: f64) -> bool {
+    if sample >= 1.0 {
+        true
+    } else if sample <= 0.0 {
+        false
+    } else {
+        (fnv1a_u64(id) % 10_000) as f64 < sample * 10_000.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event export
+// ---------------------------------------------------------------------------
+
+/// Convert flight-recorder timelines into Chrome `trace_event` JSON
+/// (`chrome://tracing` / Perfetto): one complete-span ("X") event per
+/// phase interval plus instant ("i") marks for the raw lifecycle events.
+/// `pid` is the replica index, `tid` the engine request id, timestamps
+/// are microseconds since the request's arrival.
+pub fn chrome_trace(traces: &[(usize, Value)]) -> Value {
+    let mut events = Vec::new();
+    for (replica, trace) in traces {
+        let id = trace.get("id").and_then(Value::as_usize).unwrap_or(0);
+        let evs = match trace.get("events").and_then(Value::as_array) {
+            Some(e) if !e.is_empty() => e,
+            _ => continue,
+        };
+        let at = |e: &Value| e.get("t_wall_s").and_then(Value::as_f64).unwrap_or(0.0);
+        let phase_of = |e: &Value| {
+            e.get("phase")
+                .and_then(Value::as_str)
+                .unwrap_or("queued")
+                .to_string()
+        };
+        let mut span_start = at(&evs[0]);
+        let mut span_phase = phase_of(&evs[0]);
+        for e in evs.iter().skip(1) {
+            let t = at(e);
+            let phase = phase_of(e);
+            let is_last = e.get("label").and_then(Value::as_str) == Some("finished");
+            if phase != span_phase || is_last {
+                let mut x = Object::new();
+                x.insert("name", span_phase.as_str());
+                x.insert("cat", "phase");
+                x.insert("ph", "X");
+                x.insert("pid", *replica);
+                x.insert("tid", id);
+                x.insert("ts", span_start * 1e6);
+                x.insert("dur", (t - span_start).max(0.0) * 1e6);
+                events.push(Value::Object(x));
+                span_start = t;
+                span_phase = phase;
+            }
+            let mut i = Object::new();
+            i.insert(
+                "name",
+                e.get("label").and_then(Value::as_str).unwrap_or("event"),
+            );
+            i.insert("cat", "lifecycle");
+            i.insert("ph", "i");
+            i.insert("s", "t");
+            i.insert("pid", *replica);
+            i.insert("tid", id);
+            i.insert("ts", t * 1e6);
+            events.push(Value::Object(i));
+        }
+    }
+    let mut top = Object::new();
+    top.insert("traceEvents", Value::Array(events));
+    top.insert("displayTimeUnit", "ms");
+    Value::Object(top)
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+fn prom_name(key: &str) -> String {
+    let mut s = String::with_capacity(key.len() + 10);
+    s.push_str("llm_coopt_");
+    for c in key.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' {
+            s.push(c);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+/// Render a flat `/metrics` JSON payload as Prometheus text exposition:
+/// numbers become gauges, the `hist` object becomes `_bucket{le=...}`
+/// series with `_sum`/`_count`, and one-level numeric maps (e.g.
+/// `spec_k_hist`) become labeled gauges.  Strings, bools, and nested
+/// arrays (per-replica snapshots) are skipped — scrape each replica for
+/// those.
+pub fn prometheus_text(v: &Value) -> String {
+    let mut out = String::new();
+    let obj = match v.as_object() {
+        Some(o) => o,
+        None => return out,
+    };
+    for (key, val) in obj.iter() {
+        match val {
+            Value::Num(n) if n.is_finite() => {
+                let name = prom_name(key);
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {n}\n"));
+            }
+            Value::Object(sub) if key == "hist" => {
+                for (hname, hval) in sub.iter() {
+                    let h = match LatencyHist::from_json(hval) {
+                        Some(h) => h,
+                        None => continue,
+                    };
+                    let name = format!("{}_seconds", prom_name(hname));
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    let mut cum = 0u64;
+                    for (i, &c) in h.counts().iter().enumerate() {
+                        cum += c;
+                        if i < HIST_BUCKETS {
+                            // only materialize populated + boundary lines:
+                            // full 41-bucket exposition per metric is noise
+                            if c == 0 && i > 0 && h.counts()[i - 1] == 0 {
+                                continue;
+                            }
+                            out.push_str(&format!(
+                                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                                hist_bound(i)
+                            ));
+                        }
+                    }
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+                    out.push_str(&format!("{name}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
+                }
+            }
+            Value::Object(sub) => {
+                let name = prom_name(key);
+                let mut wrote_type = false;
+                for (k, v) in sub.iter() {
+                    if let Value::Num(n) = v {
+                        if n.is_finite() {
+                            if !wrote_type {
+                                out.push_str(&format!("# TYPE {name} gauge\n"));
+                                wrote_type = true;
+                            }
+                            out.push_str(&format!("{name}{{key=\"{k}\"}} {n}\n"));
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// structured stderr events
+// ---------------------------------------------------------------------------
+
+/// Emit a structured one-line JSON event to stderr, gated by the global
+/// log level (`--log-level` / `LLM_COOPT_LOG`).  This is the serving
+/// path's replacement for silently discarding send errors: machine-
+/// parseable, one line, no panic, no allocation when gated off.
+pub fn log_json_event(level: Level, event: &str, fields: &[(&str, Value)]) {
+    if !logging::enabled(level) {
+        return;
+    }
+    let mut o = Object::new();
+    o.insert("event", event);
+    o.insert(
+        "level",
+        match level {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        },
+    );
+    o.insert("t_s", logging::elapsed_s());
+    for (k, v) in fields {
+        o.insert(*k, v.clone());
+    }
+    eprintln!("{}", Value::Object(o));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn hist_of(samples: &[f64]) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for &s in samples {
+            h.record(s);
+        }
+        h
+    }
+
+    #[test]
+    fn phase_partition_telescopes_to_e2e() {
+        let t0 = Instant::now();
+        let mut tr = ReqTrace::new(7, t0, true);
+        let t1 = t0 + Duration::from_millis(10);
+        tr.transition(t1, Phase::Prefill, "admitted");
+        let t2 = t1 + Duration::from_millis(25);
+        tr.transition(t2, Phase::Decode, "prefill_done");
+        let t3 = t2 + Duration::from_millis(5);
+        tr.resume_phase = tr.cur_phase();
+        tr.transition(t3, Phase::SwapBlocked, "swap_out");
+        let t4 = t3 + Duration::from_millis(40);
+        tr.transition(t4, Phase::Decode, "swap_in");
+        let t5 = t4 + Duration::from_millis(20);
+        let b = tr.finish(t5);
+        assert!((b.queue_s - 0.010).abs() < 1e-9);
+        assert!((b.prefill_s - 0.025).abs() < 1e-9);
+        assert!((b.decode_s - 0.025).abs() < 1e-9);
+        assert!((b.swap_blocked_s - 0.040).abs() < 1e-9);
+        assert_eq!(b.migration_s, 0.0);
+        // the telescoping property: no gap, no double count
+        assert!((b.phase_sum_s() - b.e2e_s).abs() < 1e-9);
+        // finish is idempotent
+        let b2 = tr.finish(t5 + Duration::from_millis(100));
+        assert!((b2.phase_sum_s() - b.phase_sum_s()).abs() < 1e-12);
+        // timeline recorded with labels in order
+        let labels: Vec<&str> = tr.events().iter().map(|e| e.label).collect();
+        assert_eq!(
+            labels,
+            ["queued", "admitted", "prefill_done", "swap_out", "swap_in", "finished"]
+        );
+    }
+
+    #[test]
+    fn trace_sampling_gates_events_not_phases() {
+        let t0 = Instant::now();
+        let mut tr = ReqTrace::new(1, t0, false);
+        tr.transition(t0 + Duration::from_millis(3), Phase::Prefill, "admitted");
+        let b = tr.finish(t0 + Duration::from_millis(8));
+        assert!(tr.events().is_empty(), "unsampled: no timeline");
+        assert!((b.phase_sum_s() - b.e2e_s).abs() < 1e-9, "phases still exact");
+        assert!(b.queue_s > 0.0 && b.prefill_s > 0.0);
+    }
+
+    #[test]
+    fn trace_event_cap_counts_drops() {
+        let t0 = Instant::now();
+        let mut tr = ReqTrace::new(1, t0, true);
+        for i in 0..(MAX_TRACE_EVENTS + 10) {
+            tr.note(t0 + Duration::from_micros(i as u64), "decode_round");
+        }
+        assert_eq!(tr.events().len(), MAX_TRACE_EVENTS);
+        let b = tr.finish(t0 + Duration::from_millis(1));
+        let j = tr.to_json(&b);
+        assert!(j.req_usize("dropped_events").unwrap() > 0);
+    }
+
+    #[test]
+    fn hist_records_and_interpolates() {
+        let h = hist_of(&[0.5e-6, 2e-6, 3e-6, 0.01, 0.02, 0.04, 1.0, 2.0]);
+        assert_eq!(h.count(), 8);
+        assert!((h.sum() - 3.070005_5).abs() < 1e-6);
+        assert_eq!(h.min(), 0.5e-6);
+        assert_eq!(h.max(), 2.0);
+        assert!(h.p50() <= h.p95());
+        assert!(h.p95() <= h.p99());
+        assert!(h.p99() <= h.max());
+        assert!(h.percentile(0.0) >= h.min());
+        // empty histogram: NaN percentile, zero mean, no min/max in JSON
+        let e = LatencyHist::new();
+        assert!(e.percentile(50.0).is_nan());
+        assert_eq!(e.mean(), 0.0);
+        assert!(!e.to_json().to_string().contains("min"));
+    }
+
+    #[test]
+    fn hist_merge_is_exact_and_associative() {
+        let a = hist_of(&[1e-5, 2e-5, 0.3, 0.4]);
+        let b = hist_of(&[5e-4, 0.001, 7.0]);
+        let c = hist_of(&[0.25, 90.0, 1e-6, 0.5]);
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.counts(), right.counts());
+        assert_eq!(left.count(), right.count());
+        assert!((left.sum() - right.sum()).abs() < 1e-12);
+        assert_eq!(left.min(), right.min());
+        assert_eq!(left.max(), right.max());
+        // merge == histogram of the union of samples (the exactness claim)
+        let union = hist_of(&[
+            1e-5, 2e-5, 0.3, 0.4, 5e-4, 0.001, 7.0, 0.25, 90.0, 1e-6, 0.5,
+        ]);
+        assert_eq!(left.counts(), union.counts());
+        assert_eq!(left.count(), union.count());
+        assert_eq!(left.min(), union.min());
+        assert_eq!(left.max(), union.max());
+        for q in [50.0, 90.0, 95.0, 99.0] {
+            assert!(
+                (left.percentile(q) - union.percentile(q)).abs() < 1e-12,
+                "merged percentile must equal union percentile at q={q}"
+            );
+        }
+        // commutative too
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab.counts(), ba.counts());
+    }
+
+    #[test]
+    fn hist_json_round_trip() {
+        let h = hist_of(&[1e-6, 0.005, 0.005, 3.0, 700.0, 5e9]);
+        let j = h.to_json();
+        let back = LatencyHist::from_json(&j).expect("round trip");
+        assert_eq!(back.counts(), h.counts());
+        assert_eq!(back.count(), h.count());
+        assert!((back.sum() - h.sum()).abs() < 1e-9);
+        assert_eq!(back.min(), h.min());
+        assert_eq!(back.max(), h.max());
+        // overflow bucket (5e9 s) survives
+        assert_eq!(h.counts()[HIST_BUCKETS], 1);
+        // malformed inputs are rejected, not half-parsed
+        assert!(LatencyHist::from_json(&Value::Null).is_none());
+        let mut o = Object::new();
+        o.insert("count", 3usize);
+        o.insert("sum", 1.0);
+        o.insert("min", 0.1);
+        o.insert("max", 0.9);
+        let mut b = Object::new();
+        b.insert("0", 1usize); // count says 3, buckets say 1
+        o.insert("buckets", b);
+        assert!(LatencyHist::from_json(&Value::Object(o)).is_none());
+    }
+
+    #[test]
+    fn flight_recorder_ring_bounds_and_filters() {
+        let mut fr = FlightRecorder::new(3);
+        for i in 0..5u64 {
+            let t0 = Instant::now();
+            let mut tr = ReqTrace::new(i, t0, true);
+            if i == 4 {
+                tr.corr_id = Some("req-x".into());
+            }
+            let b = tr.finish(t0 + Duration::from_millis(1));
+            fr.push(tr.to_json(&b));
+        }
+        assert_eq!(fr.len(), 3, "ring bounded at capacity");
+        let all = fr.to_json(None, None);
+        let ids: Vec<usize> = all
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|t| t.req_usize("id").unwrap())
+            .collect();
+        assert_eq!(ids, [2, 3, 4], "oldest evicted first");
+        assert_eq!(fr.to_json(Some(3), None).as_array().unwrap().len(), 1);
+        assert_eq!(fr.to_json(Some(99), None).as_array().unwrap().len(), 0);
+        assert_eq!(
+            fr.to_json(None, Some("req-x")).as_array().unwrap().len(),
+            1
+        );
+        // depth 0 disables recording
+        let mut off = FlightRecorder::new(0);
+        off.push(Value::Null);
+        assert!(off.is_empty());
+    }
+
+    #[test]
+    fn deterministic_sampling() {
+        assert!(trace_sampled(42, 1.0));
+        assert!(!trace_sampled(42, 0.0));
+        // stable across calls and roughly proportional
+        let hits: usize = (0..1000).filter(|&i| trace_sampled(i, 0.25)).count();
+        assert!(hits > 150 && hits < 350, "got {hits}/1000 at 0.25");
+        for i in 0..100 {
+            assert_eq!(trace_sampled(i, 0.5), trace_sampled(i, 0.5));
+        }
+    }
+
+    #[test]
+    fn chrome_trace_spans_cover_phases() {
+        let t0 = Instant::now();
+        let mut tr = ReqTrace::new(9, t0, true);
+        tr.transition(t0 + Duration::from_millis(2), Phase::Prefill, "admitted");
+        tr.transition(t0 + Duration::from_millis(6), Phase::Decode, "prefill_done");
+        let b = tr.finish(t0 + Duration::from_millis(11));
+        let out = chrome_trace(&[(1, tr.to_json(&b))]);
+        let evs = out.req("traceEvents").unwrap().as_array().unwrap();
+        let spans: Vec<&Value> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 3, "queued, prefill, decode spans");
+        let names: Vec<&str> = spans.iter().map(|s| s.req_str("name").unwrap()).collect();
+        assert_eq!(names, ["queued", "prefill", "decode"]);
+        let total_dur: f64 = spans.iter().map(|s| s.req_f64("dur").unwrap()).sum();
+        assert!((total_dur / 1e6 - b.e2e_s).abs() < 1e-6);
+        for s in &spans {
+            assert_eq!(s.req_usize("pid").unwrap(), 1);
+            assert_eq!(s.req_usize("tid").unwrap(), 9);
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_shapes() {
+        let mut hist = Object::new();
+        hist.insert("ttft_wall", hist_of(&[0.01, 0.02, 5.0]).to_json());
+        let mut k_hist = Object::new();
+        k_hist.insert("0", 2usize);
+        k_hist.insert("3", 5usize);
+        let mut o = Object::new();
+        o.insert("tokens_generated", 128usize);
+        o.insert("throughput_sim_tok_s", 42.5);
+        o.insert("spec_regime", "gemm-bound"); // string: skipped
+        o.insert("spec_k_hist", k_hist);
+        o.insert("hist", hist);
+        let text = prometheus_text(&Value::Object(o));
+        assert!(text.contains("# TYPE llm_coopt_tokens_generated gauge"));
+        assert!(text.contains("llm_coopt_tokens_generated 128"));
+        assert!(text.contains("llm_coopt_throughput_sim_tok_s 42.5"));
+        assert!(!text.contains("gemm-bound"));
+        assert!(text.contains("llm_coopt_spec_k_hist{key=\"3\"} 5"));
+        assert!(text.contains("# TYPE llm_coopt_ttft_wall_seconds histogram"));
+        assert!(text.contains("llm_coopt_ttft_wall_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("llm_coopt_ttft_wall_seconds_count 3"));
+        // every line is either a comment or name[{labels}] value
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "malformed line: {line}"
+            );
+        }
+    }
+}

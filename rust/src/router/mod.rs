@@ -69,6 +69,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::{OptConfig, ReplicaRole, RouterPolicy};
 use crate::coordinator::{Engine, GenRequest, GenResult};
 use crate::kvcache::{leading_prefix_hash, SeqId};
+use crate::obs::LatencyHist;
 use crate::platform::{replica_imbalance, CostModel};
 use crate::runtime::Backend;
 use crate::server::{EngineHandle, HandoffEnvelope, MetricsSnapshot};
@@ -727,6 +728,7 @@ const CLUSTER_SUM_KEYS: &[&str] = &[
     "cache_prefix_hits",
     "host_pool_blocks",
     "host_blocks_used",
+    "host_blocks_peak",
     "swapped_seqs",
     "migrations_out",
     "migrations_in",
@@ -1074,6 +1076,34 @@ impl RouterHandle {
         Value::Object(top).to_string()
     }
 
+    /// The `GET /admin/trace` payload: each replica's flight-recorder
+    /// ring of recent finished-request timelines, optionally filtered by
+    /// engine request id or client correlation id.  A migrated request
+    /// appears once, under the replica that finished it (its trace
+    /// travels with the hand-off).  A dead replica contributes an empty
+    /// ring rather than failing the whole dump.
+    pub fn trace_json(&self, id: Option<u64>, corr: Option<&str>) -> String {
+        let reps: Vec<Value> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut o = Object::new();
+                o.insert("replica", i);
+                o.insert(
+                    "requests",
+                    r.handle
+                        .trace_json(id, corr)
+                        .unwrap_or_else(|_| Value::Array(Vec::new())),
+                );
+                Value::Object(o)
+            })
+            .collect();
+        let mut top = Object::new();
+        top.insert("replicas", Value::Array(reps));
+        Value::Object(top).to_string()
+    }
+
     /// One autoscaling control step over the cluster's queue-depth and
     /// occupancy-spread signals; returns what it did (`"scale_up"`,
     /// `"scale_down"`, `"rerole"`, `"noop"`) for the serve loop's log
@@ -1241,8 +1271,23 @@ fn dispatch_one_handoff(replicas: &[RouterReplica], roles: &[AtomicU8], env: Han
         } else {
             Err((h, r))
         };
-        if let Err((_, r)) = failed {
-            let _ = r.send(Err(anyhow!("engine error: hand-off destination lost")));
+        if let Err((h, r)) = failed {
+            // both replicas are gone under this sequence; failing the
+            // waiter can itself fail (client hung up) — either way the
+            // loss is a structured stderr event, never a silent drop
+            if r.send(Err(anyhow!("engine error: hand-off destination lost")))
+                .is_err()
+            {
+                crate::obs::log_json_event(
+                    crate::util::logging::Level::Warn,
+                    "handoff_reply_send_failed",
+                    &[
+                        ("request_id", (h.trace.id as usize).into()),
+                        ("from", from.into()),
+                        ("dest", dest.into()),
+                    ],
+                );
+            }
         }
     }
 }
@@ -1279,6 +1324,46 @@ fn cluster_aggregate(parsed: &[Value]) -> Object {
             tps.iter().sum::<f64>() / tps.len() as f64,
         );
     }
+    // wall-phase totals sum like counters (seconds spent are additive)
+    for key in [
+        "phase_queue_s",
+        "phase_prefill_s",
+        "phase_decode_s",
+        "phase_swap_blocked_s",
+        "phase_migration_s",
+        "phase_spec_overhead_sim_s",
+    ] {
+        let total: f64 = parsed
+            .iter()
+            .filter_map(|v| v.get(key).and_then(|x| x.as_f64()))
+            .sum();
+        o.insert(key, total);
+    }
+    // exact cluster percentiles: merge the per-replica log-bucketed
+    // histograms elementwise (identical canonical bounds everywhere),
+    // then read percentiles off the merged distribution — never average
+    // per-replica percentiles, which has no statistical meaning
+    let mut hists = Object::new();
+    for key in ["ttft_wall", "e2e_wall", "itl_sim", "queue_wall"] {
+        let mut merged = LatencyHist::new();
+        for v in parsed {
+            if let Some(h) = v
+                .get("hist")
+                .and_then(|h| h.get(key))
+                .and_then(LatencyHist::from_json)
+            {
+                merged.merge(&h);
+            }
+        }
+        if merged.count() > 0 {
+            o.insert(format!("{key}_p50_s"), merged.p50());
+            o.insert(format!("{key}_p95_s"), merged.p95());
+            o.insert(format!("{key}_p99_s"), merged.p99());
+            o.insert(format!("{key}_mean_s"), merged.mean());
+        }
+        hists.insert(key, merged.to_json());
+    }
+    o.insert("hist", Value::Object(hists));
     o
 }
 

@@ -73,6 +73,10 @@ pub struct ScheduleDecision {
     pub decodes: Vec<SeqId>,
     /// sequences preempted this round (already moved back to waiting)
     pub preempted: Vec<SeqId>,
+    /// sequences admitted out of the waiting queue this round (their
+    /// first prefill window is in `prefills`); the coordinator uses this
+    /// to stamp the Queued→Prefill transition on the request trace
+    pub admitted: Vec<SeqId>,
 }
 
 impl ScheduleDecision {
@@ -301,6 +305,7 @@ impl Scheduler {
                         is_final: true,
                     });
                     self.total_admissions += 1;
+                    d.admitted.push(e.id);
                     self.running.push(e);
                 }
             }
@@ -405,6 +410,7 @@ impl Scheduler {
             self.total_admissions += 1;
             self.total_chunks += 1;
             remaining -= take;
+            d.admitted.push(e.id);
             self.running.push(e);
         }
         d
@@ -686,6 +692,43 @@ mod tests {
         let d = s.schedule(&c, &COOPT);
         assert_eq!(d.prefill_ids(), vec![1]);
         assert!(d.prefills[0].tokens <= 16);
+    }
+
+    #[test]
+    fn admissions_reported_once_per_sequence() {
+        // both modes: `admitted` names each sequence exactly the round its
+        // first window is planned, and never again (trace transitions
+        // depend on this being exact)
+        for chunked in [false, true] {
+            let c = roomy_cache();
+            let mut s = Scheduler::new(2).with_step_budget(64);
+            if chunked {
+                s = s.with_chunked_prefill(8);
+            }
+            for id in 1..=3u64 {
+                s.submit(id, 10);
+            }
+            let mut admitted = Vec::new();
+            for _ in 0..12 {
+                let d = s.schedule(&c, &COOPT);
+                for w in &d.prefills {
+                    s.record_prefill_progress(w.id, w.tokens);
+                }
+                for &id in &d.admitted {
+                    assert!(
+                        d.prefills.iter().any(|w| w.id == id && w.offset == 0),
+                        "admitted {id} without its first window (chunked={chunked})"
+                    );
+                }
+                admitted.extend(d.admitted.iter().copied());
+                if admitted.len() == 2 {
+                    break;
+                }
+            }
+            // batch cap 2: the third stays waiting; no duplicates
+            admitted.sort_unstable();
+            assert_eq!(admitted, vec![1, 2], "chunked={chunked}");
+        }
     }
 
     /// Drive a chunked scheduler round and apply its prefill plan, the way

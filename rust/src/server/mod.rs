@@ -21,8 +21,13 @@
 //!   GET  /health            -> {"status":"ok", "replicas":[...], ...}
 //!   GET  /metrics           -> cluster metrics JSON (Eq. 11/12 fields,
 //!                              flat for N=1) + per-replica views
+//!   GET  /metrics?format=prometheus -> text exposition of the same payload
+//!   GET  /admin/trace       -> per-replica flight-recorder dump (recent
+//!                              finished-request timelines); filter with
+//!                              ?id=<engine id> or ?corr=<correlation id>
 //!   POST /v1/generate       -> {"text": ..., "finish": ..., ...}
-//!       body: {"prompt": "...", "max_new_tokens": 16, "temperature": 0.0}
+//!       body: {"prompt": "...", "max_new_tokens": 16, "temperature": 0.0,
+//!              "correlation_id": "optional client tag echoed in traces"}
 //!   POST /admin/drain       -> stop routing new requests to a replica
 //!       body: {"replica": 0}     (in-flight requests finish)
 //!   POST /admin/undrain     -> put a drained replica back in rotation
@@ -42,6 +47,7 @@ use crate::router::RouterHandle;
 use crate::runtime::Backend;
 use crate::sampling::SamplingParams;
 use crate::util::json::{self, Object, Value};
+use crate::util::logging::Level;
 use crate::util::threadpool::ThreadPool;
 
 // ---------------------------------------------------------------------------
@@ -62,6 +68,37 @@ enum Job {
     /// re-role the engine (PD autoscaler / `/admin/role`); applied
     /// before its next step
     SetRole(ReplicaRole),
+    /// dump the engine's flight-recorder ring (`GET /admin/trace`),
+    /// optionally filtered by engine request id / correlation id
+    DumpTrace {
+        id: Option<u64>,
+        corr: Option<String>,
+        reply: Sender<Value>,
+    },
+}
+
+/// Deliver a reply to a waiter; when the waiter is gone (client
+/// disconnect, dispatcher shutdown) the result used to vanish silently —
+/// now it leaves a structured one-line JSON event on stderr, gated by
+/// the global log level (`--log-level`).
+fn send_reply(
+    reply: &Sender<Result<GenResult>>,
+    ctx: &'static str,
+    id: Option<u64>,
+    res: Result<GenResult>,
+) {
+    let err_text = res.as_ref().err().map(|e| format!("{e:#}"));
+    if reply.send(res).is_ok() {
+        return;
+    }
+    let mut fields: Vec<(&str, Value)> = vec![("ctx", ctx.into())];
+    if let Some(id) = id {
+        fields.push(("request_id", (id as usize).into()));
+    }
+    if let Some(e) = err_text {
+        fields.push(("error", e.into()));
+    }
+    crate::obs::log_json_event(Level::Warn, "reply_send_failed", &fields);
 }
 
 /// A sequence parked by a prefill-role engine at prefill completion,
@@ -174,20 +211,24 @@ impl EngineHandle {
                     match job {
                         Job::Generate { req, reply } => match engine.submit(req) {
                             Ok(id) => waiters.push((id, reply)),
-                            Err(e) => {
-                                let _ = reply.send(Err(e));
-                            }
+                            Err(e) => send_reply(&reply, "submit", None, Err(e)),
                         },
                         Job::MigrateIn { handoff, reply } => {
+                            let hid = handoff.trace.id;
                             match engine.migrate_in_seq(*handoff) {
                                 Ok(id) => waiters.push((id, reply)),
-                                Err(e) => {
-                                    let _ = reply
-                                        .send(Err(anyhow!("engine error: migrate-in failed: {e}")));
-                                }
+                                Err(e) => send_reply(
+                                    &reply,
+                                    "migrate_in",
+                                    Some(hid),
+                                    Err(anyhow!("engine error: migrate-in failed: {e}")),
+                                ),
                             }
                         }
                         Job::SetRole(role) => engine.set_role(role),
+                        Job::DumpTrace { id, corr, reply } => {
+                            let _ = reply.send(engine.trace_json(id, corr.as_deref()));
+                        }
                     }
                 };
                 engine.metrics.start_run();
@@ -225,14 +266,20 @@ impl EngineHandle {
                                 if let Some(pos) = waiters.iter().position(|(id, _)| *id == r.id)
                                 {
                                     let (_, reply) = waiters.swap_remove(pos);
-                                    let _ = reply.send(Ok(r));
+                                    let id = r.id;
+                                    send_reply(&reply, "result", Some(id), Ok(r));
                                 }
                             }
                         }
                         Err(e) => {
                             // engine error: fail everything in flight
-                            for (_, reply) in waiters.drain(..) {
-                                let _ = reply.send(Err(anyhow!("engine error: {e}")));
+                            for (id, reply) in waiters.drain(..) {
+                                send_reply(
+                                    &reply,
+                                    "engine_failed",
+                                    Some(id),
+                                    Err(anyhow!("engine error: {e}")),
+                                );
                             }
                         }
                     }
@@ -256,16 +303,23 @@ impl EngineHandle {
                                 if let Err(e) = htx.send(env) {
                                     // dispatcher gone; the sequence is
                                     // already detached from this engine
-                                    let _ = e.0.reply.send(Err(anyhow!(
-                                        "engine error: hand-off dispatcher gone"
-                                    )));
+                                    send_reply(
+                                        &e.0.reply,
+                                        "handoff_dispatcher_gone",
+                                        Some(id),
+                                        Err(anyhow!("engine error: hand-off dispatcher gone")),
+                                    );
                                 }
                             }
                             Err(e) => {
                                 // unrecoverable mid-export; fail the waiter
                                 let (_, reply) = waiters.swap_remove(pos);
-                                let _ =
-                                    reply.send(Err(anyhow!("engine error: hand-off failed: {e}")));
+                                send_reply(
+                                    &reply,
+                                    "handoff_export",
+                                    Some(id),
+                                    Err(anyhow!("engine error: hand-off failed: {e}")),
+                                );
                             }
                         }
                     }
@@ -326,6 +380,24 @@ impl EngineHandle {
         self.tx
             .send(Job::SetRole(role))
             .map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    /// Dump this replica's flight-recorder ring (recent finished-request
+    /// timelines), optionally filtered by engine request id or client
+    /// correlation id.  Round-trips through the engine thread, so the
+    /// dump is always a consistent post-step view.
+    pub fn trace_json(&self, id: Option<u64>, corr: Option<&str>) -> Result<Value> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Job::DumpTrace {
+                id,
+                corr: corr.map(str::to_string),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request"))
     }
 
     /// The latest atomically-published metrics snapshot.
@@ -451,16 +523,38 @@ fn handle_connection(mut stream: TcpStream, handle: &RouterHandle) -> Result<()>
     }
     let body = String::from_utf8_lossy(&body).into_owned();
 
-    let (status, payload) = route(&method, &path, &body, handle);
+    let (status, content_type, payload) = route(&method, &path, &body, handle);
     let resp = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
         payload.len()
     );
     stream.write_all(resp.as_bytes())?;
     Ok(())
 }
 
-fn route(method: &str, path: &str, body: &str, handle: &RouterHandle) -> (&'static str, String) {
+const CT_JSON: &str = "application/json";
+/// Prometheus text exposition format version (the scraper contract).
+const CT_PROM: &str = "text/plain; version=0.0.4";
+
+/// Value of `key` in a raw query string (`a=1&b=2`).  No percent-
+/// decoding: engine ids are numeric and correlation ids are expected to
+/// be URL-safe tokens.
+fn query_param(query: &str, key: &str) -> Option<String> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then(|| v.to_string())
+    })
+}
+
+fn route(
+    method: &str,
+    raw_path: &str,
+    body: &str,
+    handle: &RouterHandle,
+) -> (&'static str, &'static str, String) {
+    // the request line carries the query string; endpoints match on the
+    // bare path and read parameters out of `query`
+    let (path, query) = raw_path.split_once('?').unwrap_or((raw_path, ""));
     match (method, path) {
         ("GET", "/health") => {
             let mut o = Object::new();
@@ -482,28 +576,55 @@ fn route(method: &str, path: &str, body: &str, handle: &RouterHandle) -> (&'stat
                 })
                 .collect();
             o.insert("replicas", Value::Array(reps));
-            ("200 OK", Value::Object(o).to_string())
+            ("200 OK", CT_JSON, Value::Object(o).to_string())
         }
-        ("GET", "/metrics") => ("200 OK", handle.metrics_json()),
+        ("GET", "/metrics") if query_param(query, "format").as_deref() == Some("prometheus") => {
+            let v = json::parse(&handle.metrics_json()).unwrap_or(Value::Null);
+            ("200 OK", CT_PROM, crate::obs::prometheus_text(&v))
+        }
+        ("GET", "/metrics") => ("200 OK", CT_JSON, handle.metrics_json()),
+        ("GET", "/admin/trace") => match trace_route(query, handle) {
+            Ok(p) => ("200 OK", CT_JSON, p),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
+        },
         ("POST", "/v1/generate") => match generate_route(body, handle) {
-            Ok(p) => ("200 OK", p),
-            Err(e) if is_unavailable(&e) => ("503 Service Unavailable", error_json(&e)),
-            Err(e) => ("400 Bad Request", error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p),
+            Err(e) if is_unavailable(&e) => ("503 Service Unavailable", CT_JSON, error_json(&e)),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
         },
         ("POST", "/admin/drain") => match drain_route(body, handle, true) {
-            Ok(p) => ("200 OK", p),
-            Err(e) => ("400 Bad Request", error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
         },
         ("POST", "/admin/undrain") => match drain_route(body, handle, false) {
-            Ok(p) => ("200 OK", p),
-            Err(e) => ("400 Bad Request", error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
         },
         ("POST", "/admin/role") => match role_route(body, handle) {
-            Ok(p) => ("200 OK", p),
-            Err(e) => ("400 Bad Request", error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
         },
-        _ => ("404 Not Found", error_json(&anyhow!("no route {method} {path}"))),
+        _ => (
+            "404 Not Found",
+            CT_JSON,
+            error_json(&anyhow!("no route {method} {path}")),
+        ),
     }
+}
+
+/// `GET /admin/trace[?id=<engine id>][&corr=<correlation id>]`: the
+/// cluster's flight-recorder dump — each replica's ring of recent
+/// finished-request timelines (phase breakdowns + lifecycle events).
+fn trace_route(query: &str, handle: &RouterHandle) -> Result<String> {
+    let id = match query_param(query, "id") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|_| anyhow!("\"id\" must be a non-negative integer"))?,
+        ),
+        None => None,
+    };
+    let corr = query_param(query, "corr");
+    Ok(handle.trace_json(id, corr.as_deref()))
 }
 
 /// Mark a replica drained (no new requests routed to it; in-flight ones
@@ -564,14 +685,28 @@ fn generate_route(body: &str, handle: &RouterHandle) -> Result<String> {
         top_k: v.get("top_k").and_then(|x| x.as_usize()).unwrap_or(0),
         top_p: v.get("top_p").and_then(|x| x.as_f64()).unwrap_or(1.0),
     };
+    // optional client-supplied correlation id, echoed in the response
+    // and stamped into the request's trace for `/admin/trace?corr=...`
+    let corr_id = match v.get("correlation_id") {
+        None | Some(Value::Null) => None,
+        Some(c) => Some(
+            c.as_str()
+                .ok_or_else(|| anyhow!("\"correlation_id\" must be a string"))?
+                .to_string(),
+        ),
+    };
     let result = handle.generate(GenRequest {
         prompt,
         max_new_tokens: max_new,
         sampling,
         ignore_eos: v.get("ignore_eos").and_then(|x| x.as_bool()).unwrap_or(false),
+        corr_id,
     })?;
     let mut o = Object::new();
     o.insert("id", result.id as usize);
+    if let Some(c) = &result.corr_id {
+        o.insert("correlation_id", c.as_str());
+    }
     o.insert("text", result.text.as_str());
     o.insert("finish", format!("{:?}", result.finish));
     o.insert("prompt_tokens", result.prompt_tokens);
@@ -579,6 +714,8 @@ fn generate_route(body: &str, handle: &RouterHandle) -> Result<String> {
     o.insert("latency_s", result.latency_s);
     o.insert("ttft_s", result.ttft_s);
     o.insert("sim_time_s", result.sim_time_s);
+    // where the latency went (wall phases partition latency_s exactly)
+    o.insert("phases", result.phases.to_json());
     Ok(Value::Object(o).to_string())
 }
 
@@ -618,6 +755,12 @@ impl Client {
         self.request("GET", path, None)
     }
 
+    /// GET returning the raw body — for non-JSON endpoints like the
+    /// Prometheus text exposition (`/metrics?format=prometheus`).
+    pub fn get_text(&self, path: &str) -> Result<(u16, String)> {
+        self.request_raw("GET", path, None)
+    }
+
     pub fn post(&self, path: &str, body: &Value) -> Result<(u16, Value)> {
         self.request("POST", path, Some(body.to_string()))
     }
@@ -634,6 +777,16 @@ impl Client {
     }
 
     fn request(&self, method: &str, path: &str, body: Option<String>) -> Result<(u16, Value)> {
+        let (status, body) = self.request_raw(method, path, body)?;
+        Ok((status, json::parse(&body)?))
+    }
+
+    fn request_raw(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<String>,
+    ) -> Result<(u16, String)> {
         let mut stream = TcpStream::connect(&self.addr)
             .with_context(|| format!("connecting {}", self.addr))?;
         stream.set_read_timeout(Some(Duration::from_secs(120)))?;
@@ -665,8 +818,7 @@ impl Client {
         }
         let mut body = vec![0u8; content_length];
         reader.read_exact(&mut body)?;
-        let v = json::parse(&String::from_utf8_lossy(&body))?;
-        Ok((status, v))
+        Ok((status, String::from_utf8_lossy(&body).into_owned()))
     }
 }
 

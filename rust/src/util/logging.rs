@@ -33,8 +33,30 @@ pub fn init() {
     }
 }
 
+impl Level {
+    /// Parse a `--log-level` value (error|warn|info|debug|trace).
+    pub fn parse(s: &str) -> anyhow::Result<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Ok(Level::Error),
+            "warn" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            "trace" => Ok(Level::Trace),
+            other => Err(anyhow::anyhow!(
+                "unknown log level '{other}' (expected error|warn|info|debug|trace)"
+            )),
+        }
+    }
+}
+
 pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Seconds since logger init (the timestamp base of every log line),
+/// for structured events that want the same clock.
+pub fn elapsed_s() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 pub fn enabled(level: Level) -> bool {

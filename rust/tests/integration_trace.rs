@@ -1,0 +1,313 @@
+//! Request-lifecycle tracing end to end on the deterministic mock
+//! backend (no artifacts needed): per-phase latency attribution must
+//! reconcile exactly with measured E2E latency — no gap, no double
+//! count — through preemption, two-tier KV swap, and cross-replica
+//! migration; the flight recorder must return the complete timeline;
+//! and the serving endpoints (`/admin/trace`, correlation ids,
+//! Prometheus exposition) must surface all of it over HTTP.
+
+use std::sync::atomic::Ordering;
+
+use llm_coopt::config::{CacheGeometry, EngineConfig, ReplicaRole, SwapPolicy, COOPT};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::server::{Client, EngineHandle, Server};
+use llm_coopt::util::json::{Object, Value};
+
+/// Wall-phase reconciliation tolerance: spans telescope exactly by
+/// construction, so the only slack is f64 addition rounding.
+const EPS: f64 = 1e-6;
+
+fn phase_sum(phases: &Value) -> f64 {
+    [
+        "queue_s",
+        "prefill_s",
+        "decode_s",
+        "swap_blocked_s",
+        "migration_s",
+    ]
+    .iter()
+    .map(|k| phases.req_f64(k).unwrap())
+    .sum()
+}
+
+fn tiered_engine(pool: usize, host: usize) -> Engine<MockBackend> {
+    let geometry = CacheGeometry {
+        block_size: 4,
+        max_blocks: 16,
+        num_pool_blocks: pool,
+        max_batch: 4,
+        max_seq: 48,
+    };
+    let be = MockBackend::with_geometry(geometry).with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_host_pool(host)
+        .with_swap_policy(SwapPolicy::Always);
+    Engine::new(be, cfg)
+}
+
+fn pressure_reqs() -> Vec<GenRequest> {
+    (0..6)
+        .map(|i| GenRequest::greedy(format!("pp{i} {}", "y".repeat(16)), 12))
+        .collect()
+}
+
+/// A workload under pool pressure: every request's wall phases
+/// partition its E2E latency exactly, swapped victims show up as
+/// swap-blocked seconds, and the flight recorder holds a complete
+/// timeline for a preempted + swapped request.
+#[test]
+fn swap_preempted_phases_reconcile_with_e2e() {
+    let mut e = tiered_engine(12, 64);
+    let results = e.generate(pressure_reqs()).unwrap();
+    assert_eq!(results.len(), 6);
+    assert!(e.metrics.swap_outs > 0, "pool pressure must swap");
+
+    let mut totals = [0.0f64; 5];
+    for r in &results {
+        let gap = (r.phases.phase_sum_s() - r.latency_s).abs();
+        assert!(
+            gap < EPS,
+            "request {} phase sum {} != e2e {} (gap {gap})",
+            r.id,
+            r.phases.phase_sum_s(),
+            r.latency_s
+        );
+        assert!((r.phases.e2e_s - r.latency_s).abs() < EPS);
+        totals[0] += r.phases.queue_s;
+        totals[1] += r.phases.prefill_s;
+        totals[2] += r.phases.decode_s;
+        totals[3] += r.phases.swap_blocked_s;
+        totals[4] += r.phases.migration_s;
+    }
+    assert!(
+        results.iter().any(|r| r.phases.swap_blocked_s > 0.0),
+        "a swapped victim must accumulate swap-blocked wall time"
+    );
+
+    // engine-level phase accumulators are exactly the per-request sums
+    let m = e.stats_json();
+    for (key, want) in [
+        ("phase_queue_s", totals[0]),
+        ("phase_prefill_s", totals[1]),
+        ("phase_decode_s", totals[2]),
+        ("phase_swap_blocked_s", totals[3]),
+        ("phase_migration_s", totals[4]),
+    ] {
+        let got = m.req_f64(key).unwrap();
+        assert!((got - want).abs() < EPS, "{key}: {got} != {want}");
+    }
+    // mergeable latency histograms ride along in /metrics
+    let hist = m.req("hist").unwrap();
+    for key in ["ttft_wall", "e2e_wall", "queue_wall"] {
+        assert_eq!(
+            hist.req(key).unwrap().req_usize("count").unwrap(),
+            6,
+            "{key} counts every finished request"
+        );
+    }
+    assert!(hist.req("itl_sim").unwrap().req_usize("count").unwrap() > 0);
+
+    // the flight recorder holds all six finished timelines; the
+    // preempted + swapped one is complete: swap_out/swap_in events and
+    // phases that sum to its recorded e2e
+    let dump = e.trace_json(None, None);
+    let entries = dump.as_array().unwrap();
+    assert_eq!(entries.len(), 6);
+    let mut saw_swapped = false;
+    for t in entries {
+        let phases = t.req("phases").unwrap();
+        assert!((phase_sum(phases) - phases.req_f64("e2e_s").unwrap()).abs() < EPS);
+        let labels: Vec<&str> = t
+            .req_array("events")
+            .unwrap()
+            .iter()
+            .map(|ev| ev.req_str("label").unwrap())
+            .collect();
+        assert_eq!(labels.first(), Some(&"queued"));
+        assert_eq!(labels.last(), Some(&"finished"));
+        assert!(labels.contains(&"admitted"));
+        if t.req_usize("preemptions").unwrap() > 0
+            && phases.req_f64("swap_blocked_s").unwrap() > 0.0
+        {
+            saw_swapped = true;
+            assert!(labels.contains(&"swap_out"));
+            assert!(
+                labels.contains(&"swap_in") || labels.contains(&"swap_in_demand"),
+                "swapped victim resumed: {labels:?}"
+            );
+        }
+    }
+    assert!(saw_swapped, "no preempted+swapped timeline in the recorder");
+
+    // id filtering narrows the dump to one request
+    let one = e.trace_json(Some(results[0].id), None);
+    assert_eq!(one.as_array().unwrap().len(), 1);
+}
+
+/// A sequence handed off between replicas (PD disaggregation) carries
+/// its trace: migration wall time lands in the breakdown, the phases
+/// still partition E2E across both engines, and the destination's
+/// flight recorder serves lookups by engine id and correlation id.
+#[test]
+fn migrated_request_timeline_is_complete_and_reconciles() {
+    let src_cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_host_pool(64)
+        .with_swap_policy(SwapPolicy::Always)
+        .with_role(ReplicaRole::Prefill);
+    let mut src = Engine::new(MockBackend::new().with_opt(COOPT), src_cfg);
+    let dst_cfg = EngineConfig::new("llama-7b-sim", COOPT).with_role(ReplicaRole::Decode);
+    let mut dst = Engine::new(MockBackend::new().with_opt(COOPT), dst_cfg);
+
+    let mut req = GenRequest::greedy(format!("migrate me {}", "m".repeat(40)), 4);
+    req.corr_id = Some("tenant-7/job-3".to_string());
+    src.submit(req).unwrap();
+
+    // drive the prefill replica until the sequence parks, then hand it
+    // off — the trace travels inside the hand-off envelope
+    let mut moved = Vec::new();
+    for _ in 0..200 {
+        src.step().unwrap();
+        for id in src.take_handoff_ready() {
+            let h = src.make_handoff(id).unwrap();
+            moved.push(dst.migrate_in_seq(h).unwrap());
+        }
+        if !moved.is_empty() {
+            break;
+        }
+    }
+    assert_eq!(moved.len(), 1, "hand-off never surfaced");
+    assert_eq!(src.num_pending(), 0);
+
+    let results = dst.run_to_completion().unwrap();
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert_eq!(r.id, moved[0]);
+    assert_eq!(r.corr_id.as_deref(), Some("tenant-7/job-3"));
+    assert!(
+        r.phases.migration_s > 0.0,
+        "hand-off transit must land in the migration phase"
+    );
+    assert!((r.phases.phase_sum_s() - r.latency_s).abs() < EPS);
+
+    // the request finished on the destination, so only its recorder
+    // holds the timeline — and the timeline spans both engines
+    assert!(src.trace_json(None, None).as_array().unwrap().is_empty());
+    for dump in [
+        dst.trace_json(Some(r.id), None),
+        dst.trace_json(None, Some("tenant-7/job-3")),
+    ] {
+        let entries = dump.as_array().unwrap();
+        assert_eq!(entries.len(), 1);
+        let labels: Vec<&str> = entries[0]
+            .req_array("events")
+            .unwrap()
+            .iter()
+            .map(|ev| ev.req_str("label").unwrap())
+            .collect();
+        for want in ["queued", "admitted", "migrate_park", "migrate_out", "migrate_in", "finished"]
+        {
+            assert!(labels.contains(&want), "missing {want} in {labels:?}");
+        }
+    }
+    // a non-matching filter returns an empty dump, not an error
+    assert!(dst
+        .trace_json(None, Some("nobody"))
+        .as_array()
+        .unwrap()
+        .is_empty());
+}
+
+/// `--trace-sample 0` keeps phase attribution (always on) but drops the
+/// event timeline; `--trace-depth 0` disables the recorder entirely.
+#[test]
+fn trace_knobs_gate_events_and_recorder() {
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_trace_sample(0.0);
+    let mut e = Engine::new(MockBackend::new().with_opt(COOPT), cfg);
+    let results = e
+        .generate(vec![GenRequest::greedy("unsampled", 4)])
+        .unwrap();
+    assert!((results[0].phases.phase_sum_s() - results[0].latency_s).abs() < EPS);
+    assert!(results[0].phases.e2e_s > 0.0, "phase accounting stays on");
+    let dump = e.trace_json(None, None);
+    let entries = dump.as_array().unwrap();
+    assert_eq!(entries.len(), 1, "recorder still records the breakdown");
+    assert!(
+        entries[0].req_array("events").unwrap().is_empty(),
+        "unsampled request carries no event timeline"
+    );
+
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT).with_trace_depth(0);
+    let mut e = Engine::new(MockBackend::new().with_opt(COOPT), cfg);
+    e.generate(vec![GenRequest::greedy("unrecorded", 4)]).unwrap();
+    assert!(e.trace_json(None, None).as_array().unwrap().is_empty());
+}
+
+/// The serving surface: correlation ids round-trip `/v1/generate`, the
+/// response carries the phase breakdown, `/admin/trace` serves filtered
+/// flight-recorder dumps, and `/metrics?format=prometheus` renders the
+/// merged histograms as text exposition.
+#[test]
+fn http_trace_endpoints_and_prometheus_exposition() {
+    let engine = Engine::new(MockBackend::new(), EngineConfig::new("llama-7b-sim", COOPT));
+    let handle = EngineHandle::spawn(engine);
+    let server = Server::bind("127.0.0.1:0", handle, 4).unwrap();
+    let client = Client::new(server.addr.to_string());
+    let stop = server.stop_flag();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let mut req = Object::new();
+    req.insert("prompt", "trace me over http");
+    req.insert("max_new_tokens", 4usize);
+    req.insert("correlation_id", "tenant-42/req-7");
+    let (code, v) = client.post("/v1/generate", &Value::Object(req)).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(v.req_str("correlation_id").unwrap(), "tenant-42/req-7");
+    let id = v.req_usize("id").unwrap();
+    let phases = v.req("phases").unwrap();
+    assert!((phase_sum(phases) - phases.req_f64("e2e_s").unwrap()).abs() < EPS);
+    assert!((phases.req_f64("e2e_s").unwrap() - v.req_f64("latency_s").unwrap()).abs() < EPS);
+
+    // flight-recorder lookups by correlation id and by engine id
+    let (code, t) = client.get("/admin/trace?corr=tenant-42/req-7").unwrap();
+    assert_eq!(code, 200);
+    let reqs = t.req_array("replicas").unwrap()[0].req_array("requests").unwrap().to_vec();
+    assert_eq!(reqs.len(), 1);
+    assert_eq!(reqs[0].req_usize("id").unwrap(), id);
+    assert_eq!(reqs[0].req_str("corr_id").unwrap(), "tenant-42/req-7");
+    let (_, t) = client.get(&format!("/admin/trace?id={id}")).unwrap();
+    assert_eq!(
+        t.req_array("replicas").unwrap()[0]
+            .req_array("requests")
+            .unwrap()
+            .len(),
+        1
+    );
+    // a malformed id filter is a client error, not a silent full dump
+    let (code, _) = client.get("/admin/trace?id=xyz").unwrap();
+    assert_eq!(code, 400);
+
+    // Prometheus text exposition (polled: the snapshot publishes after
+    // the engine's next step)
+    let mut text = String::new();
+    for _ in 0..100 {
+        let (code, body) = client.get_text("/metrics?format=prometheus").unwrap();
+        assert_eq!(code, 200);
+        if body.contains("llm_coopt_e2e_wall_seconds_count 1") {
+            text = body;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(text.contains("# TYPE llm_coopt_tokens_generated gauge"));
+    assert!(text.contains("# TYPE llm_coopt_e2e_wall_seconds histogram"));
+    assert!(text.contains("llm_coopt_e2e_wall_seconds_bucket{le=\"+Inf\"} 1"));
+    assert!(text.contains("llm_coopt_phase_decode_s"));
+    // the JSON form still serves at the bare path
+    let (code, m) = client.get("/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert!(m.get("hist").is_some());
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().unwrap();
+}
