@@ -21,8 +21,8 @@ use llm_coopt::util::bench::BenchSuite;
 use llm_coopt::util::json::{Object, Value};
 use llm_coopt::workload::harness::{
     gain_pct, reduction_pct, run_adaptive_spec_compare, run_chunk_compare,
-    run_observability_compare, run_pd_compare, run_router_compare, run_spec_compare,
-    run_swap_compare, run_trace, write_bench_serve,
+    run_global_prefix_reuse, run_observability_compare, run_pd_compare, run_router_compare,
+    run_spec_compare, run_swap_compare, run_trace, write_bench_serve,
     AdaptiveSpecPoint,
 };
 use llm_coopt::workload::{MultiTenantSpec, PdTraceSpec, TraceSpec};
@@ -226,6 +226,67 @@ fn main() -> anyhow::Result<()> {
         &format!(
             "requests={},tenants={},zipf_s={},seed={:#x},replicas={router_counts:?}",
             mt_spec.num_requests, mt_spec.tenants, mt_spec.zipf_s, mt_spec.seed
+        ),
+    )?;
+
+    // --- cluster-wide prefix reuse: the hot-tenant Zipfian trace
+    // driven open-loop, prefix_affinity (owner map only) vs directory
+    // (global prefix directory + cost-priced cross-replica KV pulls);
+    // outputs asserted token-identical inside the harness
+    println!("global prefix reuse — directory + cross-replica pulls vs affinity (open loop)");
+    println!(
+        "{:<16} {:>3} {:>14} {:>9} {:>6} {:>6} {:>9} {:>10} {:>6}",
+        "policy", "N", "cluster tok/s", "hit rate", "hits", "pulls", "pull blk", "bytes", "stale"
+    );
+    let reuse_spec = MultiTenantSpec {
+        num_requests: if quick { 40 } else { 64 },
+        tenants: 6,
+        zipf_s: 1.5,
+        system_prompt_min: 47,
+        system_prompt_max: 63,
+        seed: 0xD1_8ec7,
+        ..MultiTenantSpec::default()
+    };
+    let reuse_counts = [4usize];
+    let reuse_rows = run_global_prefix_reuse(&reuse_counts, &reuse_spec)?;
+    for r in &reuse_rows {
+        println!(
+            "{:<16} {:>3} {:>12.1}/s {:>8.1}% {:>6} {:>6} {:>9} {:>10} {:>6}",
+            r.req_str("policy")?,
+            r.req_usize("replicas")?,
+            r.req_f64("cluster_throughput_sim")?,
+            r.req_f64("prefix_hit_rate")? * 100.0,
+            r.req_usize("prefix_hits")?,
+            r.req_usize("prefix_pulls")?,
+            r.req_usize("prefix_pull_blocks")?,
+            r.req_usize("prefix_pull_bytes")?,
+            r.req_usize("prefix_pull_stale")?,
+        );
+    }
+    let reuse_at = |policy: &str| {
+        reuse_rows.iter().find(|r| {
+            r.req_str("policy").ok() == Some(policy) && r.req_usize("replicas").ok() == Some(4)
+        })
+    };
+    if let (Some(pa), Some(dir)) = (reuse_at("prefix_affinity"), reuse_at("directory")) {
+        println!(
+            "N=4: directory hit rate {:.1}% vs {:.1}% affinity-only; cluster throughput \
+             {:+.1}% ({} blocks pulled over PCIe)\n",
+            dir.req_f64("prefix_hit_rate")? * 100.0,
+            pa.req_f64("prefix_hit_rate")? * 100.0,
+            gain_pct(
+                pa.req_f64("cluster_throughput_sim")?,
+                dir.req_f64("cluster_throughput_sim")?
+            ),
+            dir.req_usize("prefix_pull_blocks")?,
+        );
+    }
+    write_bench_serve(
+        "global_prefix_reuse",
+        &reuse_rows,
+        &format!(
+            "requests={},tenants={},zipf_s={},seed={:#x},replicas={reuse_counts:?}",
+            reuse_spec.num_requests, reuse_spec.tenants, reuse_spec.zipf_s, reuse_spec.seed
         ),
     )?;
 

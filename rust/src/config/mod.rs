@@ -248,13 +248,21 @@ pub enum RouterPolicy {
     /// cross-replica load imbalance above the cost model's threshold,
     /// so one hot prefix cannot wedge a replica
     PrefixAffinity,
+    /// prefix-affinity placement driven by the cluster prefix
+    /// *directory* (full chain depth + residency tier, not just the
+    /// leading block), plus cross-replica KV **pulls**: when the owner
+    /// is elsewhere and `CostModel::prefix_pull_pays` prices the PCIe
+    /// transfer under re-prefilling, the destination pulls the chain's
+    /// blocks before prefill instead of recomputing them
+    Directory,
 }
 
 impl RouterPolicy {
-    pub const ALL: [RouterPolicy; 3] = [
+    pub const ALL: [RouterPolicy; 4] = [
         RouterPolicy::RoundRobin,
         RouterPolicy::LeastLoaded,
         RouterPolicy::PrefixAffinity,
+        RouterPolicy::Directory,
     ];
 
     pub fn parse(s: &str) -> Result<Self> {
@@ -262,9 +270,10 @@ impl RouterPolicy {
             "round_robin" => Ok(RouterPolicy::RoundRobin),
             "least_loaded" => Ok(RouterPolicy::LeastLoaded),
             "prefix_affinity" => Ok(RouterPolicy::PrefixAffinity),
+            "directory" => Ok(RouterPolicy::Directory),
             other => Err(anyhow!(
                 "unknown router policy '{other}' \
-                 (expected round_robin|least_loaded|prefix_affinity)"
+                 (expected round_robin|least_loaded|prefix_affinity|directory)"
             )),
         }
     }
@@ -274,6 +283,7 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => "round_robin",
             RouterPolicy::LeastLoaded => "least_loaded",
             RouterPolicy::PrefixAffinity => "prefix_affinity",
+            RouterPolicy::Directory => "directory",
         }
     }
 }
@@ -521,6 +531,12 @@ pub struct EngineConfig {
     /// swap-vs-recompute preemption policy (only meaningful with a host
     /// pool and a backend that supports KV swap)
     pub swap_policy: SwapPolicy,
+    /// watermark-based proactive eviction (`--evict-watermark`): when
+    /// device free blocks dip below this floor, the engine swaps the
+    /// preemption-order victim's sole-owner blocks to the host tier
+    /// ahead of demand (one victim per step, swap-only).  0 — the
+    /// default — disables it; demand preemption alone reclaims blocks.
+    pub evict_watermark: usize,
     /// Opt-KV tier manager: how many decode batches' worth of swapped
     /// sequences the async prefetch queue may stage ahead of the
     /// scheduler (the ROADMAP's multi-step prefetch depth knob; 1 — the
@@ -562,6 +578,7 @@ impl EngineConfig {
             prefill_chunk_tokens: 32,
             host_pool_blocks: 0,
             swap_policy: SwapPolicy::Auto,
+            evict_watermark: 0,
             prefetch_depth: 1,
             spec: SpecConfig::default(),
             role: ReplicaRole::Mixed,
@@ -599,6 +616,13 @@ impl EngineConfig {
     /// Choose the swap-vs-recompute preemption policy.
     pub fn with_swap_policy(mut self, policy: SwapPolicy) -> Self {
         self.swap_policy = policy;
+        self
+    }
+
+    /// Enable watermark-based proactive eviction: swap ahead of demand
+    /// whenever device free blocks dip below `blocks`.
+    pub fn with_evict_watermark(mut self, blocks: usize) -> Self {
+        self.evict_watermark = blocks;
         self
     }
 

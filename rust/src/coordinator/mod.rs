@@ -160,6 +160,10 @@ pub struct LoadSignals {
     pub tokens_per_step: f64,
     /// cost-model regime of the last planned decode batch
     pub gemm_bound: bool,
+    /// open decode-batch slots right now (`max_batch - running`); the
+    /// threaded dispatcher defers hand-offs while every destination
+    /// reads zero here instead of burning them on the token fallback
+    pub batch_slots_free: usize,
 }
 
 /// One KV block's payload travelling in a [`SeqHandoff`] envelope.
@@ -173,6 +177,32 @@ pub struct BlockExport {
     /// already holds instead of importing
     pub hash: Option<u64>,
 }
+
+/// A prefix's KV blocks packaged for a cross-replica *pull* (cluster
+/// prefix reuse): [`SeqHandoff`] generalized to a bare block range — no
+/// sequence travels, only prefix-indexed KV.  Produced by
+/// [`Engine::export_prefix`] on the replica the directory names as
+/// owner, consumed by [`Engine::pull_commit`] on the destination before
+/// the pulled request's prefill is scheduled — prefill then covers only
+/// the unmatched tail.
+#[derive(Debug, Clone)]
+pub struct PrefixPull {
+    /// chain depth the directory promised (complete leading blocks)
+    pub requested: usize,
+    /// exported payloads in chain order, each tagged with its
+    /// content+position hash; may stop short of `requested` when the
+    /// source evicted blocks before the pull landed (stale directory
+    /// entry — the destination re-prefills the difference, exact by
+    /// construction)
+    pub blocks: Vec<BlockExport>,
+}
+
+/// How many engine steps a pulled-prefix block stays pinned waiting for
+/// the request that triggered the pull.  Consumed pins release as soon
+/// as a prefill reuses the block; unconsumed ones (the routed request
+/// died, or routing raced an eviction) expire here so pulled KV can
+/// never leak device blocks.
+const PULL_PIN_TTL_STEPS: u32 = 256;
 
 /// A sequence packaged for cross-replica migration (disaggregated PD
 /// hand-off).  Produced by [`Engine::make_handoff`] on the source,
@@ -428,6 +458,7 @@ impl<B: Backend> Engine<B> {
             free_host_blocks: ts.host_capacity_blocks.saturating_sub(ts.host_used_blocks),
             tokens_per_step: self.metrics.tokens_per_step(),
             gemm_bound: self.metrics.spec_regime == crate::platform::regime_name(false),
+            batch_slots_free: self.sched.max_batch().saturating_sub(self.sched.num_running()),
         }
     }
 
@@ -447,6 +478,7 @@ impl<B: Backend> Engine<B> {
             o.insert("host_blocks_peak", ts.host_used_peak_blocks);
             o.insert("swapped_seqs", ts.swapped_seqs);
             o.insert("pinned_shared_blocks", ts.pinned_shared_blocks);
+            o.insert("pulled_prefix_pins", self.cache.num_pulled_pins());
             o.insert("replica_role", self.cfg.role.name());
         }
         v
@@ -552,6 +584,11 @@ impl<B: Backend> Engine<B> {
         // swapped sequences rejoin the running set one step ahead of the
         // decode batch that needs them (the copy overlapped that step)
         self.drain_prefetches();
+        // pulled-prefix pins: unpin blocks a prefill consumed last round,
+        // expire pulls whose request never arrived (stale routing)
+        self.cache.tick_pulled_pins(PULL_PIN_TTL_STEPS);
+        // watermark eviction: free device headroom ahead of demand
+        self.proactive_evict()?;
         // pick this round's draft length (and per-lane k=0 set) *before*
         // scheduling, so the shared budget charges the k actually in
         // flight — adaptive k shrinking immediately widens the very next
@@ -625,6 +662,10 @@ impl<B: Backend> Engine<B> {
             if self.sched.num_running() == 0
                 && !self.resume_swapped_now()?
                 && self.sched.num_migrating() == 0
+                // pulled-prefix pins hold device blocks for a request that
+                // has not arrived yet; releasing them frees real capacity,
+                // so retry the round before declaring the engine wedged
+                && self.cache.release_pulled_pins() == 0
             {
                 bail!(
                     "stuck: {} waiting requests but no admission possible \
@@ -949,6 +990,109 @@ impl<B: Backend> Engine<B> {
         Ok(id)
     }
 
+    // ---- cluster-wide prefix reuse (directory-routed KV pulls) ------------
+
+    /// Drain prefix residency deltas for the cluster directory: blocks
+    /// committed to the device tier, demoted to host by a swap-out, or
+    /// evicted entirely, in occurrence order.  The feed is bounded
+    /// (oldest deltas drop when nobody drains) — a lost delta only ever
+    /// makes the directory *stale*, and stale entries fall back to
+    /// re-prefill at pull time, exact by construction.
+    pub fn take_prefix_deltas(&mut self) -> Vec<crate::kvcache::PrefixDelta> {
+        self.cache.take_prefix_deltas()
+    }
+
+    /// Export the KV of a registered prefix chain for a cross-replica
+    /// pull.  Walks `chain` shallow-to-deep and stops at the first hash
+    /// no longer resident (the directory was stale for the rest): a
+    /// device-resident block stages through a transient host slot
+    /// exactly like [`Engine::make_handoff`]'s KV path — but *copies*,
+    /// the local sequence keeps its residency — while a host-resident
+    /// block exports straight from its swap slot
+    /// ([`crate::runtime::Backend::export_host_block`]).  Never fails:
+    /// a backend without the migration transport, or a fully stale
+    /// chain, just returns an empty envelope and the puller re-prefills.
+    pub fn export_prefix(&mut self, chain: &[u64]) -> PrefixPull {
+        let mut blocks = Vec::new();
+        if self.backend.supports_kv_migration() {
+            for &hash in chain {
+                let export = if let Some(blk) = self.cache.device_block_for_hash(hash) {
+                    let Some(slot) = self.cache.alloc_host_slot() else {
+                        break; // no staging capacity; ship what we have
+                    };
+                    let payload = self.backend.export_block(blk, slot);
+                    self.cache.release_host_slot(slot);
+                    let _ = self.backend.swap_discard(slot);
+                    payload
+                } else if let Some(slot) = self.cache.host_slot_for_hash(hash) {
+                    self.backend.export_host_block(slot)
+                } else {
+                    break; // first miss ends the contiguous chain
+                };
+                match export {
+                    Ok(payload) => blocks.push(BlockExport { payload, hash: Some(hash) }),
+                    Err(_) => break,
+                }
+            }
+        }
+        let n = blocks.len();
+        self.metrics.prefix_pull_blocks_out += n as u64;
+        if let Some(cm) = &self.cost {
+            self.metrics.sim_swap_s += cm.swap_transfer(n, self.backend.opt()).total_s;
+        }
+        PrefixPull { requested: chain.len(), blocks }
+    }
+
+    /// Land a pulled prefix into this replica's cache before the routed
+    /// request's prefill is scheduled.  Each payload imports into a
+    /// fresh device block committed under its chain hash and *pinned*
+    /// until a prefill consumes it through the ordinary prefix-reuse
+    /// path ([`CacheManager::commit_pulled_block`]); the request's
+    /// prefill then covers only the unmatched tail.  Shortfalls — stale
+    /// chain on the source, no transport, pool pressure here — are
+    /// counted (`prefix_pull_stale`) and silently re-prefilled; a pull
+    /// can slow a request down but never change its tokens.
+    pub fn pull_commit(&mut self, pull: PrefixPull) -> Result<()> {
+        // prefix reuse exists only under skip_filter configs (the
+        // baseline rewrites every slot) and needs the import transport
+        let usable = self.backend.opt().skip_filter && self.backend.supports_kv_migration();
+        let mut committed = 0usize;
+        let mut imported = 0usize;
+        if usable {
+            for b in &pull.blocks {
+                let Some(hash) = b.hash else { break };
+                if self.cache.has_prefix_block(hash) {
+                    committed += 1; // already resident: nothing to move
+                    continue;
+                }
+                if self.cache.num_free_blocks() <= 2 {
+                    break; // keep admission headroom; re-prefill the rest
+                }
+                let Some(blk) = self.cache.commit_pulled_block(hash) else {
+                    break;
+                };
+                self.backend.import_block(blk, b.payload)?;
+                committed += 1;
+                imported += 1;
+            }
+        }
+        self.metrics.prefix_pulls += 1;
+        self.metrics.prefix_pull_blocks += imported as u64;
+        self.metrics.prefix_pull_bytes += (imported as f64 * self.swap_block_bytes) as u64;
+        if committed < pull.requested {
+            self.metrics.prefix_pull_stale += 1;
+        }
+        if let Some(cm) = &self.cost {
+            let s = cm.swap_transfer(imported, self.backend.opt()).total_s;
+            self.metrics.sim_swap_s += s;
+            // the pull happens on the request's critical path (before its
+            // prefill), so Eq. 12 throughput pays for the transfer — the
+            // bench win must clear the cost of moving the bytes
+            self.metrics.sim_swap_blocked_s += s;
+        }
+        Ok(())
+    }
+
     // -----------------------------------------------------------------------
 
     /// Choose this round's draft length and plain-lane set, and hand the
@@ -1119,9 +1263,20 @@ impl<B: Backend> Engine<B> {
             self.metrics.prefill_chunks += 1;
         }
 
+        // blocks reused through the prefix index at the window's leading
+        // edge (local prefix hits and cross-replica pulls alike) were
+        // never recomputed, so the simulated Eq. 12 prefill covers only
+        // the unmatched tail — clamped so at least the final position is
+        // always priced (its logits row is always produced).  With zero
+        // leading reuse this is byte-identical to the undiscounted cost.
+        let reused_tok = (plan.leading_reused * geometry.block_size)
+            .min(work.tokens.saturating_sub(1));
         let sim_s = self.cost.as_ref().map(|cm| {
             if chunked {
-                cm.prefill_chunk(work.tokens, work.offset, &opt).total_s
+                cm.prefill_chunk(work.tokens - reused_tok, work.offset + reused_tok, &opt)
+                    .total_s
+            } else if reused_tok > 0 {
+                cm.prefill_chunk(tokens.len() - reused_tok, reused_tok, &opt).total_s
             } else {
                 cm.prefill(tokens.len(), &opt).total_s
             }
@@ -1669,6 +1824,57 @@ impl<B: Backend> Engine<B> {
                 None => true,
             },
         }
+    }
+
+    /// Watermark-based proactive eviction (`--evict-watermark`, default
+    /// off): when device free blocks dip below the low watermark, swap
+    /// the preemption-order victim's sole-owner blocks to the host tier
+    /// *ahead of demand*, so admission-time prefix pulls and prefill
+    /// windows find headroom instead of stalling on a synchronous
+    /// eviction.  Swap-only — a proactive exit never drops KV to
+    /// recompute (that would trade idle headroom for guaranteed work) —
+    /// and at most one victim moves per step so the PCIe traffic stays
+    /// bounded.  Counted separately as `proactive_swap_outs`.
+    fn proactive_evict(&mut self) -> Result<()> {
+        let wm = self.cfg.evict_watermark;
+        if wm == 0 || !self.cache.has_host_tier() || self.cache.num_free_blocks() >= wm {
+            return Ok(());
+        }
+        if self.sched.num_running() < 2 {
+            // never park the only runnable sequence: nothing would be
+            // left to spend the freed blocks on
+            return Ok(());
+        }
+        let Some(victim) = self.sched.peek_preempt_victim() else {
+            return Ok(());
+        };
+        if !self.should_swap(victim) {
+            return Ok(());
+        }
+        let ops = self.cache.swap_out(victim)?;
+        for &(blk, slot) in &ops.copies {
+            self.backend.swap_out(blk, slot)?;
+        }
+        self.sched.preempt_swap(victim);
+        if let Some(seq) = self.seqs.get_mut(&victim) {
+            seq.trace.resume_phase = seq.trace.cur_phase();
+            seq.trace.preemptions += 1;
+            seq.trace
+                .transition(Instant::now(), Phase::SwapBlocked, "proactive_swap_out");
+            seq.last_chunk_sim_t = None;
+        }
+        self.metrics.preemptions += 1;
+        self.metrics.swap_outs += 1;
+        self.metrics.proactive_swap_outs += 1;
+        self.metrics.blocks_swapped_out += ops.copies.len() as u64;
+        self.metrics.bytes_swapped_out +=
+            (ops.copies.len() as f64 * self.swap_block_bytes) as u64;
+        self.metrics.recompute_avoided_tokens += ops.tokens as u64;
+        if let Some(cm) = &self.cost {
+            self.metrics.sim_swap_s +=
+                cm.swap_transfer(ops.copies.len(), self.backend.opt()).total_s;
+        }
+        Ok(())
     }
 
     /// Execute a swap-in end to end (cache metadata + backend copies);

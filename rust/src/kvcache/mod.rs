@@ -44,6 +44,43 @@ pub type BlockId = u32;
 pub type SeqId = u64;
 
 // ---------------------------------------------------------------------------
+// prefix residency deltas (cluster directory feed)
+// ---------------------------------------------------------------------------
+
+/// What happened to one prefix-hash's residency on this replica.  The
+/// cluster's prefix directory ([`crate::router::directory`]) applies
+/// these to track which replica holds which prefix chain and in which
+/// tier — the feed is *eventually consistent* (deltas ride the metrics
+/// snapshot channel and the log is bounded), which is safe by
+/// construction: a stale directory entry at worst routes a pull that
+/// exports nothing and the destination re-prefills.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixDeltaKind {
+    /// the hash became device-resident (prefill commit, swap-in
+    /// re-index, migrate-in import, or a pulled-block commit)
+    CommitDevice,
+    /// the hash's sole copy moved to this replica's host tier (swap-out)
+    CommitHost,
+    /// the hash left this replica entirely (block freed / swapped copy
+    /// dropped)
+    Evict,
+}
+
+/// One replica-published change to its resident prefix set, observed at
+/// the [`CacheManager`]'s index/unindex seams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixDelta {
+    pub hash: u64,
+    pub kind: PrefixDeltaKind,
+}
+
+/// Bound on the undrained delta log: overflow drops the oldest deltas
+/// (an engine serving under a non-directory policy is never drained, so
+/// the log must not grow with uptime).  Lost deltas only leave stale
+/// directory entries, which fall back to re-prefill.
+const DELTA_LOG_CAP: usize = 8_192;
+
+// ---------------------------------------------------------------------------
 // block allocator
 // ---------------------------------------------------------------------------
 
@@ -144,6 +181,12 @@ pub struct PrefillPlan {
     pub skipped: usize,
     /// whole blocks reused from the prefix cache
     pub reused_blocks: usize,
+    /// of `reused_blocks`, the leading contiguous run at a block-aligned
+    /// window start — prefill compute the engine can actually elide
+    /// (the positions' KV is fully cached *and* precedes every computed
+    /// position), which drives the Eq. 12 sim-cost discount.  Zero for
+    /// unaligned windows.
+    pub leading_reused: usize,
 }
 
 /// Aggregate fragmentation/pool statistics (Fig. 3 motivation).
@@ -173,6 +216,11 @@ pub struct CacheManager {
     host: Option<HostPool>,
     /// sequences whose KV currently lives (partly) in the host tier
     swapped: HashMap<SeqId, SwappedSeq>,
+    /// undrained prefix residency changes (bounded; see [`PrefixDelta`])
+    delta_log: std::collections::VecDeque<PrefixDelta>,
+    /// cross-replica pulled blocks held at refcount 1 until a prefill
+    /// consumes them: hash -> (block, age in ticks)
+    pulled_pins: HashMap<u64, (BlockId, u32)>,
     prefix_hits: u64,
     skipped_writes: u64,
     total_writes: u64,
@@ -188,6 +236,8 @@ impl CacheManager {
             block_hash: HashMap::new(),
             host: None,
             swapped: HashMap::new(),
+            delta_log: std::collections::VecDeque::new(),
+            pulled_pins: HashMap::new(),
             prefix_hits: 0,
             skipped_writes: 0,
             total_writes: 0,
@@ -327,6 +377,10 @@ impl CacheManager {
         let mut shared_now: Vec<BlockId> = Vec::new();
         let mut slot_mapping = vec![-1i32; max_seq];
         let mut reused_blocks = 0usize;
+        // leading contiguous reuse run: stays live only while every
+        // block since the (block-aligned) window start was a prefix hit
+        let mut leading_reused = 0usize;
+        let mut leading_run = offset % bs == 0;
         let mut fail: Option<&'static str> = None;
 
         // the final chunk of the padded baseline also writes every padding
@@ -349,6 +403,9 @@ impl CacheManager {
                         table.push(phys);
                         shared_now.push(phys);
                         reused_blocks += 1;
+                        if leading_run {
+                            leading_reused += 1;
+                        }
                         pos = block_start + bs;
                         continue; // slots stay -1  (Eq. 5 SkipSet)
                     }
@@ -363,6 +420,7 @@ impl CacheManager {
                         for o in 0..bs {
                             slot_mapping[block_start + o] = (phys as usize * bs + o) as i32;
                         }
+                        leading_run = false;
                         pos = block_start + bs;
                         continue;
                     }
@@ -385,6 +443,7 @@ impl CacheManager {
                     }
                 }
             }
+            leading_run = false;
             let phys = table[b];
             if self.alloc.refcount(phys) > 1 {
                 // only *full* blocks are ever shared, and chunks never
@@ -454,6 +513,7 @@ impl CacheManager {
             written,
             skipped,
             reused_blocks,
+            leading_reused,
         })
     }
 
@@ -688,6 +748,10 @@ impl CacheManager {
                 let freed = self.alloc.decref(phys);
                 debug_assert!(freed);
                 self.unindex_block(phys);
+                if let Some(h) = hash {
+                    // the sole copy now lives host-side on this replica
+                    self.push_delta(h, PrefixDeltaKind::CommitHost);
+                }
                 copies.push((phys, slot));
                 entries.push(SwapEntry::Host { slot, hash });
             } else {
@@ -788,11 +852,18 @@ impl CacheManager {
                         self.unindex_block(phys);
                     }
                 }
-                SwapEntry::Host { slot, .. } => {
+                SwapEntry::Host { slot, hash } => {
                     self.host
                         .as_mut()
                         .expect("swapped implies a host tier")
                         .release(slot);
+                    if let Some(h) = hash {
+                        // the host copy is gone; evict unless a device
+                        // block independently serves the same hash
+                        if !self.prefix_index.contains_key(&h) {
+                            self.push_delta(h, PrefixDeltaKind::Evict);
+                        }
+                    }
                     freed_slots.push(slot);
                 }
             }
@@ -991,6 +1062,7 @@ impl CacheManager {
     fn index_block(&mut self, phys: BlockId, hash: u64) {
         self.prefix_index.insert(hash, phys);
         self.block_hash.insert(phys, hash);
+        self.push_delta(hash, PrefixDeltaKind::CommitDevice);
     }
 
     fn unindex_block(&mut self, phys: BlockId) {
@@ -998,10 +1070,118 @@ impl CacheManager {
             // only remove if the index still points at this block
             if self.prefix_index.get(&h) == Some(&phys) {
                 self.prefix_index.remove(&h);
+                self.push_delta(h, PrefixDeltaKind::Evict);
             }
         }
     }
 
+    fn push_delta(&mut self, hash: u64, kind: PrefixDeltaKind) {
+        if self.delta_log.len() >= DELTA_LOG_CAP {
+            self.delta_log.pop_front();
+        }
+        self.delta_log.push_back(PrefixDelta { hash, kind });
+    }
+
+    // ---- cross-replica prefix pulls ---------------------------------------
+
+    /// Drain the undrained prefix residency deltas (the directory feed).
+    pub fn take_prefix_deltas(&mut self) -> Vec<PrefixDelta> {
+        self.delta_log.drain(..).collect()
+    }
+
+    /// Is this full-block hash device-resident right now?
+    pub fn has_prefix_block(&self, hash: u64) -> bool {
+        self.prefix_index.contains_key(&hash)
+    }
+
+    /// Device block currently serving `hash` through the prefix index.
+    pub fn device_block_for_hash(&self, hash: u64) -> Option<BlockId> {
+        self.prefix_index.get(&hash).copied()
+    }
+
+    /// Host slot holding a swapped-out copy of `hash`, if any.  A linear
+    /// scan of the swapped set — bounded by concurrently swapped
+    /// sequences, not pool size.
+    pub fn host_slot_for_hash(&self, hash: u64) -> Option<tier::HostSlotId> {
+        self.swapped
+            .values()
+            .flat_map(|s| s.entries.iter())
+            .find_map(|e| match e {
+                SwapEntry::Host { slot, hash: Some(h) } if *h == hash => Some(*slot),
+                _ => None,
+            })
+    }
+
+    /// Claim one transient host staging slot (prefix export path); the
+    /// caller must release it via [`CacheManager::release_host_slot`].
+    pub fn alloc_host_slot(&mut self) -> Option<tier::HostSlotId> {
+        self.host.as_mut().and_then(|h| h.alloc())
+    }
+
+    /// Commit one pulled prefix block: allocate a device block, index it
+    /// under `hash`, and *pin* it (a refcount this manager holds) so it
+    /// survives until a prefill consumes it through the ordinary reuse
+    /// path.  `None` when the hash is already resident/pinned or the
+    /// pool has no free block — the caller simply pulls less.
+    pub fn commit_pulled_block(&mut self, hash: u64) -> Option<BlockId> {
+        if self.prefix_index.contains_key(&hash) || self.pulled_pins.contains_key(&hash) {
+            return None;
+        }
+        let phys = self.alloc.alloc()?;
+        self.index_block(phys, hash);
+        self.pulled_pins.insert(hash, (phys, 0));
+        Some(phys)
+    }
+
+    pub fn num_pulled_pins(&self) -> usize {
+        self.pulled_pins.len()
+    }
+
+    /// Age the pulled-block pins one engine step.  A pin whose block
+    /// gained another reader was consumed by a prefill: the pin drops
+    /// and the block lives on with its reader.  A pin that reaches
+    /// `ttl` unconsumed releases its block (and index entry) so pulled
+    /// KV can never strand pool capacity.  Returns blocks released.
+    pub fn tick_pulled_pins(&mut self, ttl: u32) -> usize {
+        let hashes: Vec<u64> = self.pulled_pins.keys().copied().collect();
+        let mut released = 0usize;
+        for h in hashes {
+            let (phys, age) = self.pulled_pins[&h];
+            if self.alloc.refcount(phys) > 1 {
+                self.pulled_pins.remove(&h);
+                self.alloc.decref(phys);
+            } else if age + 1 >= ttl {
+                self.pulled_pins.remove(&h);
+                if self.alloc.decref(phys) {
+                    self.unindex_block(phys);
+                }
+                released += 1;
+            } else {
+                self.pulled_pins.get_mut(&h).expect("present above").1 = age + 1;
+            }
+        }
+        released
+    }
+
+    /// Release every unconsumed pulled pin immediately (admission
+    /// pressure, or end of a run): frees the pinned blocks so waiting
+    /// prefills can proceed — the uncovered prefix is simply
+    /// re-prefilled, exact by construction.  Returns blocks released.
+    pub fn release_pulled_pins(&mut self) -> usize {
+        let pins: Vec<(u64, BlockId)> = self
+            .pulled_pins
+            .drain()
+            .map(|(h, (b, _))| (h, b))
+            .collect();
+        let mut released = 0usize;
+        for (_h, phys) in pins {
+            if self.alloc.decref(phys) {
+                self.unindex_block(phys);
+                released += 1;
+            }
+        }
+        released
+    }
 }
 
 /// FNV-1a over (prefix tokens, block tokens) — identifies a full block by
@@ -1038,6 +1218,28 @@ pub fn leading_prefix_hash(tokens: &[u32], block_size: usize) -> Option<u64> {
         return None;
     }
     Some(prefix_hash(&[], &tokens[..block_size]))
+}
+
+/// The prompt's full prefix-hash *chain*: one content+position hash per
+/// complete leading KV block — exactly the hashes prefill commits to
+/// the sharing index — capped at `max_blocks` (the directory's key
+/// budget per request).  Chain hash `k` commits to every token before
+/// block `k`, so a directory hit at depth `k` identifies the entire
+/// `k+1`-block prefix, not just one block.  `chain[0]` equals
+/// [`leading_prefix_hash`].
+pub fn prefix_chain_hashes(tokens: &[u32], block_size: usize, max_blocks: usize) -> Vec<u64> {
+    if block_size == 0 {
+        return Vec::new();
+    }
+    let full = (tokens.len() / block_size).min(max_blocks);
+    (0..full)
+        .map(|b| {
+            prefix_hash(
+                &tokens[..b * block_size],
+                &tokens[b * block_size..(b + 1) * block_size],
+            )
+        })
+        .collect()
 }
 
 #[cfg(test)]

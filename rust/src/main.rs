@@ -42,10 +42,14 @@ fn main() -> Result<()> {
             "least_loaded",
             "serve: request placement across replicas: round_robin, \
              least_loaded (live queue depth + free device/host KV blocks + \
-             spec_regime/tokens_per_step gauges), or prefix_affinity (route \
+             spec_regime/tokens_per_step gauges), prefix_affinity (route \
              shared leading prefixes to the replica already holding them, \
              falling back to least_loaded above the cost model's \
-             load-imbalance threshold)",
+             load-imbalance threshold), or directory (cluster-wide prefix \
+             directory keyed on full chain hashes; when affinity falls back, \
+             the destination pulls the warm KV chain from its owner over the \
+             host tier if the Z100 model prices the transfer under \
+             re-prefilling)",
         )
         .flag(
             "replica-roles",
@@ -86,6 +90,14 @@ fn main() -> Result<()> {
             "swap-vs-recompute preemption policy with a host pool: auto = \
              cost-based (PCIe round trip vs prefill recompute on the Z100 model), \
              always, never",
+        )
+        .flag(
+            "evict-watermark",
+            "0",
+            "two-tier KV: low watermark of free device blocks below which the \
+             engine proactively swaps the preemption-order victim's KV to the \
+             host tier ahead of demand (at most one victim per step; swap-only, \
+             never recompute), 0 = off.  Needs --host-pool-blocks > 0",
         )
         .flag(
             "prefetch-depth",
@@ -176,6 +188,10 @@ fn main() -> Result<()> {
             cfg = cfg.with_host_pool(host);
         }
         cfg = cfg.with_swap_policy(SwapPolicy::parse(args.get("swap-policy"))?);
+        let watermark = args.get_usize("evict-watermark");
+        if watermark > 0 {
+            cfg = cfg.with_evict_watermark(watermark);
+        }
         cfg = cfg.with_prefetch_depth(args.get_usize("prefetch-depth"));
         let spec = args.get_usize("spec-tokens");
         if spec > 0 {

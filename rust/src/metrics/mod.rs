@@ -115,6 +115,21 @@ pub struct EngineMetrics {
     /// re-prefills; the cost model said migration wouldn't pay or the
     /// transport was unavailable)
     pub migrations_token_fallback: u64,
+    // --- cluster-wide prefix reuse (directory-routed KV pulls) -------------
+    /// cross-replica prefix pulls this replica committed (destination)
+    pub prefix_pulls: u64,
+    /// KV blocks imported by those pulls
+    pub prefix_pull_blocks: u64,
+    /// paper-scale bytes the pulls imported
+    pub prefix_pull_bytes: u64,
+    /// KV blocks this replica exported to other replicas' pulls (source)
+    pub prefix_pull_blocks_out: u64,
+    /// pulls that landed short of the directory's promise (stale entry,
+    /// missing transport, or pool pressure) — the shortfall re-prefills
+    pub prefix_pull_stale: u64,
+    /// watermark-triggered swap-outs performed ahead of demand
+    /// (`--evict-watermark`); subset of `swap_outs`
+    pub proactive_swap_outs: u64,
     /// simulated seconds of swap traffic (total, incl. overlapped)
     pub sim_swap_s: f64,
     /// simulated swap seconds the engine actually waited on (prefetch
@@ -391,6 +406,15 @@ impl EngineMetrics {
             "migrations_token_fallback",
             self.migrations_token_fallback as usize,
         );
+        o.insert("prefix_pulls", self.prefix_pulls as usize);
+        o.insert("prefix_pull_blocks", self.prefix_pull_blocks as usize);
+        o.insert("prefix_pull_bytes", self.prefix_pull_bytes as usize);
+        o.insert(
+            "prefix_pull_blocks_out",
+            self.prefix_pull_blocks_out as usize,
+        );
+        o.insert("prefix_pull_stale", self.prefix_pull_stale as usize);
+        o.insert("proactive_swap_outs", self.proactive_swap_outs as usize);
         o.insert("sim_swap_s", self.sim_swap_s);
         o.insert("sim_swap_blocked_s", self.sim_swap_blocked_s);
         // per-phase wallclock attribution of finished requests (sums to

@@ -571,6 +571,30 @@ impl CostModel {
         round_trip < self.prefill(tokens, opt).total_s
     }
 
+    /// The cluster prefix directory's pull-vs-re-prefill decision: is
+    /// moving `blocks` prefix blocks from another replica cheaper than
+    /// re-prefilling their `tokens` tokens here?  Hierarchical by hit
+    /// tier, like the Opt-KV ladder (device hit > host hit > miss): a
+    /// *device*-resident prefix pays two PCIe legs (source export +
+    /// destination import), a *host*-resident one only the import — its
+    /// export already happened when the source swapped it out.  Priced
+    /// per regime through the same transfer/prefill models as
+    /// [`CostModel::swap_beats_recompute`].
+    pub fn prefix_pull_pays(
+        &self,
+        blocks: usize,
+        tokens: usize,
+        host_tier: bool,
+        opt: &OptConfig,
+    ) -> bool {
+        if blocks == 0 || tokens == 0 {
+            return false; // nothing to move, nothing to save
+        }
+        let legs = if host_tier { 1.0 } else { 2.0 };
+        let transfer = legs * self.swap_transfer(blocks, opt).total_s;
+        transfer < self.prefill_chunk(tokens, 0, opt).total_s
+    }
+
     /// Cost of one chunked-prefill window (Opt-Pa step 1): `chunk_len`
     /// tokens starting at `offset`, attending to all prior context.
     ///

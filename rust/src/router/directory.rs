@@ -1,0 +1,431 @@
+//! Cluster-wide prefix directory: which replica holds which prefix
+//! chain, and in which KV tier.
+//!
+//! PR 5's affinity map remembered one leading block per prompt in a
+//! 65,536-entry `HashMap` that *reset wholesale* at capacity — every
+//! remembered affinity lost at once, and nothing about how *much* of a
+//! prompt a replica holds or where (device vs host).  This module
+//! replaces it with a directory over the full prefix chain
+//! ([`crate::kvcache::prefix_chain_hashes`] — the prefix index's own
+//! content+position hashes, one per full KV block):
+//!
+//! * an approximate-membership **front**: a counting-Bloom
+//!   [`MembershipSketch`] (4 rows, power-of-two width, saturating `u8`
+//!   counters — pure Rust, no deps) answers "definitely absent" in four
+//!   array reads, so probing a 32-block chain against a directory of
+//!   millions costs almost nothing on the common miss path;
+//! * an exact **entry table** behind it: hash → ([`DirEntry`]) owning
+//!   replica, KV tier ([`Tier::Device`] > [`Tier::Host`] — a device hit
+//!   serves immediately, a host hit still crosses PCIe), and per-entry
+//!   hit accounting;
+//! * **admission-ordered eviction**: at capacity the oldest admitted
+//!   entry is evicted — never a wholesale reset, so a long-lived serve
+//!   process degrades smoothly instead of cliff-dropping all affinity
+//!   (the sketch is kept in sync by removing evicted hashes).
+//!
+//! Replicas publish [`crate::kvcache::PrefixDelta`]s (block
+//! committed/swapped/evicted, observed at the `CacheManager`'s
+//! index/unindex seams) through the metrics snapshot channel; the
+//! router [`PrefixDirectory::apply`]s them, making the directory
+//! *eventually consistent*.  Staleness is safe by construction: a stale
+//! entry at worst routes a pull that exports fewer blocks than asked
+//! (or none), and the destination simply prefills the uncovered tail —
+//! outputs are exact either way, only the saved work shrinks.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::kvcache::{PrefixDelta, PrefixDeltaKind};
+
+/// Which KV tier the owning replica holds a prefix block in.  Probes
+/// report it so pricing can distinguish a device hit (one PCIe export
+/// away) from a host hit (already staged host-side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Device,
+    Host,
+}
+
+/// Counting-Bloom approximate-membership front.  `maybe_contains`
+/// returning `false` is definitive; `true` may be a false positive
+/// (bounded by the 4-row, quarter-load geometry at well under 5% — see
+/// the tests), which only costs one exact `HashMap` probe.  Counters
+/// saturate at 255; with the directory's bounded entry count the
+/// expected per-cell load is ≤ 1/4, so saturation is unreachable in
+/// practice and a saturated cell merely degrades to a sticky "maybe".
+#[derive(Debug, Clone)]
+pub struct MembershipSketch {
+    /// `SKETCH_ROWS` rows of `width` counters each, flattened
+    counters: Vec<u8>,
+    width_mask: u64,
+    width: usize,
+}
+
+const SKETCH_ROWS: usize = 4;
+/// Per-row seeds (odd constants from splitmix64's own stream).
+const SKETCH_SEEDS: [u64; SKETCH_ROWS] = [
+    0x9e37_79b9_7f4a_7c15,
+    0xbf58_476d_1ce4_e5b9,
+    0x94d0_49bb_1331_11eb,
+    0xd6e8_feb8_6659_fd93,
+];
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl MembershipSketch {
+    /// Sized for `cap` resident keys at ≤ 1/4 per-row load.
+    pub fn new(cap: usize) -> Self {
+        let width = (4 * cap.max(1)).next_power_of_two().max(1024);
+        MembershipSketch {
+            counters: vec![0; SKETCH_ROWS * width],
+            width_mask: width as u64 - 1,
+            width,
+        }
+    }
+
+    fn cell(&self, row: usize, h: u64) -> usize {
+        row * self.width + (splitmix64(h ^ SKETCH_SEEDS[row]) & self.width_mask) as usize
+    }
+
+    pub fn insert(&mut self, h: u64) {
+        for row in 0..SKETCH_ROWS {
+            let c = self.cell(row, h);
+            self.counters[c] = self.counters[c].saturating_add(1);
+        }
+    }
+
+    pub fn remove(&mut self, h: u64) {
+        for row in 0..SKETCH_ROWS {
+            let c = self.cell(row, h);
+            self.counters[c] = self.counters[c].saturating_sub(1);
+        }
+    }
+
+    /// `false` is definitive absence; `true` warrants the exact probe.
+    pub fn maybe_contains(&self, h: u64) -> bool {
+        (0..SKETCH_ROWS).all(|row| self.counters[self.cell(row, h)] > 0)
+    }
+}
+
+/// One directory entry: where a prefix-chain hash's KV block lives.
+#[derive(Debug, Clone)]
+pub struct DirEntry {
+    pub replica: usize,
+    pub tier: Tier,
+    /// probe hits on this entry (per-entry accounting for the hit-tier
+    /// gauges and for observability dumps)
+    pub hits: u64,
+}
+
+/// The cluster-level prefix directory (see the module docs).
+pub struct PrefixDirectory {
+    sketch: MembershipSketch,
+    entries: HashMap<u64, DirEntry>,
+    /// admission order; eviction pops the front, skipping keys whose
+    /// entry was already removed by an `Evict` delta (a re-admitted key
+    /// may appear twice — the stale occurrence is skipped the same way)
+    order: VecDeque<u64>,
+    cap: usize,
+    pub device_hits: u64,
+    pub host_hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Default capacity: same order as the map it replaces, but eviction is
+/// now incremental (admission-ordered) instead of a wholesale reset.
+pub const DIRECTORY_CAP: usize = 65_536;
+
+impl PrefixDirectory {
+    pub fn new(cap: usize) -> Self {
+        PrefixDirectory {
+            sketch: MembershipSketch::new(cap),
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            cap: cap.max(1),
+            device_hits: 0,
+            host_hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entry(&self, hash: u64) -> Option<&DirEntry> {
+        self.entries.get(&hash)
+    }
+
+    /// The owning replica of a single hash without hit accounting (the
+    /// routing path's affinity lookup).
+    pub fn owner_of(&self, hash: u64) -> Option<usize> {
+        if !self.sketch.maybe_contains(hash) {
+            return None;
+        }
+        self.entries.get(&hash).map(|e| e.replica)
+    }
+
+    fn admit(&mut self, hash: u64, entry: DirEntry) {
+        while self.entries.len() >= self.cap {
+            match self.order.pop_front() {
+                Some(old) => {
+                    if self.entries.remove(&old).is_some() {
+                        self.sketch.remove(old);
+                        self.evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        self.sketch.insert(hash);
+        self.entries.insert(hash, entry);
+        self.order.push_back(hash);
+    }
+
+    /// Routing-time ownership registration (the successor of PR 5's
+    /// `record_prefix_owner`, same semantics): a *live* owner keeps its
+    /// prefix even when another replica served this request — fallback
+    /// and drain are temporary and the owner's cache is still warm — but
+    /// a dead replica's cache is gone, so its prefixes transfer to
+    /// wherever traffic lands.  New hashes admit in admission order.
+    pub fn register(&mut self, hash: u64, replica: usize, alive: &[bool]) {
+        if let Some(e) = self.entries.get_mut(&hash) {
+            if e.replica < alive.len() && alive[e.replica] {
+                return;
+            }
+            e.replica = replica;
+            e.tier = Tier::Device;
+            return;
+        }
+        self.admit(
+            hash,
+            DirEntry {
+                replica,
+                tier: Tier::Device,
+                hits: 0,
+            },
+        );
+    }
+
+    /// Apply one replica-published delta.  Idempotent (re-applying a
+    /// delta is a no-op or an identical overwrite) and commutative
+    /// across distinct hashes, so out-of-order snapshot drains converge.
+    /// An `Evict` only removes the entry when `replica` still owns it —
+    /// a replica cannot evict another's registration.
+    pub fn apply(&mut self, replica: usize, d: PrefixDelta) {
+        match d.kind {
+            PrefixDeltaKind::CommitDevice | PrefixDeltaKind::CommitHost => {
+                let tier = if d.kind == PrefixDeltaKind::CommitDevice {
+                    Tier::Device
+                } else {
+                    Tier::Host
+                };
+                if let Some(e) = self.entries.get_mut(&d.hash) {
+                    e.replica = replica;
+                    e.tier = tier;
+                } else {
+                    self.admit(
+                        d.hash,
+                        DirEntry {
+                            replica,
+                            tier,
+                            hits: 0,
+                        },
+                    );
+                }
+            }
+            PrefixDeltaKind::Evict => {
+                if self.entries.get(&d.hash).is_some_and(|e| e.replica == replica) {
+                    self.entries.remove(&d.hash);
+                    self.sketch.remove(d.hash);
+                    // `order` keeps the stale key; admit() skips it
+                }
+            }
+        }
+    }
+
+    /// Drop every entry owned by a replica (it died: its cache is gone).
+    pub fn forget_replica(&mut self, replica: usize) {
+        let dead: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.replica == replica)
+            .map(|(&h, _)| h)
+            .collect();
+        for h in dead {
+            self.entries.remove(&h);
+            self.sketch.remove(h);
+        }
+    }
+
+    /// Probe for the request's *longest* registered prefix chain:
+    /// deepest hash first (the whole point — a deep hit saves more
+    /// prefill), sketch-gated so absent depths cost four array reads.
+    /// Returns `(depth_in_blocks, replica, tier)` of the deepest hit.
+    /// The chain property (block k's hash commits to all tokens before
+    /// it) means a hit at depth k implies the owner held the full chain
+    /// through k when it committed that block.
+    pub fn probe_longest(&mut self, chain: &[u64]) -> Option<(usize, usize, Tier)> {
+        for (i, &h) in chain.iter().enumerate().rev() {
+            if !self.sketch.maybe_contains(h) {
+                continue;
+            }
+            if let Some(e) = self.entries.get_mut(&h) {
+                e.hits += 1;
+                match e.tier {
+                    Tier::Device => self.device_hits += 1,
+                    Tier::Host => self.host_hits += 1,
+                }
+                return Some((i + 1, e.replica, e.tier));
+            }
+        }
+        if !chain.is_empty() {
+            self.misses += 1;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(hash: u64, kind: PrefixDeltaKind) -> PrefixDelta {
+        PrefixDelta { hash, kind }
+    }
+
+    #[test]
+    fn sketch_false_positive_rate_is_bounded() {
+        let mut s = MembershipSketch::new(2048);
+        for i in 0..2048u64 {
+            s.insert(splitmix64(i));
+        }
+        for i in 0..2048u64 {
+            assert!(s.maybe_contains(splitmix64(i)), "no false negatives");
+        }
+        let probes = 10_000u64;
+        let fps = (0..probes)
+            .filter(|&i| s.maybe_contains(splitmix64(0xdead_0000 + i)))
+            .count();
+        let rate = fps as f64 / probes as f64;
+        assert!(rate < 0.05, "false-positive rate {rate:.4} out of bound");
+        // removal restores definitive absence
+        for i in 0..2048u64 {
+            s.remove(splitmix64(i));
+        }
+        let stuck = (0..2048u64).filter(|&i| s.maybe_contains(splitmix64(i))).count();
+        assert_eq!(stuck, 0, "counting rows must fully unwind");
+    }
+
+    #[test]
+    fn probe_finds_deepest_hit_and_accounts_tiers() {
+        let mut d = PrefixDirectory::new(64);
+        d.apply(1, delta(10, PrefixDeltaKind::CommitDevice));
+        d.apply(1, delta(11, PrefixDeltaKind::CommitHost));
+        // chain [10, 11, 12]: depth-3 hash 12 unknown, depth 2 wins
+        assert_eq!(d.probe_longest(&[10, 11, 12]), Some((2, 1, Tier::Host)));
+        assert_eq!(d.probe_longest(&[10]), Some((1, 1, Tier::Device)));
+        assert_eq!(d.probe_longest(&[99, 98]), None);
+        assert_eq!((d.device_hits, d.host_hits, d.misses), (1, 1, 1));
+        assert_eq!(d.entry(11).unwrap().hits, 1);
+    }
+
+    #[test]
+    fn delta_apply_is_idempotent_and_commutative() {
+        // idempotence: re-applying any delta leaves the same state
+        let mut d = PrefixDirectory::new(64);
+        d.apply(0, delta(7, PrefixDeltaKind::CommitDevice));
+        d.apply(0, delta(7, PrefixDeltaKind::CommitDevice));
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.probe_longest(&[7]), Some((1, 0, Tier::Device)));
+        d.apply(0, delta(7, PrefixDeltaKind::Evict));
+        d.apply(0, delta(7, PrefixDeltaKind::Evict));
+        assert_eq!(d.len(), 0);
+        assert_eq!(d.probe_longest(&[7]), None, "sketch unwound with the entry");
+        // commutativity across distinct hashes: both orders converge
+        let mut a = PrefixDirectory::new(64);
+        let mut b = PrefixDirectory::new(64);
+        let ops = [
+            (0usize, delta(1, PrefixDeltaKind::CommitDevice)),
+            (1usize, delta(2, PrefixDeltaKind::CommitHost)),
+            (0usize, delta(3, PrefixDeltaKind::CommitDevice)),
+            (0usize, delta(3, PrefixDeltaKind::Evict)),
+        ];
+        for &(r, dl) in &ops {
+            a.apply(r, dl);
+        }
+        for &(r, dl) in ops.iter().rev() {
+            b.apply(r, dl);
+        }
+        for h in 1..=3u64 {
+            assert_eq!(
+                a.entries.get(&h).map(|e| (e.replica, e.tier)),
+                b.entries.get(&h).map(|e| (e.replica, e.tier)),
+                "hash {h} diverged across apply orders"
+            );
+        }
+        // a foreign replica's evict cannot remove the owner's entry
+        let mut d = PrefixDirectory::new(64);
+        d.apply(2, delta(5, PrefixDeltaKind::CommitDevice));
+        d.apply(3, delta(5, PrefixDeltaKind::Evict));
+        assert_eq!(d.probe_longest(&[5]), Some((1, 2, Tier::Device)));
+    }
+
+    #[test]
+    fn eviction_is_admission_ordered_without_a_cliff() {
+        let cap = 32;
+        let mut d = PrefixDirectory::new(cap);
+        for h in 0..cap as u64 {
+            d.register(h, 0, &[true]);
+        }
+        assert_eq!(d.len(), cap);
+        // each admission past capacity evicts exactly the oldest entry —
+        // the map never resets, so occupancy stays pinned at cap
+        for h in cap as u64..(2 * cap) as u64 {
+            d.register(h, 0, &[true]);
+            assert_eq!(d.len(), cap, "no reset-at-cap cliff");
+            assert!(d.entries.contains_key(&h), "fresh admission present");
+            let oldest_surviving = h - cap as u64 + 1;
+            assert!(
+                !d.entries.contains_key(&(oldest_surviving - 1)),
+                "oldest admission evicted first"
+            );
+            assert!(
+                !d.sketch.maybe_contains(oldest_surviving - 1)
+                    || d.entries.contains_key(&(oldest_surviving - 1)),
+                "sketch stays in sync modulo false positives"
+            );
+        }
+        assert_eq!(d.evictions, cap as u64);
+    }
+
+    #[test]
+    fn register_keeps_live_owner_and_transfers_from_dead() {
+        let mut d = PrefixDirectory::new(64);
+        d.register(7, 0, &[true, true]);
+        // a live owner keeps its prefix even when another replica served
+        // this request (fallback/drain are temporary, its cache is warm)
+        d.register(7, 1, &[true, true]);
+        assert_eq!(d.owner_of(7), Some(0));
+        // a dead owner's cache is gone: ownership transfers
+        d.register(7, 1, &[false, true]);
+        assert_eq!(d.owner_of(7), Some(1));
+        // new prefixes insert normally
+        d.register(9, 0, &[false, true]);
+        assert_eq!(d.owner_of(9), Some(0));
+        // forgetting a dead replica drops all of its entries
+        d.forget_replica(1);
+        assert_eq!(d.owner_of(7), None);
+        assert_eq!(d.owner_of(9), Some(0));
+    }
+}

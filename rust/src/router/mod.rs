@@ -11,7 +11,7 @@
 //! prefixes and stacks heavy requests, so the router routes on the
 //! per-replica signals the engines already export.
 //!
-//! Three policies ([`RouterPolicy`]):
+//! Four policies ([`RouterPolicy`]):
 //!
 //! * `round_robin` — the load-blind baseline;
 //! * `least_loaded` — lowest [`load_score`]: estimated outstanding
@@ -31,6 +31,22 @@
 //!   wedge a replica.  Ownership stays with the original replica (the
 //!   fallback copy is a one-off), so affinity re-forms once the skew
 //!   drains.
+//! * `directory` — prefix affinity driven by the cluster-wide
+//!   [`directory::PrefixDirectory`]: replicas publish prefix-index
+//!   deltas (commit/evict/tier moves) through the snapshot channel, the
+//!   router folds them into one map from *prefix-chain* hashes
+//!   ([`crate::kvcache::prefix_chain_hashes`] — every complete leading
+//!   block, not just the first) to `(replica, tier)`.  At admission the
+//!   router probes for the request's longest registered chain; when the
+//!   owner is a different replica and
+//!   [`CostModel::prefix_pull_pays`] prices moving those blocks over
+//!   the PCIe host tier under re-prefilling them (a device hit pays
+//!   two legs, a host hit one), the destination *pulls* the blocks
+//!   ([`Engine::export_prefix`] → [`Engine::pull_commit`]) before
+//!   prefill starts, so prefill covers only the unmatched tail.  The
+//!   directory is eventually consistent: stale entries make a pull
+//!   export fewer (or zero) blocks and the destination re-prefills the
+//!   difference — exact by construction, never corrupt.
 //!
 //! Two drivers share the policy code: [`Router`] owns N [`Engine`]s
 //! directly and runs them synchronously (benches/tests — fully
@@ -60,21 +76,32 @@
 //! and rotates them in and out of the drain set from the cluster
 //! queue-depth and occupancy-spread gauges.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{OptConfig, ReplicaRole, RouterPolicy};
 use crate::coordinator::{Engine, GenRequest, GenResult};
-use crate::kvcache::{leading_prefix_hash, SeqId};
+use crate::kvcache::{leading_prefix_hash, prefix_chain_hashes, SeqId};
 use crate::obs::LatencyHist;
 use crate::platform::{replica_imbalance, CostModel};
 use crate::runtime::Backend;
 use crate::server::{EngineHandle, HandoffEnvelope, MetricsSnapshot};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::{self, Object, Value};
+
+pub mod directory;
+
+use directory::{PrefixDirectory, Tier, DIRECTORY_CAP};
+
+/// Longest prefix chain the router hashes per request: 32 blocks covers
+/// system prompts far past the pull break-even while keeping admission
+/// hashing O(1)-ish on pathological prompts.
+const CHAIN_CAP: usize = 32;
 
 // ---------------------------------------------------------------------------
 // policy core (shared by the sync and threaded drivers)
@@ -167,34 +194,6 @@ fn least_loaded_of(eligible: &[usize], loads: &[ReplicaLoad]) -> usize {
     best
 }
 
-/// Upper bound on remembered prefix owners: at capacity the map resets
-/// (affinity re-forms from live traffic) rather than growing without
-/// bound across a long-lived serve process, where every distinct
-/// block-length prompt would otherwise add an entry forever.
-const PREFIX_OWNER_CAP: usize = 65_536;
-
-/// Record `replica` as the prefix owner when the prefix is new, or take
-/// ownership over from a *dead* replica.  A live owner keeps the prefix
-/// even when it lost this request to the imbalance fallback or a drain
-/// (both are temporary and its cache is still warm); a crashed replica's
-/// cache is gone, so its prefixes transfer to wherever traffic lands.
-fn record_prefix_owner(
-    owners: &mut HashMap<u64, usize>,
-    hash: u64,
-    replica: usize,
-    loads: &[ReplicaLoad],
-) {
-    if let Some(&o) = owners.get(&hash) {
-        if o < loads.len() && loads[o].healthy {
-            return;
-        }
-    }
-    if owners.len() >= PREFIX_OWNER_CAP && !owners.contains_key(&hash) {
-        owners.clear();
-    }
-    owners.insert(hash, replica);
-}
-
 /// Shared by both drivers so the bench/test [`Router`] and the serving
 /// [`RouterHandle`] always derive the affinity fallback threshold the
 /// same way (same ShareGPT ctx-scale operating point as the engine's
@@ -205,15 +204,16 @@ fn affinity_threshold_for<B: Backend>(backend: &B) -> f64 {
         .affinity_imbalance_threshold(backend.opt())
 }
 
-/// Pick the replica for one request.  `prefix` is the prompt's affinity
-/// key ([`leading_prefix_hash`]), `incoming_cost` its
+/// Pick the replica for one request.  `owner` is the prompt's resolved
+/// affinity target — the replica the prefix-owner bookkeeping (sync
+/// driver) or cluster directory (threaded driver) says already holds
+/// the prompt's leading KV — and `incoming_cost` its
 /// [`request_cost_estimate`]; `rr_next` is the round-robin cursor.
 /// Returns `None` when no replica is routable (all draining/dead).
 pub fn pick_replica(
     policy: RouterPolicy,
     loads: &[ReplicaLoad],
-    prefix: Option<u64>,
-    prefix_owner: &HashMap<u64, usize>,
+    owner: Option<usize>,
     rr_next: &mut usize,
     incoming_cost: f64,
     affinity_threshold: f64,
@@ -236,32 +236,30 @@ pub fn pick_replica(
             Some(eligible[0])
         }
         RouterPolicy::LeastLoaded => Some(least_loaded_of(&eligible, loads)),
-        RouterPolicy::PrefixAffinity => {
-            if let Some(h) = prefix {
-                if let Some(&owner) = prefix_owner.get(&h) {
-                    if owner < loads.len() && loads[owner].healthy && !loads[owner].draining {
-                        // would honoring affinity skew the cluster past
-                        // the cost model's break-even?  Project the
-                        // owner's score with the incoming request's
-                        // tokens added to its backlog — through the same
-                        // speed/pressure model as everyone else's score,
-                        // so a fast (speculating) owner is not penalized
-                        // by raw token units
-                        let mut projected = loads[owner].clone();
-                        projected.outstanding_tokens += incoming_cost;
-                        let backlog: Vec<f64> = eligible
-                            .iter()
-                            .map(|&i| {
-                                if i == owner {
-                                    load_score(&projected)
-                                } else {
-                                    load_score(&loads[i])
-                                }
-                            })
-                            .collect();
-                        if replica_imbalance(&backlog) <= affinity_threshold {
-                            return Some(owner);
-                        }
+        RouterPolicy::PrefixAffinity | RouterPolicy::Directory => {
+            if let Some(owner) = owner {
+                if owner < loads.len() && loads[owner].healthy && !loads[owner].draining {
+                    // would honoring affinity skew the cluster past
+                    // the cost model's break-even?  Project the
+                    // owner's score with the incoming request's
+                    // tokens added to its backlog — through the same
+                    // speed/pressure model as everyone else's score,
+                    // so a fast (speculating) owner is not penalized
+                    // by raw token units
+                    let mut projected = loads[owner].clone();
+                    projected.outstanding_tokens += incoming_cost;
+                    let backlog: Vec<f64> = eligible
+                        .iter()
+                        .map(|&i| {
+                            if i == owner {
+                                load_score(&projected)
+                            } else {
+                                load_score(&loads[i])
+                            }
+                        })
+                        .collect();
+                    if replica_imbalance(&backlog) <= affinity_threshold {
+                        return Some(owner);
                     }
                 }
             }
@@ -314,8 +312,7 @@ pub fn pick_replica_pd(
     loads: &[ReplicaLoad],
     roles: &[ReplicaRole],
     to_prefill: bool,
-    prefix: Option<u64>,
-    prefix_owner: &HashMap<u64, usize>,
+    owner: Option<usize>,
     rr_next: &mut usize,
     incoming_cost: f64,
     affinity_threshold: f64,
@@ -350,8 +347,7 @@ pub fn pick_replica_pd(
         if let Some(c) = pick_replica(
             policy,
             &masked,
-            prefix,
-            prefix_owner,
+            owner,
             rr_next,
             incoming_cost,
             affinity_threshold,
@@ -388,12 +384,19 @@ pub struct Router<B: Backend> {
     /// hand-off as paying (see [`handoff_pays`])
     pricing: Option<(CostModel, OptConfig)>,
     rr_next: usize,
-    prefix_owner: HashMap<u64, usize>,
+    /// cluster prefix directory: affinity bookkeeping for the
+    /// `prefix_affinity` policy (leading block only, registered at
+    /// routing time) and the full chain map for `directory` (delta-fed
+    /// from the replicas' prefix indexes, drives cross-replica pulls)
+    directory: PrefixDirectory,
     outstanding: Vec<f64>,
     draining: Vec<bool>,
     /// (replica, seq id) per submission, in submission order; hand-off
     /// dispatch remaps an entry to its destination replica + new id
     routed: Vec<(usize, SeqId)>,
+    /// results collected by [`Router::step_all`] before the closing
+    /// [`Router::run_to_completion`] (open-loop driving)
+    completed: HashMap<(usize, SeqId), GenResult>,
 }
 
 impl<B: Backend> Router<B> {
@@ -417,10 +420,11 @@ impl<B: Backend> Router<B> {
             roles,
             pricing,
             rr_next: 0,
-            prefix_owner: HashMap::new(),
+            directory: PrefixDirectory::new(DIRECTORY_CAP),
             outstanding: vec![0.0; n],
             draining: vec![false; n],
             routed: Vec::new(),
+            completed: HashMap::new(),
         }
     }
 
@@ -494,29 +498,79 @@ impl<B: Backend> Router<B> {
             .collect()
     }
 
+    /// The cluster prefix directory (bench/test observability: hit-tier
+    /// counters, per-entry accounting).
+    pub fn directory(&self) -> &PrefixDirectory {
+        &self.directory
+    }
+
+    /// Mutable directory access (tests inject stale entries to exercise
+    /// the fallback path).
+    pub fn directory_mut(&mut self) -> &mut PrefixDirectory {
+        &mut self.directory
+    }
+
+    /// Drain every replica's published prefix-index deltas into the
+    /// directory (the sync driver's stand-in for the snapshot channel).
+    /// Deltas lost to the replica-side ring cap only make the directory
+    /// *staler*, never wrong — a stale pull under-exports and the
+    /// destination re-prefills the difference.
+    fn sync_directory(&mut self) {
+        for i in 0..self.replicas.len() {
+            for d in self.replicas[i].take_prefix_deltas() {
+                self.directory.apply(i, d);
+            }
+        }
+    }
+
     /// Route and submit one request; returns (replica, sequence id).
     pub fn submit(&mut self, req: GenRequest) -> Result<(usize, SeqId)> {
+        if self.policy == RouterPolicy::Directory {
+            self.sync_directory();
+        }
         let pd_active = self.roles.iter().any(|&r| r != ReplicaRole::Mixed);
         // round-robin reads neither the cost estimate nor the prefix
         // key, so it skips the router-side tokenization entirely — but
         // PD placement needs the prompt length, so roles force it on
-        let (cost, prefix, prompt_tokens) = match self.policy {
-            RouterPolicy::RoundRobin if !pd_active => (0.0, None, 0),
+        let (cost, chain, prompt_tokens) = match self.policy {
+            RouterPolicy::RoundRobin if !pd_active => (0.0, Vec::new(), 0),
             _ => {
                 let tokens = self.tokenizer.encode(&req.prompt, true, false);
-                let prefix = if self.policy == RouterPolicy::PrefixAffinity {
-                    leading_prefix_hash(&tokens, self.block_size)
-                } else {
-                    None
+                let chain = match self.policy {
+                    // affinity keys on the leading block only (PR 5
+                    // behaviour); the directory keys on the full chain
+                    RouterPolicy::PrefixAffinity => {
+                        leading_prefix_hash(&tokens, self.block_size)
+                            .into_iter()
+                            .collect()
+                    }
+                    RouterPolicy::Directory => {
+                        prefix_chain_hashes(&tokens, self.block_size, CHAIN_CAP)
+                    }
+                    _ => Vec::new(),
                 };
                 (
                     request_cost_estimate(tokens.len(), req.max_new_tokens),
-                    prefix,
+                    chain,
                     tokens.len(),
                 )
             }
         };
         let loads = self.loads();
+        // resolve the affinity owner: deepest registered chain entry for
+        // `directory` (with hit-tier accounting), leading block for
+        // `prefix_affinity`
+        let probe = match self.policy {
+            RouterPolicy::Directory => self.directory.probe_longest(&chain),
+            RouterPolicy::PrefixAffinity => chain
+                .first()
+                .and_then(|&h| self.directory.owner_of(h))
+                .map(|r| (1, r, Tier::Device)),
+            _ => None,
+        };
+        let owner = probe
+            .map(|(_, r, _)| r)
+            .filter(|&r| r < loads.len());
         let choice = if pd_active {
             let to_prefill = handoff_pays(
                 self.pricing.as_ref(),
@@ -529,8 +583,7 @@ impl<B: Backend> Router<B> {
                 &loads,
                 &self.roles,
                 to_prefill,
-                prefix,
-                &self.prefix_owner,
+                owner,
                 &mut self.rr_next,
                 cost,
                 self.affinity_threshold,
@@ -539,21 +592,64 @@ impl<B: Backend> Router<B> {
             pick_replica(
                 self.policy,
                 &loads,
-                prefix,
-                &self.prefix_owner,
+                owner,
                 &mut self.rr_next,
                 cost,
                 self.affinity_threshold,
             )
         }
         .ok_or_else(|| anyhow!("no routable replica (all draining)"))?;
-        if let Some(h) = prefix {
-            record_prefix_owner(&mut self.prefix_owner, h, choice, &loads);
+        if let Some(&h) = chain.first() {
+            let alive: Vec<bool> = loads.iter().map(|l| l.healthy).collect();
+            self.directory.register(h, choice, &alive);
+        }
+        // cross-replica prefix pull: the owner holds a deeper warm chain
+        // than the chosen destination and the cost model prices moving
+        // it over the host tier under re-prefilling it — pull before
+        // submit so prefill covers only the unmatched tail
+        if self.policy == RouterPolicy::Directory {
+            if let Some((depth, owner, tier)) = probe {
+                let pays = match &self.pricing {
+                    Some((cm, opt)) => cm.prefix_pull_pays(
+                        depth,
+                        depth * self.block_size,
+                        tier == Tier::Host,
+                        opt,
+                    ),
+                    None => true,
+                };
+                if owner != choice && owner < self.replicas.len() && pays {
+                    let pull = self.replicas[owner].export_prefix(&chain[..depth]);
+                    self.replicas[choice].pull_commit(pull)?;
+                }
+            }
         }
         let id = self.replicas[choice].submit(req)?;
         self.outstanding[choice] += cost;
         self.routed.push((choice, id));
         Ok((choice, id))
+    }
+
+    /// Step every replica once (and dispatch any parked hand-offs),
+    /// buffering finished results for the closing
+    /// [`Router::run_to_completion`].  This is the open-loop driver for
+    /// benches and property tests: interleaving submissions with
+    /// stepping keeps earlier requests' prefix blocks *live* in their
+    /// owners' caches at later requests' routing time — the state the
+    /// directory probes (and cross-replica pulls) exist for.  Prefix
+    /// blocks die with their last reader here, so an all-upfront
+    /// submission would route everything against a cold directory.
+    pub fn step_all(&mut self) -> Result<()> {
+        for i in 0..self.replicas.len() {
+            // parked sequences wait on dispatch, not stepping
+            if self.replicas[i].num_pending() > self.replicas[i].num_migrating() {
+                for r in self.replicas[i].step()? {
+                    self.completed.insert((i, r.id), r);
+                }
+            }
+        }
+        self.dispatch_handoffs()?;
+        Ok(())
     }
 
     /// Collect parked sequences from prefill-role replicas and re-admit
@@ -609,7 +705,8 @@ impl<B: Backend> Router<B> {
     /// hand-offs dispatch between rounds, exactly like the serving
     /// path's dispatcher thread.
     pub fn run_to_completion(&mut self) -> Result<Vec<RoutedResult>> {
-        let mut by_key: HashMap<(usize, SeqId), GenResult> = HashMap::new();
+        let mut by_key: HashMap<(usize, SeqId), GenResult> =
+            std::mem::take(&mut self.completed);
         let pd_active = self.roles.iter().any(|&r| r != ReplicaRole::Mixed);
         if !pd_active {
             for (i, engine) in self.replicas.iter_mut().enumerate() {
@@ -647,6 +744,12 @@ impl<B: Backend> Router<B> {
             for o in self.outstanding.iter_mut() {
                 *o = 0.0;
             }
+        }
+        if self.policy == RouterPolicy::Directory {
+            // fold the run's prefix-index churn into the directory now,
+            // so between-wave readers (benches, props) see fresh state
+            // instead of waiting for the next submission to drain it
+            self.sync_directory();
         }
         std::mem::take(&mut self.routed)
             .into_iter()
@@ -700,7 +803,15 @@ struct RouterReplica {
 
 struct RouteState {
     rr_next: usize,
-    prefix_owner: HashMap<u64, usize>,
+    /// cluster prefix directory (see [`directory`]): affinity
+    /// bookkeeping for `prefix_affinity`, full chain map + pull driver
+    /// for `directory`
+    directory: PrefixDirectory,
+    /// highest snapshot `seq` whose prefix deltas were drained, per
+    /// replica — each delta is published in exactly one snapshot, so
+    /// the guard prevents double-applying a snapshot read twice while a
+    /// skipped snapshot merely loses its deltas (stale-safe)
+    last_delta_seq: Vec<u64>,
     outstanding: Vec<f64>,
 }
 
@@ -736,6 +847,12 @@ const CLUSTER_SUM_KEYS: &[&str] = &[
     "migrated_blocks_in",
     "migration_bytes",
     "migrations_token_fallback",
+    "prefix_pulls",
+    "prefix_pull_blocks",
+    "prefix_pull_bytes",
+    "prefix_pull_blocks_out",
+    "prefix_pull_stale",
+    "proactive_swap_outs",
 ];
 
 /// Threaded N-replica front-end: each replica is an [`EngineHandle`]
@@ -807,7 +924,8 @@ impl RouterHandle {
             pricing,
             state: Mutex::new(RouteState {
                 rr_next: 0,
-                prefix_owner: HashMap::new(),
+                directory: PrefixDirectory::new(DIRECTORY_CAP),
+                last_delta_seq: vec![0; n],
                 outstanding: vec![0.0; n],
             }),
         }
@@ -831,7 +949,8 @@ impl RouterHandle {
             pricing: None,
             state: Mutex::new(RouteState {
                 rr_next: 0,
-                prefix_owner: HashMap::new(),
+                directory: PrefixDirectory::new(DIRECTORY_CAP),
+                last_delta_seq: vec![0],
                 outstanding: vec![0.0],
             }),
         }
@@ -952,30 +1071,62 @@ impl RouterHandle {
         // round-robin reads neither the cost estimate nor the prefix
         // key, so it skips the router-side tokenization entirely — but
         // PD placement needs the prompt length, so roles force it on
-        let (cost, prefix, prompt_tokens) = match self.policy {
-            RouterPolicy::RoundRobin if !pd_active => (0.0, None, 0),
+        let (cost, chain, prompt_tokens) = match self.policy {
+            RouterPolicy::RoundRobin if !pd_active => (0.0, Vec::new(), 0),
             _ => {
                 let tokens = self.tokenizer.encode(&req.prompt, true, false);
-                let prefix = if self.policy == RouterPolicy::PrefixAffinity {
-                    leading_prefix_hash(&tokens, self.block_size)
-                } else {
-                    None
+                let chain = match self.policy {
+                    RouterPolicy::PrefixAffinity => {
+                        leading_prefix_hash(&tokens, self.block_size)
+                            .into_iter()
+                            .collect()
+                    }
+                    RouterPolicy::Directory => {
+                        prefix_chain_hashes(&tokens, self.block_size, CHAIN_CAP)
+                    }
+                    _ => Vec::new(),
                 };
                 (
                     request_cost_estimate(tokens.len(), req.max_new_tokens),
-                    prefix,
+                    chain,
                     tokens.len(),
                 )
             }
         };
-        let choice = {
+        let (choice, pull_plan) = {
             // recover a poisoned lock: the routing state is plain
-            // bookkeeping (cursor, owner map, token estimates), valid
+            // bookkeeping (cursor, directory, token estimates), valid
             // whatever a panicking thread was doing.  Propagating the
             // poison would wedge every subsequent request permanently.
             let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
             let st = &mut *guard;
+            if self.policy == RouterPolicy::Directory {
+                // fold each replica's newly-published prefix deltas into
+                // the directory (eventual consistency over the snapshot
+                // channel; a skipped snapshot's deltas are lost, which
+                // only makes the directory staler, never wrong)
+                for (i, r) in self.replicas.iter().enumerate() {
+                    let snap = r.handle.snapshot();
+                    if snap.seq > st.last_delta_seq[i] {
+                        for d in &snap.prefix_deltas {
+                            st.directory.apply(i, *d);
+                        }
+                        st.last_delta_seq[i] = snap.seq;
+                    }
+                }
+            }
             let loads = self.loads(&st.outstanding);
+            let probe = match self.policy {
+                RouterPolicy::Directory => st.directory.probe_longest(&chain),
+                RouterPolicy::PrefixAffinity => chain
+                    .first()
+                    .and_then(|&h| st.directory.owner_of(h))
+                    .map(|r| (1, r, Tier::Device)),
+                _ => None,
+            };
+            let owner = probe
+                .map(|(_, r, _)| r)
+                .filter(|&r| r < loads.len());
             let picked = if pd_active {
                 let to_prefill = handoff_pays(
                     self.pricing.as_ref(),
@@ -988,8 +1139,7 @@ impl RouterHandle {
                     &loads,
                     &roles,
                     to_prefill,
-                    prefix,
-                    &st.prefix_owner,
+                    owner,
                     &mut st.rr_next,
                     cost,
                     self.affinity_threshold,
@@ -998,8 +1148,7 @@ impl RouterHandle {
                 pick_replica(
                     self.policy,
                     &loads,
-                    prefix,
-                    &st.prefix_owner,
+                    owner,
                     &mut st.rr_next,
                     cost,
                     self.affinity_threshold,
@@ -1008,12 +1157,43 @@ impl RouterHandle {
             let Some(c) = picked else {
                 bail!("no routable replica (all draining or dead)");
             };
-            if let Some(h) = prefix {
-                record_prefix_owner(&mut st.prefix_owner, h, c, &loads);
+            if let Some(&h) = chain.first() {
+                let alive: Vec<bool> = loads.iter().map(|l| l.healthy).collect();
+                st.directory.register(h, c, &alive);
             }
+            // plan a cross-replica pull while holding the lock, execute
+            // it after release: the export/commit round-trips block on
+            // the engine threads and must not serialize all routing
+            let pull_plan = match (self.policy, probe) {
+                (RouterPolicy::Directory, Some((depth, owner, tier)))
+                    if owner != c && owner < self.replicas.len() =>
+                {
+                    let pays = match &self.pricing {
+                        Some((cm, opt)) => cm.prefix_pull_pays(
+                            depth,
+                            depth * self.block_size,
+                            tier == Tier::Host,
+                            opt,
+                        ),
+                        None => true,
+                    };
+                    pays.then_some((depth, owner))
+                }
+                _ => None,
+            };
             st.outstanding[c] += cost;
-            c
+            (c, pull_plan)
         };
+        // cross-replica prefix pull: move the owner's warm chain through
+        // the host-tier envelope before prefill starts.  Best-effort —
+        // any failure (dead owner, nothing exportable) falls back to
+        // re-prefilling the whole prompt, exact by construction.
+        if let Some((depth, owner)) = pull_plan {
+            if let Ok(pull) = self.replicas[owner].handle.export_prefix(chain[..depth].to_vec())
+            {
+                let _ = self.replicas[choice].handle.pull_commit(pull);
+            }
+        }
         self.replicas[choice].in_flight.fetch_add(1, Ordering::Relaxed);
         let result = self.replicas[choice].handle.generate(req);
         self.replicas[choice].in_flight.fetch_sub(1, Ordering::Relaxed);
@@ -1224,11 +1404,23 @@ pub fn start_autoscaler(router: &Arc<RouterHandle>, interval: std::time::Duratio
         .expect("spawn autoscaler thread");
 }
 
+/// Hand-off deferrals: how many dispatcher rounds an envelope waits for
+/// a destination batch slot before it is force-placed anyway (the
+/// destination engine then parks it until a slot frees, so even a
+/// force-placed hand-off stays on the KV path).
+const MAX_DEFER_ATTEMPTS: u32 = 200;
+/// Dispatcher poll interval while envelopes are deferred.
+const DEFER_RETRY: Duration = Duration::from_millis(5);
+
 /// The hand-off dispatcher: one thread draining the cluster's hand-off
-/// bus.  Each envelope goes to the least-loaded decode-capable replica;
-/// the source replica is the fallback (a migrated-in sequence is
-/// decode-ready and never re-parks, so sending it home is always safe).
-/// Runs until every engine thread (every bus sender) is gone.
+/// bus.  Each envelope goes to the least-loaded decode-capable replica
+/// *with a free batch slot*; when every candidate is batch-full the
+/// envelope is deferred and retried (mirroring the sync driver's
+/// `defer_handoff`) instead of burning the hand-off on a token
+/// fallback.  The source replica is the fallback (a migrated-in
+/// sequence is decode-ready and never re-parks, so sending it home is
+/// always safe).  Runs until every engine thread (every bus sender) is
+/// gone and the deferred queue has drained.
 fn spawn_handoff_dispatcher(
     replicas: Arc<Vec<RouterReplica>>,
     roles: Arc<Vec<AtomicU8>>,
@@ -1237,27 +1429,84 @@ fn spawn_handoff_dispatcher(
     std::thread::Builder::new()
         .name("coopt-handoff".into())
         .spawn(move || {
-            while let Ok(env) = rx.recv() {
-                dispatch_one_handoff(&replicas, &roles, env);
+            let mut deferred: VecDeque<(HandoffEnvelope, u32)> = VecDeque::new();
+            loop {
+                let timeout = if deferred.is_empty() {
+                    // nothing waiting: block until traffic (long timeout
+                    // only so sender-drop is noticed promptly)
+                    Duration::from_millis(100)
+                } else {
+                    DEFER_RETRY
+                };
+                match rx.recv_timeout(timeout) {
+                    Ok(env) => {
+                        if let Some(env) = dispatch_one_handoff(&replicas, &roles, env, false) {
+                            deferred.push_back((env, 1));
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        // engines gone: force-place whatever is left so
+                        // no waiter is stranded, then exit
+                        for (env, _) in deferred.drain(..) {
+                            dispatch_one_handoff(&replicas, &roles, env, true);
+                        }
+                        return;
+                    }
+                }
+                // retry the deferred queue; an envelope past its
+                // deferral budget is force-placed
+                for (env, attempts) in std::mem::take(&mut deferred) {
+                    let force = attempts >= MAX_DEFER_ATTEMPTS;
+                    if let Some(env) = dispatch_one_handoff(&replicas, &roles, env, force) {
+                        deferred.push_back((env, attempts + 1));
+                    }
+                }
             }
         })
         .expect("spawn hand-off dispatcher");
 }
 
-fn dispatch_one_handoff(replicas: &[RouterReplica], roles: &[AtomicU8], env: HandoffEnvelope) {
+/// Place one hand-off envelope.  Returns `Some(env)` when every
+/// routable destination is batch-full and the envelope should be
+/// retried later (`force` disables deferral and places it anyway).
+fn dispatch_one_handoff(
+    replicas: &[RouterReplica],
+    roles: &[AtomicU8],
+    env: HandoffEnvelope,
+    force: bool,
+) -> Option<HandoffEnvelope> {
     let depth = |j: usize| {
         let pending = replicas[j].handle.snapshot().pending;
         replicas[j].in_flight.load(Ordering::Relaxed).max(pending)
     };
-    let dest = (0..replicas.len())
+    let candidates: Vec<usize> = (0..replicas.len())
         .filter(|&j| {
             j != env.from
                 && role_from_code(roles[j].load(Ordering::Relaxed)).accepts_decode()
                 && replicas[j].handle.is_alive()
                 && !replicas[j].draining.load(Ordering::Relaxed)
         })
-        .min_by_key(|&j| depth(j))
-        .unwrap_or(env.from);
+        .collect();
+    // prefer destinations whose latest snapshot shows a free batch slot.
+    // The snapshot can lag a step, so this is load balancing, not a
+    // guarantee — the destination engine parks a KV hand-off that lands
+    // while its batch is full and admits it once a slot frees, so the
+    // race can delay a hand-off but never downgrade it to re-prefill.
+    let with_slot: Vec<usize> = candidates
+        .iter()
+        .copied()
+        .filter(|&j| replicas[j].handle.snapshot().batch_slots_free > 0)
+        .collect();
+    if !force && !candidates.is_empty() && with_slot.is_empty() {
+        return Some(env);
+    }
+    let pool = if with_slot.is_empty() {
+        &candidates
+    } else {
+        &with_slot
+    };
+    let dest = pool.iter().copied().min_by_key(|&j| depth(j)).unwrap_or(env.from);
     let HandoffEnvelope {
         from,
         handoff,
@@ -1290,6 +1539,7 @@ fn dispatch_one_handoff(replicas: &[RouterReplica], roles: &[AtomicU8], env: Han
             }
         }
     }
+    None
 }
 
 fn cluster_aggregate(parsed: &[Value]) -> Object {
@@ -1380,37 +1630,31 @@ mod tests {
     fn pick(
         policy: RouterPolicy,
         ls: &[ReplicaLoad],
-        prefix: Option<u64>,
-        owners: &HashMap<u64, usize>,
+        owner: Option<usize>,
         rr: &mut usize,
         cost: f64,
         thr: f64,
     ) -> Option<usize> {
-        pick_replica(policy, ls, prefix, owners, rr, cost, thr)
+        pick_replica(policy, ls, owner, rr, cost, thr)
     }
 
     #[test]
     fn round_robin_cycles_and_skips_drained() {
         let mut ls = loads(3);
-        let owners = HashMap::new();
         let mut rr = 0;
         let picks: Vec<usize> = (0..6)
-            .map(|_| {
-                pick(RouterPolicy::RoundRobin, &ls, None, &owners, &mut rr, 10.0, 1.0).unwrap()
-            })
+            .map(|_| pick(RouterPolicy::RoundRobin, &ls, None, &mut rr, 10.0, 1.0).unwrap())
             .collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         ls[1].draining = true;
         let picks: Vec<usize> = (0..4)
-            .map(|_| {
-                pick(RouterPolicy::RoundRobin, &ls, None, &owners, &mut rr, 10.0, 1.0).unwrap()
-            })
+            .map(|_| pick(RouterPolicy::RoundRobin, &ls, None, &mut rr, 10.0, 1.0).unwrap())
             .collect();
         assert_eq!(picks, vec![0, 2, 0, 2], "drained replica skipped");
         ls[0].draining = true;
         ls[2].healthy = false;
         assert_eq!(
-            pick(RouterPolicy::RoundRobin, &ls, None, &owners, &mut rr, 10.0, 1.0),
+            pick(RouterPolicy::RoundRobin, &ls, None, &mut rr, 10.0, 1.0),
             None,
             "nothing routable"
         );
@@ -1422,10 +1666,9 @@ mod tests {
         ls[0].outstanding_tokens = 100.0;
         ls[1].outstanding_tokens = 40.0;
         ls[2].outstanding_tokens = 60.0;
-        let owners = HashMap::new();
         let mut rr = 0;
         assert_eq!(
-            pick(RouterPolicy::LeastLoaded, &ls, None, &owners, &mut rr, 1.0, 1.0),
+            pick(RouterPolicy::LeastLoaded, &ls, None, &mut rr, 1.0, 1.0),
             Some(1)
         );
         // a speculating replica drains its backlog faster (credit capped
@@ -1449,7 +1692,7 @@ mod tests {
         // ties break to the lowest index
         let even = loads(3);
         assert_eq!(
-            pick(RouterPolicy::LeastLoaded, &even, None, &owners, &mut rr, 1.0, 1.0),
+            pick(RouterPolicy::LeastLoaded, &even, None, &mut rr, 1.0, 1.0),
             Some(0)
         );
     }
@@ -1457,18 +1700,16 @@ mod tests {
     #[test]
     fn prefix_affinity_prefers_owner_until_imbalance() {
         let mut ls = loads(2);
-        let mut owners = HashMap::new();
-        owners.insert(7u64, 1usize);
         let mut rr = 0;
-        // balanced: honor affinity
+        // balanced: honor affinity (resolved owner = replica 1)
         assert_eq!(
-            pick(RouterPolicy::PrefixAffinity, &ls, Some(7), &owners, &mut rr, 10.0, 1.0),
+            pick(RouterPolicy::PrefixAffinity, &ls, Some(1), &mut rr, 10.0, 1.0),
             Some(1)
         );
-        // unknown prefix: fall through to least-loaded
+        // unknown prefix (no resolved owner): fall through to least-loaded
         ls[0].outstanding_tokens = 50.0;
         assert_eq!(
-            pick(RouterPolicy::PrefixAffinity, &ls, Some(9), &owners, &mut rr, 10.0, 1.0),
+            pick(RouterPolicy::PrefixAffinity, &ls, None, &mut rr, 10.0, 1.0),
             Some(1)
         );
         // owner badly behind the rest: the incoming request would push
@@ -1476,7 +1717,7 @@ mod tests {
         ls[0].outstanding_tokens = 0.0;
         ls[1].outstanding_tokens = 300.0;
         assert_eq!(
-            pick(RouterPolicy::PrefixAffinity, &ls, Some(7), &owners, &mut rr, 10.0, 1.0),
+            pick(RouterPolicy::PrefixAffinity, &ls, Some(1), &mut rr, 10.0, 1.0),
             Some(0),
             "hot prefix must not wedge its replica"
         );
@@ -1484,37 +1725,20 @@ mod tests {
         ls[1].outstanding_tokens = 0.0;
         ls[1].draining = true;
         assert_eq!(
-            pick(RouterPolicy::PrefixAffinity, &ls, Some(7), &owners, &mut rr, 10.0, 1.0),
+            pick(RouterPolicy::PrefixAffinity, &ls, Some(1), &mut rr, 10.0, 1.0),
             Some(0)
+        );
+        // the directory policy shares the same affinity/fallback arm
+        assert_eq!(
+            pick(RouterPolicy::Directory, &ls, Some(1), &mut rr, 10.0, 1.0),
+            Some(0),
+            "directory falls back off a drained owner too"
         );
         // N = 1 degeneracy: imbalance is always 0, affinity always holds
         let one = loads(1);
-        let mut owners1 = HashMap::new();
-        owners1.insert(7u64, 0usize);
         for policy in RouterPolicy::ALL {
-            assert_eq!(
-                pick(policy, &one, Some(7), &owners1, &mut rr, 10.0, 0.25),
-                Some(0)
-            );
+            assert_eq!(pick(policy, &one, Some(0), &mut rr, 10.0, 0.25), Some(0));
         }
-    }
-
-    #[test]
-    fn dead_owner_transfers_prefix_ownership() {
-        let mut owners = HashMap::new();
-        let mut ls = loads(2);
-        owners.insert(7u64, 0usize);
-        // a live owner keeps its prefix even when another replica served
-        // this request (fallback/drain are temporary, its cache is warm)
-        record_prefix_owner(&mut owners, 7, 1, &ls);
-        assert_eq!(owners[&7], 0);
-        // a dead owner's cache is gone: ownership transfers
-        ls[0].healthy = false;
-        record_prefix_owner(&mut owners, 7, 1, &ls);
-        assert_eq!(owners[&7], 1);
-        // new prefixes insert normally
-        record_prefix_owner(&mut owners, 9, 0, &ls);
-        assert_eq!(owners[&9], 0);
     }
 
     fn mock_engine() -> Engine<MockBackend> {
@@ -1736,7 +1960,6 @@ mod tests {
     #[test]
     fn pd_placement_masks_roles_and_falls_back() {
         let roles = [ReplicaRole::Prefill, ReplicaRole::Decode, ReplicaRole::Mixed];
-        let owners = HashMap::new();
         let mut ls = loads(3);
         let mut rr = 0;
         let mut pd = |ls: &[ReplicaLoad], to_prefill: bool| {
@@ -1746,7 +1969,6 @@ mod tests {
                 &roles,
                 to_prefill,
                 None,
-                &owners,
                 &mut rr,
                 10.0,
                 1.0,
@@ -2028,5 +2250,151 @@ mod tests {
         // and then holds: the idlest replica already specializes, so
         // another tick must not churn roles
         assert_eq!(router.autoscale_tick(), "noop");
+    }
+
+    // ---- cluster-wide prefix reuse ----------------------------------------
+
+    fn pull_engine() -> Engine<MockBackend> {
+        Engine::new(
+            MockBackend::new().with_opt(COOPT),
+            EngineConfig::new("llama-7b-sim", COOPT).with_host_pool(64),
+        )
+    }
+
+    #[test]
+    fn directory_pull_moves_warm_prefix_and_stays_exact() {
+        // 4 repeats ≈ 85 tokens with BOS: five full 16-token blocks of
+        // shared prefix, comfortably inside the mock's max_seq of 128
+        let sys = "shared system prompt ".repeat(4);
+        let reqs: Vec<GenRequest> = (0..2)
+            .map(|i| GenRequest::greedy(format!("{sys}tenant {i}"), 6))
+            .collect();
+        let mut single = pull_engine();
+        let base = single.generate(reqs.clone()).unwrap();
+        let mut router =
+            Router::new(vec![pull_engine(), pull_engine()], RouterPolicy::Directory)
+                .with_unpriced_handoff();
+        // request 0 lands and prefills; a couple of steps leave it
+        // mid-decode with its prefix chain committed and *live*
+        let (owner, _) = router.submit(reqs[0].clone()).unwrap();
+        router.step_all().unwrap();
+        router.step_all().unwrap();
+        // drain the owner: request 1 must route elsewhere, and the
+        // directory pulls the warm chain across before its prefill
+        router.set_draining(owner, true);
+        let (dest, _) = router.submit(reqs[1].clone()).unwrap();
+        assert_ne!(dest, owner, "drained owner cannot take the request");
+        router.set_draining(owner, false);
+        let got = router.run_to_completion().unwrap();
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.tokens, b.result.tokens, "pulled prefix is token-identical");
+        }
+        let dm = &router.replicas()[dest].metrics;
+        assert!(dm.prefix_pulls >= 1, "destination committed a pull");
+        assert!(dm.prefix_pull_blocks > 0, "blocks actually moved");
+        assert!(
+            router.replicas()[owner].metrics.prefix_pull_blocks_out > 0,
+            "owner exported blocks"
+        );
+        assert!(
+            router.directory().device_hits + router.directory().host_hits > 0,
+            "the probe hit the registered chain"
+        );
+    }
+
+    #[test]
+    fn directory_stale_entry_falls_back_to_prefill_exactly() {
+        let sys = "stale directory prompt ".repeat(4);
+        let reqs: Vec<GenRequest> = (0..2)
+            .map(|i| GenRequest::greedy(format!("{sys}tenant {i}"), 5))
+            .collect();
+        let mut single = pull_engine();
+        let base = single.generate(reqs.clone()).unwrap();
+        let mut router =
+            Router::new(vec![pull_engine(), pull_engine()], RouterPolicy::Directory)
+                .with_unpriced_handoff();
+        // inject bogus registrations for request 1's whole chain: the
+        // directory claims replica 0 holds blocks it never prefilled
+        let tokens = Tokenizer::new().encode(&reqs[1].prompt, true, false);
+        let chain = prefix_chain_hashes(&tokens, 16, CHAIN_CAP);
+        assert!(chain.len() >= 2, "prompt must span several blocks");
+        for &h in &chain {
+            router.directory_mut().register(h, 0, &[true, true]);
+        }
+        // steer the request off the fake owner so a pull is attempted
+        router.set_draining(0, true);
+        router.submit(reqs[1].clone()).unwrap();
+        router.set_draining(0, false);
+        router.submit(reqs[0].clone()).unwrap();
+        let got = router.run_to_completion().unwrap();
+        assert_eq!(got[0].result.tokens, base[1].tokens, "stale pull stays exact");
+        assert_eq!(got[1].result.tokens, base[0].tokens);
+        // the stale export shipped nothing; the destination re-prefilled
+        let pulled: u64 = router
+            .replicas()
+            .iter()
+            .map(|e| e.metrics.prefix_pull_blocks)
+            .sum();
+        assert_eq!(pulled, 0, "nothing was resident to move");
+        let stale: u64 = router
+            .replicas()
+            .iter()
+            .map(|e| e.metrics.prefix_pull_stale)
+            .sum();
+        assert!(stale >= 1, "the shortfall is accounted");
+    }
+
+    #[test]
+    fn dispatcher_defers_handoffs_instead_of_token_fallback() {
+        // PR 6 carry-over: the threaded dispatcher used to place
+        // hand-offs on batch-full decode replicas, burning the staged KV
+        // on a token fallback.  With one decode slot, concurrent
+        // hand-offs must now queue for the slot.
+        let mut decode_cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_host_pool(64)
+            .with_swap_policy(SwapPolicy::Always)
+            .with_role(ReplicaRole::Decode);
+        decode_cfg.max_batch = 1;
+        let decode = Engine::new(MockBackend::new().with_opt(COOPT), decode_cfg);
+        let router = RouterHandle::spawn(
+            vec![pd_engine(ReplicaRole::Prefill), decode],
+            RouterPolicy::LeastLoaded,
+        )
+        .with_unpriced_handoff();
+        let reqs = pd_reqs(3, 40, 4);
+        let mut single = mock_engine();
+        let base = single.generate(reqs.clone()).unwrap();
+        let results: Vec<GenResult> = std::thread::scope(|s| {
+            let handles: Vec<_> = reqs
+                .iter()
+                .map(|r| {
+                    let router = &router;
+                    let r = r.clone();
+                    s.spawn(move || router.generate(r).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // concurrent completion order is arbitrary: compare as multisets
+        let mut want: Vec<_> = base.iter().map(|b| b.tokens.clone()).collect();
+        let mut got: Vec<_> = results.iter().map(|r| r.tokens.clone()).collect();
+        want.sort();
+        got.sort();
+        assert_eq!(want, got, "deferred hand-offs stay token-identical");
+        let mut landed = false;
+        for _ in 0..400 {
+            let v = json::parse(&router.metrics_json()).unwrap();
+            if v.req_usize("migrations_in").unwrap_or(0) >= 3 {
+                assert_eq!(
+                    v.req_usize("migrations_token_fallback").unwrap_or(0),
+                    0,
+                    "a full batch must defer the hand-off, not burn it"
+                );
+                landed = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(landed, "hand-offs never landed on the decode replica");
     }
 }

@@ -576,6 +576,21 @@ impl Backend for MockBackend {
         true
     }
 
+    fn export_host_block(&mut self, host_slot: u64) -> Result<u64> {
+        // a prefix-pull export of host-resident KV is non-destructive:
+        // the slot keeps its payload (the owning sequence may swap it
+        // back in); only a copy travels in the pull envelope
+        let Some(&payload) = self.host_payload.get(&host_slot) else {
+            bail!(
+                "mock: export_host_block of slot {host_slot} that holds no \
+                 payload (never swapped out, or already discarded)"
+            );
+        };
+        self.swap_trace.push(('H', 0, host_slot));
+        self.spin();
+        Ok(payload)
+    }
+
     fn reset_cache(&mut self) -> Result<()> {
         self.device_payload.clear();
         self.host_payload.clear();

@@ -139,6 +139,20 @@ pub trait Backend {
     fn supports_kv_migration(&self) -> bool {
         false
     }
+    /// Cluster prefix reuse: export the KV payload already resident in a
+    /// *host* slot, without disturbing it.  Unlike [`Backend::export_block`]
+    /// (which stages a device block through a scratch host slot) the block
+    /// here lives in the host tier and stays there — the copy feeds a
+    /// cross-replica prefix pull while the owning sequence can still swap
+    /// the block back in later.  Gated by
+    /// [`Backend::supports_kv_migration`]; the default rejects so pulls
+    /// fall back to re-prefill on backends without the transport.
+    fn export_host_block(&mut self, host_slot: u64) -> Result<u64> {
+        bail!(
+            "backend does not support KV migration (export host slot \
+             {host_slot}); prefix pull must fall back to re-prefill"
+        )
+    }
     /// Speculative decoding: propose `k` draft tokens per active lane
     /// with a shrunk draft model.  Inputs are padded to max_batch as in
     /// [`Backend::decode`]; `ctx_lens[lane]` counts the fed token and

@@ -32,6 +32,7 @@
 //!       body: {"replica": 0}     (in-flight requests finish)
 //!   POST /admin/undrain     -> put a drained replica back in rotation
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -42,7 +43,8 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ReplicaRole;
-use crate::coordinator::{Engine, GenRequest, GenResult, SeqHandoff};
+use crate::coordinator::{Engine, GenRequest, GenResult, PrefixPull, SeqHandoff};
+use crate::kvcache::PrefixDelta;
 use crate::router::RouterHandle;
 use crate::runtime::Backend;
 use crate::sampling::SamplingParams;
@@ -74,6 +76,19 @@ enum Job {
         id: Option<u64>,
         corr: Option<String>,
         reply: Sender<Value>,
+    },
+    /// export a registered prefix chain's KV blocks through the host
+    /// tier (cross-replica prefix pull, source side); best-effort — the
+    /// reply carries however many leading blocks were exportable
+    ExportPrefix {
+        chain: Vec<u64>,
+        reply: Sender<PrefixPull>,
+    },
+    /// commit pulled prefix blocks into this engine's device tier +
+    /// prefix index (cross-replica prefix pull, destination side)
+    PullCommit {
+        pull: Box<PrefixPull>,
+        reply: Sender<Result<()>>,
     },
 }
 
@@ -111,6 +126,10 @@ pub struct HandoffEnvelope {
     pub reply: Sender<Result<GenResult>>,
 }
 
+/// A KV hand-off that reached its destination engine while the batch
+/// was full, waiting engine-side for a slot (see the spawn loop).
+type ParkedHandoff = (Box<SeqHandoff>, Sender<Result<GenResult>>);
+
 /// One atomically-published view of a replica's metrics.  The engine
 /// thread replaces the whole `Arc<MetricsSnapshot>` after each step, so
 /// a reader either sees the previous step's snapshot or this one —
@@ -134,6 +153,14 @@ pub struct MetricsSnapshot {
     pub tokens_per_step: f64,
     /// cost-model regime of the last planned decode batch
     pub gemm_bound: bool,
+    /// batch slots not occupied by running sequences (`max_batch -
+    /// num_running`); the hand-off dispatcher defers migrations to
+    /// destinations showing zero so they don't burn on token fallback
+    pub batch_slots_free: usize,
+    /// prefix-index deltas since the previous snapshot — each delta
+    /// appears in exactly one snapshot, so a reader that skips a
+    /// snapshot loses (stale-safe) rather than double-applies
+    pub prefix_deltas: Vec<PrefixDelta>,
 }
 
 impl MetricsSnapshot {
@@ -147,6 +174,8 @@ impl MetricsSnapshot {
             free_host_blocks: 0,
             tokens_per_step: 0.0,
             gemm_bound: false,
+            batch_slots_free: 0,
+            prefix_deltas: Vec::new(),
         }
     }
 }
@@ -162,6 +191,8 @@ fn snapshot_engine<B: Backend>(engine: &mut Engine<B>, seq: u64) -> MetricsSnaps
         free_host_blocks: s.free_host_blocks,
         tokens_per_step: s.tokens_per_step,
         gemm_bound: s.gemm_bound,
+        batch_slots_free: s.batch_slots_free,
+        prefix_deltas: engine.take_prefix_deltas(),
     }
 }
 
@@ -205,15 +236,31 @@ impl EngineHandle {
             .name("coopt-engine".into())
             .spawn(move || {
                 let mut waiters: Vec<(u64, Sender<Result<GenResult>>)> = Vec::new();
+                // KV hand-offs that arrived while the batch was full:
+                // admitting one then would burn its staged KV on the
+                // token fallback, and the waiting queue it would join
+                // needs the same free slot anyway — so it parks here and
+                // admits the moment a slot frees (exact engine-side
+                // knowledge; the dispatcher's snapshot-based slot filter
+                // can lag a step and cannot close this race)
+                let mut parked: VecDeque<ParkedHandoff> = VecDeque::new();
                 let submit = |engine: &mut Engine<B>,
                               job: Job,
-                              waiters: &mut Vec<(u64, Sender<Result<GenResult>>)>| {
+                              waiters: &mut Vec<(u64, Sender<Result<GenResult>>)>,
+                              parked: &mut VecDeque<ParkedHandoff>| {
                     match job {
                         Job::Generate { req, reply } => match engine.submit(req) {
                             Ok(id) => waiters.push((id, reply)),
                             Err(e) => send_reply(&reply, "submit", None, Err(e)),
                         },
                         Job::MigrateIn { handoff, reply } => {
+                            if !handoff.blocks.is_empty()
+                                && engine.backend.supports_kv_migration()
+                                && !engine.has_batch_slot()
+                            {
+                                parked.push_back((handoff, reply));
+                                return;
+                            }
                             let hid = handoff.trace.id;
                             match engine.migrate_in_seq(*handoff) {
                                 Ok(id) => waiters.push((id, reply)),
@@ -229,6 +276,12 @@ impl EngineHandle {
                         Job::DumpTrace { id, corr, reply } => {
                             let _ = reply.send(engine.trace_json(id, corr.as_deref()));
                         }
+                        Job::ExportPrefix { chain, reply } => {
+                            let _ = reply.send(engine.export_prefix(&chain));
+                        }
+                        Job::PullCommit { pull, reply } => {
+                            let _ = reply.send(engine.pull_commit(*pull));
+                        }
                     }
                 };
                 engine.metrics.start_run();
@@ -242,11 +295,28 @@ impl EngineHandle {
                     if st.load(Ordering::Relaxed) {
                         return;
                     }
+                    // parked hand-offs admit as soon as a slot frees —
+                    // on the KV path, never the token fallback
+                    while engine.has_batch_slot() {
+                        let Some((h, reply)) = parked.pop_front() else {
+                            break;
+                        };
+                        let hid = h.trace.id;
+                        match engine.migrate_in_seq(*h) {
+                            Ok(id) => waiters.push((id, reply)),
+                            Err(e) => send_reply(
+                                &reply,
+                                "migrate_in",
+                                Some(hid),
+                                Err(anyhow!("engine error: migrate-in failed: {e}")),
+                            ),
+                        }
+                    }
                     // idle: block on the job channel instead of polling —
                     // the timeout only exists to honor the stop flag
                     if engine.num_pending() == 0 {
                         match rx.recv_timeout(Duration::from_millis(100)) {
-                            Ok(job) => submit(&mut engine, job, &mut waiters),
+                            Ok(job) => submit(&mut engine, job, &mut waiters, &mut parked),
                             Err(RecvTimeoutError::Timeout) => continue,
                             Err(RecvTimeoutError::Disconnected) => return,
                         }
@@ -255,7 +325,7 @@ impl EngineHandle {
                     // concurrent requests batch into the same round
                     loop {
                         match rx.try_recv() {
-                            Ok(job) => submit(&mut engine, job, &mut waiters),
+                            Ok(job) => submit(&mut engine, job, &mut waiters, &mut parked),
                             Err(TryRecvError::Empty) => break,
                             Err(TryRecvError::Disconnected) => return,
                         }
@@ -272,12 +342,21 @@ impl EngineHandle {
                             }
                         }
                         Err(e) => {
-                            // engine error: fail everything in flight
+                            // engine error: fail everything in flight,
+                            // parked hand-offs included
                             for (id, reply) in waiters.drain(..) {
                                 send_reply(
                                     &reply,
                                     "engine_failed",
                                     Some(id),
+                                    Err(anyhow!("engine error: {e}")),
+                                );
+                            }
+                            for (h, reply) in parked.drain(..) {
+                                send_reply(
+                                    &reply,
+                                    "engine_failed",
+                                    Some(h.trace.id),
                                     Err(anyhow!("engine error: {e}")),
                                 );
                             }
@@ -398,6 +477,39 @@ impl EngineHandle {
         reply_rx
             .recv()
             .map_err(|_| anyhow!("engine dropped the request"))
+    }
+
+    /// Export a registered prefix chain's KV blocks through the host
+    /// tier (source side of a cross-replica prefix pull).  Round-trips
+    /// through the engine thread; best-effort — the returned
+    /// [`PrefixPull`] carries however many leading blocks were still
+    /// exportable when the job ran.
+    pub fn export_prefix(&self, chain: Vec<u64>) -> Result<PrefixPull> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Job::ExportPrefix {
+                chain,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request"))
+    }
+
+    /// Commit pulled prefix blocks into this engine's device tier +
+    /// prefix index (destination side of a cross-replica prefix pull).
+    pub fn pull_commit(&self, pull: PrefixPull) -> Result<()> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Job::PullCommit {
+                pull: Box::new(pull),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request"))?
     }
 
     /// The latest atomically-published metrics snapshot.

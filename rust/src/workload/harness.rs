@@ -149,6 +149,9 @@ impl<B: Backend> Backend for PoolSized<B> {
     fn supports_kv_migration(&self) -> bool {
         self.inner.supports_kv_migration()
     }
+    fn export_host_block(&mut self, host_slot: u64) -> Result<u64> {
+        self.inner.export_host_block(host_slot)
+    }
     fn draft(
         &mut self,
         t: &[i32],
@@ -712,6 +715,148 @@ pub fn run_router_compare(
                 "routed",
                 Value::Array(routed_counts.into_iter().map(Value::from).collect()),
             );
+            rows.push(Value::Object(o));
+        }
+    }
+    Ok(rows)
+}
+
+/// Cluster-wide prefix reuse: the Zipfian multi-tenant trace driven
+/// *open-loop* (one [`crate::router::Router::step_all`] per arrival, so
+/// earlier requests' prefix blocks are still live when later ones
+/// route) across an N-replica cluster under `prefix_affinity` (PR 5's
+/// leading-block owner map) vs `directory` (the cluster
+/// [`crate::router::directory::PrefixDirectory`] with cross-replica KV
+/// pulls).  Both policies share the imbalance fallback; the difference
+/// under test is what fallback *costs*: affinity re-prefills the shared
+/// prefix on the spill replica, the directory pulls the warm chain over
+/// PCIe first (priced by
+/// [`crate::platform::CostModel::prefix_pull_pays`]), so those blocks
+/// still land as prefix hits.  Rows report the cluster hit rate over a
+/// policy-invariant denominator (full prompt blocks in the trace), the
+/// Eq. 12 cluster throughput (pull transfer time is on the destination
+/// critical path via `sim_swap_blocked_s`, so the win is net of the
+/// PCIe bill), and the pull ledger; outputs are hard-asserted
+/// token-identical to a single unconstrained engine.
+pub fn run_global_prefix_reuse(
+    replica_counts: &[usize],
+    spec: &MultiTenantSpec,
+) -> Result<Vec<Value>> {
+    use crate::config::{RouterPolicy, COOPT};
+    use crate::router::Router;
+    use crate::runtime::mock::MockBackend;
+    use crate::tokenizer::Tokenizer;
+
+    let trace = multi_tenant_trace(spec);
+    let reqs: Vec<GenRequest> = trace
+        .iter()
+        .map(|req| GenRequest {
+            prompt: req.prompt.clone(),
+            max_new_tokens: req.max_new_tokens,
+            sampling: req.sampling,
+            // fixed token counts across policies => clean Eq. 12 deltas
+            ignore_eos: true,
+            corr_id: None,
+        })
+        .collect();
+    let tokenizer = Tokenizer::new();
+    let block_size = MockBackend::new().geometry().block_size;
+    let opportunities: usize = reqs
+        .iter()
+        .map(|req| tokenizer.encode(&req.prompt, true, false).len() / block_size)
+        .sum();
+    // token-identity reference: one unconstrained engine
+    let mut reference = Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    );
+    let base: Vec<Vec<u32>> = reference
+        .generate(reqs.clone())?
+        .into_iter()
+        .map(|r| r.tokens)
+        .collect();
+
+    let mut rows = Vec::new();
+    for &n in replica_counts {
+        for policy in [RouterPolicy::PrefixAffinity, RouterPolicy::Directory] {
+            let engines: Vec<Engine<MockBackend>> = (0..n)
+                .map(|_| {
+                    Engine::new(
+                        MockBackend::new().with_opt(COOPT),
+                        // the host pool is the pull transport's staging
+                        // tier; both policies get it so capacity is equal
+                        EngineConfig::new("llama-7b-sim", COOPT).with_host_pool(64),
+                    )
+                })
+                .collect();
+            let mut router = Router::new(engines, policy);
+            for req in &reqs {
+                router.submit(req.clone())?;
+                // open-loop arrival pacing: one cluster step per arrival
+                // keeps tens of sequences in flight, so the hot tenant's
+                // replica saturates (tripping the imbalance fallback)
+                // while its prefix blocks are still resident to pull
+                router.step_all()?;
+            }
+            let results = router.run_to_completion()?;
+            let outs: Vec<Vec<u32>> = results.iter().map(|r| r.result.tokens.clone()).collect();
+            if outs != base {
+                anyhow::bail!(
+                    "prefix reuse changed outputs at replicas={n} policy={}",
+                    policy.name()
+                );
+            }
+            let mut busy: Vec<f64> = Vec::with_capacity(n);
+            let mut tokens = 0u64;
+            let mut hits = 0u64;
+            let (mut pulls, mut pull_blocks, mut pull_bytes) = (0u64, 0u64, 0u64);
+            let (mut pull_blocks_out, mut pull_stale) = (0u64, 0u64);
+            for e in router.replicas() {
+                let m = &e.metrics;
+                busy.push(m.sim_prefill_s + m.sim_decode_s + m.sim_swap_blocked_s);
+                tokens += m.tokens_generated;
+                hits += e.cache_stats().prefix_hits;
+                pulls += m.prefix_pulls;
+                pull_blocks += m.prefix_pull_blocks;
+                pull_bytes += m.prefix_pull_bytes;
+                pull_blocks_out += m.prefix_pull_blocks_out;
+                pull_stale += m.prefix_pull_stale;
+            }
+            let busy_max = busy.iter().cloned().fold(0.0f64, f64::max);
+            let dir = router.directory();
+            let mut o = Object::new();
+            o.insert("policy", policy.name());
+            o.insert("replicas", n);
+            o.insert("requests", reqs.len());
+            o.insert("tokens", tokens as usize);
+            o.insert(
+                "cluster_throughput_sim",
+                if busy_max > 0.0 {
+                    tokens as f64 / busy_max
+                } else {
+                    0.0
+                },
+            );
+            o.insert("busy_max_s", busy_max);
+            o.insert("prefix_hits", hits as usize);
+            o.insert("prefix_block_opportunities", opportunities);
+            o.insert(
+                "prefix_hit_rate",
+                if opportunities > 0 {
+                    hits as f64 / opportunities as f64
+                } else {
+                    0.0
+                },
+            );
+            o.insert("prefix_pulls", pulls as usize);
+            o.insert("prefix_pull_blocks", pull_blocks as usize);
+            o.insert("prefix_pull_bytes", pull_bytes as usize);
+            o.insert("prefix_pull_blocks_out", pull_blocks_out as usize);
+            o.insert("prefix_pull_stale", pull_stale as usize);
+            o.insert("directory_device_hits", dir.device_hits as usize);
+            o.insert("directory_host_hits", dir.host_hits as usize);
+            o.insert("directory_evictions", dir.evictions as usize);
+            o.insert("token_identical", true);
             rows.push(Value::Object(o));
         }
     }

@@ -1,0 +1,208 @@
+//! Property tests for cluster-wide prefix reuse: routing through the
+//! global [`PrefixDirectory`] — including cross-replica KV pulls — must
+//! be *semantically invisible*.  Over random multi-tenant workloads,
+//! replica counts, role layouts, arrival pacings, and deliberately
+//! poisoned directory state, a directory-routed cluster returns
+//! token-identical per-request outputs to a single unconstrained
+//! engine, while undersized device pools force eviction and swap to
+//! race the pulls.  The mock backend enforces copy semantics (residency
+//! contract) on every decode, so each case doubles as a
+//! pull-correctness check: a pulled block that landed wrong would
+//! change the tokens, not just the timing.  Stale directory entries
+//! (wrong owner, evicted chain) may only ever cost a shorter pull and a
+//! re-prefill — never a wrong token.
+
+use std::cell::Cell;
+
+use llm_coopt::config::{
+    CacheGeometry, EngineConfig, ReplicaRole, RouterPolicy, SwapPolicy, COOPT,
+};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::kvcache::prefix_chain_hashes;
+use llm_coopt::router::Router;
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::tokenizer::Tokenizer;
+use llm_coopt::util::quickprop::{check, gens};
+
+fn geometry(pool_blocks: usize) -> CacheGeometry {
+    CacheGeometry {
+        block_size: 4,
+        max_blocks: 16,
+        num_pool_blocks: pool_blocks,
+        max_batch: 4,
+        max_seq: 48,
+    }
+}
+
+/// Replica with a device pool small enough that concurrent sequences
+/// preempt and swap while pulls are in flight; the host tier is sized
+/// for the worst case so preemption never drops to the recompute
+/// fallback (exact equality is the swap/pull paths' guarantee).
+fn dir_engine(pool_blocks: usize, role: ReplicaRole) -> Engine<MockBackend> {
+    let be = MockBackend::with_geometry(geometry(pool_blocks)).with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_host_pool(160)
+        .with_swap_policy(SwapPolicy::Always)
+        .with_role(role);
+    Engine::new(be, cfg)
+}
+
+/// Property: ≥ 120 random multi-tenant workloads driven open-loop
+/// (0..=2 cluster steps per arrival, so earlier requests' prefix chains
+/// are live — or freshly evicted — when later ones route) through a
+/// directory-routed cluster of 2..=4 replicas.  Every third case
+/// poisons the directory with wrong owners for the incoming request's
+/// own chain before routing it, forcing pulls against replicas that may
+/// hold none (or only some) of the claimed blocks.  Half the cases add
+/// a prefill-role replica so PD hand-offs race the pulls too.  Outputs
+/// must match the unconstrained single engine token for token, every
+/// tier must drain to zero, and the suite as a whole must actually
+/// pull, go stale, and preempt.
+#[test]
+fn directory_routing_is_token_identical_over_random_workloads() {
+    let total_pulls = Cell::new(0u64);
+    let total_pull_blocks = Cell::new(0u64);
+    let total_stale = Cell::new(0u64);
+    let total_preempts = Cell::new(0u64);
+    check(
+        120,
+        gens::pair(gens::vec(gens::usize_to(20), 2..=10), gens::usize_to(1_000_000)),
+        |&(ref profile, seed): &(Vec<usize>, usize)| {
+            let tenants = 2 + seed % 3;
+            let reqs: Vec<GenRequest> = profile
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| {
+                    let t = (p + i) % tenants;
+                    // the tenant prefix spans 4+ full 4-token blocks;
+                    // the user tail diverges per request (kept short:
+                    // prompt + max_new must stay inside max_seq 48)
+                    let sys = format!("tenant{t} {}", "s".repeat(8 + t * 2));
+                    GenRequest::greedy(
+                        format!("{sys} u{} {i} {}", seed % 1000, "x".repeat(p % 5)),
+                        2 + p % 6,
+                    )
+                })
+                .collect();
+            // unconstrained reference: one engine, big pool, single tier
+            let mut single = Engine::new(
+                MockBackend::with_geometry(geometry(96)).with_opt(COOPT),
+                EngineConfig::new("llama-7b-sim", COOPT),
+            );
+            let base = single.generate(reqs.clone()).unwrap();
+            if single.metrics.preemptions != 0 {
+                return false; // reference must be genuinely unconstrained
+            }
+            let n = 2 + seed % 3;
+            let engines: Vec<Engine<MockBackend>> = (0..n)
+                .map(|i| {
+                    // half the cases put a prefill-role replica in the
+                    // cluster so PD hand-offs race the prefix pulls
+                    let role = if seed % 2 == 0 && i == 0 {
+                        ReplicaRole::Prefill
+                    } else {
+                        ReplicaRole::Mixed
+                    };
+                    dir_engine(14, role)
+                })
+                .collect();
+            let mut router =
+                Router::new(engines, RouterPolicy::Directory).with_unpriced_handoff();
+            let tokenizer = Tokenizer::new();
+            for (i, r) in reqs.iter().enumerate() {
+                if seed % 3 == 0 && i % 2 == 1 {
+                    // poison: claim a (likely wrong) replica owns this
+                    // request's whole chain — the pull must under-export
+                    // and the destination must re-prefill the difference
+                    let toks = tokenizer.encode(&r.prompt, true, false);
+                    let alive = vec![true; n];
+                    for h in prefix_chain_hashes(&toks, 4, 32) {
+                        router.directory_mut().register(h, (i + seed) % n, &alive);
+                    }
+                }
+                router.submit(r.clone()).unwrap();
+                for _ in 0..((seed + i) % 3) {
+                    router.step_all().unwrap();
+                }
+            }
+            let got = router.run_to_completion().unwrap();
+            if got.len() != base.len() {
+                return false;
+            }
+            for (a, b) in base.iter().zip(&got) {
+                if a.tokens != b.result.tokens
+                    || a.finish != b.result.finish
+                    || b.replica >= n
+                {
+                    return false;
+                }
+            }
+            for e in router.replicas() {
+                total_pulls.set(total_pulls.get() + e.metrics.prefix_pulls);
+                total_pull_blocks
+                    .set(total_pull_blocks.get() + e.metrics.prefix_pull_blocks);
+                total_stale.set(total_stale.get() + e.metrics.prefix_pull_stale);
+                total_preempts.set(total_preempts.get() + e.metrics.preemptions);
+                // both tiers drain: no leaked device blocks (pulled pins
+                // included), host slots, swapped residue, or
+                // half-migrated sequences
+                if e.cache_stats().blocks_used != 0
+                    || e.tier_stats().host_used_blocks != 0
+                    || e.tier_stats().swapped_seqs != 0
+                    || e.num_migrating() != 0
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+    assert!(
+        total_pulls.get() > 0,
+        "the suite must actually exercise the cross-replica pull path"
+    );
+    assert!(
+        total_pull_blocks.get() > 0,
+        "at least some pulls must move real warm blocks, not just go stale"
+    );
+    assert!(
+        total_stale.get() > 0,
+        "the poisoned cases must force stale pulls (wrong/evicted owners)"
+    );
+    assert!(
+        total_preempts.get() > 0,
+        "the undersized pools must force eviction/swap racing the pulls"
+    );
+}
+
+/// Acceptance: a cold cluster routed all-upfront (no interleaved
+/// stepping) has nothing warm to pull — the directory degenerates to
+/// affinity-only placement and must still match the reference exactly,
+/// with zero blocks moved.
+#[test]
+fn cold_directory_degenerates_to_affinity_and_stays_exact() {
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| GenRequest::greedy(format!("cold start {} {}", i % 2, "c".repeat(16 + i)), 4))
+        .collect();
+    let mut single = Engine::new(
+        MockBackend::with_geometry(geometry(96)).with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    );
+    let base = single.generate(reqs.clone()).unwrap();
+    let engines: Vec<Engine<MockBackend>> =
+        (0..3).map(|_| dir_engine(24, ReplicaRole::Mixed)).collect();
+    let mut router = Router::new(engines, RouterPolicy::Directory);
+    for r in &reqs {
+        router.submit(r.clone()).unwrap();
+    }
+    let got = router.run_to_completion().unwrap();
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.tokens, b.result.tokens, "cold-directory routing changed outputs");
+    }
+    let pulled: u64 = router
+        .replicas()
+        .iter()
+        .map(|e| e.metrics.prefix_pull_blocks)
+        .sum();
+    assert_eq!(pulled, 0, "nothing was live to pull on a cold cluster");
+}

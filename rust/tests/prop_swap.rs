@@ -220,3 +220,53 @@ fn swap_beats_recompute_on_pool_exhausting_workload() {
         "avoided-recompute accounting engaged"
     );
 }
+
+/// Acceptance: watermark-based proactive eviction (`--evict-watermark`,
+/// default off) swaps the preemption-order victim *ahead of demand*
+/// when device free blocks dip below the watermark.  It must stay
+/// token-identical to the unconstrained run, account its moves
+/// separately (`proactive_swap_outs`), never engage when the knob is
+/// off, and still drain both tiers to zero.
+#[test]
+fn watermark_eviction_swaps_ahead_of_demand_and_stays_exact() {
+    let mut rng = Rng::new(0xE71C);
+    let reqs: Vec<(Vec<u32>, usize)> = (0..8)
+        .map(|_| {
+            let len = 8 + rng.below(20) as usize;
+            let toks: Vec<u32> = (0..len).map(|_| 33 + rng.below(200) as u32).collect();
+            (toks, 4 + rng.below(8) as usize)
+        })
+        .collect();
+    let run = |mut e: Engine<MockBackend>| {
+        for (toks, max_new) in &reqs {
+            e.submit_tokens(toks.clone(), *max_new, SamplingParams::default(), false)
+                .unwrap();
+        }
+        let mut r = e.run_to_completion().unwrap();
+        r.sort_by_key(|x| x.id);
+        (r.into_iter().map(|x| x.tokens).collect::<Vec<_>>(), e)
+    };
+    let (expected, _) = run(engine(96, 0, SwapPolicy::Never));
+    // knob off (the default): pressure preempts on demand only
+    let (got_off, off) = run(engine(12, 160, SwapPolicy::Always));
+    assert_eq!(expected, got_off);
+    assert_eq!(off.metrics.proactive_swap_outs, 0, "watermark defaults to off");
+    // knob on: free-block dips trigger ahead-of-demand swap-outs
+    let be = MockBackend::with_geometry(geometry(12)).with_opt(COOPT);
+    let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+        .with_host_pool(160)
+        .with_swap_policy(SwapPolicy::Always)
+        .with_evict_watermark(6);
+    let (got_on, on) = run(Engine::new(be, cfg));
+    assert_eq!(expected, got_on, "proactive eviction changed outputs");
+    assert!(
+        on.metrics.proactive_swap_outs > 0,
+        "watermark 6 over a 12-block pool never triggered"
+    );
+    assert!(
+        on.metrics.swap_outs >= on.metrics.proactive_swap_outs,
+        "proactive moves are a subset of all swap-outs"
+    );
+    assert_eq!(on.cache_stats().blocks_used, 0, "device pool drains");
+    assert_eq!(on.tier_stats().host_used_blocks, 0, "host tier drains");
+}
