@@ -22,10 +22,10 @@ use llm_coopt::util::json::{Object, Value};
 use llm_coopt::workload::harness::{
     gain_pct, reduction_pct, run_adaptive_spec_compare, run_chunk_compare,
     run_global_prefix_reuse, run_observability_compare, run_pd_compare, run_router_compare,
-    run_spec_compare, run_swap_compare, run_trace, write_bench_serve,
+    run_slo_overload, run_spec_compare, run_swap_compare, run_trace, write_bench_serve,
     AdaptiveSpecPoint,
 };
-use llm_coopt::workload::{MultiTenantSpec, PdTraceSpec, TraceSpec};
+use llm_coopt::workload::{MultiTenantSpec, PdTraceSpec, SloMix, TraceSpec};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("COOPT_BENCH_QUICK").is_ok();
@@ -372,6 +372,60 @@ fn main() -> anyhow::Result<()> {
         &format!(
             "requests={},tenants={},zipf_s={},seed={:#x},depths=[64,0],samples=[1.0,0.0]",
             mt_spec.num_requests, mt_spec.tenants, mt_spec.zipf_s, mt_spec.seed
+        ),
+    )?;
+
+    // --- SLO overload control: the 1:3 interactive:batch multi-tenant
+    // trace at ~2x capacity on an undersized replica, admission +
+    // priority scheduling + deadline enforcement on vs the untagged
+    // FIFO baseline (served outputs asserted token-identical to an
+    // unconstrained reference inside the harness)
+    println!("SLO overload — per-class tails at ~2x capacity, control on vs off");
+    println!(
+        "{:<8} {:>14} {:>13} {:>13} {:>6} {:>7} {:>8} {:>8}",
+        "mode", "int ttft p99", "int itl p95", "batch e2e p95", "shed", "expired", "preempt",
+        "tokens"
+    );
+    let slo_mix = SloMix::default();
+    let slo_rows = run_slo_overload(&mt_spec, &slo_mix)?;
+    for r in &slo_rows {
+        println!(
+            "{:<8} {:>13.4}s {:>12.5}s {:>12.4}s {:>6} {:>7} {:>8} {:>8}",
+            r.req_str("mode")?,
+            r.req_f64("interactive_ttft_wall_p99_s")?,
+            r.req_f64("interactive_itl_wall_p95_s")?,
+            r.req_f64("batch_e2e_wall_p95_s")?,
+            r.req_usize("shed_requests")?,
+            r.req_usize("deadline_cancellations")?,
+            r.req_usize("preemptions")?,
+            r.req_usize("tokens")?,
+        );
+    }
+    if let [on, off] = &slo_rows[..] {
+        println!(
+            "interactive TTFT p99 reduction with control on: {:.1}% \
+             ({} batch shed, {} expired cancelled; batch completed {}/{})\n",
+            reduction_pct(
+                off.req_f64("interactive_ttft_wall_p99_s")?,
+                on.req_f64("interactive_ttft_wall_p99_s")?
+            ),
+            on.req_usize("batch_shed")?,
+            on.req_usize("deadline_cancellations")?,
+            on.req_usize("batch_completed")?,
+            on.req_usize("batch_offered")?,
+        );
+    }
+    write_bench_serve(
+        "slo_overload",
+        &slo_rows,
+        &format!(
+            "requests={},tenants={},zipf_s={},seed={:#x},mix=1:{},expired_head={},replicas=1",
+            mt_spec.num_requests,
+            mt_spec.tenants,
+            mt_spec.zipf_s,
+            mt_spec.seed,
+            slo_mix.interactive_every - 1,
+            slo_mix.expired_head
         ),
     )?;
 

@@ -358,6 +358,127 @@ pub fn parse_replica_roles(s: &str) -> Result<Vec<ReplicaRole>> {
     s.split(',').map(|r| ReplicaRole::parse(r.trim())).collect()
 }
 
+/// Request priority class for SLO-aware serving.  `Interactive` is the
+/// default so untagged traffic keeps the pre-SLO behaviour exactly: when
+/// every request is the same class, the class-aware orderings (waiting /
+/// swapped / preemption victim) degenerate to the classic stamp orders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    /// latency-sensitive: protected by admission control, scheduled ahead
+    /// of batch work, never the preferred preemption victim
+    #[default]
+    Interactive,
+    /// throughput work: first to be shed under overload, last in the
+    /// waiting/swapped orderings, preferred preemption/swap victim
+    Batch,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 2] = [Priority::Interactive, Priority::Batch];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(anyhow!(
+                "unknown priority class '{other}' (expected interactive|batch)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn is_interactive(&self) -> bool {
+        matches!(self, Priority::Interactive)
+    }
+}
+
+/// Per-request SLO annotation threaded through the whole request path
+/// (`/v1/generate` → router admission → scheduler orderings → deadline
+/// enforcement at step boundaries → per-class latency attribution).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReqClass {
+    pub priority: Priority,
+    /// hard deadline relative to arrival; a request past it is cancelled
+    /// at the next step boundary instead of finishing uselessly
+    pub deadline_ms: Option<u64>,
+    /// tenant id for per-tenant token-rate accounting (None = untenanted)
+    pub tenant: Option<String>,
+}
+
+impl ReqClass {
+    pub fn interactive() -> Self {
+        ReqClass {
+            priority: Priority::Interactive,
+            ..ReqClass::default()
+        }
+    }
+
+    pub fn batch() -> Self {
+        ReqClass {
+            priority: Priority::Batch,
+            ..ReqClass::default()
+        }
+    }
+
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Some(tenant.into());
+        self
+    }
+}
+
+/// SLO-aware overload-control knobs (router admission + scheduler
+/// reservations + deadline enforcement).  The default (`admission`
+/// off, reserve 0) keeps every pre-SLO behaviour bit-identical; the
+/// serve-time flags `--slo-admission`, `--slo-interactive-ttft-ms`,
+/// and `--interactive-prefill-reserve` opt a deployment in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// router admission control on/off (`--slo-admission`): shed batch
+    /// work with 429 + Retry-After when the projected queue wait would
+    /// blow the interactive TTFT budget, bound the batch queue, and cap
+    /// any tenant's share of outstanding prefill tokens
+    pub admission: bool,
+    /// interactive TTFT budget in milliseconds
+    /// (`--slo-interactive-ttft-ms`): the admission controller sheds or
+    /// defers batch work when the projected queue wait exceeds it
+    pub interactive_ttft_ms: u64,
+    /// fraction of the per-step prefill budget reserved for interactive
+    /// sequences while any interactive prefill is pending
+    /// (`--interactive-prefill-reserve`, clamped to `0.0..=0.9`); 0
+    /// disables the split
+    pub interactive_prefill_reserve: f64,
+    /// max share of the cluster's outstanding prefill tokens one tenant
+    /// may hold before its *batch* work is shed (interactive work is
+    /// never tenant-shed while batch is queued)
+    pub tenant_share: f64,
+    /// bounded batch queue: batch admissions beyond this many outstanding
+    /// batch requests are shed immediately
+    pub max_batch_queue: usize,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig {
+            admission: false,
+            interactive_ttft_ms: 250,
+            interactive_prefill_reserve: 0.0,
+            tenant_share: 0.5,
+            max_batch_queue: 16,
+        }
+    }
+}
+
 /// Acceptance rule for speculative decoding (draft-and-verify).
 ///
 /// Greedy requests (temperature 0) always verify by exact argmax match
@@ -565,6 +686,10 @@ pub struct EngineConfig {
     /// (`--trace-sample`, deterministic per request id); phase breakdowns
     /// and histograms are always exact regardless of sampling
     pub trace_sample: f64,
+    /// SLO-aware overload control (admission shedding, interactive
+    /// prefill reservation, deadline enforcement); defaults keep every
+    /// pre-SLO behaviour
+    pub slo: SloConfig,
 }
 
 impl EngineConfig {
@@ -589,6 +714,7 @@ impl EngineConfig {
             seed: 0,
             trace_depth: 64,
             trace_sample: 1.0,
+            slo: SloConfig::default(),
         }
     }
 
@@ -691,6 +817,40 @@ impl EngineConfig {
     /// (`--trace-sample`, clamped to `0.0..=1.0`).
     pub fn with_trace_sample(mut self, s: f64) -> Self {
         self.trace_sample = s.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Enable router admission control (`--slo-admission`).
+    pub fn with_slo_admission(mut self, on: bool) -> Self {
+        self.slo.admission = on;
+        self
+    }
+
+    /// Set the interactive TTFT budget (`--slo-interactive-ttft-ms`).
+    pub fn with_interactive_ttft_ms(mut self, ms: u64) -> Self {
+        self.slo.interactive_ttft_ms = ms.max(1);
+        self
+    }
+
+    /// Reserve a fraction of the per-step prefill budget for interactive
+    /// sequences (`--interactive-prefill-reserve`, clamped to
+    /// `0.0..=0.9` so batch prefill always keeps a sliver of budget).
+    pub fn with_interactive_prefill_reserve(mut self, frac: f64) -> Self {
+        self.slo.interactive_prefill_reserve = frac.clamp(0.0, 0.9);
+        self
+    }
+
+    /// Cap one tenant's share of outstanding prefill tokens (clamped to
+    /// `0.05..=1.0`; 1.0 disables the cap).
+    pub fn with_tenant_share(mut self, share: f64) -> Self {
+        self.slo.tenant_share = share.clamp(0.05, 1.0);
+        self
+    }
+
+    /// Bound the batch queue: batch admissions beyond this many
+    /// outstanding batch requests are shed.
+    pub fn with_max_batch_queue(mut self, n: usize) -> Self {
+        self.slo.max_batch_queue = n.max(1);
         self
     }
 }
@@ -1093,6 +1253,60 @@ mod tests {
         );
         assert!(parse_replica_roles("").unwrap().is_empty());
         assert!(parse_replica_roles("prefill,bogus").is_err());
+    }
+
+    #[test]
+    fn slo_knobs() {
+        // off by default: untagged traffic is interactive and nothing
+        // sheds, reserves, or cancels — the pre-SLO behaviour exactly
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+        assert!(!cfg.slo.admission);
+        assert_eq!(cfg.slo.interactive_ttft_ms, 250);
+        assert!(cfg.slo.interactive_prefill_reserve.abs() < 1e-12);
+        assert!((cfg.slo.tenant_share - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.slo.max_batch_queue, 16);
+        let cfg = cfg
+            .with_slo_admission(true)
+            .with_interactive_ttft_ms(120)
+            .with_interactive_prefill_reserve(0.4)
+            .with_tenant_share(0.25)
+            .with_max_batch_queue(4);
+        assert!(cfg.slo.admission);
+        assert_eq!(cfg.slo.interactive_ttft_ms, 120);
+        assert!((cfg.slo.interactive_prefill_reserve - 0.4).abs() < 1e-12);
+        assert!((cfg.slo.tenant_share - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.slo.max_batch_queue, 4);
+        // degenerate values are clamped to something runnable
+        let cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_interactive_ttft_ms(0)
+            .with_interactive_prefill_reserve(7.0)
+            .with_tenant_share(0.0)
+            .with_max_batch_queue(0);
+        assert_eq!(cfg.slo.interactive_ttft_ms, 1);
+        assert!((cfg.slo.interactive_prefill_reserve - 0.9).abs() < 1e-12);
+        assert!((cfg.slo.tenant_share - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.slo.max_batch_queue, 1);
+    }
+
+    #[test]
+    fn priority_class_knobs() {
+        // untagged requests default to the protected class
+        assert_eq!(Priority::default(), Priority::Interactive);
+        assert!(Priority::Interactive.is_interactive());
+        assert!(!Priority::Batch.is_interactive());
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("bogus").is_err());
+        // ReqClass threads priority + deadline + tenant
+        let c = ReqClass::default();
+        assert_eq!(c.priority, Priority::Interactive);
+        assert!(c.deadline_ms.is_none() && c.tenant.is_none());
+        let c = ReqClass::batch().with_deadline_ms(500).with_tenant("t7");
+        assert_eq!(c.priority, Priority::Batch);
+        assert_eq!(c.deadline_ms, Some(500));
+        assert_eq!(c.tenant.as_deref(), Some("t7"));
+        assert_eq!(ReqClass::interactive().priority, Priority::Interactive);
     }
 
     #[test]

@@ -99,7 +99,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::config::{EngineConfig, ReplicaRole, SpecMode, SwapPolicy};
+use crate::config::{EngineConfig, ReplicaRole, ReqClass, SpecMode, SwapPolicy};
 use crate::kvcache::{CacheManager, SeqId};
 use crate::metrics::{EngineMetrics, RequestMetrics};
 use crate::obs::{trace_sampled, FlightRecorder, Phase, PhaseBreakdown, ReqTrace};
@@ -121,6 +121,9 @@ pub enum FinishReason {
     MaxContext,
     /// preempted and its prefix no longer fits the prefill graph
     PreemptOverflow,
+    /// cancelled at a step boundary: its SLO deadline passed and finishing
+    /// would burn a decode lane on an answer nobody is waiting for
+    DeadlineExceeded,
 }
 
 #[derive(Debug, Clone)]
@@ -134,6 +137,10 @@ pub struct GenRequest {
     /// client-supplied correlation id, echoed in the result, the request
     /// trace, and `/admin/trace` lookups
     pub corr_id: Option<String>,
+    /// SLO class: priority lane, optional deadline, optional tenant
+    /// (defaults to interactive — untagged traffic is the protected
+    /// class, so class-blind callers keep the pre-SLO behaviour)
+    pub class: ReqClass,
 }
 
 impl GenRequest {
@@ -144,7 +151,13 @@ impl GenRequest {
             sampling: SamplingParams::default(),
             ignore_eos: false,
             corr_id: None,
+            class: ReqClass::default(),
         }
+    }
+
+    pub fn with_class(mut self, class: ReqClass) -> Self {
+        self.class = class;
+        self
     }
 }
 
@@ -231,6 +244,9 @@ pub struct SeqHandoff {
     /// opened on the source stays open through transit, so hand-off time
     /// lands in the destination's per-phase breakdown
     pub trace: ReqTrace,
+    /// SLO class carried across replicas: the destination's scheduler and
+    /// deadline enforcement keep treating the request as the source did
+    pub class: ReqClass,
 }
 
 #[derive(Debug, Clone)]
@@ -251,6 +267,8 @@ pub struct GenResult {
     /// swap-blocked / migration wallclock partitions `latency_s`;
     /// spec overhead is sim-clock and overlaps decode)
     pub phases: PhaseBreakdown,
+    /// echo of [`GenRequest::class`]
+    pub class: ReqClass,
 }
 
 #[derive(Debug)]
@@ -271,6 +289,12 @@ struct Sequence {
     /// lifecycle trace: which phase the request is in right now, closed
     /// spans per phase, and (when sampled) the event timeline
     trace: ReqTrace,
+    /// SLO class: priority lane, optional deadline, optional tenant
+    class: ReqClass,
+    /// engine sim clock (prefill + decode seconds) at submission —
+    /// deadline enforcement measures simulated elapsed time against this,
+    /// so deterministic traces cancel deterministically
+    arrival_sim_s: f64,
 }
 
 impl Sequence {
@@ -377,6 +401,7 @@ impl<B: Backend> Engine<B> {
             // mode re-sets the per-lane charge every round
             sched = sched.with_speculation(cfg.spec.max_draft());
         }
+        sched = sched.with_interactive_reserve(cfg.slo.interactive_prefill_reserve);
         let mut cache = CacheManager::new(geometry);
         if cfg.host_pool_blocks > 0 {
             cache.enable_host_tier(cfg.host_pool_blocks);
@@ -520,7 +545,13 @@ impl<B: Backend> Engine<B> {
     /// Submit a request; returns its sequence id.
     pub fn submit(&mut self, req: GenRequest) -> Result<SeqId> {
         let tokens = self.tokenizer.encode(&req.prompt, true, false);
-        let id = self.submit_tokens(tokens, req.max_new_tokens, req.sampling, req.ignore_eos)?;
+        let id = self.submit_tokens_class(
+            tokens,
+            req.max_new_tokens,
+            req.sampling,
+            req.ignore_eos,
+            req.class,
+        )?;
         if req.corr_id.is_some() {
             if let Some(seq) = self.seqs.get_mut(&id) {
                 seq.trace.corr_id = req.corr_id;
@@ -536,6 +567,17 @@ impl<B: Backend> Engine<B> {
         sampling: SamplingParams,
         ignore_eos: bool,
     ) -> Result<SeqId> {
+        self.submit_tokens_class(tokens, max_new, sampling, ignore_eos, ReqClass::default())
+    }
+
+    pub fn submit_tokens_class(
+        &mut self,
+        tokens: Vec<u32>,
+        max_new: usize,
+        sampling: SamplingParams,
+        ignore_eos: bool,
+        class: ReqClass,
+    ) -> Result<SeqId> {
         let max_seq = self.backend.geometry().max_seq;
         if tokens.is_empty() {
             bail!("empty prompt");
@@ -547,6 +589,9 @@ impl<B: Backend> Engine<B> {
         self.next_id += 1;
         let prompt_len = tokens.len();
         let arrival = Instant::now();
+        let mut trace = ReqTrace::new(id, arrival, trace_sampled(id, self.cfg.trace_sample));
+        trace.class = class.clone();
+        let priority = class.priority;
         self.seqs.insert(
             id,
             Sequence {
@@ -567,11 +612,20 @@ impl<B: Backend> Engine<B> {
                 },
                 finish: None,
                 last_chunk_sim_t: None,
-                trace: ReqTrace::new(id, arrival, trace_sampled(id, self.cfg.trace_sample)),
+                trace,
+                class,
+                arrival_sim_s: self.sim_now(),
             },
         );
-        self.sched.submit(id, prompt_len);
+        self.sched.submit_class(id, prompt_len, priority);
         Ok(id)
+    }
+
+    /// The engine's simulated clock (prefill + decode seconds committed
+    /// so far) — the deterministic time base deadline enforcement uses
+    /// alongside wallclock.
+    fn sim_now(&self) -> f64 {
+        self.metrics.sim_prefill_s + self.metrics.sim_decode_s
     }
 
     /// Advance the engine one scheduling round.  Returns results finished
@@ -584,6 +638,9 @@ impl<B: Backend> Engine<B> {
         // swapped sequences rejoin the running set one step ahead of the
         // decode batch that needs them (the copy overlapped that step)
         self.drain_prefetches();
+        // deadline enforcement at the step boundary: a request past its
+        // SLO deadline frees its lane and KV instead of finishing uselessly
+        self.enforce_deadlines();
         // pulled-prefix pins: unpin blocks a prefill consumed last round,
         // expire pulls whose request never arrived (stale routing)
         self.cache.tick_pulled_pins(PULL_PIN_TTL_STEPS);
@@ -878,6 +935,7 @@ impl<B: Backend> Engine<B> {
             blocks,
             metrics: seq.metrics,
             trace: seq.trace,
+            class: seq.class,
         })
     }
 
@@ -936,7 +994,7 @@ impl<B: Backend> Engine<B> {
                 for &(idx, blk) in &ops.imports {
                     self.backend.import_block(blk, h.blocks[idx].payload)?;
                 }
-                self.sched.admit_migrated(id, h.resume_len);
+                self.sched.admit_migrated(id, h.resume_len, h.class.priority);
                 self.metrics.migrations_in += 1;
                 self.metrics.migrated_blocks_in += ops.imports.len() as u64;
                 self.metrics.migration_bytes +=
@@ -959,7 +1017,7 @@ impl<B: Backend> Engine<B> {
                 self.metrics.migrations_token_fallback += 1;
             }
             self.metrics.tokens_recomputed += h.resume_len as u64;
-            self.sched.submit(id, h.resume_len);
+            self.sched.submit_class(id, h.resume_len, h.class.priority);
         }
         let mut metrics = h.metrics;
         metrics.id = id;
@@ -972,6 +1030,10 @@ impl<B: Backend> Engine<B> {
             // token fallback re-prefills: back through the waiting queue
             trace.transition(Instant::now(), Phase::Queued, "migrate_in_fallback");
         }
+        // the sim clock differs per replica: anchor the deadline so that
+        // simulated elapsed = source-accumulated sim time + whatever this
+        // replica's clock advances from here
+        let arrival_sim_s = self.sim_now() - h.metrics.sim_time_s;
         self.seqs.insert(
             id,
             Sequence {
@@ -985,6 +1047,8 @@ impl<B: Backend> Engine<B> {
                 finish: None,
                 last_chunk_sim_t: None,
                 trace,
+                class: h.class,
+                arrival_sim_s,
             },
         );
         Ok(id)
@@ -1435,8 +1499,9 @@ impl<B: Backend> Engine<B> {
             // active sequence waited for this step's prefill windows too —
             // the stall chunked prefill exists to bound
             let itl = self.step_prefill_sim_s + s;
-            for _ in 0..lanes.len() {
-                self.metrics.record_itl_sim(itl);
+            for &(id, _) in &lanes {
+                let class = self.seqs[&id].class.priority;
+                self.metrics.record_itl_sim_class(itl, class);
             }
         }
 
@@ -1622,8 +1687,9 @@ impl<B: Backend> Engine<B> {
         if let Some(s) = sim_s {
             self.metrics.sim_decode_s += s;
             let itl = self.step_prefill_sim_s + s;
-            for _ in 0..lanes.len() {
-                self.metrics.record_itl_sim(itl);
+            for l in &lanes {
+                let class = self.seqs[&l.id].class.priority;
+                self.metrics.record_itl_sim_class(itl, class);
             }
         }
 
@@ -1993,6 +2059,44 @@ impl<B: Backend> Engine<B> {
         Ok(true)
     }
 
+    /// Cancel every sequence whose SLO deadline has passed, at the step
+    /// boundary (never mid-pass).  Elapsed time is the *larger* of the
+    /// wallclock and the simulated clock since arrival: real serving is
+    /// wall-dominated, deterministic traces are sim-dominated, and taking
+    /// the max means both regimes enforce the same budget.  Sequences
+    /// parked for migration are skipped — the router owns them and the
+    /// destination replica enforces the deadline after re-admission.
+    /// Cancellation reuses the ordinary finish path, so device blocks and
+    /// host slots free exactly as on any other finish (no leak path).
+    fn enforce_deadlines(&mut self) {
+        let now = Instant::now();
+        let sim_now = self.sim_now();
+        let expired: Vec<SeqId> = self
+            .seqs
+            .iter()
+            .filter_map(|(&id, s)| {
+                let deadline_ms = s.class.deadline_ms?;
+                if s.finish.is_some() || s.trace.cur_phase() == Phase::Migration {
+                    return None;
+                }
+                let wall_ms = now.duration_since(s.metrics.arrival).as_secs_f64() * 1e3;
+                let sim_ms = (sim_now - s.arrival_sim_s).max(0.0) * 1e3;
+                if wall_ms.max(sim_ms) > deadline_ms as f64 {
+                    Some(id)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let mut expired = expired;
+        expired.sort_unstable(); // HashMap order must not leak into results
+        for id in expired {
+            self.in_flight_prefetch.retain(|&p| p != id);
+            self.metrics.deadline_cancellations += 1;
+            self.finish_seq(id, FinishReason::DeadlineExceeded);
+        }
+    }
+
     fn check_finish(&mut self, id: SeqId, last_token: u32) {
         let geometry = *self.backend.geometry();
         let seq = &self.seqs[&id];
@@ -2027,8 +2131,8 @@ impl<B: Backend> Engine<B> {
             seq.metrics.finished = Some(now);
             seq.finish = Some(reason);
             let breakdown = seq.trace.finish(now);
-            self.metrics.record_request(&seq.metrics);
-            self.metrics.record_phases(&breakdown);
+            self.metrics.record_request_class(&seq.metrics, seq.class.priority);
+            self.metrics.record_phases_class(&breakdown, seq.class.priority);
             self.metrics.tokens_generated = self.metrics.tokens_generated.max(0);
             let gen_tokens: Vec<u32> = seq.tokens[seq.prompt_len..]
                 .iter()
@@ -2052,6 +2156,7 @@ impl<B: Backend> Engine<B> {
                 sim_time_s: seq.metrics.sim_time_s,
                 corr_id: seq.trace.corr_id.clone(),
                 phases: breakdown,
+                class: seq.class.clone(),
             });
             if self.recorder.capacity() > 0 {
                 self.recorder.push(seq.trace.to_json(&breakdown));
@@ -2091,6 +2196,57 @@ mod tests {
         let be = MockBackend::new().with_opt(opt);
         let cfg = EngineConfig::new("llama-7b-sim", opt);
         Engine::new(be, cfg)
+    }
+
+    #[test]
+    fn deadline_cancellation_frees_resources_at_step_boundary() {
+        use crate::config::Priority;
+        let mut e = engine(COOPT);
+        // deadline 0: already expired when the first step boundary checks,
+        // so the cancel lands while the request is still waiting
+        let doomed = e
+            .submit(
+                GenRequest::greedy("deadline victim prompt", 8)
+                    .with_class(ReqClass::batch().with_deadline_ms(0).with_tenant("t0")),
+            )
+            .unwrap();
+        let alive = e.submit(GenRequest::greedy("Q: 1+1=?", 4)).unwrap();
+        let results = e.run_to_completion().unwrap();
+        assert_eq!(results.len(), 2);
+        let d = results.iter().find(|r| r.id == doomed).unwrap();
+        assert_eq!(d.finish, FinishReason::DeadlineExceeded);
+        assert_eq!(d.generated_tokens, 0, "cancelled before admission");
+        assert_eq!(d.class.priority, Priority::Batch);
+        assert_eq!(d.class.deadline_ms, Some(0));
+        assert_eq!(d.class.tenant.as_deref(), Some("t0"));
+        let a = results.iter().find(|r| r.id == alive).unwrap();
+        assert_eq!(a.finish, FinishReason::MaxNewTokens);
+        assert_eq!(a.generated_tokens, 4, "undoomed request unaffected");
+        assert_eq!(e.metrics.deadline_cancellations, 1);
+        // the cancel leaked nothing: device pool and host tier drain to zero
+        assert_eq!(e.cache_stats().blocks_used, 0);
+        assert_eq!(e.tier_stats().host_used_blocks, 0);
+    }
+
+    #[test]
+    fn deadline_cancels_mid_stream_and_frees_kv() {
+        let mut e = engine(COOPT);
+        e.submit(
+            GenRequest::greedy("a long running request", 64)
+                .with_class(ReqClass::interactive().with_deadline_ms(5)),
+        )
+        .unwrap();
+        // step 1 runs within the budget (admission + prefill); then the
+        // wallclock blows the 5 ms deadline and the next boundary cancels
+        let mut out = e.step().unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        out.extend(e.step().unwrap());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].finish, FinishReason::DeadlineExceeded);
+        assert!(out[0].generated_tokens < 64, "never ran to completion");
+        assert_eq!(e.metrics.deadline_cancellations, 1);
+        assert_eq!(e.cache_stats().blocks_used, 0, "mid-stream KV freed");
+        assert!(e.sched.is_idle());
     }
 
     #[test]

@@ -9,8 +9,8 @@
 
 use anyhow::{bail, Context, Result};
 use llm_coopt::config::{
-    artifacts_dir, opt_config, parse_replica_roles, EngineConfig, RouterPolicy, SpecMode,
-    SpecPolicy, SwapPolicy,
+    artifacts_dir, opt_config, parse_replica_roles, EngineConfig, ReqClass, RouterPolicy,
+    SpecMode, SpecPolicy, SwapPolicy,
 };
 use llm_coopt::coordinator::{Engine, GenRequest};
 use llm_coopt::eval;
@@ -162,6 +162,30 @@ fn main() -> Result<()> {
              requests keep their phase breakdown but carry no events",
         )
         .flag(
+            "slo-admission",
+            "false",
+            "SLO overload control: router admission shedding on/off.  When \
+             on, batch-class requests are shed with 429 + Retry-After when \
+             the projected queue wait would blow the interactive TTFT \
+             budget, the batch queue is bounded, and per-tenant accounting \
+             caps any tenant's share of outstanding prefill tokens \
+             (true|false)",
+        )
+        .flag(
+            "slo-interactive-ttft-ms",
+            "250",
+            "SLO overload control: interactive TTFT budget in milliseconds; \
+             the admission controller sheds or defers batch work when the \
+             projected queue wait exceeds it",
+        )
+        .flag(
+            "interactive-prefill-reserve",
+            "0.0",
+            "SLO overload control: fraction of the per-step prefill budget \
+             reserved for interactive sequences while any interactive \
+             prefill is pending (0.0..=0.9; 0 = no split)",
+        )
+        .flag(
             "log-level",
             "",
             "stderr log level: error|warn|info|debug|trace (overrides \
@@ -205,7 +229,10 @@ fn main() -> Result<()> {
             .with_spec_shrink(args.get_f64("spec-shrink"))
             .with_spec_ewma_alpha(args.get_f64("spec-ewma-alpha"))
             .with_trace_depth(args.get_usize("trace-depth"))
-            .with_trace_sample(args.get_f64("trace-sample"));
+            .with_trace_sample(args.get_f64("trace-sample"))
+            .with_slo_admission(args.get_bool("slo-admission"))
+            .with_interactive_ttft_ms(args.get_usize("slo-interactive-ttft-ms") as u64)
+            .with_interactive_prefill_reserve(args.get_f64("interactive-prefill-reserve"));
         Ok(cfg)
     };
 
@@ -256,6 +283,7 @@ fn main() -> Result<()> {
             }
             let rt = Runtime::new(&dir)?;
             let mut engines = Vec::with_capacity(replicas);
+            let slo = engine_cfg(model, opt)?.slo;
             for i in 0..replicas {
                 let mrt = rt.load_model(model, opt)?;
                 if i == 0 {
@@ -267,7 +295,7 @@ fn main() -> Result<()> {
                 }
                 engines.push(Engine::new(mrt, cfg));
             }
-            let router = RouterHandle::spawn(engines, policy);
+            let router = RouterHandle::spawn(engines, policy).with_slo(slo);
             let server =
                 Server::bind_router(args.get("addr"), router, args.get_usize("workers"))?;
             if args.get_bool("pd-autoscale") {
@@ -295,6 +323,7 @@ fn main() -> Result<()> {
                 },
                 ignore_eos: false,
                 corr_id: None,
+                class: ReqClass::default(),
             }])?;
             let r = &results[0];
             println!("prompt   : {}", r.prompt);

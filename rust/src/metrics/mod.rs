@@ -4,9 +4,42 @@
 
 use std::time::{Duration, Instant};
 
+use crate::config::Priority;
 use crate::obs::{LatencyHist, PhaseBreakdown};
 use crate::util::json::{Object, Value};
 use crate::util::stats::Summary;
+
+/// One priority class's copy of the mergeable latency-histogram set
+/// (TTFT / E2E / decode ITL / queue wait).  Recorded alongside the
+/// class-blind histograms so cluster `/metrics` can expose interactive
+/// and batch tails separately — the whole point of SLO-aware overload
+/// control is that these two distributions diverge under pressure.
+#[derive(Debug, Default)]
+pub struct ClassHists {
+    pub ttft_wall: LatencyHist,
+    pub e2e_wall: LatencyHist,
+    pub itl_sim: LatencyHist,
+    pub queue_wall: LatencyHist,
+}
+
+impl ClassHists {
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("ttft_wall", self.ttft_wall.to_json());
+        o.insert("e2e_wall", self.e2e_wall.to_json());
+        o.insert("itl_sim", self.itl_sim.to_json());
+        o.insert("queue_wall", self.queue_wall.to_json());
+        Value::Object(o)
+    }
+}
+
+/// Index of a priority class in per-class metric arrays.
+pub fn class_idx(c: Priority) -> usize {
+    match c {
+        Priority::Interactive => 0,
+        Priority::Batch => 1,
+    }
+}
 
 /// Per-request record (filled by the coordinator as the request advances).
 #[derive(Debug, Clone)]
@@ -159,6 +192,12 @@ pub struct EngineMetrics {
     pub hist_e2e_wall: LatencyHist,
     pub hist_itl_sim: LatencyHist,
     pub hist_queue_wall: LatencyHist,
+    /// the same histogram set split by priority class
+    /// (index via [`class_idx`]; merged per class in cluster `/metrics`)
+    pub hist_class: [ClassHists; 2],
+    /// requests cancelled at a step boundary because their SLO deadline
+    /// passed (`FinishReason::DeadlineExceeded`)
+    pub deadline_cancellations: u64,
     /// wallclock seconds finished requests spent in each lifecycle phase
     /// (the phases partition each request's E2E, so these five sum to
     /// `total_latency_wall_s` up to clock-read jitter)
@@ -207,6 +246,30 @@ impl EngineMetrics {
     pub fn record_itl_sim(&mut self, s: f64) {
         self.itl_sim.add(s);
         self.hist_itl_sim.record(s);
+    }
+
+    /// [`Self::record_request`] plus the per-class TTFT/E2E histograms.
+    pub fn record_request_class(&mut self, r: &RequestMetrics, class: Priority) {
+        self.record_request(r);
+        let h = &mut self.hist_class[class_idx(class)];
+        if let Some(l) = r.latency() {
+            h.e2e_wall.record(l.as_secs_f64());
+        }
+        if let Some(t) = r.ttft() {
+            h.ttft_wall.record(t.as_secs_f64());
+        }
+    }
+
+    /// [`Self::record_itl_sim`] plus the per-class ITL histogram.
+    pub fn record_itl_sim_class(&mut self, s: f64, class: Priority) {
+        self.record_itl_sim(s);
+        self.hist_class[class_idx(class)].itl_sim.record(s);
+    }
+
+    /// [`Self::record_phases`] plus the per-class queue-wait histogram.
+    pub fn record_phases_class(&mut self, b: &PhaseBreakdown, class: Priority) {
+        self.record_phases(b);
+        self.hist_class[class_idx(class)].queue_wall.record(b.queue_s);
     }
 
     /// Fold a finished request's phase breakdown into the run totals and
@@ -425,6 +488,7 @@ impl EngineMetrics {
         o.insert("phase_swap_blocked_s", self.phase_swap_blocked_s);
         o.insert("phase_migration_s", self.phase_migration_s);
         o.insert("phase_spec_overhead_sim_s", self.phase_spec_overhead_sim_s);
+        o.insert("deadline_cancellations", self.deadline_cancellations as usize);
         // mergeable log-bucketed histograms (exact cluster aggregation)
         let mut hist = Object::new();
         hist.insert("ttft_wall", self.hist_ttft_wall.to_json());
@@ -432,6 +496,14 @@ impl EngineMetrics {
         hist.insert("itl_sim", self.hist_itl_sim.to_json());
         hist.insert("queue_wall", self.hist_queue_wall.to_json());
         o.insert("hist", hist);
+        // the same set split by priority class (merged per class in
+        // cluster `/metrics`, exposed with class="..." labels in the
+        // Prometheus exposition)
+        let mut hc = Object::new();
+        for p in Priority::ALL {
+            hc.insert(p.name(), self.hist_class[class_idx(p)].to_json());
+        }
+        o.insert("hist_class", hc);
         if self.itl_sim.count() > 0 {
             o.insert("itl_sim_p50_s", self.itl_sim.p50());
             o.insert("itl_sim_p95_s", self.itl_sim.p95());
@@ -629,6 +701,49 @@ mod tests {
         m.record_spec_round(1, 2, None);
         assert_eq!(m.spec_k_hist, vec![2, 1, 0, 3]);
         assert_eq!(m.rounds_weight_stream_bound + m.rounds_gemm_bound, 5);
+    }
+
+    #[test]
+    fn per_class_hists_record_and_serialize() {
+        let mut m = EngineMetrics::new();
+        let t0 = Instant::now();
+        let req = |id: u64, ttft_ms: u64, e2e_ms: u64| RequestMetrics {
+            id,
+            prompt_tokens: 8,
+            generated_tokens: 4,
+            arrival: t0,
+            first_token: Some(t0 + Duration::from_millis(ttft_ms)),
+            finished: Some(t0 + Duration::from_millis(e2e_ms)),
+            sim_time_s: 0.01,
+        };
+        m.record_request_class(&req(1, 5, 40), Priority::Interactive);
+        m.record_request_class(&req(2, 50, 400), Priority::Batch);
+        m.record_request_class(&req(3, 60, 500), Priority::Batch);
+        m.record_itl_sim_class(0.002, Priority::Interactive);
+        m.record_phases_class(
+            &PhaseBreakdown { queue_s: 0.020, ..Default::default() },
+            Priority::Batch,
+        );
+        m.deadline_cancellations = 2;
+        // class hists split; class-blind hists still see the union
+        assert_eq!(m.hist_class[class_idx(Priority::Interactive)].ttft_wall.count(), 1);
+        assert_eq!(m.hist_class[class_idx(Priority::Batch)].ttft_wall.count(), 2);
+        assert_eq!(m.hist_ttft_wall.count(), 3);
+        assert_eq!(m.hist_class[class_idx(Priority::Batch)].queue_wall.count(), 1);
+        assert_eq!(m.hist_class[class_idx(Priority::Interactive)].itl_sim.count(), 1);
+        let j = m.to_json();
+        assert_eq!(j.req_usize("deadline_cancellations").unwrap(), 2);
+        let hc = j.get("hist_class").expect("hist_class object");
+        for class in ["interactive", "batch"] {
+            let ch = hc.get(class).expect(class);
+            for key in ["ttft_wall", "e2e_wall", "itl_sim", "queue_wall"] {
+                LatencyHist::from_json(ch.get(key).unwrap()).expect(key);
+            }
+        }
+        assert_eq!(
+            hc.get("batch").unwrap().get("ttft_wall").unwrap().req_usize("count").unwrap(),
+            2
+        );
     }
 
     #[test]

@@ -24,6 +24,7 @@
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::config::ReqClass;
 use crate::util::json::{Object, Value};
 use crate::util::logging::{self, Level};
 
@@ -93,6 +94,10 @@ pub const MAX_TRACE_EVENTS: usize = 256;
 pub struct ReqTrace {
     pub id: u64,
     pub corr_id: Option<String>,
+    /// SLO class echo (priority / deadline / tenant): shed and deferred
+    /// time must be attributable per class and per tenant in the
+    /// flight-recorder payload
+    pub class: ReqClass,
     pub arrival: Instant,
     cur_phase: Phase,
     cur_since: Instant,
@@ -117,6 +122,7 @@ impl ReqTrace {
         let mut t = ReqTrace {
             id,
             corr_id: None,
+            class: ReqClass::default(),
             arrival,
             cur_phase: Phase::Queued,
             cur_since: arrival,
@@ -224,6 +230,15 @@ impl ReqTrace {
         match &self.corr_id {
             Some(c) => o.insert("corr_id", c.as_str()),
             None => o.insert("corr_id", Value::Null),
+        }
+        o.insert("class", self.class.priority.name());
+        match self.class.deadline_ms {
+            Some(ms) => o.insert("deadline_ms", ms as usize),
+            None => o.insert("deadline_ms", Value::Null),
+        }
+        match &self.class.tenant {
+            Some(t) => o.insert("tenant", t.as_str()),
+            None => o.insert("tenant", Value::Null),
         }
         o.insert("phases", breakdown.to_json());
         o.insert("preemptions", self.preemptions as usize);
@@ -638,12 +653,43 @@ fn prom_name(key: &str) -> String {
     s
 }
 
+/// Emit one histogram's bucket/sum/count lines (no `# TYPE` header).
+/// `label` is either empty or a `key="value",` prefix spliced before the
+/// `le` label on every bucket line (and alone on `_sum`/`_count`).
+fn push_hist_body(out: &mut String, name: &str, label: &str, h: &LatencyHist) {
+    let mut cum = 0u64;
+    for (i, &c) in h.counts().iter().enumerate() {
+        cum += c;
+        if i < HIST_BUCKETS {
+            // only materialize populated + boundary lines:
+            // full 41-bucket exposition per metric is noise
+            if c == 0 && i > 0 && h.counts()[i - 1] == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{name}_bucket{{{label}le=\"{}\"}} {cum}\n",
+                hist_bound(i)
+            ));
+        }
+    }
+    out.push_str(&format!("{name}_bucket{{{label}le=\"+Inf\"}} {}\n", h.count()));
+    if label.is_empty() {
+        out.push_str(&format!("{name}_sum {}\n", h.sum()));
+        out.push_str(&format!("{name}_count {}\n", h.count()));
+    } else {
+        let bare = label.trim_end_matches(',');
+        out.push_str(&format!("{name}_sum{{{bare}}} {}\n", h.sum()));
+        out.push_str(&format!("{name}_count{{{bare}}} {}\n", h.count()));
+    }
+}
+
 /// Render a flat `/metrics` JSON payload as Prometheus text exposition:
 /// numbers become gauges, the `hist` object becomes `_bucket{le=...}`
-/// series with `_sum`/`_count`, and one-level numeric maps (e.g.
-/// `spec_k_hist`) become labeled gauges.  Strings, bools, and nested
-/// arrays (per-replica snapshots) are skipped — scrape each replica for
-/// those.
+/// series with `_sum`/`_count`, the `hist_class` object becomes the same
+/// series under `<name>_class_seconds` with a `class="interactive|batch"`
+/// label, and one-level numeric maps (e.g. `spec_k_hist`) become labeled
+/// gauges.  Strings, bools, and nested arrays (per-replica snapshots)
+/// are skipped — scrape each replica for those.
 pub fn prometheus_text(v: &Value) -> String {
     let mut out = String::new();
     let obj = match v.as_object() {
@@ -664,24 +710,25 @@ pub fn prometheus_text(v: &Value) -> String {
                     };
                     let name = format!("{}_seconds", prom_name(hname));
                     out.push_str(&format!("# TYPE {name} histogram\n"));
-                    let mut cum = 0u64;
-                    for (i, &c) in h.counts().iter().enumerate() {
-                        cum += c;
-                        if i < HIST_BUCKETS {
-                            // only materialize populated + boundary lines:
-                            // full 41-bucket exposition per metric is noise
-                            if c == 0 && i > 0 && h.counts()[i - 1] == 0 {
-                                continue;
-                            }
-                            out.push_str(&format!(
-                                "{name}_bucket{{le=\"{}\"}} {cum}\n",
-                                hist_bound(i)
-                            ));
+                    push_hist_body(&mut out, &name, "", &h);
+                }
+            }
+            Value::Object(sub) if key == "hist_class" => {
+                // {class: {hist_name: hist}} — one labeled series per
+                // class under a shared metric name, TYPE written once
+                let mut typed: Vec<String> = Vec::new();
+                for (class, chists) in sub.iter() {
+                    let Some(ch) = chists.as_object() else { continue };
+                    for (hname, hval) in ch.iter() {
+                        let Some(h) = LatencyHist::from_json(hval) else { continue };
+                        let name = format!("{}_class_seconds", prom_name(hname));
+                        if !typed.contains(&name) {
+                            out.push_str(&format!("# TYPE {name} histogram\n"));
+                            typed.push(name.clone());
                         }
+                        let label = format!("class=\"{class}\",");
+                        push_hist_body(&mut out, &name, &label, &h);
                     }
-                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
-                    out.push_str(&format!("{name}_sum {}\n", h.sum()));
-                    out.push_str(&format!("{name}_count {}\n", h.count()));
                 }
             }
             Value::Object(sub) => {
@@ -982,6 +1029,38 @@ mod tests {
         assert!(text.contains("llm_coopt_ttft_wall_seconds_bucket{le=\"+Inf\"} 3"));
         assert!(text.contains("llm_coopt_ttft_wall_seconds_count 3"));
         // every line is either a comment or name[{labels}] value
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "malformed line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_labels_per_class_hists() {
+        let mut interactive = Object::new();
+        interactive.insert("ttft_wall", hist_of(&[0.005, 0.010]).to_json());
+        let mut batch = Object::new();
+        batch.insert("ttft_wall", hist_of(&[0.2]).to_json());
+        let mut hc = Object::new();
+        hc.insert("interactive", interactive);
+        hc.insert("batch", batch);
+        let mut o = Object::new();
+        o.insert("hist_class", hc);
+        let text = prometheus_text(&Value::Object(o));
+        // one shared metric name, TYPE written once, one series per class
+        assert_eq!(
+            text.matches("# TYPE llm_coopt_ttft_wall_class_seconds histogram")
+                .count(),
+            1
+        );
+        assert!(text
+            .contains("llm_coopt_ttft_wall_class_seconds_bucket{class=\"interactive\",le=\"+Inf\"} 2"));
+        assert!(text
+            .contains("llm_coopt_ttft_wall_class_seconds_bucket{class=\"batch\",le=\"+Inf\"} 1"));
+        assert!(text.contains("llm_coopt_ttft_wall_class_seconds_count{class=\"interactive\"} 2"));
+        assert!(text.contains("llm_coopt_ttft_wall_class_seconds_count{class=\"batch\"} 1"));
         for line in text.lines() {
             assert!(
                 line.starts_with('#') || line.contains(' '),

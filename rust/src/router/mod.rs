@@ -77,14 +77,14 @@
 //! queue-depth and occupancy-spread gauges.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{OptConfig, ReplicaRole, RouterPolicy};
+use crate::config::{OptConfig, ReplicaRole, ReqClass, RouterPolicy, SloConfig};
 use crate::coordinator::{Engine, GenRequest, GenResult};
 use crate::kvcache::{leading_prefix_hash, prefix_chain_hashes, SeqId};
 use crate::obs::LatencyHist;
@@ -179,6 +179,140 @@ pub fn load_score(l: &ReplicaLoad) -> f64 {
         0.0
     };
     backlog / speed * (1.0 + pressure)
+}
+
+// ---------------------------------------------------------------------------
+// SLO admission control (shared by the sync and threaded drivers)
+// ---------------------------------------------------------------------------
+
+/// Queue-wait projection: estimated ms of queue-wait per token-equivalent
+/// of the best routable replica's [`load_score`].  The sim's default
+/// geometry drains roughly half a token-equivalent per wall ms at the
+/// ShareGPT operating point; the constant errs high so admission sheds
+/// *before* the interactive TTFT budget is spent, not at it.
+pub const SLO_MS_PER_TOKEN: f64 = 2.0;
+
+/// Projected queue-wait for a newly admitted request, in milliseconds:
+/// the lowest routable [`load_score`] (the replica the request would
+/// land on) read through the backlog drain rate, floored by the
+/// cluster's *observed* queue-wait p95 (the PR 7 `queue_wall`
+/// histogram) — the score projects forward, the histogram remembers
+/// what admission optimism cost the last time.  No routable replica
+/// projects an infinite wait.
+pub fn projected_wait_ms(loads: &[ReplicaLoad], observed_queue_p95_s: f64) -> f64 {
+    let best = loads
+        .iter()
+        .filter(|l| l.healthy && !l.draining)
+        .map(load_score)
+        .fold(f64::INFINITY, f64::min);
+    if best.is_finite() {
+        (best * SLO_MS_PER_TOKEN).max(observed_queue_p95_s * 1e3)
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Why admission refused a request, and how long the client should back
+/// off before retrying (the 429's `Retry-After`).
+#[derive(Debug, Clone)]
+pub struct ShedDecision {
+    pub reason: &'static str,
+    pub retry_after_ms: u64,
+}
+
+/// The admission controller: decide whether to shed one request, given
+/// the router's per-class and per-tenant books.  Pure — both drivers
+/// route their state through here so the shed rules cannot drift.
+///
+/// Batch work is shed when (i) the bounded batch queue is full, (ii) the
+/// projected queue-wait would blow the *interactive* TTFT budget
+/// (admitting more batch now is what makes interactive miss later), or
+/// (iii) its tenant already holds more than its share of the
+/// outstanding prefill tokens while other tenants have work in flight.
+/// Interactive work is shed only as a last resort: the projected wait
+/// already blows its own budget *and* there is no queued batch work
+/// left to displace — so by construction no interactive request is ever
+/// shed while the batch queue is nonempty.
+pub fn admission_decision(
+    slo: &SloConfig,
+    class: &ReqClass,
+    prompt_tokens: usize,
+    batch_queued: usize,
+    projected_wait_ms: f64,
+    tenant_outstanding: f64,
+    cluster_outstanding: f64,
+) -> Option<ShedDecision> {
+    if !slo.admission {
+        return None;
+    }
+    let budget_ms = slo.interactive_ttft_ms as f64;
+    if class.priority.is_interactive() {
+        if batch_queued == 0 && projected_wait_ms > budget_ms {
+            return Some(ShedDecision {
+                reason: "projected wait over TTFT budget with no batch to displace",
+                retry_after_ms: slo.interactive_ttft_ms,
+            });
+        }
+        return None;
+    }
+    if batch_queued >= slo.max_batch_queue {
+        return Some(ShedDecision {
+            reason: "batch queue full",
+            retry_after_ms: 2 * slo.interactive_ttft_ms,
+        });
+    }
+    if projected_wait_ms > budget_ms {
+        return Some(ShedDecision {
+            reason: "projected wait would blow interactive TTFT budget",
+            retry_after_ms: 2 * slo.interactive_ttft_ms,
+        });
+    }
+    if class.tenant.is_some() {
+        let cost = prompt_tokens as f64;
+        let total = cluster_outstanding + cost;
+        // the cap only bites while *other* tenants hold outstanding
+        // work: a sole tenant saturating an idle cluster is utilization,
+        // not unfairness
+        if cluster_outstanding > tenant_outstanding
+            && total > 0.0
+            && (tenant_outstanding + cost) / total > slo.tenant_share
+        {
+            return Some(ShedDecision {
+                reason: "tenant over outstanding-prefill share",
+                retry_after_ms: slo.interactive_ttft_ms,
+            });
+        }
+    }
+    None
+}
+
+/// Marker every shed error starts with; the HTTP layer string-matches it
+/// (the vendored error type has no downcast) to map sheds to 429 +
+/// `Retry-After` instead of 500.
+pub const SHED_MARKER: &str = "request shed";
+
+/// Build a shed error whose message carries the class and back-off in a
+/// `key=value` form the HTTP layer can parse back out for the response
+/// body: `request shed (<reason>); class=<c> retry_after_ms=<n>`.
+fn shed_error(class: &ReqClass, shed: &ShedDecision) -> anyhow::Error {
+    anyhow!(
+        "{SHED_MARKER} ({}); class={} retry_after_ms={}",
+        shed.reason,
+        class.priority.name(),
+        shed.retry_after_ms
+    )
+}
+
+/// Does this error mean the serving replica itself failed under the
+/// request (thread dead, or a step fault that killed everything in
+/// flight) — as opposed to a routing or admission refusal?  Replica
+/// failures are the retryable class: the same request on a surviving
+/// replica is expected to succeed.
+fn is_replica_failure(e: &anyhow::Error) -> bool {
+    let s = e.to_string();
+    s.contains("engine thread gone")
+        || s.contains("engine dropped the request")
+        || s.contains("engine error")
 }
 
 fn least_loaded_of(eligible: &[usize], loads: &[ReplicaLoad]) -> usize {
@@ -369,6 +503,15 @@ pub struct RoutedResult {
     pub result: GenResult,
 }
 
+/// What one admitted request owes the admission books: released when
+/// its result comes back (success, cancellation, or failure alike).
+#[derive(Debug, Clone)]
+struct AdmitDebit {
+    batch: bool,
+    tenant: Option<String>,
+    prompt_tokens: f64,
+}
+
 /// Synchronous N-replica cluster: owns the engines, routes at submit
 /// time, runs each replica to completion.  Fully deterministic — the
 /// bench/test driver (the HTTP path uses [`RouterHandle`]).
@@ -391,6 +534,17 @@ pub struct Router<B: Backend> {
     directory: PrefixDirectory,
     outstanding: Vec<f64>,
     draining: Vec<bool>,
+    /// SLO admission knobs ([`Router::with_slo`]); default off
+    slo: SloConfig,
+    /// requests refused by the admission controller
+    shed_requests: u64,
+    /// admitted-but-unfinished batch requests (the bounded batch queue)
+    batch_queued: usize,
+    /// outstanding prefill tokens per tenant, and their cluster total
+    tenant_tokens: HashMap<String, f64>,
+    tenant_total: f64,
+    /// per-admission debits, keyed like [`Router::routed`] entries
+    admitted: HashMap<(usize, SeqId), AdmitDebit>,
     /// (replica, seq id) per submission, in submission order; hand-off
     /// dispatch remaps an entry to its destination replica + new id
     routed: Vec<(usize, SeqId)>,
@@ -423,6 +577,12 @@ impl<B: Backend> Router<B> {
             directory: PrefixDirectory::new(DIRECTORY_CAP),
             outstanding: vec![0.0; n],
             draining: vec![false; n],
+            slo: SloConfig::default(),
+            shed_requests: 0,
+            batch_queued: 0,
+            tenant_tokens: HashMap::new(),
+            tenant_total: 0.0,
+            admitted: HashMap::new(),
             routed: Vec::new(),
             completed: HashMap::new(),
         }
@@ -432,6 +592,24 @@ impl<B: Backend> Router<B> {
     pub fn with_affinity_threshold(mut self, t: f64) -> Self {
         self.affinity_threshold = t;
         self
+    }
+
+    /// Set the SLO admission knobs (benches/tests; the serving path
+    /// takes them from the engine config via [`RouterHandle::with_slo`]).
+    pub fn with_slo(mut self, slo: SloConfig) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    /// Requests refused by the admission controller so far.
+    pub fn shed_requests(&self) -> u64 {
+        self.shed_requests
+    }
+
+    /// Admitted-but-unfinished batch requests (the bounded batch queue's
+    /// current depth).
+    pub fn batch_queue_depth(&self) -> usize {
+        self.batch_queued
     }
 
     /// Assign PD roles, one per replica: sets each engine's own role
@@ -523,7 +701,24 @@ impl<B: Backend> Router<B> {
         }
     }
 
+    /// The cluster's observed queue-wait p95 (merged across replicas),
+    /// the admission controller's memory of past queueing.
+    fn observed_queue_p95_s(&self) -> f64 {
+        let mut merged = LatencyHist::new();
+        for e in &self.replicas {
+            merged.merge(&e.metrics.hist_queue_wall);
+        }
+        if merged.count() > 0 {
+            merged.p95()
+        } else {
+            0.0
+        }
+    }
+
     /// Route and submit one request; returns (replica, sequence id).
+    /// With [`SloConfig::admission`] on, the request first passes the
+    /// admission controller and may be shed (`Err` starting with
+    /// [`SHED_MARKER`]) instead of routed.
     pub fn submit(&mut self, req: GenRequest) -> Result<(usize, SeqId)> {
         if self.policy == RouterPolicy::Directory {
             self.sync_directory();
@@ -531,9 +726,12 @@ impl<B: Backend> Router<B> {
         let pd_active = self.roles.iter().any(|&r| r != ReplicaRole::Mixed);
         // round-robin reads neither the cost estimate nor the prefix
         // key, so it skips the router-side tokenization entirely — but
-        // PD placement needs the prompt length, so roles force it on
+        // PD placement needs the prompt length, and admission the
+        // tenant's prefill tokens, so either forces it on
         let (cost, chain, prompt_tokens) = match self.policy {
-            RouterPolicy::RoundRobin if !pd_active => (0.0, Vec::new(), 0),
+            RouterPolicy::RoundRobin if !pd_active && !self.slo.admission => {
+                (0.0, Vec::new(), 0)
+            }
             _ => {
                 let tokens = self.tokenizer.encode(&req.prompt, true, false);
                 let chain = match self.policy {
@@ -557,6 +755,27 @@ impl<B: Backend> Router<B> {
             }
         };
         let loads = self.loads();
+        if self.slo.admission {
+            let tenant_out = req
+                .class
+                .tenant
+                .as_deref()
+                .and_then(|t| self.tenant_tokens.get(t))
+                .copied()
+                .unwrap_or(0.0);
+            if let Some(shed) = admission_decision(
+                &self.slo,
+                &req.class,
+                prompt_tokens,
+                self.batch_queued,
+                projected_wait_ms(&loads, self.observed_queue_p95_s()),
+                tenant_out,
+                self.tenant_total,
+            ) {
+                self.shed_requests += 1;
+                return Err(shed_error(&req.class, &shed));
+            }
+        }
         // resolve the affinity owner: deepest registered chain entry for
         // `directory` (with hit-tier accounting), leading block for
         // `prefix_affinity`
@@ -624,10 +843,43 @@ impl<B: Backend> Router<B> {
                 }
             }
         }
+        let debit = AdmitDebit {
+            batch: !req.class.priority.is_interactive(),
+            tenant: req.class.tenant.clone(),
+            prompt_tokens: prompt_tokens as f64,
+        };
         let id = self.replicas[choice].submit(req)?;
         self.outstanding[choice] += cost;
+        if debit.batch {
+            self.batch_queued += 1;
+        }
+        if let Some(t) = &debit.tenant {
+            *self.tenant_tokens.entry(t.clone()).or_insert(0.0) += debit.prompt_tokens;
+            self.tenant_total += debit.prompt_tokens;
+        }
+        self.admitted.insert((choice, id), debit);
         self.routed.push((choice, id));
         Ok((choice, id))
+    }
+
+    /// Release one finished request's admission debits (its batch-queue
+    /// slot and tenant prefill tokens) — called wherever a result comes
+    /// back, so cancellations and failures release exactly like
+    /// successes.
+    fn settle(&mut self, key: (usize, SeqId)) {
+        let Some(d) = self.admitted.remove(&key) else { return };
+        if d.batch {
+            self.batch_queued = self.batch_queued.saturating_sub(1);
+        }
+        if let Some(t) = &d.tenant {
+            if let Some(v) = self.tenant_tokens.get_mut(t) {
+                *v = (*v - d.prompt_tokens).max(0.0);
+                if *v <= 0.0 {
+                    self.tenant_tokens.remove(t);
+                }
+            }
+            self.tenant_total = (self.tenant_total - d.prompt_tokens).max(0.0);
+        }
     }
 
     /// Step every replica once (and dispatch any parked hand-offs),
@@ -644,6 +896,7 @@ impl<B: Backend> Router<B> {
             // parked sequences wait on dispatch, not stepping
             if self.replicas[i].num_pending() > self.replicas[i].num_migrating() {
                 for r in self.replicas[i].step()? {
+                    self.settle((i, r.id));
                     self.completed.insert((i, r.id), r);
                 }
             }
@@ -692,6 +945,11 @@ impl<B: Backend> Router<B> {
                         *slot = (j, new_id);
                     }
                 }
+                // the admission debit follows the sequence to its
+                // destination so settle() finds it under the new key
+                if let Some(d) = self.admitted.remove(&(i, id)) {
+                    self.admitted.insert((j, new_id), d);
+                }
                 moved = true;
             }
         }
@@ -709,8 +967,9 @@ impl<B: Backend> Router<B> {
             std::mem::take(&mut self.completed);
         let pd_active = self.roles.iter().any(|&r| r != ReplicaRole::Mixed);
         if !pd_active {
-            for (i, engine) in self.replicas.iter_mut().enumerate() {
-                for r in engine.run_to_completion()? {
+            for i in 0..self.replicas.len() {
+                for r in self.replicas[i].run_to_completion()? {
+                    self.settle((i, r.id));
                     by_key.insert((i, r.id), r);
                 }
                 self.outstanding[i] = 0.0;
@@ -725,6 +984,7 @@ impl<B: Backend> Router<B> {
                     // parked sequences wait on dispatch, not stepping
                     if self.replicas[i].num_pending() > self.replicas[i].num_migrating() {
                         for r in self.replicas[i].step()? {
+                            self.settle((i, r.id));
                             by_key.insert((i, r.id), r);
                         }
                         progressed = true;
@@ -813,6 +1073,11 @@ struct RouteState {
     /// skipped snapshot merely loses its deltas (stale-safe)
     last_delta_seq: Vec<u64>,
     outstanding: Vec<f64>,
+    /// admitted-but-unfinished batch requests (the bounded batch queue)
+    batch_queued: usize,
+    /// outstanding prefill tokens per tenant, and their cluster total
+    tenant_tokens: HashMap<String, f64>,
+    tenant_total: f64,
 }
 
 /// Cluster keys summed across replica snapshots for the aggregated
@@ -853,6 +1118,7 @@ const CLUSTER_SUM_KEYS: &[&str] = &[
     "prefix_pull_blocks_out",
     "prefix_pull_stale",
     "proactive_swap_outs",
+    "deadline_cancellations",
 ];
 
 /// Threaded N-replica front-end: each replica is an [`EngineHandle`]
@@ -871,6 +1137,12 @@ pub struct RouterHandle {
     /// hand-off pricing inputs; `None` (N = 1 wrapper) prices every
     /// prefill-heavy hand-off as paying
     pricing: Option<(CostModel, OptConfig)>,
+    /// SLO admission knobs ([`RouterHandle::with_slo`]); default off
+    slo: SloConfig,
+    /// requests refused by the admission controller
+    shed_requests: AtomicU64,
+    /// failed requests re-routed once to a surviving replica
+    router_retries: AtomicU64,
     state: Mutex<RouteState>,
 }
 
@@ -922,11 +1194,17 @@ impl RouterHandle {
             block_size: geometry.block_size,
             affinity_threshold,
             pricing,
+            slo: SloConfig::default(),
+            shed_requests: AtomicU64::new(0),
+            router_retries: AtomicU64::new(0),
             state: Mutex::new(RouteState {
                 rr_next: 0,
                 directory: PrefixDirectory::new(DIRECTORY_CAP),
                 last_delta_seq: vec![0; n],
                 outstanding: vec![0.0; n],
+                batch_queued: 0,
+                tenant_tokens: HashMap::new(),
+                tenant_total: 0.0,
             }),
         }
     }
@@ -947,13 +1225,36 @@ impl RouterHandle {
             block_size: 16,
             affinity_threshold: 1.0,
             pricing: None,
+            slo: SloConfig::default(),
+            shed_requests: AtomicU64::new(0),
+            router_retries: AtomicU64::new(0),
             state: Mutex::new(RouteState {
                 rr_next: 0,
                 directory: PrefixDirectory::new(DIRECTORY_CAP),
                 last_delta_seq: vec![0],
                 outstanding: vec![0.0],
+                batch_queued: 0,
+                tenant_tokens: HashMap::new(),
+                tenant_total: 0.0,
             }),
         }
+    }
+
+    /// Set the SLO admission knobs (the serve path passes the engine
+    /// config's [`SloConfig`] through; default leaves admission off).
+    pub fn with_slo(mut self, slo: SloConfig) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    /// Requests refused by the admission controller so far.
+    pub fn shed_requests(&self) -> u64 {
+        self.shed_requests.load(Ordering::Relaxed)
+    }
+
+    /// Failed requests re-routed once to a surviving replica.
+    pub fn router_retries(&self) -> u64 {
+        self.router_retries.load(Ordering::Relaxed)
     }
 
     /// Drop the cost-model gate on hand-off placement: every
@@ -1060,19 +1361,56 @@ impl RouterHandle {
             .collect()
     }
 
+    /// The cluster's observed queue-wait p95 (merged across replica
+    /// snapshots) — the admission controller's memory of past queueing.
+    fn observed_queue_p95_s(&self) -> f64 {
+        let mut merged = LatencyHist::new();
+        for r in self.replicas.iter() {
+            if let Some(h) = json::parse(&r.handle.snapshot().json)
+                .ok()
+                .as_ref()
+                .and_then(|v| v.get("hist"))
+                .and_then(|h| h.get("queue_wall"))
+                .and_then(LatencyHist::from_json)
+            {
+                merged.merge(&h);
+            }
+        }
+        if merged.count() > 0 {
+            merged.p95()
+        } else {
+            0.0
+        }
+    }
+
+    /// Is any replica other than `failed` alive and in rotation?  Gates
+    /// the one-shot retry: with nowhere else to go the client gets the
+    /// original engine error, not a useless re-route failure.
+    fn another_routable(&self, failed: usize) -> bool {
+        self.replicas.iter().enumerate().any(|(j, r)| {
+            j != failed && r.handle.is_alive() && !r.draining.load(Ordering::Relaxed)
+        })
+    }
+
     /// Route one request and generate through the chosen replica
     /// (blocking, like [`EngineHandle::generate`]).  With PD roles
     /// assigned, a prefill-heavy request whose hand-off pays starts on
     /// a prefill replica; the reply then comes from whichever replica
-    /// the sequence migrated to.
+    /// the sequence migrated to.  With [`SloConfig::admission`] on the
+    /// request first passes the admission controller and may be shed
+    /// (`Err` starting with [`SHED_MARKER`]); a request whose replica
+    /// fails under it is re-routed once to a surviving replica.
     pub fn generate(&self, req: GenRequest) -> Result<GenResult> {
         let roles = self.roles_vec();
         let pd_active = roles.iter().any(|&r| r != ReplicaRole::Mixed);
         // round-robin reads neither the cost estimate nor the prefix
         // key, so it skips the router-side tokenization entirely — but
-        // PD placement needs the prompt length, so roles force it on
+        // PD placement needs the prompt length, and admission the
+        // tenant's prefill tokens, so either forces it on
         let (cost, chain, prompt_tokens) = match self.policy {
-            RouterPolicy::RoundRobin if !pd_active => (0.0, Vec::new(), 0),
+            RouterPolicy::RoundRobin if !pd_active && !self.slo.admission => {
+                (0.0, Vec::new(), 0)
+            }
             _ => {
                 let tokens = self.tokenizer.encode(&req.prompt, true, false);
                 let chain = match self.policy {
@@ -1093,117 +1431,189 @@ impl RouterHandle {
                 )
             }
         };
-        let (choice, pull_plan) = {
-            // recover a poisoned lock: the routing state is plain
-            // bookkeeping (cursor, directory, token estimates), valid
-            // whatever a panicking thread was doing.  Propagating the
-            // poison would wedge every subsequent request permanently.
-            let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
-            let st = &mut *guard;
-            if self.policy == RouterPolicy::Directory {
-                // fold each replica's newly-published prefix deltas into
-                // the directory (eventual consistency over the snapshot
-                // channel; a skipped snapshot's deltas are lost, which
-                // only makes the directory staler, never wrong)
-                for (i, r) in self.replicas.iter().enumerate() {
-                    let snap = r.handle.snapshot();
-                    if snap.seq > st.last_delta_seq[i] {
-                        for d in &snap.prefix_deltas {
-                            st.directory.apply(i, *d);
+        let observed_queue_p95_s = if self.slo.admission {
+            self.observed_queue_p95_s()
+        } else {
+            0.0
+        };
+        // `exclude` is the replica that already failed this request:
+        // `None` on the first attempt, `Some` on the single retry
+        let mut exclude: Option<usize> = None;
+        loop {
+            let (choice, pull_plan) = {
+                // recover a poisoned lock: the routing state is plain
+                // bookkeeping (cursor, directory, token estimates), valid
+                // whatever a panicking thread was doing.  Propagating the
+                // poison would wedge every subsequent request permanently.
+                let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
+                let st = &mut *guard;
+                if self.policy == RouterPolicy::Directory {
+                    // fold each replica's newly-published prefix deltas into
+                    // the directory (eventual consistency over the snapshot
+                    // channel; a skipped snapshot's deltas are lost, which
+                    // only makes the directory staler, never wrong)
+                    for (i, r) in self.replicas.iter().enumerate() {
+                        let snap = r.handle.snapshot();
+                        if snap.seq > st.last_delta_seq[i] {
+                            for d in &snap.prefix_deltas {
+                                st.directory.apply(i, *d);
+                            }
+                            st.last_delta_seq[i] = snap.seq;
                         }
-                        st.last_delta_seq[i] = snap.seq;
                     }
                 }
-            }
-            let loads = self.loads(&st.outstanding);
-            let probe = match self.policy {
-                RouterPolicy::Directory => st.directory.probe_longest(&chain),
-                RouterPolicy::PrefixAffinity => chain
-                    .first()
-                    .and_then(|&h| st.directory.owner_of(h))
-                    .map(|r| (1, r, Tier::Device)),
-                _ => None,
-            };
-            let owner = probe
-                .map(|(_, r, _)| r)
-                .filter(|&r| r < loads.len());
-            let picked = if pd_active {
-                let to_prefill = handoff_pays(
-                    self.pricing.as_ref(),
-                    self.block_size,
-                    prompt_tokens,
-                    req.max_new_tokens,
-                );
-                pick_replica_pd(
-                    self.policy,
-                    &loads,
-                    &roles,
-                    to_prefill,
-                    owner,
-                    &mut st.rr_next,
-                    cost,
-                    self.affinity_threshold,
-                )
-            } else {
-                pick_replica(
-                    self.policy,
-                    &loads,
-                    owner,
-                    &mut st.rr_next,
-                    cost,
-                    self.affinity_threshold,
-                )
-            };
-            let Some(c) = picked else {
-                bail!("no routable replica (all draining or dead)");
-            };
-            if let Some(&h) = chain.first() {
-                let alive: Vec<bool> = loads.iter().map(|l| l.healthy).collect();
-                st.directory.register(h, c, &alive);
-            }
-            // plan a cross-replica pull while holding the lock, execute
-            // it after release: the export/commit round-trips block on
-            // the engine threads and must not serialize all routing
-            let pull_plan = match (self.policy, probe) {
-                (RouterPolicy::Directory, Some((depth, owner, tier)))
-                    if owner != c && owner < self.replicas.len() =>
-                {
-                    let pays = match &self.pricing {
-                        Some((cm, opt)) => cm.prefix_pull_pays(
-                            depth,
-                            depth * self.block_size,
-                            tier == Tier::Host,
-                            opt,
-                        ),
-                        None => true,
-                    };
-                    pays.then_some((depth, owner))
+                let mut loads = self.loads(&st.outstanding);
+                if let Some(x) = exclude {
+                    // the replica that just failed this request is no
+                    // candidate for its retry
+                    loads[x].healthy = false;
                 }
-                _ => None,
+                if self.slo.admission && exclude.is_none() {
+                    let tenant_out = req
+                        .class
+                        .tenant
+                        .as_deref()
+                        .and_then(|t| st.tenant_tokens.get(t))
+                        .copied()
+                        .unwrap_or(0.0);
+                    if let Some(shed) = admission_decision(
+                        &self.slo,
+                        &req.class,
+                        prompt_tokens,
+                        st.batch_queued,
+                        projected_wait_ms(&loads, observed_queue_p95_s),
+                        tenant_out,
+                        st.tenant_total,
+                    ) {
+                        self.shed_requests.fetch_add(1, Ordering::Relaxed);
+                        return Err(shed_error(&req.class, &shed));
+                    }
+                }
+                let probe = match self.policy {
+                    RouterPolicy::Directory => st.directory.probe_longest(&chain),
+                    RouterPolicy::PrefixAffinity => chain
+                        .first()
+                        .and_then(|&h| st.directory.owner_of(h))
+                        .map(|r| (1, r, Tier::Device)),
+                    _ => None,
+                };
+                let owner = probe
+                    .map(|(_, r, _)| r)
+                    .filter(|&r| r < loads.len());
+                let picked = if pd_active {
+                    let to_prefill = handoff_pays(
+                        self.pricing.as_ref(),
+                        self.block_size,
+                        prompt_tokens,
+                        req.max_new_tokens,
+                    );
+                    pick_replica_pd(
+                        self.policy,
+                        &loads,
+                        &roles,
+                        to_prefill,
+                        owner,
+                        &mut st.rr_next,
+                        cost,
+                        self.affinity_threshold,
+                    )
+                } else {
+                    pick_replica(
+                        self.policy,
+                        &loads,
+                        owner,
+                        &mut st.rr_next,
+                        cost,
+                        self.affinity_threshold,
+                    )
+                };
+                let Some(c) = picked else {
+                    bail!("no routable replica (all draining or dead)");
+                };
+                if let Some(&h) = chain.first() {
+                    let alive: Vec<bool> = loads.iter().map(|l| l.healthy).collect();
+                    st.directory.register(h, c, &alive);
+                }
+                // plan a cross-replica pull while holding the lock, execute
+                // it after release: the export/commit round-trips block on
+                // the engine threads and must not serialize all routing
+                let pull_plan = match (self.policy, probe) {
+                    (RouterPolicy::Directory, Some((depth, owner, tier)))
+                        if owner != c && owner < self.replicas.len() =>
+                    {
+                        let pays = match &self.pricing {
+                            Some((cm, opt)) => cm.prefix_pull_pays(
+                                depth,
+                                depth * self.block_size,
+                                tier == Tier::Host,
+                                opt,
+                            ),
+                            None => true,
+                        };
+                        pays.then_some((depth, owner))
+                    }
+                    _ => None,
+                };
+                st.outstanding[c] += cost;
+                if !req.class.priority.is_interactive() {
+                    st.batch_queued += 1;
+                }
+                if let Some(t) = &req.class.tenant {
+                    *st.tenant_tokens.entry(t.clone()).or_insert(0.0) +=
+                        prompt_tokens as f64;
+                    st.tenant_total += prompt_tokens as f64;
+                }
+                (c, pull_plan)
             };
-            st.outstanding[c] += cost;
-            (c, pull_plan)
-        };
-        // cross-replica prefix pull: move the owner's warm chain through
-        // the host-tier envelope before prefill starts.  Best-effort —
-        // any failure (dead owner, nothing exportable) falls back to
-        // re-prefilling the whole prompt, exact by construction.
-        if let Some((depth, owner)) = pull_plan {
-            if let Ok(pull) = self.replicas[owner].handle.export_prefix(chain[..depth].to_vec())
-            {
-                let _ = self.replicas[choice].handle.pull_commit(pull);
+            // cross-replica prefix pull: move the owner's warm chain through
+            // the host-tier envelope before prefill starts.  Best-effort —
+            // any failure (dead owner, nothing exportable) falls back to
+            // re-prefilling the whole prompt, exact by construction.
+            if let Some((depth, owner)) = pull_plan {
+                if let Ok(pull) = self.replicas[owner].handle.export_prefix(chain[..depth].to_vec())
+                {
+                    let _ = self.replicas[choice].handle.pull_commit(pull);
+                }
+            }
+            self.replicas[choice].in_flight.fetch_add(1, Ordering::Relaxed);
+            let result = self.replicas[choice].handle.generate(req.clone());
+            self.replicas[choice].in_flight.fetch_sub(1, Ordering::Relaxed);
+            // same poison recovery as the routing path above: the two must
+            // agree, or one panicking thread leaks its outstanding-token
+            // estimate forever and biases least_loaded away from the replica
+            let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            st.outstanding[choice] = (st.outstanding[choice] - cost).max(0.0);
+            if !req.class.priority.is_interactive() {
+                st.batch_queued = st.batch_queued.saturating_sub(1);
+            }
+            if let Some(t) = &req.class.tenant {
+                let tok = prompt_tokens as f64;
+                if let Some(v) = st.tenant_tokens.get_mut(t) {
+                    *v = (*v - tok).max(0.0);
+                    if *v <= 0.0 {
+                        st.tenant_tokens.remove(t);
+                    }
+                }
+                st.tenant_total = (st.tenant_total - tok).max(0.0);
+            }
+            drop(st);
+            match result {
+                // the serving replica failed under the request and a
+                // surviving replica can take it: re-route exactly once
+                Err(e)
+                    if exclude.is_none()
+                        && is_replica_failure(&e)
+                        && self.another_routable(choice) =>
+                {
+                    self.router_retries.fetch_add(1, Ordering::Relaxed);
+                    crate::log_info!(
+                        "router: replica {choice} failed a request ({e}); retrying once"
+                    );
+                    exclude = Some(choice);
+                }
+                other => return other,
             }
         }
-        self.replicas[choice].in_flight.fetch_add(1, Ordering::Relaxed);
-        let result = self.replicas[choice].handle.generate(req);
-        self.replicas[choice].in_flight.fetch_sub(1, Ordering::Relaxed);
-        // same poison recovery as the routing path above: the two must
-        // agree, or one panicking thread leaks its outstanding-token
-        // estimate forever and biases least_loaded away from the replica
-        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
-        st.outstanding[choice] = (st.outstanding[choice] - cost).max(0.0);
-        drop(st);
-        result
     }
 
     /// The `GET /metrics` payload: for N = 1 the single replica's
@@ -1229,6 +1639,16 @@ impl RouterHandle {
         };
         top.insert("num_replicas", self.replicas.len());
         top.insert("router_policy", self.policy.name());
+        // router-level overload counters (these live above any replica)
+        top.insert("shed_requests", self.shed_requests() as usize);
+        top.insert("router_retries", self.router_retries() as usize);
+        top.insert(
+            "batch_queue_depth",
+            self.state
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .batch_queued,
+        );
         let role_names: Vec<Value> = self
             .roles_vec()
             .into_iter()
@@ -1614,6 +2034,34 @@ fn cluster_aggregate(parsed: &[Value]) -> Object {
         hists.insert(key, merged.to_json());
     }
     o.insert("hist", Value::Object(hists));
+    // same merge per priority class: exact cluster-wide per-class
+    // percentiles (`interactive_ttft_wall_p99_s`, ...) plus the nested
+    // histograms the Prometheus exposition labels `class="..."`
+    let mut by_class = Object::new();
+    for class in ["interactive", "batch"] {
+        let mut ch = Object::new();
+        for key in ["ttft_wall", "e2e_wall", "itl_sim", "queue_wall"] {
+            let mut merged = LatencyHist::new();
+            for v in parsed {
+                if let Some(h) = v
+                    .get("hist_class")
+                    .and_then(|c| c.get(class))
+                    .and_then(|c| c.get(key))
+                    .and_then(LatencyHist::from_json)
+                {
+                    merged.merge(&h);
+                }
+            }
+            if merged.count() > 0 {
+                o.insert(format!("{class}_{key}_p50_s"), merged.p50());
+                o.insert(format!("{class}_{key}_p95_s"), merged.p95());
+                o.insert(format!("{class}_{key}_p99_s"), merged.p99());
+            }
+            ch.insert(key, merged.to_json());
+        }
+        by_class.insert(class, Value::Object(ch));
+    }
+    o.insert("hist_class", Value::Object(by_class));
     o
 }
 
@@ -1903,6 +2351,11 @@ mod tests {
                 );
                 assert!(v.req_usize("cache_blocks_total").unwrap() > 0);
                 assert!(v.get("replica_occupancy_spread").is_some());
+                // per-class latency hists merge into the cluster view
+                assert!(v
+                    .get("hist_class")
+                    .and_then(|c| c.get("interactive"))
+                    .is_some());
                 for r in reps {
                     assert!(r.req_usize("seq").unwrap() > 0);
                     assert!(r.req_bool("healthy").unwrap());
@@ -1953,6 +2406,156 @@ mod tests {
     fn request_cost_estimate_weighs_decode_heavier() {
         assert!(request_cost_estimate(10, 10) > request_cost_estimate(30, 4));
         assert_eq!(request_cost_estimate(0, 0), 0.0);
+    }
+
+    // ---- SLO admission control --------------------------------------------
+
+    #[test]
+    fn admission_sheds_batch_before_interactive() {
+        let slo = SloConfig {
+            admission: true,
+            interactive_ttft_ms: 100,
+            ..SloConfig::default()
+        };
+        let b = ReqClass::batch();
+        let i = ReqClass::interactive();
+        // admission off: never sheds, whatever the books say
+        let off = SloConfig::default();
+        assert!(admission_decision(&off, &b, 50, 999, 1e9, 0.0, 0.0).is_none());
+        // bounded batch queue
+        let full = admission_decision(&slo, &b, 50, slo.max_batch_queue, 0.0, 0.0, 0.0).unwrap();
+        assert_eq!(full.reason, "batch queue full");
+        assert!(full.retry_after_ms > 0, "sheds carry a client back-off");
+        // projected wait over the interactive budget sheds batch...
+        assert!(admission_decision(&slo, &b, 50, 0, 101.0, 0.0, 0.0).is_some());
+        assert!(admission_decision(&slo, &b, 50, 0, 99.0, 0.0, 0.0).is_none());
+        // ...but interactive is admitted while any batch is queued,
+        // however bad the wait — the shed-ordering invariant
+        assert!(admission_decision(&slo, &i, 50, 1, 1e12, 0.0, 0.0).is_none());
+        // interactive sheds only with no batch left to displace AND the
+        // budget already blown
+        assert!(admission_decision(&slo, &i, 50, 0, 101.0, 0.0, 0.0).is_some());
+        assert!(admission_decision(&slo, &i, 50, 0, 99.0, 0.0, 0.0).is_none());
+        // tenant cap: a batch tenant over its outstanding-prefill share
+        // sheds only while other tenants hold work
+        let bt = ReqClass::batch().with_tenant("t0");
+        assert!(admission_decision(&slo, &bt, 100, 0, 0.0, 90.0, 100.0).is_some());
+        assert!(
+            admission_decision(&slo, &bt, 100, 0, 0.0, 90.0, 90.0).is_none(),
+            "a sole tenant saturating an idle cluster is utilization"
+        );
+        assert!(admission_decision(&slo, &bt, 20, 0, 0.0, 10.0, 100.0).is_none());
+        // untenanted batch skips the cap entirely
+        assert!(admission_decision(&slo, &b, 100, 0, 0.0, 90.0, 100.0).is_none());
+    }
+
+    #[test]
+    fn projected_wait_scales_with_best_score_and_observed_tail() {
+        let mut ls = loads(2);
+        ls[0].outstanding_tokens = 400.0;
+        ls[1].outstanding_tokens = 100.0;
+        // the request lands on the best replica, so its score drives
+        assert!((projected_wait_ms(&ls, 0.0) - 100.0 * SLO_MS_PER_TOKEN).abs() < 1e-9);
+        // the observed queue-wait p95 floors the projection
+        assert!((projected_wait_ms(&ls, 0.5) - 500.0).abs() < 1e-9);
+        ls[0].draining = true;
+        ls[1].healthy = false;
+        assert_eq!(projected_wait_ms(&ls, 0.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn sync_router_sheds_batch_and_releases_books() {
+        let slo = SloConfig {
+            admission: true,
+            max_batch_queue: 1,
+            ..SloConfig::default()
+        };
+        let mut router = Router::new(vec![mock_engine(), mock_engine()], RouterPolicy::LeastLoaded)
+            .with_slo(slo);
+        let breq = |i: usize| {
+            GenRequest::greedy(format!("batch work {i}"), 3)
+                .with_class(ReqClass::batch().with_tenant("acme"))
+        };
+        // the first batch request takes the single bounded-queue slot
+        router.submit(breq(0)).unwrap();
+        assert_eq!(router.batch_queue_depth(), 1);
+        // the second is shed with the parseable 429 convention
+        let err = router.submit(breq(1)).unwrap_err().to_string();
+        assert!(err.starts_with(SHED_MARKER), "{err}");
+        assert!(
+            err.contains("class=batch") && err.contains("retry_after_ms="),
+            "{err}"
+        );
+        assert_eq!(router.shed_requests(), 1);
+        // interactive is never bounded by the batch queue
+        router
+            .submit(GenRequest::greedy("interactive user", 3))
+            .unwrap();
+        let results = router.run_to_completion().unwrap();
+        assert_eq!(results.len(), 2);
+        // completion releases the batch slot and the tenant's tokens
+        assert_eq!(router.batch_queue_depth(), 0);
+        assert!(router.tenant_total.abs() < 1e-9);
+        assert!(router.tenant_tokens.is_empty());
+        router.submit(breq(2)).unwrap();
+        router.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn router_handle_sheds_batch_and_serves_interactive() {
+        let slo = SloConfig {
+            admission: true,
+            max_batch_queue: 0,
+            ..SloConfig::default()
+        };
+        let router = RouterHandle::spawn(
+            vec![mock_engine(), mock_engine()],
+            RouterPolicy::LeastLoaded,
+        )
+        .with_slo(slo);
+        let err = router
+            .generate(GenRequest::greedy("bulk job", 3).with_class(ReqClass::batch()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.starts_with(SHED_MARKER), "{err}");
+        assert!(err.contains("retry_after_ms="), "{err}");
+        assert_eq!(router.shed_requests(), 1);
+        // interactive traffic still serves on the idle cluster
+        let r = router.generate(GenRequest::greedy("chat turn", 3)).unwrap();
+        assert_eq!(r.generated_tokens, 3);
+        // the shed left no residue in the books, and the counters reach
+        // the cluster metrics view
+        for o in router.outstanding_estimates() {
+            assert!(o.abs() < 1e-9);
+        }
+        let v = json::parse(&router.metrics_json()).unwrap();
+        assert_eq!(v.req_usize("shed_requests").unwrap(), 1);
+        assert_eq!(v.req_usize("router_retries").unwrap(), 0);
+        assert_eq!(v.req_usize("batch_queue_depth").unwrap(), 0);
+    }
+
+    #[test]
+    fn replica_fault_retries_once_to_surviving_replica() {
+        let mk = |fail| {
+            Engine::new(
+                FlakyDecode { inner: MockBackend::new().with_opt(COOPT), fail },
+                EngineConfig::new("llama-7b-sim", COOPT),
+            )
+        };
+        // the flaky replica sits at index 0 so the idle-cluster
+        // tie-break routes the first request straight into the fault
+        let router = RouterHandle::spawn(vec![mk(true), mk(false)], RouterPolicy::LeastLoaded);
+        let r = router
+            .generate(GenRequest::greedy("survives the fault", 3))
+            .unwrap();
+        assert_eq!(r.generated_tokens, 3, "client sees success, not the fault");
+        assert_eq!(router.router_retries(), 1);
+        // books balanced across both attempts
+        let st = router.status();
+        assert_eq!(st[0].in_flight + st[1].in_flight, 0);
+        for o in router.outstanding_estimates() {
+            assert!(o.abs() < 1e-9, "outstanding estimate leaked: {o}");
+        }
     }
 
     // ---- disaggregated prefill/decode -------------------------------------
@@ -2171,6 +2774,11 @@ mod tests {
             .generate(GenRequest::greedy("doomed request", 3))
             .unwrap_err();
         assert!(err.to_string().contains("engine error"), "{err}");
+        assert_eq!(
+            router.router_retries(),
+            0,
+            "no surviving routable replica: the original error comes back"
+        );
         // the failure leaves no residue in the router's books: the
         // in-flight gauges and outstanding estimates return to balance,
         // so least-loaded placement is never permanently biased

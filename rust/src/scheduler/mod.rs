@@ -37,7 +37,7 @@
 
 use std::collections::VecDeque;
 
-use crate::config::OptConfig;
+use crate::config::{OptConfig, Priority};
 use crate::kvcache::{CacheManager, SeqId};
 
 /// Scheduler's view of a sequence.
@@ -50,6 +50,9 @@ struct Entry {
     prefill_done: usize,
     /// admission order stamp (for preemption: newest goes first)
     admitted_at: u64,
+    /// SLO class: interactive outranks batch in the waiting/swapped
+    /// orderings, and batch lanes are the preferred preemption victims
+    class: Priority,
 }
 
 /// One prefill window planned for this round.
@@ -118,6 +121,10 @@ pub struct Scheduler {
     /// chunked prefill on/off + per-chunk cap
     chunked: bool,
     chunk_tokens: usize,
+    /// fraction of the post-decode prefill budget reserved for
+    /// interactive sequences while any interactive prefill is pending
+    /// (SLO overload control; 0 = no split)
+    interactive_reserve: f64,
     stamp: u64,
     pub total_preemptions: u64,
     pub total_admissions: u64,
@@ -140,6 +147,7 @@ impl Scheduler {
             plain_lanes: Vec::new(),
             chunked: false,
             chunk_tokens: 32,
+            interactive_reserve: 0.0,
             stamp: 0,
             total_preemptions: 0,
             total_admissions: 0,
@@ -158,6 +166,15 @@ impl Scheduler {
     pub fn with_chunked_prefill(mut self, chunk_tokens: usize) -> Self {
         self.chunked = true;
         self.chunk_tokens = chunk_tokens.max(1);
+        self
+    }
+
+    /// Reserve a fraction of the post-decode prefill budget for
+    /// interactive sequences while any interactive prefill is pending,
+    /// so a batch prefill burst cannot starve interactive TTFT (clamped
+    /// to `0.0..=0.9`; 0 disables the split).
+    pub fn with_interactive_reserve(mut self, frac: f64) -> Self {
+        self.interactive_reserve = frac.clamp(0.0, 0.9);
         self
     }
 
@@ -207,14 +224,47 @@ impl Scheduler {
         self.chunked
     }
 
-    /// Enqueue a new request (prompt not yet in cache).
+    /// Enqueue a new request (prompt not yet in cache) in the default
+    /// (interactive) class.
     pub fn submit(&mut self, id: SeqId, prompt_len: usize) {
+        self.submit_class(id, prompt_len, Priority::Interactive);
+    }
+
+    /// Enqueue a new request with an explicit SLO class.  Interactive
+    /// entries outrank batch ones at admission time; FCFS holds within a
+    /// class.
+    pub fn submit_class(&mut self, id: SeqId, prompt_len: usize, class: Priority) {
         self.waiting.push_back(Entry {
             id,
             prefix_len: prompt_len,
             prefill_done: 0,
             admitted_at: 0,
+            class,
         });
+    }
+
+    /// Next admission candidate: the oldest waiting interactive entry,
+    /// else the queue head.  (Two-level ordering: class first, FCFS
+    /// within a class; an all-one-class queue degenerates to plain FCFS.)
+    fn next_waiting_idx(&self) -> Option<usize> {
+        if self.waiting.is_empty() {
+            return None;
+        }
+        self.waiting
+            .iter()
+            .position(|e| e.class.is_interactive())
+            .or(Some(0))
+    }
+
+    /// SLO class of a tracked sequence (any state), if known.
+    pub fn class_of(&self, id: SeqId) -> Option<Priority> {
+        self.running
+            .iter()
+            .chain(self.waiting.iter())
+            .chain(self.swapped.iter())
+            .chain(self.migrating.iter())
+            .find(|e| e.id == id)
+            .map(|e| e.class)
     }
 
     pub fn num_waiting(&self) -> usize {
@@ -265,6 +315,10 @@ impl Scheduler {
     /// Remove a finished sequence from the running (or swapped/migrating)
     /// set.
     pub fn finish(&mut self, id: SeqId) {
+        // waiting too: deadline enforcement can cancel a request that was
+        // never admitted, and a ghost waiting entry would be re-admitted
+        // with no sequence behind it
+        self.waiting.retain(|e| e.id != id);
         self.running.retain(|e| e.id != id);
         self.swapped.retain(|e| e.id != id);
         self.migrating.retain(|e| e.id != id);
@@ -289,11 +343,12 @@ impl Scheduler {
         // the host tier, its resume gets the freed blocks, not a new
         // admission — otherwise sustained traffic starves it forever.
         if self.swapped.is_empty() && self.running.len() < self.max_batch {
-            if let Some(front) = self.waiting.front() {
+            if let Some(idx) = self.next_waiting_idx() {
+                let front = &self.waiting[idx];
                 if front.prefix_len <= self.step_token_budget
                     && cache.can_admit(front.prefix_len, opt)
                 {
-                    let mut e = self.waiting.pop_front().unwrap();
+                    let mut e = self.waiting.remove(idx).unwrap();
                     self.stamp += 1;
                     e.admitted_at = self.stamp;
                     // whole prompt lands this round
@@ -352,22 +407,48 @@ impl Scheduler {
             remaining = 1;
         }
 
-        // 3. continue partially-prefilled sequences, oldest first
+        // SLO prefill split: while any interactive prefill is pending,
+        // batch sequences may spend at most (1 - reserve) of the
+        // post-decode budget, so a batch prefill burst cannot starve
+        // interactive TTFT.  With no interactive work pending (or reserve
+        // 0) batch gets the whole budget and nothing changes.
+        let interactive_pending = self
+            .waiting
+            .iter()
+            .any(|e| e.class.is_interactive())
+            || self
+                .running
+                .iter()
+                .any(|e| e.class.is_interactive() && e.prefill_done < e.prefix_len);
+        let mut batch_remaining = if self.interactive_reserve > 0.0 && interactive_pending {
+            ((remaining as f64) * (1.0 - self.interactive_reserve)).floor() as usize
+        } else {
+            remaining
+        };
+
+        // 3. continue partially-prefilled sequences: interactive first,
+        // then oldest first within a class
         let mut mid: Vec<usize> = (0..self.running.len())
             .filter(|&i| self.running[i].prefill_done < self.running[i].prefix_len)
             .collect();
-        mid.sort_by_key(|&i| self.running[i].admitted_at);
+        mid.sort_by_key(|&i| {
+            (
+                !self.running[i].class.is_interactive(),
+                self.running[i].admitted_at,
+            )
+        });
         for i in mid {
             if remaining == 0 {
                 break;
             }
             let e = &self.running[i];
-            let take = chunk_span(
-                e.prefill_done,
-                e.prefix_len,
-                self.chunk_tokens.min(remaining),
-                bs,
-            );
+            let is_batch = !e.class.is_interactive();
+            let cap = if is_batch {
+                self.chunk_tokens.min(remaining).min(batch_remaining)
+            } else {
+                self.chunk_tokens.min(remaining)
+            };
+            let take = chunk_span(e.prefill_done, e.prefix_len, cap, bs);
             if take == 0 {
                 continue;
             }
@@ -379,25 +460,38 @@ impl Scheduler {
             });
             self.total_chunks += 1;
             remaining -= take;
+            if is_batch {
+                batch_remaining = batch_remaining.saturating_sub(take);
+            }
         }
 
-        // 4. admit waiting sequences while batch headroom and budget
-        // remain — unless sequences sit in the host tier: swapped
-        // outranks waiting (running > swapped > waiting), so their
-        // prefetch gets the freed blocks first
+        // 4. admit waiting sequences (interactive outranking batch) while
+        // batch headroom and budget remain — unless sequences sit in the
+        // host tier: swapped outranks waiting (running > swapped >
+        // waiting), so their prefetch gets the freed blocks first
         while self.swapped.is_empty() && remaining > 0 && self.running.len() < self.max_batch {
-            let Some(front) = self.waiting.front() else { break };
+            let Some(idx) = self.next_waiting_idx() else { break };
+            let front = &self.waiting[idx];
+            let is_batch = !front.class.is_interactive();
+            if is_batch && batch_remaining == 0 {
+                break;
+            }
             // the whole prompt must eventually fit the pool, and the first
             // window must fit right now
             let whole_blocks = cache.blocks_needed_prefill(front.prefix_len, opt) + 1;
             if whole_blocks > cache.geometry.num_pool_blocks {
                 break;
             }
-            let take = chunk_span(0, front.prefix_len, self.chunk_tokens.min(remaining), bs);
+            let cap = if is_batch {
+                self.chunk_tokens.min(remaining).min(batch_remaining)
+            } else {
+                self.chunk_tokens.min(remaining)
+            };
+            let take = chunk_span(0, front.prefix_len, cap, bs);
             if take == 0 || !cache.can_admit_tokens(take, opt) {
                 break;
             }
-            let mut e = self.waiting.pop_front().unwrap();
+            let mut e = self.waiting.remove(idx).unwrap();
             self.stamp += 1;
             e.admitted_at = self.stamp;
             e.prefill_done = 0;
@@ -410,18 +504,26 @@ impl Scheduler {
             self.total_admissions += 1;
             self.total_chunks += 1;
             remaining -= take;
+            if is_batch {
+                batch_remaining = batch_remaining.saturating_sub(take);
+            }
             d.admitted.push(e.id);
             self.running.push(e);
         }
         d
     }
 
-    /// The sequence preemption would evict next (newest admission), with
-    /// nothing moved yet — the engine decides swap vs drop per victim.
+    /// The sequence preemption would evict next, with nothing moved yet —
+    /// the engine decides swap vs drop per victim.  Batch lanes are the
+    /// preferred victims (newest batch admission first); only an
+    /// all-interactive batch falls back to the classic newest-admission
+    /// order, so interactive KV survives overload longest.
     pub fn peek_preempt_victim(&self) -> Option<SeqId> {
         self.running
             .iter()
+            .filter(|e| !e.class.is_interactive())
             .max_by_key(|e| e.admitted_at)
+            .or_else(|| self.running.iter().max_by_key(|e| e.admitted_at))
             .map(|e| e.id)
     }
 
@@ -490,12 +592,17 @@ impl Scheduler {
         true
     }
 
-    /// Swapped sequence ids, oldest admission first (the prefetch order).
+    /// Swapped sequence ids in prefetch order: interactive before batch,
+    /// oldest admission first within a class — swapped-out interactive
+    /// work resumes ahead of parked batch work.
     pub fn swapped_ids(&self) -> Vec<SeqId> {
-        let mut v: Vec<(u64, SeqId)> =
-            self.swapped.iter().map(|e| (e.admitted_at, e.id)).collect();
+        let mut v: Vec<(bool, u64, SeqId)> = self
+            .swapped
+            .iter()
+            .map(|e| (!e.class.is_interactive(), e.admitted_at, e.id))
+            .collect();
         v.sort_unstable();
-        v.into_iter().map(|(_, id)| id).collect()
+        v.into_iter().map(|(_, _, id)| id).collect()
     }
 
     // --- PD disaggregation: the `Migrating` hand-off state -----------------
@@ -538,14 +645,16 @@ impl Scheduler {
 
     /// Admit a migrated-in sequence on the destination replica, already
     /// prefilled through `prefix_len` tokens: it joins `running`
-    /// decode-ready at its exact committed offset (no re-prefill).
-    pub fn admit_migrated(&mut self, id: SeqId, prefix_len: usize) {
+    /// decode-ready at its exact committed offset (no re-prefill).  The
+    /// hand-off envelope carries the SLO class across replicas.
+    pub fn admit_migrated(&mut self, id: SeqId, prefix_len: usize, class: Priority) {
         self.stamp += 1;
         self.running.push(Entry {
             id,
             prefix_len,
             prefill_done: prefix_len,
             admitted_at: self.stamp,
+            class,
         });
         self.total_admissions += 1;
     }
@@ -1108,7 +1217,7 @@ mod tests {
         let c = roomy_cache();
         // a sequence arrives mid-stream from another replica, already
         // committed through 13 tokens
-        s.admit_migrated(7, 13);
+        s.admit_migrated(7, 13, Priority::Interactive);
         assert_eq!(s.num_running(), 1);
         assert_eq!(s.prefill_progress(7), Some(13));
         assert_eq!(s.decode_ready_ids(), vec![7]);
@@ -1120,6 +1229,125 @@ mod tests {
         assert!(s.begin_migration(7));
         s.finish(7);
         assert!(s.is_idle());
+    }
+
+    #[test]
+    fn batch_lanes_are_preferred_preemption_victims() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        // admission order: interactive 1, batch 2, interactive 3 — the
+        // victim must be the batch lane even though 3 is newer
+        s.submit_class(1, 4, Priority::Interactive);
+        s.schedule(&c, &COOPT);
+        s.submit_class(2, 4, Priority::Batch);
+        s.schedule(&c, &COOPT);
+        s.submit_class(3, 4, Priority::Interactive);
+        s.schedule(&c, &COOPT);
+        assert_eq!(s.num_running(), 3);
+        assert_eq!(s.peek_preempt_victim(), Some(2), "newest batch goes first");
+        assert!(s.preempt_drop(2, 4));
+        // all-interactive: classic newest-admission order
+        assert_eq!(s.peek_preempt_victim(), Some(3));
+        assert_eq!(s.class_of(2), Some(Priority::Batch), "class survives requeue");
+        assert_eq!(s.class_of(3), Some(Priority::Interactive));
+    }
+
+    #[test]
+    fn interactive_outranks_batch_at_admission() {
+        // batch head-of-line: a waiting interactive request is admitted
+        // past older batch arrivals, FCFS within each class
+        for chunked in [false, true] {
+            let c = roomy_cache();
+            let mut s = Scheduler::new(1).with_step_budget(64);
+            if chunked {
+                s = s.with_chunked_prefill(8);
+            }
+            s.submit_class(1, 4, Priority::Batch);
+            s.submit_class(2, 4, Priority::Batch);
+            s.submit_class(3, 4, Priority::Interactive);
+            s.submit_class(4, 4, Priority::Interactive);
+            let mut order = Vec::new();
+            for _ in 0..12 {
+                let d = apply(&mut s, &c);
+                order.extend(d.admitted.iter().copied());
+                for &id in &d.admitted {
+                    s.finish(id); // free the single batch slot
+                }
+                if order.len() == 4 {
+                    break;
+                }
+            }
+            assert_eq!(order, vec![3, 4, 1, 2], "chunked={chunked}");
+        }
+    }
+
+    #[test]
+    fn swapped_resume_order_is_interactive_first() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        s.submit_class(1, 4, Priority::Batch);
+        s.schedule(&c, &COOPT);
+        s.submit_class(2, 4, Priority::Interactive);
+        s.schedule(&c, &COOPT);
+        s.submit_class(3, 4, Priority::Interactive);
+        s.schedule(&c, &COOPT);
+        assert!(s.preempt_swap(3));
+        assert!(s.preempt_swap(1));
+        assert!(s.preempt_swap(2));
+        // interactive (2, 3 by stamp) resume ahead of the older batch 1
+        assert_eq!(s.swapped_ids(), vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn interactive_reserve_caps_batch_prefill_share() {
+        // 20-token budget, reserve 0.5: while the interactive prompt is
+        // mid-prefill, batch windows may take at most 10 tokens per round
+        let mut s = Scheduler::new(4)
+            .with_step_budget(20)
+            .with_chunked_prefill(16)
+            .with_interactive_reserve(0.5);
+        let c = roomy_cache();
+        s.submit_class(1, 40, Priority::Batch);
+        s.submit_class(2, 40, Priority::Interactive);
+        let d = apply(&mut s, &c);
+        let batch_tokens: usize = d
+            .prefills
+            .iter()
+            .filter(|w| w.id == 1)
+            .map(|w| w.tokens)
+            .sum();
+        let inter_tokens: usize = d
+            .prefills
+            .iter()
+            .filter(|w| w.id == 2)
+            .map(|w| w.tokens)
+            .sum();
+        assert!(inter_tokens > 0, "interactive prefill progresses");
+        assert!(
+            batch_tokens <= 10,
+            "batch took {batch_tokens} of a 20-token budget under a 0.5 reserve"
+        );
+        // interactive windows are planned before batch ones
+        let first_ids: Vec<SeqId> = d.prefills.iter().map(|w| w.id).collect();
+        assert_eq!(first_ids.first(), Some(&2));
+        // once no interactive prefill is pending, batch gets the whole
+        // budget again
+        while s.prefill_progress(2) != Some(40) {
+            apply(&mut s, &c);
+        }
+        let d = apply(&mut s, &c);
+        let batch_tokens: usize = d
+            .prefills
+            .iter()
+            .filter(|w| w.id == 1)
+            .map(|w| w.tokens)
+            .sum();
+        // budget 20 minus the decode reserve for seq 2, batch uncapped
+        assert!(
+            batch_tokens > 10,
+            "reserve must lift when no interactive prefill is pending \
+             (batch got {batch_tokens})"
+        );
     }
 
     #[test]

@@ -42,10 +42,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::ReplicaRole;
+use crate::config::{Priority, ReplicaRole, ReqClass};
 use crate::coordinator::{Engine, GenRequest, GenResult, PrefixPull, SeqHandoff};
 use crate::kvcache::PrefixDelta;
-use crate::router::RouterHandle;
+use crate::router::{RouterHandle, SHED_MARKER};
 use crate::runtime::Backend;
 use crate::sampling::SamplingParams;
 use crate::util::json::{self, Object, Value};
@@ -635,9 +635,15 @@ fn handle_connection(mut stream: TcpStream, handle: &RouterHandle) -> Result<()>
     }
     let body = String::from_utf8_lossy(&body).into_owned();
 
-    let (status, content_type, payload) = route(&method, &path, &body, handle);
+    let (status, content_type, payload, retry_after_ms) = route(&method, &path, &body, handle);
+    // overload responses (429 shed, 503 unavailable) tell clients when
+    // to come back; HTTP Retry-After is whole seconds, rounded up
+    let retry_header = match retry_after_ms {
+        Some(ms) => format!("Retry-After: {}\r\n", ms.div_ceil(1000).max(1)),
+        None => String::new(),
+    };
     let resp = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{payload}",
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{retry_header}Connection: close\r\n\r\n{payload}",
         payload.len()
     );
     stream.write_all(resp.as_bytes())?;
@@ -658,12 +664,17 @@ fn query_param(query: &str, key: &str) -> Option<String> {
     })
 }
 
+/// How long clients should wait before retrying when the cluster has no
+/// routable replica (all drained / dead) — drains are operator actions
+/// measured in seconds, not the sub-second admission-control horizon.
+const UNAVAILABLE_RETRY_MS: u64 = 1000;
+
 fn route(
     method: &str,
     raw_path: &str,
     body: &str,
     handle: &RouterHandle,
-) -> (&'static str, &'static str, String) {
+) -> (&'static str, &'static str, String, Option<u64>) {
     // the request line carries the query string; endpoints match on the
     // bare path and read parameters out of `query`
     let (path, query) = raw_path.split_once('?').unwrap_or((raw_path, ""));
@@ -688,38 +699,70 @@ fn route(
                 })
                 .collect();
             o.insert("replicas", Value::Array(reps));
-            ("200 OK", CT_JSON, Value::Object(o).to_string())
+            ("200 OK", CT_JSON, Value::Object(o).to_string(), None)
         }
         ("GET", "/metrics") if query_param(query, "format").as_deref() == Some("prometheus") => {
             let v = json::parse(&handle.metrics_json()).unwrap_or(Value::Null);
-            ("200 OK", CT_PROM, crate::obs::prometheus_text(&v))
+            ("200 OK", CT_PROM, crate::obs::prometheus_text(&v), None)
         }
-        ("GET", "/metrics") => ("200 OK", CT_JSON, handle.metrics_json()),
+        ("GET", "/metrics") => ("200 OK", CT_JSON, handle.metrics_json(), None),
         ("GET", "/admin/trace") => match trace_route(query, handle) {
-            Ok(p) => ("200 OK", CT_JSON, p),
-            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p, None),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e), None),
         },
         ("POST", "/v1/generate") => match generate_route(body, handle) {
-            Ok(p) => ("200 OK", CT_JSON, p),
-            Err(e) if is_unavailable(&e) => ("503 Service Unavailable", CT_JSON, error_json(&e)),
-            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p, None),
+            Err(e) if is_shed(&e) => {
+                // admission-controller refusal: 429 with the shed
+                // decision's own retry horizon, parsed back out of the
+                // string-encoded error (the vendored anyhow has no
+                // downcast)
+                let retry = msg_field(&e.to_string(), "retry_after_ms")
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .unwrap_or(UNAVAILABLE_RETRY_MS);
+                let class = msg_field(&e.to_string(), "class")
+                    .unwrap_or_else(|| "batch".to_string());
+                (
+                    "429 Too Many Requests",
+                    CT_JSON,
+                    overload_json(&e, &class, retry),
+                    Some(retry),
+                )
+            }
+            Err(e) if is_unavailable(&e) => {
+                // nothing routable / replica died: 503, class echoed
+                // from the request so clients can tell whose traffic
+                // was turned away
+                let class = json::parse(body)
+                    .ok()
+                    .and_then(|v| v.get("class").and_then(|c| c.as_str().map(String::from)))
+                    .unwrap_or_else(|| Priority::default().name().to_string());
+                (
+                    "503 Service Unavailable",
+                    CT_JSON,
+                    overload_json(&e, &class, UNAVAILABLE_RETRY_MS),
+                    Some(UNAVAILABLE_RETRY_MS),
+                )
+            }
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e), None),
         },
         ("POST", "/admin/drain") => match drain_route(body, handle, true) {
-            Ok(p) => ("200 OK", CT_JSON, p),
-            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p, None),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e), None),
         },
         ("POST", "/admin/undrain") => match drain_route(body, handle, false) {
-            Ok(p) => ("200 OK", CT_JSON, p),
-            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p, None),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e), None),
         },
         ("POST", "/admin/role") => match role_route(body, handle) {
-            Ok(p) => ("200 OK", CT_JSON, p),
-            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e)),
+            Ok(p) => ("200 OK", CT_JSON, p, None),
+            Err(e) => ("400 Bad Request", CT_JSON, error_json(&e), None),
         },
         _ => (
             "404 Not Found",
             CT_JSON,
             error_json(&anyhow!("no route {method} {path}")),
+            None,
         ),
     }
 }
@@ -807,12 +850,39 @@ fn generate_route(body: &str, handle: &RouterHandle) -> Result<String> {
                 .to_string(),
         ),
     };
+    // SLO class: `class` (interactive|batch, default interactive so
+    // untagged traffic keeps pre-SLO behaviour), optional `deadline_ms`
+    // wall budget, optional `tenant` for per-tenant admission shares
+    let priority = match v.get("class") {
+        None | Some(Value::Null) => Priority::default(),
+        Some(c) => Priority::parse(
+            c.as_str().ok_or_else(|| anyhow!("\"class\" must be a string"))?,
+        )?,
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        None | Some(Value::Null) => None,
+        Some(d) => Some(
+            d.as_usize()
+                .ok_or_else(|| anyhow!("\"deadline_ms\" must be a non-negative integer"))?
+                as u64,
+        ),
+    };
+    let tenant = match v.get("tenant") {
+        None | Some(Value::Null) => None,
+        Some(t) => Some(
+            t.as_str()
+                .ok_or_else(|| anyhow!("\"tenant\" must be a string"))?
+                .to_string(),
+        ),
+    };
+    let class = ReqClass { priority, deadline_ms, tenant };
     let result = handle.generate(GenRequest {
         prompt,
         max_new_tokens: max_new,
         sampling,
         ignore_eos: v.get("ignore_eos").and_then(|x| x.as_bool()).unwrap_or(false),
         corr_id,
+        class,
     })?;
     let mut o = Object::new();
     o.insert("id", result.id as usize);
@@ -821,6 +891,13 @@ fn generate_route(body: &str, handle: &RouterHandle) -> Result<String> {
     }
     o.insert("text", result.text.as_str());
     o.insert("finish", format!("{:?}", result.finish));
+    o.insert("class", result.class.priority.name());
+    if let Some(d) = result.class.deadline_ms {
+        o.insert("deadline_ms", d as usize);
+    }
+    if let Some(t) = &result.class.tenant {
+        o.insert("tenant", t.as_str());
+    }
     o.insert("prompt_tokens", result.prompt_tokens);
     o.insert("generated_tokens", result.generated_tokens);
     o.insert("latency_s", result.latency_s);
@@ -843,9 +920,36 @@ fn is_unavailable(e: &anyhow::Error) -> bool {
         || s.contains("engine error")
 }
 
+/// Admission-controller refusals are 429 (the client did nothing wrong;
+/// the cluster is protecting its interactive SLO) and carry their own
+/// retry horizon.  The router string-encodes the decision — see
+/// [`crate::router::SHED_MARKER`].
+fn is_shed(e: &anyhow::Error) -> bool {
+    e.to_string().starts_with(SHED_MARKER)
+}
+
+/// Extract `key=value` out of a whitespace-separated message — how shed
+/// errors carry their class and retry horizon without error downcasting.
+fn msg_field(s: &str, key: &str) -> Option<String> {
+    s.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key)?.strip_prefix('=').map(String::from))
+}
+
 fn error_json(e: &anyhow::Error) -> String {
     let mut o = Object::new();
     o.insert("error", format!("{e:#}"));
+    Value::Object(o).to_string()
+}
+
+/// Structured overload body: keeps the `error` key every client already
+/// reads, adds the priority class whose traffic was refused and the
+/// machine-readable retry horizon (milliseconds; the `Retry-After`
+/// header carries the same value rounded up to whole seconds).
+fn overload_json(e: &anyhow::Error, class: &str, retry_after_ms: u64) -> String {
+    let mut o = Object::new();
+    o.insert("error", format!("{e:#}"));
+    o.insert("class", class);
+    o.insert("retry_after_ms", retry_after_ms as usize);
     Value::Object(o).to_string()
 }
 
@@ -888,6 +992,19 @@ impl Client {
         Ok(v)
     }
 
+    /// POST capturing the `Retry-After` response header (seconds) next
+    /// to the parsed body — how overload tests and well-behaved clients
+    /// read the 429/503 backoff contract.
+    pub fn post_for_retry(
+        &self,
+        path: &str,
+        body: &Value,
+    ) -> Result<(u16, Option<u64>, Value)> {
+        let (status, retry_after, body) =
+            self.request_full("POST", path, Some(body.to_string()))?;
+        Ok((status, retry_after, json::parse(&body)?))
+    }
+
     fn request(&self, method: &str, path: &str, body: Option<String>) -> Result<(u16, Value)> {
         let (status, body) = self.request_raw(method, path, body)?;
         Ok((status, json::parse(&body)?))
@@ -899,6 +1016,16 @@ impl Client {
         path: &str,
         body: Option<String>,
     ) -> Result<(u16, String)> {
+        let (status, _, body) = self.request_full(method, path, body)?;
+        Ok((status, body))
+    }
+
+    fn request_full(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<String>,
+    ) -> Result<(u16, Option<u64>, String)> {
         let mut stream = TcpStream::connect(&self.addr)
             .with_context(|| format!("connecting {}", self.addr))?;
         stream.set_read_timeout(Some(Duration::from_secs(120)))?;
@@ -918,19 +1045,24 @@ impl Client {
             .and_then(|s| s.parse().ok())
             .ok_or_else(|| anyhow!("bad status line '{status_line}'"))?;
         let mut content_length = 0usize;
+        let mut retry_after = None;
         loop {
             let mut h = String::new();
             reader.read_line(&mut h)?;
             if h.trim().is_empty() {
                 break;
             }
-            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            let lower = h.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
                 content_length = v.trim().parse().unwrap_or(0);
+            }
+            if let Some(v) = lower.strip_prefix("retry-after:") {
+                retry_after = v.trim().parse::<u64>().ok();
             }
         }
         let mut body = vec![0u8; content_length];
         reader.read_exact(&mut body)?;
-        Ok((status, String::from_utf8_lossy(&body).into_owned()))
+        Ok((status, retry_after, String::from_utf8_lossy(&body).into_owned()))
     }
 }
 
@@ -1158,6 +1290,78 @@ mod tests {
         for msg in ["invalid JSON body", "prompt must be non-empty", "empty prompt"] {
             assert!(!is_unavailable(&anyhow!("{msg}")), "{msg} must stay 400");
         }
+    }
+
+    #[test]
+    fn overload_responses_carry_retry_after() {
+        use crate::config::SloConfig;
+        // max_batch_queue 0: every batch-class request is shed at
+        // admission while interactive traffic still serves
+        let engine = Engine::new(MockBackend::new(), EngineConfig::new("llama-7b-sim", COOPT));
+        let router = RouterHandle::single(EngineHandle::spawn(engine)).with_slo(SloConfig {
+            admission: true,
+            max_batch_queue: 0,
+            ..SloConfig::default()
+        });
+        let server = Server::bind_router("127.0.0.1:0", router, 4).unwrap();
+        let client = Client::new(server.addr.to_string());
+        let stop = server.stop_flag();
+        let srv = std::thread::spawn(move || server.serve().unwrap());
+
+        // interactive request with the full class triple: served, and
+        // the response echoes class / deadline_ms / tenant back
+        let mut req = Object::new();
+        req.insert("prompt", "interactive under slo");
+        req.insert("max_new_tokens", 3usize);
+        req.insert("class", "interactive");
+        req.insert("deadline_ms", 60_000usize);
+        req.insert("tenant", "acme");
+        let (code, retry, v) = client.post_for_retry("/v1/generate", &Value::Object(req)).unwrap();
+        assert_eq!(code, 200);
+        assert!(retry.is_none(), "success responses carry no Retry-After");
+        assert_eq!(v.req_str("class").unwrap(), "interactive");
+        assert_eq!(v.req_usize("deadline_ms").unwrap(), 60_000);
+        assert_eq!(v.req_str("tenant").unwrap(), "acme");
+        assert_eq!(v.req_usize("generated_tokens").unwrap(), 3);
+
+        // batch request: shed with 429, Retry-After header, and the
+        // structured {"error","class","retry_after_ms"} body
+        let mut req = Object::new();
+        req.insert("prompt", "batch refused");
+        req.insert("class", "batch");
+        let (code, retry, e) = client.post_for_retry("/v1/generate", &Value::Object(req)).unwrap();
+        assert_eq!(code, 429);
+        assert!(retry.unwrap() >= 1, "Retry-After rounds up to whole seconds");
+        assert!(e.req_str("error").unwrap().starts_with(SHED_MARKER));
+        assert_eq!(e.req_str("class").unwrap(), "batch");
+        assert!(e.req_usize("retry_after_ms").unwrap() > 0);
+
+        // unknown class name is the client's mistake: 400, no header
+        let mut req = Object::new();
+        req.insert("prompt", "mislabeled");
+        req.insert("class", "urgent");
+        let (code, retry, e) = client.post_for_retry("/v1/generate", &Value::Object(req)).unwrap();
+        assert_eq!(code, 400);
+        assert!(retry.is_none());
+        assert!(e.req_str("error").unwrap().contains("unknown priority class"));
+
+        // drain the only replica: 503 keeps the legacy error text and
+        // gains the same structured overload contract
+        let mut body = Object::new();
+        body.insert("replica", 0usize);
+        client.post("/admin/drain", &Value::Object(body)).unwrap();
+        let mut req = Object::new();
+        req.insert("prompt", "nowhere to go");
+        req.insert("class", "interactive");
+        let (code, retry, e) = client.post_for_retry("/v1/generate", &Value::Object(req)).unwrap();
+        assert_eq!(code, 503);
+        assert_eq!(retry, Some(1));
+        assert!(e.req_str("error").unwrap().contains("no routable replica"));
+        assert_eq!(e.req_str("class").unwrap(), "interactive");
+        assert_eq!(e.req_usize("retry_after_ms").unwrap(), UNAVAILABLE_RETRY_MS as usize);
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().unwrap();
     }
 
     #[test]

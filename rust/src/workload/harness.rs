@@ -4,13 +4,14 @@
 
 use anyhow::Result;
 
-use crate::config::{EngineConfig, OptConfig};
+use crate::config::{EngineConfig, OptConfig, ReqClass};
 use crate::coordinator::{Engine, GenRequest};
 use crate::platform::CostModel;
 use crate::runtime::{Backend, Runtime};
 use crate::util::json::{Object, Value};
 use crate::workload::{
-    multi_tenant_trace, pd_trace, sharegpt_trace, MultiTenantSpec, PdTraceSpec, TraceSpec,
+    multi_tenant_trace, pd_trace, sharegpt_trace, slo_classes, MultiTenantSpec, PdTraceSpec,
+    SloMix, TraceSpec,
 };
 
 /// One row of Fig. 6 / Fig. 7.
@@ -81,6 +82,7 @@ pub fn run_trace(
             // fixed token counts across configs => clean Eq. 11/12 deltas
             ignore_eos: true,
             corr_id: None,
+            class: ReqClass::default(),
         })?;
     }
     engine.run_to_completion()?;
@@ -653,6 +655,7 @@ pub fn run_router_compare(
                     // fixed token counts across policies => clean deltas
                     ignore_eos: true,
                     corr_id: None,
+                    class: ReqClass::default(),
                 })?;
             }
             let results = router.run_to_completion()?;
@@ -757,6 +760,7 @@ pub fn run_global_prefix_reuse(
             // fixed token counts across policies => clean Eq. 12 deltas
             ignore_eos: true,
             corr_id: None,
+            class: ReqClass::default(),
         })
         .collect();
     let tokenizer = Tokenizer::new();
@@ -892,6 +896,7 @@ pub fn run_pd_compare(spec: &PdTraceSpec) -> Result<Vec<Value>> {
             // fixed token counts across modes => clean ITL deltas
             ignore_eos: true,
             corr_id: None,
+            class: ReqClass::default(),
         })
         .collect();
     // token-identity reference: one unconstrained engine, no tiering
@@ -1024,6 +1029,7 @@ pub fn run_observability_compare(spec: &MultiTenantSpec) -> Result<Vec<Value>> {
             ignore_eos: true,
             // exercise correlation ids end-to-end in the traced run
             corr_id: Some(format!("mt/req-{i}")),
+            class: ReqClass::default(),
         })
         .collect();
 
@@ -1095,6 +1101,244 @@ pub fn run_observability_compare(spec: &MultiTenantSpec) -> Result<Vec<Value>> {
     };
     if let Value::Object(o) = &mut rows[0] {
         o.insert("sim_throughput_ratio", ratio);
+    }
+    Ok(rows)
+}
+
+/// Exact percentile over raw samples (sorted in place).  The SLO bench
+/// gates strict on-vs-off inequalities, so it wants exact order
+/// statistics rather than [`crate::metrics::LatencyHist`]'s log-bucket
+/// approximation.
+fn pctile(vals: &mut [f64], q: f64) -> f64 {
+    if vals.is_empty() {
+        return 0.0;
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((vals.len() as f64 - 1.0) * q).round() as usize;
+    vals[idx.min(vals.len() - 1)]
+}
+
+/// SLO-aware overload control under ~2x-capacity traffic: the Zipfian
+/// multi-tenant trace ([`crate::workload::multi_tenant_trace`]) with the
+/// 1:3 interactive:batch class mix ([`crate::workload::slo_classes`])
+/// driven open-loop (two cluster steps per arrival) into a single
+/// replica whose KV pool and decode lanes are halved — offered work is
+/// roughly twice what the replica drains, so a queue *must* build.  The
+/// trace runs twice:
+///
+/// * **slo_on** — requests carry their classes, the router admission
+///   controller sheds batch work (bounded batch queue + projected-wait
+///   + per-tenant share), the scheduler serves interactive first and
+///   picks batch lanes as preemption victims, and deadline enforcement
+///   cancels the expired-head batch requests at a step boundary;
+/// * **slo_off** — the same offered work untagged (every request
+///   defaults to interactive, no deadlines): the exact pre-SLO
+///   first-come-first-served behaviour.
+///
+/// Every served request is checked against an unconstrained
+/// single-engine reference: normally-finished requests must be
+/// token-identical, deadline-cancelled ones must be a strict prefix
+/// (greedy decode is placement- and schedule-invariant, so overload
+/// control may decide *whether/when* a request runs, never *what* it
+/// generates).  Rows carry per-class wall TTFT/ITL/E2E order statistics
+/// plus the shed/cancellation ledger; CI gates interactive tails
+/// strictly better with control on, batch degradation bounded, and the
+/// conservation law offered = completed + shed + expired per class.
+pub fn run_slo_overload(spec: &MultiTenantSpec, mix: &SloMix) -> Result<Vec<Value>> {
+    use crate::config::{CacheGeometry, RouterPolicy, SloConfig, COOPT};
+    use crate::coordinator::FinishReason;
+    use crate::router::{Router, SHED_MARKER};
+    use crate::runtime::mock::MockBackend;
+
+    let trace = multi_tenant_trace(spec);
+    let classes = slo_classes(&trace, mix);
+    let n = trace.len();
+    let plain: Vec<GenRequest> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, req)| GenRequest {
+            prompt: req.prompt.clone(),
+            max_new_tokens: req.max_new_tokens,
+            sampling: req.sampling,
+            // fixed token counts across modes => clean tail deltas
+            ignore_eos: true,
+            // the index rides in the correlation id: shed requests never
+            // produce a result, so positional alignment cannot work
+            corr_id: Some(format!("slo/{i}")),
+            class: ReqClass::default(),
+        })
+        .collect();
+    // token-identity reference: one unconstrained engine, default
+    // geometry, untagged
+    let mut reference = Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    );
+    let base: Vec<Vec<u32>> = reference
+        .generate(plain.clone())?
+        .into_iter()
+        .map(|r| r.tokens)
+        .collect();
+
+    // undersized serving replica: half the KV pool, half the decode
+    // lanes of the reference geometry — the paced arrivals offer about
+    // twice what this replica can drain
+    let tight = CacheGeometry {
+        num_pool_blocks: 48,
+        max_batch: 4,
+        ..CacheGeometry::default()
+    };
+    const STEPS_PER_ARRIVAL: usize = 2;
+    let slo = SloConfig {
+        admission: true,
+        interactive_ttft_ms: 2000,
+        interactive_prefill_reserve: 0.5,
+        tenant_share: 0.9,
+        max_batch_queue: 8,
+    };
+
+    let mut rows = Vec::new();
+    for control_on in [true, false] {
+        let cfg = if control_on {
+            EngineConfig::new("llama-7b-sim", COOPT)
+                .with_slo_admission(true)
+                .with_interactive_ttft_ms(slo.interactive_ttft_ms)
+                .with_interactive_prefill_reserve(slo.interactive_prefill_reserve)
+        } else {
+            EngineConfig::new("llama-7b-sim", COOPT)
+        };
+        let engine = Engine::new(
+            PoolSized {
+                inner: MockBackend::new().with_opt(COOPT),
+                geometry: tight,
+            },
+            cfg,
+        );
+        let mut router = Router::new(vec![engine], RouterPolicy::LeastLoaded);
+        if control_on {
+            router = router.with_slo(slo);
+        }
+        let mut shed_idx: Vec<usize> = Vec::new();
+        for (i, req) in plain.iter().enumerate() {
+            let mut req = req.clone();
+            if control_on {
+                req.class = classes[i].clone();
+            }
+            match router.submit(req) {
+                Ok(_) => {}
+                Err(e) if e.to_string().starts_with(SHED_MARKER) => shed_idx.push(i),
+                Err(e) => return Err(e),
+            }
+            for _ in 0..STEPS_PER_ARRIVAL {
+                router.step_all()?;
+            }
+        }
+        let results = router.run_to_completion()?;
+        let mut finished: Vec<Option<crate::coordinator::GenResult>> = vec![None; n];
+        for r in results {
+            let idx = r
+                .result
+                .corr_id
+                .as_deref()
+                .and_then(|c| c.strip_prefix("slo/"))
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| anyhow::anyhow!("result lost its slo/<i> correlation id"))?;
+            match r.result.finish {
+                FinishReason::DeadlineExceeded => {
+                    if !base[idx].starts_with(&r.result.tokens) {
+                        anyhow::bail!("cancelled request {idx} diverged from the reference");
+                    }
+                }
+                _ => {
+                    if r.result.tokens != base[idx] {
+                        anyhow::bail!("overload control changed outputs at request {idx}");
+                    }
+                }
+            }
+            finished[idx] = Some(r.result);
+        }
+
+        let (mut int_offered, mut batch_offered) = (0usize, 0usize);
+        let (mut int_completed, mut batch_completed) = (0usize, 0usize);
+        let (mut int_shed, mut batch_shed) = (0usize, 0usize);
+        let (mut int_expired, mut batch_expired) = (0usize, 0usize);
+        let (mut ttft_i, mut itl_i, mut e2e_b) = (Vec::new(), Vec::new(), Vec::new());
+        for (i, class) in classes.iter().enumerate() {
+            let interactive = class.priority.is_interactive();
+            if interactive {
+                int_offered += 1;
+            } else {
+                batch_offered += 1;
+            }
+            if shed_idx.contains(&i) {
+                if interactive {
+                    int_shed += 1;
+                } else {
+                    batch_shed += 1;
+                }
+                continue;
+            }
+            let Some(r) = &finished[i] else {
+                anyhow::bail!("request {i} neither shed nor finished (leaked)");
+            };
+            if r.finish == FinishReason::DeadlineExceeded {
+                if interactive {
+                    int_expired += 1;
+                } else {
+                    batch_expired += 1;
+                }
+                continue;
+            }
+            if interactive {
+                int_completed += 1;
+                ttft_i.push(r.ttft_s);
+                if r.generated_tokens >= 2 {
+                    itl_i.push((r.latency_s - r.ttft_s) / (r.generated_tokens - 1) as f64);
+                }
+            } else {
+                batch_completed += 1;
+                e2e_b.push(r.latency_s);
+            }
+        }
+        // conservation per class: nothing vanishes, nothing double-counts
+        if int_completed + int_shed + int_expired != int_offered
+            || batch_completed + batch_shed + batch_expired != batch_offered
+        {
+            anyhow::bail!(
+                "class conservation violated: interactive {int_completed}+{int_shed}+\
+                 {int_expired} != {int_offered} or batch {batch_completed}+{batch_shed}+\
+                 {batch_expired} != {batch_offered}"
+            );
+        }
+        let (mut cancels, mut preemptions, mut tokens) = (0u64, 0u64, 0u64);
+        for e in router.replicas() {
+            cancels += e.metrics.deadline_cancellations;
+            preemptions += e.metrics.preemptions;
+            tokens += e.metrics.tokens_generated;
+        }
+        let mut o = Object::new();
+        o.insert("mode", if control_on { "slo_on" } else { "slo_off" });
+        o.insert("control", control_on);
+        o.insert("replicas", 1usize);
+        o.insert("steps_per_arrival", STEPS_PER_ARRIVAL);
+        o.insert("offered", n);
+        o.insert("shed_requests", router.shed_requests() as usize);
+        o.insert("deadline_cancellations", cancels as usize);
+        o.insert("preemptions", preemptions as usize);
+        o.insert("tokens", tokens as usize);
+        o.insert("interactive_offered", int_offered);
+        o.insert("interactive_completed", int_completed);
+        o.insert("interactive_shed", int_shed);
+        o.insert("interactive_expired", int_expired);
+        o.insert("interactive_ttft_wall_p99_s", pctile(&mut ttft_i, 0.99));
+        o.insert("interactive_itl_wall_p95_s", pctile(&mut itl_i, 0.95));
+        o.insert("batch_offered", batch_offered);
+        o.insert("batch_completed", batch_completed);
+        o.insert("batch_shed", batch_shed);
+        o.insert("batch_expired", batch_expired);
+        o.insert("batch_e2e_wall_p95_s", pctile(&mut e2e_b, 0.95));
+        o.insert("token_identical", true);
+        rows.push(Value::Object(o));
     }
     Ok(rows)
 }

@@ -12,6 +12,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::config::ReqClass;
 use crate::sampling::SamplingParams;
 use crate::util::json;
 use crate::util::rng::Rng;
@@ -200,6 +201,71 @@ pub fn multi_tenant_trace(spec: &MultiTenantSpec) -> Vec<TraceRequest> {
                 max_new_tokens: new,
                 sampling: SamplingParams::default(),
             }
+        })
+        .collect()
+}
+
+/// SLO class mix layered over a trace (see [`slo_classes`]): which
+/// positions are interactive, which carry deadlines, and how tenants
+/// are attributed for per-tenant admission accounting.
+#[derive(Debug, Clone)]
+pub struct SloMix {
+    /// every N-th request is interactive (4 => the 1:3
+    /// interactive:batch mix of the overload bench); the rest are batch
+    pub interactive_every: usize,
+    /// interactive requests carry this deadline (generous — it exists
+    /// to exercise the field end-to-end, not to cancel healthy traffic)
+    pub interactive_deadline_ms: u64,
+    /// the first N *batch* requests arrive with an already-expired
+    /// deadline (client-side timeout shorter than any possible service):
+    /// deadline enforcement must cancel them at a step boundary instead
+    /// of burning capacity on answers nobody is waiting for
+    pub expired_head: usize,
+}
+
+impl Default for SloMix {
+    fn default() -> Self {
+        SloMix {
+            interactive_every: 4,
+            interactive_deadline_ms: 60_000,
+            expired_head: 3,
+        }
+    }
+}
+
+/// Assign an SLO request class to each position of a trace.  Classes
+/// are a pure function of (index, prompt), so the same trace always
+/// gets the same mix — the overload bench relies on this to compare
+/// control-on vs control-off over identical offered work.  The tenant
+/// is read back out of the multi-tenant prompt's leading `tenantN`
+/// marker ([`multi_tenant_trace`] puts it there to keep first blocks
+/// distinct); traces without the marker stay untenanted.
+pub fn slo_classes(trace: &[TraceRequest], mix: &SloMix) -> Vec<ReqClass> {
+    let every = mix.interactive_every.max(1);
+    let mut batch_seen = 0usize;
+    trace
+        .iter()
+        .enumerate()
+        .map(|(i, req)| {
+            let tenant = req
+                .prompt
+                .split_whitespace()
+                .next()
+                .filter(|t| t.starts_with("tenant"));
+            let mut class = if i % every == 0 {
+                ReqClass::interactive().with_deadline_ms(mix.interactive_deadline_ms)
+            } else {
+                batch_seen += 1;
+                if batch_seen <= mix.expired_head {
+                    ReqClass::batch().with_deadline_ms(0)
+                } else {
+                    ReqClass::batch()
+                }
+            };
+            if let Some(t) = tenant {
+                class = class.with_tenant(t);
+            }
+            class
         })
         .collect()
 }

@@ -1,0 +1,287 @@
+//! Property + acceptance tests for SLO-aware overload control.
+//!
+//! The contract under test: **overload control changes who gets served,
+//! never what the served get back.**  Under admission control, deadline
+//! enforcement, and class-aware scheduling, every request that completes
+//! normally is token-identical to an unconstrained single-engine
+//! reference; a deadline-cancelled request returns a strict prefix of
+//! its reference output.  Shedding obeys the priority contract — no
+//! interactive request is ever refused while queued batch work could be
+//! displaced instead — and neither shedding nor cancellation leaks a
+//! device block or a host slot.
+
+use llm_coopt::config::{
+    EngineConfig, ReqClass, RouterPolicy, SloConfig, COOPT,
+};
+use llm_coopt::coordinator::{Engine, FinishReason, GenRequest};
+use llm_coopt::router::{Router, SHED_MARKER};
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::util::quickprop::{check, gens};
+
+fn mock_engine() -> Engine<MockBackend> {
+    Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    )
+}
+
+fn slo_engine(slo: &SloConfig) -> Engine<MockBackend> {
+    Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT)
+            .with_slo_admission(true)
+            .with_interactive_ttft_ms(slo.interactive_ttft_ms)
+            .with_interactive_prefill_reserve(slo.interactive_prefill_reserve),
+    )
+}
+
+/// The class mix for one generated request: interleaves both priority
+/// lanes, tenant tags (exercising the share cap), and a doomed
+/// deadline-0 batch request (expired on arrival, cancelled at the first
+/// step boundary — the deterministic deadline path).
+fn class_for(p: usize, i: usize) -> ReqClass {
+    match (p + i) % 6 {
+        0 => ReqClass::interactive().with_deadline_ms(60_000),
+        1 => ReqClass::interactive(),
+        2 => ReqClass::batch().with_deadline_ms(0),
+        3 => ReqClass::batch().with_tenant(format!("t{}", p % 3)),
+        4 => ReqClass::batch()
+            .with_tenant(format!("t{}", p % 3))
+            .with_deadline_ms(120_000),
+        _ => ReqClass::batch(),
+    }
+}
+
+/// Property: 120 random overloaded traces, each replayed through a
+/// SLO-controlled router (varying policy, replica count, queue bound,
+/// TTFT budget, prefill reserve, and arrival pacing) against its
+/// unconstrained single-engine reference.  Checks, per case:
+///
+/// (a) every admitted request that finishes normally is token-identical
+///     to the reference, and every deadline-cancelled request returned
+///     a prefix of its reference tokens;
+/// (b) no interactive request is shed while the batch queue is nonzero
+///     (batch is always the preferred victim);
+/// (c) offered = completed + shed (nothing lost, nothing duplicated),
+///     and after the run every replica's device pool and host tier
+///     drain to zero — shed and cancelled requests leak nothing.
+#[test]
+fn overload_control_preserves_outputs_and_leaks_nothing() {
+    check(
+        120,
+        gens::pair(gens::vec(gens::usize_to(23), 3..=12), gens::usize_to(1000)),
+        |&(ref profile, seed): &(Vec<usize>, usize)| {
+            let n = profile.len();
+            // the index rides in the correlation id: shed requests never
+            // produce a result, so positional alignment cannot work
+            let plain: Vec<GenRequest> = profile
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| {
+                    let tenant = p % 3;
+                    let mut req = GenRequest::greedy(
+                        format!(
+                            "tenantslo{tenant} {} tail {seed} {i} {}",
+                            "s".repeat(18 + 2 * tenant),
+                            "y".repeat(p)
+                        ),
+                        2 + (p + seed) % 6,
+                    );
+                    req.corr_id = Some(format!("slo/{i}"));
+                    req
+                })
+                .collect();
+            let classes: Vec<ReqClass> = profile
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| class_for(p, i))
+                .collect();
+            // token-identity reference: one unconstrained engine, untagged
+            let mut single = mock_engine();
+            let base = single.generate(plain.clone()).unwrap();
+
+            let slo = SloConfig {
+                admission: true,
+                // slack budget sheds on the queue bound and tenant share
+                // only; the 1 ms budget exercises the projected-wait rules
+                // for both classes
+                interactive_ttft_ms: if seed % 2 == 0 { 50_000 } else { 1 },
+                interactive_prefill_reserve: if seed % 3 == 0 { 0.5 } else { 0.0 },
+                tenant_share: 0.6,
+                max_batch_queue: seed % 4,
+            };
+            let policy = RouterPolicy::ALL[seed % RouterPolicy::ALL.len()];
+            let nrep = 1 + (seed / 7) % 2;
+            let steps_per_arrival = (seed / 3) % 3;
+
+            let engines: Vec<Engine<MockBackend>> =
+                (0..nrep).map(|_| slo_engine(&slo)).collect();
+            let mut router = Router::new(engines, policy).with_slo(slo);
+            let mut shed = vec![false; n];
+            for (i, req) in plain.iter().enumerate() {
+                match router.submit(req.clone().with_class(classes[i].clone())) {
+                    Ok((replica, _)) => {
+                        if replica >= nrep {
+                            return false;
+                        }
+                    }
+                    Err(e) if e.to_string().starts_with(SHED_MARKER) => {
+                        // (b) batch is always the preferred victim: an
+                        // interactive shed requires an empty batch queue
+                        if classes[i].priority.is_interactive()
+                            && router.batch_queue_depth() != 0
+                        {
+                            return false;
+                        }
+                        shed[i] = true;
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+                for _ in 0..steps_per_arrival {
+                    router.step_all().unwrap();
+                }
+            }
+            let results = router.run_to_completion().unwrap();
+            // (c) conservation: offered = completed + shed
+            if results.len() + shed.iter().filter(|&&s| s).count() != n {
+                return false;
+            }
+            let mut seen = vec![false; n];
+            for r in &results {
+                let idx = r
+                    .result
+                    .corr_id
+                    .as_deref()
+                    .and_then(|c| c.strip_prefix("slo/"))
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .expect("result lost its slo/<i> correlation id");
+                if shed[idx] || seen[idx] {
+                    return false; // shed requests never complete; no dups
+                }
+                seen[idx] = true;
+                // (a) identity: exact for normal finishes, reference
+                // prefix for deadline cancellations
+                let ok = match r.result.finish {
+                    FinishReason::DeadlineExceeded => {
+                        base[idx].tokens.starts_with(&r.result.tokens)
+                    }
+                    _ => {
+                        r.result.tokens == base[idx].tokens
+                            && r.result.finish == base[idx].finish
+                    }
+                };
+                if !ok {
+                    return false;
+                }
+            }
+            if router.shed_requests() != shed.iter().filter(|&&s| s).count() as u64 {
+                return false;
+            }
+            // (c) nothing leaked: device pool and host tier drain to zero
+            router.replicas().iter().all(|e| {
+                e.cache_stats().blocks_used == 0
+                    && e.tier_stats().host_used_blocks == 0
+            })
+        },
+    );
+}
+
+/// Acceptance: at 4x the batch-queue bound, the burst's overflow batch
+/// work is shed while every interactive request in the same burst is
+/// admitted past the full queue.
+#[test]
+fn burst_sheds_batch_overflow_but_admits_interactive() {
+    let slo = SloConfig {
+        admission: true,
+        interactive_ttft_ms: 50_000,
+        interactive_prefill_reserve: 0.0,
+        tenant_share: 1.0,
+        max_batch_queue: 2,
+    };
+    let mut router =
+        Router::new(vec![mock_engine()], RouterPolicy::LeastLoaded).with_slo(slo);
+    let mut batch_shed = 0;
+    for i in 0..8 {
+        let req = GenRequest::greedy(format!("burst batch {i} load"), 4)
+            .with_class(ReqClass::batch());
+        match router.submit(req) {
+            Ok(_) => {}
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.starts_with(SHED_MARKER), "not a shed: {msg}");
+                assert!(msg.contains("batch queue full"), "wrong reason: {msg}");
+                assert!(msg.contains("class=batch"), "class echo missing: {msg}");
+                batch_shed += 1;
+            }
+        }
+    }
+    assert_eq!(batch_shed, 6, "queue bound 2 admits exactly two of eight");
+    // interactive jumps the full batch queue without being shed
+    for i in 0..3 {
+        router
+            .submit(
+                GenRequest::greedy(format!("urgent {i}"), 2)
+                    .with_class(ReqClass::interactive()),
+            )
+            .unwrap();
+    }
+    assert_eq!(router.shed_requests(), 6);
+    assert_eq!(router.batch_queue_depth(), 2);
+    let results = router.run_to_completion().unwrap();
+    assert_eq!(results.len(), 5, "2 admitted batch + 3 interactive");
+    assert_eq!(router.batch_queue_depth(), 0, "books settle at completion");
+    for e in router.replicas() {
+        assert_eq!(e.cache_stats().blocks_used, 0);
+        assert_eq!(e.tier_stats().host_used_blocks, 0);
+    }
+}
+
+/// Acceptance: interactive is shed only as a last resort — when the
+/// projected wait blows its own TTFT budget *and* no queued batch work
+/// is left to displace — and admission recovers once the backlog drains.
+#[test]
+fn interactive_sheds_only_as_last_resort_and_recovers() {
+    let slo = SloConfig {
+        admission: true,
+        interactive_ttft_ms: 1000,
+        interactive_prefill_reserve: 0.0,
+        tenant_share: 1.0,
+        max_batch_queue: 8,
+    };
+    let mut router =
+        Router::new(vec![mock_engine()], RouterPolicy::LeastLoaded).with_slo(slo);
+    // an idle replica admits interactive work unconditionally; this one
+    // is heavy enough (cost ≈ 80 + 5·100 tokens ⇒ projected wait well
+    // over the 1000 ms budget) to put the cluster over budget by itself
+    router
+        .submit(
+            GenRequest::greedy("warm ".repeat(80), 100)
+                .with_class(ReqClass::interactive()),
+        )
+        .unwrap();
+    // over budget with no batch queued: the last-resort rule fires
+    let e = router
+        .submit(GenRequest::greedy("too late", 2).with_class(ReqClass::interactive()))
+        .unwrap_err();
+    let msg = e.to_string();
+    assert!(msg.starts_with(SHED_MARKER), "not a shed: {msg}");
+    assert!(msg.contains("no batch to displace"), "wrong reason: {msg}");
+    assert!(msg.contains("class=interactive"), "class echo missing: {msg}");
+    // batch is refused for the same backlog, with its own reason
+    let e = router
+        .submit(GenRequest::greedy("batch too", 2).with_class(ReqClass::batch()))
+        .unwrap_err();
+    assert!(e.to_string().contains("TTFT budget"), "wrong reason: {e}");
+    assert_eq!(router.shed_requests(), 2);
+    let results = router.run_to_completion().unwrap();
+    assert_eq!(results.len(), 1);
+    // the backlog has drained: interactive admission recovers
+    router
+        .submit(GenRequest::greedy("recovered", 2).with_class(ReqClass::interactive()))
+        .unwrap();
+    assert_eq!(router.run_to_completion().unwrap().len(), 1);
+    for e in router.replicas() {
+        assert_eq!(e.cache_stats().blocks_used, 0);
+        assert_eq!(e.tier_stats().host_used_blocks, 0);
+    }
+}
