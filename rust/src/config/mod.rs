@@ -479,6 +479,62 @@ impl Default for SloConfig {
     }
 }
 
+/// Predictive-telemetry knobs (`rust/src/obs/forecast.rs`): the signal
+/// ring plus the three self-scoring estimators — per-tenant output
+/// length, arrival bursts, queue wait — and the calibration band that
+/// gates whether controllers may consume them.  The default (`enabled`
+/// off) keeps every reactive behaviour bit-identical; `--forecast`
+/// opts a deployment in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ForecastConfig {
+    /// master switch (`--forecast`): off means no sampling, no stamps,
+    /// no estimator state — the pre-forecast reactive path, exactly
+    pub enabled: bool,
+    /// bounded signal-ring capacity in step-boundary samples
+    /// (`--forecast-ring`)
+    pub ring: usize,
+    /// resolved predictions an estimator needs before its forecasts may
+    /// be consumed (`--forecast-warmup`); predictions are stamped and
+    /// scored from the first request either way
+    pub warmup: u64,
+    /// coverage band `[lo, hi]`: a length/wait estimator is consumable
+    /// only while the fraction of recent actuals landing under its
+    /// predicted bound sits inside the band
+    pub coverage_lo: f64,
+    pub coverage_hi: f64,
+    /// burst detection threshold (`--forecast-burst-ratio`): short-window
+    /// arrival rate must be at least this multiple of the long-window
+    /// rate
+    pub burst_ratio: f64,
+    /// admission tightening factor while a scored burst is active
+    /// (`--forecast-burst-tighten`): divides the batch-queue bound and
+    /// multiplies the projected wait
+    pub burst_tighten: f64,
+    /// proactive-eviction watermark (free device blocks) raised to this
+    /// floor while a scored burst is active — clears headroom ahead of
+    /// the burst even when `--evict-watermark` is lower or off
+    pub burst_watermark: usize,
+    /// EWMA smoothing for the calibration error / drain-rate /
+    /// acceptance folds
+    pub ewma_alpha: f64,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            enabled: false,
+            ring: 256,
+            warmup: 16,
+            coverage_lo: 0.8,
+            coverage_hi: 1.0,
+            burst_ratio: 2.0,
+            burst_tighten: 2.0,
+            burst_watermark: 4,
+            ewma_alpha: 0.2,
+        }
+    }
+}
+
 /// Acceptance rule for speculative decoding (draft-and-verify).
 ///
 /// Greedy requests (temperature 0) always verify by exact argmax match
@@ -690,6 +746,9 @@ pub struct EngineConfig {
     /// prefill reservation, deadline enforcement); defaults keep every
     /// pre-SLO behaviour
     pub slo: SloConfig,
+    /// predictive telemetry plane (signal ring + self-scoring length /
+    /// burst / wait estimators); defaults keep every reactive behaviour
+    pub forecast: ForecastConfig,
 }
 
 impl EngineConfig {
@@ -715,6 +774,7 @@ impl EngineConfig {
             trace_depth: 64,
             trace_sample: 1.0,
             slo: SloConfig::default(),
+            forecast: ForecastConfig::default(),
         }
     }
 
@@ -851,6 +911,54 @@ impl EngineConfig {
     /// outstanding batch requests are shed.
     pub fn with_max_batch_queue(mut self, n: usize) -> Self {
         self.slo.max_batch_queue = n.max(1);
+        self
+    }
+
+    /// Enable the predictive telemetry plane (`--forecast`).
+    pub fn with_forecast(mut self, on: bool) -> Self {
+        self.forecast.enabled = on;
+        self
+    }
+
+    /// Size the forecast signal ring (`--forecast-ring`).
+    pub fn with_forecast_ring(mut self, samples: usize) -> Self {
+        self.forecast.ring = samples.max(1);
+        self
+    }
+
+    /// Resolved predictions required before a forecast may be consumed
+    /// (`--forecast-warmup`).
+    pub fn with_forecast_warmup(mut self, n: u64) -> Self {
+        self.forecast.warmup = n.max(1);
+        self
+    }
+
+    /// Calibration coverage band `[lo, hi]` outside which controllers
+    /// fall back to the reactive path.
+    pub fn with_forecast_coverage(mut self, lo: f64, hi: f64) -> Self {
+        self.forecast.coverage_lo = lo.clamp(0.0, 1.0);
+        self.forecast.coverage_hi = hi.clamp(self.forecast.coverage_lo, 1.0);
+        self
+    }
+
+    /// Burst detection threshold (`--forecast-burst-ratio`, clamped to
+    /// `>= 1.0`): short-window arrival rate over long-window rate.
+    pub fn with_forecast_burst_ratio(mut self, r: f64) -> Self {
+        self.forecast.burst_ratio = r.max(1.0);
+        self
+    }
+
+    /// Admission tightening factor while a scored burst is active
+    /// (`--forecast-burst-tighten`, clamped to `>= 1.0`).
+    pub fn with_forecast_burst_tighten(mut self, t: f64) -> Self {
+        self.forecast.burst_tighten = t.max(1.0);
+        self
+    }
+
+    /// Proactive-eviction watermark floor while a scored burst is
+    /// active (`--forecast-burst-watermark`).
+    pub fn with_forecast_burst_watermark(mut self, blocks: usize) -> Self {
+        self.forecast.burst_watermark = blocks;
         self
     }
 }

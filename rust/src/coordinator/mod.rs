@@ -102,6 +102,7 @@ use anyhow::{bail, Result};
 use crate::config::{EngineConfig, ReplicaRole, ReqClass, SpecMode, SwapPolicy};
 use crate::kvcache::{CacheManager, SeqId};
 use crate::metrics::{EngineMetrics, RequestMetrics};
+use crate::obs::forecast::{ForecastPlane, ForecastStamp};
 use crate::obs::{trace_sampled, FlightRecorder, Phase, PhaseBreakdown, ReqTrace};
 use crate::platform::{CostModel, SeqCostInput};
 use crate::runtime::Backend;
@@ -346,6 +347,10 @@ pub struct Engine<B: Backend> {
     /// bounded ring of recent finished-request timelines — the
     /// `GET /admin/trace` payload (`--trace-depth` sizes it)
     recorder: FlightRecorder,
+    /// predictive telemetry plane: step-boundary signal ring plus the
+    /// self-scoring estimators (length quantiles, burst detector, wait
+    /// forecaster).  Inert unless `cfg.forecast.enabled`.
+    forecast: ForecastPlane,
 }
 
 impl<B: Backend> Engine<B> {
@@ -416,6 +421,7 @@ impl<B: Backend> Engine<B> {
             None
         };
         let recorder = FlightRecorder::new(cfg.trace_depth);
+        let forecast = ForecastPlane::new(cfg.forecast);
         Engine {
             cache,
             sched,
@@ -437,6 +443,7 @@ impl<B: Backend> Engine<B> {
             round_memory_bound: None,
             handoff_ready: Vec::new(),
             recorder,
+            forecast,
         }
     }
 
@@ -481,7 +488,7 @@ impl<B: Backend> Engine<B> {
             free_device_blocks: cs.blocks_total.saturating_sub(cs.blocks_used),
             total_device_blocks: cs.blocks_total,
             free_host_blocks: ts.host_capacity_blocks.saturating_sub(ts.host_used_blocks),
-            tokens_per_step: self.metrics.tokens_per_step(),
+            tokens_per_step: self.metrics.tokens_per_step_recent(),
             gemm_bound: self.metrics.spec_regime == crate::platform::regime_name(false),
             batch_slots_free: self.sched.max_batch().saturating_sub(self.sched.num_running()),
         }
@@ -505,8 +512,44 @@ impl<B: Backend> Engine<B> {
             o.insert("pinned_shared_blocks", ts.pinned_shared_blocks);
             o.insert("pulled_prefix_pins", self.cache.num_pulled_pins());
             o.insert("replica_role", self.cfg.role.name());
+            self.forecast.metrics_json(o);
         }
         v
+    }
+
+    /// Forecast-plane dump — the per-replica half of the
+    /// `GET /admin/forecast` payload: signal ring plus estimator states.
+    pub fn forecast_json(&self) -> crate::util::json::Value {
+        self.forecast.to_json()
+    }
+
+    /// The predictive telemetry plane (read side: tests and the bench
+    /// harness inspect estimator calibration through this).
+    pub fn forecast_plane(&self) -> &ForecastPlane {
+        &self.forecast
+    }
+
+    /// Mutable plane access — property tests poison estimators through
+    /// this to prove out-of-band coverage falls back to reactive control.
+    pub fn forecast_plane_mut(&mut self) -> &mut ForecastPlane {
+        &mut self.forecast
+    }
+
+    /// Merge a router-side forecast stamp (queue-wait prediction and any
+    /// length hints the router used for admission) onto the request's
+    /// trace, so the prediction resolves against actuals at finish.
+    pub fn stamp_forecast(&mut self, id: SeqId, stamp: ForecastStamp) {
+        if let Some(seq) = self.seqs.get_mut(&id) {
+            if stamp.len_p50.is_some() {
+                seq.trace.predicted_len_p50 = stamp.len_p50;
+            }
+            if stamp.len_p90.is_some() {
+                seq.trace.predicted_len_p90 = stamp.len_p90;
+            }
+            if stamp.wait_ms.is_some() {
+                seq.trace.predicted_wait_ms = stamp.wait_ms;
+            }
+        }
     }
 
     /// Flight-recorder dump — the `GET /admin/trace` payload: recent
@@ -592,6 +635,21 @@ impl<B: Backend> Engine<B> {
         let mut trace = ReqTrace::new(id, arrival, trace_sampled(id, self.cfg.trace_sample));
         trace.class = class.clone();
         let priority = class.priority;
+        let tenant = class.tenant.as_deref();
+        self.forecast.observe_arrival(tenant);
+        // stamp the raw length quantiles (band-independent) so every
+        // prediction self-scores at finish even while out of band
+        if let Some((p50, p90)) = self.forecast.len_quantiles(tenant) {
+            trace.predicted_len_p50 = Some(p50);
+            trace.predicted_len_p90 = Some(p90);
+        }
+        // cold-start the speculation controller's per-lane prior from the
+        // tenant's observed acceptance instead of the global optimum
+        if let Some(acc) = self.forecast.tenant_acceptance(tenant) {
+            if let Some(ctl) = self.spec_ctl.as_mut() {
+                ctl.seed_lane(id, acc);
+            }
+        }
         self.seqs.insert(
             id,
             Sequence {
@@ -742,6 +800,17 @@ impl<B: Backend> Engine<B> {
         // stage swap-ins one step ahead of the scheduler (async prefetch)
         self.issue_prefetches()?;
 
+        // step-boundary signal sample for the predictive telemetry plane
+        // (arrivals accumulated since the last tick feed the burst
+        // detector; token counters are run-cumulative, consumers diff)
+        self.forecast.tick(
+            self.sched.num_waiting(),
+            self.sched.num_running(),
+            self.metrics.prefill_tokens_committed,
+            self.metrics.decode_tokens_committed,
+            self.cache.num_free_blocks(),
+        );
+
         // L3 overhead = round wallclock minus time spent inside backend calls
         let _ = self.backend.take_exec_time();
         let backend_wall =
@@ -809,6 +878,7 @@ impl<B: Backend> Engine<B> {
                 .prefill(&padded, tokens.len() as i32, &plan.slot_mapping)?;
         self.metrics.wall_prefill_s += t0.elapsed().as_secs_f64();
         self.metrics.prefill_steps += 1;
+        self.metrics.prefill_tokens_committed += tokens.len() as u64;
         if let Some(cm) = &self.cost {
             self.metrics.sim_prefill_s += cm.prefill(tokens.len(), &opt).total_s;
         }
@@ -1322,6 +1392,7 @@ impl<B: Backend> Engine<B> {
         )?;
         self.metrics.wall_prefill_s += t0.elapsed().as_secs_f64();
         self.metrics.prefill_steps += 1;
+        self.metrics.prefill_tokens_committed += work.tokens as u64;
         let chunked = self.cfg.chunked_prefill;
         if chunked {
             self.metrics.prefill_chunks += 1;
@@ -1486,6 +1557,7 @@ impl<B: Backend> Engine<B> {
         self.metrics.wall_decode_s += t0.elapsed().as_secs_f64();
         self.metrics.decode_steps += 1;
         self.metrics.decode_tokens_committed += lanes.len() as u64;
+        self.metrics.record_round_rate(lanes.len() as u64);
         self.metrics.decode_lanes_sum += lanes.len() as u64;
         self.metrics.decode_batch_slots += self.sched.max_batch() as u64;
 
@@ -1797,6 +1869,7 @@ impl<B: Backend> Engine<B> {
         }
         self.metrics
             .record_spec_round(k, round_committed, self.round_memory_bound);
+        self.metrics.record_round_rate(round_committed);
         if let Some(ctl) = self.spec_ctl.as_mut() {
             ctl.observe_round(round_accepted, round_examined);
         }
@@ -1821,7 +1894,7 @@ impl<B: Backend> Engine<B> {
     /// decode slot this step) always drop.  Returns the victim id, or
     /// `None` when nothing is evictable.
     fn preempt_one(&mut self, no_swap: &[SeqId]) -> Result<Option<SeqId>> {
-        let Some(victim) = self.sched.peek_preempt_victim() else {
+        let Some(victim) = self.pick_preempt_victim() else {
             return Ok(None);
         };
         let committed = self.cache.seq_len(victim);
@@ -1870,6 +1943,21 @@ impl<B: Backend> Engine<B> {
         Ok(Some(victim))
     }
 
+    /// Forecast-hinted victim choice: when a lane's tenant has an
+    /// in-band length estimator, its predicted work remaining (p90 minus
+    /// generated) ranks it — the lane *furthest from finishing* is
+    /// evicted first, so the blocks freed stay free longest.  Lanes
+    /// without an in-band prediction keep the reactive newest-admission
+    /// order; with forecasting off every lane is unhinted and the choice
+    /// is bit-identical to [`Scheduler::peek_preempt_victim`].
+    fn pick_preempt_victim(&self) -> Option<SeqId> {
+        self.sched.peek_preempt_victim_by(|id| {
+            let seq = self.seqs.get(&id)?;
+            let p90 = self.forecast.len_hint_p90(seq.class.tenant.as_deref())?;
+            Some((p90 as u64).saturating_sub(seq.generated() as u64))
+        })
+    }
+
     /// The Opt-KV evict-vs-recompute decision for `victim`.
     fn should_swap(&self, victim: SeqId) -> bool {
         if self.cfg.swap_policy == SwapPolicy::Never || !self.cache.has_host_tier() {
@@ -1902,7 +1990,10 @@ impl<B: Backend> Engine<B> {
     /// and at most one victim moves per step so the PCIe traffic stays
     /// bounded.  Counted separately as `proactive_swap_outs`.
     fn proactive_evict(&mut self) -> Result<()> {
-        let wm = self.cfg.evict_watermark;
+        // a scored burst detector raises the configured watermark so
+        // headroom opens *ahead* of the arrival wave (forecast-driven
+        // control; reverts to the plain knob when out of band)
+        let wm = self.forecast.effective_watermark(self.cfg.evict_watermark);
         if wm == 0 || !self.cache.has_host_tier() || self.cache.num_free_blocks() >= wm {
             return Ok(());
         }
@@ -1911,7 +2002,7 @@ impl<B: Backend> Engine<B> {
             // left to spend the freed blocks on
             return Ok(());
         }
-        let Some(victim) = self.sched.peek_preempt_victim() else {
+        let Some(victim) = self.pick_preempt_victim() else {
             return Ok(());
         };
         if !self.should_swap(victim) {
@@ -2123,6 +2214,10 @@ impl<B: Backend> Engine<B> {
             }
         }
         self.sched.finish(id);
+        // capture the lane's measured acceptance before the controller
+        // forgets it — it seeds same-tenant cold starts via the forecast
+        // plane's per-tenant acceptance EWMA
+        let lane_acc = self.spec_ctl.as_ref().and_then(|c| c.lane_rate(id));
         if let Some(ctl) = self.spec_ctl.as_mut() {
             ctl.forget(id);
         }
@@ -2131,6 +2226,24 @@ impl<B: Backend> Engine<B> {
             seq.metrics.finished = Some(now);
             seq.finish = Some(reason);
             let breakdown = seq.trace.finish(now);
+            if self.forecast.enabled() {
+                // self-scoring: resolve the stamped predictions against
+                // actuals (every stamp is scored, consumed or not)
+                let actual_len = seq.generated() as u32;
+                seq.trace.actual_len = Some(u64::from(actual_len));
+                seq.trace.actual_wait_ms = Some(breakdown.queue_s * 1000.0);
+                let tenant = seq.class.tenant.as_deref();
+                match (seq.trace.predicted_len_p50, seq.trace.predicted_len_p90) {
+                    (Some(p50), Some(p90)) => {
+                        self.forecast.resolve_len(tenant, p50, p90, actual_len)
+                    }
+                    // unstamped finishes still teach the window (warm-up)
+                    _ => self.forecast.observe_len(tenant, actual_len),
+                }
+                if let Some(rate) = lane_acc {
+                    self.forecast.observe_acceptance(tenant, rate);
+                }
+            }
             self.metrics.record_request_class(&seq.metrics, seq.class.priority);
             self.metrics.record_phases_class(&breakdown, seq.class.priority);
             self.metrics.tokens_generated = self.metrics.tokens_generated.max(0);

@@ -293,6 +293,27 @@ impl SpecController {
         self.examined = (1.0 - self.alpha) * self.examined + self.alpha * examined as f64;
     }
 
+    /// Seed a lane's cold-start prior from an *observed* acceptance rate
+    /// (the forecast plane's per-tenant EWMA) instead of the optimistic
+    /// [`PRIOR_ACCEPTANCE`].  Same pseudo-observation weight as the
+    /// default prior, so real rounds dominate it just as quickly; a
+    /// no-op once the lane has state — measurements are never clobbered.
+    pub fn seed_lane(&mut self, id: SeqId, acceptance: f64) {
+        let a = acceptance.clamp(0.0, 1.0);
+        self.per_seq.entry(id).or_insert(LaneAcc {
+            accepted: a * PRIOR_WEIGHT,
+            examined: PRIOR_WEIGHT,
+            plain_rounds: 0,
+        });
+    }
+
+    /// Current acceptance estimate of one lane (prior-weighted EWMA),
+    /// `None` if the lane was never seeded or measured.  Read at finish
+    /// to feed the tenant's observed-acceptance memory.
+    pub fn lane_rate(&self, id: SeqId) -> Option<f64> {
+        self.per_seq.get(&id).map(|l| l.rate())
+    }
+
     /// Drop a finished sequence's per-lane state.
     pub fn forget(&mut self, id: SeqId) {
         self.per_seq.remove(&id);
@@ -396,6 +417,27 @@ mod tests {
             }
         }
         assert_eq!(c.current_k(), 4, "recovery reaches k_max");
+    }
+
+    #[test]
+    fn seeded_lane_prior_sticks_until_measured() {
+        let mut c = SpecController::new(&cfg());
+        assert_eq!(c.lane_rate(7), None, "unknown lane has no estimate");
+        // a pessimistic observed-acceptance seed replaces the 0.9 prior
+        c.seed_lane(7, 0.3);
+        let r = c.lane_rate(7).unwrap();
+        assert!((r - 0.3).abs() < 1e-12, "seeded prior readable: {r}");
+        // re-seeding never clobbers existing state...
+        c.seed_lane(7, 0.99);
+        assert!((c.lane_rate(7).unwrap() - 0.3).abs() < 1e-12);
+        // ...and neither does it survive real measurements dominating it
+        for _ in 0..8 {
+            c.observe_lane(7, 4, 4);
+        }
+        assert!(c.lane_rate(7).unwrap() > 0.8, "evidence beats the seed");
+        // forget drops the lane entirely
+        c.forget(7);
+        assert_eq!(c.lane_rate(7), None);
     }
 
     #[test]

@@ -186,6 +186,41 @@ fn main() -> Result<()> {
              prefill is pending (0.0..=0.9; 0 = no split)",
         )
         .flag(
+            "forecast",
+            "false",
+            "predictive control: sample a per-replica signal ring at step \
+             boundaries and run the self-scoring estimators (output-length \
+             quantiles, arrival-burst detector, queue-wait forecaster).  \
+             Controllers consume a forecast only while its calibration \
+             coverage is in band; off keeps every reactive behaviour \
+             bit-identical (true|false)",
+        )
+        .flag(
+            "forecast-ring",
+            "256",
+            "predictive control: signal-ring capacity in step-boundary \
+             samples (GET /admin/forecast dumps it)",
+        )
+        .flag(
+            "forecast-warmup",
+            "16",
+            "predictive control: resolved predictions an estimator needs \
+             before controllers may consume it",
+        )
+        .flag(
+            "forecast-burst-ratio",
+            "3.0",
+            "predictive control: short-over-long-window arrival-rate ratio \
+             that declares a burst (clamped to >= 1.0)",
+        )
+        .flag(
+            "forecast-burst-tighten",
+            "2.0",
+            "predictive control: admission-wait multiplier while a scored \
+             burst is active (clamped to >= 1.0; pre-tightens shedding \
+             ahead of the queue growth)",
+        )
+        .flag(
             "log-level",
             "",
             "stderr log level: error|warn|info|debug|trace (overrides \
@@ -232,7 +267,12 @@ fn main() -> Result<()> {
             .with_trace_sample(args.get_f64("trace-sample"))
             .with_slo_admission(args.get_bool("slo-admission"))
             .with_interactive_ttft_ms(args.get_usize("slo-interactive-ttft-ms") as u64)
-            .with_interactive_prefill_reserve(args.get_f64("interactive-prefill-reserve"));
+            .with_interactive_prefill_reserve(args.get_f64("interactive-prefill-reserve"))
+            .with_forecast(args.get_bool("forecast"))
+            .with_forecast_ring(args.get_usize("forecast-ring"))
+            .with_forecast_warmup(args.get_usize("forecast-warmup") as u64)
+            .with_forecast_burst_ratio(args.get_f64("forecast-burst-ratio"))
+            .with_forecast_burst_tighten(args.get_f64("forecast-burst-tighten"));
         Ok(cfg)
     };
 
@@ -283,7 +323,8 @@ fn main() -> Result<()> {
             }
             let rt = Runtime::new(&dir)?;
             let mut engines = Vec::with_capacity(replicas);
-            let slo = engine_cfg(model, opt)?.slo;
+            let base = engine_cfg(model, opt)?;
+            let (slo, forecast) = (base.slo, base.forecast);
             for i in 0..replicas {
                 let mrt = rt.load_model(model, opt)?;
                 if i == 0 {
@@ -295,7 +336,9 @@ fn main() -> Result<()> {
                 }
                 engines.push(Engine::new(mrt, cfg));
             }
-            let router = RouterHandle::spawn(engines, policy).with_slo(slo);
+            let router = RouterHandle::spawn(engines, policy)
+                .with_slo(slo)
+                .with_forecast(forecast);
             let server =
                 Server::bind_router(args.get("addr"), router, args.get_usize("workers"))?;
             if args.get_bool("pd-autoscale") {

@@ -33,6 +33,11 @@ impl ClassHists {
     }
 }
 
+/// Smoothing of the windowed tokens-per-round EWMA: ~0.2 weights the
+/// last ~5 rounds, fast enough that a speculation demotion reaches the
+/// router's load signal within one snapshot interval.
+pub const ROUND_RATE_EWMA_ALPHA: f64 = 0.2;
+
 /// Index of a priority class in per-class metric arrays.
 pub fn class_idx(c: Priority) -> usize {
     match c {
@@ -73,6 +78,9 @@ pub struct EngineMetrics {
     /// prefill windows committed by chunked prefill (Opt-Pa step 1);
     /// zero when the engine runs one-shot prefill
     pub prefill_chunks: u64,
+    /// prompt tokens run through prefill graphs (one-shot + chunked
+    /// windows) — the forecast ring's prefill-rate signal
+    pub prefill_tokens_committed: u64,
     /// simulated seconds spent between consecutive windows of the same
     /// prompt (inter-chunk stall — the price of interleaving decodes)
     pub chunk_stall_s: f64,
@@ -93,6 +101,11 @@ pub struct EngineMetrics {
     pub decode_lanes_sum: u64,
     /// batch slots offered over those rounds (occupancy denominator)
     pub decode_batch_slots: u64,
+    /// windowed tokens-per-round EWMA (the routing load signal; see
+    /// [`EngineMetrics::tokens_per_step_recent`])
+    pub tokens_per_step_ewma: f64,
+    /// rounds folded into the EWMA (0 — no decode round yet)
+    pub round_rate_samples: u64,
     // --- adaptive speculation (online draft-length controller) -------------
     /// rounds by draft length: `spec_k_hist[k]` counts decode/verify
     /// rounds that ran at draft length k (index 0 = plain one-token
@@ -328,10 +341,41 @@ impl EngineMetrics {
     /// Tokens committed per decode/verify round — 1.0 on the one-token
     /// decode path, up to k+1 under speculation.  The first metric that
     /// can exceed one token per step.
+    ///
+    /// Run-cumulative: right for a run report card, wrong as a *load
+    /// signal* — a replica demoted out of speculation keeps a high
+    /// average long after its real rate fell back to ~1 token/round.
+    /// Routing reads [`EngineMetrics::tokens_per_step_recent`] instead.
     pub fn tokens_per_step(&self) -> f64 {
         let rounds = self.decode_steps + self.spec_rounds;
         if rounds > 0 {
             self.decode_tokens_committed as f64 / rounds as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold one decode/verify round's committed token count into the
+    /// windowed rate estimate.  Called once per round next to the
+    /// `decode_steps` / `spec_rounds` increment.
+    pub fn record_round_rate(&mut self, committed: u64) {
+        let sample = committed as f64;
+        self.round_rate_samples += 1;
+        self.tokens_per_step_ewma = if self.round_rate_samples == 1 {
+            sample
+        } else {
+            (1.0 - ROUND_RATE_EWMA_ALPHA) * self.tokens_per_step_ewma
+                + ROUND_RATE_EWMA_ALPHA * sample
+        };
+    }
+
+    /// Windowed tokens-per-round EWMA — the load signal the router's
+    /// `load_score` consumes.  Tracks the *current* commit rate: after
+    /// a speculation demotion it decays to ~1 within a few rounds,
+    /// where the cumulative average stays inflated for the whole run.
+    pub fn tokens_per_step_recent(&self) -> f64 {
+        if self.round_rate_samples > 0 {
+            self.tokens_per_step_ewma
         } else {
             0.0
         }
@@ -413,6 +457,7 @@ impl EngineMetrics {
         o.insert("tokens_generated", self.tokens_generated as usize);
         o.insert("prefill_steps", self.prefill_steps as usize);
         o.insert("prefill_chunks", self.prefill_chunks as usize);
+        o.insert("prefill_tokens_committed", self.prefill_tokens_committed as usize);
         o.insert("chunk_stall_sim_s", self.chunk_stall_s);
         o.insert("decode_steps", self.decode_steps as usize);
         o.insert("preemptions", self.preemptions as usize);
@@ -421,6 +466,7 @@ impl EngineMetrics {
         o.insert("spec_accepted", self.spec_accepted as usize);
         o.insert("acceptance_rate", self.acceptance_rate());
         o.insert("tokens_per_step", self.tokens_per_step());
+        o.insert("tokens_per_step_recent", self.tokens_per_step_recent());
         o.insert("decode_batch_occupancy", self.decode_batch_occupancy());
         // adaptive speculation: live controller state + round histogram
         o.insert("spec_k_current", self.spec_k_current);
@@ -701,6 +747,36 @@ mod tests {
         m.record_spec_round(1, 2, None);
         assert_eq!(m.spec_k_hist, vec![2, 1, 0, 3]);
         assert_eq!(m.rounds_weight_stream_bound + m.rounds_gemm_bound, 5);
+    }
+
+    #[test]
+    fn round_rate_ewma_tracks_current_rate_not_run_history() {
+        let mut m = EngineMetrics::new();
+        assert_eq!(m.tokens_per_step_recent(), 0.0, "no round yet");
+        // a long speculative streak: ~4 tokens per verify round
+        for _ in 0..50 {
+            m.spec_rounds += 1;
+            m.decode_tokens_committed += 4;
+            m.record_round_rate(4);
+        }
+        assert!((m.tokens_per_step() - 4.0).abs() < 1e-9);
+        assert!((m.tokens_per_step_recent() - 4.0).abs() < 1e-9);
+        // demotion to plain decode: 1 token per round from here on
+        for _ in 0..25 {
+            m.decode_steps += 1;
+            m.decode_tokens_committed += 1;
+            m.record_round_rate(1);
+        }
+        // the cumulative average is still badly inflated...
+        assert!(m.tokens_per_step() > 2.5, "cumulative stays stale");
+        // ...while the EWMA has converged to the true current rate
+        assert!(
+            m.tokens_per_step_recent() < 1.01,
+            "EWMA must track the post-demotion rate, got {}",
+            m.tokens_per_step_recent()
+        );
+        let j = m.to_json();
+        assert!(j.req_f64("tokens_per_step_recent").unwrap() < 1.01);
     }
 
     #[test]

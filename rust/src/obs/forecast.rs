@@ -1,0 +1,1177 @@
+//! Predictive telemetry plane: a bounded time-series ring of cluster
+//! signals plus three *self-scoring* online estimators that turn the
+//! reactive controllers (router admission, cost estimate, preemption
+//! victim choice, proactive eviction, spec cold-start) into predictive
+//! ones — without ever being trusted blindly.
+//!
+//! The contract, mirroring PR 7's exact-attribution discipline: **every
+//! prediction is scored against its own outcome**.  A prediction is
+//! stamped at decision time, resolved when the request finishes (or the
+//! burst horizon elapses), and folded into calibration metrics — mean
+//! absolute percentage error and quantile *coverage* ("did 90% of
+//! actuals land under the p90?").  Controllers consume a forecast only
+//! while its coverage sits inside the configured band; out-of-band (or
+//! still warming up) they fall back to today's reactive behaviour, so a
+//! miscalibrated estimator degrades to the status quo, never below it.
+//!
+//! Three estimators ride on the ring:
+//!
+//! 1. **Output length** ([`LenEstimator`], per tenant): exact sliding-
+//!    window quantiles over finished-request generated-token counts.
+//!    The p90 replaces the router's blind `5 x max_new` decode term in
+//!    `request_cost_estimate`, and `p90 - generated` ranks preemption
+//!    victims (evict the lane furthest from finishing).
+//! 2. **Arrival bursts** ([`BurstDetector`]): a short-vs-long-window
+//!    arrival-rate ratio on the step clock.  While a detected burst is
+//!    in calibration band, admission pre-tightens (queue bound divided
+//!    by `burst_tighten`, projected wait multiplied by it) and the
+//!    engine raises its proactive-eviction watermark to clear device
+//!    headroom *ahead* of the burst.  Each detection is scored at a
+//!    fixed horizon: a hit iff the arrival rate stayed at or above the
+//!    detection-time baseline — a control-independent criterion, so the
+//!    detector cannot mark itself wrong merely because tightening
+//!    worked.
+//! 3. **Queue wait** ([`WaitForecaster`]): an EWMA of observed
+//!    `queue_wait_ms / load_score` replacing the `SLO_MS_PER_TOKEN`
+//!    drain constant in `projected_wait_ms`.  Covered iff the actual
+//!    wait landed under `2 x predicted + 1 ms` — the forecast may be
+//!    loose upward (admission stays safe) but not a gross underestimate.
+//!
+//! Everything here is deterministic on the step clock except the wait
+//! forecaster's wall-millisecond samples, and nothing in this module
+//! touches token generation: forecasts change *who goes where and
+//! when*, never what anyone gets back (`prop_forecast` poisons every
+//! estimator on purpose and proves it).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::ForecastConfig;
+use crate::util::json::{Object, Value};
+
+/// Short arrival window (steps) for the burst ratio numerator.
+pub const SHORT_WINDOW: usize = 8;
+/// Long arrival window (steps) for the burst ratio baseline.
+pub const LONG_WINDOW: usize = 64;
+/// Steps after a burst detection at which it is scored.
+pub const BURST_HORIZON: u64 = 16;
+/// A burst needs at least this many arrivals in the short window —
+/// one lone request after silence is noise, not a burst.
+pub const MIN_BURST_ARRIVALS: u64 = 4;
+/// Sliding window of actual output lengths per tenant.
+pub const LEN_WINDOW: usize = 128;
+/// Quantiles are withheld until this many lengths have been observed.
+pub const MIN_LEN_SAMPLES: usize = 4;
+/// Coverage is judged over the most recent outcomes only, so a long-
+/// dead miscalibration cannot pin an estimator out of band forever.
+pub const COVERAGE_WINDOW: usize = 64;
+/// A wait prediction covers its outcome iff
+/// `actual <= WAIT_COVER_FACTOR * predicted + WAIT_COVER_SLACK_MS`.
+pub const WAIT_COVER_FACTOR: f64 = 2.0;
+pub const WAIT_COVER_SLACK_MS: f64 = 1.0;
+/// Distinct per-tenant estimators; overflow tenants share the
+/// untenanted bucket instead of growing the maps without bound.
+pub const MAX_TENANTS: usize = 64;
+
+fn push_bounded<T>(q: &mut VecDeque<T>, v: T, cap: usize) {
+    if q.len() >= cap.max(1) {
+        q.pop_front();
+    }
+    q.push_back(v);
+}
+
+fn window_rate(q: &VecDeque<bool>) -> Option<f64> {
+    if q.is_empty() {
+        return None;
+    }
+    Some(q.iter().filter(|&&b| b).count() as f64 / q.len() as f64)
+}
+
+// ---------------------------------------------------------------------------
+// signal ring
+// ---------------------------------------------------------------------------
+
+/// One step-boundary sample of the signals every controller feeds on.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SignalSample {
+    /// Step-clock sequence number of this sample.
+    pub seq: u64,
+    /// Requests queued (admitted, not yet running).
+    pub queue_depth: usize,
+    /// Sequences actively prefilling or decoding.
+    pub running: usize,
+    /// Prompt tokens committed so far (run-cumulative).
+    pub prefill_tokens: u64,
+    /// Decode tokens committed so far (run-cumulative).
+    pub decode_tokens: u64,
+    /// Free device KV blocks at the sample instant.
+    pub free_device_blocks: usize,
+    /// Requests that arrived since the previous sample.
+    pub arrivals: u64,
+}
+
+impl SignalSample {
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("seq", self.seq as usize);
+        o.insert("queue_depth", self.queue_depth);
+        o.insert("running", self.running);
+        o.insert("prefill_tokens", self.prefill_tokens as usize);
+        o.insert("decode_tokens", self.decode_tokens as usize);
+        o.insert("free_device_blocks", self.free_device_blocks);
+        o.insert("arrivals", self.arrivals as usize);
+        Value::Object(o)
+    }
+}
+
+/// Bounded ring of [`SignalSample`]s — the raw material behind
+/// `GET /admin/forecast` and any future offline estimator.
+#[derive(Debug, Clone)]
+pub struct SignalRing {
+    cap: usize,
+    samples: VecDeque<SignalSample>,
+}
+
+impl SignalRing {
+    pub fn new(cap: usize) -> Self {
+        SignalRing {
+            cap: cap.max(1),
+            samples: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, s: SignalSample) {
+        push_bounded(&mut self.samples, s, self.cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn latest(&self) -> Option<&SignalSample> {
+        self.samples.back()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SignalSample> {
+        self.samples.iter()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::Array(self.samples.iter().map(|s| s.to_json()).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// output-length estimator
+// ---------------------------------------------------------------------------
+
+/// Per-tenant output-length quantile estimator: exact quantiles over a
+/// sliding window of observed generated-token counts, scored by p90
+/// coverage and p50 MAPE over its own resolved predictions.
+#[derive(Debug, Clone, Default)]
+pub struct LenEstimator {
+    window: VecDeque<u32>,
+    resolved: u64,
+    cover: VecDeque<bool>,
+    mape: f64,
+    mape_n: u64,
+}
+
+impl LenEstimator {
+    /// Exact `q`-quantile (q in [0, 1]) of the window via ceil-rank:
+    /// the smallest observed value with at least a `q` fraction of the
+    /// window at or below it.  `None` until [`MIN_LEN_SAMPLES`] lengths
+    /// have been seen — a guess from one sample is not a forecast.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let n = self.window.len();
+        if n < MIN_LEN_SAMPLES {
+            return None;
+        }
+        let mut v: Vec<u32> = self.window.iter().copied().collect();
+        v.sort_unstable();
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+        Some(v[rank - 1] as f64)
+    }
+
+    /// Feed an observed length without scoring (no prediction was
+    /// stamped — the estimator was still warming up at admission).
+    pub fn observe(&mut self, actual: u32) {
+        push_bounded(&mut self.window, actual, LEN_WINDOW);
+    }
+
+    /// Score a stamped prediction against its outcome, then feed the
+    /// outcome into the window.  Coverage bit: `actual <= p90`.
+    pub fn resolve(&mut self, p50: f64, p90: f64, actual: u32, alpha: f64) {
+        self.resolved += 1;
+        push_bounded(&mut self.cover, f64::from(actual) <= p90, COVERAGE_WINDOW);
+        let err = (f64::from(actual) - p50).abs() / f64::from(actual).max(1.0);
+        self.mape_n += 1;
+        self.mape = if self.mape_n == 1 {
+            err
+        } else {
+            (1.0 - alpha) * self.mape + alpha * err
+        };
+        self.observe(actual);
+    }
+
+    pub fn samples(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn resolved(&self) -> u64 {
+        self.resolved
+    }
+
+    /// Fraction of recent resolved predictions whose actual landed at
+    /// or under the stamped p90.  `None` before the first resolution.
+    pub fn coverage(&self) -> Option<f64> {
+        window_rate(&self.cover)
+    }
+
+    /// EWMA of `|actual - p50| / actual` over resolved predictions.
+    pub fn mape(&self) -> f64 {
+        self.mape
+    }
+
+    /// Consumable iff enough predictions have resolved *and* the p90
+    /// coverage sits inside `[lo, hi]`.
+    pub fn in_band(&self, warmup: u64, lo: f64, hi: f64) -> bool {
+        if self.resolved < warmup.max(1) {
+            return false;
+        }
+        match self.coverage() {
+            Some(c) => c >= lo && c <= hi,
+            None => false,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("samples", self.samples());
+        o.insert("resolved", self.resolved as usize);
+        if let Some(p50) = self.quantile(0.5) {
+            o.insert("p50", p50);
+        }
+        if let Some(p90) = self.quantile(0.9) {
+            o.insert("p90", p90);
+        }
+        if let Some(c) = self.coverage() {
+            o.insert("coverage", c);
+        }
+        if self.mape_n > 0 {
+            o.insert("mape", self.mape);
+        }
+        Value::Object(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// arrival-burst detector
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct PendingBurst {
+    resolve_at: u64,
+    cum_at_fire: u64,
+    baseline_rate: f64,
+}
+
+/// Arrival-burst detector on the step clock: burst iff the short-window
+/// arrival rate is at least `burst_ratio` times the long-window rate
+/// (with a minimum absolute arrival count, so one request after silence
+/// does not trip it).  Because the long window contains the short one,
+/// a sustained burst raises its own baseline and self-expires — the
+/// detector flags *onsets*, which is exactly when pre-tightening and
+/// pre-eviction pay.
+#[derive(Debug, Clone, Default)]
+pub struct BurstDetector {
+    per_step: VecDeque<u64>,
+    cum_arrivals: u64,
+    active: bool,
+    detected: u64,
+    pending: VecDeque<PendingBurst>,
+    resolved: u64,
+    hits: u64,
+}
+
+impl BurstDetector {
+    /// Advance one step with `arrivals` new requests, re-evaluate the
+    /// burst predicate, and score any detections whose horizon elapsed.
+    pub fn tick(&mut self, step: u64, arrivals: u64, ratio: f64) {
+        self.cum_arrivals += arrivals;
+        push_bounded(&mut self.per_step, arrivals, LONG_WINDOW);
+        let n = self.per_step.len();
+        let short_n: u64 = self
+            .per_step
+            .iter()
+            .rev()
+            .take(SHORT_WINDOW)
+            .sum();
+        let long_n: u64 = self.per_step.iter().sum();
+        let short_rate = short_n as f64 / n.min(SHORT_WINDOW) as f64;
+        let long_rate = long_n as f64 / n as f64;
+        let burst = n >= SHORT_WINDOW
+            && short_n >= MIN_BURST_ARRIVALS
+            && long_rate > 0.0
+            && short_rate >= ratio * long_rate;
+        if burst && !self.active {
+            self.detected += 1;
+            self.pending.push_back(PendingBurst {
+                resolve_at: step + BURST_HORIZON,
+                cum_at_fire: self.cum_arrivals,
+                baseline_rate: long_rate,
+            });
+        }
+        self.active = burst;
+        while let Some(p) = self.pending.front().copied() {
+            if p.resolve_at > step {
+                break;
+            }
+            self.pending.pop_front();
+            self.resolved += 1;
+            let horizon_rate =
+                (self.cum_arrivals - p.cum_at_fire) as f64 / BURST_HORIZON as f64;
+            if horizon_rate >= p.baseline_rate {
+                self.hits += 1;
+            }
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    pub fn detected(&self) -> u64 {
+        self.detected
+    }
+
+    pub fn resolved(&self) -> u64 {
+        self.resolved
+    }
+
+    /// Fraction of resolved detections where the elevated rate held
+    /// through the horizon.  `None` before the first resolution.
+    pub fn hit_rate(&self) -> Option<f64> {
+        if self.resolved == 0 {
+            return None;
+        }
+        Some(self.hits as f64 / self.resolved as f64)
+    }
+
+    /// Consumable iff at least two detections have been scored and the
+    /// majority were real.
+    pub fn in_band(&self) -> bool {
+        self.resolved >= 2 && self.hit_rate().unwrap_or(0.0) >= 0.5
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("active", self.active);
+        o.insert("detected", self.detected as usize);
+        o.insert("resolved", self.resolved as usize);
+        if let Some(h) = self.hit_rate() {
+            o.insert("hit_rate", h);
+        }
+        o.insert("in_band", self.in_band());
+        Value::Object(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// queue-wait forecaster
+// ---------------------------------------------------------------------------
+
+/// Queue-wait forecaster: learns the cluster's real drain rate as an
+/// EWMA of `observed_queue_wait_ms / load_score_at_admission`, replacing
+/// the hardwired `SLO_MS_PER_TOKEN` constant in `projected_wait_ms`.
+#[derive(Debug, Clone, Default)]
+pub struct WaitForecaster {
+    ms_per_load: f64,
+    samples: u64,
+    resolved: u64,
+    cover: VecDeque<bool>,
+}
+
+impl WaitForecaster {
+    /// Predicted queue wait for a request admitted at `load`.  `None`
+    /// until at least one outcome has been folded in.
+    pub fn predict_ms(&self, load: f64) -> Option<f64> {
+        if self.samples == 0 {
+            return None;
+        }
+        Some(self.ms_per_load * load.max(0.0))
+    }
+
+    /// Learned drain rate (milliseconds of queue wait per unit of load
+    /// score); `None` until the first sample.
+    pub fn ms_per_load(&self) -> Option<f64> {
+        if self.samples == 0 {
+            return None;
+        }
+        Some(self.ms_per_load)
+    }
+
+    /// Score a stamped prediction and fold the outcome into the EWMA.
+    pub fn resolve(&mut self, predicted_ms: f64, load: f64, actual_ms: f64, alpha: f64) {
+        self.resolved += 1;
+        push_bounded(
+            &mut self.cover,
+            actual_ms <= WAIT_COVER_FACTOR * predicted_ms + WAIT_COVER_SLACK_MS,
+            COVERAGE_WINDOW,
+        );
+        if load > 0.0 {
+            let sample = actual_ms / load;
+            self.samples += 1;
+            self.ms_per_load = if self.samples == 1 {
+                sample
+            } else {
+                (1.0 - alpha) * self.ms_per_load + alpha * sample
+            };
+        }
+    }
+
+    pub fn resolved(&self) -> u64 {
+        self.resolved
+    }
+
+    pub fn coverage(&self) -> Option<f64> {
+        window_rate(&self.cover)
+    }
+
+    pub fn in_band(&self, warmup: u64, lo: f64, hi: f64) -> bool {
+        if self.resolved < warmup.max(1) || self.samples == 0 {
+            return false;
+        }
+        match self.coverage() {
+            Some(c) => c >= lo && c <= hi,
+            None => false,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("resolved", self.resolved as usize);
+        if let Some(m) = self.ms_per_load() {
+            o.insert("ms_per_load", m);
+        }
+        if let Some(c) = self.coverage() {
+            o.insert("coverage", c);
+        }
+        Value::Object(o)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// prediction stamp
+// ---------------------------------------------------------------------------
+
+/// The predictions in force for one request at admission, stamped onto
+/// its `ReqTrace` and resolved at finish.  Absent fields mean the
+/// corresponding estimator was still warming up.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ForecastStamp {
+    pub len_p50: Option<f64>,
+    pub len_p90: Option<f64>,
+    pub wait_ms: Option<f64>,
+}
+
+impl ForecastStamp {
+    pub fn is_empty(&self) -> bool {
+        self.len_p50.is_none() && self.len_p90.is_none() && self.wait_ms.is_none()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the plane
+// ---------------------------------------------------------------------------
+
+/// The composed predictive plane: signal ring + the three estimators +
+/// per-tenant speculation-acceptance memory.  One instance lives in the
+/// router (arrivals, wait, admission tightening) and one per engine
+/// (step-boundary signals, length stamps, victim hints, eviction,
+/// spec-prior seeding).  All methods are no-ops / `None` when the
+/// config is disabled, so the default path is bit-identical to the
+/// pre-forecast code.
+#[derive(Debug, Clone)]
+pub struct ForecastPlane {
+    cfg: ForecastConfig,
+    step: u64,
+    ring: SignalRing,
+    arrivals_this_step: u64,
+    tenant_arrivals: BTreeMap<String, u64>,
+    len: BTreeMap<String, LenEstimator>,
+    burst: BurstDetector,
+    wait: WaitForecaster,
+    acceptance: BTreeMap<String, f64>,
+}
+
+impl ForecastPlane {
+    pub fn new(cfg: ForecastConfig) -> Self {
+        let ring = SignalRing::new(cfg.ring);
+        ForecastPlane {
+            cfg,
+            step: 0,
+            ring,
+            arrivals_this_step: 0,
+            tenant_arrivals: BTreeMap::new(),
+            len: BTreeMap::new(),
+            burst: BurstDetector::default(),
+            wait: WaitForecaster::default(),
+            acceptance: BTreeMap::new(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    pub fn cfg(&self) -> &ForecastConfig {
+        &self.cfg
+    }
+
+    pub fn current_step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn ring(&self) -> &SignalRing {
+        &self.ring
+    }
+
+    /// Tenants overflowing [`MAX_TENANTS`] share the untenanted bucket.
+    fn tenant_key(&self, tenant: Option<&str>) -> String {
+        let t = tenant.unwrap_or("");
+        if self.len.contains_key(t) || self.len.len() < MAX_TENANTS {
+            t.to_string()
+        } else {
+            String::new()
+        }
+    }
+
+    /// Record one request arrival (router `submit` / engine
+    /// `submit_tokens_class`), attributed to its tenant.
+    pub fn observe_arrival(&mut self, tenant: Option<&str>) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.arrivals_this_step += 1;
+        let key = self.tenant_key(tenant);
+        *self.tenant_arrivals.entry(key).or_insert(0) += 1;
+    }
+
+    /// Advance the step clock: sample the signal ring and feed the
+    /// burst detector with the arrivals accumulated since last tick.
+    pub fn tick(
+        &mut self,
+        queue_depth: usize,
+        running: usize,
+        prefill_tokens: u64,
+        decode_tokens: u64,
+        free_device_blocks: usize,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        self.step += 1;
+        let arrivals = std::mem::take(&mut self.arrivals_this_step);
+        self.ring.push(SignalSample {
+            seq: self.step,
+            queue_depth,
+            running,
+            prefill_tokens,
+            decode_tokens,
+            free_device_blocks,
+            arrivals,
+        });
+        self.burst.tick(self.step, arrivals, self.cfg.burst_ratio);
+    }
+
+    // ---- output length ---------------------------------------------------
+
+    /// Raw (p50, p90) for stamping — available as soon as the window
+    /// has [`MIN_LEN_SAMPLES`], *regardless* of calibration band:
+    /// predictions must keep being stamped and scored even while they
+    /// are not consumed, or coverage could never recover.
+    pub fn len_quantiles(&self, tenant: Option<&str>) -> Option<(f64, f64)> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let est = self.len.get(&self.tenant_key(tenant))?;
+        Some((est.quantile(0.5)?, est.quantile(0.9)?))
+    }
+
+    /// p90 length hint for controllers — `None` unless the tenant's
+    /// estimator is warmed up *and* its coverage is in band.
+    pub fn len_hint_p90(&self, tenant: Option<&str>) -> Option<f64> {
+        if !self.cfg.enabled || !self.len_in_band(tenant) {
+            return None;
+        }
+        self.len_quantiles(tenant).map(|(_, p90)| p90)
+    }
+
+    pub fn len_in_band(&self, tenant: Option<&str>) -> bool {
+        if !self.cfg.enabled {
+            return false;
+        }
+        match self.len.get(&self.tenant_key(tenant)) {
+            Some(est) => {
+                est.in_band(self.cfg.warmup, self.cfg.coverage_lo, self.cfg.coverage_hi)
+            }
+            None => false,
+        }
+    }
+
+    /// Feed an observed length with no stamped prediction (warm-up
+    /// finishes still teach the window).
+    pub fn observe_len(&mut self, tenant: Option<&str>, actual: u32) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let key = self.tenant_key(tenant);
+        self.len.entry(key).or_default().observe(actual);
+    }
+
+    /// Score a stamped (p50, p90) length prediction against the actual
+    /// generated-token count.
+    pub fn resolve_len(&mut self, tenant: Option<&str>, p50: f64, p90: f64, actual: u32) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let key = self.tenant_key(tenant);
+        let alpha = self.cfg.ewma_alpha;
+        self.len.entry(key).or_default().resolve(p50, p90, actual, alpha);
+    }
+
+    /// Pooled p90 coverage across tenants whose estimators are past
+    /// warm-up — the single number the bench gate checks.
+    pub fn len_coverage_pooled(&self) -> Option<f64> {
+        let mut covered = 0usize;
+        let mut total = 0usize;
+        for est in self.len.values() {
+            if est.resolved() < self.cfg.warmup.max(1) {
+                continue;
+            }
+            total += est.cover.len();
+            covered += est.cover.iter().filter(|&&b| b).count();
+        }
+        if total == 0 {
+            return None;
+        }
+        Some(covered as f64 / total as f64)
+    }
+
+    // ---- queue wait ------------------------------------------------------
+
+    /// Forecast queue wait at `load` — `None` unless the forecaster is
+    /// warmed up and in coverage band (callers fall back to the
+    /// reactive drain constant).
+    pub fn predict_wait_ms(&self, load: f64) -> Option<f64> {
+        if !self.cfg.enabled || !self.wait_in_band() {
+            return None;
+        }
+        self.wait.predict_ms(load)
+    }
+
+    pub fn wait_in_band(&self) -> bool {
+        self.cfg.enabled
+            && self
+                .wait
+                .in_band(self.cfg.warmup, self.cfg.coverage_lo, self.cfg.coverage_hi)
+    }
+
+    /// Raw wait quote for *stamping* — available from the first resolved
+    /// sample regardless of calibration band (predictions must keep
+    /// being scored while out of band, or coverage could never recover).
+    pub fn wait_quote_ms(&self, load: f64) -> Option<f64> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        self.wait.predict_ms(load)
+    }
+
+    /// Learned drain rate (ms of queue wait per unit of load score) for
+    /// `projected_wait_ms` — `None` unless in band, so callers fall back
+    /// to the reactive `SLO_MS_PER_TOKEN` constant.
+    pub fn wait_ms_per_load(&self) -> Option<f64> {
+        if !self.wait_in_band() {
+            return None;
+        }
+        self.wait.ms_per_load()
+    }
+
+    /// Score the wait prediction that admission actually used.
+    pub fn resolve_wait(&mut self, predicted_ms: f64, load: f64, actual_ms: f64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let alpha = self.cfg.ewma_alpha;
+        self.wait.resolve(predicted_ms, load, actual_ms, alpha);
+    }
+
+    pub fn wait_coverage(&self) -> Option<f64> {
+        self.wait.coverage()
+    }
+
+    /// Wait predictions scored so far (stamp-and-resolve round trips).
+    pub fn wait_resolved(&self) -> u64 {
+        self.wait.resolved()
+    }
+
+    // ---- bursts ----------------------------------------------------------
+
+    pub fn burst_active(&self) -> bool {
+        self.cfg.enabled && self.burst.active()
+    }
+
+    pub fn burst_in_band(&self) -> bool {
+        self.cfg.enabled && self.burst.in_band()
+    }
+
+    /// Burst onsets the detector has fired on so far.
+    pub fn bursts_detected(&self) -> u64 {
+        self.burst.detected()
+    }
+
+    /// Burst detections scored against their post-horizon arrival rate.
+    pub fn bursts_resolved(&self) -> u64 {
+        self.burst.resolved()
+    }
+
+    /// Fraction of resolved detections that held through the horizon.
+    pub fn burst_hit_rate(&self) -> Option<f64> {
+        self.burst.hit_rate()
+    }
+
+    /// Admission tightening factor: `burst_tighten` while a burst is
+    /// active *and* the detector is in band, else 1.0 (reactive).
+    pub fn admission_tighten(&self) -> f64 {
+        if self.burst_active() && self.burst_in_band() {
+            self.cfg.burst_tighten.max(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Effective proactive-eviction watermark: raised to
+    /// `burst_watermark` while a consumable burst is in flight.
+    pub fn effective_watermark(&self, configured: usize) -> usize {
+        if self.burst_active() && self.burst_in_band() {
+            configured.max(self.cfg.burst_watermark)
+        } else {
+            configured
+        }
+    }
+
+    // ---- speculation acceptance -----------------------------------------
+
+    /// Fold a finished lane's observed acceptance rate into the
+    /// tenant's EWMA (the spec controller's cold-start prior source).
+    pub fn observe_acceptance(&mut self, tenant: Option<&str>, rate: f64) {
+        if !self.cfg.enabled || !rate.is_finite() {
+            return;
+        }
+        let key = self.tenant_key(tenant);
+        let alpha = self.cfg.ewma_alpha;
+        let rate = rate.clamp(0.0, 1.0);
+        self.acceptance
+            .entry(key)
+            .and_modify(|a| *a = (1.0 - alpha) * *a + alpha * rate)
+            .or_insert(rate);
+    }
+
+    /// Observed acceptance EWMA for a tenant, if any lane of that
+    /// tenant has finished — seeds new lanes' spec priors.
+    pub fn tenant_acceptance(&self, tenant: Option<&str>) -> Option<f64> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        self.acceptance.get(&self.tenant_key(tenant)).copied()
+    }
+
+    // ---- exposition ------------------------------------------------------
+
+    /// Full estimator + ring dump (the `GET /admin/forecast` payload).
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("enabled", self.cfg.enabled);
+        o.insert("step", self.step as usize);
+        o.insert("burst", self.burst.to_json());
+        o.insert("wait", self.wait.to_json());
+        let mut len = Object::new();
+        for (t, est) in &self.len {
+            let key = if t.is_empty() { "default" } else { t.as_str() };
+            len.insert(key, est.to_json());
+        }
+        o.insert("len", len);
+        let mut acc = Object::new();
+        for (t, a) in &self.acceptance {
+            let key = if t.is_empty() { "default" } else { t.as_str() };
+            acc.insert(key, *a);
+        }
+        o.insert("acceptance", acc);
+        let mut arr = Object::new();
+        for (t, n) in &self.tenant_arrivals {
+            let key = if t.is_empty() { "default" } else { t.as_str() };
+            arr.insert(key, *n as usize);
+        }
+        o.insert("tenant_arrivals", arr);
+        o.insert("ring", self.ring.to_json());
+        Value::Object(o)
+    }
+
+    /// Flat calibration gauges for `/metrics`: scalars plus one-level
+    /// per-tenant numeric maps, which `prometheus_text` renders as
+    /// labeled `llm_coopt_forecast_*` gauges for free.
+    pub fn metrics_json(&self, o: &mut Object) {
+        if !self.cfg.enabled {
+            return;
+        }
+        o.insert("forecast_step", self.step as usize);
+        o.insert("forecast_burst_active", usize::from(self.burst.active()));
+        o.insert("forecast_bursts_detected", self.burst.detected() as usize);
+        o.insert("forecast_bursts_resolved", self.burst.resolved() as usize);
+        if let Some(h) = self.burst.hit_rate() {
+            o.insert("forecast_burst_hit_rate", h);
+        }
+        o.insert("forecast_wait_resolved", self.wait.resolved() as usize);
+        if let Some(m) = self.wait.ms_per_load() {
+            o.insert("forecast_wait_ms_per_load", m);
+        }
+        if let Some(c) = self.wait.coverage() {
+            o.insert("forecast_wait_coverage", c);
+        }
+        if let Some(c) = self.len_coverage_pooled() {
+            o.insert("forecast_len_coverage_pooled", c);
+        }
+        let mut p90s = Object::new();
+        let mut coverage = Object::new();
+        let mut mape = Object::new();
+        let mut resolved = Object::new();
+        for (t, est) in &self.len {
+            let key = if t.is_empty() { "default" } else { t.as_str() };
+            if let Some(p90) = est.quantile(0.9) {
+                p90s.insert(key, p90);
+            }
+            if let Some(c) = est.coverage() {
+                coverage.insert(key, c);
+            }
+            if est.mape_n > 0 {
+                mape.insert(key, est.mape());
+            }
+            resolved.insert(key, est.resolved() as usize);
+        }
+        if !p90s.is_empty() {
+            o.insert("forecast_len_p90", p90s);
+        }
+        if !coverage.is_empty() {
+            o.insert("forecast_len_coverage", coverage);
+        }
+        if !mape.is_empty() {
+            o.insert("forecast_len_mape", mape);
+        }
+        if !resolved.is_empty() {
+            o.insert("forecast_len_resolved", resolved);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_on() -> ForecastConfig {
+        ForecastConfig {
+            enabled: true,
+            ..ForecastConfig::default()
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_ordered() {
+        let mut r = SignalRing::new(4);
+        for i in 0..10u64 {
+            r.push(SignalSample {
+                seq: i,
+                ..SignalSample::default()
+            });
+        }
+        assert_eq!(r.len(), 4);
+        let seqs: Vec<u64> = r.iter().map(|s| s.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(r.latest().unwrap().seq, 9);
+    }
+
+    #[test]
+    fn len_quantiles_are_exact_ceil_rank() {
+        let mut e = LenEstimator::default();
+        for x in [10u32, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            e.observe(x);
+        }
+        // ceil-rank over n=10: p50 -> rank 5 -> 50; p90 -> rank 9 -> 90
+        assert_eq!(e.quantile(0.5), Some(50.0));
+        assert_eq!(e.quantile(0.9), Some(90.0));
+        assert_eq!(e.quantile(1.0), Some(100.0));
+        assert_eq!(e.quantile(0.0), Some(10.0)); // rank clamps to 1
+    }
+
+    #[test]
+    fn len_estimator_withholds_until_min_samples() {
+        let mut e = LenEstimator::default();
+        for x in 0..MIN_LEN_SAMPLES as u32 - 1 {
+            e.observe(x + 1);
+            assert_eq!(e.quantile(0.9), None);
+        }
+        e.observe(99);
+        assert!(e.quantile(0.9).is_some());
+    }
+
+    #[test]
+    fn len_coverage_flips_in_band_and_back() {
+        let mut e = LenEstimator::default();
+        // perfectly covered predictions -> in band once past warm-up
+        for _ in 0..8 {
+            e.resolve(10.0, 20.0, 12, 0.2);
+        }
+        assert!(e.in_band(8, 0.8, 1.0));
+        assert_eq!(e.coverage(), Some(1.0));
+        // a run of busted p90s drags recent coverage out of band
+        for _ in 0..COVERAGE_WINDOW {
+            e.resolve(10.0, 20.0, 50, 0.2);
+        }
+        assert_eq!(e.coverage(), Some(0.0));
+        assert!(!e.in_band(8, 0.8, 1.0));
+    }
+
+    #[test]
+    fn burst_detector_fires_on_onset_and_scores_itself() {
+        let mut b = BurstDetector::default();
+        let mut step = 0u64;
+        // long quiet baseline: one arrival every 4 steps
+        for _ in 0..LONG_WINDOW {
+            step += 1;
+            b.tick(step, u64::from(step % 4 == 0), 2.0);
+        }
+        assert!(!b.active(), "steady trickle is not a burst");
+        // onset: 3 arrivals per step
+        let mut fired = false;
+        for _ in 0..SHORT_WINDOW {
+            step += 1;
+            b.tick(step, 3, 2.0);
+            fired |= b.active();
+        }
+        assert!(fired, "8 steps of 3x rate must trip the detector");
+        assert_eq!(b.detected(), 1, "one onset, one detection");
+        // burst persists through the horizon -> scored as a hit
+        for _ in 0..BURST_HORIZON + 1 {
+            step += 1;
+            b.tick(step, 3, 2.0);
+        }
+        assert_eq!(b.resolved(), 1);
+        assert_eq!(b.hit_rate(), Some(1.0));
+    }
+
+    #[test]
+    fn burst_that_vanishes_scores_a_miss() {
+        let mut b = BurstDetector::default();
+        let mut step = 0u64;
+        for _ in 0..LONG_WINDOW {
+            step += 1;
+            b.tick(step, u64::from(step % 2 == 0), 2.0);
+        }
+        // a one-step spike big enough to trip the ratio...
+        step += 1;
+        b.tick(step, 12, 2.0);
+        assert_eq!(b.detected(), 1);
+        // ...then dead silence through the horizon: rate < baseline
+        for _ in 0..BURST_HORIZON + 1 {
+            step += 1;
+            b.tick(step, 0, 2.0);
+        }
+        assert_eq!(b.resolved(), 1);
+        assert_eq!(b.hit_rate(), Some(0.0));
+        assert!(!b.in_band());
+    }
+
+    #[test]
+    fn wait_forecaster_learns_drain_and_covers() {
+        let mut w = WaitForecaster::default();
+        assert_eq!(w.predict_ms(10.0), None);
+        for _ in 0..10 {
+            w.resolve(100.0, 10.0, 50.0, 0.5);
+        }
+        // EWMA converges toward 5 ms per unit load
+        let m = w.ms_per_load().unwrap();
+        assert!((m - 5.0).abs() < 1e-6, "ms_per_load {m}");
+        assert_eq!(w.predict_ms(4.0), Some(m * 4.0));
+        // 50 <= 2*100 + 1: every prediction covered
+        assert_eq!(w.coverage(), Some(1.0));
+        assert!(w.in_band(8, 0.8, 1.0));
+        // gross underestimates (actual >> 2x predicted) break the band
+        for _ in 0..COVERAGE_WINDOW {
+            w.resolve(1.0, 10.0, 1000.0, 0.5);
+        }
+        assert!(!w.in_band(8, 0.8, 1.0));
+    }
+
+    #[test]
+    fn disabled_plane_is_inert() {
+        let mut p = ForecastPlane::new(ForecastConfig::default());
+        assert!(!p.enabled());
+        p.observe_arrival(Some("t0"));
+        p.tick(5, 5, 100, 100, 8);
+        p.observe_len(Some("t0"), 20);
+        p.resolve_len(Some("t0"), 10.0, 20.0, 20);
+        p.resolve_wait(10.0, 5.0, 10.0);
+        p.observe_acceptance(Some("t0"), 0.9);
+        assert_eq!(p.current_step(), 0);
+        assert!(p.ring().is_empty());
+        assert_eq!(p.len_quantiles(Some("t0")), None);
+        assert_eq!(p.predict_wait_ms(10.0), None);
+        assert_eq!(p.admission_tighten(), 1.0);
+        assert_eq!(p.tenant_acceptance(Some("t0")), None);
+        let mut o = Object::new();
+        p.metrics_json(&mut o);
+        assert!(o.is_empty(), "disabled plane adds no metrics keys");
+    }
+
+    #[test]
+    fn plane_gates_len_hint_on_coverage_band() {
+        let mut p = ForecastPlane::new(ForecastConfig {
+            enabled: true,
+            warmup: 4,
+            ..ForecastConfig::default()
+        });
+        // warm-up: raw quantiles appear, hint stays withheld
+        for _ in 0..MIN_LEN_SAMPLES {
+            p.observe_len(Some("t0"), 16);
+        }
+        assert_eq!(p.len_quantiles(Some("t0")), Some((16.0, 16.0)));
+        assert_eq!(p.len_hint_p90(Some("t0")), None, "no resolutions yet");
+        // resolve enough covered predictions to enter the band
+        for _ in 0..4 {
+            p.resolve_len(Some("t0"), 16.0, 16.0, 16);
+        }
+        assert!(p.len_in_band(Some("t0")));
+        assert_eq!(p.len_hint_p90(Some("t0")), Some(16.0));
+        // poison: actuals blow past the p90 until coverage leaves band
+        for _ in 0..COVERAGE_WINDOW {
+            p.resolve_len(Some("t0"), 16.0, 16.0, 64);
+        }
+        assert!(!p.len_in_band(Some("t0")));
+        assert_eq!(p.len_hint_p90(Some("t0")), None, "out of band -> reactive");
+    }
+
+    #[test]
+    fn plane_tightens_only_with_scored_bursts() {
+        let mut p = ForecastPlane::new(ForecastConfig {
+            enabled: true,
+            burst_ratio: 2.0,
+            burst_tighten: 1.5,
+            ..ForecastConfig::default()
+        });
+        // quiet baseline
+        for s in 0..LONG_WINDOW as u64 {
+            if s % 4 == 0 {
+                p.observe_arrival(None);
+            }
+            p.tick(0, 0, 0, 0, 8);
+        }
+        // first burst: active, but unscored -> no tightening yet
+        for _ in 0..SHORT_WINDOW {
+            for _ in 0..3 {
+                p.observe_arrival(None);
+            }
+            p.tick(0, 0, 0, 0, 8);
+        }
+        assert!(p.burst_active());
+        assert!(!p.burst_in_band());
+        assert_eq!(p.admission_tighten(), 1.0);
+        assert_eq!(p.effective_watermark(0), 0);
+        // let two bursts score as hits (sustained rate), separated by
+        // enough quiet to re-arm the onset edge
+        for round in 0..2 {
+            for _ in 0..BURST_HORIZON + 2 {
+                for _ in 0..3 {
+                    p.observe_arrival(None);
+                }
+                p.tick(0, 0, 0, 0, 8);
+            }
+            if round == 0 {
+                for _ in 0..LONG_WINDOW {
+                    p.tick(0, 0, 0, 0, 8);
+                }
+                for _ in 0..SHORT_WINDOW {
+                    for _ in 0..3 {
+                        p.observe_arrival(None);
+                    }
+                    p.tick(0, 0, 0, 0, 8);
+                }
+            }
+        }
+        assert!(p.burst_in_band(), "two sustained bursts score as hits");
+        assert!(p.burst_active());
+        assert_eq!(p.admission_tighten(), 1.5);
+        assert_eq!(p.effective_watermark(0), p.cfg().burst_watermark);
+        assert_eq!(p.effective_watermark(9), 9, "never lowers a higher watermark");
+    }
+
+    #[test]
+    fn acceptance_memory_is_per_tenant_ewma() {
+        let mut p = ForecastPlane::new(cfg_on());
+        p.observe_acceptance(Some("a"), 0.8);
+        p.observe_acceptance(Some("b"), 0.2);
+        assert_eq!(p.tenant_acceptance(Some("a")), Some(0.8));
+        assert_eq!(p.tenant_acceptance(Some("b")), Some(0.2));
+        assert_eq!(p.tenant_acceptance(None), None);
+        p.observe_acceptance(Some("a"), 0.0);
+        let a = p.tenant_acceptance(Some("a")).unwrap();
+        assert!(a < 0.8 && a > 0.0, "EWMA moved toward the new sample: {a}");
+    }
+
+    #[test]
+    fn tenant_overflow_folds_into_default_bucket() {
+        let mut p = ForecastPlane::new(cfg_on());
+        for i in 0..MAX_TENANTS + 10 {
+            p.observe_len(Some(&format!("t{i}")), 8);
+        }
+        // the 10 overflow tenants all landed in "" — which therefore
+        // has enough samples to answer, while t-many never existed
+        assert!(p.len_quantiles(None).is_some());
+        assert_eq!(
+            p.len_quantiles(Some(&format!("t{}", MAX_TENANTS + 5))),
+            p.len_quantiles(None),
+            "overflow tenants read the shared bucket"
+        );
+    }
+
+    #[test]
+    fn metrics_and_admin_json_expose_calibration() {
+        let mut p = ForecastPlane::new(ForecastConfig {
+            enabled: true,
+            warmup: 2,
+            ..ForecastConfig::default()
+        });
+        for _ in 0..4 {
+            p.resolve_len(Some("t0"), 10.0, 20.0, 12);
+            p.resolve_wait(5.0, 2.0, 4.0);
+        }
+        p.tick(1, 2, 30, 40, 5);
+        let mut o = Object::new();
+        p.metrics_json(&mut o);
+        assert!(o.get("forecast_step").is_some());
+        assert!(o.get("forecast_len_coverage_pooled").is_some());
+        let p90s = o.get("forecast_len_p90").unwrap().as_object().unwrap();
+        assert!(p90s.get("t0").is_some());
+        let dump = p.to_json();
+        assert_eq!(dump.get("step").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            dump.get("ring").unwrap().as_array().unwrap().len(),
+            1,
+            "one tick, one sample"
+        );
+        let t0 = dump.get("len").unwrap().get("t0").unwrap();
+        assert_eq!(t0.get("resolved").unwrap().as_usize(), Some(4));
+    }
+}

@@ -21,6 +21,8 @@
 //! timelines per engine, dumped by `GET /admin/trace` and exportable as
 //! Chrome `trace_event` JSON ([`chrome_trace`]) from the bench harness.
 
+pub mod forecast;
+
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -111,6 +113,17 @@ pub struct ReqTrace {
     /// can be swapped mid-prefill or mid-decode)
     pub resume_phase: Phase,
     pub preemptions: u64,
+    /// predicted output-length quantiles stamped at admission by the
+    /// engine's forecast plane (self-scoring: resolved at finish
+    /// against `actual_len`)
+    pub predicted_len_p50: Option<f64>,
+    pub predicted_len_p90: Option<f64>,
+    /// queue-wait prediction (ms) the router's admission decision used
+    pub predicted_wait_ms: Option<f64>,
+    /// outcomes written at finish — generated tokens and observed queue
+    /// wait — so every trace carries its own calibration evidence
+    pub actual_len: Option<u64>,
+    pub actual_wait_ms: Option<f64>,
     events: Vec<TraceEvent>,
     events_enabled: bool,
     dropped_events: u64,
@@ -131,6 +144,11 @@ impl ReqTrace {
             sim_s: 0.0,
             resume_phase: Phase::Decode,
             preemptions: 0,
+            predicted_len_p50: None,
+            predicted_len_p90: None,
+            predicted_wait_ms: None,
+            actual_len: None,
+            actual_wait_ms: None,
             events: Vec::new(),
             events_enabled,
             dropped_events: 0,
@@ -242,6 +260,29 @@ impl ReqTrace {
         }
         o.insert("phases", breakdown.to_json());
         o.insert("preemptions", self.preemptions as usize);
+        if self.predicted_len_p50.is_some()
+            || self.predicted_len_p90.is_some()
+            || self.predicted_wait_ms.is_some()
+            || self.actual_len.is_some()
+        {
+            let mut f = Object::new();
+            if let Some(v) = self.predicted_len_p50 {
+                f.insert("predicted_len_p50", v);
+            }
+            if let Some(v) = self.predicted_len_p90 {
+                f.insert("predicted_len_p90", v);
+            }
+            if let Some(v) = self.predicted_wait_ms {
+                f.insert("predicted_wait_ms", v);
+            }
+            if let Some(v) = self.actual_len {
+                f.insert("actual_len", v as usize);
+            }
+            if let Some(v) = self.actual_wait_ms {
+                f.insert("actual_wait_ms", v);
+            }
+            o.insert("forecast", f);
+        }
         let mut evs = Vec::with_capacity(self.events.len());
         for e in &self.events {
             let mut eo = Object::new();
@@ -910,6 +951,102 @@ mod tests {
         let mut ab = a.clone();
         ab.merge(&b);
         assert_eq!(ab.counts(), ba.counts());
+    }
+
+    #[test]
+    fn hist_empty_percentiles_are_nan_at_every_q() {
+        let e = LatencyHist::new();
+        for q in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert!(e.percentile(q).is_nan(), "empty hist must be NaN at q={q}");
+        }
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.sum(), 0.0);
+    }
+
+    #[test]
+    fn hist_single_sample_every_percentile_is_the_sample() {
+        let h = hist_of(&[0.0123]);
+        for q in [0.0, 1.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(
+                h.percentile(q),
+                0.0123,
+                "one sample: min==max clamps every q to it (q={q})"
+            );
+        }
+        assert_eq!(h.min(), h.max());
+        assert_eq!(h.mean(), 0.0123);
+    }
+
+    #[test]
+    fn hist_overflow_bucket_percentiles_stay_in_range() {
+        // every sample beyond the last finite bound lands in overflow;
+        // percentiles must interpolate against the recorded max, not
+        // the (infinite) bucket bound
+        let top = hist_bound(HIST_BUCKETS - 1);
+        let h = hist_of(&[top * 2.0, top * 4.0, top * 8.0]);
+        assert_eq!(h.counts()[HIST_BUCKETS], 3, "all in overflow");
+        for q in [50.0, 90.0, 99.0] {
+            let p = h.percentile(q);
+            assert!(
+                p >= h.min() && p <= h.max(),
+                "overflow percentile q={q} out of [min,max]: {p}"
+            );
+        }
+        assert_eq!(h.percentile(100.0), h.max());
+        // mixed: one finite-bucket sample, rest overflow — p99 still
+        // bounded by max
+        let m = hist_of(&[1e-3, top * 2.0, top * 2.0, top * 2.0]);
+        assert!(m.percentile(99.0) <= m.max());
+        assert!(m.percentile(1.0) >= m.min());
+    }
+
+    #[test]
+    fn hist_merge_of_disjoint_buckets_is_union() {
+        // a occupies only low buckets, b only high ones — the merge
+        // must interleave exactly, not average
+        let a = hist_of(&[1e-6, 2e-6, 4e-6, 8e-6]);
+        let b = hist_of(&[1.0, 2.0, 4.0, 8.0]);
+        let mut m = a.clone();
+        m.merge(&b);
+        let union = hist_of(&[1e-6, 2e-6, 4e-6, 8e-6, 1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(m.counts(), union.counts());
+        assert_eq!(m.min(), 1e-6);
+        assert_eq!(m.max(), 8.0);
+        // p50 comes from a's half, p99 from b's half
+        assert!(m.percentile(50.0) < 1e-4, "low half owns the median");
+        assert!(m.percentile(99.0) > 1.0, "high half owns the tail");
+        for q in [25.0, 50.0, 75.0, 99.0] {
+            assert_eq!(m.percentile(q), union.percentile(q));
+        }
+        // merging an empty histogram is the identity
+        let mut id = a.clone();
+        id.merge(&LatencyHist::new());
+        assert_eq!(id.counts(), a.counts());
+        assert_eq!(id.min(), a.min());
+        assert_eq!(id.max(), a.max());
+    }
+
+    #[test]
+    fn trace_forecast_stamps_travel_to_json() {
+        let t0 = Instant::now();
+        let mut tr = ReqTrace::new(7, t0, true);
+        let b = tr.finish(t0 + Duration::from_millis(2));
+        assert!(
+            !tr.to_json(&b).to_string().contains("forecast"),
+            "no stamps: no forecast object"
+        );
+        tr.predicted_len_p50 = Some(12.0);
+        tr.predicted_len_p90 = Some(30.0);
+        tr.predicted_wait_ms = Some(4.5);
+        tr.actual_len = Some(28);
+        tr.actual_wait_ms = Some(3.25);
+        let j = tr.to_json(&b);
+        let f = j.get("forecast").expect("forecast object");
+        assert_eq!(f.req_f64("predicted_len_p50").unwrap(), 12.0);
+        assert_eq!(f.req_f64("predicted_len_p90").unwrap(), 30.0);
+        assert_eq!(f.req_f64("predicted_wait_ms").unwrap(), 4.5);
+        assert_eq!(f.req_usize("actual_len").unwrap(), 28);
+        assert_eq!(f.req_f64("actual_wait_ms").unwrap(), 3.25);
     }
 
     #[test]

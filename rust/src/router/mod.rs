@@ -84,9 +84,10 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{OptConfig, ReplicaRole, ReqClass, RouterPolicy, SloConfig};
+use crate::config::{ForecastConfig, OptConfig, ReplicaRole, ReqClass, RouterPolicy, SloConfig};
 use crate::coordinator::{Engine, GenRequest, GenResult};
 use crate::kvcache::{leading_prefix_hash, prefix_chain_hashes, SeqId};
+use crate::obs::forecast::{ForecastPlane, ForecastStamp};
 use crate::obs::LatencyHist;
 use crate::platform::{replica_imbalance, CostModel};
 use crate::runtime::Backend;
@@ -155,6 +156,25 @@ pub fn request_cost_estimate(prompt_tokens: usize, max_new_tokens: usize) -> f64
     prompt_tokens as f64 + 5.0 * max_new_tokens as f64
 }
 
+/// [`request_cost_estimate`] with an optional per-tenant p90 output
+/// length from the forecast plane: `max_new` is a *limit*, not a
+/// prediction, and most requests stop at EOS far short of it — when the
+/// tenant's length estimator is in its calibration band, the p90 caps
+/// the decode term.  `None` (estimator cold, out of band, or
+/// forecasting off) reproduces the unhinted estimate exactly.
+pub fn request_cost_estimate_hinted(
+    prompt_tokens: usize,
+    max_new_tokens: usize,
+    len_p90: Option<f64>,
+) -> f64 {
+    match len_p90 {
+        Some(p90) => {
+            prompt_tokens as f64 + 5.0 * (max_new_tokens as f64).min(p90.max(1.0))
+        }
+        None => request_cost_estimate(prompt_tokens, max_new_tokens),
+    }
+}
+
 /// The least-loaded policy's score (lower = preferred).  Backlog in
 /// token-equivalents, discounted by measured service speed, inflated by
 /// KV pressure: a nearly-full device pool will preempt or swap on
@@ -164,13 +184,13 @@ pub fn load_score(l: &ReplicaLoad) -> f64 {
     let backlog = l.outstanding_tokens + 4.0 * l.queue_depth as f64;
     // service-speed discount: a replica whose verify rounds commit s
     // tokens/round drains its backlog s× faster.  tokens_per_step is a
-    // run-cumulative average, so the credit is capped at 2x — a stale
-    // speculation-era high cannot indefinitely hide a since-demoted
-    // replica's true 1x service rate
+    // windowed EWMA of recent rounds (not the run-cumulative average),
+    // so a since-demoted replica's score tracks its true current rate
+    // and the credit needs no stale-signal cap
     let speed = if l.gemm_bound {
         1.0
     } else {
-        l.tokens_per_step.clamp(1.0, 2.0)
+        l.tokens_per_step.max(1.0)
     };
     let pressure = if l.total_device_blocks > 0 {
         let free = l.free_device_blocks as f64 + 0.5 * l.free_host_blocks as f64;
@@ -200,13 +220,28 @@ pub const SLO_MS_PER_TOKEN: f64 = 2.0;
 /// what admission optimism cost the last time.  No routable replica
 /// projects an infinite wait.
 pub fn projected_wait_ms(loads: &[ReplicaLoad], observed_queue_p95_s: f64) -> f64 {
+    projected_wait_ms_with(loads, observed_queue_p95_s, None)
+}
+
+/// [`projected_wait_ms`] with an optional *learned* drain rate from the
+/// queue-wait forecaster (ms of wait per unit of load score).  `None`
+/// (forecaster cold, out of band, or forecasting off) falls back to the
+/// [`SLO_MS_PER_TOKEN`] constant — bit-identical to the reactive
+/// projection.  The observed-p95 floor applies either way: the
+/// forecaster replaces the constant, not the memory of past queueing.
+pub fn projected_wait_ms_with(
+    loads: &[ReplicaLoad],
+    observed_queue_p95_s: f64,
+    drain_ms_per_load: Option<f64>,
+) -> f64 {
     let best = loads
         .iter()
         .filter(|l| l.healthy && !l.draining)
         .map(load_score)
         .fold(f64::INFINITY, f64::min);
     if best.is_finite() {
-        (best * SLO_MS_PER_TOKEN).max(observed_queue_p95_s * 1e3)
+        let ms_per = drain_ms_per_load.unwrap_or(SLO_MS_PER_TOKEN);
+        (best * ms_per).max(observed_queue_p95_s * 1e3)
     } else {
         f64::INFINITY
     }
@@ -284,6 +319,23 @@ pub fn admission_decision(
         }
     }
     None
+}
+
+/// The admission knobs under a scored burst: while the arrival-burst
+/// detector is firing *and* in band, the bounded batch queue shrinks by
+/// the tighten factor so batch work sheds earlier into the arrival wave
+/// (the projected-wait multiplier alone cannot act until the queue has
+/// already built).  `tighten <= 1.0` — no burst, detector out of band,
+/// or forecasting off — returns the knobs unchanged, so the reactive
+/// path is bit-identical.
+pub fn tightened_slo(slo: &SloConfig, tighten: f64) -> SloConfig {
+    if tighten <= 1.0 {
+        return *slo;
+    }
+    SloConfig {
+        max_batch_queue: ((slo.max_batch_queue as f64 / tighten).ceil() as usize).max(1),
+        ..*slo
+    }
 }
 
 /// Marker every shed error starts with; the HTTP layer string-matches it
@@ -510,6 +562,12 @@ struct AdmitDebit {
     batch: bool,
     tenant: Option<String>,
     prompt_tokens: f64,
+    /// router-plane length stamp (p50, p90) in force at admission —
+    /// resolved against the actual generated length at settle
+    len_pred: Option<(f64, f64)>,
+    /// router-plane wait stamp: (predicted ms, load score it was quoted
+    /// at) — resolved against the actual queue wait at settle
+    wait_pred: Option<(f64, f64)>,
 }
 
 /// Synchronous N-replica cluster: owns the engines, routes at submit
@@ -551,6 +609,10 @@ pub struct Router<B: Backend> {
     /// results collected by [`Router::step_all`] before the closing
     /// [`Router::run_to_completion`] (open-loop driving)
     completed: HashMap<(usize, SeqId), GenResult>,
+    /// router-level predictive plane: arrival/burst tracking, the
+    /// queue-wait forecaster, and per-tenant length hints for the cost
+    /// estimate ([`Router::with_forecast`]; default off = reactive)
+    forecast: ForecastPlane,
 }
 
 impl<B: Backend> Router<B> {
@@ -585,6 +647,7 @@ impl<B: Backend> Router<B> {
             admitted: HashMap::new(),
             routed: Vec::new(),
             completed: HashMap::new(),
+            forecast: ForecastPlane::new(ForecastConfig::default()),
         }
     }
 
@@ -599,6 +662,25 @@ impl<B: Backend> Router<B> {
     pub fn with_slo(mut self, slo: SloConfig) -> Self {
         self.slo = slo;
         self
+    }
+
+    /// Enable the router-level predictive plane (benches/tests; the
+    /// serving path takes it from the engine config via
+    /// [`RouterHandle::with_forecast`]).
+    pub fn with_forecast(mut self, fc: ForecastConfig) -> Self {
+        self.forecast = ForecastPlane::new(fc);
+        self
+    }
+
+    /// The router-level predictive plane (calibration reads).
+    pub fn forecast(&self) -> &ForecastPlane {
+        &self.forecast
+    }
+
+    /// Mutable plane access — property tests poison estimators through
+    /// this to prove out-of-band coverage falls back to reactive control.
+    pub fn forecast_mut(&mut self) -> &mut ForecastPlane {
+        &mut self.forecast
     }
 
     /// Requests refused by the admission controller so far.
@@ -723,6 +805,7 @@ impl<B: Backend> Router<B> {
         if self.policy == RouterPolicy::Directory {
             self.sync_directory();
         }
+        self.forecast.observe_arrival(req.class.tenant.as_deref());
         let pd_active = self.roles.iter().any(|&r| r != ReplicaRole::Mixed);
         // round-robin reads neither the cost estimate nor the prefix
         // key, so it skips the router-side tokenization entirely — but
@@ -748,13 +831,38 @@ impl<B: Backend> Router<B> {
                     _ => Vec::new(),
                 };
                 (
-                    request_cost_estimate(tokens.len(), req.max_new_tokens),
+                    // an in-band per-tenant p90 caps the decode term of
+                    // the cost estimate; None reproduces the `5x max_new`
+                    // guess exactly
+                    request_cost_estimate_hinted(
+                        tokens.len(),
+                        req.max_new_tokens,
+                        self.forecast.len_hint_p90(req.class.tenant.as_deref()),
+                    ),
                     chain,
                     tokens.len(),
                 )
             }
         };
         let loads = self.loads();
+        // band-independent stamps: every prediction is scored at settle
+        // whether or not admission consumed it (self-scoring contract)
+        let len_pred = self.forecast.len_quantiles(req.class.tenant.as_deref());
+        let best_score = loads
+            .iter()
+            .filter(|l| l.healthy && !l.draining)
+            .map(load_score)
+            .fold(f64::INFINITY, f64::min);
+        let wait_pred = if self.forecast.enabled() && best_score.is_finite() {
+            // the reactive quote bootstraps the forecaster's first sample
+            let quote = self
+                .forecast
+                .wait_quote_ms(best_score)
+                .unwrap_or(best_score * SLO_MS_PER_TOKEN);
+            Some((quote, best_score))
+        } else {
+            None
+        };
         if self.slo.admission {
             let tenant_out = req
                 .class
@@ -763,12 +871,23 @@ impl<B: Backend> Router<B> {
                 .and_then(|t| self.tenant_tokens.get(t))
                 .copied()
                 .unwrap_or(0.0);
+            // the learned drain rate replaces the SLO_MS_PER_TOKEN
+            // constant while in band, and a scored burst pre-tightens
+            // admission ahead of the arrival wave (wait multiplied,
+            // batch-queue bound divided); every lever is 1:1 with the
+            // reactive path when cold or out of band
+            let tighten = self.forecast.admission_tighten();
+            let wait = projected_wait_ms_with(
+                &loads,
+                self.observed_queue_p95_s(),
+                self.forecast.wait_ms_per_load(),
+            ) * tighten;
             if let Some(shed) = admission_decision(
-                &self.slo,
+                &tightened_slo(&self.slo, tighten),
                 &req.class,
                 prompt_tokens,
                 self.batch_queued,
-                projected_wait_ms(&loads, self.observed_queue_p95_s()),
+                wait,
                 tenant_out,
                 self.tenant_total,
             ) {
@@ -847,8 +966,22 @@ impl<B: Backend> Router<B> {
             batch: !req.class.priority.is_interactive(),
             tenant: req.class.tenant.clone(),
             prompt_tokens: prompt_tokens as f64,
+            len_pred,
+            wait_pred,
         };
         let id = self.replicas[choice].submit(req)?;
+        // carry the router-plane wait prediction onto the request's
+        // trace so predicted-vs-actual lands in the flight recorder
+        // (length stamps are the engine plane's own, made at submit)
+        if let Some((quote, _)) = wait_pred {
+            self.replicas[choice].stamp_forecast(
+                id,
+                ForecastStamp {
+                    wait_ms: Some(quote),
+                    ..ForecastStamp::default()
+                },
+            );
+        }
         self.outstanding[choice] += cost;
         if debit.batch {
             self.batch_queued += 1;
@@ -866,8 +999,25 @@ impl<B: Backend> Router<B> {
     /// slot and tenant prefill tokens) — called wherever a result comes
     /// back, so cancellations and failures release exactly like
     /// successes.
-    fn settle(&mut self, key: (usize, SeqId)) {
+    fn settle(&mut self, key: (usize, SeqId), r: &GenResult) {
         let Some(d) = self.admitted.remove(&key) else { return };
+        // score the admission-time stamps against the outcome before
+        // releasing the books (self-scoring: consumed or not)
+        if self.forecast.enabled() {
+            let tenant = d.tenant.as_deref();
+            let actual_len = r.generated_tokens as u32;
+            match d.len_pred {
+                Some((p50, p90)) => {
+                    self.forecast.resolve_len(tenant, p50, p90, actual_len)
+                }
+                // unstamped finishes still teach the window (warm-up)
+                None => self.forecast.observe_len(tenant, actual_len),
+            }
+            if let Some((pred_ms, load)) = d.wait_pred {
+                self.forecast
+                    .resolve_wait(pred_ms, load, r.phases.queue_s * 1e3);
+            }
+        }
         if d.batch {
             self.batch_queued = self.batch_queued.saturating_sub(1);
         }
@@ -896,13 +1046,37 @@ impl<B: Backend> Router<B> {
             // parked sequences wait on dispatch, not stepping
             if self.replicas[i].num_pending() > self.replicas[i].num_migrating() {
                 for r in self.replicas[i].step()? {
-                    self.settle((i, r.id));
+                    self.settle((i, r.id), &r);
                     self.completed.insert((i, r.id), r);
                 }
             }
         }
         self.dispatch_handoffs()?;
+        self.tick_forecast();
         Ok(())
+    }
+
+    /// Advance the router-level plane one step: sample cluster-aggregate
+    /// signals and feed the burst detector the arrivals accumulated
+    /// since the last [`Router::step_all`] round.  No-op with
+    /// forecasting off.
+    fn tick_forecast(&mut self) {
+        if !self.forecast.enabled() {
+            return;
+        }
+        let mut pending = 0usize;
+        let mut free = 0usize;
+        let mut prefill = 0u64;
+        let mut decode = 0u64;
+        for e in &self.replicas {
+            let s = e.load_signals();
+            pending += s.pending;
+            free += s.free_device_blocks;
+            prefill += e.metrics.prefill_tokens_committed;
+            decode += e.metrics.decode_tokens_committed;
+        }
+        self.forecast
+            .tick(pending, self.admitted.len(), prefill, decode, free);
     }
 
     /// Collect parked sequences from prefill-role replicas and re-admit
@@ -969,7 +1143,7 @@ impl<B: Backend> Router<B> {
         if !pd_active {
             for i in 0..self.replicas.len() {
                 for r in self.replicas[i].run_to_completion()? {
-                    self.settle((i, r.id));
+                    self.settle((i, r.id), &r);
                     by_key.insert((i, r.id), r);
                 }
                 self.outstanding[i] = 0.0;
@@ -984,7 +1158,7 @@ impl<B: Backend> Router<B> {
                     // parked sequences wait on dispatch, not stepping
                     if self.replicas[i].num_pending() > self.replicas[i].num_migrating() {
                         for r in self.replicas[i].step()? {
-                            self.settle((i, r.id));
+                            self.settle((i, r.id), &r);
                             by_key.insert((i, r.id), r);
                         }
                         progressed = true;
@@ -1078,6 +1252,14 @@ struct RouteState {
     /// outstanding prefill tokens per tenant, and their cluster total
     tenant_tokens: HashMap<String, f64>,
     tenant_total: f64,
+    /// the router's own predictive plane (default-off; see
+    /// [`RouterHandle::with_forecast`]) — ticked off the replicas'
+    /// snapshot seq stream, so its step clock advances with cluster
+    /// progress rather than with request arrivals
+    forecast: ForecastPlane,
+    /// highest snapshot `seq` the forecast plane has ticked on (each
+    /// published engine step advances the plane at most once)
+    forecast_last_seq: u64,
 }
 
 /// Cluster keys summed across replica snapshots for the aggregated
@@ -1205,6 +1387,8 @@ impl RouterHandle {
                 batch_queued: 0,
                 tenant_tokens: HashMap::new(),
                 tenant_total: 0.0,
+                forecast: ForecastPlane::new(ForecastConfig::default()),
+                forecast_last_seq: 0,
             }),
         }
     }
@@ -1236,6 +1420,8 @@ impl RouterHandle {
                 batch_queued: 0,
                 tenant_tokens: HashMap::new(),
                 tenant_total: 0.0,
+                forecast: ForecastPlane::new(ForecastConfig::default()),
+                forecast_last_seq: 0,
             }),
         }
     }
@@ -1244,6 +1430,14 @@ impl RouterHandle {
     /// config's [`SloConfig`] through; default leaves admission off).
     pub fn with_slo(mut self, slo: SloConfig) -> Self {
         self.slo = slo;
+        self
+    }
+
+    /// Give the router its own predictive plane (the serve path passes
+    /// the engine config's [`ForecastConfig`] through; default off).
+    pub fn with_forecast(mut self, fc: ForecastConfig) -> Self {
+        let st = self.state.get_mut().unwrap_or_else(|p| p.into_inner());
+        st.forecast = ForecastPlane::new(fc);
         self
     }
 
@@ -1361,6 +1555,35 @@ impl RouterHandle {
             .collect()
     }
 
+    /// Advance the router plane's step clock off the replicas' snapshot
+    /// stream: tick once per newly-published max engine step, feeding
+    /// cluster-aggregate signals, so the signal ring and burst windows
+    /// move with cluster progress rather than with request arrivals.
+    fn tick_forecast_locked(&self, st: &mut RouteState) {
+        if !st.forecast.enabled() {
+            return;
+        }
+        let mut max_seq = 0u64;
+        let mut pending = 0usize;
+        let mut free = 0usize;
+        let mut prefill = 0u64;
+        let mut decode = 0u64;
+        let mut running = 0usize;
+        for r in self.replicas.iter() {
+            let snap = r.handle.snapshot();
+            max_seq = max_seq.max(snap.seq);
+            pending += snap.pending;
+            free += snap.free_device_blocks;
+            prefill += snap.prefill_tokens_committed;
+            decode += snap.decode_tokens_committed;
+            running += r.in_flight.load(Ordering::Relaxed);
+        }
+        if max_seq > st.forecast_last_seq {
+            st.forecast_last_seq = max_seq;
+            st.forecast.tick(pending, running, prefill, decode, free);
+        }
+    }
+
     /// The cluster's observed queue-wait p95 (merged across replica
     /// snapshots) — the admission controller's memory of past queueing.
     fn observed_queue_p95_s(&self) -> f64 {
@@ -1407,7 +1630,7 @@ impl RouterHandle {
         // key, so it skips the router-side tokenization entirely — but
         // PD placement needs the prompt length, and admission the
         // tenant's prefill tokens, so either forces it on
-        let (cost, chain, prompt_tokens) = match self.policy {
+        let (mut cost, chain, prompt_tokens) = match self.policy {
             RouterPolicy::RoundRobin if !pd_active && !self.slo.admission => {
                 (0.0, Vec::new(), 0)
             }
@@ -1436,6 +1659,10 @@ impl RouterHandle {
         } else {
             0.0
         };
+        // router-plane predictions made on the first routing attempt,
+        // taken and resolved once against the final result at settle
+        let mut len_pred: Option<(f64, f64)> = None;
+        let mut wait_pred: Option<(f64, f64)> = None;
         // `exclude` is the replica that already failed this request:
         // `None` on the first attempt, `Some` on the single retry
         let mut exclude: Option<usize> = None;
@@ -1447,6 +1674,23 @@ impl RouterHandle {
                 // poison would wedge every subsequent request permanently.
                 let mut guard = self.state.lock().unwrap_or_else(|p| p.into_inner());
                 let st = &mut *guard;
+                self.tick_forecast_locked(st);
+                if exclude.is_none() {
+                    // arrivals are observed before any shed decision so
+                    // turned-away traffic still feeds the burst detector
+                    st.forecast.observe_arrival(req.class.tenant.as_deref());
+                    if cost > 0.0 {
+                        // refine the admission/placement cost with the
+                        // tenant's learned p90 output length (in-band
+                        // hint only; None reproduces the static guess)
+                        cost = request_cost_estimate_hinted(
+                            prompt_tokens,
+                            req.max_new_tokens,
+                            st.forecast.len_hint_p90(req.class.tenant.as_deref()),
+                        );
+                    }
+                    len_pred = st.forecast.len_quantiles(req.class.tenant.as_deref());
+                }
                 if self.policy == RouterPolicy::Directory {
                     // fold each replica's newly-published prefix deltas into
                     // the directory (eventual consistency over the snapshot
@@ -1476,17 +1720,43 @@ impl RouterHandle {
                         .and_then(|t| st.tenant_tokens.get(t))
                         .copied()
                         .unwrap_or(0.0);
+                    // the wait forecast (when calibrated) replaces the
+                    // static drain-rate constant, and an active burst
+                    // pre-tightens admission ahead of the queue growth
+                    // (wait multiplied, batch-queue bound divided)
+                    let tighten = st.forecast.admission_tighten();
                     if let Some(shed) = admission_decision(
-                        &self.slo,
+                        &tightened_slo(&self.slo, tighten),
                         &req.class,
                         prompt_tokens,
                         st.batch_queued,
-                        projected_wait_ms(&loads, observed_queue_p95_s),
+                        projected_wait_ms_with(
+                            &loads,
+                            observed_queue_p95_s,
+                            st.forecast.wait_ms_per_load(),
+                        ) * tighten,
                         tenant_out,
                         st.tenant_total,
                     ) {
                         self.shed_requests.fetch_add(1, Ordering::Relaxed);
                         return Err(shed_error(&req.class, &shed));
+                    }
+                }
+                if exclude.is_none() && st.forecast.enabled() {
+                    // quote the queue wait this request is being admitted
+                    // into (reactive drain model until the forecaster has
+                    // its first resolved sample) and score it at settle
+                    let best = loads
+                        .iter()
+                        .filter(|l| l.healthy && !l.draining)
+                        .map(load_score)
+                        .fold(f64::INFINITY, f64::min);
+                    if best.is_finite() {
+                        let quote = st
+                            .forecast
+                            .wait_quote_ms(best)
+                            .unwrap_or(best * SLO_MS_PER_TOKEN);
+                        wait_pred = Some((quote, best));
                     }
                 }
                 let probe = match self.policy {
@@ -1596,6 +1866,25 @@ impl RouterHandle {
                 }
                 st.tenant_total = (st.tenant_total - tok).max(0.0);
             }
+            // score the router plane's predictions against the final
+            // outcome (the take()s make each resolve at most once)
+            if let Ok(r) = &result {
+                match len_pred.take() {
+                    Some((p50, p90)) => st.forecast.resolve_len(
+                        req.class.tenant.as_deref(),
+                        p50,
+                        p90,
+                        r.generated_tokens as u32,
+                    ),
+                    None => st.forecast.observe_len(
+                        req.class.tenant.as_deref(),
+                        r.generated_tokens as u32,
+                    ),
+                }
+                if let Some((pred_ms, load)) = wait_pred.take() {
+                    st.forecast.resolve_wait(pred_ms, load, r.phases.queue_s * 1e3);
+                }
+            }
             drop(st);
             match result {
                 // the serving replica failed under the request and a
@@ -1642,13 +1931,18 @@ impl RouterHandle {
         // router-level overload counters (these live above any replica)
         top.insert("shed_requests", self.shed_requests() as usize);
         top.insert("router_retries", self.router_retries() as usize);
-        top.insert(
-            "batch_queue_depth",
-            self.state
-                .lock()
-                .unwrap_or_else(|p| p.into_inner())
-                .batch_queued,
-        );
+        {
+            let st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            top.insert("batch_queue_depth", st.batch_queued);
+            // the router plane's calibration gauges, nested so they can
+            // never collide with the flat per-replica forecast keys that
+            // the N = 1 path hoists to top level
+            let mut fo = Object::new();
+            st.forecast.metrics_json(&mut fo);
+            if !fo.is_empty() {
+                top.insert("router_forecast", Value::Object(fo));
+            }
+        }
         let role_names: Vec<Value> = self
             .roles_vec()
             .into_iter()
@@ -1660,9 +1954,19 @@ impl RouterHandle {
             .zip(snaps.iter())
             .zip(self.status())
             .map(|((v, snap), st)| {
+                let h = &self.replicas[st.replica].handle;
                 let mut o = Object::new();
                 o.insert("replica", st.replica);
                 o.insert("seq", snap.seq as usize);
+                // signal freshness: how many engine steps this snapshot
+                // lags the replica's live step counter, and how long the
+                // replica has been up — scrapers can spot a wedged
+                // publisher without diffing seq themselves
+                o.insert(
+                    "snapshot_age_steps",
+                    crate::server::snapshot_age_steps(h.current_step(), snap.seq) as usize,
+                );
+                o.insert("uptime_s", h.uptime_s());
                 o.insert("healthy", st.healthy);
                 o.insert("draining", st.draining);
                 o.insert("in_flight", st.in_flight);
@@ -1700,6 +2004,37 @@ impl RouterHandle {
             })
             .collect();
         let mut top = Object::new();
+        top.insert("replicas", Value::Array(reps));
+        Value::Object(top).to_string()
+    }
+
+    /// The `GET /admin/forecast` payload: the router's own predictive
+    /// plane plus each replica's signal ring + estimator states (dumped
+    /// through the engine threads, so every replica view is a consistent
+    /// post-step one; a dead replica contributes `null`).
+    pub fn forecast_json(&self) -> String {
+        let router_plane = self
+            .state
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .forecast
+            .to_json();
+        let reps: Vec<Value> = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut o = Object::new();
+                o.insert("replica", i);
+                o.insert(
+                    "forecast",
+                    r.handle.forecast_json().unwrap_or(Value::Null),
+                );
+                Value::Object(o)
+            })
+            .collect();
+        let mut top = Object::new();
+        top.insert("router", router_plane);
         top.insert("replicas", Value::Array(reps));
         Value::Object(top).to_string()
     }
@@ -2119,13 +2454,17 @@ mod tests {
             pick(RouterPolicy::LeastLoaded, &ls, None, &mut rr, 1.0, 1.0),
             Some(1)
         );
-        // a speculating replica drains its backlog faster (credit capped
-        // at 2x: the gauge is a run-cumulative average)...
+        // a speculating replica drains its backlog faster — the gauge is
+        // a windowed EWMA of recent rounds, so the full measured rate is
+        // credited (no stale-signal cap)...
         ls[0].tokens_per_step = 3.0;
-        assert!((load_score(&ls[0]) - 50.0).abs() < 1e-9, "100 tokens at capped 2x");
+        assert!(
+            (load_score(&ls[0]) - 100.0 / 3.0).abs() < 1e-9,
+            "100 tokens at a 3x recent rate"
+        );
         assert!(load_score(&ls[0]) < load_score(&ls[2]));
         ls[0].tokens_per_step = 10.0;
-        assert!((load_score(&ls[0]) - 50.0).abs() < 1e-9, "credit stays capped");
+        assert!((load_score(&ls[0]) - 10.0).abs() < 1e-9, "full 10x credit");
         // ...unless it is GEMM-bound (no amortization left)
         ls[0].gemm_bound = true;
         assert!(load_score(&ls[0]) > load_score(&ls[2]));

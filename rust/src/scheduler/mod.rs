@@ -519,12 +519,28 @@ impl Scheduler {
     /// all-interactive batch falls back to the classic newest-admission
     /// order, so interactive KV survives overload longest.
     pub fn peek_preempt_victim(&self) -> Option<SeqId> {
-        self.running
-            .iter()
-            .filter(|e| !e.class.is_interactive())
-            .max_by_key(|e| e.admitted_at)
-            .or_else(|| self.running.iter().max_by_key(|e| e.admitted_at))
-            .map(|e| e.id)
+        self.peek_preempt_victim_by(|_| None)
+    }
+
+    /// [`Scheduler::peek_preempt_victim`] with a forecast hint: among
+    /// the class-preferred candidates, evict the lane with the most
+    /// predicted *remaining* tokens (furthest from finishing — its KV
+    /// would occupy the device longest before paying off).  `remaining`
+    /// returns `None` for lanes without an in-band length forecast;
+    /// hinted lanes always outrank unhinted ones, ties and the all-
+    /// `None` case fall back to newest-admission order exactly, so a
+    /// cold or out-of-band estimator reproduces the reactive choice
+    /// bit-for-bit.
+    pub fn peek_preempt_victim_by<F>(&self, remaining: F) -> Option<SeqId>
+    where
+        F: Fn(SeqId) -> Option<u64>,
+    {
+        let pick = |it: &mut dyn Iterator<Item = &Entry>| {
+            it.max_by_key(|e| (remaining(e.id).map(|r| (1u8, r)), e.admitted_at))
+                .map(|e| e.id)
+        };
+        pick(&mut self.running.iter().filter(|e| !e.class.is_interactive()))
+            .or_else(|| pick(&mut self.running.iter()))
     }
 
     fn take_running(&mut self, id: SeqId) -> Option<Entry> {
@@ -1250,6 +1266,34 @@ mod tests {
         assert_eq!(s.peek_preempt_victim(), Some(3));
         assert_eq!(s.class_of(2), Some(Priority::Batch), "class survives requeue");
         assert_eq!(s.class_of(3), Some(Priority::Interactive));
+    }
+
+    #[test]
+    fn hinted_victim_prefers_most_remaining_and_falls_back_exactly() {
+        let mut s = Scheduler::new(4);
+        let c = cache();
+        s.submit_class(1, 4, Priority::Batch);
+        s.schedule(&c, &COOPT);
+        s.submit_class(2, 4, Priority::Batch);
+        s.schedule(&c, &COOPT);
+        s.submit_class(3, 4, Priority::Interactive);
+        s.schedule(&c, &COOPT);
+        // all-None hints: exactly the reactive choice (newest batch)
+        assert_eq!(s.peek_preempt_victim_by(|_| None), s.peek_preempt_victim());
+        assert_eq!(s.peek_preempt_victim_by(|_| None), Some(2));
+        // the length forecast says lane 1 is furthest from finishing:
+        // it becomes the victim despite being the oldest admission
+        let hints = |id: SeqId| match id {
+            1 => Some(30u64),
+            2 => Some(5),
+            _ => None,
+        };
+        assert_eq!(s.peek_preempt_victim_by(hints), Some(1));
+        // a hinted batch lane outranks an unhinted one...
+        assert_eq!(s.peek_preempt_victim_by(|id| (id == 1).then_some(2u64)), Some(1));
+        // ...but class preference still dominates: an interactive-only
+        // hint never redirects the victim off the batch lanes
+        assert_eq!(s.peek_preempt_victim_by(|id| (id == 3).then_some(99u64)), Some(2));
     }
 
     #[test]

@@ -25,6 +25,9 @@
 //!   GET  /admin/trace       -> per-replica flight-recorder dump (recent
 //!                              finished-request timelines); filter with
 //!                              ?id=<engine id> or ?corr=<correlation id>
+//!   GET  /admin/forecast    -> predictive-plane dump: the router's own
+//!                              forecast plane + each replica's signal
+//!                              ring and estimator states
 //!   POST /v1/generate       -> {"text": ..., "finish": ..., ...}
 //!       body: {"prompt": "...", "max_new_tokens": 16, "temperature": 0.0,
 //!              "correlation_id": "optional client tag echoed in traces"}
@@ -35,7 +38,7 @@
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -90,6 +93,9 @@ enum Job {
         pull: Box<PrefixPull>,
         reply: Sender<Result<()>>,
     },
+    /// dump the engine's forecast plane — signal ring + estimator
+    /// states (`GET /admin/forecast`)
+    DumpForecast { reply: Sender<Value> },
 }
 
 /// Deliver a reply to a waiter; when the waiter is gone (client
@@ -157,6 +163,11 @@ pub struct MetricsSnapshot {
     /// num_running`); the hand-off dispatcher defers migrations to
     /// destinations showing zero so they don't burn on token fallback
     pub batch_slots_free: usize,
+    /// run-cumulative prompt tokens through prefill graphs (the router
+    /// plane's prefill-rate signal; consumers diff between snapshots)
+    pub prefill_tokens_committed: u64,
+    /// run-cumulative tokens committed by decode/verify rounds
+    pub decode_tokens_committed: u64,
     /// prefix-index deltas since the previous snapshot — each delta
     /// appears in exactly one snapshot, so a reader that skips a
     /// snapshot loses (stale-safe) rather than double-applies
@@ -175,9 +186,19 @@ impl MetricsSnapshot {
             tokens_per_step: 0.0,
             gemm_bound: false,
             batch_slots_free: 0,
+            prefill_tokens_committed: 0,
+            decode_tokens_committed: 0,
             prefix_deltas: Vec::new(),
         }
     }
+}
+
+/// How many engine steps a replica has run past its last published
+/// snapshot — 0 while publishing keeps pace with the step loop, growing
+/// only when the snapshot writer falls behind (signal freshness: a
+/// router placing on a stale snapshot should be able to see the lag).
+pub fn snapshot_age_steps(current_step: u64, snapshot_seq: u64) -> u64 {
+    current_step.saturating_sub(snapshot_seq)
 }
 
 fn snapshot_engine<B: Backend>(engine: &mut Engine<B>, seq: u64) -> MetricsSnapshot {
@@ -192,6 +213,8 @@ fn snapshot_engine<B: Backend>(engine: &mut Engine<B>, seq: u64) -> MetricsSnaps
         tokens_per_step: s.tokens_per_step,
         gemm_bound: s.gemm_bound,
         batch_slots_free: s.batch_slots_free,
+        prefill_tokens_committed: engine.metrics.prefill_tokens_committed,
+        decode_tokens_committed: engine.metrics.decode_tokens_committed,
         prefix_deltas: engine.take_prefix_deltas(),
     }
 }
@@ -200,6 +223,12 @@ fn snapshot_engine<B: Backend>(engine: &mut Engine<B>, seq: u64) -> MetricsSnaps
 pub struct EngineHandle {
     tx: Sender<Job>,
     snapshot: Arc<Mutex<Arc<MetricsSnapshot>>>,
+    /// step counter mirrored out of the engine loop (same series as the
+    /// snapshot `seq`); `current_step - snapshot.seq` is the snapshot's
+    /// staleness in steps
+    steps: Arc<AtomicU64>,
+    /// when the engine thread was spawned (replica uptime for `/metrics`)
+    started: std::time::Instant,
     stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
 }
@@ -230,8 +259,11 @@ impl EngineHandle {
         let (tx, rx): (Sender<Job>, Receiver<Job>) = channel();
         let snapshot = Arc::new(Mutex::new(Arc::new(MetricsSnapshot::empty())));
         let stop = Arc::new(AtomicBool::new(false));
+        let steps = Arc::new(AtomicU64::new(0));
+        let started = std::time::Instant::now();
         let mj = Arc::clone(&snapshot);
         let st = Arc::clone(&stop);
+        let sc = Arc::clone(&steps);
         let thread = std::thread::Builder::new()
             .name("coopt-engine".into())
             .spawn(move || {
@@ -281,6 +313,9 @@ impl EngineHandle {
                         }
                         Job::PullCommit { pull, reply } => {
                             let _ = reply.send(engine.pull_commit(*pull));
+                        }
+                        Job::DumpForecast { reply } => {
+                            let _ = reply.send(engine.forecast_json());
                         }
                     }
                 };
@@ -405,6 +440,7 @@ impl EngineHandle {
                     // metrics + cache-tier stats for GET /metrics: swap the
                     // Arc so readers never see a half-written snapshot
                     seq += 1;
+                    sc.store(seq, Ordering::Relaxed);
                     if let Ok(mut m) = mj.lock() {
                         *m = Arc::new(snapshot_engine(&mut engine, seq));
                     }
@@ -414,6 +450,8 @@ impl EngineHandle {
         EngineHandle {
             tx,
             snapshot,
+            steps,
+            started,
             stop,
             thread: Some(thread),
         }
@@ -510,6 +548,30 @@ impl EngineHandle {
         reply_rx
             .recv()
             .map_err(|_| anyhow!("engine dropped the request"))?
+    }
+
+    /// Dump this replica's forecast plane (signal ring + estimator
+    /// states); round-trips through the engine thread so the view is a
+    /// consistent post-step one.
+    pub fn forecast_json(&self) -> Result<Value> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Job::DumpForecast { reply: reply_tx })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped the request"))
+    }
+
+    /// The engine loop's step counter (same series the snapshot `seq`
+    /// is stamped from; see [`snapshot_age_steps`]).
+    pub fn current_step(&self) -> u64 {
+        self.steps.load(Ordering::Relaxed)
+    }
+
+    /// Seconds since the engine thread was spawned.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
     }
 
     /// The latest atomically-published metrics snapshot.
@@ -710,6 +772,7 @@ fn route(
             Ok(p) => ("200 OK", CT_JSON, p, None),
             Err(e) => ("400 Bad Request", CT_JSON, error_json(&e), None),
         },
+        ("GET", "/admin/forecast") => ("200 OK", CT_JSON, handle.forecast_json(), None),
         ("POST", "/v1/generate") => match generate_route(body, handle) {
             Ok(p) => ("200 OK", CT_JSON, p, None),
             Err(e) if is_shed(&e) => {
@@ -1078,6 +1141,20 @@ mod tests {
         let server = Server::bind("127.0.0.1:0", handle, 4).unwrap();
         let client = Client::new(server.addr.to_string());
         (server, client)
+    }
+
+    #[test]
+    fn snapshot_age_arithmetic() {
+        // publishing keeps pace: age 0
+        assert_eq!(snapshot_age_steps(7, 7), 0);
+        // writer lags by 3 steps
+        assert_eq!(snapshot_age_steps(10, 7), 3);
+        // pre-first-step snapshot (seq 0) against a running loop
+        assert_eq!(snapshot_age_steps(5, 0), 5);
+        // a reader that races the step-counter store can see the
+        // snapshot seq ahead of the mirrored counter; saturate, never
+        // wrap to u64::MAX
+        assert_eq!(snapshot_age_steps(7, 8), 0);
     }
 
     #[test]

@@ -1343,6 +1343,318 @@ pub fn run_slo_overload(spec: &MultiTenantSpec, mix: &SloMix) -> Result<Vec<Valu
     Ok(rows)
 }
 
+/// Forecast-driven control under bursty multi-tenant traffic: the
+/// Zipfian trace with the 1:3 interactive:batch mix, paced as
+/// alternating calm and burst phases of twelve arrivals each — calm
+/// offers one request per six cluster steps (under capacity, the queue
+/// drains), a burst offers two per step (far over capacity, the queue
+/// *must* build) — into two undersized replicas behind the sync
+/// least-loaded router.  Admission control is on in **both** modes with
+/// the projected-wait rule parked out of reach (a budget no trace can
+/// spend), so the bounded batch queue is the only live shed rule and
+/// the schedule difference between modes is exactly the predictive
+/// plane's doing:
+///
+/// * **forecast_on** — the router's signal ring scores each burst
+///   onset against its post-horizon arrival rate; once the detector is
+///   in band, [`crate::router::tightened_slo`] halves the batch-queue
+///   bound for the *next* scored burst (batch sheds earlier into the
+///   wave), per-tenant length quantiles cap the routing cost estimate,
+///   and the engines' planes raise the eviction watermark and steer
+///   victim choice;
+/// * **forecast_off** — the identical offered work and admission knobs
+///   with the plane disabled: the reactive status quo.
+///
+/// Output lengths cycle per tenant over a three-value set (tenant `t`
+/// draws `8+6t`, `10+6t`, `12+6t` tokens), so the length estimator has
+/// real per-tenant structure to learn and its window p90 — and hence
+/// the pooled coverage the CI gates on — is deterministic run to run.
+/// Every served request is checked token-identical against an
+/// unconstrained single-engine reference (forecasting may decide
+/// *whether/when* a request runs, never *what* it generates).  Rows
+/// carry full-run and post-warm-up interactive tails (the post-warm-up
+/// window starts at the run's midpoint, after the detector has scored
+/// enough bursts to act), the shed ledger, Eq. 12 cluster throughput,
+/// and the plane's calibration counters.
+pub fn run_predictive_control(spec: &MultiTenantSpec) -> Result<Vec<Value>> {
+    use crate::config::{CacheGeometry, ForecastConfig, RouterPolicy, SloConfig, COOPT};
+    use crate::coordinator::FinishReason;
+    use crate::router::{Router, SHED_MARKER};
+    use crate::runtime::mock::MockBackend;
+
+    let trace = multi_tenant_trace(spec);
+    // no expired-head cancellations and a deadline far beyond any wall
+    // runtime: every admitted request must finish normally, so token
+    // identity is strict equality over the whole served set
+    let mix = SloMix {
+        interactive_every: 4,
+        interactive_deadline_ms: 600_000,
+        expired_head: 0,
+    };
+    let classes = slo_classes(&trace, &mix);
+    let n = trace.len();
+    let mut seen = vec![0usize; spec.tenants.max(1)];
+    let plain: Vec<GenRequest> = trace
+        .iter()
+        .enumerate()
+        .map(|(i, req)| {
+            let t_idx = classes[i]
+                .tenant
+                .as_deref()
+                .and_then(|t| t.strip_prefix("tenant"))
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(0)
+                .min(seen.len() - 1);
+            let k = seen[t_idx];
+            seen[t_idx] += 1;
+            GenRequest {
+                prompt: req.prompt.clone(),
+                // fixed token counts across modes => clean tail deltas
+                max_new_tokens: (8 + 6 * t_idx + 2 * (k % 3)).min(spec.max_new.max(12)),
+                sampling: req.sampling,
+                ignore_eos: true,
+                // the index rides in the correlation id: shed requests
+                // never produce a result, so positional alignment
+                // cannot work
+                corr_id: Some(format!("pred/{i}")),
+                class: ReqClass::default(),
+            }
+        })
+        .collect();
+    // token-identity reference: one unconstrained engine, default
+    // geometry, untagged
+    let mut reference = Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    );
+    let base: Vec<Vec<u32>> = reference
+        .generate(plain.clone())?
+        .into_iter()
+        .map(|r| r.tokens)
+        .collect();
+
+    let tight = CacheGeometry {
+        num_pool_blocks: 48,
+        max_batch: 4,
+        ..CacheGeometry::default()
+    };
+    let slo = SloConfig {
+        admission: true,
+        // parked out of reach: the projected-wait rule must never fire,
+        // so the on/off difference cannot ride on a wall-clock wait
+        // projection — the same requests shed on any machine
+        interactive_ttft_ms: 1_000_000,
+        interactive_prefill_reserve: 0.5,
+        tenant_share: 1.0,
+        max_batch_queue: 6,
+    };
+    const REPLICAS: usize = 2;
+    const ARRIVALS_PER_PHASE: usize = 12;
+    const CALM_STEPS: usize = 6;
+    let fc = ForecastConfig {
+        enabled: true,
+        warmup: 4,
+        ..ForecastConfig::default()
+    };
+
+    let mut rows = Vec::new();
+    for forecast_on in [true, false] {
+        let mut cfg = EngineConfig::new("llama-7b-sim", COOPT)
+            .with_slo_admission(true)
+            .with_interactive_ttft_ms(slo.interactive_ttft_ms)
+            .with_interactive_prefill_reserve(slo.interactive_prefill_reserve);
+        if forecast_on {
+            cfg = cfg
+                .with_forecast(true)
+                .with_forecast_warmup(fc.warmup)
+                .with_forecast_burst_ratio(fc.burst_ratio);
+        }
+        let engines: Vec<_> = (0..REPLICAS)
+            .map(|_| {
+                Engine::new(
+                    PoolSized {
+                        inner: MockBackend::new().with_opt(COOPT),
+                        geometry: tight,
+                    },
+                    cfg.clone(),
+                )
+            })
+            .collect();
+        let mut router = Router::new(engines, RouterPolicy::LeastLoaded).with_slo(slo);
+        if forecast_on {
+            router = router.with_forecast(fc);
+        }
+        let mut shed_idx: Vec<usize> = Vec::new();
+        for (i, req) in plain.iter().enumerate() {
+            let mut req = req.clone();
+            req.class = classes[i].clone();
+            match router.submit(req) {
+                Ok(_) => {}
+                Err(e) if e.to_string().starts_with(SHED_MARKER) => shed_idx.push(i),
+                Err(e) => return Err(e),
+            }
+            let in_burst = (i / ARRIVALS_PER_PHASE) % 2 == 1;
+            let steps = if in_burst { i % 2 } else { CALM_STEPS };
+            for _ in 0..steps {
+                router.step_all()?;
+            }
+        }
+        let results = router.run_to_completion()?;
+        let mut finished: Vec<Option<crate::coordinator::GenResult>> = vec![None; n];
+        for r in results {
+            let idx = r
+                .result
+                .corr_id
+                .as_deref()
+                .and_then(|c| c.strip_prefix("pred/"))
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| anyhow::anyhow!("result lost its pred/<i> correlation id"))?;
+            match r.result.finish {
+                FinishReason::DeadlineExceeded => {
+                    if !base[idx].starts_with(&r.result.tokens) {
+                        anyhow::bail!("cancelled request {idx} diverged from the reference");
+                    }
+                }
+                _ => {
+                    if r.result.tokens != base[idx] {
+                        anyhow::bail!("forecast-driven control changed outputs at request {idx}");
+                    }
+                }
+            }
+            finished[idx] = Some(r.result);
+        }
+
+        // the detector needs the first half of the run to score enough
+        // bursts to act, so the post-warm-up tails (second half) are
+        // where the two modes genuinely differ
+        let warm = n / 2;
+        let (mut int_offered, mut batch_offered) = (0usize, 0usize);
+        let (mut int_completed, mut batch_completed) = (0usize, 0usize);
+        let (mut int_shed, mut batch_shed) = (0usize, 0usize);
+        let (mut int_expired, mut batch_expired) = (0usize, 0usize);
+        let (mut q_i, mut ttft_i, mut e2e_b) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut q_i_pw, mut ttft_i_pw) = (Vec::new(), Vec::new());
+        for (i, class) in classes.iter().enumerate() {
+            let interactive = class.priority.is_interactive();
+            if interactive {
+                int_offered += 1;
+            } else {
+                batch_offered += 1;
+            }
+            if shed_idx.contains(&i) {
+                if interactive {
+                    int_shed += 1;
+                } else {
+                    batch_shed += 1;
+                }
+                continue;
+            }
+            let Some(r) = &finished[i] else {
+                anyhow::bail!("request {i} neither shed nor finished (leaked)");
+            };
+            if r.finish == FinishReason::DeadlineExceeded {
+                if interactive {
+                    int_expired += 1;
+                } else {
+                    batch_expired += 1;
+                }
+                continue;
+            }
+            if interactive {
+                int_completed += 1;
+                q_i.push(r.phases.queue_s);
+                ttft_i.push(r.ttft_s);
+                if i >= warm {
+                    q_i_pw.push(r.phases.queue_s);
+                    ttft_i_pw.push(r.ttft_s);
+                }
+            } else {
+                batch_completed += 1;
+                e2e_b.push(r.latency_s);
+            }
+        }
+        // conservation per class: nothing vanishes, nothing double-counts
+        if int_completed + int_shed + int_expired != int_offered
+            || batch_completed + batch_shed + batch_expired != batch_offered
+        {
+            anyhow::bail!(
+                "class conservation violated: interactive {int_completed}+{int_shed}+\
+                 {int_expired} != {int_offered} or batch {batch_completed}+{batch_shed}+\
+                 {batch_expired} != {batch_offered}"
+            );
+        }
+        let (mut preemptions, mut tokens) = (0u64, 0u64);
+        let mut busy_max = 0.0f64;
+        for e in router.replicas() {
+            preemptions += e.metrics.preemptions;
+            tokens += e.metrics.tokens_generated;
+            let busy =
+                e.metrics.sim_prefill_s + e.metrics.sim_decode_s + e.metrics.sim_swap_blocked_s;
+            busy_max = busy_max.max(busy);
+        }
+        let mut o = Object::new();
+        o.insert("mode", if forecast_on { "forecast_on" } else { "forecast_off" });
+        o.insert("forecast", forecast_on);
+        o.insert("replicas", REPLICAS);
+        o.insert("offered", n);
+        o.insert("postwarm_from", warm);
+        o.insert("shed_requests", router.shed_requests() as usize);
+        o.insert("preemptions", preemptions as usize);
+        o.insert("tokens", tokens as usize);
+        o.insert("interactive_offered", int_offered);
+        o.insert("interactive_completed", int_completed);
+        o.insert("interactive_shed", int_shed);
+        o.insert("interactive_expired", int_expired);
+        o.insert("interactive_queue_wall_p95_s", pctile(&mut q_i, 0.95));
+        o.insert("interactive_ttft_wall_p99_s", pctile(&mut ttft_i, 0.99));
+        o.insert(
+            "interactive_queue_wall_p95_postwarm_s",
+            pctile(&mut q_i_pw, 0.95),
+        );
+        o.insert(
+            "interactive_ttft_wall_p99_postwarm_s",
+            pctile(&mut ttft_i_pw, 0.99),
+        );
+        o.insert("batch_offered", batch_offered);
+        o.insert("batch_completed", batch_completed);
+        o.insert("batch_shed", batch_shed);
+        o.insert("batch_expired", batch_expired);
+        o.insert("batch_e2e_wall_p95_s", pctile(&mut e2e_b, 0.95));
+        o.insert(
+            "cluster_throughput_sim",
+            if busy_max > 0.0 {
+                tokens as f64 / busy_max
+            } else {
+                0.0
+            },
+        );
+        o.insert("busy_max_s", busy_max);
+        o.insert("token_identical", true);
+        if forecast_on {
+            let plane = router.forecast();
+            if let Some(c) = plane.len_coverage_pooled() {
+                o.insert("len_p90_coverage_pooled", c);
+            }
+            if let Some(c) = plane.wait_coverage() {
+                o.insert("wait_coverage", c);
+            }
+            o.insert("wait_resolved", plane.wait_resolved() as usize);
+            o.insert("bursts_detected", plane.bursts_detected() as usize);
+            o.insert("bursts_resolved", plane.bursts_resolved() as usize);
+            if let Some(h) = plane.burst_hit_rate() {
+                o.insert("burst_hit_rate", h);
+            }
+            let mut eng_detected = 0u64;
+            for e in router.replicas() {
+                eng_detected += e.forecast_plane().bursts_detected();
+            }
+            o.insert("engine_bursts_detected", eng_detected as usize);
+        }
+        rows.push(Value::Object(o));
+    }
+    Ok(rows)
+}
+
 /// Short git commit of the working tree, for the BENCH_serve header
 /// ("which code produced these rows").
 fn git_commit_short() -> String {

@@ -1,0 +1,332 @@
+//! Property + acceptance tests for the predictive telemetry plane.
+//!
+//! The contract under test: **forecasts steer control only while they
+//! are earning their keep — and steering never changes outputs.**
+//! Estimator state, however poisoned, may decide whether/when a request
+//! runs (admission, routing, victim choice), never what it generates;
+//! and an estimator whose calibration leaves the coverage band stops
+//! being consumed at all — every control decision falls back to the
+//! reactive path exactly, not to some degraded middle ground.
+
+use llm_coopt::config::{EngineConfig, ForecastConfig, ReqClass, RouterPolicy, SloConfig, COOPT};
+use llm_coopt::coordinator::{Engine, GenRequest};
+use llm_coopt::obs::forecast::ForecastPlane;
+use llm_coopt::router::{
+    request_cost_estimate, request_cost_estimate_hinted, tightened_slo, Router, SHED_MARKER,
+};
+use llm_coopt::runtime::mock::MockBackend;
+use llm_coopt::util::quickprop::{check, gens};
+
+fn mock_engine() -> Engine<MockBackend> {
+    Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT),
+    )
+}
+
+fn forecast_engine() -> Engine<MockBackend> {
+    Engine::new(
+        MockBackend::new().with_opt(COOPT),
+        EngineConfig::new("llama-7b-sim", COOPT)
+            .with_forecast(true)
+            .with_forecast_warmup(1),
+    )
+}
+
+/// Feed a plane scored garbage: every length prediction misses by a
+/// mile (p90 = 0 under an absurd actual drives coverage to zero and
+/// floods the window with junk lengths), every wait quote under-predicts
+/// catastrophically.  Both estimators leave the coverage band low; the
+/// junk windows are what a consumer would read if band-gating ever
+/// leaked.
+fn poison_plane(p: &mut ForecastPlane) {
+    for t in [None, Some("t0"), Some("t1"), Some("t2")] {
+        for k in 0..8u32 {
+            p.resolve_len(t, 1e9, 0.0, 40_000 + k);
+        }
+    }
+    for _ in 0..8 {
+        p.resolve_wait(0.0, 1.0, 1e9);
+    }
+}
+
+/// Tenant-tagged class mix without deadlines: every admitted request
+/// must finish normally, so token identity is strict equality.
+fn class_for(p: usize, i: usize) -> ReqClass {
+    match (p + i) % 4 {
+        0 => ReqClass::interactive(),
+        1 => ReqClass::batch().with_tenant(format!("t{}", p % 3)),
+        2 => ReqClass::interactive().with_tenant(format!("t{}", p % 3)),
+        _ => ReqClass::batch(),
+    }
+}
+
+/// Property: 80 random paced traces through forecast-enabled routers
+/// (varying policy, replica count, queue bound, pacing), with the
+/// router plane and every engine plane poisoned before the run and the
+/// router plane re-poisoned mid-stream.  Whatever the estimators
+/// believe, per case:
+///
+/// (a) every admitted request is token-identical (tokens *and* finish
+///     reason) to an unconstrained single-engine reference;
+/// (b) offered = completed + shed, shed requests never complete, no
+///     result arrives twice;
+/// (c) after the run every replica's device pool and host tier drain
+///     to zero — forecast-steered scheduling leaks nothing.
+#[test]
+fn poisoned_forecasts_never_change_outputs() {
+    check(
+        80,
+        gens::pair(gens::vec(gens::usize_to(23), 3..=10), gens::usize_to(1000)),
+        |&(ref profile, seed): &(Vec<usize>, usize)| {
+            let n = profile.len();
+            // the index rides in the correlation id: shed requests never
+            // produce a result, so positional alignment cannot work
+            let plain: Vec<GenRequest> = profile
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| {
+                    let tenant = p % 3;
+                    let mut req = GenRequest::greedy(
+                        format!(
+                            "tenantfc{tenant} {} tail {seed} {i} {}",
+                            "s".repeat(18 + 2 * tenant),
+                            "y".repeat(p)
+                        ),
+                        2 + (p + seed) % 6,
+                    );
+                    req.corr_id = Some(format!("fc/{i}"));
+                    req
+                })
+                .collect();
+            let classes: Vec<ReqClass> = profile
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| class_for(p, i))
+                .collect();
+            // token-identity reference: one unconstrained engine, untagged
+            let mut single = mock_engine();
+            let base = single.generate(plain.clone()).unwrap();
+
+            let slo = SloConfig {
+                admission: seed % 2 == 0,
+                // generous budget: sheds ride the queue bound and tenant
+                // share, which are pure functions of sim-side state
+                interactive_ttft_ms: 50_000,
+                interactive_prefill_reserve: 0.0,
+                tenant_share: 0.6,
+                max_batch_queue: 2 + seed % 4,
+            };
+            let policy = RouterPolicy::ALL[seed % RouterPolicy::ALL.len()];
+            let nrep = 1 + (seed / 7) % 2;
+            let steps_per_arrival = (seed / 3) % 3;
+
+            let engines: Vec<Engine<MockBackend>> = (0..nrep)
+                .map(|_| {
+                    let mut e = forecast_engine();
+                    poison_plane(e.forecast_plane_mut());
+                    e
+                })
+                .collect();
+            let mut router = Router::new(engines, policy)
+                .with_slo(slo)
+                .with_forecast(ForecastConfig {
+                    enabled: true,
+                    warmup: 1,
+                    ..ForecastConfig::default()
+                });
+            poison_plane(router.forecast_mut());
+            let mut shed = vec![false; n];
+            for (i, req) in plain.iter().enumerate() {
+                if i % 5 == 0 {
+                    // keep re-poisoning: calibration must not be able to
+                    // "recover" into trusting garbage windows
+                    poison_plane(router.forecast_mut());
+                }
+                match router.submit(req.clone().with_class(classes[i].clone())) {
+                    Ok((replica, _)) => {
+                        if replica >= nrep {
+                            return false;
+                        }
+                    }
+                    Err(e) if e.to_string().starts_with(SHED_MARKER) => {
+                        shed[i] = true;
+                    }
+                    Err(e) => panic!("unexpected submit error: {e}"),
+                }
+                for _ in 0..steps_per_arrival {
+                    router.step_all().unwrap();
+                }
+            }
+            let results = router.run_to_completion().unwrap();
+            // (b) conservation: offered = completed + shed
+            if results.len() + shed.iter().filter(|&&s| s).count() != n {
+                return false;
+            }
+            let mut seen = vec![false; n];
+            for r in &results {
+                let idx = r
+                    .result
+                    .corr_id
+                    .as_deref()
+                    .and_then(|c| c.strip_prefix("fc/"))
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .expect("result lost its fc/<i> correlation id");
+                if shed[idx] || seen[idx] {
+                    return false; // shed requests never complete; no dups
+                }
+                seen[idx] = true;
+                // (a) identity: forecasting may not change a single token
+                if r.result.tokens != base[idx].tokens
+                    || r.result.finish != base[idx].finish
+                {
+                    return false;
+                }
+            }
+            if router.shed_requests() != shed.iter().filter(|&&s| s).count() as u64 {
+                return false;
+            }
+            // (c) nothing leaked: device pool and host tier drain to zero
+            router.replicas().iter().all(|e| {
+                e.cache_stats().blocks_used == 0
+                    && e.tier_stats().host_used_blocks == 0
+            })
+        },
+    );
+}
+
+/// Acceptance: an estimator whose coverage leaves the band keeps
+/// stamping (self-scoring must continue or calibration could never
+/// recover) but stops being consumed — every consumer-facing getter
+/// degrades to the reactive value exactly.
+#[test]
+fn out_of_band_estimators_fall_back_to_reactive_values() {
+    let mut plane = ForecastPlane::new(ForecastConfig {
+        enabled: true,
+        warmup: 4,
+        ..ForecastConfig::default()
+    });
+    for _ in 0..32 {
+        plane.observe_arrival(Some("t0"));
+        plane.tick(3, 2, 64, 8, 10);
+    }
+    // every length prediction misses: coverage 0, far below the band
+    for k in 0..12u32 {
+        plane.resolve_len(Some("t0"), 4.0, 0.0, 10 + k);
+    }
+    assert!(
+        plane.len_quantiles(Some("t0")).is_some(),
+        "raw stamps must keep flowing while out of band"
+    );
+    assert!(!plane.len_in_band(Some("t0")), "coverage 0 cannot be in band");
+    assert_eq!(
+        plane.len_hint_p90(Some("t0")),
+        None,
+        "out-of-band estimator leaked a consumable hint"
+    );
+    // the reactive fallback is exact, not approximate
+    assert_eq!(
+        request_cost_estimate_hinted(80, 32, None),
+        request_cost_estimate(80, 32)
+    );
+    // every wait quote under-predicted catastrophically: coverage 0
+    for _ in 0..12 {
+        plane.resolve_wait(0.0, 1.0, 1e9);
+    }
+    assert!(plane.wait_resolved() >= 12);
+    assert!(!plane.wait_in_band());
+    assert_eq!(plane.wait_ms_per_load(), None, "learned drain rate leaked");
+    assert_eq!(plane.predict_wait_ms(5.0), None);
+    assert!(
+        plane.wait_quote_ms(5.0).is_some(),
+        "scoring quotes must survive the band exit"
+    );
+    // no scored burst: admission knobs must pass through untouched
+    assert_eq!(plane.admission_tighten(), 1.0);
+    let slo = SloConfig {
+        admission: true,
+        max_batch_queue: 7,
+        ..SloConfig::default()
+    };
+    assert_eq!(tightened_slo(&slo, plane.admission_tighten()), slo);
+    assert_eq!(plane.effective_watermark(3), 3);
+}
+
+/// Acceptance: a forecast-enabled router whose estimators can *never*
+/// enter the band (warm-up beyond any run, burst ratio beyond any
+/// arrival pattern) reproduces the reactive router bit for bit on an
+/// overloaded paced trace — the same requests shed, the same results in
+/// the same order, the same tokens.  Stamping and scoring alone must
+/// cost nothing behavioral.
+#[test]
+fn never_in_band_forecasting_is_bit_identical_to_reactive() {
+    let n = 24;
+    let plain: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            let tenant = i % 3;
+            let mut req = GenRequest::greedy(
+                format!("tenantnb{tenant} {} tail {i}", "s".repeat(16 + 2 * tenant)),
+                3 + i % 5,
+            );
+            req.corr_id = Some(format!("nb/{i}"));
+            req
+        })
+        .collect();
+    let classes: Vec<ReqClass> = (0..n).map(|i| class_for(i % 7, i)).collect();
+    let slo = SloConfig {
+        admission: true,
+        interactive_ttft_ms: 50_000,
+        interactive_prefill_reserve: 0.5,
+        tenant_share: 0.6,
+        max_batch_queue: 2,
+    };
+
+    let run = |forecast: bool| {
+        let engines: Vec<Engine<MockBackend>> = (0..2)
+            .map(|_| {
+                let cfg = EngineConfig::new("llama-7b-sim", COOPT);
+                let cfg = if forecast {
+                    cfg.with_forecast(true)
+                        .with_forecast_warmup(u64::MAX)
+                        .with_forecast_burst_ratio(1e18)
+                } else {
+                    cfg
+                };
+                Engine::new(MockBackend::new().with_opt(COOPT), cfg)
+            })
+            .collect();
+        let mut router = Router::new(engines, RouterPolicy::LeastLoaded).with_slo(slo);
+        if forecast {
+            router = router.with_forecast(ForecastConfig {
+                enabled: true,
+                warmup: u64::MAX,
+                burst_ratio: 1e18,
+                ..ForecastConfig::default()
+            });
+        }
+        let mut shed = Vec::new();
+        for (i, req) in plain.iter().enumerate() {
+            match router.submit(req.clone().with_class(classes[i].clone())) {
+                Ok(_) => {}
+                Err(e) if e.to_string().starts_with(SHED_MARKER) => shed.push(i),
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+            router.step_all().unwrap();
+        }
+        let results: Vec<(String, Vec<u32>)> = router
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.result.corr_id.clone().unwrap(), r.result.tokens))
+            .collect();
+        (shed, results)
+    };
+
+    let (shed_fc, results_fc) = run(true);
+    let (shed_off, results_off) = run(false);
+    assert_eq!(shed_fc, shed_off, "out-of-band forecasting changed admission");
+    assert_eq!(
+        results_fc, results_off,
+        "out-of-band forecasting changed the served schedule or its outputs"
+    );
+}
